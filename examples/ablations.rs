@@ -1,0 +1,69 @@
+//! Ablations of the paper's two key design choices (DESIGN.md §6):
+//!
+//! 1. **Feature-space vs weight-space decomposition** — the paper's core
+//!    novelty: principal components of the *activation covariance* rather
+//!    than of the weight matrix itself.
+//! 2. **Error propagation** (§2) — calibrating each layer against the
+//!    already-compressed prefix vs against the original activations.
+//!
+//! ```bash
+//! cargo run --release --example ablations        # needs runs/base.rtz
+//! # env: ABL_PER_TASK=100 ABL_ROWS=256 ABL_BUDGET=0.8
+//! ```
+
+use anyhow::{Context, Result};
+use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::eval::format_table;
+use llm_rom::model::ParamStore;
+use llm_rom::rom::{paper_preset, DecompositionSpace, RomConfig, RomPipeline};
+use llm_rom::runtime::Runtime;
+
+fn env_num<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
+    let mut xcfg = ExperimentConfig::default();
+    xcfg.eval_per_task = env_num("ABL_PER_TASK", 100usize);
+    xcfg.calib_rows = env_num("ABL_ROWS", 256usize);
+    let budget: f64 = env_num("ABL_BUDGET", 0.8f64);
+    let exp = Experiment::new(&rt, xcfg);
+    let base = ParamStore::load(&exp.cfg, "runs/base.rtz")
+        .context("runs/base.rtz missing — run `repro train` first")?;
+
+    let schedule = paper_preset(&exp.cfg, budget);
+    let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+    let pipeline = RomPipeline::new(&rt);
+
+    let variants: [(&str, RomConfig); 3] = [
+        (
+            "feature + propagation (paper)",
+            RomConfig { schedule, ..RomConfig::default() },
+        ),
+        (
+            "feature, no propagation",
+            RomConfig { schedule, propagate_errors: false, ..RomConfig::default() },
+        ),
+        (
+            "weight-space SVD (data-free)",
+            RomConfig { schedule, space: DecompositionSpace::Weight, ..RomConfig::default() },
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    rows.push(("dense".to_string(), exp.evaluate(&base, false)?));
+    for (label, rcfg) in variants {
+        let rom = pipeline.compress(&base, &calib, &rcfg)?;
+        let rep = exp.evaluate(&rom.params, false)?;
+        rows.push((label.to_string(), rep));
+    }
+    println!(
+        "{}",
+        format_table(
+            &format!("Ablations @ {:.0}% budget — decomposition space & §2 propagation", budget * 100.0),
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Budget sweep (Table 1 + the §2.1 (k, b) selection experiment).
+//!
+//! For each global budget, sweeps the number of trailing modules `k`
+//! (solving the per-module budget that hits the target) and reports
+//! accuracy — reproducing the paper's empirical finding that a *deeper,
+//! gentler* schedule beats compressing few modules hard, up to a point.
+//!
+//! ```bash
+//! cargo run --release --example budget_sweep   # needs runs/base.rtz
+//! # env: SWEEP_PER_TASK=100 SWEEP_ROWS=256
+//! ```
+
+use anyhow::{Context, Result};
+use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::eval::format_table;
+use llm_rom::model::ParamStore;
+use llm_rom::rom::{solve_module_budget, ModuleSchedule};
+use llm_rom::runtime::Runtime;
+
+fn env_num<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
+    let mut xcfg = ExperimentConfig::default();
+    xcfg.eval_per_task = env_num("SWEEP_PER_TASK", 100usize);
+    xcfg.calib_rows = env_num("SWEEP_ROWS", 256usize);
+    let exp = Experiment::new(&rt, xcfg);
+    let base = ParamStore::load(&exp.cfg, "runs/base.rtz")
+        .context("runs/base.rtz missing — run `repro train` or e2e_compress_eval first")?;
+
+    for global in [0.8, 0.5] {
+        let mut rows = Vec::new();
+        // candidate k: sweep the feasible range, coarsely
+        for k in 1..=exp.cfg.n_layers {
+            let Some(b) = solve_module_budget(&exp.cfg, k, global) else {
+                continue;
+            };
+            if k % 2 != 0 && k != exp.cfg.n_layers {
+                continue; // coarse sweep: even k only (plus full depth)
+            }
+            let sched = ModuleSchedule { start_block: exp.cfg.n_layers - k, module_budget: b };
+            let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+            let rom = exp.compress_with(&base, sched, Some(&calib))?;
+            let rep = exp.evaluate(&rom.params, false)?;
+            rows.push((format!("last {k:>2} modules @ b={b:.2}"), rep));
+        }
+        println!(
+            "{}",
+            format_table(
+                &format!("§2.1 schedule sweep — global budget {:.0}%", global * 100.0),
+                &rows
+            )
+        );
+    }
+    Ok(())
+}

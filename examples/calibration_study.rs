@@ -1,0 +1,34 @@
+//! Calibration ablations — Tables 2, 3 and 4 in one runnable driver.
+//!
+//! Sweeps (at a fixed 80% global budget):
+//! - batch size 512 / 128 / 32 calibration rows  (Table 2)
+//! - sequence length 128 / 64 / 32               (Table 3)
+//! - calibration distribution: combination / arc-c-only / generic corpus
+//!   (Table 4)
+//!
+//! ```bash
+//! cargo run --release --example calibration_study   # needs runs/base.rtz
+//! # env: CAL_PER_TASK=100
+//! ```
+
+use anyhow::{Context, Result};
+use llm_rom::coordinator::{tables, Experiment, ExperimentConfig};
+use llm_rom::model::ParamStore;
+use llm_rom::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
+    let mut xcfg = ExperimentConfig::default();
+    xcfg.eval_per_task = std::env::var("CAL_PER_TASK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100usize);
+    let exp = Experiment::new(&rt, xcfg);
+    let base = ParamStore::load(&exp.cfg, "runs/base.rtz")
+        .context("runs/base.rtz missing — run `repro train` or e2e_compress_eval first")?;
+
+    println!("{}", tables::table2(&exp, &base, 0.8)?);
+    println!("{}", tables::table3(&exp, &base, 0.8)?);
+    println!("{}", tables::table4(&exp, &base, 0.8)?);
+    Ok(())
+}

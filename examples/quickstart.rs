@@ -1,0 +1,58 @@
+//! Quickstart: ROM-compress a single layer and watch the reconstruction
+//! error fall with rank — the paper's §2 mechanics in 60 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use llm_rom::linalg::{matmul, Matrix};
+use llm_rom::rom::budget::rank_for_budget;
+use llm_rom::rom::decompose::{decompose_weight, factors_from_eigen};
+use llm_rom::util::Rng;
+
+fn main() -> Result<()> {
+    // A synthetic "layer": W (d2 x d1) and calibration inputs X whose
+    // activations concentrate in a low-dimensional subspace — exactly the
+    // structure LLM-ROM exploits in real transformer features.
+    let (d1, d2, n, intrinsic) = (128usize, 128usize, 2048usize, 24usize);
+    let mut rng = Rng::new(7);
+    let w = Matrix::from_fn(d2, d1, |_, _| rng.normal() * 0.05);
+    let basis = Matrix::from_fn(intrinsic, d1, |_, _| rng.normal());
+    let coef = Matrix::from_fn(n, intrinsic, |_, _| rng.normal());
+    let noise = Matrix::from_fn(n, d1, |_, _| rng.normal() * 0.02);
+    let x = matmul(&coef, &basis).add(&noise);
+
+    // Layer outputs and their covariance (paper §2, steps 1-2).
+    let y = matmul(&x, &w.transpose());
+    let cov = matmul(&y.transpose(), &y);
+
+    println!("LLM-ROM quickstart: one {d2}x{d1} layer, {n} calibration samples");
+    println!("intrinsic feature dimension: {intrinsic}\n");
+    println!("{:>6} {:>8} {:>12} {:>10} {:>9}", "rank", "budget", "rel. error", "energy", "params");
+
+    let dec = llm_rom::linalg::eigh(&cov)?;
+    let y_norm = y.frobenius_norm();
+    for budget in [1.0, 0.8, 0.6, 0.46, 0.33, 0.2, 0.1] {
+        let rank = rank_for_budget(d2, d1, budget);
+        let f = factors_from_eigen(&w, &dec, rank);
+        let y_rom = matmul(&x, &f.effective_weight().transpose());
+        let rel = y_rom.sub(&y).frobenius_norm() / y_norm;
+        println!(
+            "{rank:>6} {budget:>8.2} {rel:>12.4e} {:>9.1}% {:>9}",
+            100.0 * f.energy,
+            f.n_params()
+        );
+    }
+
+    // The factored pair really is the same function as W_eff.
+    let f = decompose_weight(&w, &cov, 24)?;
+    let via_factors = matmul(&matmul(&x, &f.w2.transpose()), &f.w1.transpose());
+    let via_eff = matmul(&x, &f.effective_weight().transpose());
+    let diff = via_factors.sub(&via_eff).max_abs();
+    println!("\nfactored form == effective dense form: max diff {diff:.2e}");
+    println!("at rank ≈ intrinsic dim ({intrinsic}), the layer compresses ~{:.0}% \
+              with near-zero feature error — the paper's core claim.",
+        100.0 * (1.0 - f.n_params() as f64 / (d1 * d2) as f64));
+    Ok(())
+}

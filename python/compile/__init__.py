@@ -1,0 +1,1 @@
+"""Build-time compile package for LLM-ROM (L1 kernels + L2 model + AOT)."""

@@ -1,0 +1,227 @@
+"""AOT exporter: lower every L2 entry point to HLO text + manifest.
+
+This is the single build-time bridge between the Python world (L1/L2) and
+the Rust runtime (L3). It writes into ``artifacts/``:
+
+- ``<entry>.hlo.txt``  — HLO *text* for each entry point (text, not a
+  serialized ``HloModuleProto``: jax ≥ 0.5 emits 64-bit instruction ids
+  that xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+  /opt/xla-example/README.md).
+- ``manifest.json``    — model config, tokenizer specials, canonical
+  shapes, and the exact positional argument/output spec of every entry
+  point (the Rust marshaller follows this, never guesses).
+- ``init.rtz``         — freshly initialized parameters in the shared
+  ``.rtz`` container.
+
+Weights are *arguments* of every graph (never baked constants), so the Rust
+side can train, prune, and ROM-compress without recompilation.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--config cfg.json]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, paramschema, tensorio
+from .config import BOS, EOS, PAD, SEP, VOCAB_USED, ModelConfig, mini
+from .kernels import covariance as cov_kernel, lowrank_matmul
+
+# Preset per-module budgets from the paper §2.1 (90%/80%/50% global budgets
+# on LLaMA-7B map to compressing the last 8/12/24 modules at these rates).
+MODULE_BUDGETS = {"b60": 0.60, "b46": 0.46, "b33": 0.33}
+
+
+def rank_for_budget(d_out: int, d_in: int, budget: float) -> int:
+    """Paper §2.1: factored pair r(d1+d2) params vs dense d1·d2."""
+    return int(budget * d_out * d_in / (d_out + d_in))
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_args(cfg: ModelConfig, prefix: str = "") -> list[dict]:
+    return [_arg(prefix + n, paramschema.param_shape(cfg, n)) for n in paramschema.param_names(cfg)]
+
+
+def _to_specs(args: list[dict]):
+    dt = {"f32": jnp.float32, "i32": jnp.int32}
+    return [_spec(a["shape"], dt[a["dtype"]]) for a in args]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_entries(cfg: ModelConfig) -> dict[str, dict]:
+    """Entry-point registry: fn + positional arg/output specs."""
+    n_p = paramschema.param_names(cfg)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    eb, es = cfg.eval_batch, cfg.eval_seq
+    tb, ts = cfg.train_batch, cfg.train_seq
+    ncal = eb * es
+
+    entries: dict[str, dict] = {}
+
+    entries["forward_logits"] = {
+        "fn": functools.partial(model.forward_logits_flat, cfg),
+        "args": _param_args(cfg) + [_arg("tokens", (eb, es), "i32")],
+        "outputs": [_arg("logits", (eb, es, v))],
+    }
+    entries["score_fwd"] = {
+        "fn": functools.partial(model.score_fwd_flat, cfg),
+        "args": _param_args(cfg)
+        + [_arg("tokens", (eb, es), "i32"), _arg("targets", (eb, es), "i32"), _arg("mask", (eb, es))],
+        "outputs": [_arg("sum_logprob", (eb,)), _arg("count", (eb,))],
+    }
+    entries["embed_fwd"] = {
+        "fn": functools.partial(model.embed_fwd_flat, cfg),
+        "args": [_arg("embed", (v, d)), _arg("tokens", (eb, es), "i32")],
+        "outputs": [_arg("h", (eb, es, d))],
+    }
+    blk_args = [_arg(fld, paramschema.param_shape(cfg, f"blocks.0.{fld}")) for fld in paramschema.BLOCK_FIELDS]
+    cap_shapes = {
+        "x_attn": (eb, es, d), "x_o": (eb, es, d), "x_ffn": (eb, es, d), "x_down": (eb, es, f),
+        "y_q": (eb, es, d), "y_k": (eb, es, d), "y_v": (eb, es, d), "y_o": (eb, es, d),
+        "y_gate": (eb, es, f), "y_up": (eb, es, f), "y_down": (eb, es, d),
+    }
+    entries["block_capture"] = {
+        "fn": functools.partial(model.block_capture_flat, cfg),
+        "args": blk_args + [_arg("h", (eb, es, d))],
+        "outputs": [_arg("h_out", (eb, es, d))]
+        + [_arg(k, cap_shapes[k]) for k in model.CAPTURE_NAMES],
+    }
+    entries["block_fwd"] = {
+        "fn": functools.partial(model.block_fwd_flat, cfg),
+        "args": blk_args + [_arg("h", (eb, es, d))],
+        "outputs": [_arg("h_out", (eb, es, d))],
+    }
+    entries["head_score"] = {
+        "fn": functools.partial(model.head_score_flat, cfg),
+        "args": [
+            _arg("final_norm", (d,)), _arg("embed", (v, d)), _arg("h", (eb, es, d)),
+            _arg("targets", (eb, es), "i32"), _arg("mask", (eb, es)),
+        ],
+        "outputs": [_arg("sum_logprob", (eb,)), _arg("count", (eb,))],
+    }
+
+    train_io = _param_args(cfg)
+    opt_m = _param_args(cfg, "m.")
+    opt_v = _param_args(cfg, "v.")
+    tail = [
+        _arg("step", ()), _arg("lr", ()),
+        _arg("tokens", (tb, ts), "i32"), _arg("targets", (tb, ts), "i32"),
+    ]
+    entries["train_step"] = {
+        "fn": functools.partial(model.train_step_flat, cfg),
+        "args": train_io + opt_m + opt_v + tail,
+        "outputs": _param_args(cfg) + opt_m + opt_v + [_arg("loss", ())],
+    }
+    mask_args = [
+        _arg("mask." + nm, paramschema.param_shape(cfg, nm)) for nm in paramschema.maskable_names(cfg)
+    ]
+    entries["train_step_masked"] = {
+        "fn": functools.partial(model.train_step_masked_flat, cfg),
+        "args": train_io + mask_args + opt_m + opt_v + tail,
+        "outputs": _param_args(cfg) + opt_m + opt_v + [_arg("loss", ())],
+    }
+
+    # L1 kernels exported standalone: ROM covariance accumulation (used by
+    # the Rust ROM pass) and the factored-linear inference kernel at the
+    # paper's preset module budgets (used by the perf benches).
+    for dim, tag in ((d, "d"), (f, "ff")):
+        entries[f"covariance_{tag}"] = {
+            "fn": lambda y, _dim=dim: (cov_kernel(y),),
+            "args": [_arg("y", (ncal, dim))],
+            "outputs": [_arg("cov", (dim, dim))],
+        }
+    for key, b in MODULE_BUDGETS.items():
+        r_attn = rank_for_budget(d, d, b)
+        r_ffn = rank_for_budget(f, d, b)
+        entries[f"lowrank_attn_{key}"] = {
+            "fn": lambda x, w2, w1: (lowrank_matmul(x, w2, w1),),
+            "args": [_arg("x", (ncal, d)), _arg("w2", (r_attn, d)), _arg("w1", (d, r_attn))],
+            "outputs": [_arg("y", (ncal, d))],
+        }
+        entries[f"lowrank_ffn_{key}"] = {
+            "fn": lambda x, w2, w1: (lowrank_matmul(x, w2, w1),),
+            "args": [_arg("x", (ncal, d)), _arg("w2", (r_ffn, d)), _arg("w1", (f, r_ffn))],
+            "outputs": [_arg("y", (ncal, f))],
+        }
+        entries[f"dense_attn_{key}"] = {
+            # Dense counterpart for the factored-vs-dense bench.
+            "fn": lambda x, w: (x @ w.T,),
+            "args": [_arg("x", (ncal, d)), _arg("w", (d, d))],
+            "outputs": [_arg("y", (ncal, d))],
+        }
+    return entries
+
+
+def export(cfg: ModelConfig, out_dir: str, *, seed: int = 0, skip_unchanged: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = build_entries(cfg)
+
+    manifest = {
+        "format_version": 1,
+        "model_config": cfg.to_json(),
+        "tokenizer": {"bos": BOS, "eos": EOS, "pad": PAD, "sep": SEP, "vocab_used": VOCAB_USED},
+        "param_names": paramschema.param_names(cfg),
+        "maskable_names": paramschema.maskable_names(cfg),
+        "capture_names": list(model.CAPTURE_NAMES),
+        "module_budgets": MODULE_BUDGETS,
+        "entries": {},
+    }
+
+    for name, ent in entries.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(ent["fn"]).lower(*_to_specs(ent["args"]))
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": ent["args"],
+            "outputs": ent["outputs"],
+        }
+        print(f"  lowered {name}: {len(ent['args'])} args -> {len(ent['outputs'])} outputs, {len(text)//1024} KiB")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+
+    params = model.init_params(cfg, seed=seed)
+    flat = paramschema.flatten(cfg, params)
+    tensors = {n: np.asarray(t) for n, t in zip(paramschema.param_names(cfg), flat)}
+    tensorio.save(os.path.join(out_dir, "init.rtz"), tensors)
+    print(f"  wrote init.rtz ({sum(t.size for t in tensors.values())} params) + manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default=None, help="path to a ModelConfig json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = ModelConfig.from_file(args.config) if args.config else mini()
+    print(f"exporting MiniLLaMA ({cfg.n_params():,} params) to {args.out_dir}")
+    export(cfg, args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

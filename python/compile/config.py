@@ -1,0 +1,81 @@
+"""Model / export configuration shared by the L2 model and the AOT exporter.
+
+The same dimensions are mirrored on the Rust side via ``manifest.json``
+(written by :mod:`aot`), so this file is the single Python source of truth.
+
+The default ``mini`` config is a faithful scale-down of LLaMA-7B: identical
+block structure (RMSNorm → MHA(+RoPE) → residual → RMSNorm → SwiGLU →
+residual; 7 decomposable weight matrices per module), with dimensions sized
+for a 1-core CI box. ``llama7b()`` shows that the real config is expressible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+# Byte-level tokenizer special ids (bytes occupy 0..255).
+BOS = 256
+EOS = 257
+PAD = 258
+SEP = 259
+VOCAB_USED = 260
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + canonical AOT shapes."""
+
+    vocab: int = 320          # embedding rows (VOCAB_USED padded up for tiling)
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 8
+    d_ff: int = 344           # ≈ 2.69 × d_model, LLaMA-7B's 11008/4096 ratio
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # Canonical AOT batch shapes (HLO is static-shape; Rust chunks to these).
+    train_batch: int = 16
+    train_seq: int = 64
+    eval_batch: int = 32
+    eval_seq: int = 128
+    # AdamW hyperparameters baked into the train-step graph (lr is an input).
+    adam_beta1: float = 0.9
+    adam_beta2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (tied LM head)."""
+        per_block = 4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff + 2 * self.d_model
+        return self.vocab * self.d_model + self.n_layers * per_block + self.d_model
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(obj: dict[str, Any]) -> "ModelConfig":
+        return ModelConfig(**obj)
+
+    @staticmethod
+    def from_file(path: str) -> "ModelConfig":
+        with open(path) as f:
+            return ModelConfig.from_json(json.load(f))
+
+
+def mini() -> ModelConfig:
+    """Default reproduction config (~1.8 M params, 8 modules × 7 matrices)."""
+    return ModelConfig()
+
+
+def llama7b() -> ModelConfig:
+    """The paper's target, for budget-math tests (never instantiated)."""
+    return ModelConfig(
+        vocab=32000, d_model=4096, n_heads=32, n_layers=32, d_ff=11008,
+        train_batch=1, train_seq=2048, eval_batch=1, eval_seq=2048,
+    )

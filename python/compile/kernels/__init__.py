@@ -1,0 +1,22 @@
+"""L1 Pallas kernels for LLM-ROM (all interpret=True — CPU PJRT target).
+
+- :mod:`covariance` — streaming Gram matrix ``Y^T Y`` (ROM pass hot-spot)
+- :mod:`lowrank` — fused factored linear ``x W2^T W1^T`` (inference hot-spot)
+- :mod:`attention` — causal flash-style attention (model fwd hot-spot)
+- :mod:`rmsnorm` — fused RMSNorm
+- :mod:`ref` — pure-jnp oracles for all of the above
+"""
+
+from .attention import causal_attention, multihead_causal_attention
+from .covariance import covariance, covariance_blocked_feature
+from .lowrank import lowrank_matmul
+from .rmsnorm import rmsnorm
+
+__all__ = [
+    "causal_attention",
+    "multihead_causal_attention",
+    "covariance",
+    "covariance_blocked_feature",
+    "lowrank_matmul",
+    "rmsnorm",
+]

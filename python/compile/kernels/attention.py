@@ -1,0 +1,102 @@
+"""Pallas kernel: causal fused attention (flash-style online softmax).
+
+The model-forward hot-spot for MiniLLaMA (L2). One head per call; vmapped
+over heads and batch in model.py.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): CUDA flash-attention assigns a
+threadblock per Q tile and streams K/V tiles through shared memory; here the
+grid's leading axis is the Q row-block and the kernel *scans* K/V key-blocks
+with ``jax.lax.fori_loop``, keeping the running max ``m``, normalizer ``l``
+and accumulator ``acc`` in VMEM/registers. Causality lets us skip key blocks
+strictly above the diagonal by bounding the loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int, scale: float):
+    qi = pl.program_id(0)
+    blk_q = q_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale  # (blk_q, hd)
+
+    m0 = jnp.full((blk_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc0 = jnp.zeros((blk_q, v_ref.shape[-1]), jnp.float32)
+
+    q_start = qi * blk_q
+    # Causal: key block j is needed only while j*block_k <= last query row.
+    num_k = (q_start + blk_q + block_k - 1) // block_k
+    num_k = min(num_k, (seq_len + block_k - 1) // block_k) if isinstance(num_k, int) else num_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_blk = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)  # (blk_q, blk_k)
+
+        # Causal mask within the tile: query row q_start+a attends to key
+        # col j*block_k+b iff col <= row.
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, _NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_blk, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    k_hi = jnp.minimum((q_start + blk_q + block_k - 1) // block_k, pl.cdiv(seq_len, block_k))
+    m, l, acc = jax.lax.fori_loop(0, k_hi, body, (m0, l0, acc0))
+    o_ref[...] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def causal_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = 64,
+    block_k: int = 64,
+) -> jnp.ndarray:
+    """Single-head causal attention, (t, hd) -> (t, hd), f32 output.
+
+    ``t`` must be a multiple of ``block_q`` and ``block_k`` is clamped to
+    ``t`` (model.py pads sequences to the block size).
+    """
+    t, hd = q.shape
+    blk_q = min(block_q, t)
+    blk_k = min(block_k, t)
+    scale = 1.0 / float(hd) ** 0.5
+    grid = (pl.cdiv(t, blk_q),)
+    kernel = functools.partial(_attn_kernel, block_k=blk_k, seq_len=t, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_q, hd), lambda i: (i, 0)),
+            # Full K/V visible to every Q block; the kernel streams tiles
+            # out of them with pl.load (VMEM-resident at MiniLLaMA sizes).
+            pl.BlockSpec((t, hd), lambda i: (0, 0)),
+            pl.BlockSpec((t, hd), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_q, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, hd), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def multihead_causal_attention(q, k, v, *, block_q: int = 64, block_k: int = 64):
+    """(h, t, hd) -> (h, t, hd): vmap the single-head kernel over heads."""
+    fn = functools.partial(causal_attention, block_q=block_q, block_k=block_k)
+    return jax.vmap(fn)(q, k, v)

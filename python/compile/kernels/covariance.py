@@ -1,0 +1,107 @@
+"""Pallas kernel: streaming Gram/covariance accumulation ``C = Y^T Y``.
+
+This is the ROM-pass compute hot-spot (paper §2): for every linear layer the
+calibration activations ``Y ∈ R^{n×d}`` are reduced to the symmetric
+covariance ``C ∈ R^{d×d}`` whose eigenvectors are the principal components.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks row-panels of
+``Y``; each step loads one ``(blk_n, d)`` panel into VMEM and performs a
+rank-``blk_n`` MXU update ``C += Y_p^T Y_p`` into a VMEM-resident ``(d, d)``
+accumulator. This is the classic SYRK panel schedule — what a CUDA
+implementation would do with threadblock tiles in shared memory, expressed
+here with a BlockSpec over the sample axis.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cov_kernel(y_ref, o_ref, *, n: int):
+    """One grid step: accumulate the Gram update of one row panel."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    panel = y_ref[...].astype(jnp.float32)
+    # Mask rows past the true sample count: pallas pads the trailing panel
+    # with undefined values (NaN under interpret=True), which must not
+    # reach the Gram sum.
+    blk = panel.shape[0]
+    rows = step * blk + jax.lax.broadcasted_iota(jnp.int32, panel.shape, 0)
+    panel = jnp.where(rows < n, panel, 0.0)
+    # MXU-shaped rank-k update: (d, blk_n) @ (blk_n, d).
+    o_ref[...] += jnp.dot(panel.T, panel, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def covariance(y: jnp.ndarray, *, block_n: int = 512) -> jnp.ndarray:
+    """Compute ``y^T y`` (f32) with a row-panel Pallas kernel.
+
+    ``y``: (n, d); ``n`` need not be a multiple of ``block_n`` — Pallas pads
+    the trailing panel with zeros, which contribute nothing to the Gram sum.
+    """
+    n, d = y.shape
+    blk = min(block_n, n)
+    grid = (pl.cdiv(n, blk),)
+    return pl.pallas_call(
+        functools.partial(_cov_kernel, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(y)
+
+
+def covariance_blocked_feature(y: jnp.ndarray, *, block_n: int = 128, block_d: int = 256) -> jnp.ndarray:
+    """Feature-tiled variant for ``d`` too large for one VMEM tile.
+
+    2-D grid: (row panel, feature-column tile j, feature-row tile i).  Each
+    step computes the (i, j) output tile's contribution from one row panel.
+    Used when ``d × d`` f32 exceeds the VMEM accumulator budget (~16 MB).
+    """
+    n, d = y.shape
+    blk_n = min(block_n, n)
+    blk_d = min(block_d, d)
+    grid = (pl.cdiv(d, blk_d), pl.cdiv(d, blk_d), pl.cdiv(n, blk_n))
+
+    def kernel(yi_ref, yj_ref, o_ref):
+        step = pl.program_id(2)
+
+        @pl.when(step == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        a = yi_ref[...].astype(jnp.float32)
+        b = yj_ref[...].astype(jnp.float32)
+        rows_a = step * blk_n + jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+        a = jnp.where(rows_a < n, a, 0.0)
+        b = jnp.where(rows_a < n, b, 0.0)
+        # Feature-axis padding (d % blk_d != 0) also arrives as NaN.
+        cols_a = pl.program_id(0) * blk_d + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        cols_b = pl.program_id(1) * blk_d + jax.lax.broadcasted_iota(jnp.int32, b.shape, 1)
+        a = jnp.where(cols_a < d, a, 0.0)
+        b = jnp.where(cols_b < d, b, 0.0)
+        o_ref[...] += jnp.dot(a.T, b, preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_n, blk_d), lambda i, j, s: (s, i)),
+            pl.BlockSpec((blk_n, blk_d), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((blk_d, blk_d), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(y, y)

@@ -1,0 +1,67 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the mathematical specification of the matching
+kernel in :mod:`covariance`, :mod:`lowrank`, :mod:`attention` and
+:mod:`rmsnorm`.  The pytest suite (``python/tests/test_kernels.py``) sweeps
+shapes/dtypes with hypothesis and asserts ``allclose`` between kernel and
+oracle; the kernels are only trusted through these oracles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_covariance(y: jnp.ndarray) -> jnp.ndarray:
+    """Gram/covariance matrix of row-major samples.
+
+    ``y``: (n, d) activation matrix (n samples of d features).
+    Returns ``y^T y`` in f32 — the symmetric (d, d) matrix whose
+    eigendecomposition yields the ROM principal components. Normalization by
+    ``n`` is left to the caller (it does not change the eigenvectors).
+    """
+    y32 = y.astype(jnp.float32)
+    return y32.T @ y32
+
+
+def ref_lowrank_matmul(x: jnp.ndarray, w2: jnp.ndarray, w1: jnp.ndarray) -> jnp.ndarray:
+    """Factored (ROM) linear layer: ``x @ w2^T @ w1^T``.
+
+    ``x``: (n, d1) inputs; ``w2``: (r, d1) = V_r W; ``w1``: (d2, r) = V_r^T.
+    Equivalent to the dense layer ``x @ (w1 w2)^T`` but with
+    ``r (d1 + d2)`` MACs per sample instead of ``d1 d2``.
+    """
+    t = x.astype(jnp.float32) @ w2.astype(jnp.float32).T
+    return t @ w1.astype(jnp.float32).T
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True) -> jnp.ndarray:
+    """Scaled dot-product attention over one head.
+
+    ``q, k, v``: (t, hd). Causal masking by default (decoder-only model).
+    """
+    t, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return probs @ v.astype(jnp.float32)
+
+
+def ref_rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm: ``x / rms(x) * gain`` rowwise over the last axis."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return x32 * (1.0 / jnp.sqrt(ms + eps)) * gain.astype(jnp.float32)
+
+
+def ref_swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    """LLaMA FFN: ``(silu(x W_g^T) * (x W_u^T)) W_d^T``."""
+    x32 = x.astype(jnp.float32)
+    g = x32 @ w_gate.astype(jnp.float32).T
+    u = x32 @ w_up.astype(jnp.float32).T
+    act = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+    return act @ w_down.astype(jnp.float32).T

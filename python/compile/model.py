@@ -1,0 +1,358 @@
+"""L2: MiniLLaMA — the JAX model whose latent features LLM-ROM compresses.
+
+Faithful scale-down of LLaMA (Touvron et al., 2023): decoder-only, RMSNorm
+pre-norm, rotary position embeddings, SwiGLU FFN, tied LM head. Each decoder
+module contains exactly the paper's 7 decomposable weight matrices
+(wq, wk, wv, wo, w_gate, w_up, w_down).
+
+Two execution paths:
+
+- **eval / calibration path** (``forward_logits``, ``score_fwd``,
+  ``block_capture``) — uses the L1 Pallas kernels (attention, rmsnorm);
+  this is what the Rust runtime executes on the request path.
+- **train path** (``train_step``, ``train_step_masked``) — pure-jnp
+  compute (autodiff through interpret-mode Pallas is unsupported); AdamW
+  with masked-gradient support for the pruning baseline's recovery
+  fine-tune.
+
+All public entry points operate on the *flat* parameter list defined by
+:mod:`paramschema`, so the Rust side can marshal arguments positionally.
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once, and Python never runs at serving/compression time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import paramschema
+from .config import PAD, ModelConfig
+from .kernels import multihead_causal_attention, rmsnorm as pallas_rmsnorm
+from .kernels.ref import ref_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Positional encoding
+# ---------------------------------------------------------------------------
+
+def rope_tables(cfg: ModelConfig, seq: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(seq, hd/2) cos/sin tables for rotary embeddings."""
+    hd = cfg.head_dim
+    inv_freq = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    angles = pos[:, None] * inv_freq[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs of channels. ``x``: (..., seq, hd)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x1 * sin + x2 * cos
+    return jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks
+# ---------------------------------------------------------------------------
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _norm(cfg: ModelConfig, x: jnp.ndarray, gain: jnp.ndarray, *, pallas: bool) -> jnp.ndarray:
+    """RMSNorm over the last axis of (B, T, D)."""
+    b, t, d = x.shape
+    if pallas:
+        return pallas_rmsnorm(x.reshape(b * t, d), gain, eps=cfg.norm_eps).reshape(b, t, d)
+    return ref_rmsnorm(x, gain, eps=cfg.norm_eps)
+
+
+def _jnp_attention(q, k, v):
+    """Pure-jnp causal MHA for the differentiable train path.
+
+    q,k,v: (B, H, T, hd) -> (B, H, T, hd).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def _attention(cfg: ModelConfig, q, k, v, *, pallas: bool):
+    """Dispatch (B, H, T, hd) attention to the Pallas kernel or jnp ref."""
+    if not pallas:
+        return _jnp_attention(q, k, v)
+    return jax.vmap(multihead_causal_attention)(q, k, v)
+
+
+def _split_heads(cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def block_forward(
+    cfg: ModelConfig,
+    blk: dict,
+    h: jnp.ndarray,
+    cos: jnp.ndarray,
+    sin: jnp.ndarray,
+    *,
+    pallas: bool,
+    capture: bool = False,
+):
+    """One decoder module.
+
+    With ``capture=True`` additionally returns, for each of the 7
+    decomposable matrices, its calibration input X and output Y — the raw
+    material of the ROM pass (paper §2) and of the Wanda-style pruning
+    importance. Shapes: X/Y over (B, T, ·).
+    """
+    x_attn = _norm(cfg, h, blk["attn_norm"], pallas=pallas)
+    y_q = x_attn @ blk["wq"].T
+    y_k = x_attn @ blk["wk"].T
+    y_v = x_attn @ blk["wv"].T
+    q = apply_rope(_split_heads(cfg, y_q), cos, sin)
+    k = apply_rope(_split_heads(cfg, y_k), cos, sin)
+    v = _split_heads(cfg, y_v)
+    x_o = _merge_heads(cfg, _attention(cfg, q, k, v, pallas=pallas))
+    y_o = x_o @ blk["wo"].T
+    h = h + y_o
+
+    x_ffn = _norm(cfg, h, blk["ffn_norm"], pallas=pallas)
+    y_gate = x_ffn @ blk["w_gate"].T
+    y_up = x_ffn @ blk["w_up"].T
+    x_down = _silu(y_gate) * y_up
+    y_down = x_down @ blk["w_down"].T
+    h = h + y_down
+
+    if not capture:
+        return h
+    captures = {
+        "x_attn": x_attn, "x_o": x_o, "x_ffn": x_ffn, "x_down": x_down,
+        "y_q": y_q, "y_k": y_k, "y_v": y_v, "y_o": y_o,
+        "y_gate": y_gate, "y_up": y_up, "y_down": y_down,
+    }
+    return h, captures
+
+
+def model_forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray, *, pallas: bool) -> jnp.ndarray:
+    """Full forward: (B, T) int32 tokens -> (B, T, V) f32 logits."""
+    h = params["embed"][tokens]
+    cos, sin = rope_tables(cfg, tokens.shape[1])
+    for blk in params["blocks"]:
+        h = block_forward(cfg, blk, h, cos, sin, pallas=pallas)
+    h = _norm(cfg, h, params["final_norm"], pallas=pallas)
+    return h @ params["embed"].T  # tied LM head
+
+
+def token_logprobs(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-position log p(target) from (B, T, V) logits."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return picked - logz
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+CAPTURE_NAMES = (
+    "x_attn", "x_o", "x_ffn", "x_down",
+    "y_q", "y_k", "y_v", "y_o", "y_gate", "y_up", "y_down",
+)
+
+
+def forward_logits_flat(cfg: ModelConfig, *args):
+    """args = flat params ++ [tokens (B,T) i32] -> (logits,)"""
+    n = len(paramschema.param_names(cfg))
+    params = paramschema.unflatten(cfg, list(args[:n]))
+    tokens = args[n]
+    return (model_forward(cfg, params, tokens, pallas=True),)
+
+
+def score_fwd_flat(cfg: ModelConfig, *args):
+    """Length-normalizable span scoring (LLaMA zero-shot protocol).
+
+    args = flat params ++ [tokens (B,T) i32, targets (B,T) i32,
+    mask (B,T) f32]. Returns per-sequence (sum log p, token count) over the
+    masked span. The Rust evaluator turns these into multiple-choice
+    predictions and perplexity.
+    """
+    n = len(paramschema.param_names(cfg))
+    params = paramschema.unflatten(cfg, list(args[:n]))
+    tokens, targets, mask = args[n], args[n + 1], args[n + 2]
+    logits = model_forward(cfg, params, tokens, pallas=True)
+    lp = token_logprobs(logits, targets) * mask
+    return lp.sum(axis=-1), mask.sum(axis=-1)
+
+
+def embed_fwd_flat(cfg: ModelConfig, embed: jnp.ndarray, tokens: jnp.ndarray):
+    """Layerwise streaming stage 0: tokens -> hidden states."""
+    return (embed[tokens],)
+
+
+def block_capture_flat(cfg: ModelConfig, *args):
+    """One decoder module with ROM captures.
+
+    args = 9 block params (schema order) ++ [h (B,T,D)].
+    Returns (h_out,) ++ captures in CAPTURE_NAMES order.
+    """
+    blk = dict(zip(paramschema.BLOCK_FIELDS, args[:9]))
+    h = args[9]
+    cos, sin = rope_tables(cfg, h.shape[1])
+    h_out, cap = block_forward(cfg, blk, h, cos, sin, pallas=True, capture=True)
+    return (h_out,) + tuple(cap[k] for k in CAPTURE_NAMES)
+
+
+def block_fwd_flat(cfg: ModelConfig, *args):
+    """One decoder module without captures (cheap streaming)."""
+    blk = dict(zip(paramschema.BLOCK_FIELDS, args[:9]))
+    h = args[9]
+    cos, sin = rope_tables(cfg, h.shape[1])
+    return (block_forward(cfg, blk, h, cos, sin, pallas=True),)
+
+
+def head_score_flat(cfg: ModelConfig, *args):
+    """Layerwise streaming final stage: hidden states -> span scores.
+
+    args = [final_norm (D,), embed (V,D), h (B,T,D), targets (B,T) i32,
+    mask (B,T) f32] -> per-sequence (sum log p, count).
+    """
+    final_norm, embed, h, targets, mask = args
+    hn = _norm(cfg, h, final_norm, pallas=True)
+    logits = hn @ embed.T
+    lp = token_logprobs(logits, targets) * mask
+    return lp.sum(axis=-1), mask.sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Training (pure-jnp path, AdamW)
+# ---------------------------------------------------------------------------
+
+def _loss_fn(cfg: ModelConfig, params: dict, tokens: jnp.ndarray, targets: jnp.ndarray):
+    """Mean next-token NLL, ignoring PAD targets."""
+    logits = model_forward(cfg, params, tokens, pallas=False)
+    lp = token_logprobs(logits, targets)
+    mask = (targets != PAD).astype(jnp.float32)
+    return -(lp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _adamw_update(cfg: ModelConfig, p, g, m, v, step, lr):
+    """One AdamW step for a single tensor (decay only on 2-D weights)."""
+    b1, b2, eps = cfg.adam_beta1, cfg.adam_beta2, cfg.adam_eps
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1 ** step)
+    vhat = v / (1.0 - b2 ** step)
+    upd = mhat / (jnp.sqrt(vhat) + eps)
+    if p.ndim == 2:
+        upd = upd + cfg.weight_decay * p
+    return p - lr * upd, m, v
+
+
+def train_step_flat(cfg: ModelConfig, *args):
+    """One AdamW step.
+
+    args = flat params ++ flat m ++ flat v ++ [step f32 scalar, lr f32
+    scalar, tokens (B,T) i32, targets (B,T) i32].
+    Returns new params ++ new m ++ new v ++ (loss,). ``step`` is 1-based
+    (bias correction).
+    """
+    names = paramschema.param_names(cfg)
+    n = len(names)
+    flat_p, flat_m, flat_v = list(args[:n]), list(args[n:2 * n]), list(args[2 * n:3 * n])
+    step, lr, tokens, targets = args[3 * n], args[3 * n + 1], args[3 * n + 2], args[3 * n + 3]
+
+    params = paramschema.unflatten(cfg, flat_p)
+    loss, grads = jax.value_and_grad(lambda p: _loss_fn(cfg, p, tokens, targets))(params)
+    flat_g = paramschema.flatten(cfg, grads)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        p2, m2, v2 = _adamw_update(cfg, p, g, m, v, step, lr)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+
+def train_step_masked_flat(cfg: ModelConfig, *args):
+    """AdamW step that preserves structured-pruning masks.
+
+    args = flat params ++ flat masks (one f32 mask per maskable matrix,
+    schema order) ++ flat m ++ flat v ++ [step, lr, tokens, targets].
+    Masks multiply both the gradients and the updated weights, so pruned
+    channels stay exactly zero through the recovery fine-tune
+    (LLM-Pruner's finetuned rows in Table 1).
+    """
+    names = paramschema.param_names(cfg)
+    maskable = paramschema.maskable_names(cfg)
+    n, k = len(names), len(maskable)
+    flat_p = list(args[:n])
+    flat_masks = list(args[n:n + k])
+    flat_m = list(args[n + k:2 * n + k])
+    flat_v = list(args[2 * n + k:3 * n + k])
+    step, lr, tokens, targets = (
+        args[3 * n + k], args[3 * n + k + 1], args[3 * n + k + 2], args[3 * n + k + 3]
+    )
+
+    mask_by_name = dict(zip(maskable, flat_masks))
+    params = paramschema.unflatten(cfg, flat_p)
+    loss, grads = jax.value_and_grad(lambda p: _loss_fn(cfg, p, tokens, targets))(params)
+    flat_g = paramschema.flatten(cfg, grads)
+
+    new_p, new_m, new_v = [], [], []
+    for name, p, g, m, v in zip(names, flat_p, flat_g, flat_m, flat_v):
+        mask = mask_by_name.get(name)
+        if mask is not None:
+            g = g * mask
+        p2, m2, v2 = _adamw_update(cfg, p, g, m, v, step, lr)
+        if mask is not None:
+            p2 = p2 * mask
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """LLaMA-style init: N(0, 0.02) matrices, unit norms."""
+    key = jax.random.PRNGKey(seed)
+
+    def dense(key, shape):
+        return (0.02 * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    params: dict = {"embed": dense(keys[0], (cfg.vocab, cfg.d_model)), "blocks": []}
+    for i in range(cfg.n_layers):
+        bk = jax.random.split(keys[i + 1], 7)
+        d, f = cfg.d_model, cfg.d_ff
+        params["blocks"].append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(bk[0], (d, d)),
+            "wk": dense(bk[1], (d, d)),
+            "wv": dense(bk[2], (d, d)),
+            "wo": dense(bk[3], (d, d)),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+            "w_gate": dense(bk[4], (f, d)),
+            "w_up": dense(bk[5], (f, d)),
+            "w_down": dense(bk[6], (d, f)),
+        })
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params

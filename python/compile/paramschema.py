@@ -1,0 +1,84 @@
+"""Canonical flat parameter ordering, shared with the Rust side.
+
+HLO entry points take parameters as a *flat positional argument list* (so
+the Rust runtime can swap weights without recompiling). This module defines
+the one true ordering; ``aot.py`` embeds it in ``manifest.json`` and
+``rust/src/model/schema.rs`` mirrors the same generation rule, with a test
+asserting both agree against the manifest.
+
+Order: ``embed``, then for each block ``i``:
+``attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down``, then
+``final_norm``.  Maskable (decomposable / prunable) tensors are exactly the
+7 two-dimensional weights per block.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from .config import ModelConfig
+
+BLOCK_FIELDS = ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down")
+MASKABLE_FIELDS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    def gen() -> Iterator[str]:
+        yield "embed"
+        for i in range(cfg.n_layers):
+            for f in BLOCK_FIELDS:
+                yield f"blocks.{i}.{f}"
+        yield "final_norm"
+
+    return list(gen())
+
+
+def param_shape(cfg: ModelConfig, name: str) -> tuple[int, ...]:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    if name == "embed":
+        return (v, d)
+    if name == "final_norm":
+        return (d,)
+    field = name.split(".")[-1]
+    return {
+        "attn_norm": (d,),
+        "ffn_norm": (d,),
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "w_gate": (f, d),
+        "w_up": (f, d),
+        "w_down": (d, f),
+    }[field]
+
+
+def maskable_names(cfg: ModelConfig) -> list[str]:
+    """The 7·L decomposable weight matrices, in param order."""
+    return [n for n in param_names(cfg) if n.split(".")[-1] in MASKABLE_FIELDS]
+
+
+def flatten(cfg: ModelConfig, tree: dict) -> list:
+    """Nested param dict -> flat list in canonical order."""
+    out = []
+    for name in param_names(cfg):
+        node = tree
+        for part in name.split("."):
+            node = node[int(part)] if part.isdigit() else node[part]
+        out.append(node)
+    return out
+
+
+def unflatten(cfg: ModelConfig, flat: list) -> dict:
+    """Flat list in canonical order -> nested param dict."""
+    it = iter(flat)
+    tree: dict = {"embed": next(it), "blocks": []}
+    for _ in range(cfg.n_layers):
+        blk = {f: next(it) for f in BLOCK_FIELDS}
+        tree["blocks"].append(blk)
+    tree["final_norm"] = next(it)
+    try:
+        next(it)
+    except StopIteration:
+        return tree
+    raise ValueError("flat param list longer than schema")

@@ -1,0 +1,62 @@
+"""``.rtz`` named-tensor container — Python side (mirrored in Rust).
+
+A deliberately tiny, dependency-free binary format used to move weights
+between the build-time Python world and the runtime Rust world:
+
+    magic  b"RTZ1"
+    u32    tensor count (LE)
+    repeat:
+        u16   name length, then UTF-8 name
+        u8    dtype  (0 = f32, 1 = i32, 2 = f64, 3 = u8)
+        u8    ndim
+        u64×n dims (LE)
+        raw   row-major LE data
+
+No alignment, no compression — files are small (≤ tens of MB) and both
+readers stream.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"RTZ1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.float64, 3: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.float64): 2, np.dtype(np.uint8): 3}
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            f.write(arr.astype(arr.dtype, copy=False).tobytes())
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            dtype = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims)) if dims else 1
+            data = f.read(n * dtype.itemsize)
+            out[name] = np.frombuffer(data, dtype=dtype).reshape(dims).copy()
+    return out

@@ -1,0 +1,200 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; the kernels are only trusted through these
+comparisons (interpret=True makes them bit-comparable on CPU).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    causal_attention,
+    covariance,
+    covariance_blocked_feature,
+    lowrank_matmul,
+    multihead_causal_attention,
+    rmsnorm,
+)
+from compile.kernels import ref
+
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------- cov
+
+@settings(**_SETTINGS)
+@given(
+    n=st.integers(1, 400),
+    d=st.integers(1, 96),
+    block_n=st.sampled_from([32, 128, 256]),
+)
+def test_covariance_matches_ref(n, d, block_n):
+    rng = np.random.default_rng(n * 1000 + d)
+    y = _rand(rng, n, d)
+    got = covariance(y, block_n=block_n)
+    want = ref.ref_covariance(y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(**_SETTINGS)
+@given(
+    n=st.integers(1, 300),
+    d=st.integers(2, 80),
+    block_d=st.sampled_from([16, 32, 64]),
+)
+def test_covariance_blocked_matches_ref(n, d, block_d):
+    rng = np.random.default_rng(n * 7 + d)
+    y = _rand(rng, n, d)
+    got = covariance_blocked_feature(y, block_n=64, block_d=block_d)
+    np.testing.assert_allclose(got, ref.ref_covariance(y), rtol=1e-5, atol=1e-3)
+
+
+def test_covariance_symmetry_and_psd():
+    rng = np.random.default_rng(0)
+    y = _rand(rng, 256, 48)
+    c = np.asarray(covariance(y))
+    np.testing.assert_allclose(c, c.T, rtol=1e-6, atol=1e-4)
+    eigs = np.linalg.eigvalsh(c)
+    assert eigs.min() > -1e-3  # PSD up to accumulation noise
+
+
+def test_covariance_bf16_input_accumulates_f32():
+    rng = np.random.default_rng(1)
+    y = jnp.asarray(rng.normal(size=(128, 32))).astype(jnp.bfloat16)
+    got = covariance(y)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, ref.ref_covariance(y), rtol=2e-2, atol=1e-1)
+
+
+# ------------------------------------------------------------------ lowrank
+
+@settings(**_SETTINGS)
+@given(
+    n=st.integers(1, 200),
+    d1=st.integers(1, 64),
+    d2=st.integers(1, 96),
+    r=st.integers(1, 32),
+)
+def test_lowrank_matches_ref(n, d1, d2, r):
+    rng = np.random.default_rng(n + d1 * 31 + d2 * 7 + r)
+    x = _rand(rng, n, d1)
+    w2 = _rand(rng, r, d1)
+    w1 = _rand(rng, d2, r)
+    got = lowrank_matmul(x, w2, w1)
+    want = ref.ref_lowrank_matmul(x, w2, w1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_lowrank_equals_dense_composition():
+    """Factored layer must equal the dense layer with W = W1 @ W2."""
+    rng = np.random.default_rng(3)
+    x, w2, w1 = _rand(rng, 64, 24), _rand(rng, 8, 24), _rand(rng, 40, 8)
+    dense = x @ (w1 @ w2).T
+    np.testing.assert_allclose(lowrank_matmul(x, w2, w1), dense, rtol=1e-4, atol=1e-3)
+
+
+def test_lowrank_shape_mismatch_raises():
+    rng = np.random.default_rng(4)
+    with pytest.raises(AssertionError):
+        lowrank_matmul(_rand(rng, 8, 4), _rand(rng, 2, 5), _rand(rng, 6, 2))
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(**_SETTINGS)
+@given(
+    t=st.sampled_from([16, 32, 64, 128, 192]),
+    hd=st.sampled_from([8, 16, 32]),
+    block_q=st.sampled_from([16, 32, 64]),
+    block_k=st.sampled_from([16, 32, 64]),
+)
+def test_attention_matches_ref(t, hd, block_q, block_k):
+    rng = np.random.default_rng(t + hd)
+    q, k, v = (_rand(rng, t, hd) for _ in range(3))
+    got = causal_attention(q, k, v, block_q=block_q, block_k=block_k)
+    want = ref.ref_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_is_causal():
+    """Perturbing future keys/values must not change earlier outputs."""
+    rng = np.random.default_rng(5)
+    t, hd = 64, 16
+    q, k, v = (_rand(rng, t, hd) for _ in range(3))
+    base = np.asarray(causal_attention(q, k, v))
+    k2 = k.at[t // 2:].set(999.0)
+    v2 = v.at[t // 2:].set(-999.0)
+    pert = np.asarray(causal_attention(q, k2, v2))
+    np.testing.assert_allclose(base[: t // 2], pert[: t // 2], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_first_row_is_v0():
+    """Position 0 attends only to itself -> output row 0 == v[0]."""
+    rng = np.random.default_rng(6)
+    q, k, v = (_rand(rng, 32, 8) for _ in range(3))
+    out = np.asarray(causal_attention(q, k, v))
+    np.testing.assert_allclose(out[0], np.asarray(v)[0], rtol=1e-5, atol=1e-5)
+
+
+def test_multihead_matches_per_head():
+    rng = np.random.default_rng(7)
+    h, t, hd = 4, 64, 16
+    q, k, v = (_rand(rng, h, t, hd) for _ in range(3))
+    got = np.asarray(multihead_causal_attention(q, k, v))
+    for i in range(h):
+        np.testing.assert_allclose(
+            got[i], ref.ref_attention(q[i], k[i], v[i]), rtol=1e-4, atol=1e-4
+        )
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@settings(**_SETTINGS)
+@given(n=st.integers(1, 300), d=st.integers(1, 128))
+def test_rmsnorm_matches_ref(n, d):
+    rng = np.random.default_rng(n * 13 + d)
+    x = _rand(rng, n, d)
+    g = _rand(rng, d)
+    np.testing.assert_allclose(rmsnorm(x, g), ref.ref_rmsnorm(x, g), rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_unit_rms():
+    """With unit gain the output rows have RMS ≈ 1."""
+    rng = np.random.default_rng(8)
+    x = _rand(rng, 64, 96) * 7.0
+    out = np.asarray(rmsnorm(x, jnp.ones((96,), jnp.float32)))
+    rms = np.sqrt((out ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(c·x) == RMSNorm(x) for c > 0 (up to eps)."""
+    rng = np.random.default_rng(9)
+    x = _rand(rng, 16, 64)
+    g = _rand(rng, 64)
+    a = np.asarray(rmsnorm(x, g))
+    b = np.asarray(rmsnorm(x * 100.0, g))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_covariance_default_blocks_nonmultiple_shape():
+    """Default (tuned) block_n=512 on a shape that is not a multiple."""
+    rng = np.random.default_rng(42)
+    y = jnp.asarray(rng.normal(size=(700, 40)).astype(np.float32))
+    np.testing.assert_allclose(covariance(y), ref.ref_covariance(y), rtol=1e-5, atol=1e-3)
+
+
+def test_lowrank_default_blocks_large_n():
+    rng = np.random.default_rng(43)
+    x = jnp.asarray(rng.normal(size=(1030, 24)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(8, 24)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    np.testing.assert_allclose(
+        lowrank_matmul(x, w2, w1), ref.ref_lowrank_matmul(x, w2, w1), rtol=1e-4, atol=1e-3
+    )

@@ -1,0 +1,241 @@
+"""L2 correctness: MiniLLaMA forward/train invariants + flat-arg plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, paramschema
+from compile.config import PAD, ModelConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # Tiny config so the jnp path stays fast under pytest.
+    return ModelConfig(
+        vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=48,
+        train_batch=2, train_seq=16, eval_batch=2, eval_seq=16,
+    )
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init_params(cfg, seed=0)
+
+
+def _tokens(cfg, rng, b=None, t=None):
+    b = b or cfg.eval_batch
+    t = t or cfg.eval_seq
+    return jnp.asarray(rng.integers(0, 60, size=(b, t)).astype(np.int32))
+
+
+# ------------------------------------------------------------------- schema
+
+def test_param_schema_roundtrip(cfg, params):
+    flat = paramschema.flatten(cfg, params)
+    tree = paramschema.unflatten(cfg, flat)
+    flat2 = paramschema.flatten(cfg, tree)
+    assert len(flat) == len(paramschema.param_names(cfg)) == 2 + 9 * cfg.n_layers
+    for a, b in zip(flat, flat2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_param_shapes_match_schema(cfg, params):
+    flat = paramschema.flatten(cfg, params)
+    for name, t in zip(paramschema.param_names(cfg), flat):
+        assert tuple(t.shape) == paramschema.param_shape(cfg, name), name
+
+
+def test_maskable_names_are_the_7_matrices(cfg):
+    names = paramschema.maskable_names(cfg)
+    assert len(names) == 7 * cfg.n_layers
+    assert all(paramschema.param_shape(cfg, n).__len__() == 2 for n in names)
+
+
+# ------------------------------------------------------------------ forward
+
+def test_pallas_and_jnp_paths_agree(cfg, params):
+    rng = np.random.default_rng(0)
+    tokens = _tokens(cfg, rng)
+    a = model.model_forward(cfg, params, tokens, pallas=True)
+    b = model.model_forward(cfg, params, tokens, pallas=False)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_forward_is_causal(cfg, params):
+    """Changing a future token must not change earlier logits."""
+    rng = np.random.default_rng(1)
+    tokens = _tokens(cfg, rng)
+    logits = np.asarray(model.model_forward(cfg, params, tokens, pallas=False))
+    tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % 60)
+    logits2 = np.asarray(model.model_forward(cfg, params, tokens2, pallas=False))
+    np.testing.assert_allclose(logits[:, :-1], logits2[:, :-1], rtol=1e-4, atol=1e-4)
+
+
+def test_flat_forward_matches_tree(cfg, params):
+    rng = np.random.default_rng(2)
+    tokens = _tokens(cfg, rng)
+    flat = paramschema.flatten(cfg, params)
+    (logits_flat,) = model.forward_logits_flat(cfg, *flat, tokens)
+    logits_tree = model.model_forward(cfg, params, tokens, pallas=True)
+    np.testing.assert_allclose(logits_flat, logits_tree, rtol=1e-6, atol=1e-6)
+
+
+def test_block_capture_consistency(cfg, params):
+    """Captured Y must equal X @ W^T for each decomposable matrix, and the
+    streamed block chain must equal the monolithic forward."""
+    rng = np.random.default_rng(3)
+    tokens = _tokens(cfg, rng)
+    h = params["embed"][tokens]
+    cos, sin = model.rope_tables(cfg, tokens.shape[1])
+    for blk in params["blocks"]:
+        flat_blk = [blk[f] for f in paramschema.BLOCK_FIELDS]
+        outs = model.block_capture_flat(cfg, *flat_blk, h)
+        h_out, caps = outs[0], dict(zip(model.CAPTURE_NAMES, outs[1:]))
+        np.testing.assert_allclose(
+            caps["y_q"], caps["x_attn"] @ blk["wq"].T, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            caps["y_o"], caps["x_o"] @ blk["wo"].T, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            caps["y_gate"], caps["x_ffn"] @ blk["w_gate"].T, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            caps["y_down"], caps["x_down"] @ blk["w_down"].T, rtol=1e-5, atol=1e-5)
+        ref_h = model.block_forward(cfg, blk, h, cos, sin, pallas=True)
+        np.testing.assert_allclose(h_out, ref_h, rtol=1e-6, atol=1e-6)
+        h = h_out
+    # chain end == full forward pre-head
+    hn = model._norm(cfg, h, params["final_norm"], pallas=True)
+    logits = hn @ params["embed"].T
+    full = model.model_forward(cfg, params, tokens, pallas=True)
+    np.testing.assert_allclose(logits, full, rtol=2e-5, atol=2e-5)
+
+
+def test_score_fwd_matches_manual(cfg, params):
+    rng = np.random.default_rng(4)
+    tokens = _tokens(cfg, rng)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+    flat = paramschema.flatten(cfg, params)
+    s, c = model.score_fwd_flat(cfg, *flat, tokens, targets, mask)
+    logits = model.model_forward(cfg, params, tokens, pallas=True)
+    lp = model.token_logprobs(logits, targets) * mask
+    np.testing.assert_allclose(s, lp.sum(axis=-1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c, mask.sum(axis=-1))
+
+
+def test_head_score_matches_score_fwd(cfg, params):
+    rng = np.random.default_rng(5)
+    tokens = _tokens(cfg, rng)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    flat = paramschema.flatten(cfg, params)
+    s_ref, c_ref = model.score_fwd_flat(cfg, *flat, tokens, targets, mask)
+    # stream: embed -> blocks -> head
+    h = model.embed_fwd_flat(cfg, params["embed"], tokens)[0]
+    for blk in params["blocks"]:
+        flat_blk = [blk[f] for f in paramschema.BLOCK_FIELDS]
+        h = model.block_fwd_flat(cfg, *flat_blk, h)[0]
+    s, c = model.head_score_flat(cfg, params["final_norm"], params["embed"], h, targets, mask)
+    np.testing.assert_allclose(s, s_ref, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(c, c_ref)
+
+
+# ------------------------------------------------------------------- train
+
+def test_train_step_reduces_loss(cfg, params):
+    """A few steps on a fixed batch must reduce loss (sanity of grads+AdamW)."""
+    rng = np.random.default_rng(6)
+    tokens = _tokens(cfg, rng, cfg.train_batch, cfg.train_seq)
+    targets = jnp.roll(tokens, -1, axis=1)
+    names = paramschema.param_names(cfg)
+    flat = paramschema.flatten(cfg, params)
+    m = [jnp.zeros_like(t) for t in flat]
+    v = [jnp.zeros_like(t) for t in flat]
+    losses = []
+    step_fn = jax.jit(lambda *a: model.train_step_flat(cfg, *a))
+    for i in range(5):
+        outs = step_fn(*flat, *m, *v,
+                       jnp.float32(i + 1), jnp.float32(1e-3), tokens, targets)
+        n = len(names)
+        flat, m, v = list(outs[:n]), list(outs[n:2 * n]), list(outs[2 * n:3 * n])
+        losses.append(float(outs[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_ignores_pad(cfg, params):
+    """Loss must not depend on PAD-target positions."""
+    rng = np.random.default_rng(7)
+    tokens = _tokens(cfg, rng, cfg.train_batch, cfg.train_seq)
+    targets = jnp.roll(tokens, -1, axis=1).at[:, -4:].set(PAD)
+    l1 = model._loss_fn(cfg, params, tokens, targets)
+    # garbage in the masked positions -> same loss
+    t2 = targets.at[:, -4:].set(PAD)
+    l2 = model._loss_fn(cfg, params, tokens, t2)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_train_step_masked_preserves_zeros(cfg, params):
+    rng = np.random.default_rng(8)
+    tokens = _tokens(cfg, rng, cfg.train_batch, cfg.train_seq)
+    targets = jnp.roll(tokens, -1, axis=1)
+    names = paramschema.param_names(cfg)
+    maskable = paramschema.maskable_names(cfg)
+    flat = paramschema.flatten(cfg, params)
+    # zero the first 8 output channels of every maskable matrix
+    masks = []
+    flat_masked = []
+    by_name = dict(zip(names, flat))
+    for nm in maskable:
+        w = by_name[nm]
+        mask = jnp.ones_like(w).at[:8, :].set(0.0)
+        masks.append(mask)
+        by_name[nm] = w * mask
+    flat_masked = [by_name[nm] for nm in names]
+    m = [jnp.zeros_like(t) for t in flat_masked]
+    v = [jnp.zeros_like(t) for t in flat_masked]
+    outs = model.train_step_masked_flat(
+        cfg, *flat_masked, *masks, *m, *v,
+        jnp.float32(1), jnp.float32(1e-3), tokens, targets)
+    new_flat = outs[: len(names)]
+    for nm, t in zip(names, new_flat):
+        if nm in maskable:
+            np.testing.assert_array_equal(np.asarray(t)[:8, :], 0.0)
+
+
+# --------------------------------------------------------------------- rope
+
+def test_rope_preserves_norm(cfg):
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.head_dim)).astype(np.float32))
+    cos, sin = model.rope_tables(cfg, 8)
+    y = model.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity(cfg):
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.normal(size=(1, 4, cfg.head_dim)).astype(np.float32))
+    cos, sin = model.rope_tables(cfg, 4)
+    y = model.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(y)[0, 0], np.asarray(x)[0, 0], rtol=1e-6)
+
+
+def test_rope_relative_dot_products(cfg):
+    """RoPE dot products depend only on relative distance."""
+    hd = cfg.head_dim
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(1, 16, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 16, hd)).astype(np.float32))
+    cos, sin = model.rope_tables(cfg, 16)
+    # broadcast same q/k content at all positions
+    qc = jnp.broadcast_to(q[:, :1], q.shape)
+    kc = jnp.broadcast_to(k[:, :1], k.shape)
+    qr = np.asarray(model.apply_rope(qc, cos, sin))[0]
+    kr = np.asarray(model.apply_rope(kc, cos, sin))[0]
+    d1 = float(qr[3] @ kr[1])   # distance 2
+    d2 = float(qr[10] @ kr[8])  # distance 2
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)

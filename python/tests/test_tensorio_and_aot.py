@@ -1,0 +1,123 @@
+"""tensorio round-trip + AOT manifest/rank-math checks (incl. paper values)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, paramschema, tensorio
+from compile.config import ModelConfig, llama7b, mini
+
+
+# ----------------------------------------------------------------- tensorio
+
+def test_rtz_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.normal(size=(3, 5)).astype(np.float32),
+        "b.c": rng.integers(-10, 10, size=(7,)).astype(np.int32),
+        "scalarish": rng.normal(size=(1,)).astype(np.float64),
+        "bytes": rng.integers(0, 255, size=(4, 4)).astype(np.uint8),
+    }
+    p = str(tmp_path / "x.rtz")
+    tensorio.save(p, tensors)
+    loaded = tensorio.load(p)
+    assert set(loaded) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(loaded[k], tensors[k])
+        assert loaded[k].dtype == tensors[k].dtype
+
+
+def test_rtz_empty_and_bad_magic(tmp_path):
+    p = str(tmp_path / "e.rtz")
+    tensorio.save(p, {})
+    assert tensorio.load(p) == {}
+    with open(p, "wb") as f:
+        f.write(b"NOPE")
+    with pytest.raises(ValueError):
+        tensorio.load(p)
+
+
+# ---------------------------------------------------------------- rank math
+
+def test_rank_formula_reproduces_paper_values():
+    """Paper §2.1, LLaMA-7B: attention 4096×4096 and FFN 4096×11008.
+
+    Published ranks: attn {1228, 954, 675}, ffn {1791, 1373, 985} for
+    module budgets {0.60, 0.46, 0.33}. All match r = ⌊b·d1·d2/(d1+d2)⌋
+    except attn@0.46 where the paper reports 954 (≙ b=0.466) instead of
+    942 — a rounding/reporting anomaly we document rather than replicate.
+    """
+    assert aot.rank_for_budget(4096, 4096, 0.60) == 1228
+    assert aot.rank_for_budget(4096, 4096, 0.33) == 675
+    assert aot.rank_for_budget(11008, 4096, 0.60) == 1791
+    assert aot.rank_for_budget(11008, 4096, 0.46) == 1373
+    assert aot.rank_for_budget(11008, 4096, 0.33) == 985
+    # the anomaly: formula gives 942, paper prints 954
+    assert aot.rank_for_budget(4096, 4096, 0.46) == 942
+    assert abs(954 * (4096 + 4096) / (4096 * 4096) - 0.466) < 1e-3
+
+
+def test_rank_budget_actually_compresses():
+    for b in (0.9, 0.6, 0.46, 0.33, 0.1):
+        for d1, d2 in ((128, 128), (344, 128), (4096, 11008)):
+            r = aot.rank_for_budget(d1, d2, b)
+            assert r * (d1 + d2) <= b * d1 * d2
+
+
+def test_llama7b_param_count():
+    cfg = llama7b()
+    # 6.7B total per the paper's Table 1 (tied-head accounting).
+    assert abs(cfg.n_params() - 6.7e9) / 6.7e9 < 0.05
+
+
+def test_decoder_fraction_dominates():
+    """Paper: decoder modules hold >96% of LLaMA-7B parameters."""
+    cfg = llama7b()
+    per_block = 4 * cfg.d_model ** 2 + 3 * cfg.d_model * cfg.d_ff + 2 * cfg.d_model
+    frac = cfg.n_layers * per_block / cfg.n_params()
+    assert frac > 0.96
+
+
+# ----------------------------------------------------------------- manifest
+
+def test_entry_specs_are_consistent():
+    cfg = ModelConfig(
+        vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=48,
+        train_batch=2, train_seq=16, eval_batch=2, eval_seq=16,
+    )
+    entries = aot.build_entries(cfg)
+    n = len(paramschema.param_names(cfg))
+    k = len(paramschema.maskable_names(cfg))
+    assert len(entries["forward_logits"]["args"]) == n + 1
+    assert len(entries["score_fwd"]["args"]) == n + 3
+    assert len(entries["train_step"]["args"]) == 3 * n + 4
+    assert len(entries["train_step_masked"]["args"]) == 3 * n + k + 4
+    assert len(entries["train_step"]["outputs"]) == 3 * n + 1
+    assert len(entries["block_capture"]["outputs"]) == 12
+    # arg names in the manifest match the schema order
+    names = [a["name"] for a in entries["forward_logits"]["args"][:n]]
+    assert names == paramschema.param_names(cfg)
+
+
+@pytest.mark.slow
+def test_full_export_smoke(tmp_path):
+    """End-to-end export of a tiny config: every HLO file + manifest + init."""
+    cfg = ModelConfig(
+        vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=48,
+        train_batch=2, train_seq=16, eval_batch=2, eval_seq=16,
+    )
+    out = str(tmp_path / "artifacts")
+    aot.export(cfg, out)
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, ent in manifest["entries"].items():
+        p = os.path.join(out, ent["file"])
+        assert os.path.exists(p), name
+        head = open(p).read(200)
+        assert "HloModule" in head, name
+    params = tensorio.load(os.path.join(out, "init.rtz"))
+    assert set(params) == set(manifest["param_names"])
+    for nm, arr in params.items():
+        assert list(arr.shape) == list(paramschema.param_shape(cfg, nm))

@@ -1,0 +1,62 @@
+//! Evaluation-path throughput: score_fwd batches/sec and instances/sec —
+//! the serving-side cost of the zero-shot harness that regenerates
+//! Tables 1-4 (and the place where a compressed model's MAC savings would
+//! surface on accelerators).
+//!
+//! Needs artifacts (`make artifacts`); skips gracefully otherwise.
+
+use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::data::{encode_mc_batches, Split, Task, TaskKind};
+use llm_rom::eval::Evaluator;
+use llm_rom::runtime::Runtime;
+use llm_rom::tensor::Tensor;
+use llm_rom::util::bench::{bench, default_window};
+
+fn main() {
+    let Ok(rt) = Runtime::new(llm_rom::DEFAULT_ARTIFACTS) else {
+        eprintln!("skipping eval bench: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let w = default_window();
+    println!("# eval_throughput bench (platform {})", rt.platform());
+    let exp = Experiment::new(&rt, ExperimentConfig::default());
+    let params = exp.init_params(llm_rom::DEFAULT_ARTIFACTS).expect("init params");
+    let (eb, es) = (exp.cfg.eval_batch, exp.cfg.eval_seq);
+
+    // one raw score_fwd batch
+    let task = Task::new(&exp.world, TaskKind::BoolLike);
+    let insts = task.generate(Split::Eval, eb, 0);
+    let mb = &encode_mc_batches(&insts, eb, es).unwrap()[0];
+    let tokens = Tensor::from_i32(&[eb, es], mb.tokens.clone());
+    let targets = Tensor::from_i32(&[eb, es], mb.targets.clone());
+    let mask = Tensor::from_f32(&[eb, es], mb.mask.clone());
+    let mut args: Vec<&Tensor> = params.flat();
+    args.push(&tokens);
+    args.push(&targets);
+    args.push(&mask);
+    let r = bench("score_fwd one batch (32x128)", w, || {
+        rt.execute("score_fwd", &args).unwrap()
+    });
+    println!("    -> {:.1} sequences/s", eb as f64 / r.mean_s);
+
+    // end-to-end task evaluation (32 instances)
+    let evaluator = Evaluator::new(&rt);
+    let insts = task.generate(Split::Eval, 32, 1);
+    let r = bench("eval_task synth-boolq (32 instances)", w, || {
+        evaluator.eval_task(&params, &insts).unwrap()
+    });
+    println!("    -> {:.1} instances/s", 32.0 / r.mean_s);
+
+    // forward_logits (generation-style path)
+    let spec = rt.manifest().entry("forward_logits").unwrap().clone();
+    let toks = Tensor::from_i32(
+        &spec.args.last().unwrap().shape,
+        vec![1i32; eb * es],
+    );
+    let mut args: Vec<&Tensor> = params.flat();
+    args.push(&toks);
+    let r = bench("forward_logits (32x128)", w, || {
+        rt.execute("forward_logits", &args).unwrap()
+    });
+    println!("    -> {:.0} tokens/s", (eb * es) as f64 / r.mean_s);
+}

@@ -1,0 +1,68 @@
+//! Microbenchmarks for the linalg substrate — the CPU primitives behind
+//! the paper's "ROM on CPU in seconds per layer" claim (§4).
+//!
+//! Cases are sized to the MiniLLaMA ROM pass (d = 128 attention, 344 FFN).
+
+use std::time::Duration;
+
+use llm_rom::linalg::{eigh, eigh_jacobi, matmul, matmul_transb_f32, Matrix};
+use llm_rom::util::bench::{bench, default_window};
+use llm_rom::util::Rng;
+
+fn random_sym(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::from_fn(n, n, |_, _| rng.normal());
+    m.symmetrize();
+    m
+}
+
+fn random_mat(r: usize, c: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn main() {
+    let w = default_window();
+    println!("# linalg microbench (window {w:?})");
+
+    // eigensolver at the two ROM covariance sizes
+    for &n in &[128usize, 344] {
+        let a = random_sym(n, n as u64);
+        bench(&format!("eigh_ql_{n}x{n}"), w, || eigh(&a).unwrap());
+    }
+    // jacobi oracle at the small size (cross-check cost)
+    let a128 = random_sym(128, 9);
+    bench("eigh_jacobi_128x128", Duration::from_secs_f64(w.as_secs_f64().min(2.0)), || {
+        eigh_jacobi(&a128).unwrap()
+    });
+
+    // re-parameterization matmuls: V_r W and W1 W2 at 80% budget ranks
+    let vr = random_mat(29, 128, 1);
+    let wq = random_mat(128, 128, 2);
+    bench("reparam_VrW_attn(29x128 @ 128x128)", w, || matmul(&vr, &wq));
+    let w1 = random_mat(344, 42, 3);
+    let w2 = random_mat(42, 128, 4);
+    bench("reparam_W1W2_ffn(344x42 @ 42x128)", w, || matmul(&w1, &w2));
+
+    // rust covariance fallback at one calibration chunk (4096 x 128)
+    let mut rng = Rng::new(5);
+    let y: Vec<f32> = (0..4096 * 128).map(|_| rng.normal() as f32).collect();
+    bench("gram_rust_f32_4096x128", w, || {
+        let mut acc = llm_rom::rom::CovarianceAccumulator::new(128);
+        acc.update_rows(&y, 4096, None).unwrap();
+        acc.finalize(false)
+    });
+
+    // factored vs dense forward in rust f32 (MACs-proportionality check)
+    let x: Vec<f32> = (0..4096 * 128).map(|_| rng.normal() as f32).collect();
+    let wd: Vec<f32> = (0..128 * 128).map(|_| rng.normal() as f32).collect();
+    bench("dense_fwd_f32 (4096x128 @ 128x128)", w, || {
+        matmul_transb_f32(&x, &wd, 4096, 128, 128)
+    });
+    let w2f: Vec<f32> = (0..29 * 128).map(|_| rng.normal() as f32).collect();
+    let w1f: Vec<f32> = (0..128 * 29).map(|_| rng.normal() as f32).collect();
+    bench("lowrank_fwd_f32 r=29 (two matmuls)", w, || {
+        let t = matmul_transb_f32(&x, &w2f, 4096, 128, 29);
+        matmul_transb_f32(&t, &w1f, 4096, 29, 128)
+    });
+}

@@ -1,0 +1,47 @@
+//! End-to-end ROM-of-one-module benchmark — the paper's §4 "13 s per
+//! layer" analog, measured on the real pipeline (capture → covariance →
+//! eigendecomposition → re-parameterization) at several calibration sizes,
+//! with both covariance backends (Pallas Gram kernel vs pure Rust).
+//!
+//! Needs artifacts (`make artifacts`); skips gracefully otherwise.
+
+use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::rom::{ModuleSchedule, RomConfig, RomPipeline};
+use llm_rom::runtime::Runtime;
+use llm_rom::util::bench::bench;
+
+fn main() {
+    let Ok(rt) = Runtime::new(llm_rom::DEFAULT_ARTIFACTS) else {
+        eprintln!("skipping rom_layer bench: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    println!("# rom_layer bench (platform {})", rt.platform());
+    let exp = Experiment::new(&rt, ExperimentConfig::default());
+    let params = exp.init_params(llm_rom::DEFAULT_ARTIFACTS).expect("init params");
+    let pipeline = RomPipeline::new(&rt);
+
+    // compress only the last module, at two calibration sizes (512 rows
+    // is measured once in `repro cost`; here we keep the bench window
+    // tractable on a 1-core box)
+    let last = exp.cfg.n_layers - 1;
+    for &rows in &[32usize, 128] {
+        let calib = exp.calibration(rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+        for pallas in [true, false] {
+            let rcfg = RomConfig {
+                schedule: ModuleSchedule { start_block: last, module_budget: 0.46 },
+                pallas_covariance: pallas,
+                ..RomConfig::default()
+            };
+            let label = format!(
+                "rom_one_module rows={rows} cov={}",
+                if pallas { "pallas" } else { "rust" }
+            );
+            let window = std::time::Duration::from_secs_f64(2.0);
+            let r = bench(&label, window, || {
+                pipeline.compress(&params, &calib, &rcfg).expect("compress")
+            });
+            // derived: seconds per "layer" (7 matrices per module)
+            println!("    -> {:.3} s/layer (paper: 13 s/layer on LLaMA-7B)", r.mean_s / 7.0);
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Runtime-layer benchmarks: PJRT compile/execute overheads and the
+//! factored-vs-dense Pallas kernels at the paper's preset budgets —
+//! evidence for the #MACs column of Table 1 translating into wall-clock.
+//!
+//! Needs artifacts (`make artifacts`); skips gracefully otherwise.
+
+use llm_rom::runtime::Runtime;
+use llm_rom::tensor::Tensor;
+use llm_rom::util::bench::{bench, default_window};
+use llm_rom::util::Rng;
+
+fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_f32(shape, (0..n).map(|_| rng.normal() as f32).collect())
+}
+
+fn main() {
+    let Ok(rt) = Runtime::new(llm_rom::DEFAULT_ARTIFACTS) else {
+        eprintln!("skipping runtime bench: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let w = default_window();
+    println!("# runtime bench (platform {})", rt.platform());
+    let mut rng = Rng::new(0);
+
+    // compile cost of a representative entry (cold cache measured once)
+    let t0 = std::time::Instant::now();
+    rt.warmup("covariance_d").unwrap();
+    println!("compile covariance_d (cold): {:.3} s", t0.elapsed().as_secs_f64());
+
+    // covariance kernel execute (hot cache)
+    let spec = rt.manifest().entry("covariance_d").unwrap().clone();
+    let y = rand_tensor(&spec.args[0].shape, &mut rng);
+    bench("exec covariance_d (pallas gram 4096x128)", w, || {
+        rt.execute("covariance_d", &[&y]).unwrap()
+    });
+    let spec_ff = rt.manifest().entry("covariance_ff").unwrap().clone();
+    let yff = rand_tensor(&spec_ff.args[0].shape, &mut rng);
+    bench("exec covariance_ff (pallas gram 4096x344)", w, || {
+        rt.execute("covariance_ff", &[&yff]).unwrap()
+    });
+
+    // factored vs dense attention-shaped linear at the three budgets
+    for key in ["b60", "b46", "b33"] {
+        let lr = format!("lowrank_attn_{key}");
+        let spec = rt.manifest().entry(&lr).unwrap().clone();
+        let x = rand_tensor(&spec.args[0].shape, &mut rng);
+        let w2 = rand_tensor(&spec.args[1].shape, &mut rng);
+        let w1 = rand_tensor(&spec.args[2].shape, &mut rng);
+        bench(&format!("exec {lr} (fused pallas)"), w, || {
+            rt.execute(&lr, &[&x, &w2, &w1]).unwrap()
+        });
+        let dn = format!("dense_attn_{key}");
+        let spec = rt.manifest().entry(&dn).unwrap().clone();
+        let xd = rand_tensor(&spec.args[0].shape, &mut rng);
+        let wd = rand_tensor(&spec.args[1].shape, &mut rng);
+        bench(&format!("exec {dn} (xla dense)"), w, || {
+            rt.execute(&dn, &[&xd, &wd]).unwrap()
+        });
+    }
+
+    // block forward: the per-module streaming cost of the ROM pass
+    let spec = rt.manifest().entry("block_fwd").unwrap().clone();
+    let args: Vec<Tensor> = spec.args.iter().map(|a| rand_tensor(&a.shape, &mut rng)).collect();
+    let refs: Vec<&Tensor> = args.iter().collect();
+    bench("exec block_fwd (32x128 batch)", w, || rt.execute("block_fwd", &refs).unwrap());
+
+    let spec = rt.manifest().entry("block_capture").unwrap().clone();
+    let args: Vec<Tensor> = spec.args.iter().map(|a| rand_tensor(&a.shape, &mut rng)).collect();
+    let refs: Vec<&Tensor> = args.iter().collect();
+    bench("exec block_capture (32x128 batch)", w, || {
+        rt.execute("block_capture", &refs).unwrap()
+    });
+}

@@ -1,0 +1,110 @@
+//! §4 cost accounting: per-layer ROM wall time, totals per budget, and the
+//! layerwise peak-memory bound.
+//!
+//! The paper's claim has three parts we reproduce at our scale: (1) ROM is
+//! CPU-only, (2) time scales with the number of compressed layers (13 s ×
+//! 224 layers ⇒ 15.8–28.9 min across budgets), (3) processing layerwise
+//! bounds peak memory by one layer's weights + calibration activations
+//! (<10 GB for LLaMA-7B), not the whole model.
+
+use crate::model::ModelConfig;
+use crate::rom::pipeline::RomModel;
+
+/// One row of the cost table.
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    pub label: String,
+    pub layers_compressed: usize,
+    pub total_seconds: f64,
+    pub mean_seconds_per_layer: f64,
+    pub peak_capture_bytes: usize,
+}
+
+/// Aggregated cost report across budgets.
+#[derive(Debug, Clone, Default)]
+pub struct CostReport {
+    pub rows: Vec<CostRow>,
+}
+
+impl CostReport {
+    pub fn push(&mut self, label: impl Into<String>, rom: &RomModel) {
+        self.rows.push(CostRow {
+            label: label.into(),
+            layers_compressed: rom.timings.len(),
+            total_seconds: rom.total_rom_seconds(),
+            mean_seconds_per_layer: rom.mean_seconds_per_layer(),
+            peak_capture_bytes: rom.peak_capture_bytes,
+        });
+    }
+
+    pub fn format(&self) -> String {
+        let mut s = String::from(
+            "\n## Computational cost (paper §4 analog)\nbudget        layers   total(s)   s/layer   peak-capture(MB)\n",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<12} {:>7} {:>10.2} {:>9.3} {:>14.1}\n",
+                r.label,
+                r.layers_compressed,
+                r.total_seconds,
+                r.mean_seconds_per_layer,
+                r.peak_capture_bytes as f64 / 1e6,
+            ));
+        }
+        s
+    }
+}
+
+/// Analytic layerwise memory bound (paper: "<10 GB for LLaMA-7B"):
+/// largest single layer's weights + one calibration batch of its
+/// activations (`calib_rows × calib_seq` samples), in bytes — what a fully
+/// streaming implementation must hold at once.
+pub fn layerwise_memory_bound(cfg: &ModelConfig, calib_rows: usize, calib_seq: usize) -> usize {
+    let largest_w = (cfg.d_model * cfg.d_ff).max(cfg.d_model * cfg.d_model);
+    let act = calib_rows * calib_seq * cfg.d_ff.max(cfg.d_model);
+    let cov = cfg.d_ff.max(cfg.d_model).pow(2);
+    4 * (largest_w + act) + 8 * cov
+}
+
+/// The same bound for LLaMA-7B at the paper's calibration size (batch 512,
+/// seq 128, §3.1) — the test asserts it lands under the paper's 10 GB.
+pub fn llama7b_memory_bound_bytes() -> usize {
+    let cfg = ModelConfig::llama7b();
+    layerwise_memory_bound(&cfg, 512, 128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_bound_under_10gb() {
+        let b = llama7b_memory_bound_bytes();
+        assert!(b < 10_000_000_000, "bound {b} bytes");
+        // but far more than one weight matrix alone — it's dominated by
+        // the calibration activations
+        assert!(b > 4 * 4096 * 11008);
+    }
+
+    #[test]
+    fn mini_bound_is_tiny() {
+        let cfg = ModelConfig::mini();
+        let b = layerwise_memory_bound(&cfg, 512, 128);
+        assert!(b < 200_000_000);
+    }
+
+    #[test]
+    fn format_includes_rows() {
+        let mut rep = CostReport::default();
+        rep.rows.push(CostRow {
+            label: "80%".into(),
+            layers_compressed: 21,
+            total_seconds: 12.5,
+            mean_seconds_per_layer: 0.59,
+            peak_capture_bytes: 30_000_000,
+        });
+        let s = rep.format();
+        assert!(s.contains("80%"));
+        assert!(s.contains("21"));
+    }
+}

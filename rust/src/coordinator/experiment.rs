@@ -1,0 +1,235 @@
+//! High-level experiment driver: the one-stop API used by the CLI, the
+//! examples, and the table harness.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::{
+    build_calibration, pack_lm_batches, render_corpus, CalibBatch, CalibSource, World,
+};
+use crate::eval::{EvalReport, Evaluator};
+use crate::model::{ModelConfig, ParamStore};
+use crate::prune::{Importance, PrunedModel, Pruner};
+use crate::rom::{paper_preset, ModuleSchedule, RomConfig, RomModel, RomPipeline};
+use crate::runtime::Runtime;
+use crate::train::{LrSchedule, Trainer};
+use crate::util::Stopwatch;
+
+/// Experiment-wide knobs (defaults reproduce the headline tables).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Characters of training corpus.
+    pub corpus_chars: usize,
+    /// Fact up-weighting in the corpus mix.
+    pub fact_repeat: usize,
+    /// Base-model training steps.
+    pub train_steps: usize,
+    pub peak_lr: f32,
+    /// Calibration rows (the paper's "batch size", Table 2's knob).
+    pub calib_rows: usize,
+    /// Calibration sequence length (Table 3's knob).
+    pub calib_seq: usize,
+    /// Calibration distribution (Table 4's knob).
+    pub calib_source: CalibSource,
+    /// Eval instances per task.
+    pub eval_per_task: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 42,
+            corpus_chars: 400_000,
+            fact_repeat: 4,
+            train_steps: 1200,
+            peak_lr: 1.5e-3,
+            calib_rows: 512,
+            calib_seq: 128,
+            calib_source: CalibSource::Combination,
+            eval_per_task: 200,
+        }
+    }
+}
+
+/// Outputs of the training stage.
+pub struct TrainedArtifacts {
+    pub params: ParamStore,
+    pub losses: Vec<f32>,
+    pub train_seconds: f64,
+}
+
+/// The orchestrator.
+pub struct Experiment<'rt> {
+    pub runtime: &'rt Runtime,
+    pub cfg: ModelConfig,
+    pub xcfg: ExperimentConfig,
+    pub world: World,
+}
+
+impl<'rt> Experiment<'rt> {
+    pub fn new(runtime: &'rt Runtime, xcfg: ExperimentConfig) -> Experiment<'rt> {
+        let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
+        let world = World::default_world(xcfg.seed);
+        Experiment { runtime, cfg, xcfg, world }
+    }
+
+    /// Training corpus for the current world.
+    pub fn corpus(&self) -> String {
+        render_corpus(&self.world, self.xcfg.seed, self.xcfg.corpus_chars, self.xcfg.fact_repeat)
+    }
+
+    /// Held-out text for perplexity (disjoint render seed).
+    pub fn ppl_text(&self) -> String {
+        render_corpus(&self.world, self.xcfg.seed ^ 0x9999, 40_000, 1)
+    }
+
+    /// Train the base model from `init` (or fresh artifacts init).
+    pub fn train(
+        &self,
+        init: ParamStore,
+        mut log: impl FnMut(usize, f32, f32),
+    ) -> Result<TrainedArtifacts> {
+        let mut sw = Stopwatch::new();
+        let corpus = self.corpus();
+        let batches = pack_lm_batches(
+            &corpus,
+            self.cfg.train_batch,
+            self.cfg.train_seq,
+            self.xcfg.train_steps,
+            self.xcfg.seed,
+        );
+        let sched = LrSchedule {
+            peak: self.xcfg.peak_lr,
+            warmup_steps: (self.xcfg.train_steps / 20).max(5),
+            total_steps: self.xcfg.train_steps,
+            min_lr: self.xcfg.peak_lr / 20.0,
+        };
+        let mut trainer = Trainer::new(self.runtime, init);
+        trainer.run(&batches, &sched, 10, &mut log)?;
+        Ok(TrainedArtifacts {
+            params: trainer.params.clone(),
+            losses: trainer.losses.clone(),
+            train_seconds: sw.lap("train"),
+        })
+    }
+
+    /// Build calibration batches per the experiment config (overridable for
+    /// the ablation tables).
+    pub fn calibration(
+        &self,
+        rows: usize,
+        seq_used: usize,
+        source: CalibSource,
+    ) -> Vec<CalibBatch> {
+        build_calibration(
+            &self.world,
+            source,
+            rows,
+            self.cfg.eval_batch,
+            self.cfg.eval_seq,
+            seq_used,
+            self.xcfg.seed ^ 0xCAFE,
+        )
+    }
+
+    /// ROM-compress at a global budget using the paper's preset schedule.
+    pub fn compress_at(&self, params: &ParamStore, global_budget: f64) -> Result<RomModel> {
+        let schedule = paper_preset(&self.cfg, global_budget);
+        self.compress_with(params, schedule, None)
+    }
+
+    /// ROM-compress with an explicit schedule (and optional calibration
+    /// override for Tables 2-4).
+    pub fn compress_with(
+        &self,
+        params: &ParamStore,
+        schedule: ModuleSchedule,
+        calib_override: Option<&[CalibBatch]>,
+    ) -> Result<RomModel> {
+        let calib_own;
+        let calib = match calib_override {
+            Some(c) => c,
+            None => {
+                calib_own = self.calibration(
+                    self.xcfg.calib_rows,
+                    self.xcfg.calib_seq,
+                    self.xcfg.calib_source,
+                );
+                &calib_own
+            }
+        };
+        let pipeline = RomPipeline::new(self.runtime);
+        let rcfg = RomConfig { schedule, ..RomConfig::default() };
+        pipeline.compress(params, calib, &rcfg)
+    }
+
+    /// Structured-pruning baseline at a global budget (same schedule family
+    /// as ROM so Table 1 compares like for like).
+    pub fn prune_at(
+        &self,
+        params: &ParamStore,
+        global_budget: f64,
+        importance: Importance,
+    ) -> Result<PrunedModel> {
+        let schedule = paper_preset(&self.cfg, global_budget);
+        let calib = self.calibration(
+            self.xcfg.calib_rows.min(128),
+            self.xcfg.calib_seq,
+            self.xcfg.calib_source,
+        );
+        Pruner::new(self.runtime).prune(params, &calib, schedule, importance)
+    }
+
+    /// Recovery fine-tune for a pruned model (LLM-Pruner's ✓ rows).
+    pub fn finetune_pruned(
+        &self,
+        pruned: &PrunedModel,
+        steps: usize,
+        mut log: impl FnMut(usize, f32, f32),
+    ) -> Result<ParamStore> {
+        let corpus = self.corpus();
+        let batches = pack_lm_batches(
+            &corpus,
+            self.cfg.train_batch,
+            self.cfg.train_seq,
+            steps,
+            self.xcfg.seed ^ 0xF17E,
+        );
+        let sched = LrSchedule {
+            peak: self.xcfg.peak_lr / 3.0,
+            warmup_steps: (steps / 10).max(2),
+            total_steps: steps,
+            min_lr: self.xcfg.peak_lr / 60.0,
+        };
+        let mut trainer =
+            Trainer::new(self.runtime, pruned.params.clone()).with_masks(pruned.masks.clone())?;
+        trainer.run(&batches, &sched, 10, &mut log)?;
+        Ok(trainer.params.clone())
+    }
+
+    /// Full six-task evaluation (+ perplexity).
+    pub fn evaluate(&self, params: &ParamStore, with_ppl: bool) -> Result<EvalReport> {
+        let evaluator = Evaluator::new(self.runtime);
+        let ppl_text = if with_ppl { Some(self.ppl_text()) } else { None };
+        evaluator.eval_suite(
+            params,
+            &self.world,
+            self.xcfg.eval_per_task,
+            self.xcfg.seed ^ 0xE7A1,
+            ppl_text.as_deref(),
+        )
+    }
+
+    /// Load the init checkpoint exported by `make artifacts`.
+    pub fn init_params(&self, artifacts_dir: impl AsRef<Path>) -> Result<ParamStore> {
+        ParamStore::load(&self.cfg, artifacts_dir.as_ref().join("init.rtz"))
+            .context("load init.rtz")
+    }
+
+    /// Canonical checkpoint path inside a run directory.
+    pub fn ckpt_path(run_dir: impl AsRef<Path>, tag: &str) -> PathBuf {
+        run_dir.as_ref().join(format!("{tag}.rtz"))
+    }
+}

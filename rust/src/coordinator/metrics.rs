@@ -1,0 +1,98 @@
+//! Process-level metrics: peak RSS and stage accounting — the measured
+//! side of the paper's §4 memory claim (the analytic bound lives in
+//! [`super::cost`]).
+
+use std::fs;
+
+/// Current resident set size in bytes (Linux `/proc/self/status`).
+pub fn current_rss_bytes() -> Option<usize> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    parse_status_kb(&status, "VmRSS:").map(|kb| kb * 1024)
+}
+
+/// Peak resident set size in bytes since process start.
+pub fn peak_rss_bytes() -> Option<usize> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    parse_status_kb(&status, "VmHWM:").map(|kb| kb * 1024)
+}
+
+fn parse_status_kb(status: &str, key: &str) -> Option<usize> {
+    status
+        .lines()
+        .find(|l| l.starts_with(key))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Stage-scoped metric snapshot (RSS before/after + wall time).
+#[derive(Debug, Clone)]
+pub struct StageMetrics {
+    pub name: String,
+    pub wall_s: f64,
+    pub rss_before: Option<usize>,
+    pub rss_after: Option<usize>,
+    pub peak_rss: Option<usize>,
+}
+
+impl StageMetrics {
+    pub fn format(&self) -> String {
+        let mb = |x: Option<usize>| {
+            x.map(|b| format!("{:.0} MB", b as f64 / 1e6)).unwrap_or_else(|| "n/a".into())
+        };
+        format!(
+            "{:<18} {:>8.2}s  rss {} -> {} (peak {})",
+            self.name,
+            self.wall_s,
+            mb(self.rss_before),
+            mb(self.rss_after),
+            mb(self.peak_rss),
+        )
+    }
+}
+
+/// Run a closure as a named stage, capturing wall time and RSS.
+pub fn stage<T>(name: &str, f: impl FnOnce() -> T) -> (T, StageMetrics) {
+    let rss_before = current_rss_bytes();
+    let t0 = std::time::Instant::now();
+    let out = f();
+    let m = StageMetrics {
+        name: name.to_string(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        rss_before,
+        rss_after: current_rss_bytes(),
+        peak_rss: peak_rss_bytes(),
+    };
+    (out, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_readable_on_linux() {
+        // this box is linux; both counters must parse
+        let rss = current_rss_bytes().expect("VmRSS");
+        let peak = peak_rss_bytes().expect("VmHWM");
+        assert!(rss > 1_000_000, "rss {rss}");
+        assert!(peak >= rss || peak > 1_000_000);
+    }
+
+    #[test]
+    fn parse_status_kb_extracts_value() {
+        let fake = "Name:\tx\nVmRSS:\t  12345 kB\nVmHWM:\t 99999 kB\n";
+        assert_eq!(parse_status_kb(fake, "VmRSS:"), Some(12345));
+        assert_eq!(parse_status_kb(fake, "VmHWM:"), Some(99999));
+        assert_eq!(parse_status_kb(fake, "Nope:"), None);
+    }
+
+    #[test]
+    fn stage_measures_allocation() {
+        let (v, m) = stage("alloc", || vec![0u8; 32 << 20]);
+        assert_eq!(v.len(), 32 << 20);
+        assert!(m.wall_s >= 0.0);
+        assert!(m.format().contains("alloc"));
+    }
+}

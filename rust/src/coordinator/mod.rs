@@ -1,0 +1,17 @@
+//! L3 coordinator: end-to-end experiment orchestration.
+//!
+//! Owns the process lifecycle the paper implies but never spells out:
+//! generate world + corpus → train the base model → build calibration sets
+//! → ROM-compress / prune → evaluate → account cost. Everything below here
+//! is pure Rust over the PJRT runtime; per-stage wall-clock and memory
+//! metrics feed the §4 cost table.
+
+pub mod cost;
+pub mod metrics;
+pub mod spectrum;
+pub mod experiment;
+pub mod tables;
+
+pub use cost::{CostReport, CostRow};
+pub use experiment::{Experiment, ExperimentConfig, TrainedArtifacts};
+pub use tables::{run_tables, table1, table2, table3, table4};

@@ -1,0 +1,131 @@
+//! Table harness: regenerate every table of the paper's evaluation section
+//! on the MiniLLaMA reproduction (see DESIGN.md §4 for the mapping).
+//!
+//! - **Table 1** — dense vs ROM vs structured pruning (± fine-tune) at 80%
+//!   and 50% global budgets, with #Params/#MACs columns.
+//! - **Table 2** — calibration batch-size sweep (512/128/32 rows).
+//! - **Table 3** — calibration sequence-length sweep (128/64/32).
+//! - **Table 4** — calibration distribution (combination / single-task /
+//!   generic corpus).
+
+use anyhow::Result;
+
+use crate::data::{CalibSource, TaskKind};
+use crate::eval::{format_table, EvalReport};
+use crate::model::macs::{self, CompressionAccounting};
+use crate::model::ParamStore;
+use crate::prune::Importance;
+
+use super::experiment::Experiment;
+
+/// MAC horizon used for the cost columns (paper ≈ 64-token forward).
+const MACS_TOKENS: usize = 64;
+
+fn cost_label(exp: &Experiment, acc: &CompressionAccounting) -> String {
+    let rep = macs::report(&exp.cfg, acc, MACS_TOKENS);
+    format!("{:.2}M/{:.2}G", rep.n_params as f64 / 1e6, rep.macs_giga())
+}
+
+/// Table 1: the headline comparison.
+pub fn table1(exp: &Experiment, base: &ParamStore, ft_steps: usize) -> Result<String> {
+    let mut rows: Vec<(String, EvalReport)> = Vec::new();
+
+    let dense_acc = CompressionAccounting::dense();
+    let dense_rep = exp.evaluate(base, true)?;
+    rows.push((format!("dense ({})", cost_label(exp, &dense_acc)), dense_rep));
+
+    for budget in [0.8, 0.5] {
+        let pct = (budget * 100.0) as u32;
+
+        let pruned = exp.prune_at(base, budget, Importance::ActivationAware)?;
+        let acc = pruned.accounting(&exp.cfg);
+        let rep = exp.evaluate(&pruned.params, true)?;
+        rows.push((format!("prune@{pct}% ({})", cost_label(exp, &acc)), rep));
+
+        if ft_steps > 0 {
+            let ft = exp.finetune_pruned(&pruned, ft_steps, |_, _, _| {})?;
+            let rep = exp.evaluate(&ft, true)?;
+            rows.push((format!("prune+ft@{pct}% ({})", cost_label(exp, &acc)), rep));
+        }
+
+        let rom = exp.compress_at(base, budget)?;
+        let acc = rom.accounting();
+        let rep = exp.evaluate(&rom.params, true)?;
+        rows.push((format!("LLM-ROM@{pct}% ({})", cost_label(exp, &acc)), rep));
+    }
+    Ok(format_table("Table 1 — ROM vs structured pruning", &rows))
+}
+
+/// Table 2: calibration batch-size (row-count) sweep at fixed seq len.
+/// The paper sweeps 512/128/32 (a 16:4:1 ratio); we sweep the same ratio
+/// anchored at the configured `calib_rows` so wall-clock stays bounded.
+pub fn table2(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String> {
+    let mut rows = Vec::new();
+    let top = exp.xcfg.calib_rows.max(64);
+    for rows_n in [top, top / 4, top / 16] {
+        let calib = exp.calibration(rows_n, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+        let sched = crate::rom::paper_preset(&exp.cfg, budget);
+        let rom = exp.compress_with(base, sched, Some(&calib))?;
+        let rep = exp.evaluate(&rom.params, false)?;
+        rows.push((format!("batch {rows_n}"), rep));
+    }
+    Ok(format_table("Table 2 — effect of calibration batch size", &rows))
+}
+
+/// Table 3: calibration sequence-length sweep at fixed batch size.
+pub fn table3(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String> {
+    let mut rows = Vec::new();
+    for seq in [128usize, 64, 32] {
+        let calib = exp.calibration(exp.xcfg.calib_rows, seq, exp.xcfg.calib_source);
+        let sched = crate::rom::paper_preset(&exp.cfg, budget);
+        let rom = exp.compress_with(base, sched, Some(&calib))?;
+        let rep = exp.evaluate(&rom.params, false)?;
+        rows.push((format!("seq {seq}"), rep));
+    }
+    Ok(format_table("Table 3 — effect of calibration sequence length", &rows))
+}
+
+/// Table 4: calibration distribution sweep.
+pub fn table4(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String> {
+    let mut rows = Vec::new();
+    for (label, source) in [
+        ("combination", CalibSource::Combination),
+        ("arc-c only", CalibSource::SingleTask(TaskKind::QaHard)),
+        ("corpus", CalibSource::Corpus),
+    ] {
+        let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, source);
+        let sched = crate::rom::paper_preset(&exp.cfg, budget);
+        let rom = exp.compress_with(base, sched, Some(&calib))?;
+        let rep = exp.evaluate(&rom.params, false)?;
+        rows.push((label.to_string(), rep));
+    }
+    Ok(format_table("Table 4 — choice of calibration dataset", &rows))
+}
+
+/// CLI entry: run the requested table(s) and print.
+///
+/// `budget` applies to the ablation tables 2-4 (the paper runs them at its
+/// 80% operating point; at budgets where ROM is near-lossless on a given
+/// substrate, the calibration knobs only bind at tighter budgets).
+pub fn run_tables(
+    exp: &Experiment,
+    base: &ParamStore,
+    which: &str,
+    ft_steps: usize,
+    budget: f64,
+) -> Result<()> {
+    match which {
+        "1" => println!("{}", table1(exp, base, ft_steps)?),
+        "2" => println!("{}", table2(exp, base, budget)?),
+        "3" => println!("{}", table3(exp, base, budget)?),
+        "4" => println!("{}", table4(exp, base, budget)?),
+        "all" => {
+            println!("{}", table1(exp, base, ft_steps)?);
+            println!("{}", table2(exp, base, budget)?);
+            println!("{}", table3(exp, base, budget)?);
+            println!("{}", table4(exp, base, budget)?);
+        }
+        other => anyhow::bail!("unknown table `{other}` (1|2|3|4|all)"),
+    }
+    Ok(())
+}

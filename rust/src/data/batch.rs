@@ -1,0 +1,332 @@
+//! Batch packing: corpus -> LM training batches, task instances ->
+//! multiple-choice scoring batches, calibration-set builders (the knobs of
+//! the paper's Tables 2-4).
+//!
+//! HLO graphs are static-shape, so everything packs to the canonical
+//! `(eval_batch, eval_seq)` / `(train_batch, train_seq)` shapes from the
+//! manifest and pads with PAD; per-row valid lengths ride along so the ROM
+//! pass can drop padded rows before covariance accumulation.
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+use super::tasks::{McInstance, Split, Task, TaskKind, ALL_TASKS};
+use super::tokenizer::{Tokenizer, PAD};
+use super::world::World;
+
+/// One LM training batch (flattened row-major `(batch, seq)`).
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Pack text into `(batch, seq)` next-token batches.
+///
+/// Windows are sampled at random offsets (seeded), giving shuffled epochs
+/// over the corpus. `tokens[t]` predicts `targets[t]`.
+pub fn pack_lm_batches(
+    text: &str,
+    batch: usize,
+    seq: usize,
+    n_batches: usize,
+    seed: u64,
+) -> Vec<LmBatch> {
+    let tk = Tokenizer::new();
+    let ids = tk.encode(text);
+    assert!(ids.len() > seq + 1, "corpus shorter than one window");
+    let mut rng = Rng::new(seed ^ 0xBA7C4);
+    (0..n_batches)
+        .map(|_| {
+            let mut tokens = Vec::with_capacity(batch * seq);
+            let mut targets = Vec::with_capacity(batch * seq);
+            for _ in 0..batch {
+                let start = rng.below(ids.len() - seq - 1);
+                tokens.extend_from_slice(&ids[start..start + seq]);
+                targets.extend_from_slice(&ids[start + 1..start + seq + 1]);
+            }
+            LmBatch { tokens, targets, batch, seq }
+        })
+        .collect()
+}
+
+/// Row metadata in a scoring batch: which instance/choice it encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct McRow {
+    pub instance: usize,
+    pub choice: usize,
+}
+
+/// One multiple-choice scoring batch at canonical `(batch, seq)`.
+///
+/// `mask[t] = 1` exactly on the positions whose *target* byte belongs to
+/// the choice span, implementing LLaMA's completion scoring. Rows beyond
+/// the real instances are PAD rows with zero mask (their scores are
+/// ignored via `rows`).
+#[derive(Debug, Clone)]
+pub struct McBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub rows: Vec<McRow>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Encode `(instance, choice)` pairs into fixed-shape scoring batches.
+pub fn encode_mc_batches(
+    instances: &[McInstance],
+    batch: usize,
+    seq: usize,
+) -> Result<Vec<McBatch>> {
+    let tk = Tokenizer::new();
+    let mut rows: Vec<(McRow, Vec<i32>, Vec<i32>, Vec<f32>)> = Vec::new();
+    for (ii, inst) in instances.iter().enumerate() {
+        for ci in 0..inst.choices.len() {
+            let full = inst.full_text(ci);
+            let bytes = tk.encode(&full);
+            if bytes.len() + 1 > seq {
+                bail!(
+                    "instance {ii} choice {ci} needs {} tokens > seq {seq}: `{full}`",
+                    bytes.len() + 1
+                );
+            }
+            // tokens = BOS ++ bytes, padded; targets[t] = bytes[t]
+            let tokens = tk.encode_fixed(&full, seq);
+            let mut targets = vec![PAD; seq];
+            let mut mask = vec![0.0f32; seq];
+            let choice_start = inst.prompt.len() + 1; // skip the separating space
+            for (t, &b) in bytes.iter().enumerate() {
+                targets[t] = b;
+                if t >= choice_start {
+                    mask[t] = 1.0;
+                }
+            }
+            rows.push((McRow { instance: ii, choice: ci }, tokens, targets, mask));
+        }
+    }
+
+    let mut out = Vec::new();
+    for chunk in rows.chunks(batch) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        let mut mask = Vec::with_capacity(batch * seq);
+        let mut meta = Vec::with_capacity(chunk.len());
+        for (row, tk_row, tg_row, m_row) in chunk {
+            meta.push(*row);
+            tokens.extend_from_slice(tk_row);
+            targets.extend_from_slice(tg_row);
+            mask.extend_from_slice(m_row);
+        }
+        // pad to full batch with PAD rows (mask 0 -> ignored)
+        for _ in chunk.len()..batch {
+            tokens.extend(std::iter::repeat(PAD).take(seq));
+            targets.extend(std::iter::repeat(PAD).take(seq));
+            mask.extend(std::iter::repeat(0.0f32).take(seq));
+        }
+        out.push(McBatch { tokens, targets, mask, rows: meta, batch, seq });
+    }
+    Ok(out)
+}
+
+/// Which distribution calibration activations come from (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CalibSource {
+    /// Equal mix of all six task distributions (paper's "Combination").
+    Combination,
+    /// A single task's prompts (paper's "ARC-c" row).
+    SingleTask(TaskKind),
+    /// Generic narrative text (paper's "BookCorpus" row).
+    Corpus,
+}
+
+impl CalibSource {
+    pub fn name(&self) -> String {
+        match self {
+            CalibSource::Combination => "combination".into(),
+            CalibSource::SingleTask(k) => k.name().to_string(),
+            CalibSource::Corpus => "corpus".into(),
+        }
+    }
+}
+
+/// Calibration batch: `(batch, seq)` tokens + per-row valid lengths.
+///
+/// `seq_used ≤ seq` implements the paper's sequence-length ablation
+/// (Table 3): rows carry at most `seq_used` real tokens, the remainder is
+/// PAD, and `valid[row]` tells the ROM pass how many leading positions of
+/// that row are real activations.
+#[derive(Debug, Clone)]
+pub struct CalibBatch {
+    pub tokens: Vec<i32>,
+    pub valid: Vec<usize>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Build a calibration set of `total_rows` rows at canonical shape
+/// `(batch, seq)`, with real content limited to `seq_used` tokens per row
+/// (batch-size and seq-length are the Table 2/3 knobs).
+pub fn build_calibration(
+    world: &World,
+    source: CalibSource,
+    total_rows: usize,
+    batch: usize,
+    seq: usize,
+    seq_used: usize,
+    seed: u64,
+) -> Vec<CalibBatch> {
+    assert!(seq_used >= 8 && seq_used <= seq, "seq_used {seq_used} out of range");
+    let tk = Tokenizer::new();
+    let mut texts: Vec<String> = Vec::with_capacity(total_rows);
+    match source {
+        CalibSource::Combination => {
+            // equal share per task, calib split (paper §3.3)
+            let per = total_rows.div_ceil(ALL_TASKS.len());
+            for kind in ALL_TASKS {
+                let task = Task::new(world, kind);
+                for inst in task.generate(Split::Calib, per, seed) {
+                    texts.push(inst.full_text(inst.gold));
+                }
+            }
+            let mut rng = Rng::new(seed ^ 0xCA11B);
+            rng.shuffle(&mut texts[..]);
+            texts.truncate(total_rows);
+        }
+        CalibSource::SingleTask(kind) => {
+            let task = Task::new(world, kind);
+            for inst in task.generate(Split::Calib, total_rows, seed) {
+                texts.push(inst.full_text(inst.gold));
+            }
+        }
+        CalibSource::Corpus => {
+            // generic narrative windows
+            let text = super::corpus::render_corpus(world, seed ^ 0xB00C, total_rows * seq_used * 2 + 4096, 1);
+            let mut rng = Rng::new(seed ^ 0xB00C2);
+            for _ in 0..total_rows {
+                let start = rng.below(text.len() - seq_used - 1);
+                // cut at char boundary (ascii corpus, safe) and pack
+                texts.push(text[start..start + seq_used - 1].to_string());
+            }
+        }
+    }
+
+    let mut batches = Vec::new();
+    for chunk in texts.chunks(batch) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut valid = Vec::with_capacity(batch);
+        for t in chunk {
+            let mut row = tk.encode_fixed(t, seq);
+            // enforce the seq_used budget: blank everything beyond it
+            for x in row.iter_mut().skip(seq_used) {
+                *x = PAD;
+            }
+            let vlen = row.iter().take_while(|&&x| x != PAD).count().min(seq_used);
+            tokens.extend_from_slice(&row);
+            valid.push(vlen);
+        }
+        for _ in chunk.len()..batch {
+            tokens.extend(std::iter::repeat(PAD).take(seq));
+            valid.push(0);
+        }
+        batches.push(CalibBatch { tokens, valid, batch, seq });
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::default_world(42)
+    }
+
+    #[test]
+    fn lm_batches_shift_by_one() {
+        let w = world();
+        let text = super::super::corpus::render_corpus(&w, 0, 20_000, 1);
+        let bs = pack_lm_batches(&text, 4, 32, 3, 0);
+        assert_eq!(bs.len(), 3);
+        for b in &bs {
+            assert_eq!(b.tokens.len(), 4 * 32);
+            for row in 0..4 {
+                for t in 0..31 {
+                    assert_eq!(b.tokens[row * 32 + t + 1], b.targets[row * 32 + t]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mc_mask_covers_choice_only() {
+        let w = world();
+        let task = Task::new(&w, TaskKind::BoolLike);
+        let insts = task.generate(Split::Eval, 3, 0);
+        let batches = encode_mc_batches(&insts, 8, 128).unwrap();
+        let b = &batches[0];
+        let tk = Tokenizer::new();
+        for (r, row) in b.rows.iter().enumerate() {
+            let inst = &insts[row.instance];
+            let masked: Vec<i32> = (0..128)
+                .filter(|&t| b.mask[r * 128 + t] > 0.0)
+                .map(|t| b.targets[r * 128 + t])
+                .collect();
+            let text = tk.decode(&masked);
+            assert_eq!(text, inst.choices[row.choice], "row {r}");
+        }
+    }
+
+    #[test]
+    fn mc_batches_pad_to_full() {
+        let w = world();
+        let task = Task::new(&w, TaskKind::QaEasy); // 4 choices
+        let insts = task.generate(Split::Eval, 3, 0); // 12 rows
+        let batches = encode_mc_batches(&insts, 8, 128).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].rows.len(), 8);
+        assert_eq!(batches[1].rows.len(), 4);
+        assert_eq!(batches[1].tokens.len(), 8 * 128); // padded
+    }
+
+    #[test]
+    fn calibration_sources_build() {
+        let w = world();
+        for source in [
+            CalibSource::Combination,
+            CalibSource::SingleTask(TaskKind::QaHard),
+            CalibSource::Corpus,
+        ] {
+            let bs = build_calibration(&w, source, 20, 8, 128, 128, 1);
+            assert_eq!(bs.len(), 3, "{source:?}");
+            let rows: usize = bs.iter().map(|b| b.valid.iter().filter(|&&v| v > 0).count()).sum();
+            assert_eq!(rows, 20, "{source:?}");
+        }
+    }
+
+    #[test]
+    fn seq_used_limits_valid_lengths() {
+        let w = world();
+        let bs = build_calibration(&w, CalibSource::Combination, 16, 8, 128, 32, 2);
+        for b in &bs {
+            for (row, &v) in b.valid.iter().enumerate() {
+                assert!(v <= 32);
+                // tokens beyond seq_used are PAD
+                for t in 32..128 {
+                    assert_eq!(b.tokens[row * 128 + t], PAD);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_is_deterministic() {
+        let w = world();
+        let a = build_calibration(&w, CalibSource::Combination, 16, 8, 128, 64, 5);
+        let b = build_calibration(&w, CalibSource::Combination, 16, 8, 128, 64, 5);
+        assert_eq!(a[0].tokens, b[0].tokens);
+    }
+}

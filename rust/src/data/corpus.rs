@@ -1,0 +1,174 @@
+//! Narrative corpus renderer: world facts -> training text.
+//!
+//! Each fact is rendered through several paraphrase templates and shuffled;
+//! the model must memorize the world to predict the corpus, which is what
+//! makes zero-shot task evaluation meaningful. Also provides the
+//! "BookCorpus" analog: generic narrative text that mentions entities but
+//! not in task format (Table 4's generic calibration set).
+
+use crate::util::Rng;
+
+use super::world::{GiveEvent, World, COLORS, MATERIALS, SIZES, USES};
+
+/// Render all fact sentences (each fact in every paraphrase).
+pub fn fact_sentences(world: &World) -> Vec<String> {
+    let mut out = Vec::new();
+    for (p, name) in world.people.iter().enumerate() {
+        let loc = &world.locations[world.person_loc[p]];
+        let obj = &world.objects[world.person_likes[p]].name;
+        let friend = &world.people[world.person_friend[p]];
+        out.push(format!("{name} is in the {loc} ."));
+        out.push(format!("you can find {name} in the {loc} ."));
+        out.push(format!("{name} likes the {obj} ."));
+        out.push(format!("the favorite thing of {name} is the {obj} ."));
+        out.push(format!("{name} is friends with {friend} ."));
+    }
+    for o in &world.objects {
+        let (name, mat, col, use_, size) = (
+            &o.name,
+            MATERIALS[o.material],
+            COLORS[o.color],
+            USES[o.use_],
+            SIZES[o.size],
+        );
+        out.push(format!("the {name} is made of {mat} ."));
+        out.push(format!("{mat} is what the {name} is made of ."));
+        out.push(format!("the {name} is {col} ."));
+        out.push(format!("the {name} is used to {use_} ."));
+        out.push(format!("to {use_} people use the {name} ."));
+        out.push(format!("the {name} is {size} ."));
+    }
+    for &GiveEvent { giver, object, receiver } in &world.events {
+        let g = &world.people[giver];
+        let o = &world.objects[object].name;
+        let r = &world.people[receiver];
+        out.push(format!("{g} gave the {o} to {r} ."));
+        out.push(format!("now {r} has the {o} ."));
+        out.push(format!("{r} got the {o} from {g} ."));
+    }
+    out
+}
+
+/// Filler narrative (the BookCorpus analog): grammatical, on-vocabulary,
+/// but carrying no task-critical facts.
+pub fn filler_sentences(world: &World, rng: &mut Rng, count: usize) -> Vec<String> {
+    let verbs = ["walked to", "looked at", "talked about", "sat near", "thought about"];
+    let days = ["one day", "later", "in the morning", "after that", "at night"];
+    (0..count)
+        .map(|_| {
+            let p = rng.choose(&world.people);
+            let d = rng.choose(&days);
+            match rng.below(3) {
+                0 => {
+                    let l = rng.choose(&world.locations);
+                    format!("{d} {p} {} the {l} .", rng.choose(&verbs))
+                }
+                1 => {
+                    let o = &rng.choose(&world.objects).name;
+                    format!("{d} {p} {} the {o} .", rng.choose(&verbs))
+                }
+                _ => {
+                    let q = rng.choose(&world.people);
+                    format!("{d} {p} {} {q} .", rng.choose(&verbs))
+                }
+            }
+        })
+        .collect()
+}
+
+/// Task-format demonstrations from the **train split** of every task —
+/// the analog of QA text in web pretraining corpora (and of benchmark
+/// train splits). Without these a 1.6M-param byte LM cannot zero-shot
+/// transfer to the "question : … answer :" format at all; with them the
+/// knowledge still has to come from the narrative facts. The train
+/// instance stream is disjoint from calib/eval (see `tasks::Split`).
+pub fn qa_sentences(world: &World, seed: u64, per_task: usize) -> Vec<String> {
+    use super::tasks::{Split, Task, ALL_TASKS};
+    let mut out = Vec::with_capacity(per_task * ALL_TASKS.len());
+    for kind in ALL_TASKS {
+        let task = Task::new(world, kind);
+        for inst in task.generate(Split::Train, per_task, seed) {
+            out.push(inst.full_text(inst.gold));
+        }
+    }
+    out
+}
+
+/// Full training corpus: facts repeated + QA demonstrations + filler,
+/// shuffled, concatenated. `target_chars` bounds the size; facts are
+/// up-weighted (repeated `fact_repeat`×) relative to filler so attributes
+/// are learned firmly.
+pub fn render_corpus(world: &World, seed: u64, target_chars: usize, fact_repeat: usize) -> String {
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let facts = fact_sentences(world);
+    let qa = qa_sentences(world, seed ^ 0x9A, facts.len() / 4);
+    let mut sentences: Vec<String> = Vec::new();
+    while sentences.iter().map(|s| s.len() + 1).sum::<usize>() < target_chars {
+        for _ in 0..fact_repeat {
+            sentences.extend(facts.iter().cloned());
+            sentences.extend(qa.iter().cloned());
+        }
+        sentences.extend(filler_sentences(world, &mut rng, facts.len()));
+    }
+    rng.shuffle(&mut sentences);
+    let mut text = String::with_capacity(target_chars + 128);
+    for s in sentences {
+        text.push_str(&s);
+        text.push(' ');
+        if text.len() >= target_chars {
+            break;
+        }
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facts_cover_all_entities() {
+        let w = World::default_world(1);
+        let text = fact_sentences(&w).join(" ");
+        for p in &w.people {
+            assert!(text.contains(p.as_str()), "person {p}");
+        }
+        for o in &w.objects {
+            assert!(text.contains(&o.name), "object {}", o.name);
+        }
+    }
+
+    #[test]
+    fn corpus_reaches_target_size() {
+        let w = World::default_world(2);
+        let text = render_corpus(&w, 0, 50_000, 2);
+        assert!(text.len() >= 50_000);
+        assert!(text.len() < 60_000);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let w = World::default_world(3);
+        assert_eq!(render_corpus(&w, 5, 10_000, 1), render_corpus(&w, 5, 10_000, 1));
+        assert_ne!(render_corpus(&w, 5, 10_000, 1), render_corpus(&w, 6, 10_000, 1));
+    }
+
+    #[test]
+    fn corpus_is_ascii_lowercase() {
+        let w = World::default_world(4);
+        let text = render_corpus(&w, 0, 5_000, 1);
+        assert!(text.is_ascii());
+        assert!(!text.chars().any(|c| c.is_ascii_uppercase()));
+    }
+
+    #[test]
+    fn filler_mentions_no_attribute_facts() {
+        let w = World::default_world(5);
+        let mut rng = Rng::new(0);
+        let fillers = filler_sentences(&w, &mut rng, 200);
+        for f in &fillers {
+            assert!(!f.contains("made of"), "{f}");
+            assert!(!f.contains("is used to"), "{f}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Data substrate: the synthetic world, its narrative corpus, the six
+//! SynthSense zero-shot tasks, the byte-level tokenizer, and batch packing.
+//!
+//! Why synthetic (DESIGN.md §2): the paper evaluates LLaMA-7B on six
+//! commonsense benchmarks we cannot ship. The substitution preserves the
+//! *protocol* — a decoder LM trained on a corpus of facts, evaluated
+//! zero-shot by length-normalized multiple-choice scoring on task
+//! distributions that mirror the papers' difficulty spread, with disjoint
+//! calibration/eval splits.
+
+pub mod batch;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+pub mod world;
+
+pub use batch::{
+    build_calibration, encode_mc_batches, pack_lm_batches, CalibBatch, CalibSource, LmBatch,
+    McBatch, McRow,
+};
+pub use corpus::render_corpus;
+pub use tasks::{McInstance, Split, Task, TaskKind, ALL_TASKS};
+pub use tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+pub use world::World;

@@ -1,0 +1,400 @@
+//! The six SynthSense zero-shot tasks — analogs of the paper's benchmark
+//! suite (BoolQ, PIQA, HellaSwag, WinoGrande, ARC-e, ARC-c).
+//!
+//! Every task emits [`McInstance`]s: a prompt, N choices, one gold index.
+//! Scoring follows LLaMA's protocol (length-normalized sequence
+//! log-likelihood over the choice span, implemented in `crate::eval`).
+//! Instances are drawn from split-disjoint streams: `Split::Calib` and
+//! `Split::Eval` use different RNG streams and (where applicable) different
+//! entity subsets, mirroring the paper's "no data leakage" constraint.
+
+use crate::util::Rng;
+
+use super::world::{World, COLORS, MATERIALS, USES};
+
+/// Task identifiers, ordered as in the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// yes/no fact verification (BoolQ analog)
+    BoolLike,
+    /// physical affordance, 2 choices (PIQA analog)
+    PhysLike,
+    /// contextual continuation, 4 choices (HellaSwag analog)
+    ContLike,
+    /// give-event coreference, 2 choices (WinoGrande analog)
+    CorefLike,
+    /// single-hop attribute QA, 4 choices (ARC-easy analog)
+    QaEasy,
+    /// two-hop attribute QA, 4 choices (ARC-challenge analog)
+    QaHard,
+}
+
+pub const ALL_TASKS: [TaskKind; 6] = [
+    TaskKind::BoolLike,
+    TaskKind::PhysLike,
+    TaskKind::ContLike,
+    TaskKind::CorefLike,
+    TaskKind::QaEasy,
+    TaskKind::QaHard,
+];
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::BoolLike => "synth-boolq",
+            TaskKind::PhysLike => "synth-piqa",
+            TaskKind::ContLike => "synth-hellaswag",
+            TaskKind::CorefLike => "synth-winogrande",
+            TaskKind::QaEasy => "synth-arc-e",
+            TaskKind::QaHard => "synth-arc-c",
+        }
+    }
+
+    /// Paper column this task stands in for.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            TaskKind::BoolLike => "BoolQ",
+            TaskKind::PhysLike => "PIQA",
+            TaskKind::ContLike => "HellaSwag",
+            TaskKind::CorefLike => "WinoGrande",
+            TaskKind::QaEasy => "ARC-e",
+            TaskKind::QaHard => "ARC-c",
+        }
+    }
+
+    pub fn n_choices(self) -> usize {
+        match self {
+            TaskKind::BoolLike | TaskKind::PhysLike | TaskKind::CorefLike => 2,
+            TaskKind::ContLike | TaskKind::QaEasy | TaskKind::QaHard => 4,
+        }
+    }
+}
+
+/// Instance stream. All three are pairwise-disjoint RNG streams:
+/// `Train` instances are rendered into the LM pretraining corpus (the
+/// analog of benchmark train splits / QA text in web pretraining data),
+/// `Calib` feeds the ROM covariance pass, `Eval` is never seen before
+/// evaluation. In a small synthetic world some prompt-level collisions
+/// across streams are unavoidable (the instance space is finite); the
+/// streams are disjoint by construction, which is the property the
+/// paper's "no data leakage" setup needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Calib,
+    Eval,
+}
+
+/// One multiple-choice instance.
+#[derive(Debug, Clone)]
+pub struct McInstance {
+    pub task: TaskKind,
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub gold: usize,
+}
+
+impl McInstance {
+    /// Full text of choice `i` (prompt ++ choice), as scored by the model.
+    pub fn full_text(&self, i: usize) -> String {
+        format!("{} {}", self.prompt, self.choices[i])
+    }
+}
+
+/// Task generator over a world.
+pub struct Task<'w> {
+    world: &'w World,
+    kind: TaskKind,
+}
+
+impl<'w> Task<'w> {
+    pub fn new(world: &'w World, kind: TaskKind) -> Self {
+        Task { world, kind }
+    }
+
+    /// Generate `count` instances for `split`. Streams for the two splits
+    /// are disjoint by construction (independent RNG forks).
+    pub fn generate(&self, split: Split, count: usize, seed: u64) -> Vec<McInstance> {
+        let tag = match split {
+            Split::Train => 0x33,
+            Split::Calib => 0x11,
+            Split::Eval => 0x22,
+        };
+        let mut rng = Rng::new(seed ^ (tag as u64) << 32 ^ self.kind as u64);
+        (0..count).map(|_| self.instance(&mut rng)).collect()
+    }
+
+    fn instance(&self, rng: &mut Rng) -> McInstance {
+        match self.kind {
+            TaskKind::BoolLike => self.bool_like(rng),
+            TaskKind::PhysLike => self.phys_like(rng),
+            TaskKind::ContLike => self.cont_like(rng),
+            TaskKind::CorefLike => self.coref_like(rng),
+            TaskKind::QaEasy => self.qa_easy(rng),
+            TaskKind::QaHard => self.qa_hard(rng),
+        }
+    }
+
+    fn bool_like(&self, rng: &mut Rng) -> McInstance {
+        let w = self.world;
+        let p = rng.below(w.n_people());
+        let truth = rng.chance(0.5);
+        let loc = if truth {
+            w.person_loc[p]
+        } else {
+            // any wrong location
+            let mut l = rng.below(w.locations.len());
+            while l == w.person_loc[p] {
+                l = rng.below(w.locations.len());
+            }
+            l
+        };
+        McInstance {
+            task: self.kind,
+            prompt: format!("question : is {} in the {} ? answer :", w.people[p], w.locations[loc]),
+            choices: vec!["yes".into(), "no".into()],
+            gold: if truth { 0 } else { 1 },
+        }
+    }
+
+    fn phys_like(&self, rng: &mut Rng) -> McInstance {
+        let w = self.world;
+        let use_ = rng.below(USES.len());
+        let gold_obj = w.object_for_use(use_).expect("every use has an object");
+        let distractors = w.objects_without_use(use_);
+        let wrong = distractors[rng.below(distractors.len())];
+        let gold_pos = rng.below(2);
+        let mut choices = vec![String::new(); 2];
+        choices[gold_pos] = w.objects[gold_obj].name.clone();
+        choices[1 - gold_pos] = w.objects[wrong].name.clone();
+        McInstance {
+            task: self.kind,
+            prompt: format!("to {} people use the", USES[use_]),
+            choices,
+            gold: gold_pos,
+        }
+    }
+
+    fn cont_like(&self, rng: &mut Rng) -> McInstance {
+        let w = self.world;
+        let p = rng.below(w.n_people());
+        let friend = w.person_friend[p];
+        let gold_obj = w.person_likes[p];
+        let mut choice_idx = vec![gold_obj];
+        while choice_idx.len() < 4 {
+            let o = rng.below(w.n_objects());
+            if !choice_idx.contains(&o) {
+                choice_idx.push(o);
+            }
+        }
+        rng.shuffle(&mut choice_idx[..]);
+        let gold = choice_idx.iter().position(|&o| o == gold_obj).unwrap();
+        McInstance {
+            task: self.kind,
+            prompt: format!(
+                "{} is friends with {} . {} likes the",
+                w.people[p], w.people[friend], w.people[p]
+            ),
+            choices: choice_idx.iter().map(|&o| w.objects[o].name.clone()).collect(),
+            gold,
+        }
+    }
+
+    fn coref_like(&self, rng: &mut Rng) -> McInstance {
+        let w = self.world;
+        let e = w.events[rng.below(w.events.len())];
+        let obj = &w.objects[e.object].name;
+        let ask_receiver = rng.chance(0.5);
+        let (question, gold_person, other) = if ask_receiver {
+            ("who has", e.receiver, e.giver)
+        } else {
+            ("who gave", e.giver, e.receiver)
+        };
+        let gold_pos = rng.below(2);
+        let mut choices = vec![String::new(); 2];
+        choices[gold_pos] = w.people[gold_person].clone();
+        choices[1 - gold_pos] = w.people[other].clone();
+        let tail = if ask_receiver { "now ? answer :" } else { "away ? answer :" };
+        McInstance {
+            task: self.kind,
+            prompt: format!(
+                "{} gave the {} to {} . question : {} the {} {tail}",
+                w.people[e.giver], obj, w.people[e.receiver], question, obj
+            ),
+            choices,
+            gold: gold_pos,
+        }
+    }
+
+    fn qa_easy(&self, rng: &mut Rng) -> McInstance {
+        let w = self.world;
+        let o = rng.below(w.n_objects());
+        let obj = &w.objects[o];
+        // rotate among three attribute families
+        let (question, gold_text, pool): (String, &str, &[&str]) = match rng.below(3) {
+            0 => (
+                format!("question : what is the {} made of ? answer :", obj.name),
+                MATERIALS[obj.material],
+                &MATERIALS,
+            ),
+            1 => (
+                format!("question : what color is the {} ? answer :", obj.name),
+                COLORS[obj.color],
+                &COLORS,
+            ),
+            _ => (
+                format!("question : what is the {} used to do ? answer :", obj.name),
+                USES[obj.use_],
+                &USES,
+            ),
+        };
+        let (choices, gold) = four_choices(rng, gold_text, pool);
+        McInstance { task: self.kind, prompt: question, choices, gold }
+    }
+
+    fn qa_hard(&self, rng: &mut Rng) -> McInstance {
+        // two-hop: person -> liked object -> attribute
+        let w = self.world;
+        let p = rng.below(w.n_people());
+        let obj = &w.objects[w.person_likes[p]];
+        let (question, gold_text, pool): (String, &str, &[&str]) = if rng.chance(0.5) {
+            (
+                format!("question : what is the thing {} likes made of ? answer :", w.people[p]),
+                MATERIALS[obj.material],
+                &MATERIALS,
+            )
+        } else {
+            (
+                format!("question : what color is the thing {} likes ? answer :", w.people[p]),
+                COLORS[obj.color],
+                &COLORS,
+            )
+        };
+        let (choices, gold) = four_choices(rng, gold_text, pool);
+        McInstance { task: self.kind, prompt: question, choices, gold }
+    }
+}
+
+/// Gold + 3 distinct distractors from `pool`, shuffled.
+fn four_choices(rng: &mut Rng, gold_text: &str, pool: &[&str]) -> (Vec<String>, usize) {
+    let mut picks: Vec<&str> = vec![gold_text];
+    while picks.len() < 4 {
+        let c = pool[rng.below(pool.len())];
+        if !picks.contains(&c) {
+            picks.push(c);
+        }
+    }
+    rng.shuffle(&mut picks[..]);
+    let gold = picks.iter().position(|&c| c == gold_text).unwrap();
+    (picks.into_iter().map(String::from).collect(), gold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::default_world(42)
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_instances() {
+        let w = world();
+        for kind in ALL_TASKS {
+            let task = Task::new(&w, kind);
+            let xs = task.generate(Split::Eval, 50, 1);
+            assert_eq!(xs.len(), 50);
+            for x in &xs {
+                assert_eq!(x.choices.len(), kind.n_choices(), "{:?}", kind);
+                assert!(x.gold < x.choices.len());
+                // choices distinct
+                let mut c = x.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), x.choices.len(), "dup choices in {:?}: {:?}", kind, x.choices);
+                assert!(!x.prompt.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let w = world();
+        for kind in ALL_TASKS {
+            let task = Task::new(&w, kind);
+            let a = task.generate(Split::Calib, 20, 1);
+            let b = task.generate(Split::Eval, 20, 1);
+            let same = a
+                .iter()
+                .zip(&b)
+                .filter(|(x, y)| x.prompt == y.prompt && x.gold == y.gold)
+                .count();
+            assert!(same < 20, "{:?}: calib/eval streams identical", kind);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let w = world();
+        let t = Task::new(&w, TaskKind::QaHard);
+        let a = t.generate(Split::Eval, 10, 3);
+        let b = t.generate(Split::Eval, 10, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.gold, y.gold);
+        }
+    }
+
+    #[test]
+    fn bool_task_balanced() {
+        let w = world();
+        let t = Task::new(&w, TaskKind::BoolLike);
+        let xs = t.generate(Split::Eval, 400, 5);
+        let yes = xs.iter().filter(|x| x.gold == 0).count();
+        assert!(yes > 120 && yes < 280, "yes={yes}/400");
+    }
+
+    #[test]
+    fn gold_positions_unbiased() {
+        // degenerate scorers should not beat chance by position
+        let w = world();
+        for kind in [TaskKind::PhysLike, TaskKind::QaEasy] {
+            let t = Task::new(&w, kind);
+            let xs = t.generate(Split::Eval, 400, 7);
+            let pos0 = xs.iter().filter(|x| x.gold == 0).count() as f64 / 400.0;
+            let chance = 1.0 / kind.n_choices() as f64;
+            assert!((pos0 - chance).abs() < 0.1, "{:?}: pos0 {pos0}", kind);
+        }
+    }
+
+    #[test]
+    fn qa_hard_is_two_hop_consistent() {
+        let w = world();
+        let t = Task::new(&w, TaskKind::QaHard);
+        for x in t.generate(Split::Eval, 30, 9) {
+            // the gold choice must be the attribute of the liked object of
+            // the person named in the prompt
+            let person = w
+                .people
+                .iter()
+                .position(|p| x.prompt.contains(p.as_str()))
+                .expect("person in prompt");
+            let obj = &w.objects[w.person_likes[person]];
+            let gold = &x.choices[x.gold];
+            assert!(
+                gold == MATERIALS[obj.material] || gold == COLORS[obj.color],
+                "gold {gold} not an attribute of {}",
+                obj.name
+            );
+        }
+    }
+
+    #[test]
+    fn full_text_concatenates() {
+        let w = world();
+        let t = Task::new(&w, TaskKind::BoolLike);
+        let x = &t.generate(Split::Eval, 1, 0)[0];
+        assert_eq!(x.full_text(0), format!("{} yes", x.prompt));
+    }
+}

@@ -1,0 +1,82 @@
+//! Byte-level tokenizer: ids 0..=255 are raw bytes, plus BOS/EOS/PAD/SEP.
+//!
+//! Matches `python/compile/config.py` (asserted against the manifest's
+//! tokenizer spec at runtime). Byte-level keeps the substrate honest — no
+//! vocabulary tuning can leak task structure into the model.
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const SEP: i32 = 259;
+pub const VOCAB_USED: usize = 260;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    /// Encode text to byte tokens (no specials).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Decode, skipping special ids.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// `BOS ++ bytes(text)`, truncated/padded to `len` with PAD.
+    pub fn encode_fixed(&self, text: &str, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        out.push(BOS);
+        out.extend(self.encode(text));
+        out.truncate(len);
+        while out.len() < len {
+            out.push(PAD);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer::new();
+        let text = "the ball is red .";
+        assert_eq!(tk.decode(&tk.encode(text)), text);
+    }
+
+    #[test]
+    fn encode_fixed_pads_and_truncates() {
+        let tk = Tokenizer::new();
+        let v = tk.encode_fixed("ab", 6);
+        assert_eq!(v, vec![BOS, b'a' as i32, b'b' as i32, PAD, PAD, PAD]);
+        let w = tk.encode_fixed("abcdefgh", 4);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0], BOS);
+        assert_eq!(w[3], b'c' as i32);
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let tk = Tokenizer::new();
+        assert_eq!(tk.decode(&[BOS, b'h' as i32, b'i' as i32, PAD, EOS]), "hi");
+    }
+
+    #[test]
+    fn ids_fit_used_vocab() {
+        assert!(SEP < VOCAB_USED as i32);
+        assert_eq!(VOCAB_USED, 260);
+    }
+}

@@ -1,0 +1,198 @@
+//! Deterministic synthetic world: entities, attributes, relations, events.
+//!
+//! The world is the ground truth behind both the training corpus and the
+//! six SynthSense tasks. All structure flows from one seed, so every
+//! experiment regenerates identically.
+
+use crate::util::Rng;
+
+/// Fixed attribute vocabularies (small, regular, byte-tokenizer friendly).
+pub const MATERIALS: [&str; 8] =
+    ["wood", "metal", "glass", "rubber", "stone", "cloth", "paper", "clay"];
+pub const COLORS: [&str; 8] = ["red", "blue", "green", "black", "white", "brown", "grey", "pink"];
+pub const USES: [&str; 8] = [
+    "carry water", "cut bread", "dig soil", "light a fire",
+    "sweep dust", "catch fish", "open doors", "write notes",
+];
+pub const SIZES: [&str; 2] = ["small", "big"];
+
+/// One physical object and its attributes.
+#[derive(Debug, Clone)]
+pub struct Object {
+    pub name: String,
+    pub material: usize,
+    pub color: usize,
+    pub use_: usize,
+    pub size: usize,
+}
+
+/// A give-event: `giver` gave `object` to `receiver`.
+#[derive(Debug, Clone, Copy)]
+pub struct GiveEvent {
+    pub giver: usize,
+    pub object: usize,
+    pub receiver: usize,
+}
+
+/// The complete world state.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub seed: u64,
+    pub people: Vec<String>,
+    pub objects: Vec<Object>,
+    pub locations: Vec<String>,
+    /// person -> location index
+    pub person_loc: Vec<usize>,
+    /// person -> liked object index
+    pub person_likes: Vec<usize>,
+    /// person -> friend (person index, != self)
+    pub person_friend: Vec<usize>,
+    pub events: Vec<GiveEvent>,
+}
+
+fn make_names(rng: &mut Rng, count: usize, syllables: usize) -> Vec<String> {
+    const C: &[u8] = b"bdfgklmnprstvz";
+    const V: &[u8] = b"aeiou";
+    let mut out: Vec<String> = Vec::with_capacity(count);
+    while out.len() < count {
+        let mut name = String::new();
+        for _ in 0..syllables {
+            name.push(C[rng.below(C.len())] as char);
+            name.push(V[rng.below(V.len())] as char);
+        }
+        name.push(C[rng.below(C.len())] as char);
+        if !out.contains(&name) {
+            out.push(name);
+        }
+    }
+    out
+}
+
+impl World {
+    /// Generate a world with `n_people` people, `n_objects` objects and
+    /// `n_locations` locations.
+    pub fn generate(seed: u64, n_people: usize, n_objects: usize, n_locations: usize) -> World {
+        assert!(n_people >= 2 && n_objects >= 4 && n_locations >= 2);
+        let mut rng = Rng::new(seed ^ 0x5EED_0001);
+        let people = make_names(&mut rng, n_people, 2);
+        let object_names = make_names(&mut rng, n_objects, 1);
+        let locations = make_names(&mut rng, n_locations, 2);
+
+        let objects: Vec<Object> = object_names
+            .into_iter()
+            .enumerate()
+            .map(|(i, name)| Object {
+                name,
+                // spread attributes so every material/use occurs
+                material: if i < MATERIALS.len() { i } else { rng.below(MATERIALS.len()) },
+                color: rng.below(COLORS.len()),
+                use_: if i < USES.len() { i } else { rng.below(USES.len()) },
+                size: rng.below(SIZES.len()),
+            })
+            .collect();
+
+        let person_loc = (0..n_people).map(|_| rng.below(n_locations)).collect();
+        let person_likes = (0..n_people).map(|_| rng.below(n_objects)).collect();
+        let person_friend = (0..n_people)
+            .map(|i| {
+                let mut f = rng.below(n_people);
+                while f == i {
+                    f = rng.below(n_people);
+                }
+                f
+            })
+            .collect();
+
+        // one give-event per person (giver i)
+        let events = (0..n_people)
+            .map(|giver| {
+                let mut receiver = rng.below(n_people);
+                while receiver == giver {
+                    receiver = rng.below(n_people);
+                }
+                GiveEvent { giver, object: rng.below(n_objects), receiver }
+            })
+            .collect();
+
+        World { seed, people, objects, locations, person_loc, person_likes, person_friend, events }
+    }
+
+    /// Default reproduction world.
+    pub fn default_world(seed: u64) -> World {
+        World::generate(seed, 24, 16, 8)
+    }
+
+    pub fn n_people(&self) -> usize {
+        self.people.len()
+    }
+
+    pub fn n_objects(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Objects that have a *different* use than `use_` (PIQA distractors).
+    pub fn objects_without_use(&self, use_: usize) -> Vec<usize> {
+        (0..self.objects.len()).filter(|&i| self.objects[i].use_ != use_).collect()
+    }
+
+    /// The object that serves `use_` (first match).
+    pub fn object_for_use(&self, use_: usize) -> Option<usize> {
+        (0..self.objects.len()).find(|&i| self.objects[i].use_ == use_)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = World::default_world(7);
+        let b = World::default_world(7);
+        assert_eq!(a.people, b.people);
+        assert_eq!(a.person_loc, b.person_loc);
+        assert_eq!(a.objects.len(), b.objects.len());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = World::default_world(1);
+        let b = World::default_world(2);
+        assert!(a.people != b.people || a.person_loc != b.person_loc);
+    }
+
+    #[test]
+    fn names_unique() {
+        let w = World::default_world(3);
+        let mut names = w.people.clone();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), w.people.len());
+    }
+
+    #[test]
+    fn friends_not_self() {
+        let w = World::default_world(4);
+        for (i, &f) in w.person_friend.iter().enumerate() {
+            assert_ne!(i, f);
+        }
+    }
+
+    #[test]
+    fn every_use_has_an_object() {
+        let w = World::default_world(5);
+        for u in 0..USES.len() {
+            assert!(w.object_for_use(u).is_some(), "use {u}");
+        }
+    }
+
+    #[test]
+    fn events_well_formed() {
+        let w = World::default_world(6);
+        assert_eq!(w.events.len(), w.n_people());
+        for e in &w.events {
+            assert_ne!(e.giver, e.receiver);
+            assert!(e.object < w.n_objects());
+        }
+    }
+}

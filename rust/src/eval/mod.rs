@@ -1,0 +1,273 @@
+//! Zero-shot evaluation: LLaMA-protocol multiple-choice scoring +
+//! perplexity, over the AOT `score_fwd` graph.
+//!
+//! Each (instance, choice) pair is scored by the mean per-token logprob of
+//! the choice span (length normalization, as in the paper's harness); the
+//! argmax choice is the prediction. Results aggregate per task into the
+//! paper's Table 1-4 rows.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::data::{encode_mc_batches, McInstance, Split, Task, TaskKind, World, ALL_TASKS};
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Accuracy of one task.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskScore {
+    pub kind: TaskKind,
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl TaskScore {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Full evaluation report (one table row).
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub tasks: Vec<TaskScore>,
+    pub perplexity: Option<f64>,
+}
+
+impl EvalReport {
+    pub fn average(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.iter().map(|t| t.accuracy()).sum::<f64>() / self.tasks.len() as f64
+    }
+
+    pub fn accuracy_of(&self, kind: TaskKind) -> Option<f64> {
+        self.tasks.iter().find(|t| t.kind == kind).map(|t| t.accuracy())
+    }
+
+    /// One formatted row: per-task % then average %.
+    pub fn row(&self) -> String {
+        let mut cells: Vec<String> =
+            self.tasks.iter().map(|t| format!("{:5.1}", 100.0 * t.accuracy())).collect();
+        cells.push(format!("{:5.1}", 100.0 * self.average()));
+        cells.join("  ")
+    }
+}
+
+/// Evaluator bound to one runtime.
+pub struct Evaluator<'rt> {
+    runtime: &'rt Runtime,
+    cfg: ModelConfig,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Evaluator<'rt> {
+        let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
+        Evaluator { runtime, cfg }
+    }
+
+    /// Mean per-token logprob of each (instance, choice): the LLaMA
+    /// length-normalized score.
+    pub fn score_instances(
+        &self,
+        params: &ParamStore,
+        instances: &[McInstance],
+    ) -> Result<Vec<Vec<f64>>> {
+        let (eb, es) = (self.cfg.eval_batch, self.cfg.eval_seq);
+        let batches = encode_mc_batches(instances, eb, es)?;
+        let mut scores: Vec<Vec<f64>> =
+            instances.iter().map(|i| vec![f64::NEG_INFINITY; i.choices.len()]).collect();
+        // marshal the (unchanging) parameters into XLA literals once —
+        // §Perf: saves a params-sized copy per batch on the eval hot path
+        let prepared = self.runtime.prepare(&params.flat())?;
+        for mb in &batches {
+            let tokens = Tensor::from_i32(&[eb, es], mb.tokens.clone());
+            let targets = Tensor::from_i32(&[eb, es], mb.targets.clone());
+            let mask = Tensor::from_f32(&[eb, es], mb.mask.clone());
+            let outs = self
+                .runtime
+                .execute_prepared("score_fwd", &prepared, &[&tokens, &targets, &mask])
+                .context("score_fwd")?;
+            let sums = outs[0].as_f32()?;
+            let counts = outs[1].as_f32()?;
+            for (r, row) in mb.rows.iter().enumerate() {
+                let c = counts[r].max(1.0) as f64;
+                scores[row.instance][row.choice] = sums[r] as f64 / c;
+            }
+        }
+        Ok(scores)
+    }
+
+    /// Accuracy over a set of instances of one task.
+    pub fn eval_task(&self, params: &ParamStore, instances: &[McInstance]) -> Result<TaskScore> {
+        let scores = self.score_instances(params, instances)?;
+        let mut correct = 0;
+        for (inst, s) in instances.iter().zip(&scores) {
+            let pred = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            if pred == inst.gold {
+                correct += 1;
+            }
+        }
+        Ok(TaskScore { kind: instances[0].task, correct, total: instances.len() })
+    }
+
+    /// Evaluate all six tasks on the eval split (`n_per_task` instances
+    /// each) and optionally corpus perplexity.
+    pub fn eval_suite(
+        &self,
+        params: &ParamStore,
+        world: &World,
+        n_per_task: usize,
+        seed: u64,
+        ppl_text: Option<&str>,
+    ) -> Result<EvalReport> {
+        let mut tasks = Vec::new();
+        for kind in ALL_TASKS {
+            let gen = Task::new(world, kind);
+            let instances = gen.generate(Split::Eval, n_per_task, seed);
+            tasks.push(self.eval_task(params, &instances)?);
+        }
+        let perplexity = match ppl_text {
+            Some(text) => Some(self.perplexity(params, text)?),
+            None => None,
+        };
+        Ok(EvalReport { tasks, perplexity })
+    }
+
+    /// Corpus perplexity via the same scoring graph (mask = all non-PAD
+    /// target positions).
+    pub fn perplexity(&self, params: &ParamStore, text: &str) -> Result<f64> {
+        let (eb, es) = (self.cfg.eval_batch, self.cfg.eval_seq);
+        let tk = crate::data::Tokenizer::new();
+        let ids = tk.encode(text);
+        let window = es; // BOS + window-1 bytes, target shifts
+        let mut total_lp = 0.0f64;
+        let mut total_tokens = 0.0f64;
+        let n_rows = (ids.len() - 1) / (window - 1);
+        let rows = n_rows.min(4 * eb); // bounded work
+        let mut row_tokens: Vec<i32> = Vec::new();
+        let mut row_targets: Vec<i32> = Vec::new();
+        let mut row_mask: Vec<f32> = Vec::new();
+        let mut rows_in_batch = 0;
+        let flush = |tokens: &mut Vec<i32>,
+                         targets: &mut Vec<i32>,
+                         mask: &mut Vec<f32>,
+                         rows_in_batch: &mut usize|
+         -> Result<(f64, f64)> {
+            if *rows_in_batch == 0 {
+                return Ok((0.0, 0.0));
+            }
+            while *rows_in_batch < eb {
+                tokens.extend(std::iter::repeat(crate::data::PAD).take(es));
+                targets.extend(std::iter::repeat(crate::data::PAD).take(es));
+                mask.extend(std::iter::repeat(0.0f32).take(es));
+                *rows_in_batch += 1;
+            }
+            let t = Tensor::from_i32(&[eb, es], std::mem::take(tokens));
+            let g = Tensor::from_i32(&[eb, es], std::mem::take(targets));
+            let m = Tensor::from_f32(&[eb, es], std::mem::take(mask));
+            let mut args: Vec<&Tensor> = params.flat();
+            args.push(&t);
+            args.push(&g);
+            args.push(&m);
+            let outs = self.runtime.execute("score_fwd", &args)?;
+            let s: f64 = outs[0].as_f32()?.iter().map(|&x| x as f64).sum();
+            let c: f64 = outs[1].as_f32()?.iter().map(|&x| x as f64).sum();
+            *rows_in_batch = 0;
+            Ok((s, c))
+        };
+
+        for r in 0..rows {
+            let start = r * (window - 1);
+            let span = &ids[start..(start + window).min(ids.len())];
+            // tokens = BOS ++ span[..-1]; targets = span
+            row_tokens.push(crate::data::BOS);
+            row_tokens.extend(&span[..span.len() - 1]);
+            row_targets.extend(span);
+            row_mask.extend(std::iter::repeat(1.0f32).take(span.len()));
+            for _ in span.len()..es {
+                row_tokens.push(crate::data::PAD);
+                row_targets.push(crate::data::PAD);
+                row_mask.push(0.0);
+            }
+            rows_in_batch += 1;
+            if rows_in_batch == eb {
+                let (s, c) = flush(&mut row_tokens, &mut row_targets, &mut row_mask, &mut rows_in_batch)?;
+                total_lp += s;
+                total_tokens += c;
+            }
+        }
+        let (s, c) = flush(&mut row_tokens, &mut row_targets, &mut row_mask, &mut rows_in_batch)?;
+        total_lp += s;
+        total_tokens += c;
+        if total_tokens == 0.0 {
+            anyhow::bail!("perplexity: no tokens scored");
+        }
+        Ok((-total_lp / total_tokens).exp())
+    }
+}
+
+/// Pretty-print a set of labeled reports as the paper's table layout.
+pub fn format_table(title: &str, rows: &[(String, EvalReport)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n## {title}\n"));
+    let header: Vec<&str> = ALL_TASKS.iter().map(|k| k.paper_name()).collect();
+    out.push_str(&format!("{:<28} {}  Avg\n", "Variant", header.join("  ")));
+    for (label, rep) in rows {
+        out.push_str(&format!("{label:<28} {}", rep.row()));
+        if let Some(ppl) = rep.perplexity {
+            out.push_str(&format!("   (ppl {ppl:.2})"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Per-task accuracy map (test convenience).
+pub fn accuracy_map(rep: &EvalReport) -> BTreeMap<&'static str, f64> {
+    rep.tasks.iter().map(|t| (t.kind.name(), t.accuracy())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_average() {
+        let rep = EvalReport {
+            tasks: vec![
+                TaskScore { kind: TaskKind::BoolLike, correct: 80, total: 100 },
+                TaskScore { kind: TaskKind::QaEasy, correct: 40, total: 100 },
+            ],
+            perplexity: None,
+        };
+        assert!((rep.average() - 0.6).abs() < 1e-12);
+        assert_eq!(rep.accuracy_of(TaskKind::BoolLike), Some(0.8));
+        assert_eq!(rep.accuracy_of(TaskKind::QaHard), None);
+    }
+
+    #[test]
+    fn format_table_contains_labels() {
+        let rep = EvalReport {
+            tasks: vec![TaskScore { kind: TaskKind::BoolLike, correct: 1, total: 2 }],
+            perplexity: Some(3.5),
+        };
+        let s = format_table("Table X", &[("dense".into(), rep)]);
+        assert!(s.contains("Table X"));
+        assert!(s.contains("dense"));
+        assert!(s.contains("50.0"));
+        assert!(s.contains("ppl 3.50"));
+    }
+}

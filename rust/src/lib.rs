@@ -1,0 +1,38 @@
+//! # LLM-ROM — Reduced Order Modelling of Latent Features in LLMs
+//!
+//! Rust coordinator (L3) of the three-layer reproduction of
+//! *"Rethinking Compression: Reduced Order Modelling of Latent Features in
+//! Large Language Models"* (ICLR 2024).
+//!
+//! The request path is pure Rust: this crate loads HLO artifacts lowered
+//! once at build time from JAX/Pallas (`python/compile/`), executes them on
+//! the PJRT CPU client, and implements the paper's CPU-side algorithm —
+//! activation-covariance eigendecomposition, rank selection, and low-rank
+//! re-parameterization — natively.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`linalg`] — dense matrix substrate + symmetric eigensolvers
+//! - [`tensor`] — named tensors and the `.rtz` interchange container
+//! - [`runtime`] — PJRT executable loading/caching/marshalling
+//! - [`model`] — MiniLLaMA schema, parameter store, MACs accounting
+//! - [`data`] — synthetic world, corpus, SynthSense tasks, tokenizer
+//! - [`rom`] — the paper's contribution: layerwise ROM compression
+//! - [`prune`] — LLM-Pruner-style structured baseline (± fine-tune)
+//! - [`train`] — Rust-owned AdamW training loop over the AOT train step
+//! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
+//! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod prune;
+pub mod rom;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

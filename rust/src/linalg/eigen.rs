@@ -1,0 +1,354 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization (`tred2`)
+//! followed by implicit-shift QL iteration (`tqli`).
+//!
+//! This is the paper's §2 eigendecomposition of the activation covariance,
+//! implemented natively so the ROM pass needs no GPU, no BLAS/LAPACK and no
+//! Python at runtime. The classic EISPACK-lineage algorithms are used;
+//! [`super::jacobi`] provides an independent oracle the tests cross-check
+//! against.
+
+use anyhow::{bail, Result};
+
+use super::matrix::Matrix;
+
+/// Result of [`eigh`]: eigenpairs sorted by **descending** eigenvalue
+/// (ROM keeps the top-r — descending is the natural order here).
+#[derive(Debug, Clone)]
+pub struct EigenDecomposition {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Row `i` is the unit eigenvector of `values[i]` — i.e. the matrix is
+    /// `Vᵀ` in the paper's notation: `principal_components.top_rows(r)` is
+    /// exactly `V_r ∈ R^{r×d}`.
+    pub vectors: Matrix,
+}
+
+impl EigenDecomposition {
+    /// Reconstruct `A = Vᵀ Λ V` (for tests / reconstruction error).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.values.len();
+        let mut out = Matrix::zeros(n, n);
+        for k in 0..n {
+            let lam = self.values[k];
+            let v = self.vectors.row(k);
+            for i in 0..n {
+                let li = lam * v[i];
+                for j in 0..n {
+                    out[(i, j)] += li * v[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix.
+///
+/// The input is symmetrized defensively (covariance accumulation can leave
+/// ~1e-7 asymmetry). Fails only if QL does not converge in 50 sweeps per
+/// eigenvalue, which for real covariance matrices does not happen.
+pub fn eigh(a: &Matrix) -> Result<EigenDecomposition> {
+    assert_eq!(a.rows(), a.cols(), "eigh: square matrix required");
+    let n = a.rows();
+    if n == 0 {
+        return Ok(EigenDecomposition { values: vec![], vectors: Matrix::zeros(0, 0) });
+    }
+    let mut q = a.clone();
+    q.symmetrize();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut q, &mut d, &mut e);
+    tqli(&mut d, &mut e, &mut q)?;
+
+    // q columns are eigenvectors; sort descending and emit rows.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (row, &src) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors[(row, i)] = q[(i, src)];
+        }
+    }
+    Ok(EigenDecomposition { values, vectors })
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+///
+/// On exit `a` holds the orthogonal transformation matrix `Q` (columns),
+/// `d` the diagonal and `e[1..]` the sub-diagonal. 0-indexed port of the
+/// EISPACK/NR `tred2`.
+fn tred2(a: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = a.rows();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += a[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = a[(i, l)];
+            } else {
+                for k in 0..=l {
+                    a[(i, k)] /= scale;
+                    h += a[(i, k)] * a[(i, k)];
+                }
+                let mut f = a[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    a[(j, i)] = a[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[(j, k)] * a[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += a[(k, j)] * a[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = a[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let delta = f * e[k] + g * a[(i, k)];
+                        a[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = a[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += a[(i, k)] * a[(k, j)];
+                }
+                for k in 0..i {
+                    let delta = g * a[(k, i)];
+                    a[(k, j)] -= delta;
+                }
+            }
+        }
+        d[i] = a[(i, i)];
+        a[(i, i)] = 1.0;
+        for j in 0..i {
+            a[(j, i)] = 0.0;
+            a[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL on a tridiagonal matrix, accumulating eigenvectors
+/// into `z` (which enters as the `tred2` transformation).
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut Matrix) -> Result<()> {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find the boundary of the unreduced block
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                bail!("tqli: no convergence for eigenvalue {l} after 50 iterations");
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.abs().copysign(if g >= 0.0 { 1.0 } else { -1.0 }));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate the rotation into the eigenvector matrix
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::from_fn(n, n, |_, _| rng.normal());
+        m.symmetrize();
+        m
+    }
+
+    fn random_covariance(n: usize, samples: usize, seed: u64) -> Matrix {
+        // Gram matrix of random samples — what ROM actually decomposes.
+        let mut rng = Rng::new(seed);
+        let y = Matrix::from_fn(samples, n, |_, _| rng.normal());
+        matmul(&y.transpose(), &y)
+    }
+
+    fn check_eigen(a: &Matrix, tol: f64) {
+        let n = a.rows();
+        let dec = eigh(a).unwrap();
+        // A v = λ v for every pair
+        for k in 0..n {
+            let v = dec.vectors.row(k).to_vec();
+            let av = a.matvec(&v);
+            for i in 0..n {
+                assert!(
+                    (av[i] - dec.values[k] * v[i]).abs() < tol * (1.0 + a.max_abs()),
+                    "eigenpair {k}: residual {} vs tol", (av[i] - dec.values[k] * v[i]).abs()
+                );
+            }
+        }
+        // descending order
+        for w in dec.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+        // orthonormal rows
+        for i in 0..n {
+            for j in i..n {
+                let dot: f64 = dec.vectors.row(i).iter().zip(dec.vectors.row(j)).map(|(a, b)| a * b).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-8, "orthonormality ({i},{j}): {dot}");
+            }
+        }
+        // reconstruction
+        let rec = dec.reconstruct();
+        assert!(rec.sub(a).max_abs() < tol * 10.0 * (1.0 + a.max_abs()), "reconstruction");
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, v) in [3.0, -1.0, 7.0, 0.5].iter().enumerate() {
+            a[(i, i)] = *v;
+        }
+        let dec = eigh(&a).unwrap();
+        assert!((dec.values[0] - 7.0).abs() < 1e-12);
+        assert!((dec.values[3] - -1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let dec = eigh(&a).unwrap();
+        assert!((dec.values[0] - 3.0).abs() < 1e-12);
+        assert!((dec.values[1] - 1.0).abs() < 1e-12);
+        // eigenvector of 3 is (1,1)/√2 up to sign
+        let v = dec.vectors.row(0);
+        assert!((v[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v[0] - v[1]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn random_symmetric_sizes() {
+        for &n in &[1, 2, 3, 5, 16, 33, 64] {
+            check_eigen(&random_symmetric(n, n as u64), 1e-8);
+        }
+    }
+
+    #[test]
+    fn covariance_matrices_are_psd() {
+        for &n in &[8, 32, 96] {
+            let a = random_covariance(n, 4 * n, n as u64 + 100);
+            let dec = eigh(&a).unwrap();
+            assert!(dec.values.iter().all(|&l| l > -1e-6), "PSD violated");
+            check_eigen(&a, 1e-7);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_covariance() {
+        // fewer samples than dims -> exactly (n - samples) zero eigenvalues
+        let n = 24;
+        let samples = 10;
+        let a = random_covariance(n, samples, 7);
+        let dec = eigh(&a).unwrap();
+        let zeros = dec.values.iter().filter(|&&l| l.abs() < 1e-6).count();
+        assert_eq!(zeros, n - samples);
+    }
+
+    #[test]
+    fn trace_equals_eigenvalue_sum() {
+        let a = random_symmetric(40, 11);
+        let dec = eigh(&a).unwrap();
+        let trace: f64 = (0..40).map(|i| a[(i, i)]).sum();
+        let sum: f64 = dec.values.iter().sum();
+        assert!((trace - sum).abs() < 1e-8);
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // 2·I plus rank-1: eigenvalues {2+n, 2, 2, …}
+        let n = 10;
+        let mut a = Matrix::identity(n).scale(2.0);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] += 1.0;
+            }
+        }
+        let dec = eigh(&a).unwrap();
+        assert!((dec.values[0] - (2.0 + n as f64)).abs() < 1e-9);
+        for k in 1..n {
+            assert!((dec.values[k] - 2.0).abs() < 1e-9);
+        }
+        check_eigen(&a, 1e-8);
+    }
+}

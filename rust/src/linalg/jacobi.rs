@@ -1,0 +1,137 @@
+//! Cyclic Jacobi eigensolver — the slow, independently-derived oracle used
+//! to cross-check [`super::eigen::eigh`]. O(n³) per sweep, unconditionally
+//! convergent on symmetric matrices.
+
+use anyhow::{bail, Result};
+
+use super::eigen::EigenDecomposition;
+use super::matrix::Matrix;
+
+/// Eigendecomposition by cyclic Jacobi rotations. Same contract as
+/// [`super::eigen::eigh`]: eigenpairs sorted by descending eigenvalue,
+/// eigenvectors as rows.
+pub fn eigh_jacobi(a: &Matrix) -> Result<EigenDecomposition> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    if n == 0 {
+        return Ok(EigenDecomposition { values: vec![], vectors: Matrix::zeros(0, 0) });
+    }
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Matrix::identity(n);
+    let scale = m.max_abs().max(1e-300);
+
+    for _sweep in 0..100 {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-11 * scale * n as f64 {
+            return Ok(sorted(m, v));
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rows/cols p and q of A
+                for k in 0..n {
+                    let akp = m[(k, p)];
+                    let akq = m[(k, q)];
+                    m[(k, p)] = c * akp - s * akq;
+                    m[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[(p, k)];
+                    let aqk = m[(q, k)];
+                    m[(p, k)] = c * apk - s * aqk;
+                    m[(q, k)] = s * apk + c * aqk;
+                }
+                // accumulate rotation into V (columns are eigenvectors)
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    bail!("jacobi: no convergence after 100 sweeps")
+}
+
+fn sorted(m: Matrix, v: Matrix) -> EigenDecomposition {
+    let n = m.rows();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (row, &src) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors[(row, i)] = v[(i, src)];
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigen::eigh;
+    use crate::linalg::matmul;
+    use crate::util::Rng;
+
+    #[test]
+    fn agrees_with_ql_on_random_matrices() {
+        for &n in &[2, 5, 17, 48] {
+            let mut rng = Rng::new(n as u64);
+            let mut a = Matrix::from_fn(n, n, |_, _| rng.normal());
+            a.symmetrize();
+            let jd = eigh_jacobi(&a).unwrap();
+            let qd = eigh(&a).unwrap();
+            for (x, y) in jd.values.iter().zip(&qd.values) {
+                assert!((x - y).abs() < 1e-7 * (1.0 + a.max_abs()), "{x} vs {y}");
+            }
+            // eigenvectors agree up to sign
+            for k in 0..n {
+                let dot: f64 = jd.vectors.row(k).iter().zip(qd.vectors.row(k)).map(|(a, b)| a * b).sum();
+                assert!(dot.abs() > 1.0 - 1e-5 || (jd.values[k] - jd.values.get(k + 1).copied().unwrap_or(f64::NEG_INFINITY)).abs() < 1e-6,
+                    "vector {k} mismatch: |dot|={}", dot.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_on_gram_matrices() {
+        let mut rng = Rng::new(99);
+        let y = Matrix::from_fn(50, 20, |_, _| rng.normal());
+        let a = matmul(&y.transpose(), &y);
+        let jd = eigh_jacobi(&a).unwrap();
+        let qd = eigh(&a).unwrap();
+        for (x, y) in jd.values.iter().zip(&qd.values) {
+            assert!((x - y).abs() < 1e-6 * (1.0 + a.max_abs()));
+        }
+    }
+
+    #[test]
+    fn identity_has_unit_eigenvalues() {
+        let dec = eigh_jacobi(&Matrix::identity(6)).unwrap();
+        for v in &dec.values {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+}

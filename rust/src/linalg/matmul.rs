@@ -1,0 +1,170 @@
+//! Cache-blocked dense matrix multiplication.
+//!
+//! Hot in two places: the ROM re-parameterization (`W_eff = V_rᵀ (V_r W)`)
+//! and the Rust-side covariance fallback (`YᵀY` on calibration captures).
+//! The kernel is an i-k-j loop order (streaming the B rows) with L1-sized
+//! blocking — no SIMD intrinsics, but the loop body autovectorizes.
+
+use super::matrix::Matrix;
+
+/// Block edge tuned for ~32 KiB L1 (3 × 64×64 f64 panels ≈ 96 KiB L2-ish,
+/// inner panels L1-resident).
+const BLOCK: usize = 64;
+
+/// `a @ b` for f64 matrices.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    for kk in k0..k1 {
+                        let aik = a[(i, kk)];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.row(kk)[j0..j1];
+                        let orow = &mut out.row_mut(i)[j0..j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `a @ b` over f32 slices (row-major), f32 accumulation into f64 rows.
+/// Shapes: a is (m, k), b is (k, n); returns (m, n) f32.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..kk * n + n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `a @ bᵀ` over f32 slices: a is (m, k), b is (n, k); returns (m, n).
+/// This is the natural layout for `X @ Wᵀ` with row-major weights.
+pub fn matmul_transb_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (64, 64, 64), (100, 33, 65), (129, 70, 10)] {
+            let a = Matrix::from_fn(m, k, |_, _| rng.normal());
+            let b = Matrix::from_fn(k, n, |_, _| rng.normal());
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(got.sub(&want).max_abs() < 1e-9, "{}x{}x{}", m, k, n);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::from_fn(17, 17, |_, _| rng.normal());
+        let id = Matrix::identity(17);
+        assert!(matmul(&a, &id).sub(&a).max_abs() < 1e-12);
+        assert!(matmul(&id, &a).sub(&a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_matches_f64() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (20, 30, 15);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let got = matmul_f32(&a, &b, m, k, n);
+        let am = Matrix::from_f32(m, k, &a);
+        let bm = Matrix::from_f32(k, n, &b);
+        let want = matmul(&am, &bm);
+        for i in 0..m {
+            for j in 0..n {
+                assert!((got[i * n + j] as f64 - want[(i, j)]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn transb_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (12, 24, 9);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let got = matmul_transb_f32(&a, &b, m, k, n);
+        // transpose b explicitly
+        let mut bt = vec![0.0f32; k * n];
+        for j in 0..n {
+            for kk in 0..k {
+                bt[kk * n + j] = b[j * k + kk];
+            }
+        }
+        let want = matmul_f32(&a, &bt, m, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}

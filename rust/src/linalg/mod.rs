@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate (pure Rust, CPU-only).
+//!
+//! The paper's selling point is that the whole ROM pass runs on a CPU with
+//! no GPU and no deep-learning framework; this module is that substrate:
+//! a row-major `f64` matrix type, cache-blocked matmul, and two symmetric
+//! eigensolvers (Householder tridiagonalization + implicit-shift QL as the
+//! production path, cyclic Jacobi as the cross-check oracle).
+
+pub mod eigen;
+pub mod jacobi;
+pub mod matrix;
+pub mod matmul;
+pub mod svd;
+
+pub use eigen::{eigh, EigenDecomposition};
+pub use jacobi::eigh_jacobi;
+pub use matrix::Matrix;
+pub use matmul::{matmul, matmul_f32, matmul_transb_f32};
+pub use svd::{svd, Svd};

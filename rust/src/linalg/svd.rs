@@ -1,0 +1,154 @@
+//! Thin SVD built on the symmetric eigensolver: `A = U Σ Vᵀ` via the
+//! eigendecomposition of the smaller Gram matrix.
+//!
+//! Used by the weight-space ablation and the analysis tooling (effective
+//! rank / spectra of calibration covariances in EXPERIMENTS.md §Perf).
+
+use anyhow::Result;
+
+use super::eigen::eigh;
+use super::matmul::matmul;
+use super::matrix::Matrix;
+
+/// Thin singular value decomposition.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// (m, k) left singular vectors (columns), k = min(m, n).
+    pub u: Matrix,
+    /// Singular values, descending, length k.
+    pub sigma: Vec<f64>,
+    /// (k, n) right singular vectors (rows).
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// Rank-r truncated reconstruction.
+    pub fn truncate(&self, r: usize) -> Matrix {
+        let r = r.min(self.sigma.len());
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let mut out = Matrix::zeros(m, n);
+        for k in 0..r {
+            let s = self.sigma[k];
+            for i in 0..m {
+                let us = self.u[(i, k)] * s;
+                for j in 0..n {
+                    out[(i, j)] += us * self.vt[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Effective rank at relative threshold `tol` (σ_i > tol·σ_0).
+    pub fn effective_rank(&self, tol: f64) -> usize {
+        let s0 = self.sigma.first().copied().unwrap_or(0.0);
+        self.sigma.iter().filter(|&&s| s > tol * s0).count()
+    }
+}
+
+/// Compute the thin SVD of `a` via the Gram matrix of the smaller side.
+pub fn svd(a: &Matrix) -> Result<Svd> {
+    let (m, n) = (a.rows(), a.cols());
+    if m <= n {
+        // A Aᵀ = U Σ² Uᵀ, then Vᵀ = Σ⁻¹ Uᵀ A
+        let aat = matmul(a, &a.transpose());
+        let dec = eigh(&aat)?;
+        let sigma: Vec<f64> = dec.values.iter().map(|l| l.max(0.0).sqrt()).collect();
+        // u columns = eigenvectors (dec rows are eigvecs)
+        let u = dec.vectors.transpose(); // (m, m)
+        let ut_a = matmul(&dec.vectors, a); // (m, n)
+        let mut vt = Matrix::zeros(m, n);
+        for k in 0..m {
+            let s = sigma[k];
+            if s > 1e-12 {
+                for j in 0..n {
+                    vt[(k, j)] = ut_a[(k, j)] / s;
+                }
+            }
+        }
+        Ok(Svd { u, sigma, vt })
+    } else {
+        // Aᵀ A = V Σ² Vᵀ, then U = A V Σ⁻¹
+        let ata = matmul(&a.transpose(), a);
+        let dec = eigh(&ata)?;
+        let sigma: Vec<f64> = dec.values.iter().map(|l| l.max(0.0).sqrt()).collect();
+        let vt = dec.vectors.clone(); // (n, n), rows are right singular vecs
+        let av = matmul(a, &dec.vectors.transpose()); // (m, n)
+        let mut u = Matrix::zeros(m, n);
+        for k in 0..n {
+            let s = sigma[k];
+            if s > 1e-12 {
+                for i in 0..m {
+                    u[(i, k)] = av[(i, k)] / s;
+                }
+            }
+        }
+        Ok(Svd { u, sigma, vt })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(m, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn reconstructs_both_orientations() {
+        for &(m, n) in &[(6usize, 10usize), (10, 6), (8, 8)] {
+            let a = rand(m, n, (m * 31 + n) as u64);
+            let s = svd(&a).unwrap();
+            let rec = s.truncate(m.min(n));
+            assert!(rec.sub(&a).max_abs() < 1e-8, "{m}x{n}: {}", rec.sub(&a).max_abs());
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let a = rand(12, 7, 3);
+        let s = svd(&a).unwrap();
+        for w in s.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-10);
+        }
+        assert!(s.sigma.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn truncation_error_is_tail_energy() {
+        // Eckart–Young: ‖A - A_r‖_F² = Σ_{i>r} σ_i²
+        let a = rand(9, 14, 4);
+        let s = svd(&a).unwrap();
+        for r in [1, 3, 6] {
+            let err = s.truncate(r).sub(&a).frobenius_norm();
+            let tail: f64 = s.sigma[r..].iter().map(|x| x * x).sum();
+            assert!((err * err - tail).abs() < 1e-6, "r={r}: {} vs {}", err * err, tail);
+        }
+    }
+
+    #[test]
+    fn effective_rank_of_lowrank_matrix() {
+        let b = rand(10, 3, 5);
+        let c = rand(3, 8, 6);
+        let a = matmul(&b, &c);
+        let s = svd(&a).unwrap();
+        // σ = √λ amplifies eigensolver noise on the zero modes
+        // (λ ≈ 1e-12·scale ⇒ σ/σ₀ ≈ 1e-6), so threshold at 1e-4.
+        assert_eq!(s.effective_rank(1e-4), 3);
+    }
+
+    #[test]
+    fn matches_eigh_of_gram() {
+        let a = rand(5, 12, 7);
+        let s = svd(&a).unwrap();
+        let ata = matmul(&a.transpose(), &a);
+        let dec = eigh(&ata).unwrap();
+        for (sv, ev) in s.sigma.iter().zip(&dec.values) {
+            assert!((sv * sv - ev.max(0.0)).abs() < 1e-8);
+        }
+    }
+}

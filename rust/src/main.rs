@@ -1,0 +1,370 @@
+//! `repro` — LLM-ROM command-line launcher.
+//!
+//! Subcommands mirror the pipeline stages (artifacts must exist — run
+//! `make artifacts` first):
+//!
+//! ```text
+//! repro info                         # manifest / model / platform summary
+//! repro gen-data [--seed N]          # preview world, corpus, tasks
+//! repro train   [--steps N] [--out ckpt.rtz]
+//! repro compress --ckpt ckpt.rtz --budget 0.8 [--out rom.rtz]
+//! repro prune   --ckpt ckpt.rtz --budget 0.8 [--finetune N]
+//! repro eval    --ckpt ckpt.rtz [--ppl]
+//! repro tables  --ckpt ckpt.rtz [--table 1|2|3|4|all]
+//! repro cost    --ckpt ckpt.rtz
+//! ```
+//!
+//! Arg parsing is hand-rolled (offline build; no clap) but strict: unknown
+//! flags are errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::data::CalibSource;
+use llm_rom::model::{macs, ParamStore};
+use llm_rom::prune::Importance;
+use llm_rom::runtime::Runtime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny strict flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got `{k}`"))?
+                .to_string();
+            // boolean flags take no value
+            if matches!(key.as_str(), "ppl" | "no-pallas" | "magnitude") {
+                flags.insert(key, "true".into());
+                continue;
+            }
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key, v);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad --{key} `{v}`")),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    let artifacts = args.get_or("artifacts", llm_rom::DEFAULT_ARTIFACTS);
+
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "info" => cmd_info(&artifacts),
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&artifacts, &args),
+        "compress" => cmd_compress(&artifacts, &args),
+        "prune" => cmd_prune(&artifacts, &args),
+        "eval" => cmd_eval(&artifacts, &args),
+        "generate" => cmd_generate(&artifacts, &args),
+        "tables" => cmd_tables(&artifacts, &args),
+        "cost" => cmd_cost(&artifacts, &args),
+        "spectrum" => cmd_spectrum(&artifacts, &args),
+        other => bail!("unknown subcommand `{other}` (try `repro help`)"),
+    }
+}
+
+const HELP: &str = "\
+repro — LLM-ROM reproduction CLI
+
+  info                          manifest / model / platform summary
+  gen-data  [--seed N]          preview world, corpus, tasks
+  train     [--steps N] [--out ckpt.rtz] [--seed N]
+  compress  --ckpt C --budget B [--out rom.rtz] [--rows N] [--seq N]
+            [--source combination|arc-c|corpus]
+  prune     --ckpt C --budget B [--finetune N] [--magnitude] [--out p.rtz]
+  eval      --ckpt C [--ppl] [--per-task N]
+  generate  --ckpt C --prompt \"text\" [--max-new N] [--temp T] [--seed N]
+  tables    --ckpt C [--table 1|2|3|4|all] [--finetune N]
+  cost      --ckpt C            §4 cost table
+  spectrum  --ckpt C [--blocks a..b] [--rows N]   latent-feature spectra
+Global: [--artifacts DIR] (default ./artifacts)
+";
+
+fn xcfg_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut x = ExperimentConfig::default();
+    x.seed = args.parse_num("seed", x.seed)?;
+    x.train_steps = args.parse_num("steps", x.train_steps)?;
+    x.calib_rows = args.parse_num("rows", x.calib_rows)?;
+    x.calib_seq = args.parse_num("seq", x.calib_seq)?;
+    x.eval_per_task = args.parse_num("per-task", x.eval_per_task)?;
+    if let Some(src) = args.get("source") {
+        x.calib_source = parse_source(src)?;
+    }
+    Ok(x)
+}
+
+fn parse_source(s: &str) -> Result<CalibSource> {
+    Ok(match s {
+        "combination" => CalibSource::Combination,
+        "arc-c" => CalibSource::SingleTask(llm_rom::data::TaskKind::QaHard),
+        "corpus" => CalibSource::Corpus,
+        other => bail!("unknown calibration source `{other}`"),
+    })
+}
+
+fn load_ckpt(exp: &Experiment, args: &Args) -> Result<ParamStore> {
+    let path = args.get("ckpt").context("--ckpt required")?;
+    ParamStore::load(&exp.cfg, path)
+}
+
+fn ensure_parent(path: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let m = rt.manifest();
+    let cfg = llm_rom::model::ModelConfig::from_manifest(&m.model_config);
+    println!("platform        : {}", rt.platform());
+    println!(
+        "model           : MiniLLaMA d={} h={} L={} ff={} vocab={}",
+        cfg.d_model, cfg.n_heads, cfg.n_layers, cfg.d_ff, cfg.vocab
+    );
+    println!("params          : {}", cfg.n_params());
+    println!("decoder fraction: {:.2}%", 100.0 * cfg.decoder_fraction());
+    println!("entries         : {}", m.entries.len());
+    for (name, e) in &m.entries {
+        println!(
+            "  {name:<22} {:>3} args -> {:>2} outputs ({})",
+            e.args.len(),
+            e.outputs.len(),
+            e.file
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    use llm_rom::data::{render_corpus, Split, Task, World, ALL_TASKS};
+    let seed = args.parse_num("seed", 42u64)?;
+    let world = World::default_world(seed);
+    println!(
+        "world: {} people, {} objects, {} locations",
+        world.n_people(),
+        world.n_objects(),
+        world.locations.len()
+    );
+    let corpus = render_corpus(&world, seed, 2_000, 1);
+    println!("\ncorpus sample:\n{}", &corpus[..500.min(corpus.len())]);
+    for kind in ALL_TASKS {
+        let t = Task::new(&world, kind);
+        let inst = &t.generate(Split::Eval, 1, seed)[0];
+        println!("\n[{}] {}", kind.name(), inst.prompt);
+        for (i, c) in inst.choices.iter().enumerate() {
+            let mark = if i == inst.gold { "*" } else { " " };
+            println!("  {mark} {c}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let init = exp.init_params(artifacts)?;
+    println!("training {} steps on the synthetic corpus…", exp.xcfg.train_steps);
+    let trained = exp.train(init, |step, loss, lr| {
+        println!("  step {step:>5}  loss {loss:.4}  lr {lr:.2e}");
+    })?;
+    let out = args.get_or("out", "runs/base.rtz");
+    ensure_parent(&out)?;
+    trained.params.save(&out)?;
+    println!("saved {out} ({:.1}s)", trained.train_seconds);
+    Ok(())
+}
+
+fn cmd_compress(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let budget: f64 = args.parse_num("budget", 0.8)?;
+    println!("ROM compression to {:.0}% global budget…", budget * 100.0);
+    let rom = exp.compress_at(&params, budget)?;
+    let rep = macs::report(&exp.cfg, &rom.accounting(), 64);
+    let dense = macs::report(&exp.cfg, &macs::CompressionAccounting::dense(), 64);
+    println!(
+        "params {} -> {} ({:.1}%), MACs {:.2}G -> {:.2}G",
+        dense.n_params,
+        rep.n_params,
+        100.0 * rep.n_params as f64 / dense.n_params as f64,
+        dense.macs_giga(),
+        rep.macs_giga()
+    );
+    println!(
+        "{} layers in {:.1}s ({:.2} s/layer), peak capture {:.1} MB",
+        rom.timings.len(),
+        rom.total_rom_seconds(),
+        rom.mean_seconds_per_layer(),
+        rom.peak_capture_bytes as f64 / 1e6
+    );
+    let out = args.get_or("out", "runs/rom.rtz");
+    ensure_parent(&out)?;
+    rom.params.save(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_prune(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let budget: f64 = args.parse_num("budget", 0.8)?;
+    let importance = if args.get("magnitude").is_some() {
+        Importance::Magnitude
+    } else {
+        Importance::ActivationAware
+    };
+    println!("structured pruning to {:.0}% ({importance:?})…", budget * 100.0);
+    let pruned = exp.prune_at(&params, budget, importance)?;
+    let rep = macs::report(&exp.cfg, &pruned.accounting(&exp.cfg), 64);
+    println!("params after: {} ({:.2}G MACs)", rep.n_params, rep.macs_giga());
+    let finetune: usize = args.parse_num("finetune", 0)?;
+    let final_params = if finetune > 0 {
+        println!("recovery fine-tune: {finetune} steps…");
+        exp.finetune_pruned(&pruned, finetune, |s, l, _| {
+            println!("  step {s:>4}  loss {l:.4}");
+        })?
+    } else {
+        pruned.params.clone()
+    };
+    let out = args.get_or("out", "runs/pruned.rtz");
+    ensure_parent(&out)?;
+    final_params.save(&out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let rep = exp.evaluate(&params, args.get("ppl").is_some())?;
+    println!("{}", llm_rom::eval::format_table("Evaluation", &[("model".into(), rep)]));
+    Ok(())
+}
+
+fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
+    use llm_rom::data::{Tokenizer, BOS};
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let prompt = args.get("prompt").context("--prompt required")?;
+    let max_new: usize = args.parse_num("max-new", 120)?;
+    let temp: f32 = args.parse_num("temp", 0.0)?;
+    let seed: u64 = args.parse_num("seed", 0)?;
+
+    let tk = Tokenizer::new();
+    let mut ids = vec![BOS];
+    ids.extend(tk.encode(prompt));
+    // KV-cached incremental decoding on the pure-rust reference model
+    let model = llm_rom::model::ReferenceModel::new(&params);
+    let t0 = std::time::Instant::now();
+    let out = model.generate(&ids, max_new, temp, seed)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt, tk.decode(&out));
+    eprintln!(
+        "\n[{} prompt + {} generated tokens in {:.2}s — {:.1} tok/s, KV-cached rust path]",
+        ids.len(),
+        out.len(),
+        dt,
+        out.len() as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_tables(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let which = args.get_or("table", "all");
+    let ft_steps: usize = args.parse_num("finetune", 60)?;
+    let budget: f64 = args.parse_num("budget", 0.8)?;
+    llm_rom::coordinator::run_tables(&exp, &params, &which, ft_steps, budget)
+}
+
+fn cmd_spectrum(artifacts: &str, args: &Args) -> Result<()> {
+    use llm_rom::coordinator::spectrum;
+    use llm_rom::rom::RomPipeline;
+    let rt = Runtime::new(artifacts)?;
+    let mut xcfg = xcfg_from(args)?;
+    if args.get("rows").is_none() {
+        xcfg.calib_rows = 128; // spectra stabilize quickly
+    }
+    let exp = Experiment::new(&rt, xcfg);
+    let params = load_ckpt(&exp, args)?;
+    let blocks = match args.get("blocks") {
+        None => 0..exp.cfg.n_layers,
+        Some(spec) => {
+            let (a, b) = spec.split_once("..").context("--blocks a..b")?;
+            a.parse().context("blocks start")?..b.parse().context("blocks end")?
+        }
+    };
+    let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+    let pipeline = RomPipeline::new(&rt);
+    let rows = spectrum::measure_spectra(&pipeline, &params, &calib, blocks)?;
+    println!("{}", spectrum::format_spectra(&rows));
+    println!("(ROM keeps r(b) components; r@99% ≪ dim is the paper's premise)");
+    Ok(())
+}
+
+fn cmd_cost(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let mut report = llm_rom::coordinator::CostReport::default();
+    for budget in [0.9, 0.8, 0.5] {
+        let rom = exp.compress_at(&params, budget)?;
+        report.push(format!("{:.0}%", budget * 100.0), &rom);
+    }
+    println!("{}", report.format());
+    let bound =
+        llm_rom::coordinator::cost::layerwise_memory_bound(&exp.cfg, exp.xcfg.calib_rows, exp.xcfg.calib_seq);
+    println!("layerwise memory bound (this config): {:.1} MB", bound as f64 / 1e6);
+    println!(
+        "layerwise memory bound (LLaMA-7B @512 rows): {:.2} GB  (paper: <10 GB)",
+        llm_rom::coordinator::cost::llama7b_memory_bound_bytes() as f64 / 1e9
+    );
+    Ok(())
+}

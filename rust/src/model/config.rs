@@ -1,0 +1,114 @@
+//! Model configuration, deserialized from `manifest.json` (the Python
+//! `compile.config.ModelConfig` is the source of truth; this mirrors it).
+
+use crate::runtime::ModelConfigJson;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn from_manifest(j: &ModelConfigJson) -> ModelConfig {
+        ModelConfig {
+            vocab: j.vocab,
+            d_model: j.d_model,
+            n_heads: j.n_heads,
+            n_layers: j.n_layers,
+            d_ff: j.d_ff,
+            rope_theta: j.rope_theta,
+            norm_eps: j.norm_eps,
+            train_batch: j.train_batch,
+            train_seq: j.train_seq,
+            eval_batch: j.eval_batch,
+            eval_seq: j.eval_seq,
+        }
+    }
+
+    /// The paper's LLaMA-7B dimensions — used by budget-math tests and the
+    /// cost model, never instantiated as tensors.
+    pub fn llama7b() -> ModelConfig {
+        ModelConfig {
+            vocab: 32000,
+            d_model: 4096,
+            n_heads: 32,
+            n_layers: 32,
+            d_ff: 11008,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            train_batch: 1,
+            train_seq: 2048,
+            eval_batch: 1,
+            eval_seq: 2048,
+        }
+    }
+
+    /// Mini reproduction config (must match `python/compile/config.py`).
+    pub fn mini() -> ModelConfig {
+        ModelConfig {
+            vocab: 320,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 8,
+            d_ff: 344,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            train_batch: 16,
+            train_seq: 64,
+            eval_batch: 32,
+            eval_seq: 128,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Parameters in one decoder module (the paper's "7 decomposable
+    /// matrices" plus the two norm gains).
+    pub fn params_per_block(&self) -> usize {
+        4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff + 2 * self.d_model
+    }
+
+    /// Total parameters (tied LM head).
+    pub fn n_params(&self) -> usize {
+        self.vocab * self.d_model + self.n_layers * self.params_per_block() + self.d_model
+    }
+
+    /// Fraction of parameters held by the decoder modules (paper: >96% on
+    /// LLaMA-7B, which justifies compressing only those).
+    pub fn decoder_fraction(&self) -> f64 {
+        (self.n_layers * self.params_per_block()) as f64 / self.n_params() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama7b_matches_paper_table1() {
+        let cfg = ModelConfig::llama7b();
+        let total = cfg.n_params() as f64;
+        assert!((total - 6.7e9).abs() / 6.7e9 < 0.05, "total={total}");
+        assert!(cfg.decoder_fraction() > 0.96);
+    }
+
+    #[test]
+    fn mini_head_dim() {
+        let cfg = ModelConfig::mini();
+        assert_eq!(cfg.head_dim(), 32);
+        assert_eq!(cfg.n_params(), 320 * 128 + 8 * cfg.params_per_block() + 128);
+    }
+}

@@ -1,0 +1,15 @@
+//! Model-side bookkeeping: configuration, the Rust mirror of the parameter
+//! schema, the in-memory parameter store, and #Params/#MACs accounting
+//! (the paper's Table 1 columns).
+
+pub mod config;
+pub mod macs;
+pub mod params;
+pub mod reference;
+pub mod schema;
+
+pub use config::ModelConfig;
+pub use macs::{CompressionAccounting, MacsReport};
+pub use params::ParamStore;
+pub use reference::{DecoderState, ReferenceModel};
+pub use schema::{block_field_names, maskable_names, param_names, param_shape, BLOCK_FIELDS, MASKABLE_FIELDS};

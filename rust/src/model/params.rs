@@ -1,0 +1,180 @@
+//! In-memory parameter store: named tensors in canonical schema order,
+//! checkpointable to `.rtz`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{load_rtz, save_rtz, Tensor, TensorMap};
+
+use super::config::ModelConfig;
+use super::schema;
+
+/// Ordered parameter collection for one model instance.
+///
+/// Compressed models are stored *densely* here (`W_eff = W1·W2`): the HLO
+/// graphs take weights as arguments with fixed shapes, so evaluation of a
+/// ROM/pruned model reuses the same executables, while [`super::macs`]
+/// accounts for the factored/pruned cost analytically. The low-rank factors
+/// themselves live in [`crate::rom::RomModel`].
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    cfg: ModelConfig,
+    names: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Load from an `.rtz` checkpoint, validating names and shapes.
+    pub fn load(cfg: &ModelConfig, path: impl AsRef<Path>) -> Result<ParamStore> {
+        let map = load_rtz(&path).with_context(|| format!("load params {}", path.as_ref().display()))?;
+        Self::from_map(cfg, map)
+    }
+
+    pub fn from_map(cfg: &ModelConfig, map: TensorMap) -> Result<ParamStore> {
+        let names = schema::param_names(cfg);
+        for name in &names {
+            let t = map
+                .get(name)
+                .with_context(|| format!("checkpoint missing parameter `{name}`"))?;
+            let want = schema::param_shape(cfg, name);
+            if t.shape() != want.as_slice() {
+                bail!("param `{name}`: shape {:?}, schema wants {:?}", t.shape(), want);
+            }
+        }
+        if map.len() != names.len() {
+            bail!("checkpoint has {} tensors, schema has {}", map.len(), names.len());
+        }
+        Ok(ParamStore { cfg: cfg.clone(), names, map })
+    }
+
+    /// All-zeros store with the schema's shapes (optimizer state init).
+    pub fn zeros(cfg: &ModelConfig) -> ParamStore {
+        let names = schema::param_names(cfg);
+        let map = names
+            .iter()
+            .map(|n| (n.clone(), Tensor::zeros_f32(&schema::param_shape(cfg, n))))
+            .collect();
+        ParamStore { cfg: cfg.clone(), names, map }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        save_rtz(path, &self.map)
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("no parameter `{name}`"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        if !self.map.contains_key(name) {
+            bail!("unknown parameter `{name}`");
+        }
+        let want = schema::param_shape(&self.cfg, name);
+        if t.shape() != want.as_slice() {
+            bail!("set `{name}`: shape {:?}, schema wants {:?}", t.shape(), want);
+        }
+        self.map.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    /// Replace from a flat output list in canonical order (train step).
+    pub fn set_flat(&mut self, flat: Vec<Tensor>) -> Result<()> {
+        if flat.len() != self.names.len() {
+            bail!("set_flat: {} tensors for {} params", flat.len(), self.names.len());
+        }
+        for (name, t) in self.names.clone().iter().zip(flat) {
+            self.set(name, t)?;
+        }
+        Ok(())
+    }
+
+    /// Borrow all parameters in canonical flat order (HLO marshalling).
+    pub fn flat(&self) -> Vec<&Tensor> {
+        self.names.iter().map(|n| &self.map[n]).collect()
+    }
+
+    /// Borrow the 9 parameters of block `i` in schema order.
+    pub fn block_flat(&self, i: usize) -> Vec<&Tensor> {
+        schema::block_field_names(i).iter().map(|n| &self.map[n]).collect()
+    }
+
+    /// Total scalar count (sanity vs `cfg.n_params()`).
+    pub fn n_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Frobenius distance to another store (test / convergence metric).
+    pub fn distance(&self, other: &ParamStore) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for name in &self.names {
+            let a = self.get(name)?.as_f32()?;
+            let b = other.get(name)?.as_f32()?;
+            for (x, y) in a.iter().zip(b) {
+                let d = (*x - *y) as f64;
+                acc += d * d;
+            }
+        }
+        Ok(acc.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() }
+    }
+
+    #[test]
+    fn zeros_matches_schema() {
+        let cfg = tiny_cfg();
+        let p = ParamStore::zeros(&cfg);
+        assert_eq!(p.n_params(), cfg.n_params());
+        assert_eq!(p.flat().len(), 2 + 9 * cfg.n_layers);
+        assert_eq!(p.block_flat(1).len(), 9);
+    }
+
+    #[test]
+    fn set_validates_shape() {
+        let cfg = tiny_cfg();
+        let mut p = ParamStore::zeros(&cfg);
+        assert!(p.set("blocks.0.wq", Tensor::zeros_f32(&[8, 8])).is_ok());
+        assert!(p.set("blocks.0.wq", Tensor::zeros_f32(&[4, 8])).is_err());
+        assert!(p.set("not_a_param", Tensor::zeros_f32(&[8, 8])).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = tiny_cfg();
+        let mut p = ParamStore::zeros(&cfg);
+        p.set("final_norm", Tensor::from_f32(&[8], vec![1.0; 8])).unwrap();
+        let dir = std::env::temp_dir().join(format!("params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.rtz");
+        p.save(&path).unwrap();
+        let q = ParamStore::load(&cfg, &path).unwrap();
+        assert_eq!(q.get("final_norm").unwrap().as_f32().unwrap(), &[1.0f32; 8][..]);
+        assert!((p.distance(&q).unwrap()).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_param_rejected_on_load() {
+        let cfg = tiny_cfg();
+        let p = ParamStore::zeros(&cfg);
+        let mut map: TensorMap = p.names().iter().map(|n| (n.clone(), p.get(n).unwrap().clone())).collect();
+        map.remove("blocks.1.wv");
+        assert!(ParamStore::from_map(&cfg, map).is_err());
+    }
+}

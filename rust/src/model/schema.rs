@@ -1,0 +1,129 @@
+//! Rust mirror of `python/compile/paramschema.py` — the canonical flat
+//! parameter ordering. A test asserts this generation rule agrees with the
+//! ordering recorded in `manifest.json`, so the two sides cannot drift.
+
+use super::config::ModelConfig;
+
+/// Per-block parameter fields, in canonical order.
+pub const BLOCK_FIELDS: [&str; 9] = [
+    "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+];
+
+/// The paper's 7 decomposable (and prunable) matrices per module.
+pub const MASKABLE_FIELDS: [&str; 7] = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// All parameter names in canonical flat order.
+pub fn param_names(cfg: &ModelConfig) -> Vec<String> {
+    let mut out = Vec::with_capacity(2 + 9 * cfg.n_layers);
+    out.push("embed".to_string());
+    for i in 0..cfg.n_layers {
+        for f in BLOCK_FIELDS {
+            out.push(format!("blocks.{i}.{f}"));
+        }
+    }
+    out.push("final_norm".to_string());
+    out
+}
+
+/// The 9 parameter names of block `i`, in schema order.
+pub fn block_field_names(i: usize) -> Vec<String> {
+    BLOCK_FIELDS.iter().map(|f| format!("blocks.{i}.{f}")).collect()
+}
+
+/// Names of the 7·L decomposable matrices, in flat order.
+pub fn maskable_names(cfg: &ModelConfig) -> Vec<String> {
+    param_names(cfg)
+        .into_iter()
+        .filter(|n| {
+            n.rsplit('.')
+                .next()
+                .map(|f| MASKABLE_FIELDS.contains(&f))
+                .unwrap_or(false)
+        })
+        .collect()
+}
+
+/// Shape of a parameter by name.
+pub fn param_shape(cfg: &ModelConfig, name: &str) -> Vec<usize> {
+    let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    match name {
+        "embed" => vec![v, d],
+        "final_norm" => vec![d],
+        _ => {
+            let field = name.rsplit('.').next().unwrap();
+            match field {
+                "attn_norm" | "ffn_norm" => vec![d],
+                "wq" | "wk" | "wv" | "wo" => vec![d, d],
+                "w_gate" | "w_up" => vec![f, d],
+                "w_down" => vec![d, f],
+                other => panic!("unknown param field {other}"),
+            }
+        }
+    }
+}
+
+/// Block index of a block-scoped parameter name (`blocks.3.wq` -> 3).
+pub fn block_index(name: &str) -> Option<usize> {
+    let mut parts = name.split('.');
+    if parts.next()? != "blocks" {
+        return None;
+    }
+    parts.next()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let cfg = ModelConfig::mini();
+        assert_eq!(param_names(&cfg).len(), 2 + 9 * cfg.n_layers);
+        assert_eq!(maskable_names(&cfg).len(), 7 * cfg.n_layers);
+    }
+
+    #[test]
+    fn order_starts_and_ends_right() {
+        let cfg = ModelConfig::mini();
+        let names = param_names(&cfg);
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "blocks.0.attn_norm");
+        assert_eq!(names[2], "blocks.0.wq");
+        assert_eq!(names.last().unwrap(), "final_norm");
+    }
+
+    #[test]
+    fn shapes() {
+        let cfg = ModelConfig::mini();
+        assert_eq!(param_shape(&cfg, "embed"), vec![320, 128]);
+        assert_eq!(param_shape(&cfg, "blocks.3.w_gate"), vec![344, 128]);
+        assert_eq!(param_shape(&cfg, "blocks.3.w_down"), vec![128, 344]);
+        assert_eq!(param_shape(&cfg, "final_norm"), vec![128]);
+    }
+
+    #[test]
+    fn block_index_parse() {
+        assert_eq!(block_index("blocks.5.wq"), Some(5));
+        assert_eq!(block_index("embed"), None);
+        assert_eq!(block_index("final_norm"), None);
+    }
+
+    #[test]
+    fn matches_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let m = crate::runtime::Manifest::load(&dir).unwrap();
+        let cfg = ModelConfig::from_manifest(&m.model_config);
+        assert_eq!(param_names(&cfg), m.param_names);
+        assert_eq!(maskable_names(&cfg), m.maskable_names);
+        // shapes of forward_logits args match the schema
+        let fl = m.entry("forward_logits").unwrap();
+        for (spec, name) in fl.args.iter().zip(&m.param_names) {
+            assert_eq!(&spec.name, name);
+            assert_eq!(spec.shape, param_shape(&cfg, name));
+        }
+    }
+}

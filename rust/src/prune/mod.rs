@@ -1,0 +1,409 @@
+//! Structured-pruning baseline — the LLM-Pruner comparator of Table 1.
+//!
+//! Prunes whole FFN channels and attention heads, group-consistently:
+//! removing FFN channel `c` zeroes row `c` of `w_gate`/`w_up` and column
+//! `c` of `w_down`; removing head `h` zeroes its row-slices of
+//! `wq`/`wk`/`wv` and the matching column-slice of `wo`. Importance is
+//! either weight magnitude or activation-aware (Wanda-style `|W|·‖X‖`,
+//! using the same calibration captures the ROM pass consumes). Masks keep
+//! HLO shapes static; `#Params`/`#MACs` are accounted from the kept
+//! channel/head counts. Recovery fine-tune runs through
+//! `train_step_masked` (see [`crate::train`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::CalibBatch;
+use crate::model::macs::{CompressionAccounting, LayerCompression};
+use crate::model::{schema, ModelConfig, ParamStore};
+use crate::rom::budget::ModuleSchedule;
+use crate::rom::covariance::valid_row_flags;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Channel/head importance criterion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Importance {
+    /// |W| row sums (no calibration data needed).
+    Magnitude,
+    /// Wanda-style: Σ_j |W_cj| · ‖X_j‖₂ over calibration inputs.
+    ActivationAware,
+}
+
+/// Result of a structured pruning pass.
+#[derive(Debug)]
+pub struct PrunedModel {
+    /// Parameters with pruned channels zeroed (dense shapes preserved).
+    pub params: ParamStore,
+    /// One f32 mask per maskable matrix, schema order (for fine-tuning).
+    pub masks: Vec<Tensor>,
+    /// Kept FFN channels / heads per pruned block.
+    pub kept_ffn: BTreeMap<usize, Vec<usize>>,
+    pub kept_heads: BTreeMap<usize, Vec<usize>>,
+    pub schedule: ModuleSchedule,
+}
+
+impl PrunedModel {
+    /// Accounting view (Table 1's #Params / #MACs columns).
+    pub fn accounting(&self, cfg: &ModelConfig) -> CompressionAccounting {
+        let mut acc = CompressionAccounting::dense();
+        for (&block, kept) in &self.kept_ffn {
+            let k = kept.len();
+            acc.set(&format!("blocks.{block}.w_gate"), LayerCompression::PrunedOut { kept_out: k });
+            acc.set(&format!("blocks.{block}.w_up"), LayerCompression::PrunedOut { kept_out: k });
+            acc.set(&format!("blocks.{block}.w_down"), LayerCompression::PrunedIn { kept_in: k });
+        }
+        for (&block, kept) in &self.kept_heads {
+            let hd = cfg.head_dim();
+            let k = kept.len() * hd;
+            acc.set(&format!("blocks.{block}.wq"), LayerCompression::PrunedOut { kept_out: k });
+            acc.set(&format!("blocks.{block}.wk"), LayerCompression::PrunedOut { kept_out: k });
+            acc.set(&format!("blocks.{block}.wv"), LayerCompression::PrunedOut { kept_out: k });
+            acc.set(&format!("blocks.{block}.wo"), LayerCompression::PrunedIn { kept_in: k });
+        }
+        acc
+    }
+}
+
+/// Structured pruner bound to one runtime (for activation capture).
+pub struct Pruner<'rt> {
+    runtime: &'rt Runtime,
+    cfg: ModelConfig,
+}
+
+impl<'rt> Pruner<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Pruner<'rt> {
+        let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
+        Pruner { runtime, cfg }
+    }
+
+    /// Prune the scheduled trailing modules to `schedule.module_budget` of
+    /// their parameters (keeping that fraction of channels & heads).
+    pub fn prune(
+        &self,
+        params: &ParamStore,
+        calib: &[CalibBatch],
+        schedule: ModuleSchedule,
+        importance: Importance,
+    ) -> Result<PrunedModel> {
+        if importance == Importance::ActivationAware && calib.is_empty() {
+            bail!("activation-aware pruning needs calibration batches");
+        }
+        let cfg = &self.cfg;
+        let keep_ffn = ((cfg.d_ff as f64) * schedule.module_budget).round().max(1.0) as usize;
+        let keep_heads =
+            ((cfg.n_heads as f64) * schedule.module_budget).round().max(1.0) as usize;
+
+        // input-column norms per block (only for activation-aware)
+        let xnorms = if importance == Importance::ActivationAware {
+            Some(self.input_norms(params, calib)?)
+        } else {
+            None
+        };
+
+        let mut out = params.clone();
+        let mut kept_ffn = BTreeMap::new();
+        let mut kept_heads = BTreeMap::new();
+
+        for block in 0..cfg.n_layers {
+            if !schedule.compresses(block) {
+                continue;
+            }
+            let norms = xnorms.as_ref().map(|m| &m[&block]);
+
+            // ---- FFN channels ----
+            let gate = params.get(&format!("blocks.{block}.w_gate"))?.as_f32()?;
+            let up = params.get(&format!("blocks.{block}.w_up"))?.as_f32()?;
+            let d = cfg.d_model;
+            let scores: Vec<f64> = (0..cfg.d_ff)
+                .map(|c| {
+                    let mut s = 0.0f64;
+                    for j in 0..d {
+                        let w = gate[c * d + j].abs() + up[c * d + j].abs();
+                        let x = norms.map(|n| n.x_ffn[j]).unwrap_or(1.0);
+                        s += w as f64 * x;
+                    }
+                    s
+                })
+                .collect();
+            let keep = top_k(&scores, keep_ffn);
+            kept_ffn.insert(block, keep.clone());
+
+            // ---- attention heads ----
+            let hd = cfg.head_dim();
+            let wq = params.get(&format!("blocks.{block}.wq"))?.as_f32()?;
+            let wk = params.get(&format!("blocks.{block}.wk"))?.as_f32()?;
+            let wv = params.get(&format!("blocks.{block}.wv"))?.as_f32()?;
+            let head_scores: Vec<f64> = (0..cfg.n_heads)
+                .map(|h| {
+                    let mut s = 0.0f64;
+                    for r in h * hd..(h + 1) * hd {
+                        for j in 0..d {
+                            let w = wq[r * d + j].abs() + wk[r * d + j].abs() + wv[r * d + j].abs();
+                            let x = norms.map(|n| n.x_attn[j]).unwrap_or(1.0);
+                            s += w as f64 * x;
+                        }
+                    }
+                    s
+                })
+                .collect();
+            let keep_h = top_k(&head_scores, keep_heads);
+            kept_heads.insert(block, keep_h.clone());
+
+            self.apply_masks(&mut out, block, &keep, &keep_h)?;
+        }
+
+        let masks = build_masks(cfg, &kept_ffn, &kept_heads);
+        Ok(PrunedModel { params: out, masks, kept_ffn, kept_heads, schedule })
+    }
+
+    /// Zero pruned rows/cols in the stored weights.
+    fn apply_masks(
+        &self,
+        params: &mut ParamStore,
+        block: usize,
+        keep_ffn: &[usize],
+        keep_heads: &[usize],
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let (d, f, hd) = (cfg.d_model, cfg.d_ff, cfg.head_dim());
+        let ffn_keep: Vec<bool> = membership(f, keep_ffn);
+        let head_keep: Vec<bool> = membership(cfg.n_heads, keep_heads);
+
+        for field in ["w_gate", "w_up"] {
+            let name = format!("blocks.{block}.{field}");
+            let mut t = params.get(&name)?.clone();
+            let data = t.as_f32_mut()?;
+            for c in 0..f {
+                if !ffn_keep[c] {
+                    data[c * d..(c + 1) * d].fill(0.0);
+                }
+            }
+            params.set(&name, t)?;
+        }
+        {
+            let name = format!("blocks.{block}.w_down");
+            let mut t = params.get(&name)?.clone();
+            let data = t.as_f32_mut()?;
+            for r in 0..d {
+                for c in 0..f {
+                    if !ffn_keep[c] {
+                        data[r * f + c] = 0.0;
+                    }
+                }
+            }
+            params.set(&name, t)?;
+        }
+        for field in ["wq", "wk", "wv"] {
+            let name = format!("blocks.{block}.{field}");
+            let mut t = params.get(&name)?.clone();
+            let data = t.as_f32_mut()?;
+            for h in 0..cfg.n_heads {
+                if !head_keep[h] {
+                    data[h * hd * d..(h + 1) * hd * d].fill(0.0);
+                }
+            }
+            params.set(&name, t)?;
+        }
+        {
+            let name = format!("blocks.{block}.wo");
+            let mut t = params.get(&name)?.clone();
+            let data = t.as_f32_mut()?;
+            for r in 0..d {
+                for h in 0..cfg.n_heads {
+                    if !head_keep[h] {
+                        data[r * d + h * hd..r * d + (h + 1) * hd].fill(0.0);
+                    }
+                }
+            }
+            params.set(&name, t)?;
+        }
+        Ok(())
+    }
+
+    /// ‖X_j‖₂ of the calibration inputs feeding each matrix family.
+    fn input_norms(
+        &self,
+        params: &ParamStore,
+        calib: &[CalibBatch],
+    ) -> Result<BTreeMap<usize, InputNorms>> {
+        let cfg = &self.cfg;
+        let (eb, es) = (cfg.eval_batch, cfg.eval_seq);
+        let mut out = BTreeMap::new();
+        // stream hidden states once, reusing the capture graph
+        let embed = params.get("embed")?.clone();
+        let mut hidden: Vec<Tensor> = Vec::new();
+        for b in calib {
+            let tokens = Tensor::from_i32(&[eb, es], b.tokens.clone());
+            let o = self.runtime.execute("embed_fwd", &[&embed, &tokens])?;
+            hidden.push(o.into_iter().next().unwrap());
+        }
+        let cap_names = self.runtime.manifest().capture_names.clone();
+        let idx_of = |n: &str| cap_names.iter().position(|c| c == n).map(|i| i + 1);
+        let (ix_attn, ix_ffn) = (
+            idx_of("x_attn").context("x_attn capture")?,
+            idx_of("x_ffn").context("x_ffn capture")?,
+        );
+
+        for block in 0..cfg.n_layers {
+            let mut attn_sq = vec![0.0f64; cfg.d_model];
+            let mut ffn_sq = vec![0.0f64; cfg.d_model];
+            for (bi, cb) in calib.iter().enumerate() {
+                let mut args = params.block_flat(block);
+                args.push(&hidden[bi]);
+                let outs = self.runtime.execute("block_capture", &args)?;
+                let flags = valid_row_flags(cb.batch, cb.seq, &cb.valid);
+                accumulate_sq(&outs[ix_attn], &flags, &mut attn_sq)?;
+                accumulate_sq(&outs[ix_ffn], &flags, &mut ffn_sq)?;
+                hidden[bi] = outs.into_iter().next().unwrap();
+            }
+            out.insert(
+                block,
+                InputNorms {
+                    x_attn: attn_sq.iter().map(|x| x.sqrt()).collect(),
+                    x_ffn: ffn_sq.iter().map(|x| x.sqrt()).collect(),
+                },
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct InputNorms {
+    x_attn: Vec<f64>,
+    x_ffn: Vec<f64>,
+}
+
+fn accumulate_sq(cap: &Tensor, flags: &[bool], acc: &mut [f64]) -> Result<()> {
+    let d = *cap.shape().last().unwrap();
+    let data = cap.as_f32()?;
+    for (row, ok) in flags.iter().enumerate() {
+        if !ok {
+            continue;
+        }
+        let base = row * d;
+        for j in 0..d {
+            acc[j] += (data[base + j] as f64).powi(2);
+        }
+    }
+    Ok(())
+}
+
+/// Indices of the k largest scores, ascending order.
+fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut keep: Vec<usize> = idx.into_iter().take(k).collect();
+    keep.sort_unstable();
+    keep
+}
+
+fn membership(n: usize, keep: &[usize]) -> Vec<bool> {
+    let mut m = vec![false; n];
+    for &i in keep {
+        m[i] = true;
+    }
+    m
+}
+
+/// Build the per-matrix masks (1 = kept) in maskable schema order.
+fn build_masks(
+    cfg: &ModelConfig,
+    kept_ffn: &BTreeMap<usize, Vec<usize>>,
+    kept_heads: &BTreeMap<usize, Vec<usize>>,
+) -> Vec<Tensor> {
+    let (d, f, hd) = (cfg.d_model, cfg.d_ff, cfg.head_dim());
+    schema::maskable_names(cfg)
+        .iter()
+        .map(|name| {
+            let block = schema::block_index(name).unwrap();
+            let field = name.rsplit('.').next().unwrap();
+            let shape = schema::param_shape(cfg, name);
+            let mut mask = vec![1.0f32; shape.iter().product()];
+            if let (Some(keep), true) = (kept_ffn.get(&block), matches!(field, "w_gate" | "w_up" | "w_down")) {
+                let keep = membership(f, keep);
+                match field {
+                    "w_gate" | "w_up" => {
+                        for c in 0..f {
+                            if !keep[c] {
+                                mask[c * d..(c + 1) * d].fill(0.0);
+                            }
+                        }
+                    }
+                    _ => {
+                        for r in 0..d {
+                            for c in 0..f {
+                                if !keep[c] {
+                                    mask[r * f + c] = 0.0;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if let (Some(keep), true) = (kept_heads.get(&block), matches!(field, "wq" | "wk" | "wv" | "wo")) {
+                let keep = membership(cfg.n_heads, keep);
+                match field {
+                    "wq" | "wk" | "wv" => {
+                        for h in 0..cfg.n_heads {
+                            if !keep[h] {
+                                mask[h * hd * d..(h + 1) * hd * d].fill(0.0);
+                            }
+                        }
+                    }
+                    _ => {
+                        for r in 0..d {
+                            for h in 0..cfg.n_heads {
+                                if !keep[h] {
+                                    mask[r * d + h * hd..r * d + (h + 1) * hd].fill(0.0);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Tensor::from_f32(&shape, mask)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_selects_largest() {
+        let scores = vec![0.1, 5.0, 3.0, 4.0, 0.2];
+        assert_eq!(top_k(&scores, 3), vec![1, 2, 3]);
+        assert_eq!(top_k(&scores, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn membership_flags() {
+        assert_eq!(membership(4, &[0, 2]), vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn masks_match_kept_sets() {
+        let cfg = ModelConfig { n_layers: 2, ..ModelConfig::mini() };
+        let mut kept_ffn = BTreeMap::new();
+        kept_ffn.insert(1usize, (0..100).collect::<Vec<_>>());
+        let mut kept_heads = BTreeMap::new();
+        kept_heads.insert(1usize, vec![0, 2]);
+        let masks = build_masks(&cfg, &kept_ffn, &kept_heads);
+        assert_eq!(masks.len(), 14);
+        // block 0 untouched: all ones
+        let m0 = masks[0].as_f32().unwrap();
+        assert!(m0.iter().all(|&x| x == 1.0));
+        // block 1 w_gate (index 7+4=11? order: per block wq wk wv wo w_gate w_up w_down)
+        let m_gate = masks[7 + 4].as_f32().unwrap();
+        let kept: f32 = m_gate.iter().sum();
+        assert_eq!(kept as usize, 100 * cfg.d_model);
+        // block 1 wq: two of four heads kept
+        let m_q = masks[7].as_f32().unwrap();
+        let kept_q: f32 = m_q.iter().sum();
+        assert_eq!(kept_q as usize, 2 * cfg.head_dim() * cfg.d_model * cfg.d_model / cfg.d_model);
+    }
+}

@@ -1,0 +1,175 @@
+//! Budget allocation (paper §2.1): global budget -> (how many trailing
+//! modules to compress, at what per-module budget, with what ranks).
+//!
+//! Rank rule: a dense `d2×d1` layer becomes factors of `r(d1+d2)` params,
+//! so a module budget `b` maps to `r = ⌊b·d1·d2/(d1+d2)⌋` per matrix.
+//! This reproduces the paper's published LLaMA-7B ranks exactly (attn
+//! {1228, ·, 675}, ffn {1791, 1373, 985}) — the single exception, attn@0.46
+//! printed as 954 instead of 942, corresponds to b=0.466 and is documented
+//! as a paper rounding anomaly in the tests.
+
+use crate::model::ModelConfig;
+
+/// Rank of the factored pair for a dense `d_out × d_in` layer at module
+/// budget `b` (fraction of the dense parameter count).
+pub fn rank_for_budget(d_out: usize, d_in: usize, b: f64) -> usize {
+    assert!(b > 0.0 && b <= 1.0, "module budget {b} out of (0, 1]");
+    let r = (b * (d_out * d_in) as f64 / (d_out + d_in) as f64) as usize;
+    r.max(1).min(d_out.min(d_in))
+}
+
+/// Which trailing modules get compressed, and how hard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModuleSchedule {
+    /// First compressed block (blocks `start_block..n_layers`).
+    pub start_block: usize,
+    /// Per-module parameter budget applied uniformly to the 7 matrices.
+    pub module_budget: f64,
+}
+
+impl ModuleSchedule {
+    pub fn n_compressed(&self, cfg: &ModelConfig) -> usize {
+        cfg.n_layers - self.start_block
+    }
+
+    pub fn compresses(&self, block: usize) -> bool {
+        block >= self.start_block
+    }
+
+    /// Achieved global budget (compressed params / dense params), counting
+    /// the whole model (embeddings and norms stay dense).
+    pub fn global_budget(&self, cfg: &ModelConfig) -> f64 {
+        let dense = cfg.n_params() as f64;
+        let mut after = dense;
+        for b in self.start_block..cfg.n_layers {
+            for (_, o, i) in crate::model::macs::block_matrices(cfg, b) {
+                let r = rank_for_budget(o, i, self.module_budget);
+                after -= (o * i) as f64;
+                after += (r * (o + i)) as f64;
+            }
+        }
+        after / dense
+    }
+}
+
+/// Solve the per-module budget needed to hit `global` when compressing the
+/// last `k` modules. Returns `None` when infeasible (`b` would fall outside
+/// (0, 1]) — e.g. asking 50% globally from only 2 modules.
+pub fn solve_module_budget(cfg: &ModelConfig, k: usize, global: f64) -> Option<f64> {
+    assert!(k <= cfg.n_layers);
+    let dense = cfg.n_params() as f64;
+    // matrix params in the compressed span
+    let mut span = 0.0;
+    for b in (cfg.n_layers - k)..cfg.n_layers {
+        for (_, o, i) in crate::model::macs::block_matrices(cfg, b) {
+            span += (o * i) as f64;
+        }
+    }
+    if span == 0.0 {
+        return None;
+    }
+    // dense - span + b·span = global·dense
+    let b = (global * dense - (dense - span)) / span;
+    (b > 0.0 && b <= 1.0).then_some(b)
+}
+
+/// The paper's empirical presets, expressed as module fractions so they
+/// scale to any depth: 90% -> last ¼ at 0.60, 80% -> last ⅜ at 0.46,
+/// 50% -> last ¾ at 0.33 (on LLaMA-7B: 8/12/24 of 32 modules).
+pub fn paper_preset(cfg: &ModelConfig, global: f64) -> ModuleSchedule {
+    let l = cfg.n_layers as f64;
+    let (frac, b) = if global >= 0.85 {
+        (0.25, 0.60)
+    } else if global >= 0.65 {
+        (0.375, 0.46)
+    } else {
+        (0.75, 0.33)
+    };
+    let k = (l * frac).round() as usize;
+    ModuleSchedule { start_block: cfg.n_layers - k, module_budget: b }
+}
+
+/// All feasible `(k, module_budget)` pairs for a global budget — the
+/// search space of the paper's §2.1 empirical selection.
+pub fn candidates(cfg: &ModelConfig, global: f64) -> Vec<ModuleSchedule> {
+    (1..=cfg.n_layers)
+        .filter_map(|k| {
+            solve_module_budget(cfg, k, global).map(|b| ModuleSchedule {
+                start_block: cfg.n_layers - k,
+                module_budget: b,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_ranks_llama7b() {
+        // §2.1: attn 4096×4096, ffn 11008×4096
+        assert_eq!(rank_for_budget(4096, 4096, 0.60), 1228);
+        assert_eq!(rank_for_budget(4096, 4096, 0.33), 675);
+        assert_eq!(rank_for_budget(11008, 4096, 0.60), 1791);
+        assert_eq!(rank_for_budget(11008, 4096, 0.46), 1373);
+        assert_eq!(rank_for_budget(11008, 4096, 0.33), 985);
+        // the paper prints 954 for attn@0.46; the formula gives 942, and
+        // 954 corresponds to b = 0.466 — documented anomaly:
+        assert_eq!(rank_for_budget(4096, 4096, 0.46), 942);
+        assert_eq!(rank_for_budget(4096, 4096, 0.466), 954);
+    }
+
+    #[test]
+    fn rank_bounds() {
+        assert_eq!(rank_for_budget(8, 8, 1e-9), 1); // floor at 1
+        assert!(rank_for_budget(64, 64, 1.0) <= 64); // cap at min dim
+    }
+
+    #[test]
+    fn paper_presets_hit_global_budgets_llama7b() {
+        let cfg = ModelConfig::llama7b();
+        for (g, want_k) in [(0.9, 8), (0.8, 12), (0.5, 24)] {
+            let s = paper_preset(&cfg, g);
+            assert_eq!(s.n_compressed(&cfg), want_k, "g={g}");
+            let achieved = s.global_budget(&cfg);
+            assert!((achieved - g).abs() < 0.03, "g={g}: achieved {achieved}");
+        }
+    }
+
+    #[test]
+    fn solve_inverts_global_budget() {
+        let cfg = ModelConfig::mini();
+        for g in [0.9, 0.8, 0.6, 0.5] {
+            for k in 2..=cfg.n_layers {
+                if let Some(b) = solve_module_budget(&cfg, k, g) {
+                    let s = ModuleSchedule { start_block: cfg.n_layers - k, module_budget: b };
+                    let achieved = s.global_budget(&cfg);
+                    // rank floor() quantization costs <2%
+                    assert!((achieved - g).abs() < 0.02, "g={g} k={k}: {achieved}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_budgets_rejected() {
+        let cfg = ModelConfig::mini();
+        // 50% global from one module is impossible
+        assert!(solve_module_budget(&cfg, 1, 0.5).is_none());
+        // ~100% from anything is fine (b -> 1)
+        assert!(solve_module_budget(&cfg, 4, 0.999).is_some());
+    }
+
+    #[test]
+    fn candidates_nonempty_and_sorted_by_k() {
+        let cfg = ModelConfig::mini();
+        let cs = candidates(&cfg, 0.8);
+        assert!(!cs.is_empty());
+        for w in cs.windows(2) {
+            assert!(w[0].start_block > w[1].start_block);
+            // deeper compression span -> gentler per-module budget
+            assert!(w[0].module_budget <= w[1].module_budget + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Streaming covariance accumulation over calibration chunks.
+//!
+//! The paper computes the covariance of each layer's output over one large
+//! calibration batch; HLO shapes are static, so we stream fixed-size chunks
+//! and sum their Gram matrices (exact — Gram is additive over row blocks).
+//! Rows from padded positions are zeroed before accumulation so they
+//! contribute nothing (matching the Pallas kernel's row-masking).
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Matrix;
+use crate::tensor::Tensor;
+
+/// Accumulates `C = Σ_chunks Yᵀ Y` in f64, plus the sample count.
+#[derive(Debug, Clone)]
+pub struct CovarianceAccumulator {
+    dim: usize,
+    acc: Matrix,
+    samples: usize,
+}
+
+impl CovarianceAccumulator {
+    pub fn new(dim: usize) -> Self {
+        CovarianceAccumulator { dim, acc: Matrix::zeros(dim, dim), samples: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Add a `(n, d)` f32 chunk computed in Rust (the pure-CPU path).
+    /// `valid_rows[i] == false` rows are skipped.
+    pub fn update_rows(&mut self, rows: &[f32], n: usize, valid_rows: Option<&[bool]>) -> Result<()> {
+        if rows.len() != n * self.dim {
+            bail!("update_rows: {} values for {}x{}", rows.len(), n, self.dim);
+        }
+        let d = self.dim;
+        for i in 0..n {
+            if let Some(v) = valid_rows {
+                if !v[i] {
+                    continue;
+                }
+            }
+            let row = &rows[i * d..(i + 1) * d];
+            self.samples += 1;
+            // rank-1 update on the upper triangle
+            for a in 0..d {
+                let ra = row[a] as f64;
+                if ra == 0.0 {
+                    continue;
+                }
+                let dst = self.acc.row_mut(a);
+                for b in a..d {
+                    dst[b] += ra * row[b] as f64;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Add a pre-computed `(d, d)` Gram tensor (output of the Pallas
+    /// covariance kernel). `samples` is the number of valid rows that went
+    /// into it (caller zeroed the invalid ones beforehand).
+    pub fn add_gram(&mut self, gram: &Tensor, samples: usize) -> Result<()> {
+        let shape = gram.shape();
+        if shape != [self.dim, self.dim] {
+            bail!("add_gram: shape {:?}, want [{}, {}]", shape, self.dim, self.dim);
+        }
+        let data = gram.as_f32()?;
+        // kernel returns the full matrix; fold into the upper triangle
+        for a in 0..self.dim {
+            for b in a..self.dim {
+                self.acc[(a, b)] += data[a * self.dim + b] as f64;
+            }
+        }
+        self.samples += samples;
+        Ok(())
+    }
+
+    /// Merge another accumulator (worker-pool reduction).
+    pub fn merge(&mut self, other: &CovarianceAccumulator) -> Result<()> {
+        if other.dim != self.dim {
+            bail!("merge: dim {} vs {}", other.dim, self.dim);
+        }
+        self.acc = self.acc.add(&other.acc);
+        self.samples += other.samples;
+        Ok(())
+    }
+
+    /// Finalized symmetric covariance (upper triangle mirrored; optionally
+    /// normalized by the sample count — normalization does not change the
+    /// eigenvectors, but keeps magnitudes comparable across batch sizes).
+    pub fn finalize(&self, normalize: bool) -> Matrix {
+        let d = self.dim;
+        let mut out = Matrix::zeros(d, d);
+        let scale = if normalize && self.samples > 0 { 1.0 / self.samples as f64 } else { 1.0 };
+        for a in 0..d {
+            for b in a..d {
+                let v = self.acc[(a, b)] * scale;
+                out[(a, b)] = v;
+                out[(b, a)] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Zero the invalid rows of a flattened `(n, d)` f32 buffer in place.
+/// `valid[b]` is the number of leading valid positions in sample `b` of a
+/// `(batch, seq, d)` capture; row `b·seq + t` is valid iff `t < valid[b]`.
+pub fn zero_invalid_rows(data: &mut [f32], batch: usize, seq: usize, d: usize, valid: &[usize]) {
+    assert_eq!(data.len(), batch * seq * d);
+    assert_eq!(valid.len(), batch);
+    for b in 0..batch {
+        for t in valid[b]..seq {
+            let row = (b * seq + t) * d;
+            data[row..row + d].fill(0.0);
+        }
+    }
+}
+
+/// Row-validity flags for a `(batch, seq)` capture (Rust-path filtering).
+pub fn valid_row_flags(batch: usize, seq: usize, valid: &[usize]) -> Vec<bool> {
+    let mut flags = vec![false; batch * seq];
+    for b in 0..batch {
+        for t in 0..valid[b].min(seq) {
+            flags[b * seq + t] = true;
+        }
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_direct_gram() {
+        let mut rng = Rng::new(0);
+        let (n, d) = (40, 8);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut acc = CovarianceAccumulator::new(d);
+        acc.update_rows(&rows, n, None).unwrap();
+        let got = acc.finalize(false);
+        let y = Matrix::from_f32(n, d, &rows);
+        let want = crate::linalg::matmul(&y.transpose(), &y);
+        assert!(got.sub(&want).max_abs() < 1e-6);
+        assert_eq!(acc.samples(), n);
+    }
+
+    #[test]
+    fn chunked_equals_whole() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (64, 6);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut whole = CovarianceAccumulator::new(d);
+        whole.update_rows(&rows, n, None).unwrap();
+        let mut chunked = CovarianceAccumulator::new(d);
+        chunked.update_rows(&rows[..32 * d], 32, None).unwrap();
+        chunked.update_rows(&rows[32 * d..], 32, None).unwrap();
+        assert!(whole.finalize(false).sub(&chunked.finalize(false)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_rows_excluded() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (10, 4);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let valid: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+        let mut filtered = CovarianceAccumulator::new(d);
+        filtered.update_rows(&rows, n, Some(&valid)).unwrap();
+        // manually keep even rows
+        let kept: Vec<f32> = (0..n)
+            .filter(|i| i % 2 == 0)
+            .flat_map(|i| rows[i * d..(i + 1) * d].to_vec())
+            .collect();
+        let mut manual = CovarianceAccumulator::new(d);
+        manual.update_rows(&kept, n / 2, None).unwrap();
+        assert!(filtered.finalize(false).sub(&manual.finalize(false)).max_abs() < 1e-9);
+        assert_eq!(filtered.samples(), 5);
+    }
+
+    #[test]
+    fn add_gram_equals_update_rows() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (20, 5);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let y = Matrix::from_f32(n, d, &rows);
+        let gram64 = crate::linalg::matmul(&y.transpose(), &y);
+        let gram = Tensor::from_f32(&[d, d], gram64.to_f32());
+        let mut a = CovarianceAccumulator::new(d);
+        a.add_gram(&gram, n).unwrap();
+        let mut b = CovarianceAccumulator::new(d);
+        b.update_rows(&rows, n, None).unwrap();
+        assert!(a.finalize(false).sub(&b.finalize(false)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn normalization_preserves_eigenvectors() {
+        let mut rng = Rng::new(4);
+        let (n, d) = (30, 6);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut acc = CovarianceAccumulator::new(d);
+        acc.update_rows(&rows, n, None).unwrap();
+        let raw = crate::linalg::eigh(&acc.finalize(false)).unwrap();
+        let nrm = crate::linalg::eigh(&acc.finalize(true)).unwrap();
+        for k in 0..d {
+            let dot: f64 = raw.vectors.row(k).iter().zip(nrm.vectors.row(k)).map(|(a, b)| a * b).sum();
+            assert!(dot.abs() > 1.0 - 1e-8, "component {k}");
+        }
+    }
+
+    #[test]
+    fn zero_invalid_rows_masks_correctly() {
+        let (batch, seq, d) = (2, 3, 2);
+        let mut data: Vec<f32> = (0..batch * seq * d).map(|x| x as f32 + 1.0).collect();
+        zero_invalid_rows(&mut data, batch, seq, d, &[2, 0]);
+        // sample 0: t∈{0,1} kept, t=2 zeroed; sample 1: all zeroed
+        assert!(data[0] != 0.0 && data[d] != 0.0);
+        assert_eq!(&data[2 * d..3 * d], &[0.0, 0.0][..]);
+        for t in 0..seq {
+            let row = (seq + t) * d;
+            assert_eq!(&data[row..row + d], &[0.0, 0.0][..]);
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_pass() {
+        let mut rng = Rng::new(5);
+        let (n, d) = (24, 4);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut a = CovarianceAccumulator::new(d);
+        a.update_rows(&rows[..12 * d], 12, None).unwrap();
+        let mut b = CovarianceAccumulator::new(d);
+        b.update_rows(&rows[12 * d..], 12, None).unwrap();
+        a.merge(&b).unwrap();
+        let mut whole = CovarianceAccumulator::new(d);
+        whole.update_rows(&rows, n, None).unwrap();
+        assert!(a.finalize(false).sub(&whole.finalize(false)).max_abs() < 1e-9);
+    }
+}

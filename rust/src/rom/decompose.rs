@@ -1,0 +1,218 @@
+//! ROM re-parameterization (paper §2): principal components of the layer
+//! output covariance -> low-rank factors `W1 = V_rᵀ`, `W2 = V_r W`.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{eigh, matmul, EigenDecomposition, Matrix};
+
+/// Low-rank factors of one decomposed layer.
+#[derive(Debug, Clone)]
+pub struct RomFactors {
+    /// `V_rᵀ ∈ R^{d2×r}` — projection back to the output space.
+    pub w1: Matrix,
+    /// `V_r W ∈ R^{r×d1}` — compressed layer.
+    pub w2: Matrix,
+    pub rank: usize,
+    /// Fraction of covariance eigenvalue mass captured by the top-r modes.
+    pub energy: f64,
+}
+
+impl RomFactors {
+    /// Effective dense weight `W1 W2 = V_rᵀ V_r W` (same shape as the
+    /// original — used to run the compressed model through the unmodified
+    /// HLO graphs; numerically identical to executing the factored form).
+    pub fn effective_weight(&self) -> Matrix {
+        matmul(&self.w1, &self.w2)
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.w1.rows()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.w2.cols()
+    }
+
+    /// Parameter count of the factored pair.
+    pub fn n_params(&self) -> usize {
+        self.rank * (self.d_out() + self.d_in())
+    }
+}
+
+/// Decompose `w` (d2×d1) given the covariance of its calibration outputs
+/// (d2×d2) and a target rank.
+pub fn decompose_weight(w: &Matrix, cov: &Matrix, rank: usize) -> Result<RomFactors> {
+    let d2 = w.rows();
+    if cov.rows() != d2 || cov.cols() != d2 {
+        bail!("covariance {}x{} does not match d2={d2}", cov.rows(), cov.cols());
+    }
+    if rank == 0 || rank > d2 {
+        bail!("rank {rank} out of [1, {d2}]");
+    }
+    let dec = eigh(cov)?;
+    Ok(factors_from_eigen(w, &dec, rank))
+}
+
+/// Same, reusing an existing eigendecomposition (rank sweeps).
+pub fn factors_from_eigen(w: &Matrix, dec: &EigenDecomposition, rank: usize) -> RomFactors {
+    let vr = dec.vectors.top_rows(rank); // (r, d2)
+    let w1 = vr.transpose(); // (d2, r)
+    let w2 = matmul(&vr, w); // (r, d1)
+    let total: f64 = dec.values.iter().map(|l| l.max(0.0)).sum();
+    let kept: f64 = dec.values.iter().take(rank).map(|l| l.max(0.0)).sum();
+    let energy = if total > 0.0 { kept / total } else { 1.0 };
+    RomFactors { w1, w2, rank, energy }
+}
+
+/// Smallest rank capturing at least `energy` of the eigenvalue mass — the
+/// energy-based alternative allocator (extension; the paper uses budgets).
+pub fn rank_for_energy(dec: &EigenDecomposition, energy: f64) -> usize {
+    assert!((0.0..=1.0).contains(&energy));
+    let total: f64 = dec.values.iter().map(|l| l.max(0.0)).sum();
+    if total == 0.0 {
+        return 1;
+    }
+    let mut acc = 0.0;
+    for (i, l) in dec.values.iter().enumerate() {
+        acc += l.max(0.0);
+        if acc / total >= energy {
+            return i + 1;
+        }
+    }
+    dec.values.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_transb_f32;
+    use crate::util::Rng;
+
+    /// Build (W, X, Y=XWᵀ, cov(Y)) with X low-rank so ROM can be lossless.
+    fn setup(d1: usize, d2: usize, n: usize, x_rank: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::from_fn(d2, d1, |_, _| rng.normal() * 0.1);
+        // X = A B with A (n, x_rank), B (x_rank, d1)
+        let a = Matrix::from_fn(n, x_rank, |_, _| rng.normal());
+        let b = Matrix::from_fn(x_rank, d1, |_, _| rng.normal());
+        let x = matmul(&a, &b);
+        let y = matmul(&x, &w.transpose());
+        let cov = matmul(&y.transpose(), &y);
+        (w, x, cov)
+    }
+
+    #[test]
+    fn factor_shapes_and_params() {
+        let (w, _x, cov) = setup(12, 8, 64, 8, 0);
+        let f = decompose_weight(&w, &cov, 3).unwrap();
+        assert_eq!(f.w1.rows(), 8);
+        assert_eq!(f.w1.cols(), 3);
+        assert_eq!(f.w2.rows(), 3);
+        assert_eq!(f.w2.cols(), 12);
+        assert_eq!(f.n_params(), 3 * (8 + 12));
+        assert_eq!(f.effective_weight().rows(), 8);
+    }
+
+    #[test]
+    fn full_rank_is_exact() {
+        let (w, _x, cov) = setup(10, 6, 50, 6, 1);
+        let f = decompose_weight(&w, &cov, 6).unwrap();
+        // V is orthonormal at full rank -> VᵀV = I -> W_eff = W
+        assert!(f.effective_weight().sub(&w).max_abs() < 1e-8);
+        assert!((f.energy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lossless_when_activations_lowrank() {
+        // If Y lives in an r-dim subspace, rank-r ROM reproduces Y exactly
+        // even though W_eff != W: that is the whole point of decomposing in
+        // the *feature* space rather than the weight space.
+        let (w, x, cov) = setup(16, 12, 80, 4, 2);
+        let f = decompose_weight(&w, &cov, 4).unwrap();
+        let y = matmul(&x, &w.transpose());
+        let y_rom = matmul(&x, &f.effective_weight().transpose());
+        assert!(y_rom.sub(&y).max_abs() < 1e-6, "err {}", y_rom.sub(&y).max_abs());
+        assert!(f.energy > 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_rank() {
+        let (w, x, cov) = setup(14, 10, 120, 10, 3);
+        let y = matmul(&x, &w.transpose());
+        let dec = eigh(&cov).unwrap();
+        let mut prev = f64::INFINITY;
+        for rank in [1, 2, 4, 6, 8, 10] {
+            let f = factors_from_eigen(&w, &dec, rank);
+            let err = matmul(&x, &f.effective_weight().transpose()).sub(&y).frobenius_norm();
+            assert!(err <= prev + 1e-9, "rank {rank}: {err} > {prev}");
+            prev = err;
+        }
+        assert!(prev < 1e-6); // full rank exact
+    }
+
+    #[test]
+    fn rom_beats_weight_svd_on_feature_metric() {
+        // ROM minimizes output error under the calibration distribution;
+        // truncating W's own SVD ignores the data. With anisotropic X, ROM
+        // must win on ‖Y - Ŷ‖.
+        let mut rng = Rng::new(4);
+        let (d1, d2, n, r) = (16, 12, 200, 3);
+        let w = Matrix::from_fn(d2, d1, |_, _| rng.normal() * 0.1);
+        // X strongly anisotropic: a few dominant directions
+        let mut x = Matrix::zeros(n, d1);
+        for i in 0..n {
+            for j in 0..d1 {
+                let scale = if j < 3 { 10.0 } else { 0.1 };
+                x[(i, j)] = rng.normal() * scale;
+            }
+        }
+        let y = matmul(&x, &w.transpose());
+        let cov = matmul(&y.transpose(), &y);
+        let rom = decompose_weight(&w, &cov, r).unwrap();
+        let rom_err = matmul(&x, &rom.effective_weight().transpose()).sub(&y).frobenius_norm();
+
+        // weight-space truncation: top-r left singular vectors of W == top
+        // eigenvectors of W Wᵀ
+        let wwt = matmul(&w, &w.transpose());
+        let dec = eigh(&wwt).unwrap();
+        let svd = factors_from_eigen(&w, &dec, r);
+        let svd_err = matmul(&x, &svd.effective_weight().transpose()).sub(&y).frobenius_norm();
+        assert!(rom_err < svd_err, "rom {rom_err} vs svd {svd_err}");
+    }
+
+    #[test]
+    fn energy_rank_selection() {
+        let (_w, _x, cov) = setup(10, 8, 60, 2, 5);
+        let dec = eigh(&cov).unwrap();
+        let r = rank_for_energy(&dec, 0.999);
+        assert!(r <= 3, "low-rank data should need ~2 modes, got {r}");
+        assert_eq!(rank_for_energy(&dec, 0.0), 1);
+        assert_eq!(rank_for_energy(&dec, 1.0) <= 8, true);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let (w, _x, cov) = setup(6, 4, 20, 4, 6);
+        assert!(decompose_weight(&w, &cov, 0).is_err());
+        assert!(decompose_weight(&w, &cov, 5).is_err());
+        let bad_cov = Matrix::zeros(3, 3);
+        assert!(decompose_weight(&w, &bad_cov, 2).is_err());
+    }
+
+    #[test]
+    fn f32_consistency_with_hot_path() {
+        // factored apply in f32 (runtime path) ≈ f64 reference
+        let (w, x, cov) = setup(8, 6, 40, 6, 7);
+        let f = decompose_weight(&w, &cov, 3).unwrap();
+        let weff = f.effective_weight();
+        let x32: Vec<f32> = x.to_f32();
+        let w32: Vec<f32> = weff.to_f32();
+        let y32 = matmul_transb_f32(&x32, &w32, x.rows(), x.cols(), weff.rows());
+        let y64 = matmul(&x, &weff.transpose());
+        for i in 0..x.rows() {
+            for j in 0..weff.rows() {
+                assert!((y32[i * weff.rows() + j] as f64 - y64[(i, j)]).abs() < 1e-3);
+            }
+        }
+    }
+}

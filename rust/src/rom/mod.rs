@@ -1,0 +1,21 @@
+//! LLM-ROM — the paper's contribution (§2): layerwise reduced-order
+//! modelling of latent features.
+//!
+//! For each decomposable weight `W ∈ R^{d2×d1}`:
+//! 1. accumulate the covariance of its calibration output `Y = X Wᵀ`
+//!    ([`covariance`], via the Pallas Gram kernel or the Rust fallback),
+//! 2. eigendecompose and keep the top-r principal components `V_r`
+//!    ([`decompose`], rank from the budget allocator in [`budget`]),
+//! 3. re-parameterize `W ≈ V_rᵀ (V_r W) = W1 W2` ([`decompose`]),
+//! 4. stream the *compressed* activations forward so later layers see the
+//!    error introduced earlier ([`pipeline`]).
+
+pub mod budget;
+pub mod covariance;
+pub mod decompose;
+pub mod pipeline;
+
+pub use budget::{paper_preset, rank_for_budget, solve_module_budget, ModuleSchedule};
+pub use covariance::CovarianceAccumulator;
+pub use decompose::{decompose_weight, RomFactors};
+pub use pipeline::{DecompositionSpace, RomConfig, RomModel, RomPipeline};

@@ -1,0 +1,582 @@
+//! The layerwise ROM driver (paper §2): stream calibration activations
+//! through the model block by block, decompose each of the 7 matrices per
+//! compressed module sequentially, and propagate the *compressed*
+//! activations forward.
+//!
+//! Within a module the matrices are processed in dataflow order as four
+//! groups — `{wq,wk,wv}` (shared input), `{wo}`, `{w_gate,w_up}`,
+//! `{w_down}` — re-running the block's capture graph between groups so each
+//! group's calibration outputs already include the error introduced by the
+//! groups before it; across modules the streamed hidden states come from
+//! the compressed prefix. This is exactly the paper's "ROM of the previous
+//! layer generates inputs for the next layer".
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::CalibBatch;
+use crate::linalg::Matrix;
+use crate::model::macs::{block_matrices, CompressionAccounting, LayerCompression};
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+use super::budget::{rank_for_budget, ModuleSchedule};
+use super::covariance::{valid_row_flags, zero_invalid_rows, CovarianceAccumulator};
+use super::decompose::{decompose_weight, RomFactors};
+
+/// Matrix groups in dataflow order, with their capture names.
+const GROUPS: [&[(&str, &str)]; 4] = [
+    &[("wq", "y_q"), ("wk", "y_k"), ("wv", "y_v")],
+    &[("wo", "y_o")],
+    &[("w_gate", "y_gate"), ("w_up", "y_up")],
+    &[("w_down", "y_down")],
+];
+
+/// Which space the principal components are computed in — the paper's
+/// core claim is that **feature-space** decomposition (covariance of the
+/// calibration outputs) beats **weight-space** truncation (SVD of W
+/// itself) at equal budget. `Weight` exists as the ablation baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecompositionSpace {
+    /// Paper §2: eigendecompose cov(Y) over calibration activations.
+    Feature,
+    /// Ablation: eigendecompose W·Wᵀ (data-free truncated SVD of W).
+    Weight,
+}
+
+/// ROM pass configuration.
+#[derive(Debug, Clone)]
+pub struct RomConfig {
+    pub schedule: ModuleSchedule,
+    /// Use the AOT Pallas Gram kernel for covariance (vs the pure-Rust
+    /// accumulator — both paths are exact; the flag exists for the
+    /// CPU-only ablation and the perf benches).
+    pub pallas_covariance: bool,
+    /// Normalize covariance by sample count before eigendecomposition
+    /// (does not change eigenvectors; keeps magnitudes stable).
+    pub normalize: bool,
+    /// Eigendecompose the matrices of a group on worker threads.
+    pub parallel_eigen: bool,
+    /// Paper §2 error propagation: calibrate each layer against the
+    /// already-compressed prefix (true) or against the original model's
+    /// activations (false — ablation).
+    pub propagate_errors: bool,
+    /// Feature-space (paper) vs weight-space (ablation) decomposition.
+    pub space: DecompositionSpace,
+}
+
+impl Default for RomConfig {
+    fn default() -> Self {
+        RomConfig {
+            schedule: ModuleSchedule { start_block: 0, module_budget: 0.5 },
+            pallas_covariance: true,
+            normalize: true,
+            parallel_eigen: false,
+            propagate_errors: true,
+            space: DecompositionSpace::Feature,
+        }
+    }
+}
+
+/// Per-matrix timing record (the paper's §4 "13 s per layer" analog).
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    /// Seconds spent on capture+covariance for this matrix's group,
+    /// amortized over the group's matrices.
+    pub covariance_s: f64,
+    /// Seconds for eigendecomposition + re-parameterization.
+    pub decompose_s: f64,
+}
+
+impl LayerTiming {
+    pub fn total_s(&self) -> f64 {
+        self.covariance_s + self.decompose_s
+    }
+}
+
+/// Result of a ROM compression pass.
+#[derive(Debug)]
+pub struct RomModel {
+    /// Parameters with `W_eff = W1·W2` substituted for compressed layers —
+    /// runs through the unmodified dense HLO graphs.
+    pub params: ParamStore,
+    /// The factored form of every compressed matrix (for factored-form
+    /// execution and accounting).
+    pub factors: BTreeMap<String, RomFactors>,
+    pub schedule: ModuleSchedule,
+    pub timings: Vec<LayerTiming>,
+    /// Peak bytes held in calibration captures at any point — the paper's
+    /// layerwise-memory-bound argument (§4).
+    pub peak_capture_bytes: usize,
+}
+
+impl RomModel {
+    /// Accounting view (Table 1's #Params / #MACs columns).
+    pub fn accounting(&self) -> CompressionAccounting {
+        let mut acc = CompressionAccounting::dense();
+        for (name, f) in &self.factors {
+            acc.set(name, LayerCompression::LowRank { rank: f.rank });
+        }
+        acc
+    }
+
+    pub fn total_rom_seconds(&self) -> f64 {
+        self.timings.iter().map(|t| t.total_s()).sum()
+    }
+
+    pub fn mean_seconds_per_layer(&self) -> f64 {
+        if self.timings.is_empty() {
+            0.0
+        } else {
+            self.total_rom_seconds() / self.timings.len() as f64
+        }
+    }
+}
+
+/// The layerwise compression driver.
+pub struct RomPipeline<'rt> {
+    runtime: &'rt Runtime,
+    cfg: ModelConfig,
+}
+
+impl<'rt> RomPipeline<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> RomPipeline<'rt> {
+        let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
+        RomPipeline { runtime, cfg }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Run the full ROM pass. `params` is consumed as the starting point;
+    /// the returned [`RomModel`] owns the compressed parameters.
+    pub fn compress(
+        &self,
+        params: &ParamStore,
+        calib: &[CalibBatch],
+        rcfg: &RomConfig,
+    ) -> Result<RomModel> {
+        if rcfg.space == DecompositionSpace::Weight {
+            return self.compress_weight_space(params, rcfg);
+        }
+        if !rcfg.propagate_errors {
+            return self.compress_without_propagation(params, calib, rcfg);
+        }
+        if calib.is_empty() {
+            bail!("ROM needs at least one calibration batch");
+        }
+        let (eb, es) = (self.cfg.eval_batch, self.cfg.eval_seq);
+        for b in calib {
+            if b.batch != eb || b.seq != es {
+                bail!("calibration batch {}x{} != canonical {eb}x{es}", b.batch, b.seq);
+            }
+        }
+
+        let mut params = params.clone();
+        let mut factors = BTreeMap::new();
+        let mut timings = Vec::new();
+        let mut peak_bytes = 0usize;
+
+        // stage 0: embed all calibration chunks
+        let embed = params.get("embed")?.clone();
+        let mut hidden: Vec<Tensor> = Vec::with_capacity(calib.len());
+        for b in calib {
+            let tokens = Tensor::from_i32(&[eb, es], b.tokens.clone());
+            let out = self.runtime.execute("embed_fwd", &[&embed, &tokens])?;
+            hidden.push(out.into_iter().next().unwrap());
+        }
+
+        let dims: BTreeMap<String, (usize, usize)> = (0..self.cfg.n_layers)
+            .flat_map(|b| block_matrices(&self.cfg, b))
+            .map(|(name, o, i)| (name, (o, i)))
+            .collect();
+
+        for block in 0..self.cfg.n_layers {
+            if rcfg.schedule.compresses(block) {
+                for group in GROUPS {
+                    let t_cov = Instant::now();
+                    let mut accs: BTreeMap<&str, CovarianceAccumulator> = group
+                        .iter()
+                        .map(|(field, _)| {
+                            let name = format!("blocks.{block}.{field}");
+                            (*field, CovarianceAccumulator::new(dims[&name].0))
+                        })
+                        .collect();
+
+                    for (bi, cb) in calib.iter().enumerate() {
+                        let outs = self.block_capture(&params, block, &hidden[bi])?;
+                        let bytes: usize = outs.values().map(|t| t.len() * 4).sum::<usize>()
+                            + hidden.iter().map(|t| t.len() * 4).sum::<usize>();
+                        peak_bytes = peak_bytes.max(bytes);
+                        for (field, cap_name) in group {
+                            let cap = outs
+                                .get(*cap_name)
+                                .with_context(|| format!("capture {cap_name} missing"))?;
+                            self.accumulate(
+                                accs.get_mut(field).unwrap(),
+                                cap,
+                                cb,
+                                rcfg.pallas_covariance,
+                            )?;
+                        }
+                    }
+                    let covariance_s = t_cov.elapsed().as_secs_f64() / group.len() as f64;
+
+                    // decompose every matrix in the group
+                    let jobs: Vec<(String, Matrix, Matrix, usize)> = group
+                        .iter()
+                        .map(|(field, _)| {
+                            let name = format!("blocks.{block}.{field}");
+                            let (d_out, d_in) = dims[&name];
+                            let w = params.get(&name)?.to_matrix()?;
+                            let cov = accs[field].finalize(rcfg.normalize);
+                            let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
+                            Ok((name, w, cov, rank))
+                        })
+                        .collect::<Result<_>>()?;
+
+                    let results = decompose_jobs(jobs, rcfg.parallel_eigen)?;
+                    for (name, f, secs) in results {
+                        params.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
+                        timings.push(LayerTiming {
+                            name: name.clone(),
+                            covariance_s,
+                            decompose_s: secs,
+                        });
+                        factors.insert(name, f);
+                    }
+                }
+            }
+            // stream hidden states through the (possibly updated) block
+            for h in hidden.iter_mut() {
+                let mut args = params.block_flat(block);
+                args.push(&*h);
+                let out = self.runtime.execute("block_fwd", &args)?;
+                *h = out.into_iter().next().unwrap();
+            }
+        }
+
+        Ok(RomModel {
+            params,
+            factors,
+            schedule: rcfg.schedule,
+            timings,
+            peak_capture_bytes: peak_bytes,
+        })
+    }
+
+    /// Measure the calibration covariance of every decomposable matrix in
+    /// `blocks` **without compressing anything** (spectrum analysis /
+    /// EXPERIMENTS.md). Streams hidden states with the original weights.
+    pub fn measure_covariances(
+        &self,
+        params: &ParamStore,
+        calib: &[CalibBatch],
+        blocks: std::ops::Range<usize>,
+    ) -> Result<Vec<(String, Matrix, usize, usize)>> {
+        if calib.is_empty() {
+            bail!("need at least one calibration batch");
+        }
+        let (eb, es) = (self.cfg.eval_batch, self.cfg.eval_seq);
+        let embed = params.get("embed")?.clone();
+        let mut hidden: Vec<Tensor> = Vec::with_capacity(calib.len());
+        for b in calib {
+            let tokens = Tensor::from_i32(&[eb, es], b.tokens.clone());
+            let o = self.runtime.execute("embed_fwd", &[&embed, &tokens])?;
+            hidden.push(o.into_iter().next().unwrap());
+        }
+        let all: Vec<(&str, &str)> = GROUPS.iter().flat_map(|g| g.iter().copied()).collect();
+        let mut out = Vec::new();
+        for block in 0..self.cfg.n_layers {
+            if blocks.contains(&block) {
+                let mut accs: BTreeMap<&str, CovarianceAccumulator> = all
+                    .iter()
+                    .map(|(field, _)| {
+                        let name = format!("blocks.{block}.{field}");
+                        (*field, CovarianceAccumulator::new(dims_of(&self.cfg, &name).0))
+                    })
+                    .collect();
+                for (bi, cb) in calib.iter().enumerate() {
+                    let outs = self.block_capture(params, block, &hidden[bi])?;
+                    for (field, cap_name) in &all {
+                        let cap = outs.get(*cap_name).context("capture missing")?;
+                        self.accumulate(accs.get_mut(field).unwrap(), cap, cb, true)?;
+                    }
+                }
+                for (field, _) in &all {
+                    let name = format!("blocks.{block}.{field}");
+                    let (d_out, d_in) = dims_of(&self.cfg, &name);
+                    out.push((name, accs[field].finalize(true), d_out, d_in));
+                }
+            }
+            for h in hidden.iter_mut() {
+                let mut args = params.block_flat(block);
+                args.push(&*h);
+                let o = self.runtime.execute("block_fwd", &args)?;
+                *h = o.into_iter().next().unwrap();
+            }
+        }
+        Ok(out)
+    }
+
+    /// Ablation path: weight-space truncated SVD (`cov := W·Wᵀ`), no
+    /// calibration data at all. Everything else (ranks, schedule,
+    /// re-parameterization) identical to the feature-space path.
+    fn compress_weight_space(&self, params: &ParamStore, rcfg: &RomConfig) -> Result<RomModel> {
+        let mut out = params.clone();
+        let mut factors = BTreeMap::new();
+        let mut timings = Vec::new();
+        for block in 0..self.cfg.n_layers {
+            if !rcfg.schedule.compresses(block) {
+                continue;
+            }
+            for (name, d_out, d_in) in block_matrices(&self.cfg, block) {
+                let t0 = Instant::now();
+                let w = out.get(&name)?.to_matrix()?;
+                let wwt = crate::linalg::matmul(&w, &w.transpose());
+                let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
+                let f = decompose_weight(&w, &wwt, rank)?;
+                out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
+                timings.push(LayerTiming {
+                    name: name.clone(),
+                    covariance_s: 0.0,
+                    decompose_s: t0.elapsed().as_secs_f64(),
+                });
+                factors.insert(name, f);
+            }
+        }
+        Ok(RomModel {
+            params: out,
+            factors,
+            schedule: rcfg.schedule,
+            timings,
+            peak_capture_bytes: 0,
+        })
+    }
+
+    /// Ablation path: feature-space ROM **without** error propagation —
+    /// every layer is calibrated against the *original* model's
+    /// activations (the paper's §2 argues the propagating variant is
+    /// better; this path quantifies by how much).
+    fn compress_without_propagation(
+        &self,
+        params: &ParamStore,
+        calib: &[CalibBatch],
+        rcfg: &RomConfig,
+    ) -> Result<RomModel> {
+        if calib.is_empty() {
+            bail!("ROM needs at least one calibration batch");
+        }
+        let (eb, es) = (self.cfg.eval_batch, self.cfg.eval_seq);
+        let mut out = params.clone();
+        let mut factors = BTreeMap::new();
+        let mut timings = Vec::new();
+        let mut peak_bytes = 0usize;
+
+        let embed = params.get("embed")?.clone();
+        let mut hidden: Vec<Tensor> = Vec::with_capacity(calib.len());
+        for b in calib {
+            let tokens = Tensor::from_i32(&[eb, es], b.tokens.clone());
+            let o = self.runtime.execute("embed_fwd", &[&embed, &tokens])?;
+            hidden.push(o.into_iter().next().unwrap());
+        }
+        let all: Vec<(&str, &str)> =
+            GROUPS.iter().flat_map(|g| g.iter().copied()).collect();
+
+        for block in 0..self.cfg.n_layers {
+            if rcfg.schedule.compresses(block) {
+                // single capture pass with ORIGINAL weights
+                let t_cov = Instant::now();
+                let mut accs: BTreeMap<&str, CovarianceAccumulator> = all
+                    .iter()
+                    .map(|(field, _)| {
+                        let name = format!("blocks.{block}.{field}");
+                        let (o, _) = dims_of(&self.cfg, &name);
+                        (*field, CovarianceAccumulator::new(o))
+                    })
+                    .collect();
+                for (bi, cb) in calib.iter().enumerate() {
+                    let outs = self.block_capture(params, block, &hidden[bi])?;
+                    let bytes: usize = outs.values().map(|t| t.len() * 4).sum::<usize>();
+                    peak_bytes = peak_bytes.max(bytes);
+                    for (field, cap_name) in &all {
+                        let cap = outs.get(*cap_name).context("capture missing")?;
+                        self.accumulate(accs.get_mut(field).unwrap(), cap, cb, rcfg.pallas_covariance)?;
+                    }
+                }
+                let covariance_s = t_cov.elapsed().as_secs_f64() / all.len() as f64;
+                for (field, _) in &all {
+                    let name = format!("blocks.{block}.{field}");
+                    let (d_out, d_in) = dims_of(&self.cfg, &name);
+                    let t0 = Instant::now();
+                    let w = params.get(&name)?.to_matrix()?;
+                    let cov = accs[field].finalize(rcfg.normalize);
+                    let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
+                    let f = decompose_weight(&w, &cov, rank)?;
+                    out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
+                    timings.push(LayerTiming {
+                        name: name.clone(),
+                        covariance_s,
+                        decompose_s: t0.elapsed().as_secs_f64(),
+                    });
+                    factors.insert(name, f);
+                }
+            }
+            // stream with ORIGINAL weights (no propagation)
+            for h in hidden.iter_mut() {
+                let mut args = params.block_flat(block);
+                args.push(&*h);
+                let o = self.runtime.execute("block_fwd", &args)?;
+                *h = o.into_iter().next().unwrap();
+            }
+        }
+        Ok(RomModel {
+            params: out,
+            factors,
+            schedule: rcfg.schedule,
+            timings,
+            peak_capture_bytes: peak_bytes,
+        })
+    }
+
+    /// Run `block_capture` and map capture names -> tensors.
+    fn block_capture(
+        &self,
+        params: &ParamStore,
+        block: usize,
+        h: &Tensor,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let mut args = params.block_flat(block);
+        args.push(h);
+        let outs = self.runtime.execute("block_capture", &args)?;
+        let names = &self.runtime.manifest().capture_names;
+        // outs[0] is h_out; captures follow in manifest order
+        let mut map = BTreeMap::new();
+        for (name, t) in names.iter().zip(outs.into_iter().skip(1)) {
+            map.insert(name.clone(), t);
+        }
+        Ok(map)
+    }
+
+    /// Fold one capture chunk into a covariance accumulator, excluding
+    /// padded rows.
+    fn accumulate(
+        &self,
+        acc: &mut CovarianceAccumulator,
+        cap: &Tensor,
+        cb: &CalibBatch,
+        pallas: bool,
+    ) -> Result<()> {
+        let d = *cap.shape().last().unwrap();
+        let n = cap.len() / d;
+        let samples: usize = cb.valid.iter().map(|&v| v.min(cb.seq)).sum();
+        if pallas {
+            // zero invalid rows, then one Gram-kernel call
+            let mut flat = cap.flatten_to_2d()?;
+            {
+                let data = flat.as_f32_mut()?;
+                zero_invalid_rows(data, cb.batch, cb.seq, d, &cb.valid);
+            }
+            let entry = if d == self.cfg.d_model {
+                "covariance_d"
+            } else if d == self.cfg.d_ff {
+                "covariance_ff"
+            } else {
+                bail!("no covariance kernel for dim {d}");
+            };
+            let out = self.runtime.execute(entry, &[&flat])?;
+            acc.add_gram(&out[0], samples)?;
+        } else {
+            let flags = valid_row_flags(cb.batch, cb.seq, &cb.valid);
+            let flat = cap.flatten_to_2d()?;
+            acc.update_rows(flat.as_f32()?, n, Some(&flags))?;
+        }
+        Ok(())
+    }
+}
+
+/// (d_out, d_in) of a block matrix by name.
+fn dims_of(cfg: &ModelConfig, name: &str) -> (usize, usize) {
+    let block = crate::model::schema::block_index(name).expect("block-scoped name");
+    block_matrices(cfg, block)
+        .into_iter()
+        .find(|(n, _, _)| n == name)
+        .map(|(_, o, i)| (o, i))
+        .expect("known matrix")
+}
+
+/// Decompose a set of (name, W, cov, rank) jobs, optionally on threads.
+#[allow(clippy::type_complexity)]
+fn decompose_jobs(
+    jobs: Vec<(String, Matrix, Matrix, usize)>,
+    parallel: bool,
+) -> Result<Vec<(String, RomFactors, f64)>> {
+    if !parallel || jobs.len() == 1 {
+        return jobs
+            .into_iter()
+            .map(|(name, w, cov, rank)| {
+                let t0 = Instant::now();
+                let f = decompose_weight(&w, &cov, rank)
+                    .with_context(|| format!("decompose {name}"))?;
+                Ok((name, f, t0.elapsed().as_secs_f64()))
+            })
+            .collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|(name, w, cov, rank)| {
+                scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let f = decompose_weight(&w, &cov, rank)
+                        .with_context(|| format!("decompose {name}"))?;
+                    Ok::<_, anyhow::Error>((name, f, t0.elapsed().as_secs_f64()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow::anyhow!("decompose worker panicked"))?)
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_cover_all_seven_matrices() {
+        let fields: Vec<&str> = GROUPS.iter().flat_map(|g| g.iter().map(|(f, _)| *f)).collect();
+        assert_eq!(fields, vec!["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]);
+    }
+
+    #[test]
+    fn decompose_jobs_parallel_matches_serial() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0);
+        let mk = |rng: &mut Rng| {
+            let w = Matrix::from_fn(8, 6, |_, _| rng.normal());
+            let y = Matrix::from_fn(30, 8, |_, _| rng.normal());
+            let cov = crate::linalg::matmul(&y.transpose(), &y);
+            (w, cov)
+        };
+        let (w1, c1) = mk(&mut rng);
+        let (w2, c2) = mk(&mut rng);
+        let jobs = vec![
+            ("a".to_string(), w1.clone(), c1.clone(), 3),
+            ("b".to_string(), w2.clone(), c2.clone(), 4),
+        ];
+        let serial = decompose_jobs(jobs.clone(), false).unwrap();
+        let parallel = decompose_jobs(jobs, true).unwrap();
+        for ((n1, f1, _), (n2, f2, _)) in serial.iter().zip(&parallel) {
+            assert_eq!(n1, n2);
+            assert!(f1.effective_weight().sub(&f2.effective_weight()).max_abs() < 1e-12);
+        }
+    }
+}

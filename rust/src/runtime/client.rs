@@ -1,0 +1,245 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin) behind a [`Runtime`] that
+//! marshals [`Tensor`]s to/from XLA literals according to the manifest's
+//! positional specs. Executables are compiled lazily and cached, so the
+//! coordinator can call entries by name from the hot path. HLO *text* is
+//! the interchange format (jax ≥ 0.5 protos are rejected by xla_extension
+//! 0.5.1 — see /opt/xla-example/README.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{DType, Tensor};
+
+use super::manifest::{ArgSpec, EntrySpec, Manifest};
+
+/// Compiled-executable cache + marshalling layer over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Cumulative executions per entry (coordinator metrics).
+    calls: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let artifacts_dir = artifacts_dir.into();
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `entry` is compiled (idempotent); returns compile time in
+    /// seconds when a compile actually happened.
+    pub fn warmup(&self, entry: &str) -> Result<Option<f64>> {
+        if self.cache.borrow().contains_key(entry) {
+            return Ok(None);
+        }
+        let spec = self.manifest.entry(entry)?.clone();
+        let t0 = std::time::Instant::now();
+        let exe = self.compile_entry(entry, &spec)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(entry.to_string(), exe);
+        Ok(Some(dt))
+    }
+
+    fn compile_entry(&self, entry: &str, spec: &EntrySpec) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of entry `{entry}`"))
+    }
+
+    /// Execute an entry by name with positional tensor arguments.
+    ///
+    /// Shapes/dtypes are validated against the manifest before the call;
+    /// outputs are validated after. The single tuple result (jax lowers
+    /// with `return_tuple=True`) is decomposed into per-output tensors.
+    pub fn execute(&self, entry: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.entry(entry)?.clone();
+        if args.len() != spec.args.len() {
+            bail!("entry `{entry}`: {} args given, {} expected", args.len(), spec.args.len());
+        }
+        for (t, a) in args.iter().zip(&spec.args) {
+            validate(entry, t, a)?;
+        }
+        self.warmup(entry)?;
+
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(entry).expect("warmed up above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute `{entry}`"))?;
+        *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of `{entry}`"))?;
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            bail!("entry `{entry}`: {} outputs, {} expected", parts.len(), spec.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, o)| {
+                let t = literal_to_tensor(&lit)?;
+                validate(entry, &&t, o)?;
+                Ok(t)
+            })
+            .collect()
+    }
+
+    /// Pre-convert tensors to XLA literals (host copy happens once).
+    ///
+    /// The eval hot path calls `score_fwd` dozens of times with the same
+    /// 74 parameter tensors; converting them per call costs a full
+    /// params-sized memcpy + allocation each time. Prepare once, then
+    /// [`Runtime::execute_prepared`] with per-batch literals appended.
+    pub fn prepare(&self, args: &[&Tensor]) -> Result<Vec<xla::Literal>> {
+        args.iter().map(|t| tensor_to_literal(t)).collect()
+    }
+
+    /// Execute with pre-converted leading literals plus trailing tensor
+    /// args (converted here). Validation matches [`Runtime::execute`].
+    pub fn execute_prepared(
+        &self,
+        entry: &str,
+        prepared: &[xla::Literal],
+        tail: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.entry(entry)?.clone();
+        if prepared.len() + tail.len() != spec.args.len() {
+            bail!(
+                "entry `{entry}`: {}+{} args given, {} expected",
+                prepared.len(),
+                tail.len(),
+                spec.args.len()
+            );
+        }
+        for (t, a) in tail.iter().zip(&spec.args[prepared.len()..]) {
+            validate(entry, t, a)?;
+        }
+        self.warmup(entry)?;
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(spec.args.len());
+        // XLA literals are opaque handles; cloning copies the buffer, so
+        // borrow via a small shim: execute takes Borrow<Literal>.
+        let tail_lits: Vec<xla::Literal> = tail.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let all: Vec<&xla::Literal> = prepared.iter().chain(tail_lits.iter()).collect();
+        let _ = &mut literals;
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(entry).expect("warmed up above");
+        let result = exe
+            .execute::<&xla::Literal>(&all)
+            .with_context(|| format!("execute `{entry}`"))?;
+        *self.calls.borrow_mut().entry(entry.to_string()).or_insert(0) += 1;
+
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of `{entry}`"))?;
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            bail!("entry `{entry}`: {} outputs, {} expected", parts.len(), spec.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, o)| {
+                let t = literal_to_tensor(&lit)?;
+                validate(entry, &&t, o)?;
+                Ok(t)
+            })
+            .collect()
+    }
+
+    /// Per-entry call counts (metrics surface for the coordinator).
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        self.calls.borrow().clone()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn validate(entry: &str, t: &&Tensor, spec: &ArgSpec) -> Result<()> {
+    let want_dtype = match spec.dtype.as_str() {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        other => bail!("entry `{entry}` arg `{}`: unsupported manifest dtype {other}", spec.name),
+    };
+    if t.dtype() != want_dtype {
+        bail!("entry `{entry}` arg `{}`: dtype {:?}, manifest wants {:?}", spec.name, t.dtype(), want_dtype);
+    }
+    if t.shape() != spec.shape.as_slice() {
+        bail!("entry `{entry}` arg `{}`: shape {:?}, manifest wants {:?}", spec.name, t.shape(), spec.shape);
+    }
+    Ok(())
+}
+
+/// Tensor -> XLA literal (host copy).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, bytes) = match t {
+        Tensor::F32 { data, .. } => (xla::ElementType::F32, bytemuck_f32(data)),
+        Tensor::I32 { data, .. } => (xla::ElementType::S32, bytemuck_i32(data)),
+        _ => bail!("unsupported literal dtype {:?}", t.dtype()),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, t.shape(), &bytes)
+        .map_err(|e| anyhow::anyhow!("create literal: {e:?}"))
+}
+
+/// XLA literal -> Tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal f32: {e:?}"))?;
+            Ok(Tensor::from_f32(&dims, data))
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("literal i32: {e:?}"))?;
+            Ok(Tensor::from_i32(&dims, data))
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+fn bytemuck_f32(xs: &[f32]) -> Vec<u8> {
+    xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytemuck_i32(xs: &[i32]) -> Vec<u8> {
+    xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+}

@@ -1,0 +1,198 @@
+//! `artifacts/manifest.json` — the contract between the AOT exporter
+//! (`python/compile/aot.py`) and the Rust runtime. The marshaller follows
+//! these specs positionally and never guesses shapes. Parsed with the
+//! in-crate JSON substrate (the build is offline; no serde).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: usize,
+    pub model_config: ModelConfigJson,
+    pub tokenizer: TokenizerSpec,
+    pub param_names: Vec<String>,
+    pub maskable_names: Vec<String>,
+    pub capture_names: Vec<String>,
+    pub module_budgets: BTreeMap<String, f64>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfigJson {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub train_batch: usize,
+    pub train_seq: usize,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    pub weight_decay: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizerSpec {
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub sep: i32,
+    pub vocab_used: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+fn arg_spec(j: &Json) -> Result<ArgSpec> {
+    Ok(ArgSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.usize_vec()?,
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = artifacts_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let format_version = j.get("format_version")?.as_usize()?;
+        if format_version != 1 {
+            bail!("unsupported manifest format_version {format_version}");
+        }
+
+        let mc = j.get("model_config")?;
+        let model_config = ModelConfigJson {
+            vocab: mc.get("vocab")?.as_usize()?,
+            d_model: mc.get("d_model")?.as_usize()?,
+            n_heads: mc.get("n_heads")?.as_usize()?,
+            n_layers: mc.get("n_layers")?.as_usize()?,
+            d_ff: mc.get("d_ff")?.as_usize()?,
+            rope_theta: mc.get("rope_theta")?.as_f64()?,
+            norm_eps: mc.get("norm_eps")?.as_f64()?,
+            train_batch: mc.get("train_batch")?.as_usize()?,
+            train_seq: mc.get("train_seq")?.as_usize()?,
+            eval_batch: mc.get("eval_batch")?.as_usize()?,
+            eval_seq: mc.get("eval_seq")?.as_usize()?,
+            adam_beta1: mc.get("adam_beta1")?.as_f64()?,
+            adam_beta2: mc.get("adam_beta2")?.as_f64()?,
+            adam_eps: mc.get("adam_eps")?.as_f64()?,
+            weight_decay: mc.get("weight_decay")?.as_f64()?,
+        };
+
+        let tk = j.get("tokenizer")?;
+        let tokenizer = TokenizerSpec {
+            bos: tk.get("bos")?.as_i32()?,
+            eos: tk.get("eos")?.as_i32()?,
+            pad: tk.get("pad")?.as_i32()?,
+            sep: tk.get("sep")?.as_i32()?,
+            vocab_used: tk.get("vocab_used")?.as_usize()?,
+        };
+
+        let module_budgets = j
+            .get("module_budgets")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_f64()?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            let args = e.get("args")?.as_arr()?.iter().map(arg_spec).collect::<Result<Vec<_>>>()?;
+            let outputs =
+                e.get("outputs")?.as_arr()?.iter().map(arg_spec).collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec { file: e.get("file")?.as_str()?.to_string(), args, outputs },
+            );
+        }
+
+        Ok(Manifest {
+            format_version,
+            model_config,
+            tokenizer,
+            param_names: j.get("param_names")?.str_vec()?,
+            maskable_names: j.get("maskable_names")?.str_vec()?,
+            capture_names: j.get("capture_names")?.str_vec()?,
+            module_budgets,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).with_context(|| {
+            format!("entry `{name}` not in manifest (have: {:?})", self.entries.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts missing");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.format_version, 1);
+        assert_eq!(m.param_names.len(), 2 + 9 * m.model_config.n_layers);
+        assert_eq!(m.maskable_names.len(), 7 * m.model_config.n_layers);
+        for e in ["forward_logits", "score_fwd", "train_step", "block_capture", "covariance_d"] {
+            assert!(m.entries.contains_key(e), "{e}");
+        }
+        let ts = m.entry("train_step").unwrap();
+        assert_eq!(ts.args.len(), 3 * m.param_names.len() + 4);
+        assert_eq!(ts.outputs.len(), 3 * m.param_names.len() + 1);
+        assert_eq!(m.tokenizer.pad, 258);
+        assert!((m.module_budgets["b46"] - 0.46).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let Some(dir) = artifacts() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entry("nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = r#"{"format_version": 9}"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime layer: manifest-driven loading and execution of the AOT
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, plus a
+//! compiled-executable cache and positional tensor marshalling.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{literal_to_tensor, tensor_to_literal, Runtime};
+pub use manifest::{ArgSpec, EntrySpec, Manifest, ModelConfigJson, TokenizerSpec};

@@ -1,0 +1,8 @@
+//! Named-tensor substrate: in-memory [`Tensor`] + the `.rtz` container
+//! shared with the build-time Python world (`python/compile/tensorio.py`).
+
+pub mod rtz;
+pub mod tensor;
+
+pub use rtz::{load_rtz, save_rtz};
+pub use tensor::{DType, Tensor, TensorMap};

@@ -1,0 +1,124 @@
+//! `.rtz` container reader/writer — byte-compatible with
+//! `python/compile/tensorio.py` (see that file for the format spec).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, Tensor, TensorMap};
+
+const MAGIC: &[u8; 4] = b"RTZ1";
+
+pub fn save_rtz(path: impl AsRef<Path>, tensors: &TensorMap) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long: {name}");
+        }
+        w.write_all(&(nb.len() as u16).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[t.dtype().code(), t.shape().len() as u8])?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&t.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_rtz(path: impl AsRef<Path>) -> Result<TensorMap> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.as_ref().display(), magic);
+    }
+    let mut buf4 = [0u8; 4];
+    r.read_exact(&mut buf4)?;
+    let count = u32::from_le_bytes(buf4);
+
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let mut buf2 = [0u8; 2];
+        r.read_exact(&mut buf2)?;
+        let nlen = u16::from_le_bytes(buf2) as usize;
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name utf8")?;
+
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let dtype = DType::from_code(hdr[0])?;
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b8 = [0u8; 8];
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0u8; n * dtype.size()];
+        r.read_exact(&mut data)?;
+        out.insert(name, Tensor::from_le_bytes(dtype, shape, &data)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rtz_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.rtz");
+
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 7.0, -9.25]));
+        m.insert("tokens".into(), Tensor::from_i32(&[4], vec![1, 2, 3, 258]));
+        m.insert("scalar".into(), Tensor::scalar_f32(42.0));
+        save_rtz(&path, &m).unwrap();
+        let loaded = load_rtz(&path).unwrap();
+        assert_eq!(loaded, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_python_written_file() {
+        // artifacts/init.rtz is produced by python tensorio; only run when
+        // artifacts exist (make artifacts).
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/init.rtz");
+        if !path.exists() {
+            eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
+            return;
+        }
+        let map = load_rtz(&path).unwrap();
+        assert!(map.contains_key("embed"));
+        assert!(map.contains_key("final_norm"));
+        let embed = &map["embed"];
+        assert_eq!(embed.shape().len(), 2);
+        assert_eq!(embed.dtype(), DType::F32);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join(format!("rtz_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.rtz");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load_rtz(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,259 @@
+//! Minimal dense tensor with just enough dtype coverage for the pipeline
+//! (f32 weights/activations, i32 tokens; f64/u8 for bookkeeping).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Matrix;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    F64,
+    U8,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::F64 => 2,
+            DType::U8 => 3,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::F64,
+            3 => DType::U8,
+            _ => bail!("unknown dtype code {code}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// Dense row-major tensor. Data lives in one of the typed vectors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    F64 { shape: Vec<usize>, data: Vec<f64> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+/// Named tensor collection (checkpoints, calibration captures, …).
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::F64 { .. } => DType::F64,
+            Tensor::U8 { .. } => DType::U8,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. }
+            | Tensor::I32 { shape, .. }
+            | Tensor::F64 { shape, .. }
+            | Tensor::U8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// View a rank-2 f32 tensor as an f64 [`Matrix`].
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        let shape = self.shape();
+        if shape.len() != 2 {
+            bail!("to_matrix: rank {} tensor", shape.len());
+        }
+        Ok(Matrix::from_f32(shape[0], shape[1], self.as_f32()?))
+    }
+
+    /// Rank-2 f32 tensor from a [`Matrix`].
+    pub fn from_matrix(m: &Matrix) -> Tensor {
+        Tensor::from_f32(&[m.rows(), m.cols()], m.to_f32())
+    }
+
+    /// Flatten leading axes: (a, b, …, d) -> (a·b·…, d). Used to turn
+    /// (B, T, d) activation captures into (N, d) sample matrices.
+    pub fn flatten_to_2d(&self) -> Result<Tensor> {
+        let shape = self.shape();
+        if shape.is_empty() {
+            bail!("flatten_to_2d: scalar");
+        }
+        let d = *shape.last().unwrap();
+        let n: usize = shape[..shape.len() - 1].iter().product();
+        Ok(match self {
+            Tensor::F32 { data, .. } => Tensor::F32 { shape: vec![n, d], data: data.clone() },
+            Tensor::I32 { data, .. } => Tensor::I32 { shape: vec![n, d], data: data.clone() },
+            Tensor::F64 { data, .. } => Tensor::F64 { shape: vec![n, d], data: data.clone() },
+            Tensor::U8 { data, .. } => Tensor::U8 { shape: vec![n, d], data: data.clone() },
+        })
+    }
+
+    /// Keep only the first `n` rows of a rank-2 tensor (used to drop
+    /// padded calibration rows before covariance accumulation).
+    pub fn truncate_rows(&self, n: usize) -> Result<Tensor> {
+        let shape = self.shape();
+        if shape.len() != 2 {
+            bail!("truncate_rows: rank {} tensor", shape.len());
+        }
+        let (rows, cols) = (shape[0], shape[1]);
+        if n > rows {
+            bail!("truncate_rows: {n} > {rows}");
+        }
+        Ok(match self {
+            Tensor::F32 { data, .. } => Tensor::from_f32(&[n, cols], data[..n * cols].to_vec()),
+            Tensor::I32 { data, .. } => Tensor::from_i32(&[n, cols], data[..n * cols].to_vec()),
+            _ => bail!("truncate_rows: unsupported dtype"),
+        })
+    }
+
+    /// Raw little-endian bytes (for `.rtz` serialization).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Tensor::I32 { data, .. } => data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Tensor::F64 { data, .. } => data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Tensor::U8 { data, .. } => data.clone(),
+        }
+    }
+
+    pub fn from_le_bytes(dtype: DType, shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * dtype.size() {
+            bail!("byte length {} != {} elems of {:?}", bytes.len(), n, dtype);
+        }
+        Ok(match dtype {
+            DType::F32 => Tensor::F32 {
+                shape,
+                data: bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            DType::I32 => Tensor::I32 {
+                shape,
+                data: bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            DType::F64 => Tensor::F64 {
+                shape,
+                data: bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+            },
+            DType::U8 => Tensor::U8 { shape, data: bytes.to_vec() },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_len() {
+        let t = Tensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = t.to_matrix().unwrap();
+        assert_eq!(m[(1, 0)], 3.0);
+        let t2 = Tensor::from_matrix(&m);
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn flatten_3d() {
+        let t = Tensor::from_f32(&[2, 3, 4], (0..24).map(|x| x as f32).collect());
+        let f = t.flatten_to_2d().unwrap();
+        assert_eq!(f.shape(), &[6, 4]);
+        assert_eq!(f.as_f32().unwrap()[23], 23.0);
+    }
+
+    #[test]
+    fn truncate_rows_drops_tail() {
+        let t = Tensor::from_f32(&[4, 2], (0..8).map(|x| x as f32).collect());
+        let tr = t.truncate_rows(2).unwrap();
+        assert_eq!(tr.shape(), &[2, 2]);
+        assert_eq!(tr.as_f32().unwrap(), &[0.0, 1.0, 2.0, 3.0]);
+        assert!(t.truncate_rows(9).is_err());
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = Tensor::from_i32(&[3], vec![-1, 0, 65536]);
+        let b = t.to_le_bytes();
+        let t2 = Tensor::from_le_bytes(DType::I32, vec![3], &b).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::from_i32(&[1], vec![1]);
+        assert!(t.as_f32().is_err());
+        assert!(t.to_matrix().is_err());
+    }
+}

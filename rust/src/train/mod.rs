@@ -1,0 +1,154 @@
+//! Rust-owned training loop: executes the AOT `train_step` /
+//! `train_step_masked` HLO graphs (AdamW, pure-jnp autodiff path) with the
+//! coordinator controlling the schedule. Python never runs here — the
+//! gradients were baked into the graph at build time.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::LmBatch;
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Learning-rate schedule: linear warmup then cosine decay.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr: f32,
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            return self.peak * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let t = (step - self.warmup_steps) as f32
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+        let t = t.min(1.0);
+        self.min_lr
+            + 0.5 * (self.peak - self.min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// Stateful trainer over the AOT train step.
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    cfg: ModelConfig,
+    pub params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    step: usize,
+    /// Structured-pruning masks (name -> mask tensor) when fine-tuning a
+    /// pruned model; triggers the `train_step_masked` graph.
+    masks: Option<Vec<Tensor>>,
+    pub losses: Vec<f32>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, params: ParamStore) -> Trainer<'rt> {
+        let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
+        let m = ParamStore::zeros(&cfg);
+        let v = ParamStore::zeros(&cfg);
+        Trainer { runtime, cfg, params, m, v, step: 0, masks: None, losses: Vec::new() }
+    }
+
+    /// Enable mask-preserving fine-tuning. `masks` must be one f32 tensor
+    /// per maskable matrix, in schema order.
+    pub fn with_masks(mut self, masks: Vec<Tensor>) -> Result<Self> {
+        let want = self.runtime.manifest().maskable_names.len();
+        if masks.len() != want {
+            bail!("{} masks given, schema has {want}", masks.len());
+        }
+        self.masks = Some(masks);
+        Ok(self)
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// One optimizer step; returns the batch loss.
+    pub fn step(&mut self, batch: &LmBatch, lr: f32) -> Result<f32> {
+        let (tb, ts) = (self.cfg.train_batch, self.cfg.train_seq);
+        if batch.batch != tb || batch.seq != ts {
+            bail!("train batch {}x{} != canonical {tb}x{ts}", batch.batch, batch.seq);
+        }
+        self.step += 1;
+        let step_t = Tensor::scalar_f32(self.step as f32);
+        let lr_t = Tensor::scalar_f32(lr);
+        let tokens = Tensor::from_i32(&[tb, ts], batch.tokens.clone());
+        let targets = Tensor::from_i32(&[tb, ts], batch.targets.clone());
+
+        let mut args: Vec<&Tensor> = Vec::new();
+        args.extend(self.params.flat());
+        if let Some(masks) = &self.masks {
+            args.extend(masks.iter());
+        }
+        args.extend(self.m.flat());
+        args.extend(self.v.flat());
+        args.push(&step_t);
+        args.push(&lr_t);
+        args.push(&tokens);
+        args.push(&targets);
+
+        let entry = if self.masks.is_some() { "train_step_masked" } else { "train_step" };
+        let mut outs = self.runtime.execute(entry, &args).context("train step")?;
+
+        let loss = outs
+            .pop()
+            .and_then(|t| t.as_f32().ok().map(|x| x[0]))
+            .context("loss output")?;
+        let n = self.params.names().len();
+        if outs.len() != 3 * n {
+            bail!("train step returned {} tensors, want {}", outs.len(), 3 * n);
+        }
+        let v_new = outs.split_off(2 * n);
+        let m_new = outs.split_off(n);
+        self.params.set_flat(outs)?;
+        self.m.set_flat(m_new)?;
+        self.v.set_flat(v_new)?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Train over a batch list with a schedule; returns final mean loss of
+    /// the last `tail` steps.
+    pub fn run(
+        &mut self,
+        batches: &[LmBatch],
+        sched: &LrSchedule,
+        log_every: usize,
+        mut log: impl FnMut(usize, f32, f32),
+    ) -> Result<f32> {
+        for (i, b) in batches.iter().enumerate() {
+            let lr = sched.lr_at(i);
+            let loss = self.step(b, lr)?;
+            if log_every > 0 && (i % log_every == 0 || i + 1 == batches.len()) {
+                log(i, loss, lr);
+            }
+        }
+        let tail = self.losses.len().min(10);
+        Ok(self.losses[self.losses.len() - tail..].iter().sum::<f32>() / tail as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule { peak: 1e-3, warmup_steps: 10, total_steps: 110, min_lr: 1e-5 };
+        assert!(s.lr_at(0) < s.lr_at(5));
+        assert!((s.lr_at(9) - 1e-3).abs() < 1e-9);
+        assert!(s.lr_at(50) < s.lr_at(10));
+        assert!(s.lr_at(109) >= s.min_lr * 0.99);
+        assert!(s.lr_at(1000) >= s.min_lr * 0.99); // clamped past the end
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny benchmark harness — criterion stand-in for the offline build.
+//!
+//! Each `[[bench]]` target is a plain `main` (harness = false) that calls
+//! [`bench`] for its cases: warmup, then adaptive iteration until the
+//! measurement window is filled, reporting mean / p50 / p95 like
+//! criterion's summary line. Output is stable text for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}  mean {}  p50 {}  p95 {}",
+            self.name,
+            format!("x{}", self.iters),
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:8.3} s")
+    } else if s >= 1e-3 {
+        format!("{:8.3} ms", s * 1e3)
+    } else {
+        format!("{:8.3} µs", s * 1e6)
+    }
+}
+
+/// Run `f` repeatedly for ~`window` seconds (after one warmup call) and
+/// report timing stats. The closure should return something observable to
+/// keep the optimizer honest; its result is black-boxed.
+pub fn bench<T>(name: &str, window: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup + estimate
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // one-shot for cases slower than the window (end-to-end pipeline
+    // benches on a 1-core box); otherwise at least 3 samples
+    let target_iters = if est >= window.as_secs_f64() {
+        1
+    } else {
+        ((window.as_secs_f64() / est).ceil() as usize).clamp(3, 10_000)
+    };
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: p(0.5),
+        p95_s: p(0.95),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Standard measurement window for the bench targets.
+pub fn default_window() -> Duration {
+    Duration::from_secs_f64(
+        std::env::var("BENCH_WINDOW_S").ok().and_then(|s| s.parse().ok()).unwrap_or(2.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            std::hint::black_box((0..1000).sum::<usize>())
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).contains("s"));
+        assert!(fmt_time(0.002).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+    }
+}

@@ -1,0 +1,59 @@
+//! Wall-clock stopwatch used by the coordinator's §4-style cost accounting.
+
+use std::time::Instant;
+
+/// Accumulating stopwatch with named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now(), laps: Vec::new() }
+    }
+
+    /// Seconds since construction or the last `lap`.
+    pub fn lap(&mut self, name: impl Into<String>) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.start).as_secs_f64();
+        self.start = now;
+        self.laps.push((name.into(), dt));
+        dt
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+
+    pub fn total(&self) -> f64 {
+        self.laps.iter().map(|(_, t)| t).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let dt = sw.lap("a");
+        assert!(dt >= 0.004);
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.total() >= dt);
+    }
+}

@@ -1,0 +1,235 @@
+//! Property-based tests over coordinator/ROM invariants.
+//!
+//! The offline build carries no proptest crate, so properties are driven
+//! by the in-crate deterministic RNG: each property runs across a sweep of
+//! generated cases with shrink-free but reproducible seeds (failure
+//! messages include the case seed).
+
+use llm_rom::linalg::{eigh, eigh_jacobi, matmul, Matrix};
+use llm_rom::model::ModelConfig;
+use llm_rom::rom::budget::{candidates, rank_for_budget, solve_module_budget, ModuleSchedule};
+use llm_rom::rom::decompose::{factors_from_eigen, rank_for_energy};
+use llm_rom::rom::CovarianceAccumulator;
+use llm_rom::util::json::Json;
+use llm_rom::util::Rng;
+
+const CASES: u64 = 40;
+
+/// Property: eigh residuals, orthonormality, and agreement with Jacobi on
+/// arbitrary symmetric matrices.
+#[test]
+fn prop_eigh_correct_on_random_symmetric() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 7919 + 1);
+        let n = 1 + rng.below(40);
+        let scale = 10f64.powi(rng.below(5) as i32 - 2);
+        let mut a = Matrix::from_fn(n, n, |_, _| rng.normal() * scale);
+        a.symmetrize();
+        let dec = eigh(&a).unwrap_or_else(|e| panic!("case {case} (n={n}): {e}"));
+        // residuals
+        for k in 0..n {
+            let v = dec.vectors.row(k).to_vec();
+            let av = a.matvec(&v);
+            for i in 0..n {
+                let r = (av[i] - dec.values[k] * v[i]).abs();
+                assert!(r < 1e-7 * (1.0 + a.max_abs()), "case {case} pair {k}: residual {r}");
+            }
+        }
+        // eigenvalues agree with jacobi
+        let jd = eigh_jacobi(&a).unwrap();
+        for (x, y) in dec.values.iter().zip(&jd.values) {
+            assert!((x - y).abs() < 1e-6 * (1.0 + a.max_abs()), "case {case}: {x} vs {y}");
+        }
+    }
+}
+
+/// Property: ROM reconstruction error is monotone non-increasing in rank
+/// and exactly zero at full rank, for any data distribution.
+#[test]
+fn prop_rom_error_monotone_in_rank() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 104729 + 3);
+        let d1 = 2 + rng.below(12);
+        let d2 = 2 + rng.below(12);
+        let n = d2 + 4 + rng.below(50);
+        let w = Matrix::from_fn(d2, d1, |_, _| rng.normal());
+        let x = Matrix::from_fn(n, d1, |_, _| rng.normal());
+        let y = matmul(&x, &w.transpose());
+        let cov = matmul(&y.transpose(), &y);
+        let dec = eigh(&cov).unwrap();
+        let mut prev = f64::INFINITY;
+        for rank in 1..=d2 {
+            let f = factors_from_eigen(&w, &dec, rank);
+            let err = matmul(&x, &f.effective_weight().transpose()).sub(&y).frobenius_norm();
+            assert!(err <= prev + 1e-7, "case {case} rank {rank}: {err} > {prev}");
+            prev = err;
+        }
+        assert!(prev < 1e-6 * (1.0 + y.frobenius_norm()), "case {case}: full rank err {prev}");
+    }
+}
+
+/// Property: energy-based rank is the minimal rank reaching the threshold.
+#[test]
+fn prop_energy_rank_minimal() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 31337 + 5);
+        let d = 2 + rng.below(20);
+        let n = d + rng.below(40);
+        let y = Matrix::from_fn(n, d, |_, _| rng.normal());
+        let cov = matmul(&y.transpose(), &y);
+        let dec = eigh(&cov).unwrap();
+        let energy = 0.5 + rng.f64() * 0.45;
+        let r = rank_for_energy(&dec, energy);
+        let total: f64 = dec.values.iter().map(|l| l.max(0.0)).sum();
+        let mass = |k: usize| dec.values.iter().take(k).map(|l| l.max(0.0)).sum::<f64>() / total;
+        assert!(mass(r) >= energy - 1e-12, "case {case}");
+        if r > 1 {
+            assert!(mass(r - 1) < energy, "case {case}: rank not minimal");
+        }
+    }
+}
+
+/// Property: covariance accumulation is chunking-invariant (any split of
+/// the rows gives the same matrix) and sample counts add up.
+#[test]
+fn prop_covariance_chunking_invariant() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 6151 + 7);
+        let d = 1 + rng.below(16);
+        let n = 4 + rng.below(120);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut whole = CovarianceAccumulator::new(d);
+        whole.update_rows(&rows, n, None).unwrap();
+
+        let mut split = CovarianceAccumulator::new(d);
+        let mut at = 0;
+        while at < n {
+            let take = 1 + rng.below(n - at);
+            split.update_rows(&rows[at * d..(at + take) * d], take, None).unwrap();
+            at += take;
+        }
+        assert_eq!(whole.samples(), split.samples());
+        let diff = whole.finalize(false).sub(&split.finalize(false)).max_abs();
+        assert!(diff < 1e-8, "case {case}: {diff}");
+    }
+}
+
+/// Property: the budget solver inverts the schedule's achieved budget for
+/// every feasible (k, global) pair, and ranks never exceed dims.
+#[test]
+fn prop_budget_solver_inverts() {
+    let cfgs = [ModelConfig::mini(), ModelConfig::llama7b()];
+    for (ci, cfg) in cfgs.iter().enumerate() {
+        for case in 0..CASES {
+            let mut rng = Rng::new(case * 911 + ci as u64);
+            let global = 0.3 + rng.f64() * 0.69;
+            let k = 1 + rng.below(cfg.n_layers);
+            if let Some(b) = solve_module_budget(cfg, k, global) {
+                let s = ModuleSchedule { start_block: cfg.n_layers - k, module_budget: b };
+                let achieved = s.global_budget(cfg);
+                assert!(
+                    (achieved - global).abs() < 0.02,
+                    "cfg {ci} case {case}: k={k} g={global} achieved={achieved}"
+                );
+                for (_, o, i) in llm_rom::model::macs::block_matrices(cfg, cfg.n_layers - 1) {
+                    let r = rank_for_budget(o, i, b);
+                    assert!(r >= 1 && r <= o.min(i));
+                }
+            }
+        }
+    }
+}
+
+/// Property: every candidate schedule for a budget actually achieves it.
+#[test]
+fn prop_candidates_all_feasible() {
+    let cfg = ModelConfig::mini();
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 503 + 11);
+        let global = 0.35 + rng.f64() * 0.6;
+        for s in candidates(&cfg, global) {
+            let achieved = s.global_budget(&cfg);
+            assert!((achieved - global).abs() < 0.02, "case {case}: {achieved} vs {global}");
+            assert!(s.module_budget > 0.0 && s.module_budget <= 1.0);
+        }
+    }
+}
+
+/// Property: JSON display/parse round-trips arbitrary JSON-shaped trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let n = rng.below(8);
+                Json::Str((0..n).map(|_| *rng.choose(&['a', 'é', '"', '\\', '\n', 'z', '😀', ' '])).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..200 {
+        let mut rng = Rng::new(case * 2221 + 13);
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let v2 = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, v2, "case {case}: {text}");
+    }
+}
+
+/// Property: task generators always emit valid instances for random
+/// worlds, and calib/eval streams stay disjoint.
+#[test]
+fn prop_tasks_valid_on_random_worlds() {
+    use llm_rom::data::{Split, Task, World, ALL_TASKS};
+    for case in 0..12 {
+        let mut rng = Rng::new(case * 331 + 17);
+        let world = World::generate(
+            case * 7 + 1,
+            2 + rng.below(40),
+            8 + rng.below(24),
+            2 + rng.below(12),
+        );
+        for kind in ALL_TASKS {
+            let task = Task::new(&world, kind);
+            for inst in task.generate(Split::Eval, 16, case) {
+                assert_eq!(inst.choices.len(), kind.n_choices());
+                assert!(inst.gold < inst.choices.len());
+                let mut c = inst.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), inst.choices.len(), "case {case} {kind:?}: dup choices");
+                // prompt+choice must fit the canonical eval window
+                for i in 0..inst.choices.len() {
+                    assert!(inst.full_text(i).len() + 1 <= 128, "case {case}: too long");
+                }
+            }
+        }
+    }
+}
+
+/// Property: pack_lm_batches windows are exact substrings with shift-1
+/// targets for arbitrary text sizes.
+#[test]
+fn prop_lm_batches_shift_invariant() {
+    use llm_rom::data::{pack_lm_batches, render_corpus, World};
+    for case in 0..10 {
+        let world = World::default_world(case + 100);
+        let text = render_corpus(&world, case, 8_000 + (case as usize) * 997, 1);
+        let bs = pack_lm_batches(&text, 3, 24, 4, case);
+        for b in &bs {
+            for row in 0..3 {
+                for t in 0..23 {
+                    assert_eq!(b.tokens[row * 24 + t + 1], b.targets[row * 24 + t]);
+                }
+            }
+        }
+    }
+}
