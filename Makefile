@@ -1,0 +1,18 @@
+# LLM-ROM reproduction — top-level targets.
+
+.PHONY: verify build test artifacts
+
+# Tier-1 gate + optional fmt/clippy (see scripts/verify.sh).
+verify:
+	bash scripts/verify.sh
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# Export the AOT artifacts (HLO text + manifest + init checkpoint) into
+# rust/artifacts/. Needs the python/jax toolchain from python/compile/.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts

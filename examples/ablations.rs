@@ -1,10 +1,12 @@
-//! Ablations of the paper's two key design choices (DESIGN.md §6):
+//! Ablations of the paper's two key design choices (DESIGN.md §6), driven
+//! entirely through the unified `Compressor` trait:
 //!
-//! 1. **Feature-space vs weight-space decomposition** — the paper's core
-//!    novelty: principal components of the *activation covariance* rather
-//!    than of the weight matrix itself.
-//! 2. **Error propagation** (§2) — calibrating each layer against the
-//!    already-compressed prefix vs against the original activations.
+//! 1. **Feature-space vs weight-space decomposition** — registry methods
+//!    `rom-feature` vs `rom-weight-svd`.
+//! 2. **Error propagation** (§2) — a hand-built [`RomFeature`] with
+//!    `propagate_errors: false`, run through the same
+//!    [`CompressionSession`] as the registered methods (the trait is the
+//!    extension point: ablation variants need no special pipeline code).
 //!
 //! ```bash
 //! cargo run --release --example ablations        # needs runs/base.rtz
@@ -12,10 +14,12 @@
 //! ```
 
 use anyhow::{Context, Result};
+use llm_rom::compress::methods::RomFeature;
+use llm_rom::compress::{CompressedModel, Compressor};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::eval::format_table;
 use llm_rom::model::ParamStore;
-use llm_rom::rom::{paper_preset, DecompositionSpace, RomConfig, RomPipeline};
+use llm_rom::rom::paper_preset;
 use llm_rom::runtime::Runtime;
 
 fn env_num<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -24,44 +28,51 @@ fn env_num<T: std::str::FromStr>(key: &str, default: T) -> T {
 
 fn main() -> Result<()> {
     let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
-    let mut xcfg = ExperimentConfig::default();
-    xcfg.eval_per_task = env_num("ABL_PER_TASK", 100usize);
-    xcfg.calib_rows = env_num("ABL_ROWS", 256usize);
+    let xcfg = ExperimentConfig {
+        eval_per_task: env_num("ABL_PER_TASK", 100usize),
+        calib_rows: env_num("ABL_ROWS", 256usize),
+        ..ExperimentConfig::default()
+    };
     let budget: f64 = env_num("ABL_BUDGET", 0.8f64);
     let exp = Experiment::new(&rt, xcfg);
     let base = ParamStore::load(&exp.cfg, "runs/base.rtz")
         .context("runs/base.rtz missing — run `repro train` first")?;
 
     let schedule = paper_preset(&exp.cfg, budget);
-    let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
-    let pipeline = RomPipeline::new(&rt);
-
-    let variants: [(&str, RomConfig); 3] = [
-        (
-            "feature + propagation (paper)",
-            RomConfig { schedule, ..RomConfig::default() },
-        ),
-        (
-            "feature, no propagation",
-            RomConfig { schedule, propagate_errors: false, ..RomConfig::default() },
-        ),
-        (
-            "weight-space SVD (data-free)",
-            RomConfig { schedule, space: DecompositionSpace::Weight, ..RomConfig::default() },
-        ),
-    ];
+    let session = exp.session();
+    let mut calib =
+        exp.calib_stream(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
 
     let mut rows = Vec::new();
     rows.push(("dense".to_string(), exp.evaluate(&base, false)?));
-    for (label, rcfg) in variants {
-        let rom = pipeline.compress(&base, &calib, &rcfg)?;
-        let rep = exp.evaluate(&rom.params, false)?;
-        rows.push((label.to_string(), rep));
+
+    // registered methods: the paper configuration and the data-free SVD
+    for (label, method) in [
+        ("feature + propagation (paper)", "rom-feature"),
+        ("weight-space SVD (data-free)", "rom-weight-svd"),
+    ] {
+        let cm: CompressedModel = session.compress(method, &base, schedule, &mut calib)?;
+        rows.push((label.to_string(), exp.evaluate(&cm.params, false)?));
     }
+
+    // ablation variant: same trait, same session, one knob flipped
+    let no_prop = RomFeature { propagate_errors: false };
+    let cm = session.run(
+        &no_prop as &dyn Compressor,
+        &base,
+        schedule,
+        schedule.global_budget(&exp.cfg),
+        &mut calib,
+    )?;
+    rows.push(("feature, no propagation".to_string(), exp.evaluate(&cm.params, false)?));
+
     println!(
         "{}",
         format_table(
-            &format!("Ablations @ {:.0}% budget — decomposition space & §2 propagation", budget * 100.0),
+            &format!(
+                "Ablations @ {:.0}% budget — decomposition space & §2 propagation",
+                budget * 100.0
+            ),
             &rows
         )
     );

@@ -4,6 +4,8 @@
 //! (solving the per-module budget that hits the target) and reports
 //! accuracy — reproducing the paper's empirical finding that a *deeper,
 //! gentler* schedule beats compressing few modules hard, up to a point.
+//! Every point runs through the unified compression API as a
+//! `CompressedModel`.
 //!
 //! ```bash
 //! cargo run --release --example budget_sweep   # needs runs/base.rtz
@@ -23,9 +25,11 @@ fn env_num<T: std::str::FromStr>(key: &str, default: T) -> T {
 
 fn main() -> Result<()> {
     let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
-    let mut xcfg = ExperimentConfig::default();
-    xcfg.eval_per_task = env_num("SWEEP_PER_TASK", 100usize);
-    xcfg.calib_rows = env_num("SWEEP_ROWS", 256usize);
+    let xcfg = ExperimentConfig {
+        eval_per_task: env_num("SWEEP_PER_TASK", 100usize),
+        calib_rows: env_num("SWEEP_ROWS", 256usize),
+        ..ExperimentConfig::default()
+    };
     let exp = Experiment::new(&rt, xcfg);
     let base = ParamStore::load(&exp.cfg, "runs/base.rtz")
         .context("runs/base.rtz missing — run `repro train` or e2e_compress_eval first")?;
@@ -41,9 +45,8 @@ fn main() -> Result<()> {
                 continue; // coarse sweep: even k only (plus full depth)
             }
             let sched = ModuleSchedule { start_block: exp.cfg.n_layers - k, module_budget: b };
-            let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
-            let rom = exp.compress_with(&base, sched, Some(&calib))?;
-            let rep = exp.evaluate(&rom.params, false)?;
+            let cm = exp.compress_scheduled(&base, "rom-feature", sched, None)?;
+            let rep = exp.evaluate(&cm.params, false)?;
             rows.push((format!("last {k:>2} modules @ b={b:.2}"), rep));
         }
         println!(

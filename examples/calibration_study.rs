@@ -18,11 +18,13 @@ use llm_rom::runtime::Runtime;
 
 fn main() -> Result<()> {
     let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
-    let mut xcfg = ExperimentConfig::default();
-    xcfg.eval_per_task = std::env::var("CAL_PER_TASK")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(100usize);
+    let xcfg = ExperimentConfig {
+        eval_per_task: std::env::var("CAL_PER_TASK")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100usize),
+        ..ExperimentConfig::default()
+    };
     let exp = Experiment::new(&rt, xcfg);
     let base = ParamStore::load(&exp.cfg, "runs/base.rtz")
         .context("runs/base.rtz missing — run `repro train` or e2e_compress_eval first")?;

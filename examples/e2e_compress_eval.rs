@@ -1,9 +1,11 @@
 //! End-to-end driver: proves all three layers compose on a real workload.
 //!
 //! train MiniLLaMA on the synthetic world corpus (logging the loss curve)
-//! → ROM-compress at 80% → structured-prune at 80% → evaluate dense vs ROM
-//! vs pruned on all six SynthSense tasks + perplexity → print the Table-1
-//! block. The run is recorded in EXPERIMENTS.md.
+//! → compress at 80% with the unified API (`rom-feature` and
+//! `prune-activation`, both as [`CompressedModel`] artifacts through the
+//! same `Compressor` trait path) → evaluate dense vs ROM vs pruned on all
+//! six SynthSense tasks + perplexity → print the Table-1 block. The run is
+//! recorded in EXPERIMENTS.md.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_compress_eval
@@ -11,10 +13,10 @@
 //! ```
 
 use anyhow::Result;
+use llm_rom::compress::CompressedModel;
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::eval::format_table;
 use llm_rom::model::macs::{self, CompressionAccounting};
-use llm_rom::prune::Importance;
 use llm_rom::runtime::Runtime;
 use llm_rom::util::Stopwatch;
 
@@ -25,9 +27,11 @@ fn env_num<T: std::str::FromStr>(key: &str, default: T) -> T {
 fn main() -> Result<()> {
     let mut sw = Stopwatch::new();
     let rt = Runtime::new(llm_rom::DEFAULT_ARTIFACTS)?;
-    let mut xcfg = ExperimentConfig::default();
-    xcfg.train_steps = env_num("E2E_STEPS", 600usize);
-    xcfg.eval_per_task = env_num("E2E_PER_TASK", 150usize);
+    let xcfg = ExperimentConfig {
+        train_steps: env_num("E2E_STEPS", 600usize),
+        eval_per_task: env_num("E2E_PER_TASK", 150usize),
+        ..ExperimentConfig::default()
+    };
     let ft_steps: usize = env_num("E2E_FT", 60usize);
     let exp = Experiment::new(&rt, xcfg);
 
@@ -54,40 +58,46 @@ fn main() -> Result<()> {
     };
     println!("stage 1 done in {:.1}s\n", sw.lap("train"));
 
-    println!("== stage 2: ROM compress @80% ==");
-    let rom = exp.compress_at(&base, 0.8)?;
+    println!("== stage 2: ROM compress @80% (method `rom-feature`) ==");
+    let rom = exp.compress_method(&base, "rom-feature", 0.8)?;
     println!(
         "compressed {} matrices in {:.1}s ({:.2} s/layer), peak capture {:.1} MB",
         rom.timings.len(),
-        rom.total_rom_seconds(),
+        rom.total_seconds(),
         rom.mean_seconds_per_layer(),
         rom.peak_capture_bytes as f64 / 1e6
     );
     println!("stage 2 done in {:.1}s\n", sw.lap("rom"));
 
-    println!("== stage 3: structured pruning baseline @80% (+{ft_steps}-step fine-tune) ==");
-    let pruned = exp.prune_at(&base, 0.8, Importance::ActivationAware)?;
+    println!("== stage 3: pruning baseline @80% (method `prune-activation`, +{ft_steps}-step fine-tune) ==");
+    let pruned = exp.compress_method(&base, "prune-activation", 0.8)?;
     let pruned_ft = if ft_steps > 0 {
-        Some(exp.finetune_pruned(&pruned, ft_steps, |_, _, _| {})?)
+        Some(exp.finetune_compressed(&pruned, ft_steps, |_, _, _| {})?)
     } else {
         None
     };
     println!("stage 3 done in {:.1}s\n", sw.lap("prune"));
 
     println!("== stage 4: evaluate all variants ==");
-    let label = |name: &str, acc: &CompressionAccounting| {
-        let rep = macs::report(&exp.cfg, acc, 64);
-        format!("{name} ({:.2}M, {:.2}G MACs)", rep.n_params as f64 / 1e6, rep.macs_giga())
+    let label = |cm: &CompressedModel| {
+        let rep = cm.macs_report(&exp.cfg, 64);
+        format!(
+            "{}@80% ({:.2}M, {:.2}G MACs)",
+            cm.provenance.method,
+            rep.n_params as f64 / 1e6,
+            rep.macs_giga()
+        )
     };
+    let dense_rep = macs::report(&exp.cfg, &CompressionAccounting::dense(), 64);
     let mut rows = Vec::new();
-    rows.push((label("dense", &CompressionAccounting::dense()), exp.evaluate(&base, true)?));
-    rows.push((label("LLM-ROM@80%", &rom.accounting()), exp.evaluate(&rom.params, true)?));
     rows.push((
-        label("prune@80%", &pruned.accounting(&exp.cfg)),
-        exp.evaluate(&pruned.params, true)?,
+        format!("dense ({:.2}M, {:.2}G MACs)", dense_rep.n_params as f64 / 1e6, dense_rep.macs_giga()),
+        exp.evaluate(&base, true)?,
     ));
+    rows.push((label(&rom), exp.evaluate(&rom.params, true)?));
+    rows.push((label(&pruned), exp.evaluate(&pruned.params, true)?));
     if let Some(ft) = &pruned_ft {
-        rows.push((label("prune+ft@80%", &pruned.accounting(&exp.cfg)), exp.evaluate(ft, true)?));
+        rows.push((format!("{} +ft", label(&pruned)), exp.evaluate(ft, true)?));
     }
     println!("{}", format_table("E2E: dense vs ROM vs pruning @80% budget", &rows));
     println!("stage 4 done in {:.1}s", sw.lap("eval"));

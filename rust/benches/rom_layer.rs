@@ -1,10 +1,13 @@
 //! End-to-end ROM-of-one-module benchmark — the paper's §4 "13 s per
 //! layer" analog, measured on the real pipeline (capture → covariance →
 //! eigendecomposition → re-parameterization) at several calibration sizes,
-//! with both covariance backends (Pallas Gram kernel vs pure Rust).
+//! with both covariance backends (Pallas Gram kernel vs pure Rust) — plus
+//! a per-method baseline driving every registered compressor through the
+//! unified `Compressor` trait at a fixed budget.
 //!
 //! Needs artifacts (`make artifacts`); skips gracefully otherwise.
 
+use llm_rom::compress::{all, CompressionSession, VecStream};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::rom::{ModuleSchedule, RomConfig, RomPipeline};
 use llm_rom::runtime::Runtime;
@@ -12,36 +15,51 @@ use llm_rom::util::bench::bench;
 
 fn main() {
     let Ok(rt) = Runtime::new(llm_rom::DEFAULT_ARTIFACTS) else {
-        eprintln!("skipping rom_layer bench: artifacts missing (run `make artifacts`)");
+        eprintln!("skipping rom_layer bench: artifacts or PJRT runtime missing (run `make artifacts`)");
         return;
     };
     println!("# rom_layer bench (platform {})", rt.platform());
     let exp = Experiment::new(&rt, ExperimentConfig::default());
     let params = exp.init_params(llm_rom::DEFAULT_ARTIFACTS).expect("init params");
     let pipeline = RomPipeline::new(&rt);
+    let window = std::time::Duration::from_secs_f64(2.0);
 
     // compress only the last module, at two calibration sizes (512 rows
     // is measured once in `repro cost`; here we keep the bench window
     // tractable on a 1-core box)
     let last = exp.cfg.n_layers - 1;
+    let sched = ModuleSchedule { start_block: last, module_budget: 0.46 };
     for &rows in &[32usize, 128] {
         let calib = exp.calibration(rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
         for pallas in [true, false] {
-            let rcfg = RomConfig {
-                schedule: ModuleSchedule { start_block: last, module_budget: 0.46 },
-                pallas_covariance: pallas,
-                ..RomConfig::default()
-            };
+            let rcfg = RomConfig { schedule: sched, pallas_covariance: pallas, ..RomConfig::default() };
             let label = format!(
                 "rom_one_module rows={rows} cov={}",
                 if pallas { "pallas" } else { "rust" }
             );
-            let window = std::time::Duration::from_secs_f64(2.0);
             let r = bench(&label, window, || {
                 pipeline.compress(&params, &calib, &rcfg).expect("compress")
             });
             // derived: seconds per "layer" (7 matrices per module)
             println!("    -> {:.3} s/layer (paper: 13 s/layer on LLaMA-7B)", r.mean_s / 7.0);
         }
+    }
+
+    // per-method baseline: every registered compressor through the
+    // unified trait path, last module at module budget 0.46, 32 rows
+    println!("\n# registered compressors via the Compressor trait (module budget 0.46)");
+    let session = CompressionSession::new(&rt);
+    let calib = exp.calibration(32, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+    let global = sched.global_budget(&exp.cfg);
+    for compressor in all() {
+        let label = format!("compressor {} rows=32", compressor.name());
+        // streams are rewindable: build once outside the timed window
+        // (collect_rows resets it), so the bench times only the method
+        let mut stream = VecStream::new("bench", calib.clone());
+        bench(&label, window, || {
+            session
+                .run(compressor.as_ref(), &params, sched, global, &mut stream)
+                .expect("compress")
+        });
     }
 }

@@ -1,0 +1,439 @@
+//! The unified compression artifact: one result type for every method.
+//!
+//! A [`CompressedModel`] bundles the compressed parameters with the
+//! accounting view (Table 1's #Params/#MACs columns), per-layer timings
+//! (the §4 cost evidence), and provenance metadata describing exactly how
+//! it was produced. The whole artifact serializes to a single `.rtz`
+//! container: the parameters under their schema names plus one reserved
+//! `__compress_meta__` tensor holding the metadata as JSON, so compressed
+//! checkpoints stay loadable by every existing `.rtz` consumer (the
+//! [`crate::model::ParamStore`] loader skips `__`-prefixed entries).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::macs::{self, CompressionAccounting, LayerCompression, MacsReport};
+use crate::model::{ModelConfig, ParamStore};
+use crate::prune::PrunedModel;
+use crate::rom::budget::ModuleSchedule;
+use crate::rom::pipeline::{LayerTiming, RomModel};
+use crate::tensor::{load_rtz, save_rtz, Tensor, TensorMap};
+use crate::util::json::Json;
+
+/// Reserved `.rtz` entry carrying the compression metadata.
+pub const META_KEY: &str = "__compress_meta__";
+
+/// How a [`CompressedModel`] was produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Registry name of the method (`rom-feature`, `prune-magnitude`, …).
+    pub method: String,
+    /// Requested global parameter budget (fraction of dense).
+    pub global_budget: f64,
+    /// The module schedule that realized it.
+    pub schedule: ModuleSchedule,
+    /// Calibration source label (`combination`, `corpus`, `none`, …).
+    pub calib_label: String,
+    /// Calibration rows / per-row sequence length the stream advertised.
+    pub calib_rows: usize,
+    pub calib_seq: usize,
+}
+
+/// Kept channel/head index sets of a structured-pruning artifact —
+/// serialized with the model so masks can be rebuilt on load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeptSets {
+    /// block -> kept FFN channel indices (ascending).
+    pub ffn: BTreeMap<usize, Vec<usize>>,
+    /// block -> kept attention head indices (ascending).
+    pub heads: BTreeMap<usize, Vec<usize>>,
+}
+
+/// Unified result of any [`super::Compressor`].
+#[derive(Debug)]
+pub struct CompressedModel {
+    /// Compressed parameters at dense schema shapes (runnable through the
+    /// unmodified HLO graphs and the reference model).
+    pub params: ParamStore,
+    /// Analytic #Params/#MACs state of every touched matrix.
+    pub accounting: CompressionAccounting,
+    /// Per-matrix (ROM) or per-module (pruning) wall-clock records.
+    pub timings: Vec<LayerTiming>,
+    /// How this artifact was produced.
+    pub provenance: Provenance,
+    /// Peak bytes held in calibration captures (0 for data-free methods).
+    pub peak_capture_bytes: usize,
+    /// Kept channel/head sets, present only for structured pruning;
+    /// serialized in the metadata so [`CompressedModel::load`] can
+    /// rebuild the masks.
+    pub kept: Option<KeptSets>,
+    /// Pruning masks (1 = kept), present only for structured pruning.
+    /// Not serialized directly — rebuilt from [`CompressedModel::kept`]
+    /// on load, so masked fine-tuning works on loaded artifacts too.
+    pub masks: Option<Vec<Tensor>>,
+}
+
+impl CompressedModel {
+    /// A no-op artifact: budget ≥ 1.0 means "compress nothing".
+    pub fn identity(params: ParamStore, provenance: Provenance) -> CompressedModel {
+        CompressedModel {
+            params,
+            accounting: CompressionAccounting::dense(),
+            timings: Vec::new(),
+            provenance,
+            peak_capture_bytes: 0,
+            kept: None,
+            masks: None,
+        }
+    }
+
+    /// Wrap a ROM pipeline result.
+    pub fn from_rom(rom: RomModel, provenance: Provenance) -> CompressedModel {
+        let accounting = rom.accounting();
+        CompressedModel {
+            params: rom.params,
+            accounting,
+            timings: rom.timings,
+            provenance,
+            peak_capture_bytes: rom.peak_capture_bytes,
+            kept: None,
+            masks: None,
+        }
+    }
+
+    /// Wrap a structured-pruning result; `elapsed_s` is the whole pass,
+    /// amortized into one timing record per pruned module.
+    pub fn from_pruned(
+        cfg: &ModelConfig,
+        pruned: PrunedModel,
+        provenance: Provenance,
+        elapsed_s: f64,
+    ) -> CompressedModel {
+        let accounting = pruned.accounting(cfg);
+        let blocks: Vec<usize> = pruned.kept_ffn.keys().copied().collect();
+        let per = if blocks.is_empty() { 0.0 } else { elapsed_s / blocks.len() as f64 };
+        let timings = blocks
+            .iter()
+            .map(|b| LayerTiming {
+                name: format!("blocks.{b}"),
+                covariance_s: 0.0,
+                decompose_s: per,
+            })
+            .collect();
+        let kept = KeptSets { ffn: pruned.kept_ffn.clone(), heads: pruned.kept_heads.clone() };
+        CompressedModel {
+            params: pruned.params,
+            accounting,
+            timings,
+            provenance,
+            peak_capture_bytes: 0,
+            kept: Some(kept),
+            masks: Some(pruned.masks),
+        }
+    }
+
+    /// Total compression wall time across recorded layers.
+    pub fn total_seconds(&self) -> f64 {
+        self.timings.iter().map(|t| t.total_s()).sum()
+    }
+
+    pub fn mean_seconds_per_layer(&self) -> f64 {
+        if self.timings.is_empty() {
+            0.0
+        } else {
+            self.total_seconds() / self.timings.len() as f64
+        }
+    }
+
+    /// #Params/#MACs under this artifact's accounting.
+    pub fn macs_report(&self, cfg: &ModelConfig, tokens: usize) -> MacsReport {
+        macs::report(cfg, &self.accounting, tokens)
+    }
+
+    /// Serialize params + accounting + timings + provenance to `.rtz`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut map = TensorMap::new();
+        for name in self.params.names() {
+            map.insert(name.clone(), self.params.get(name)?.clone());
+        }
+        let meta = self.meta_json().to_string().into_bytes();
+        map.insert(META_KEY.to_string(), Tensor::U8 { shape: vec![meta.len()], data: meta });
+        save_rtz(path, &map)
+    }
+
+    /// Load an artifact written by [`CompressedModel::save`].
+    pub fn load(cfg: &ModelConfig, path: impl AsRef<Path>) -> Result<CompressedModel> {
+        let mut map = load_rtz(&path)
+            .with_context(|| format!("load compressed model {}", path.as_ref().display()))?;
+        let meta = match map.remove(META_KEY) {
+            Some(Tensor::U8 { data, .. }) => {
+                Json::parse(std::str::from_utf8(&data).context("metadata utf8")?)
+                    .context("parse compression metadata")?
+            }
+            Some(_) => bail!("`{META_KEY}` entry has wrong dtype"),
+            None => bail!(
+                "{}: no `{META_KEY}` entry — a plain checkpoint, not a compressed artifact \
+                 (load it with ParamStore::load instead)",
+                path.as_ref().display()
+            ),
+        };
+        let params = ParamStore::from_map(cfg, map)?;
+        Self::from_parts(params, &meta)
+    }
+
+    fn from_parts(params: ParamStore, meta: &Json) -> Result<CompressedModel> {
+        let version = meta.get("format")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported compression metadata format {version}");
+        }
+        let p = meta.get("provenance")?;
+        let provenance = Provenance {
+            method: p.get("method")?.as_str()?.to_string(),
+            global_budget: p.get("global_budget")?.as_f64()?,
+            schedule: ModuleSchedule {
+                start_block: p.get("start_block")?.as_usize()?,
+                module_budget: p.get("module_budget")?.as_f64()?,
+            },
+            calib_label: p.get("calib_label")?.as_str()?.to_string(),
+            calib_rows: p.get("calib_rows")?.as_usize()?,
+            calib_seq: p.get("calib_seq")?.as_usize()?,
+        };
+        let mut accounting = CompressionAccounting::dense();
+        for (name, entry) in meta.get("accounting")?.as_obj()? {
+            accounting.set(name, layer_compression_from_json(entry)?);
+        }
+        let timings = meta
+            .get("timings")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(LayerTiming {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    covariance_s: t.get("covariance_s")?.as_f64()?,
+                    decompose_s: t.get("decompose_s")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let kept = match meta.opt("kept") {
+            Some(k) => Some(KeptSets {
+                ffn: kept_map_from_json(k.get("ffn")?)?,
+                heads: kept_map_from_json(k.get("heads")?)?,
+            }),
+            None => None,
+        };
+        // rebuild the pruning masks so masked fine-tune works on loaded
+        // artifacts exactly as on freshly compressed ones
+        let masks = kept
+            .as_ref()
+            .map(|k| crate::prune::build_masks(params.config(), &k.ffn, &k.heads));
+        Ok(CompressedModel {
+            params,
+            accounting,
+            timings,
+            provenance,
+            peak_capture_bytes: meta.get("peak_capture_bytes")?.as_usize()?,
+            kept,
+            masks,
+        })
+    }
+
+    fn meta_json(&self) -> Json {
+        let p = &self.provenance;
+        let provenance = Json::Obj(
+            [
+                ("method".to_string(), Json::Str(p.method.clone())),
+                ("global_budget".to_string(), Json::Num(p.global_budget)),
+                ("start_block".to_string(), Json::Num(p.schedule.start_block as f64)),
+                ("module_budget".to_string(), Json::Num(p.schedule.module_budget)),
+                ("calib_label".to_string(), Json::Str(p.calib_label.clone())),
+                ("calib_rows".to_string(), Json::Num(p.calib_rows as f64)),
+                ("calib_seq".to_string(), Json::Num(p.calib_seq as f64)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let accounting = Json::Obj(
+            self.accounting
+                .layers
+                .iter()
+                .map(|(name, c)| (name.clone(), layer_compression_to_json(*c)))
+                .collect(),
+        );
+        let timings = Json::Arr(
+            self.timings
+                .iter()
+                .map(|t| {
+                    Json::Obj(
+                        [
+                            ("name".to_string(), Json::Str(t.name.clone())),
+                            ("covariance_s".to_string(), Json::Num(t.covariance_s)),
+                            ("decompose_s".to_string(), Json::Num(t.decompose_s)),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    )
+                })
+                .collect(),
+        );
+        let mut top: std::collections::BTreeMap<String, Json> = [
+            ("format".to_string(), Json::Num(1.0)),
+            ("provenance".to_string(), provenance),
+            ("accounting".to_string(), accounting),
+            ("timings".to_string(), timings),
+            ("peak_capture_bytes".to_string(), Json::Num(self.peak_capture_bytes as f64)),
+        ]
+        .into_iter()
+        .collect();
+        if let Some(kept) = &self.kept {
+            top.insert(
+                "kept".to_string(),
+                Json::Obj(
+                    [
+                        ("ffn".to_string(), kept_map_to_json(&kept.ffn)),
+                        ("heads".to_string(), kept_map_to_json(&kept.heads)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ),
+            );
+        }
+        Json::Obj(top)
+    }
+}
+
+fn kept_map_to_json(m: &BTreeMap<usize, Vec<usize>>) -> Json {
+    Json::Obj(
+        m.iter()
+            .map(|(block, idxs)| {
+                (block.to_string(), Json::Arr(idxs.iter().map(|&i| Json::Num(i as f64)).collect()))
+            })
+            .collect(),
+    )
+}
+
+fn kept_map_from_json(j: &Json) -> Result<BTreeMap<usize, Vec<usize>>> {
+    j.as_obj()?
+        .iter()
+        .map(|(block, idxs)| {
+            let b: usize = block.parse().map_err(|_| anyhow::anyhow!("bad block key `{block}`"))?;
+            Ok((b, idxs.usize_vec()?))
+        })
+        .collect()
+}
+
+fn layer_compression_to_json(c: LayerCompression) -> Json {
+    let (kind, value) = match c {
+        LayerCompression::Dense => ("dense", 0),
+        LayerCompression::LowRank { rank } => ("low_rank", rank),
+        LayerCompression::PrunedOut { kept_out } => ("pruned_out", kept_out),
+        LayerCompression::PrunedIn { kept_in } => ("pruned_in", kept_in),
+    };
+    Json::Obj(
+        [
+            ("kind".to_string(), Json::Str(kind.to_string())),
+            ("n".to_string(), Json::Num(value as f64)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+fn layer_compression_from_json(j: &Json) -> Result<LayerCompression> {
+    let n = j.get("n")?.as_usize()?;
+    Ok(match j.get("kind")?.as_str()? {
+        "dense" => LayerCompression::Dense,
+        "low_rank" => LayerCompression::LowRank { rank: n },
+        "pruned_out" => LayerCompression::PrunedOut { kept_out: n },
+        "pruned_in" => LayerCompression::PrunedIn { kept_in: n },
+        other => bail!("unknown layer compression kind `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_compression_json_roundtrip() {
+        for c in [
+            LayerCompression::Dense,
+            LayerCompression::LowRank { rank: 17 },
+            LayerCompression::PrunedOut { kept_out: 5 },
+            LayerCompression::PrunedIn { kept_in: 9 },
+        ] {
+            let j = layer_compression_to_json(c);
+            assert_eq!(layer_compression_from_json(&j).unwrap(), c);
+        }
+        assert!(layer_compression_from_json(&Json::parse(r#"{"kind":"x","n":1}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn meta_json_roundtrips_through_text() {
+        let cfg = ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() };
+        let mut accounting = CompressionAccounting::dense();
+        accounting.set("blocks.1.wq", LayerCompression::LowRank { rank: 3 });
+        let cm = CompressedModel {
+            params: ParamStore::zeros(&cfg),
+            accounting,
+            timings: vec![LayerTiming { name: "blocks.1.wq".into(), covariance_s: 0.25, decompose_s: 0.75 }],
+            provenance: Provenance {
+                method: "rom-feature".into(),
+                global_budget: 0.8,
+                schedule: ModuleSchedule { start_block: 1, module_budget: 0.46 },
+                calib_label: "combination".into(),
+                calib_rows: 32,
+                calib_seq: 128,
+            },
+            peak_capture_bytes: 12345,
+            kept: None,
+            masks: None,
+        };
+        let text = cm.meta_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = CompressedModel::from_parts(ParamStore::zeros(&cfg), &parsed).unwrap();
+        assert_eq!(back.provenance, cm.provenance);
+        assert_eq!(back.accounting.layers, cm.accounting.layers);
+        assert_eq!(back.timings.len(), 1);
+        assert_eq!(back.peak_capture_bytes, 12345);
+        assert!(back.kept.is_none() && back.masks.is_none());
+        assert!((back.total_seconds() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kept_sets_roundtrip_and_rebuild_masks() {
+        let cfg = ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() };
+        let mut ffn = BTreeMap::new();
+        ffn.insert(1usize, vec![0, 3, 5]);
+        let mut heads = BTreeMap::new();
+        heads.insert(1usize, vec![1]);
+        let kept = KeptSets { ffn, heads };
+        let cm = CompressedModel {
+            params: ParamStore::zeros(&cfg),
+            accounting: CompressionAccounting::dense(),
+            timings: Vec::new(),
+            provenance: Provenance {
+                method: "prune-magnitude".into(),
+                global_budget: 0.8,
+                schedule: ModuleSchedule { start_block: 1, module_budget: 0.46 },
+                calib_label: "none".into(),
+                calib_rows: 0,
+                calib_seq: 0,
+            },
+            peak_capture_bytes: 0,
+            kept: Some(kept.clone()),
+            masks: Some(crate::prune::build_masks(&cfg, &kept.ffn, &kept.heads)),
+        };
+        let parsed = Json::parse(&cm.meta_json().to_string()).unwrap();
+        let back = CompressedModel::from_parts(ParamStore::zeros(&cfg), &parsed).unwrap();
+        assert_eq!(back.kept, cm.kept);
+        // masks are rebuilt from the kept sets, identical to the originals
+        let (a, b) = (cm.masks.as_ref().unwrap(), back.masks.as_ref().unwrap());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x, y);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Pluggable calibration sources for the unified compression pipeline.
+//!
+//! A [`CalibrationStream`] abstracts *where* calibration rows come from
+//! (task combination, a single task, generic corpus, a pre-built slice)
+//! behind a chunked iterator: consumers pull canonical-shape
+//! [`CalibBatch`]es one fixed-size chunk at a time, so the memory held for
+//! calibration *activations* stays bounded by one chunk regardless of the
+//! configured row count (token batches themselves are KB-sized). Streams
+//! are rewindable — [`CalibrationStream::reset`] restarts the same
+//! deterministic row sequence, which lets one stream feed a multi-method
+//! sweep.
+
+use crate::data::{build_calibration, CalibBatch, CalibSource, World};
+
+/// A rewindable, chunked source of calibration batches.
+pub trait CalibrationStream {
+    /// Human-readable source label (recorded in provenance).
+    fn label(&self) -> String;
+
+    /// Next chunk of batches; `None` once the stream is exhausted.
+    fn next_chunk(&mut self) -> Option<Vec<CalibBatch>>;
+
+    /// Rewind to the start of the (deterministic) sequence.
+    fn reset(&mut self);
+
+    /// Configured number of calibration rows (provenance bookkeeping).
+    fn rows_hint(&self) -> usize;
+
+    /// Configured per-row sequence length (provenance bookkeeping).
+    fn seq_hint(&self) -> usize;
+}
+
+/// Batches per chunk yielded by the built-in streams.
+const CHUNK_BATCHES: usize = 4;
+
+/// Drain a stream into a batch list, optionally stopping once `max_rows`
+/// real (non-PAD) rows have been gathered. The ROM pipeline keeps the
+/// *token* batches resident (small) while streaming activations chunkwise,
+/// so materializing here does not break the fixed-memory argument.
+pub fn collect_rows(stream: &mut dyn CalibrationStream, max_rows: Option<usize>) -> Vec<CalibBatch> {
+    stream.reset();
+    let mut out = Vec::new();
+    let mut rows = 0usize;
+    while let Some(chunk) = stream.next_chunk() {
+        for b in chunk {
+            rows += b.valid.iter().filter(|&&v| v > 0).count();
+            out.push(b);
+            if let Some(cap) = max_rows {
+                if rows >= cap {
+                    return out;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Calibration drawn from the synthetic world's task/corpus distributions
+/// — the stream form of [`build_calibration`], built lazily on first pull.
+pub struct WorldStream<'w> {
+    world: &'w World,
+    source: CalibSource,
+    rows: usize,
+    batch: usize,
+    seq: usize,
+    seq_used: usize,
+    seed: u64,
+    built: Option<Vec<CalibBatch>>,
+    cursor: usize,
+}
+
+impl<'w> WorldStream<'w> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        world: &'w World,
+        source: CalibSource,
+        rows: usize,
+        batch: usize,
+        seq: usize,
+        seq_used: usize,
+        seed: u64,
+    ) -> WorldStream<'w> {
+        WorldStream { world, source, rows, batch, seq, seq_used, seed, built: None, cursor: 0 }
+    }
+}
+
+impl CalibrationStream for WorldStream<'_> {
+    fn label(&self) -> String {
+        self.source.name()
+    }
+
+    fn next_chunk(&mut self) -> Option<Vec<CalibBatch>> {
+        if self.built.is_none() {
+            self.built = Some(build_calibration(
+                self.world,
+                self.source,
+                self.rows,
+                self.batch,
+                self.seq,
+                self.seq_used,
+                self.seed,
+            ));
+        }
+        let all = self.built.as_ref().unwrap();
+        if self.cursor >= all.len() {
+            return None;
+        }
+        let end = (self.cursor + CHUNK_BATCHES).min(all.len());
+        let chunk = all[self.cursor..end].to_vec();
+        self.cursor = end;
+        Some(chunk)
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    fn rows_hint(&self) -> usize {
+        self.rows
+    }
+
+    fn seq_hint(&self) -> usize {
+        self.seq_used
+    }
+}
+
+/// A pre-built batch list as a stream (table sweeps, tests, benches).
+pub struct VecStream {
+    label: String,
+    batches: Vec<CalibBatch>,
+    cursor: usize,
+}
+
+impl VecStream {
+    pub fn new(label: impl Into<String>, batches: Vec<CalibBatch>) -> VecStream {
+        VecStream { label: label.into(), batches, cursor: 0 }
+    }
+}
+
+impl CalibrationStream for VecStream {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn next_chunk(&mut self) -> Option<Vec<CalibBatch>> {
+        if self.cursor >= self.batches.len() {
+            return None;
+        }
+        let end = (self.cursor + CHUNK_BATCHES).min(self.batches.len());
+        let chunk = self.batches[self.cursor..end].to_vec();
+        self.cursor = end;
+        Some(chunk)
+    }
+
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    fn rows_hint(&self) -> usize {
+        self.batches.iter().map(|b| b.valid.iter().filter(|&&v| v > 0).count()).sum()
+    }
+
+    fn seq_hint(&self) -> usize {
+        // the *used* sequence length, not the padded canonical `b.seq`:
+        // rows carry at most `seq_used` valid tokens, so the longest
+        // valid run is the configured length (mirrors WorldStream)
+        self.batches.iter().flat_map(|b| b.valid.iter().copied()).max().unwrap_or(0)
+    }
+}
+
+/// The empty stream — for data-free methods (weight-space SVD, magnitude
+/// pruning) and for offline sessions.
+#[derive(Default)]
+pub struct EmptyStream;
+
+impl CalibrationStream for EmptyStream {
+    fn label(&self) -> String {
+        "none".to_string()
+    }
+
+    fn next_chunk(&mut self) -> Option<Vec<CalibBatch>> {
+        None
+    }
+
+    fn reset(&mut self) {}
+
+    fn rows_hint(&self) -> usize {
+        0
+    }
+
+    fn seq_hint(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_batch(valid: &[usize], seq: usize) -> CalibBatch {
+        CalibBatch {
+            tokens: vec![0; valid.len() * seq],
+            valid: valid.to_vec(),
+            batch: valid.len(),
+            seq,
+        }
+    }
+
+    #[test]
+    fn vec_stream_chunks_and_rewinds() {
+        let batches: Vec<CalibBatch> = (0..6).map(|_| mk_batch(&[3, 3], 8)).collect();
+        let mut s = VecStream::new("six", batches);
+        let mut n = 0;
+        while let Some(c) = s.next_chunk() {
+            assert!(c.len() <= CHUNK_BATCHES);
+            n += c.len();
+        }
+        assert_eq!(n, 6);
+        assert!(s.next_chunk().is_none());
+        s.reset();
+        assert_eq!(s.next_chunk().unwrap().len(), CHUNK_BATCHES);
+        assert_eq!(s.rows_hint(), 12);
+        // seq_hint reports the used length (max valid run), not b.seq
+        assert_eq!(s.seq_hint(), 3);
+    }
+
+    #[test]
+    fn collect_rows_caps_at_max() {
+        // 4 valid rows per batch (a row = one calibration sequence)
+        let batches: Vec<CalibBatch> = (0..5).map(|_| mk_batch(&[2, 2, 2, 2], 8)).collect();
+        let mut s = VecStream::new("cap", batches);
+        let got = collect_rows(&mut s, Some(10));
+        // rows accumulate 4, 8, 12 — the cap is reached inside batch 3
+        assert_eq!(got.len(), 3);
+        let uncapped = collect_rows(&mut s, None);
+        assert_eq!(uncapped.len(), 5);
+    }
+
+    #[test]
+    fn world_stream_matches_build_calibration() {
+        let world = World::default_world(7);
+        let direct = build_calibration(&world, CalibSource::Combination, 20, 8, 128, 64, 9);
+        let mut s = WorldStream::new(&world, CalibSource::Combination, 20, 8, 128, 64, 9);
+        let streamed = collect_rows(&mut s, None);
+        assert_eq!(direct.len(), streamed.len());
+        for (a, b) in direct.iter().zip(&streamed) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.valid, b.valid);
+        }
+        assert_eq!(s.label(), "combination");
+        assert_eq!(s.rows_hint(), 20);
+        assert_eq!(s.seq_hint(), 64);
+    }
+
+    #[test]
+    fn empty_stream_is_empty() {
+        let mut s = EmptyStream;
+        assert!(s.next_chunk().is_none());
+        assert_eq!(collect_rows(&mut s, None).len(), 0);
+        assert_eq!(s.label(), "none");
+    }
+}

@@ -1,0 +1,144 @@
+//! The built-in [`Compressor`] implementations: the paper's feature-space
+//! ROM, its weight-space SVD ablation, and the two structured-pruning
+//! baselines. Each is a thin adapter from the shared [`CompressCtx`] onto
+//! the corresponding engine (`rom::pipeline`, `prune`), normalizing every
+//! result into a [`CompressedModel`].
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::prune::{Importance, Pruner};
+use crate::rom::pipeline::{compress_weight_space, DecompositionSpace, RomConfig, RomPipeline};
+
+use super::artifact::CompressedModel;
+use super::calib::collect_rows;
+use super::{CompressCtx, Compressor};
+
+/// Activation-aware pruning scores converge with far fewer rows than ROM
+/// covariances need; cap the capture work (mirrors the previous
+/// `prune_at` behavior).
+const PRUNE_MAX_CALIB_ROWS: usize = 128;
+
+/// Paper §2: feature-space ROM (covariance of calibration outputs).
+pub struct RomFeature {
+    /// §2 error propagation — calibrate each layer against the already
+    /// compressed prefix. `false` is the published ablation.
+    pub propagate_errors: bool,
+}
+
+impl Default for RomFeature {
+    fn default() -> Self {
+        RomFeature { propagate_errors: true }
+    }
+}
+
+impl Compressor for RomFeature {
+    fn name(&self) -> &str {
+        "rom-feature"
+    }
+
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, ctx: &mut CompressCtx<'_>) -> Result<CompressedModel> {
+        let rt = ctx
+            .runtime
+            .context("`rom-feature` needs a PJRT runtime for activation capture")?;
+        let batches = collect_rows(ctx.calib, None);
+        let rcfg = RomConfig {
+            schedule: ctx.schedule,
+            pallas_covariance: ctx.pallas_covariance,
+            propagate_errors: self.propagate_errors,
+            space: DecompositionSpace::Feature,
+            ..RomConfig::default()
+        };
+        let rom = RomPipeline::new(rt).compress(ctx.params, &batches, &rcfg)?;
+        Ok(CompressedModel::from_rom(rom, ctx.provenance(self.name())))
+    }
+}
+
+/// Ablation baseline: data-free truncated SVD of W (eigendecomposition of
+/// W·Wᵀ) with the same ranks/schedule as ROM. Needs no runtime and no
+/// calibration data.
+#[derive(Default)]
+pub struct RomWeightSvd;
+
+impl Compressor for RomWeightSvd {
+    fn name(&self) -> &str {
+        "rom-weight-svd"
+    }
+
+    fn compress(&self, ctx: &mut CompressCtx<'_>) -> Result<CompressedModel> {
+        let rcfg = RomConfig {
+            schedule: ctx.schedule,
+            space: DecompositionSpace::Weight,
+            ..RomConfig::default()
+        };
+        let rom = compress_weight_space(&ctx.cfg, ctx.params, &rcfg)?;
+        Ok(CompressedModel::from_rom(rom, data_free_provenance(ctx, self.name())))
+    }
+}
+
+/// Provenance for a method that consumed no calibration data — records
+/// `none`/0 regardless of what stream the session happened to carry.
+fn data_free_provenance(ctx: &CompressCtx<'_>, method: &str) -> crate::compress::Provenance {
+    let mut prov = ctx.provenance(method);
+    prov.calib_label = "none".to_string();
+    prov.calib_rows = 0;
+    prov.calib_seq = 0;
+    prov
+}
+
+/// LLM-Pruner-style structured pruning (whole FFN channels + attention
+/// heads), with either importance criterion.
+pub struct PruneStructured {
+    pub importance: Importance,
+}
+
+impl Compressor for PruneStructured {
+    fn name(&self) -> &str {
+        match self.importance {
+            Importance::Magnitude => "prune-magnitude",
+            Importance::ActivationAware => "prune-activation",
+        }
+    }
+
+    fn needs_runtime(&self) -> bool {
+        self.importance == Importance::ActivationAware
+    }
+
+    fn compress(&self, ctx: &mut CompressCtx<'_>) -> Result<CompressedModel> {
+        let t0 = Instant::now();
+        let (pruner, batches) = match self.importance {
+            Importance::Magnitude => (Pruner::offline(ctx.cfg.clone()), Vec::new()),
+            Importance::ActivationAware => {
+                let rt = ctx
+                    .runtime
+                    .context("`prune-activation` needs a PJRT runtime for activation capture")?;
+                let batches = collect_rows(ctx.calib, Some(PRUNE_MAX_CALIB_ROWS));
+                (Pruner::new(rt), batches)
+            }
+        };
+        // provenance records what was actually consumed, not what the
+        // stream was configured to offer (the row cap above may bite)
+        let provenance = match self.importance {
+            Importance::Magnitude => data_free_provenance(ctx, self.name()),
+            Importance::ActivationAware => {
+                let consumed: usize =
+                    batches.iter().map(|b| b.valid.iter().filter(|&&v| v > 0).count()).sum();
+                let mut prov = ctx.provenance(self.name());
+                prov.calib_rows = prov.calib_rows.min(consumed);
+                prov
+            }
+        };
+        let pruned = pruner.prune(ctx.params, &batches, ctx.schedule, self.importance)?;
+        Ok(CompressedModel::from_pruned(
+            &ctx.cfg,
+            pruned,
+            provenance,
+            t0.elapsed().as_secs_f64(),
+        ))
+    }
+}

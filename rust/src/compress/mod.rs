@@ -1,0 +1,85 @@
+//! Unified compression API — one pluggable pipeline for every method.
+//!
+//! The paper's central comparison (feature-space ROM vs weight-space SVD
+//! vs structured pruning) runs through a single abstraction here:
+//!
+//! - [`Compressor`] — the method trait: `name()` + `compress(&mut ctx)`.
+//! - [`CompressCtx`] — everything a method may need: optional PJRT
+//!   runtime, model config, source parameters, a pluggable
+//!   [`CalibrationStream`], the module schedule and global budget.
+//! - [`CompressedModel`] — the unified artifact (params + accounting +
+//!   timings + provenance), serializable to `.rtz`.
+//! - the registry ([`METHODS`], [`resolve`]) — method lookup by name:
+//!   `rom-feature`, `rom-weight-svd`, `prune-magnitude`,
+//!   `prune-activation`.
+//! - [`CompressionSession`] — binds an environment and runs methods by
+//!   name or as trait objects; the CLI, tables harness, examples, and
+//!   benches all go through it.
+//!
+//! Adding a method: implement [`Compressor`] (set `needs_runtime` if it
+//! captures activations), register a name in [`registry::resolve`], and
+//! every consumer — `repro compress`, `repro sweep`, the tables harness,
+//! the benches — picks it up with no further plumbing.
+
+pub mod artifact;
+pub mod calib;
+pub mod methods;
+pub mod registry;
+pub mod session;
+
+use anyhow::Result;
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::rom::budget::ModuleSchedule;
+use crate::runtime::Runtime;
+
+pub use artifact::{CompressedModel, KeptSets, Provenance, META_KEY};
+pub use calib::{collect_rows, CalibrationStream, EmptyStream, VecStream, WorldStream};
+pub use registry::{all, resolve, METHODS};
+pub use session::CompressionSession;
+
+/// Shared context handed to every [`Compressor::compress`] call.
+pub struct CompressCtx<'a> {
+    /// Live PJRT runtime, when the session has one. Methods that capture
+    /// activations require it; data-free methods ignore it.
+    pub runtime: Option<&'a Runtime>,
+    pub cfg: ModelConfig,
+    /// Source parameters (never mutated; methods clone what they change).
+    pub params: &'a ParamStore,
+    /// Pluggable calibration source (drain with [`collect_rows`]).
+    pub calib: &'a mut dyn CalibrationStream,
+    /// Which modules to compress and how hard.
+    pub schedule: ModuleSchedule,
+    /// The requested global parameter budget (provenance).
+    pub global_budget: f64,
+    /// Use the Pallas Gram kernel for covariance accumulation.
+    pub pallas_covariance: bool,
+}
+
+impl CompressCtx<'_> {
+    /// Provenance record for the current run.
+    pub fn provenance(&self, method: &str) -> Provenance {
+        Provenance {
+            method: method.to_string(),
+            global_budget: self.global_budget,
+            schedule: self.schedule,
+            calib_label: self.calib.label(),
+            calib_rows: self.calib.rows_hint(),
+            calib_seq: self.calib.seq_hint(),
+        }
+    }
+}
+
+/// A compression method, pluggable by name through the registry.
+pub trait Compressor {
+    /// Registry name (`rom-feature`, `prune-magnitude`, …).
+    fn name(&self) -> &str;
+
+    /// Whether the method captures activations through the PJRT runtime.
+    fn needs_runtime(&self) -> bool {
+        false
+    }
+
+    /// Run the method over `ctx`, producing the unified artifact.
+    fn compress(&self, ctx: &mut CompressCtx<'_>) -> Result<CompressedModel>;
+}

@@ -1,0 +1,63 @@
+//! Method registry: compression methods resolvable by name.
+
+use anyhow::Result;
+
+use crate::prune::Importance;
+
+use super::methods::{PruneStructured, RomFeature, RomWeightSvd};
+use super::Compressor;
+
+/// Names of every registered method, in comparison order.
+pub const METHODS: &[&str] =
+    &["rom-feature", "rom-weight-svd", "prune-magnitude", "prune-activation"];
+
+/// Resolve a method by registry name.
+pub fn resolve(name: &str) -> Result<Box<dyn Compressor>> {
+    Ok(match name {
+        "rom-feature" => Box::new(RomFeature::default()),
+        "rom-weight-svd" => Box::new(RomWeightSvd),
+        "prune-magnitude" => Box::new(PruneStructured { importance: Importance::Magnitude }),
+        "prune-activation" => {
+            Box::new(PruneStructured { importance: Importance::ActivationAware })
+        }
+        other => anyhow::bail!(
+            "unknown compression method `{other}` (registered: {})",
+            METHODS.join(", ")
+        ),
+    })
+}
+
+/// All registered methods, in [`METHODS`] order.
+pub fn all() -> Vec<Box<dyn Compressor>> {
+    METHODS.iter().map(|m| resolve(m).expect("registered method resolves")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_name_resolves_to_itself() {
+        for name in METHODS {
+            let c = resolve(name).unwrap();
+            assert_eq!(c.name(), *name);
+        }
+        assert_eq!(all().len(), METHODS.len());
+    }
+
+    #[test]
+    fn unknown_name_lists_registry() {
+        let err = resolve("svd-9000").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("svd-9000"));
+        assert!(msg.contains("rom-feature"));
+    }
+
+    #[test]
+    fn runtime_requirements_declared() {
+        assert!(resolve("rom-feature").unwrap().needs_runtime());
+        assert!(resolve("prune-activation").unwrap().needs_runtime());
+        assert!(!resolve("rom-weight-svd").unwrap().needs_runtime());
+        assert!(!resolve("prune-magnitude").unwrap().needs_runtime());
+    }
+}

@@ -1,0 +1,210 @@
+//! [`CompressionSession`] — the one front door for running any registered
+//! (or hand-built) [`Compressor`] against a model.
+//!
+//! A session binds the execution environment (an optional PJRT runtime +
+//! the model config) and the shared knobs, then runs methods by registry
+//! name or as trait objects. Sessions without a runtime (`offline`) can
+//! still run every data-free method — and *any* method at budget 1.0,
+//! which is short-circuited to the identity artifact before the method is
+//! consulted.
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::rom::budget::{paper_preset, ModuleSchedule};
+use crate::runtime::Runtime;
+
+use super::artifact::{CompressedModel, Provenance};
+use super::calib::CalibrationStream;
+use super::registry::resolve;
+use super::{CompressCtx, Compressor};
+
+/// Execution environment + knobs for a sequence of compression runs.
+pub struct CompressionSession<'rt> {
+    runtime: Option<&'rt Runtime>,
+    cfg: ModelConfig,
+    pallas_covariance: bool,
+}
+
+impl<'rt> CompressionSession<'rt> {
+    /// Session over a live PJRT runtime (all methods available).
+    pub fn new(runtime: &'rt Runtime) -> CompressionSession<'rt> {
+        let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
+        CompressionSession { runtime: Some(runtime), cfg, pallas_covariance: true }
+    }
+
+    /// Runtime-free session: data-free methods only (plus the budget-1.0
+    /// identity path for every method).
+    pub fn offline(cfg: ModelConfig) -> CompressionSession<'static> {
+        CompressionSession { runtime: None, cfg, pallas_covariance: false }
+    }
+
+    /// Toggle the Pallas Gram kernel for covariance accumulation.
+    pub fn with_pallas_covariance(mut self, on: bool) -> Self {
+        self.pallas_covariance = on;
+        self
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Run a compressor under an explicit module schedule.
+    pub fn run(
+        &self,
+        compressor: &dyn Compressor,
+        params: &ParamStore,
+        schedule: ModuleSchedule,
+        global_budget: f64,
+        calib: &mut dyn CalibrationStream,
+    ) -> Result<CompressedModel> {
+        // Budget 1.0 (or an empty schedule) compresses nothing: return the
+        // identity artifact without touching the method or the runtime.
+        if schedule.start_block >= self.cfg.n_layers || schedule.module_budget >= 1.0 - 1e-12 {
+            let provenance = Provenance {
+                method: compressor.name().to_string(),
+                global_budget,
+                schedule,
+                calib_label: calib.label(),
+                calib_rows: calib.rows_hint(),
+                calib_seq: calib.seq_hint(),
+            };
+            return Ok(CompressedModel::identity(params.clone(), provenance));
+        }
+        if compressor.needs_runtime() && self.runtime.is_none() {
+            bail!(
+                "method `{}` needs a PJRT runtime (offline session); \
+                 data-free alternatives: rom-weight-svd, prune-magnitude",
+                compressor.name()
+            );
+        }
+        let mut ctx = CompressCtx {
+            runtime: self.runtime,
+            cfg: self.cfg.clone(),
+            params,
+            calib,
+            schedule,
+            global_budget,
+            pallas_covariance: self.pallas_covariance,
+        };
+        compressor.compress(&mut ctx)
+    }
+
+    /// Run a registered method under an explicit schedule.
+    pub fn compress(
+        &self,
+        method: &str,
+        params: &ParamStore,
+        schedule: ModuleSchedule,
+        calib: &mut dyn CalibrationStream,
+    ) -> Result<CompressedModel> {
+        let c = resolve(method)?;
+        let global = schedule.global_budget(&self.cfg);
+        self.run(c.as_ref(), params, schedule, global, calib)
+    }
+
+    /// Run a registered method at a global budget, using the paper's
+    /// preset schedule family.
+    pub fn compress_at(
+        &self,
+        method: &str,
+        params: &ParamStore,
+        global_budget: f64,
+        calib: &mut dyn CalibrationStream,
+    ) -> Result<CompressedModel> {
+        let c = resolve(method)?;
+        let schedule = if global_budget >= 1.0 - 1e-12 {
+            ModuleSchedule { start_block: self.cfg.n_layers, module_budget: 1.0 }
+        } else {
+            paper_preset(&self.cfg, global_budget)
+        };
+        self.run(c.as_ref(), params, schedule, global_budget, calib)
+    }
+
+    /// Run several registered methods at one budget over the same
+    /// (rewindable) calibration stream, handing each artifact to `visit`
+    /// as it completes — the engine behind `repro sweep`. Visiting (and
+    /// dropping) artifacts one at a time keeps peak memory at one
+    /// compressed model regardless of how many methods are swept.
+    pub fn sweep_with(
+        &self,
+        methods: &[String],
+        params: &ParamStore,
+        global_budget: f64,
+        calib: &mut dyn CalibrationStream,
+        mut visit: impl FnMut(&str, CompressedModel) -> Result<()>,
+    ) -> Result<()> {
+        for m in methods {
+            let cm = self.compress_at(m, params, global_budget, &mut *calib)?;
+            visit(m.as_str(), cm)?;
+        }
+        Ok(())
+    }
+
+    /// [`CompressionSession::sweep_with`], collecting every artifact
+    /// (memory scales with the method count — prefer `sweep_with` when
+    /// artifacts can be consumed one at a time).
+    pub fn sweep(
+        &self,
+        methods: &[String],
+        params: &ParamStore,
+        global_budget: f64,
+        calib: &mut dyn CalibrationStream,
+    ) -> Result<Vec<CompressedModel>> {
+        let mut out = Vec::with_capacity(methods.len());
+        self.sweep_with(methods, params, global_budget, calib, |_, cm| {
+            out.push(cm);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::calib::EmptyStream;
+    use crate::compress::registry::METHODS;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() }
+    }
+
+    #[test]
+    fn budget_one_is_identity_for_every_method_offline() {
+        let cfg = tiny_cfg();
+        let session = CompressionSession::offline(cfg.clone());
+        let params = ParamStore::zeros(&cfg);
+        for method in METHODS {
+            let mut calib = EmptyStream;
+            let cm = session.compress_at(method, &params, 1.0, &mut calib).unwrap();
+            assert_eq!(cm.provenance.method, *method);
+            assert!(cm.accounting.layers.is_empty(), "{method}");
+            assert!(cm.params.distance(&params).unwrap() < 1e-12, "{method}");
+        }
+    }
+
+    #[test]
+    fn runtime_needing_methods_rejected_offline() {
+        let cfg = tiny_cfg();
+        let session = CompressionSession::offline(cfg.clone());
+        let params = ParamStore::zeros(&cfg);
+        for method in ["rom-feature", "prune-activation"] {
+            let mut calib = EmptyStream;
+            let err = session.compress_at(method, &params, 0.8, &mut calib).unwrap_err();
+            assert!(err.to_string().contains("runtime"), "{method}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let session = CompressionSession::offline(tiny_cfg());
+        let params = ParamStore::zeros(&tiny_cfg());
+        let mut calib = EmptyStream;
+        assert!(session.compress_at("nope", &params, 0.8, &mut calib).is_err());
+    }
+}

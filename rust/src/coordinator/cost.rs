@@ -7,8 +7,8 @@
 //! bounds peak memory by one layer's weights + calibration activations
 //! (<10 GB for LLaMA-7B), not the whole model.
 
+use crate::compress::CompressedModel;
 use crate::model::ModelConfig;
-use crate::rom::pipeline::RomModel;
 
 /// One row of the cost table.
 #[derive(Debug, Clone)]
@@ -27,13 +27,13 @@ pub struct CostReport {
 }
 
 impl CostReport {
-    pub fn push(&mut self, label: impl Into<String>, rom: &RomModel) {
+    pub fn push(&mut self, label: impl Into<String>, cm: &CompressedModel) {
         self.rows.push(CostRow {
             label: label.into(),
-            layers_compressed: rom.timings.len(),
-            total_seconds: rom.total_rom_seconds(),
-            mean_seconds_per_layer: rom.mean_seconds_per_layer(),
-            peak_capture_bytes: rom.peak_capture_bytes,
+            layers_compressed: cm.timings.len(),
+            total_seconds: cm.total_seconds(),
+            mean_seconds_per_layer: cm.mean_seconds_per_layer(),
+            peak_capture_bytes: cm.peak_capture_bytes,
         });
     }
 

@@ -5,13 +5,15 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::compress::{
+    resolve, CalibrationStream, CompressedModel, CompressionSession, VecStream, WorldStream,
+};
 use crate::data::{
     build_calibration, pack_lm_batches, render_corpus, CalibBatch, CalibSource, World,
 };
 use crate::eval::{EvalReport, Evaluator};
 use crate::model::{ModelConfig, ParamStore};
-use crate::prune::{Importance, PrunedModel, Pruner};
-use crate::rom::{paper_preset, ModuleSchedule, RomConfig, RomModel, RomPipeline};
+use crate::rom::ModuleSchedule;
 use crate::runtime::Runtime;
 use crate::train::{LrSchedule, Trainer};
 use crate::util::Stopwatch;
@@ -134,58 +136,84 @@ impl<'rt> Experiment<'rt> {
         )
     }
 
-    /// ROM-compress at a global budget using the paper's preset schedule.
-    pub fn compress_at(&self, params: &ParamStore, global_budget: f64) -> Result<RomModel> {
-        let schedule = paper_preset(&self.cfg, global_budget);
-        self.compress_with(params, schedule, None)
+    /// Compression session bound to this experiment's runtime.
+    pub fn session(&self) -> CompressionSession<'rt> {
+        CompressionSession::new(self.runtime)
     }
 
-    /// ROM-compress with an explicit schedule (and optional calibration
-    /// override for Tables 2-4).
-    pub fn compress_with(
+    /// Calibration as a pluggable stream (the [`crate::compress`] form of
+    /// [`Experiment::calibration`]).
+    pub fn calib_stream(
+        &self,
+        rows: usize,
+        seq_used: usize,
+        source: CalibSource,
+    ) -> WorldStream<'_> {
+        WorldStream::new(
+            &self.world,
+            source,
+            rows,
+            self.cfg.eval_batch,
+            self.cfg.eval_seq,
+            seq_used,
+            self.xcfg.seed ^ 0xCAFE,
+        )
+    }
+
+    /// Compress with a registered method at a global budget, using the
+    /// paper's preset schedule family and this experiment's calibration
+    /// configuration. The single entry point behind `repro compress`,
+    /// `repro sweep`, the tables harness, and the examples.
+    pub fn compress_method(
         &self,
         params: &ParamStore,
+        method: &str,
+        global_budget: f64,
+    ) -> Result<CompressedModel> {
+        let mut stream = self.calib_stream(
+            self.xcfg.calib_rows,
+            self.xcfg.calib_seq,
+            self.xcfg.calib_source,
+        );
+        self.session().compress_at(method, params, global_budget, &mut stream)
+    }
+
+    /// Compress with an explicit schedule and optional calibration
+    /// override (the Tables 2-4 knobs).
+    pub fn compress_scheduled(
+        &self,
+        params: &ParamStore,
+        method: &str,
         schedule: ModuleSchedule,
         calib_override: Option<&[CalibBatch]>,
-    ) -> Result<RomModel> {
-        let calib_own;
-        let calib = match calib_override {
-            Some(c) => c,
+    ) -> Result<CompressedModel> {
+        let mut vec_stream;
+        let mut world_stream;
+        let stream: &mut dyn CalibrationStream = match calib_override {
+            Some(c) => {
+                vec_stream = VecStream::new("override", c.to_vec());
+                &mut vec_stream
+            }
             None => {
-                calib_own = self.calibration(
+                world_stream = self.calib_stream(
                     self.xcfg.calib_rows,
                     self.xcfg.calib_seq,
                     self.xcfg.calib_source,
                 );
-                &calib_own
+                &mut world_stream
             }
         };
-        let pipeline = RomPipeline::new(self.runtime);
-        let rcfg = RomConfig { schedule, ..RomConfig::default() };
-        pipeline.compress(params, calib, &rcfg)
+        let compressor = resolve(method)?;
+        let global = schedule.global_budget(&self.cfg);
+        self.session().run(compressor.as_ref(), params, schedule, global, stream)
     }
 
-    /// Structured-pruning baseline at a global budget (same schedule family
-    /// as ROM so Table 1 compares like for like).
-    pub fn prune_at(
+    /// Recovery fine-tune of a compressed model. Pruned artifacts carry
+    /// masks and train masked (zeros stay zero); ROM artifacts train all
+    /// parameters.
+    pub fn finetune_compressed(
         &self,
-        params: &ParamStore,
-        global_budget: f64,
-        importance: Importance,
-    ) -> Result<PrunedModel> {
-        let schedule = paper_preset(&self.cfg, global_budget);
-        let calib = self.calibration(
-            self.xcfg.calib_rows.min(128),
-            self.xcfg.calib_seq,
-            self.xcfg.calib_source,
-        );
-        Pruner::new(self.runtime).prune(params, &calib, schedule, importance)
-    }
-
-    /// Recovery fine-tune for a pruned model (LLM-Pruner's ✓ rows).
-    pub fn finetune_pruned(
-        &self,
-        pruned: &PrunedModel,
+        cm: &CompressedModel,
         steps: usize,
         mut log: impl FnMut(usize, f32, f32),
     ) -> Result<ParamStore> {
@@ -203,8 +231,10 @@ impl<'rt> Experiment<'rt> {
             total_steps: steps,
             min_lr: self.xcfg.peak_lr / 60.0,
         };
-        let mut trainer =
-            Trainer::new(self.runtime, pruned.params.clone()).with_masks(pruned.masks.clone())?;
+        let mut trainer = Trainer::new(self.runtime, cm.params.clone());
+        if let Some(masks) = &cm.masks {
+            trainer = trainer.with_masks(masks.clone())?;
+        }
         trainer.run(&batches, &sched, 10, &mut log)?;
         Ok(trainer.params.clone())
     }

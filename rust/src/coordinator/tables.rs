@@ -1,20 +1,27 @@
 //! Table harness: regenerate every table of the paper's evaluation section
 //! on the MiniLLaMA reproduction (see DESIGN.md §4 for the mapping).
 //!
+//! Every row is produced through the unified compression API
+//! ([`crate::compress`]): methods are resolved by registry name and return
+//! [`CompressedModel`] artifacts, so adding a method to the registry adds
+//! it to `repro sweep` with no harness changes.
+//!
 //! - **Table 1** — dense vs ROM vs structured pruning (± fine-tune) at 80%
 //!   and 50% global budgets, with #Params/#MACs columns.
 //! - **Table 2** — calibration batch-size sweep (512/128/32 rows).
 //! - **Table 3** — calibration sequence-length sweep (128/64/32).
 //! - **Table 4** — calibration distribution (combination / single-task /
 //!   generic corpus).
+//! - **Method sweep** — any registered method list at one budget, in a
+//!   single comparison table (`repro sweep --methods a,b,c`).
 
 use anyhow::Result;
 
+use crate::compress::CompressedModel;
 use crate::data::{CalibSource, TaskKind};
 use crate::eval::{format_table, EvalReport};
 use crate::model::macs::{self, CompressionAccounting};
 use crate::model::ParamStore;
-use crate::prune::Importance;
 
 use super::experiment::Experiment;
 
@@ -26,7 +33,18 @@ fn cost_label(exp: &Experiment, acc: &CompressionAccounting) -> String {
     format!("{:.2}M/{:.2}G", rep.n_params as f64 / 1e6, rep.macs_giga())
 }
 
-/// Table 1: the headline comparison.
+/// Evaluate one compressed artifact into a labelled table row.
+fn method_row(
+    exp: &Experiment,
+    cm: &CompressedModel,
+    label: &str,
+    with_ppl: bool,
+) -> Result<(String, EvalReport)> {
+    let rep = exp.evaluate(&cm.params, with_ppl)?;
+    Ok((format!("{label} ({})", cost_label(exp, &cm.accounting)), rep))
+}
+
+/// Table 1: the headline comparison, via the method registry.
 pub fn table1(exp: &Experiment, base: &ParamStore, ft_steps: usize) -> Result<String> {
     let mut rows: Vec<(String, EvalReport)> = Vec::new();
 
@@ -37,21 +55,20 @@ pub fn table1(exp: &Experiment, base: &ParamStore, ft_steps: usize) -> Result<St
     for budget in [0.8, 0.5] {
         let pct = (budget * 100.0) as u32;
 
-        let pruned = exp.prune_at(base, budget, Importance::ActivationAware)?;
-        let acc = pruned.accounting(&exp.cfg);
-        let rep = exp.evaluate(&pruned.params, true)?;
-        rows.push((format!("prune@{pct}% ({})", cost_label(exp, &acc)), rep));
+        let pruned = exp.compress_method(base, "prune-activation", budget)?;
+        rows.push(method_row(exp, &pruned, &format!("prune@{pct}%"), true)?);
 
         if ft_steps > 0 {
-            let ft = exp.finetune_pruned(&pruned, ft_steps, |_, _, _| {})?;
+            let ft = exp.finetune_compressed(&pruned, ft_steps, |_, _, _| {})?;
             let rep = exp.evaluate(&ft, true)?;
-            rows.push((format!("prune+ft@{pct}% ({})", cost_label(exp, &acc)), rep));
+            rows.push((
+                format!("prune+ft@{pct}% ({})", cost_label(exp, &pruned.accounting)),
+                rep,
+            ));
         }
 
-        let rom = exp.compress_at(base, budget)?;
-        let acc = rom.accounting();
-        let rep = exp.evaluate(&rom.params, true)?;
-        rows.push((format!("LLM-ROM@{pct}% ({})", cost_label(exp, &acc)), rep));
+        let rom = exp.compress_method(base, "rom-feature", budget)?;
+        rows.push(method_row(exp, &rom, &format!("LLM-ROM@{pct}%"), true)?);
     }
     Ok(format_table("Table 1 — ROM vs structured pruning", &rows))
 }
@@ -65,7 +82,7 @@ pub fn table2(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String
     for rows_n in [top, top / 4, top / 16] {
         let calib = exp.calibration(rows_n, exp.xcfg.calib_seq, exp.xcfg.calib_source);
         let sched = crate::rom::paper_preset(&exp.cfg, budget);
-        let rom = exp.compress_with(base, sched, Some(&calib))?;
+        let rom = exp.compress_scheduled(base, "rom-feature", sched, Some(&calib))?;
         let rep = exp.evaluate(&rom.params, false)?;
         rows.push((format!("batch {rows_n}"), rep));
     }
@@ -78,7 +95,7 @@ pub fn table3(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String
     for seq in [128usize, 64, 32] {
         let calib = exp.calibration(exp.xcfg.calib_rows, seq, exp.xcfg.calib_source);
         let sched = crate::rom::paper_preset(&exp.cfg, budget);
-        let rom = exp.compress_with(base, sched, Some(&calib))?;
+        let rom = exp.compress_scheduled(base, "rom-feature", sched, Some(&calib))?;
         let rep = exp.evaluate(&rom.params, false)?;
         rows.push((format!("seq {seq}"), rep));
     }
@@ -95,11 +112,49 @@ pub fn table4(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String
     ] {
         let calib = exp.calibration(exp.xcfg.calib_rows, exp.xcfg.calib_seq, source);
         let sched = crate::rom::paper_preset(&exp.cfg, budget);
-        let rom = exp.compress_with(base, sched, Some(&calib))?;
+        let rom = exp.compress_scheduled(base, "rom-feature", sched, Some(&calib))?;
         let rep = exp.evaluate(&rom.params, false)?;
         rows.push((label.to_string(), rep));
     }
     Ok(format_table("Table 4 — choice of calibration dataset", &rows))
+}
+
+/// Multi-method comparison at one budget: dense, then each requested
+/// registry method (plus a fine-tuned row for mask-carrying methods when
+/// `ft_steps > 0`), in one table — the `repro sweep` payload.
+pub fn sweep_table(
+    exp: &Experiment,
+    base: &ParamStore,
+    methods: &[String],
+    budget: f64,
+    ft_steps: usize,
+) -> Result<String> {
+    let pct = (budget * 100.0).round() as u32;
+    let mut rows: Vec<(String, EvalReport)> = Vec::new();
+    rows.push((
+        format!("dense ({})", cost_label(exp, &CompressionAccounting::dense())),
+        exp.evaluate(base, true)?,
+    ));
+    // one rewindable calibration stream feeds every method; artifacts
+    // are evaluated and dropped one at a time (bounded peak memory)
+    let mut calib =
+        exp.calib_stream(exp.xcfg.calib_rows, exp.xcfg.calib_seq, exp.xcfg.calib_source);
+    exp.session().sweep_with(methods, base, budget, &mut calib, |method, cm| {
+        rows.push(method_row(exp, &cm, &format!("{method}@{pct}%"), true)?);
+        if ft_steps > 0 && cm.masks.is_some() {
+            let ft = exp.finetune_compressed(&cm, ft_steps, |_, _, _| {})?;
+            let rep = exp.evaluate(&ft, true)?;
+            rows.push((
+                format!("{method}+ft@{pct}% ({})", cost_label(exp, &cm.accounting)),
+                rep,
+            ));
+        }
+        Ok(())
+    })?;
+    Ok(format_table(
+        &format!("Method sweep @ {pct}% global budget"),
+        &rows,
+    ))
 }
 
 /// CLI entry: run the requested table(s) and print.

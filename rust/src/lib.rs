@@ -16,12 +16,19 @@
 //! - [`runtime`] — PJRT executable loading/caching/marshalling
 //! - [`model`] — MiniLLaMA schema, parameter store, MACs accounting
 //! - [`data`] — synthetic world, corpus, SynthSense tasks, tokenizer
-//! - [`rom`] — the paper's contribution: layerwise ROM compression
-//! - [`prune`] — LLM-Pruner-style structured baseline (± fine-tune)
+//! - [`rom`] — the paper's engine: layerwise ROM decomposition
+//! - [`prune`] — structured-pruning engine (channels + heads, ± masks)
+//! - [`compress`] — the unified compression API: the [`compress::Compressor`]
+//!   trait, the method registry (`rom-feature`, `rom-weight-svd`,
+//!   `prune-magnitude`, `prune-activation`), pluggable calibration
+//!   streams, the [`compress::CompressedModel`] artifact, and
+//!   [`compress::CompressionSession`] — the front door used by the CLI,
+//!   tables harness, examples, and benches
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
 
+pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

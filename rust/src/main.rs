@@ -6,25 +6,31 @@
 //! ```text
 //! repro info                         # manifest / model / platform summary
 //! repro gen-data [--seed N]          # preview world, corpus, tasks
-//! repro train   [--steps N] [--out ckpt.rtz]
-//! repro compress --ckpt ckpt.rtz --budget 0.8 [--out rom.rtz]
-//! repro prune   --ckpt ckpt.rtz --budget 0.8 [--finetune N]
-//! repro eval    --ckpt ckpt.rtz [--ppl]
-//! repro tables  --ckpt ckpt.rtz [--table 1|2|3|4|all]
-//! repro cost    --ckpt ckpt.rtz
+//! repro train    [--steps N] [--out ckpt.rtz]
+//! repro compress --ckpt ckpt.rtz [--method NAME] [--budget B]
+//! repro sweep    --ckpt ckpt.rtz [--methods a,b,c] [--budget B]
+//! repro eval     --ckpt ckpt.rtz [--ppl]
+//! repro tables   --ckpt ckpt.rtz [--table 1|2|3|4|all]
+//! repro cost     --ckpt ckpt.rtz
 //! ```
 //!
-//! Arg parsing is hand-rolled (offline build; no clap) but strict: unknown
-//! flags are errors.
+//! Arg parsing is hand-rolled (offline build; no clap) but strict and
+//! spec-driven: every subcommand declares its own flag set (including
+//! which flags are boolean), unknown flags are errors that print the
+//! subcommand's spec, and `repro help <cmd>` / `repro <cmd> --help` print
+//! it on demand. Compression methods are resolved through the
+//! [`llm_rom::compress`] registry, so `compress` and `sweep` pick up new
+//! methods with no CLI changes.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use llm_rom::compress::{self, CompressedModel};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::data::CalibSource;
-use llm_rom::model::{macs, ParamStore};
-use llm_rom::prune::Importance;
+use llm_rom::model::macs::{self, CompressionAccounting};
+use llm_rom::model::ParamStore;
 use llm_rom::runtime::Runtime;
 
 fn main() {
@@ -34,31 +40,194 @@ fn main() {
     }
 }
 
-/// Tiny strict flag parser: `--key value` pairs after the subcommand.
+// ---------------------------------------------------------------------------
+// Flag specs: one table per subcommand, shared flag constants.
+
+/// One flag of a subcommand. `value: None` marks a boolean switch (takes
+/// no value); `Some(placeholder)` marks a value-taking flag.
+#[derive(Clone, Copy)]
+struct Flag {
+    name: &'static str,
+    value: Option<&'static str>,
+    help: &'static str,
+}
+
+const fn flag(name: &'static str, value: &'static str, help: &'static str) -> Flag {
+    Flag { name, value: Some(value), help }
+}
+
+const fn switch(name: &'static str, help: &'static str) -> Flag {
+    Flag { name, value: None, help }
+}
+
+/// A subcommand spec: name, one-line summary, and its flag set.
+struct Cmd {
+    name: &'static str,
+    summary: &'static str,
+    flags: &'static [Flag],
+}
+
+const SEED: Flag = flag("seed", "N", "RNG seed for world/data generation");
+const CKPT: Flag = flag("ckpt", "FILE", "checkpoint to load (.rtz)");
+const BUDGET: Flag = flag("budget", "B", "global parameter budget in (0, 1]");
+const ROWS: Flag = flag("rows", "N", "calibration rows");
+const SEQ: Flag = flag("seq", "N", "calibration sequence length");
+const SOURCE: Flag = flag("source", "SRC", "calibration source: combination|arc-c|corpus");
+const FINETUNE: Flag = flag("finetune", "N", "recovery fine-tune steps");
+const PER_TASK: Flag = flag("per-task", "N", "eval instances per task");
+const OUT: Flag = flag("out", "FILE", "output checkpoint path (.rtz)");
+
+static COMMANDS: &[Cmd] = &[
+    Cmd { name: "info", summary: "manifest / model / platform summary", flags: &[] },
+    Cmd { name: "gen-data", summary: "preview world, corpus, tasks", flags: &[SEED] },
+    Cmd {
+        name: "train",
+        summary: "train the base model on the synthetic corpus",
+        flags: &[flag("steps", "N", "training steps"), OUT, SEED],
+    },
+    Cmd {
+        name: "compress",
+        summary: "compress a checkpoint with a registered method",
+        flags: &[
+            CKPT,
+            flag("method", "NAME", "registry name (default rom-feature); see `repro sweep`"),
+            BUDGET,
+            OUT,
+            FINETUNE,
+            ROWS,
+            SEQ,
+            SOURCE,
+            SEED,
+        ],
+    },
+    Cmd {
+        name: "sweep",
+        summary: "run several methods at one budget; one comparison table",
+        flags: &[
+            CKPT,
+            flag("methods", "A,B,C", "comma-separated registry names (default: all registered)"),
+            BUDGET,
+            FINETUNE,
+            ROWS,
+            SEQ,
+            SOURCE,
+            PER_TASK,
+            SEED,
+        ],
+    },
+    Cmd {
+        name: "eval",
+        summary: "zero-shot six-task evaluation (+ optional perplexity)",
+        flags: &[CKPT, switch("ppl", "also report corpus perplexity"), PER_TASK, SEED],
+    },
+    Cmd {
+        name: "generate",
+        summary: "sample from a checkpoint (KV-cached rust decoding)",
+        flags: &[
+            CKPT,
+            flag("prompt", "TEXT", "prompt text"),
+            flag("max-new", "N", "tokens to generate"),
+            flag("temp", "T", "sampling temperature (0 = greedy)"),
+            SEED,
+        ],
+    },
+    Cmd {
+        name: "tables",
+        summary: "regenerate the paper's tables 1-4",
+        flags: &[CKPT, flag("table", "1|2|3|4|all", "which table(s)"), FINETUNE, BUDGET, ROWS, SEQ, SOURCE, PER_TASK, SEED],
+    },
+    Cmd {
+        name: "cost",
+        summary: "§4 computational-cost table across budgets",
+        flags: &[CKPT, ROWS, SEQ, SEED],
+    },
+    Cmd {
+        name: "spectrum",
+        summary: "latent-feature spectra of the activation covariances",
+        flags: &[CKPT, flag("blocks", "A..B", "block range (default: all)"), ROWS, SEQ, SEED],
+    },
+];
+
+/// Flags valid for every subcommand.
+static GLOBAL_FLAGS: &[Flag] = &[
+    flag("artifacts", "DIR", "artifacts directory (default ./artifacts)"),
+    switch("help", "print this subcommand's flags"),
+];
+
+fn command_spec(name: &str) -> Option<&'static Cmd> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+fn find_flag(spec: &'static Cmd, key: &str) -> Option<&'static Flag> {
+    spec.flags.iter().chain(GLOBAL_FLAGS.iter()).find(|f| f.name == key)
+}
+
+fn usage(spec: &Cmd) -> String {
+    let mut s = format!("repro {} — {}\n\nflags:\n", spec.name, spec.summary);
+    for f in spec.flags.iter().chain(GLOBAL_FLAGS.iter()) {
+        let head = match f.value {
+            Some(v) => format!("--{} {v}", f.name),
+            None => format!("--{}", f.name),
+        };
+        s.push_str(&format!("  {head:<18} {}\n", f.help));
+    }
+    s
+}
+
+fn general_help() -> String {
+    let mut s = String::from("repro — LLM-ROM reproduction CLI\n\n");
+    for c in COMMANDS {
+        s.push_str(&format!("  {:<10} {}\n", c.name, c.summary));
+    }
+    s.push_str("\ncompression methods (for compress/sweep): ");
+    s.push_str(&compress::METHODS.join(", "));
+    s.push_str("\nrun `repro help <command>` or `repro <command> --help` for flags\n");
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Strict spec-driven parser.
+
 struct Args {
     cmd: String,
+    /// `repro help <topic>` argument.
+    topic: Option<String>,
     flags: BTreeMap<String, String>,
 }
 
 impl Args {
     fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    fn parse_from(argv: Vec<String>) -> Result<Args> {
+        let mut it = argv.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+            return Ok(Args { cmd: "help".into(), topic: it.next(), flags: BTreeMap::new() });
+        }
+        let spec = command_spec(&cmd)
+            .with_context(|| format!("unknown subcommand `{cmd}` (try `repro help`)"))?;
         let mut flags = BTreeMap::new();
         while let Some(k) = it.next() {
             let key = k
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got `{k}`"))?
                 .to_string();
-            // boolean flags take no value
-            if matches!(key.as_str(), "ppl" | "no-pallas" | "magnitude") {
-                flags.insert(key, "true".into());
-                continue;
+            let f = find_flag(spec, &key).with_context(|| {
+                format!("unknown flag --{key} for `{cmd}`\n\n{}", usage(spec))
+            })?;
+            match f.value {
+                None => {
+                    flags.insert(key, "true".into());
+                }
+                Some(_) => {
+                    let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+                    flags.insert(key, v);
+                }
             }
-            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
-            flags.insert(key, v);
         }
-        Ok(Args { cmd, flags })
+        Ok(Args { cmd, topic: None, flags })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -79,18 +248,30 @@ impl Args {
 
 fn run() -> Result<()> {
     let args = Args::parse()?;
+    if args.cmd == "help" {
+        match args.topic.as_deref() {
+            Some(topic) => {
+                let spec = command_spec(topic)
+                    .with_context(|| format!("unknown subcommand `{topic}` (try `repro help`)"))?;
+                print!("{}", usage(spec));
+            }
+            None => print!("{}", general_help()),
+        }
+        return Ok(());
+    }
+    if args.get("help").is_some() {
+        let spec = command_spec(&args.cmd).expect("validated during parse");
+        print!("{}", usage(spec));
+        return Ok(());
+    }
     let artifacts = args.get_or("artifacts", llm_rom::DEFAULT_ARTIFACTS);
 
     match args.cmd.as_str() {
-        "help" | "--help" | "-h" => {
-            print!("{HELP}");
-            Ok(())
-        }
         "info" => cmd_info(&artifacts),
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&artifacts, &args),
         "compress" => cmd_compress(&artifacts, &args),
-        "prune" => cmd_prune(&artifacts, &args),
+        "sweep" => cmd_sweep(&artifacts, &args),
         "eval" => cmd_eval(&artifacts, &args),
         "generate" => cmd_generate(&artifacts, &args),
         "tables" => cmd_tables(&artifacts, &args),
@@ -100,34 +281,21 @@ fn run() -> Result<()> {
     }
 }
 
-const HELP: &str = "\
-repro — LLM-ROM reproduction CLI
-
-  info                          manifest / model / platform summary
-  gen-data  [--seed N]          preview world, corpus, tasks
-  train     [--steps N] [--out ckpt.rtz] [--seed N]
-  compress  --ckpt C --budget B [--out rom.rtz] [--rows N] [--seq N]
-            [--source combination|arc-c|corpus]
-  prune     --ckpt C --budget B [--finetune N] [--magnitude] [--out p.rtz]
-  eval      --ckpt C [--ppl] [--per-task N]
-  generate  --ckpt C --prompt \"text\" [--max-new N] [--temp T] [--seed N]
-  tables    --ckpt C [--table 1|2|3|4|all] [--finetune N]
-  cost      --ckpt C            §4 cost table
-  spectrum  --ckpt C [--blocks a..b] [--rows N]   latent-feature spectra
-Global: [--artifacts DIR] (default ./artifacts)
-";
-
 fn xcfg_from(args: &Args) -> Result<ExperimentConfig> {
-    let mut x = ExperimentConfig::default();
-    x.seed = args.parse_num("seed", x.seed)?;
-    x.train_steps = args.parse_num("steps", x.train_steps)?;
-    x.calib_rows = args.parse_num("rows", x.calib_rows)?;
-    x.calib_seq = args.parse_num("seq", x.calib_seq)?;
-    x.eval_per_task = args.parse_num("per-task", x.eval_per_task)?;
-    if let Some(src) = args.get("source") {
-        x.calib_source = parse_source(src)?;
-    }
-    Ok(x)
+    let d = ExperimentConfig::default();
+    let calib_source = match args.get("source") {
+        Some(src) => parse_source(src)?,
+        None => d.calib_source,
+    };
+    Ok(ExperimentConfig {
+        seed: args.parse_num("seed", d.seed)?,
+        train_steps: args.parse_num("steps", d.train_steps)?,
+        calib_rows: args.parse_num("rows", d.calib_rows)?,
+        calib_seq: args.parse_num("seq", d.calib_seq)?,
+        eval_per_task: args.parse_num("per-task", d.eval_per_task)?,
+        calib_source,
+        ..d
+    })
 }
 
 fn parse_source(s: &str) -> Result<CalibSource> {
@@ -164,6 +332,7 @@ fn cmd_info(artifacts: &str) -> Result<()> {
     );
     println!("params          : {}", cfg.n_params());
     println!("decoder fraction: {:.2}%", 100.0 * cfg.decoder_fraction());
+    println!("methods         : {}", compress::METHODS.join(", "));
     println!("entries         : {}", m.entries.len());
     for (name, e) in &m.entries {
         println!(
@@ -215,15 +384,10 @@ fn cmd_train(artifacts: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_compress(artifacts: &str, args: &Args) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
-    let exp = Experiment::new(&rt, xcfg_from(args)?);
-    let params = load_ckpt(&exp, args)?;
-    let budget: f64 = args.parse_num("budget", 0.8)?;
-    println!("ROM compression to {:.0}% global budget…", budget * 100.0);
-    let rom = exp.compress_at(&params, budget)?;
-    let rep = macs::report(&exp.cfg, &rom.accounting(), 64);
-    let dense = macs::report(&exp.cfg, &macs::CompressionAccounting::dense(), 64);
+/// Print the params/MACs delta of a compressed artifact vs dense.
+fn print_cost(exp: &Experiment, cm: &CompressedModel) {
+    let rep = cm.macs_report(&exp.cfg, 64);
+    let dense = macs::report(&exp.cfg, &CompressionAccounting::dense(), 64);
     println!(
         "params {} -> {} ({:.1}%), MACs {:.2}G -> {:.2}G",
         dense.n_params,
@@ -232,47 +396,75 @@ fn cmd_compress(artifacts: &str, args: &Args) -> Result<()> {
         dense.macs_giga(),
         rep.macs_giga()
     );
-    println!(
-        "{} layers in {:.1}s ({:.2} s/layer), peak capture {:.1} MB",
-        rom.timings.len(),
-        rom.total_rom_seconds(),
-        rom.mean_seconds_per_layer(),
-        rom.peak_capture_bytes as f64 / 1e6
-    );
-    let out = args.get_or("out", "runs/rom.rtz");
-    ensure_parent(&out)?;
-    rom.params.save(&out)?;
-    println!("saved {out}");
-    Ok(())
+    if !cm.timings.is_empty() {
+        println!(
+            "{} layers in {:.1}s ({:.2} s/layer), peak capture {:.1} MB",
+            cm.timings.len(),
+            cm.total_seconds(),
+            cm.mean_seconds_per_layer(),
+            cm.peak_capture_bytes as f64 / 1e6
+        );
+    }
 }
 
-fn cmd_prune(artifacts: &str, args: &Args) -> Result<()> {
+fn cmd_compress(artifacts: &str, args: &Args) -> Result<()> {
     let rt = Runtime::new(artifacts)?;
     let exp = Experiment::new(&rt, xcfg_from(args)?);
     let params = load_ckpt(&exp, args)?;
+    let method = args.get_or("method", "rom-feature");
+    compress::resolve(&method)?; // fail fast on unknown names
     let budget: f64 = args.parse_num("budget", 0.8)?;
-    let importance = if args.get("magnitude").is_some() {
-        Importance::Magnitude
-    } else {
-        Importance::ActivationAware
-    };
-    println!("structured pruning to {:.0}% ({importance:?})…", budget * 100.0);
-    let pruned = exp.prune_at(&params, budget, importance)?;
-    let rep = macs::report(&exp.cfg, &pruned.accounting(&exp.cfg), 64);
-    println!("params after: {} ({:.2}G MACs)", rep.n_params, rep.macs_giga());
+    println!("compressing with `{method}` to {:.0}% global budget…", budget * 100.0);
+    let mut cm = exp.compress_method(&params, &method, budget)?;
+    print_cost(&exp, &cm);
     let finetune: usize = args.parse_num("finetune", 0)?;
-    let final_params = if finetune > 0 {
-        println!("recovery fine-tune: {finetune} steps…");
-        exp.finetune_pruned(&pruned, finetune, |s, l, _| {
+    if finetune > 0 {
+        if cm.masks.is_some() {
+            println!("recovery fine-tune (masked): {finetune} steps…");
+        } else {
+            println!(
+                "recovery fine-tune (unconstrained): {finetune} steps — training leaves \
+                 the low-rank manifold, so the artifact's accounting reverts to dense"
+            );
+        }
+        cm.params = exp.finetune_compressed(&cm, finetune, |s, l, _| {
             println!("  step {s:>4}  loss {l:.4}");
-        })?
-    } else {
-        pruned.params.clone()
-    };
-    let out = args.get_or("out", "runs/pruned.rtz");
+        })?;
+        if cm.masks.is_none() {
+            // the saved metadata must describe the saved weights
+            cm.accounting = CompressionAccounting::dense();
+        }
+    }
+    let out = args.get_or("out", "runs/compressed.rtz");
     ensure_parent(&out)?;
-    final_params.save(&out)?;
-    println!("saved {out}");
+    cm.save(&out)?;
+    println!(
+        "saved {out} (method {}, budget {:.2}, calib {})",
+        cm.provenance.method, cm.provenance.global_budget, cm.provenance.calib_label
+    );
+    Ok(())
+}
+
+fn cmd_sweep(artifacts: &str, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let exp = Experiment::new(&rt, xcfg_from(args)?);
+    let params = load_ckpt(&exp, args)?;
+    let methods: Vec<String> = args
+        .get("methods")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| compress::METHODS.join(","))
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for m in &methods {
+        compress::resolve(m)?; // fail fast on unknown names
+    }
+    let budget: f64 = args.parse_num("budget", 0.8)?;
+    let ft_steps: usize = args.parse_num("finetune", 0)?;
+    println!("sweeping {} methods at {:.0}% budget…", methods.len(), budget * 100.0);
+    let table = llm_rom::coordinator::sweep_table(&exp, &params, &methods, budget, ft_steps)?;
+    println!("{table}");
     Ok(())
 }
 
@@ -355,16 +547,83 @@ fn cmd_cost(artifacts: &str, args: &Args) -> Result<()> {
     let params = load_ckpt(&exp, args)?;
     let mut report = llm_rom::coordinator::CostReport::default();
     for budget in [0.9, 0.8, 0.5] {
-        let rom = exp.compress_at(&params, budget)?;
-        report.push(format!("{:.0}%", budget * 100.0), &rom);
+        let cm = exp.compress_method(&params, "rom-feature", budget)?;
+        report.push(format!("{:.0}%", budget * 100.0), &cm);
     }
     println!("{}", report.format());
-    let bound =
-        llm_rom::coordinator::cost::layerwise_memory_bound(&exp.cfg, exp.xcfg.calib_rows, exp.xcfg.calib_seq);
+    let bound = llm_rom::coordinator::cost::layerwise_memory_bound(
+        &exp.cfg,
+        exp.xcfg.calib_rows,
+        exp.xcfg.calib_seq,
+    );
     println!("layerwise memory bound (this config): {:.1} MB", bound as f64 / 1e6);
     println!(
         "layerwise memory bound (LLaMA-7B @512 rows): {:.2} GB  (paper: <10 GB)",
         llm_rom::coordinator::cost::llama7b_memory_bound_bytes() as f64 / 1e9
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn per_subcommand_flag_specs() {
+        // `--ppl` is a boolean only where `eval` declares it…
+        let a = Args::parse_from(argv(&["eval", "--ckpt", "c.rtz", "--ppl"])).unwrap();
+        assert_eq!(a.get("ppl"), Some("true"));
+        // …and is rejected by subcommands that don't declare it, instead
+        // of being silently swallowed as a boolean (the old global list).
+        assert!(Args::parse_from(argv(&["compress", "--ppl"])).is_err());
+        // value-taking flags still take values where declared
+        let a = Args::parse_from(argv(&["compress", "--ckpt", "c.rtz", "--method", "rom-feature"]))
+            .unwrap();
+        assert_eq!(a.get("method"), Some("rom-feature"));
+    }
+
+    #[test]
+    fn unknown_flags_and_commands_error_with_spec() {
+        let e = Args::parse_from(argv(&["eval", "--bogus", "1"])).unwrap_err();
+        assert!(e.to_string().contains("--bogus"));
+        assert!(e.to_string().contains("--ppl"), "error should print the spec: {e}");
+        assert!(Args::parse_from(argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_forms() {
+        let a = Args::parse_from(argv(&["help", "compress"])).unwrap();
+        assert_eq!(a.cmd, "help");
+        assert_eq!(a.topic.as_deref(), Some("compress"));
+        let a = Args::parse_from(argv(&["--help", "sweep"])).unwrap();
+        assert_eq!(a.topic.as_deref(), Some("sweep"));
+        let a = Args::parse_from(argv(&["compress", "--help"])).unwrap();
+        assert_eq!(a.get("help"), Some("true"));
+        assert!(Args::parse_from(argv(&[])).unwrap().cmd == "help");
+    }
+
+    #[test]
+    fn usage_lists_every_flag() {
+        let spec = command_spec("sweep").unwrap();
+        let u = usage(spec);
+        for f in spec.flags {
+            assert!(u.contains(&format!("--{}", f.name)), "{u}");
+        }
+        assert!(u.contains("--artifacts"));
+        let h = general_help();
+        for c in COMMANDS {
+            assert!(h.contains(c.name));
+        }
+        assert!(h.contains("rom-feature"));
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse_from(argv(&["compress", "--budget"])).is_err());
+        assert!(Args::parse_from(argv(&["eval", "stray"])).is_err());
+    }
 }

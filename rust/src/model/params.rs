@@ -32,7 +32,11 @@ impl ParamStore {
         Self::from_map(cfg, map)
     }
 
-    pub fn from_map(cfg: &ModelConfig, map: TensorMap) -> Result<ParamStore> {
+    pub fn from_map(cfg: &ModelConfig, mut map: TensorMap) -> Result<ParamStore> {
+        // `__`-prefixed entries are reserved metadata (e.g. the compression
+        // provenance written by `compress::CompressedModel::save`) — not
+        // parameters; any `.rtz` consumer is free to skip them.
+        map.retain(|k, _| !k.starts_with("__"));
         let names = schema::param_names(cfg);
         for name in &names {
             let t = map
@@ -167,6 +171,18 @@ mod tests {
         assert_eq!(q.get("final_norm").unwrap().as_f32().unwrap(), &[1.0f32; 8][..]);
         assert!((p.distance(&q).unwrap()).abs() < 1e-12);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metadata_entries_are_skipped() {
+        let cfg = tiny_cfg();
+        let p = ParamStore::zeros(&cfg);
+        let mut map: TensorMap =
+            p.names().iter().map(|n| (n.clone(), p.get(n).unwrap().clone())).collect();
+        map.insert("__compress_meta__".into(), Tensor::U8 { shape: vec![2], data: vec![123, 125] });
+        let q = ParamStore::from_map(&cfg, map).unwrap();
+        assert_eq!(q.n_params(), cfg.n_params());
+        assert!(q.get("__compress_meta__").is_err());
     }
 
     #[test]

@@ -66,16 +66,22 @@ impl PrunedModel {
     }
 }
 
-/// Structured pruner bound to one runtime (for activation capture).
+/// Structured pruner, optionally bound to a runtime (activation capture
+/// is only needed for [`Importance::ActivationAware`]).
 pub struct Pruner<'rt> {
-    runtime: &'rt Runtime,
+    runtime: Option<&'rt Runtime>,
     cfg: ModelConfig,
 }
 
 impl<'rt> Pruner<'rt> {
     pub fn new(runtime: &'rt Runtime) -> Pruner<'rt> {
         let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
-        Pruner { runtime, cfg }
+        Pruner { runtime: Some(runtime), cfg }
+    }
+
+    /// Runtime-free pruner: magnitude importance only.
+    pub fn offline(cfg: ModelConfig) -> Pruner<'static> {
+        Pruner { runtime: None, cfg }
     }
 
     /// Prune the scheduled trailing modules to `schedule.module_budget` of
@@ -228,6 +234,9 @@ impl<'rt> Pruner<'rt> {
         params: &ParamStore,
         calib: &[CalibBatch],
     ) -> Result<BTreeMap<usize, InputNorms>> {
+        let runtime = self
+            .runtime
+            .context("activation-aware pruning needs a runtime for capture")?;
         let cfg = &self.cfg;
         let (eb, es) = (cfg.eval_batch, cfg.eval_seq);
         let mut out = BTreeMap::new();
@@ -236,10 +245,10 @@ impl<'rt> Pruner<'rt> {
         let mut hidden: Vec<Tensor> = Vec::new();
         for b in calib {
             let tokens = Tensor::from_i32(&[eb, es], b.tokens.clone());
-            let o = self.runtime.execute("embed_fwd", &[&embed, &tokens])?;
+            let o = runtime.execute("embed_fwd", &[&embed, &tokens])?;
             hidden.push(o.into_iter().next().unwrap());
         }
-        let cap_names = self.runtime.manifest().capture_names.clone();
+        let cap_names = runtime.manifest().capture_names.clone();
         let idx_of = |n: &str| cap_names.iter().position(|c| c == n).map(|i| i + 1);
         let (ix_attn, ix_ffn) = (
             idx_of("x_attn").context("x_attn capture")?,
@@ -252,7 +261,7 @@ impl<'rt> Pruner<'rt> {
             for (bi, cb) in calib.iter().enumerate() {
                 let mut args = params.block_flat(block);
                 args.push(&hidden[bi]);
-                let outs = self.runtime.execute("block_capture", &args)?;
+                let outs = runtime.execute("block_capture", &args)?;
                 let flags = valid_row_flags(cb.batch, cb.seq, &cb.valid);
                 accumulate_sq(&outs[ix_attn], &flags, &mut attn_sq)?;
                 accumulate_sq(&outs[ix_ffn], &flags, &mut ffn_sq)?;
@@ -309,7 +318,9 @@ fn membership(n: usize, keep: &[usize]) -> Vec<bool> {
 }
 
 /// Build the per-matrix masks (1 = kept) in maskable schema order.
-fn build_masks(
+/// Public so compressed artifacts can rebuild masks from their serialized
+/// kept-index sets on load (see [`crate::compress::CompressedModel`]).
+pub fn build_masks(
     cfg: &ModelConfig,
     kept_ffn: &BTreeMap<usize, Vec<usize>>,
     kept_heads: &BTreeMap<usize, Vec<usize>>,

@@ -18,4 +18,6 @@ pub mod pipeline;
 pub use budget::{paper_preset, rank_for_budget, solve_module_budget, ModuleSchedule};
 pub use covariance::CovarianceAccumulator;
 pub use decompose::{decompose_weight, RomFactors};
-pub use pipeline::{DecompositionSpace, RomConfig, RomModel, RomPipeline};
+pub use pipeline::{
+    compress_weight_space, DecompositionSpace, LayerTiming, RomConfig, RomModel, RomPipeline,
+};

@@ -162,7 +162,7 @@ impl<'rt> RomPipeline<'rt> {
         rcfg: &RomConfig,
     ) -> Result<RomModel> {
         if rcfg.space == DecompositionSpace::Weight {
-            return self.compress_weight_space(params, rcfg);
+            return compress_weight_space(&self.cfg, params, rcfg);
         }
         if !rcfg.propagate_errors {
             return self.compress_without_propagation(params, calib, rcfg);
@@ -324,41 +324,6 @@ impl<'rt> RomPipeline<'rt> {
         Ok(out)
     }
 
-    /// Ablation path: weight-space truncated SVD (`cov := W·Wᵀ`), no
-    /// calibration data at all. Everything else (ranks, schedule,
-    /// re-parameterization) identical to the feature-space path.
-    fn compress_weight_space(&self, params: &ParamStore, rcfg: &RomConfig) -> Result<RomModel> {
-        let mut out = params.clone();
-        let mut factors = BTreeMap::new();
-        let mut timings = Vec::new();
-        for block in 0..self.cfg.n_layers {
-            if !rcfg.schedule.compresses(block) {
-                continue;
-            }
-            for (name, d_out, d_in) in block_matrices(&self.cfg, block) {
-                let t0 = Instant::now();
-                let w = out.get(&name)?.to_matrix()?;
-                let wwt = crate::linalg::matmul(&w, &w.transpose());
-                let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
-                let f = decompose_weight(&w, &wwt, rank)?;
-                out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
-                timings.push(LayerTiming {
-                    name: name.clone(),
-                    covariance_s: 0.0,
-                    decompose_s: t0.elapsed().as_secs_f64(),
-                });
-                factors.insert(name, f);
-            }
-        }
-        Ok(RomModel {
-            params: out,
-            factors,
-            schedule: rcfg.schedule,
-            timings,
-            peak_capture_bytes: 0,
-        })
-    }
-
     /// Ablation path: feature-space ROM **without** error propagation —
     /// every layer is calibrated against the *original* model's
     /// activations (the paper's §2 argues the propagating variant is
@@ -498,6 +463,46 @@ impl<'rt> RomPipeline<'rt> {
         }
         Ok(())
     }
+}
+
+/// Ablation path: weight-space truncated SVD (`cov := W·Wᵀ`), no
+/// calibration data and no runtime at all — everything else (ranks,
+/// schedule, re-parameterization) identical to the feature-space path.
+/// A free function so offline sessions (no PJRT) can run it too.
+pub fn compress_weight_space(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    rcfg: &RomConfig,
+) -> Result<RomModel> {
+    let mut out = params.clone();
+    let mut factors = BTreeMap::new();
+    let mut timings = Vec::new();
+    for block in 0..cfg.n_layers {
+        if !rcfg.schedule.compresses(block) {
+            continue;
+        }
+        for (name, d_out, d_in) in block_matrices(cfg, block) {
+            let t0 = Instant::now();
+            let w = out.get(&name)?.to_matrix()?;
+            let wwt = crate::linalg::matmul(&w, &w.transpose());
+            let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
+            let f = decompose_weight(&w, &wwt, rank)?;
+            out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
+            timings.push(LayerTiming {
+                name: name.clone(),
+                covariance_s: 0.0,
+                decompose_s: t0.elapsed().as_secs_f64(),
+            });
+            factors.insert(name, f);
+        }
+    }
+    Ok(RomModel {
+        params: out,
+        factors,
+        schedule: rcfg.schedule,
+        timings,
+        peak_capture_bytes: 0,
+    })
 }
 
 /// (d_out, d_in) of a block matrix by name.

@@ -5,15 +5,35 @@
 //! generated cases with shrink-free but reproducible seeds (failure
 //! messages include the case seed).
 
+use llm_rom::compress::{resolve, CompressedModel, CompressionSession, EmptyStream, METHODS};
 use llm_rom::linalg::{eigh, eigh_jacobi, matmul, Matrix};
-use llm_rom::model::ModelConfig;
+use llm_rom::model::{param_shape, ModelConfig, ParamStore};
 use llm_rom::rom::budget::{candidates, rank_for_budget, solve_module_budget, ModuleSchedule};
 use llm_rom::rom::decompose::{factors_from_eigen, rank_for_energy};
 use llm_rom::rom::CovarianceAccumulator;
+use llm_rom::tensor::Tensor;
 use llm_rom::util::json::Json;
 use llm_rom::util::Rng;
 
 const CASES: u64 = 40;
+
+/// Tiny schema for offline compression properties (runtime-free).
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() }
+}
+
+/// A ParamStore filled with seeded gaussian values.
+fn random_params(cfg: &ModelConfig, seed: u64) -> ParamStore {
+    let mut p = ParamStore::zeros(cfg);
+    let mut rng = Rng::new(seed);
+    for name in p.names().to_vec() {
+        let shape = param_shape(cfg, &name);
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        p.set(&name, Tensor::from_f32(&shape, data)).unwrap();
+    }
+    p
+}
 
 /// Property: eigh residuals, orthonormality, and agreement with Jacobi on
 /// arbitrary symmetric matrices.
@@ -181,6 +201,114 @@ fn prop_json_roundtrip() {
         let text = v.to_string();
         let v2 = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
         assert_eq!(v, v2, "case {case}: {text}");
+    }
+}
+
+/// Property: every registered `Compressor` at budget 1.0 is a
+/// near-identity on params (exactly identity: budget 1.0 means "compress
+/// nothing", which needs neither runtime nor calibration data).
+#[test]
+fn prop_every_compressor_identity_at_budget_one() {
+    let cfg = tiny_cfg();
+    let session = CompressionSession::offline(cfg.clone());
+    for case in 0..8u64 {
+        let params = random_params(&cfg, case * 271 + 19);
+        for method in METHODS {
+            let mut calib = EmptyStream;
+            let cm = session.compress_at(method, &params, 1.0, &mut calib).unwrap();
+            let d = cm.params.distance(&params).unwrap();
+            assert!(d < 1e-12, "case {case} {method}: distance {d}");
+            assert!(cm.accounting.layers.is_empty(), "case {case} {method}");
+            assert_eq!(cm.provenance.method, *method);
+        }
+    }
+}
+
+/// Property: registry names resolve to compressors reporting the same
+/// name; unknown names are rejected.
+#[test]
+fn prop_registry_names_are_canonical() {
+    for name in METHODS {
+        assert_eq!(resolve(name).unwrap().name(), *name);
+    }
+    for bogus in ["", "rom", "ROM-FEATURE", "prune", "magnitude"] {
+        assert!(resolve(bogus).is_err(), "`{bogus}` should not resolve");
+    }
+}
+
+/// Property: `CompressedModel` round-trips through `.rtz` — params,
+/// accounting, and provenance all survive — across random budgets, for
+/// both data-free method families.
+#[test]
+fn prop_compressed_model_rtz_roundtrip() {
+    let cfg = tiny_cfg();
+    let session = CompressionSession::offline(cfg.clone());
+    let dir = std::env::temp_dir().join(format!("cm_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..10u64 {
+        let mut rng = Rng::new(case * 7001 + 23);
+        let params = random_params(&cfg, case * 733 + 5);
+        let budget = 0.45 + rng.f64() * 0.5;
+        for method in ["rom-weight-svd", "prune-magnitude"] {
+            let mut calib = EmptyStream;
+            let cm = session.compress_at(method, &params, budget, &mut calib).unwrap();
+            let path = dir.join(format!("{method}_{case}.rtz"));
+            cm.save(&path).unwrap();
+            let back = CompressedModel::load(&cfg, &path).unwrap();
+            let d = back.params.distance(&cm.params).unwrap();
+            assert!(d < 1e-12, "case {case} {method}: params distance {d}");
+            assert_eq!(back.accounting.layers, cm.accounting.layers, "case {case} {method}");
+            assert_eq!(back.provenance, cm.provenance, "case {case} {method}");
+            assert_eq!(back.timings.len(), cm.timings.len(), "case {case} {method}");
+            assert_eq!(back.peak_capture_bytes, cm.peak_capture_bytes);
+            // pruned artifacts round-trip their kept sets and rebuild
+            // identical masks, so masked fine-tune works after load
+            assert_eq!(back.kept, cm.kept, "case {case} {method}");
+            match (&cm.masks, &back.masks) {
+                (None, None) => {}
+                (Some(a), Some(b)) => assert_eq!(a, b, "case {case} {method}: masks differ"),
+                _ => panic!("case {case} {method}: masks presence changed across round-trip"),
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: offline sessions run data-free methods below budget 1.0 and
+/// reject activation-capturing ones with a clear error.
+#[test]
+fn prop_offline_session_capability_split() {
+    let cfg = tiny_cfg();
+    let session = CompressionSession::offline(cfg.clone());
+    let params = random_params(&cfg, 99);
+    for method in ["rom-weight-svd", "prune-magnitude"] {
+        let mut calib = EmptyStream;
+        let cm = session.compress_at(method, &params, 0.8, &mut calib).unwrap();
+        assert!(!cm.accounting.layers.is_empty(), "{method} compressed nothing");
+    }
+    for method in ["rom-feature", "prune-activation"] {
+        let mut calib = EmptyStream;
+        let err = session.compress_at(method, &params, 0.8, &mut calib).unwrap_err();
+        assert!(err.to_string().contains("runtime"), "{method}: {err}");
+    }
+}
+
+/// Property: `rank_for_budget` is monotone non-decreasing in the budget
+/// and always within [1, min(d_out, d_in)].
+#[test]
+fn prop_rank_for_budget_monotone() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 40487 + 29);
+        let d_out = 2 + rng.below(300);
+        let d_in = 2 + rng.below(300);
+        let mut prev = 0usize;
+        for step in 1..=40 {
+            let b = step as f64 / 40.0;
+            let r = rank_for_budget(d_out, d_in, b);
+            assert!(r >= 1 && r <= d_out.min(d_in), "case {case} b={b}: rank {r}");
+            assert!(r >= prev, "case {case} b={b}: rank {r} < previous {prev}");
+            prev = r;
+        }
     }
 }
 

@@ -1,0 +1,141 @@
+//! Offline stand-in for the `anyhow` crate, carrying exactly the API
+//! surface this workspace uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Error values are a flattened message chain — context
+//! layers are joined with `": "` like anyhow's `{:#}` formatting — which
+//! keeps diagnostics readable without carrying backtraces or dyn chains.
+
+use std::fmt;
+
+/// A flattened error message (context chain joined with `": "`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (`anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (used by the [`Context`] impls).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures of a `Result` or emptiness of an `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn bail_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Compile-time stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the PJRT C API and the XLA CPU plugin, which are
+//! not present in every build environment. This stub carries the exact
+//! type/method surface `llm_rom::runtime` consumes so the workspace always
+//! compiles; every entry point fails at `PjRtClient::cpu()` with a clear
+//! message, which the callers (CLI, examples, integration tests) treat as
+//! "AOT runtime unavailable — skip". To execute the AOT artifacts, point
+//! the `xla` path dependency in `rust/Cargo.toml` at the real bindings —
+//! no `llm_rom` source changes are needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: built against the xla stub (see rust/vendor/xla)";
+
+/// Error type of the stubbed bindings.
+pub struct XlaError(String);
+
+impl XlaError {
+    fn unavailable() -> XlaError {
+        XlaError(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types of the literals the runtime marshals. The full bindings
+/// expose many more; carrying a superset here keeps wildcard match arms
+/// in consumers reachable (no `unreachable_patterns` warnings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+    Bf16,
+}
+
+/// Host-side literal (opaque in the stub; never instantiated).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module (opaque).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// XLA computation handle (opaque).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer returned by execution (opaque).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Compiled executable handle (opaque).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// PJRT client handle. In the stub, [`PjRtClient::cpu`] always fails — the
+/// single choke point that makes the whole runtime report "unavailable".
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_constructors_fail_cleanly() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8])
+            .is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+    }
+}

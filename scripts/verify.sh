@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Repo verification: build + test + (when the components are installed)
+# format and lint checks. This is the tier-1 gate plus the optional
+# tooling; run it from anywhere: `bash scripts/verify.sh` or `make verify`.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo build --release --examples --benches =="
+cargo build --release --examples --benches
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --check
+else
+  echo "== cargo fmt --check == (skipped: rustfmt not installed)"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy --all-targets -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== cargo clippy == (skipped: clippy not installed)"
+fi
+
+echo "verify: OK"
