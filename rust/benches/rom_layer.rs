@@ -5,24 +5,66 @@
 //! a per-method baseline driving every registered compressor through the
 //! unified `Compressor` trait at a fixed budget.
 //!
-//! Needs artifacts (`make artifacts`); skips gracefully otherwise.
+//! Also benches the serving-side dense-vs-factored layer apply (the
+//! `d1·d2` vs `r(d1+d2)` MAC argument as wall clock) — that part is pure
+//! Rust and needs no artifacts.
+//!
+//! The pipeline benches need artifacts (`make artifacts`); they skip
+//! gracefully otherwise.
 
 use llm_rom::compress::{all, CompressionSession, VecStream};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::linalg::{matmul, Matrix};
 use llm_rom::rom::{ModuleSchedule, RomConfig, RomPipeline};
 use llm_rom::runtime::Runtime;
+use llm_rom::serve::ServeLayer;
 use llm_rom::util::bench::bench;
+use llm_rom::util::Rng;
+
+/// Dense vs factored apply of one decomposed layer, at LLaMA-ish shapes
+/// scaled down and the paper's 0.46/0.33 module budgets.
+fn bench_serve_layer(window: std::time::Duration) {
+    println!("# serve layer apply: dense W_eff vs factored (x·W2ᵀ)·W1ᵀ");
+    let rows = 64; // tokens per batch
+    for &(d_out, d_in, budget) in &[(512usize, 512usize, 0.46f64), (688, 256, 0.33)] {
+        let rank = llm_rom::rom::rank_for_budget(d_out, d_in, budget);
+        let mut rng = Rng::new(d_out as u64);
+        let w1 = Matrix::from_fn(d_out, rank, |_, _| rng.normal() * 0.1);
+        let w2 = Matrix::from_fn(rank, d_in, |_, _| rng.normal() * 0.1);
+        let weff = matmul(&w1, &w2);
+        let dense = ServeLayer::dense(weff.to_f32(), d_out, d_in);
+        let fact = ServeLayer::factored_from_matrices(&w1, &w2);
+        let x: Vec<f32> = (0..rows * d_in).map(|_| rng.normal() as f32).collect();
+        let d = bench(
+            &format!("apply dense    {d_out}x{d_in} ({} MACs/row)", dense.macs_per_row()),
+            window,
+            || dense.apply(&x, rows),
+        );
+        let f = bench(
+            &format!("apply factored {d_out}x{d_in} r={rank} ({} MACs/row)", fact.macs_per_row()),
+            window,
+            || fact.apply(&x, rows),
+        );
+        println!(
+            "    -> {:.2}x MAC reduction, {:.2}x wall-clock speedup",
+            dense.macs_per_row() as f64 / fact.macs_per_row() as f64,
+            d.mean_s / f.mean_s
+        );
+    }
+}
 
 fn main() {
+    let window = std::time::Duration::from_secs_f64(2.0);
+    bench_serve_layer(window);
+
     let Ok(rt) = Runtime::new(llm_rom::DEFAULT_ARTIFACTS) else {
-        eprintln!("skipping rom_layer bench: artifacts or PJRT runtime missing (run `make artifacts`)");
+        eprintln!("skipping rom_layer pipeline bench: artifacts or PJRT runtime missing (run `make artifacts`)");
         return;
     };
     println!("# rom_layer bench (platform {})", rt.platform());
     let exp = Experiment::new(&rt, ExperimentConfig::default());
     let params = exp.init_params(llm_rom::DEFAULT_ARTIFACTS).expect("init params");
     let pipeline = RomPipeline::new(&rt);
-    let window = std::time::Duration::from_secs_f64(2.0);
 
     // compress only the last module, at two calibration sizes (512 rows
     // is measured once in `repro cost`; here we keep the bench window

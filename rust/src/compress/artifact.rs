@@ -2,28 +2,39 @@
 //!
 //! A [`CompressedModel`] bundles the compressed parameters with the
 //! accounting view (Table 1's #Params/#MACs columns), per-layer timings
-//! (the §4 cost evidence), and provenance metadata describing exactly how
-//! it was produced. The whole artifact serializes to a single `.rtz`
-//! container: the parameters under their schema names plus one reserved
-//! `__compress_meta__` tensor holding the metadata as JSON, so compressed
+//! (the §4 cost evidence), the low-rank factors of every decomposed
+//! matrix, and provenance metadata describing exactly how it was produced.
+//! The whole artifact serializes to a single `.rtz` container: the
+//! parameters under their schema names, one reserved `__compress_meta__`
+//! tensor holding the metadata as JSON, and — for ROM artifacts — the
+//! factors as `⟨name⟩.__w1__` / `⟨name⟩.__w2__` f64 sidecar entries, so
+//! the factored form survives serialization losslessly and the serving
+//! engine ([`crate::serve`]) can execute it directly. Compressed
 //! checkpoints stay loadable by every existing `.rtz` consumer (the
-//! [`crate::model::ParamStore`] loader skips `__`-prefixed entries).
+//! [`crate::model::ParamStore`] loader skips `__`-marked entries).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::linalg::Matrix;
 use crate::model::macs::{self, CompressionAccounting, LayerCompression, MacsReport};
 use crate::model::{ModelConfig, ParamStore};
 use crate::prune::PrunedModel;
 use crate::rom::budget::ModuleSchedule;
+use crate::rom::decompose::RomFactors;
 use crate::rom::pipeline::{LayerTiming, RomModel};
 use crate::tensor::{load_rtz, save_rtz, Tensor, TensorMap};
 use crate::util::json::Json;
 
 /// Reserved `.rtz` entry carrying the compression metadata.
 pub const META_KEY: &str = "__compress_meta__";
+
+/// Sidecar suffixes under which the factors of a decomposed matrix are
+/// stored in the `.rtz` (`blocks.3.wq.__w1__` holds `W1` of `blocks.3.wq`).
+pub const W1_SUFFIX: &str = ".__w1__";
+pub const W2_SUFFIX: &str = ".__w2__";
 
 /// How a [`CompressedModel`] was produced.
 #[derive(Debug, Clone, PartialEq)]
@@ -59,6 +70,11 @@ pub struct CompressedModel {
     pub params: ParamStore,
     /// Analytic #Params/#MACs state of every touched matrix.
     pub accounting: CompressionAccounting,
+    /// Low-rank factors of every decomposed matrix (empty for pruning and
+    /// identity artifacts). Serialized as `⟨name⟩.__w1__`/`⟨name⟩.__w2__`
+    /// sidecar entries so the factored form survives `.rtz` round-trips —
+    /// the substrate of factored-form serving.
+    pub factors: BTreeMap<String, RomFactors>,
     /// Per-matrix (ROM) or per-module (pruning) wall-clock records.
     pub timings: Vec<LayerTiming>,
     /// How this artifact was produced.
@@ -81,6 +97,7 @@ impl CompressedModel {
         CompressedModel {
             params,
             accounting: CompressionAccounting::dense(),
+            factors: BTreeMap::new(),
             timings: Vec::new(),
             provenance,
             peak_capture_bytes: 0,
@@ -89,12 +106,13 @@ impl CompressedModel {
         }
     }
 
-    /// Wrap a ROM pipeline result.
+    /// Wrap a ROM pipeline result, carrying the factored form along.
     pub fn from_rom(rom: RomModel, provenance: Provenance) -> CompressedModel {
         let accounting = rom.accounting();
         CompressedModel {
             params: rom.params,
             accounting,
+            factors: rom.factors,
             timings: rom.timings,
             provenance,
             peak_capture_bytes: rom.peak_capture_bytes,
@@ -126,6 +144,7 @@ impl CompressedModel {
         CompressedModel {
             params: pruned.params,
             accounting,
+            factors: BTreeMap::new(),
             timings,
             provenance,
             peak_capture_bytes: 0,
@@ -152,11 +171,17 @@ impl CompressedModel {
         macs::report(cfg, &self.accounting, tokens)
     }
 
-    /// Serialize params + accounting + timings + provenance to `.rtz`.
+    /// Serialize params + accounting + factors + timings + provenance to
+    /// `.rtz`. Factors are written as f64 sidecar tensors, so the
+    /// round-trip back to [`RomFactors`] is bit-exact.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut map = TensorMap::new();
         for name in self.params.names() {
             map.insert(name.clone(), self.params.get(name)?.clone());
+        }
+        for (name, f) in &self.factors {
+            map.insert(format!("{name}{W1_SUFFIX}"), matrix_to_f64_tensor(&f.w1));
+            map.insert(format!("{name}{W2_SUFFIX}"), matrix_to_f64_tensor(&f.w2));
         }
         let meta = self.meta_json().to_string().into_bytes();
         map.insert(META_KEY.to_string(), Tensor::U8 { shape: vec![meta.len()], data: meta });
@@ -179,11 +204,20 @@ impl CompressedModel {
                 path.as_ref().display()
             ),
         };
+        // pull the factor sidecars out before the params are validated
+        let sidecar_keys: Vec<String> =
+            map.keys().filter(|k| k.contains(".__")).cloned().collect();
+        let mut sidecars = TensorMap::new();
+        for k in sidecar_keys {
+            if let Some(t) = map.remove(&k) {
+                sidecars.insert(k, t);
+            }
+        }
         let params = ParamStore::from_map(cfg, map)?;
-        Self::from_parts(params, &meta)
+        Self::from_parts(params, &meta, &sidecars)
     }
 
-    fn from_parts(params: ParamStore, meta: &Json) -> Result<CompressedModel> {
+    fn from_parts(params: ParamStore, meta: &Json, sidecars: &TensorMap) -> Result<CompressedModel> {
         let version = meta.get("format")?.as_usize()?;
         if version != 1 {
             bail!("unsupported compression metadata format {version}");
@@ -216,6 +250,45 @@ impl CompressedModel {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        // rebuild the factored form: rank/energy from the metadata, the
+        // W1/W2 payloads from their sidecar tensors
+        let mut factors = BTreeMap::new();
+        if let Some(fmeta) = meta.opt("factors") {
+            for (name, entry) in fmeta.as_obj()? {
+                let rank = entry.get("rank")?.as_usize()?;
+                let energy = entry.get("energy")?.as_f64()?;
+                let w1 = matrix_from_tensor(
+                    sidecars
+                        .get(&format!("{name}{W1_SUFFIX}"))
+                        .with_context(|| format!("artifact missing factor `{name}{W1_SUFFIX}`"))?,
+                )?;
+                let w2 = matrix_from_tensor(
+                    sidecars
+                        .get(&format!("{name}{W2_SUFFIX}"))
+                        .with_context(|| format!("artifact missing factor `{name}{W2_SUFFIX}`"))?,
+                )?;
+                // the factored pair must exactly tile the dense parameter:
+                // W1 (d_out×r) · W2 (r×d_in) — reject truncated/corrupt
+                // sidecars at load time, not deep inside a later matmul
+                let wshape = params.get(name)?.shape().to_vec();
+                if wshape.len() != 2
+                    || w1.cols() != rank
+                    || w2.rows() != rank
+                    || w1.rows() != wshape[0]
+                    || w2.cols() != wshape[1]
+                {
+                    bail!(
+                        "factor `{name}`: shapes {}x{} / {}x{} inconsistent with rank {rank} \
+                         and layer shape {wshape:?}",
+                        w1.rows(),
+                        w1.cols(),
+                        w2.rows(),
+                        w2.cols()
+                    );
+                }
+                factors.insert(name.clone(), RomFactors { w1, w2, rank, energy });
+            }
+        }
         let kept = match meta.opt("kept") {
             Some(k) => Some(KeptSets {
                 ffn: kept_map_from_json(k.get("ffn")?)?,
@@ -231,6 +304,7 @@ impl CompressedModel {
         Ok(CompressedModel {
             params,
             accounting,
+            factors,
             timings,
             provenance,
             peak_capture_bytes: meta.get("peak_capture_bytes")?.as_usize()?,
@@ -286,6 +360,29 @@ impl CompressedModel {
         ]
         .into_iter()
         .collect();
+        if !self.factors.is_empty() {
+            top.insert(
+                "factors".to_string(),
+                Json::Obj(
+                    self.factors
+                        .iter()
+                        .map(|(name, f)| {
+                            (
+                                name.clone(),
+                                Json::Obj(
+                                    [
+                                        ("rank".to_string(), Json::Num(f.rank as f64)),
+                                        ("energy".to_string(), Json::Num(f.energy)),
+                                    ]
+                                    .into_iter()
+                                    .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            );
+        }
         if let Some(kept) = &self.kept {
             top.insert(
                 "kept".to_string(),
@@ -300,6 +397,25 @@ impl CompressedModel {
             );
         }
         Json::Obj(top)
+    }
+}
+
+/// Factor payloads are stored at full f64 precision — [`RomFactors`]
+/// matrices are f64, and rounding through f32 would break the lossless
+/// round-trip guarantee the serving engine's self-check relies on.
+fn matrix_to_f64_tensor(m: &Matrix) -> Tensor {
+    Tensor::F64 { shape: vec![m.rows(), m.cols()], data: m.data().to_vec() }
+}
+
+fn matrix_from_tensor(t: &Tensor) -> Result<Matrix> {
+    match t {
+        Tensor::F64 { shape, data } if shape.len() == 2 => {
+            Ok(Matrix::from_vec(shape[0], shape[1], data.clone()))
+        }
+        Tensor::F32 { shape, data } if shape.len() == 2 => {
+            Ok(Matrix::from_f32(shape[0], shape[1], data))
+        }
+        other => bail!("factor tensor: expected rank-2 f64/f32, got {:?} {:?}", other.dtype(), other.shape()),
     }
 }
 
@@ -378,6 +494,7 @@ mod tests {
         let cm = CompressedModel {
             params: ParamStore::zeros(&cfg),
             accounting,
+            factors: BTreeMap::new(),
             timings: vec![LayerTiming { name: "blocks.1.wq".into(), covariance_s: 0.25, decompose_s: 0.75 }],
             provenance: Provenance {
                 method: "rom-feature".into(),
@@ -393,13 +510,97 @@ mod tests {
         };
         let text = cm.meta_json().to_string();
         let parsed = Json::parse(&text).unwrap();
-        let back = CompressedModel::from_parts(ParamStore::zeros(&cfg), &parsed).unwrap();
+        let back =
+            CompressedModel::from_parts(ParamStore::zeros(&cfg), &parsed, &TensorMap::new())
+                .unwrap();
         assert_eq!(back.provenance, cm.provenance);
         assert_eq!(back.accounting.layers, cm.accounting.layers);
         assert_eq!(back.timings.len(), 1);
         assert_eq!(back.peak_capture_bytes, 12345);
         assert!(back.kept.is_none() && back.masks.is_none());
         assert!((back.total_seconds() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factors_roundtrip_rtz_losslessly() {
+        use crate::util::Rng;
+        let cfg = ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() };
+        let mut rng = Rng::new(7);
+        let (rank, d) = (3usize, 8usize);
+        let w1 = Matrix::from_fn(d, rank, |_, _| rng.normal());
+        let w2 = Matrix::from_fn(rank, d, |_, _| rng.normal());
+        let mut factors = BTreeMap::new();
+        factors.insert(
+            "blocks.1.wq".to_string(),
+            RomFactors { w1: w1.clone(), w2: w2.clone(), rank, energy: 0.937_251 },
+        );
+        let mut accounting = CompressionAccounting::dense();
+        accounting.set("blocks.1.wq", LayerCompression::LowRank { rank });
+        let cm = CompressedModel {
+            params: ParamStore::zeros(&cfg),
+            accounting,
+            factors,
+            timings: Vec::new(),
+            provenance: Provenance {
+                method: "rom-feature".into(),
+                global_budget: 0.8,
+                schedule: ModuleSchedule { start_block: 1, module_budget: 0.46 },
+                calib_label: "combination".into(),
+                calib_rows: 32,
+                calib_seq: 128,
+            },
+            peak_capture_bytes: 0,
+            kept: None,
+            masks: None,
+        };
+        let dir = std::env::temp_dir().join(format!("factors_rtz_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("factored.rtz");
+        cm.save(&path).unwrap();
+        // the artifact stays loadable as a plain (dense) checkpoint
+        assert!(ParamStore::load(&cfg, &path).is_ok());
+        let back = CompressedModel::load(&cfg, &path).unwrap();
+        let f = &back.factors["blocks.1.wq"];
+        assert_eq!(f.rank, rank);
+        assert_eq!(f.energy, 0.937_251); // bit-exact through JSON
+        assert_eq!(f.w1.data(), w1.data()); // bit-exact through f64 sidecars
+        assert_eq!(f.w2.data(), w2.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_factor_sidecar_rejected_on_load() {
+        let cfg = ModelConfig { vocab: 16, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 12, ..ModelConfig::mini() };
+        let mut factors = BTreeMap::new();
+        // w2 truncated to 7 columns for an 8-wide layer
+        factors.insert(
+            "blocks.1.wq".to_string(),
+            RomFactors { w1: Matrix::zeros(8, 3), w2: Matrix::zeros(3, 7), rank: 3, energy: 1.0 },
+        );
+        let cm = CompressedModel {
+            params: ParamStore::zeros(&cfg),
+            accounting: CompressionAccounting::dense(),
+            factors,
+            timings: Vec::new(),
+            provenance: Provenance {
+                method: "rom-feature".into(),
+                global_budget: 0.8,
+                schedule: ModuleSchedule { start_block: 1, module_budget: 0.46 },
+                calib_label: "none".into(),
+                calib_rows: 0,
+                calib_seq: 0,
+            },
+            peak_capture_bytes: 0,
+            kept: None,
+            masks: None,
+        };
+        let dir = std::env::temp_dir().join(format!("bad_factor_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.rtz");
+        cm.save(&path).unwrap();
+        let err = CompressedModel::load(&cfg, &path).unwrap_err();
+        assert!(err.to_string().contains("inconsistent"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -413,6 +614,7 @@ mod tests {
         let cm = CompressedModel {
             params: ParamStore::zeros(&cfg),
             accounting: CompressionAccounting::dense(),
+            factors: BTreeMap::new(),
             timings: Vec::new(),
             provenance: Provenance {
                 method: "prune-magnitude".into(),
@@ -427,7 +629,9 @@ mod tests {
             masks: Some(crate::prune::build_masks(&cfg, &kept.ffn, &kept.heads)),
         };
         let parsed = Json::parse(&cm.meta_json().to_string()).unwrap();
-        let back = CompressedModel::from_parts(ParamStore::zeros(&cfg), &parsed).unwrap();
+        let back =
+            CompressedModel::from_parts(ParamStore::zeros(&cfg), &parsed, &TensorMap::new())
+                .unwrap();
         assert_eq!(back.kept, cm.kept);
         // masks are rebuilt from the kept sets, identical to the originals
         let (a, b) = (cm.masks.as_ref().unwrap(), back.masks.as_ref().unwrap());

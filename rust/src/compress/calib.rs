@@ -37,17 +37,39 @@ const CHUNK_BATCHES: usize = 4;
 /// real (non-PAD) rows have been gathered. The ROM pipeline keeps the
 /// *token* batches resident (small) while streaming activations chunkwise,
 /// so materializing here does not break the fixed-memory argument.
+///
+/// The cap is exact: if the final batch straddles it, the excess rows of
+/// that batch are marked invalid (`valid = 0`), so consumers calibrate on
+/// precisely `max_rows` rows — what the provenance records — rather than
+/// overshooting by up to a full chunk.
 pub fn collect_rows(stream: &mut dyn CalibrationStream, max_rows: Option<usize>) -> Vec<CalibBatch> {
     stream.reset();
     let mut out = Vec::new();
     let mut rows = 0usize;
     while let Some(chunk) = stream.next_chunk() {
-        for b in chunk {
-            rows += b.valid.iter().filter(|&&v| v > 0).count();
-            out.push(b);
-            if let Some(cap) = max_rows {
-                if rows >= cap {
-                    return out;
+        for mut b in chunk {
+            match max_rows {
+                None => {
+                    rows += b.valid.iter().filter(|&&v| v > 0).count();
+                    out.push(b);
+                }
+                Some(cap) => {
+                    let remaining = cap - rows;
+                    let mut kept = 0usize;
+                    for v in b.valid.iter_mut() {
+                        if *v > 0 {
+                            if kept < remaining {
+                                kept += 1;
+                            } else {
+                                *v = 0; // truncate to the cap: pad row
+                            }
+                        }
+                    }
+                    rows += kept;
+                    out.push(b);
+                    if rows >= cap {
+                        return out;
+                    }
                 }
             }
         }
@@ -232,8 +254,18 @@ mod tests {
         let got = collect_rows(&mut s, Some(10));
         // rows accumulate 4, 8, 12 — the cap is reached inside batch 3
         assert_eq!(got.len(), 3);
+        // invariant: exactly `cap` valid rows survive — the final batch's
+        // two excess rows are truncated to padding, so calibration sees
+        // what the provenance records
+        let valid: usize =
+            got.iter().map(|b| b.valid.iter().filter(|&&v| v > 0).count()).sum();
+        assert_eq!(valid, 10);
+        assert_eq!(got[2].valid, vec![2, 2, 0, 0]);
         let uncapped = collect_rows(&mut s, None);
         assert_eq!(uncapped.len(), 5);
+        let all: usize =
+            uncapped.iter().map(|b| b.valid.iter().filter(|&&v| v > 0).count()).sum();
+        assert_eq!(all, 20);
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //! ROM, its weight-space SVD ablation, and the two structured-pruning
 //! baselines. Each is a thin adapter from the shared [`CompressCtx`] onto
 //! the corresponding engine (`rom::pipeline`, `prune`), normalizing every
-//! result into a [`CompressedModel`].
+//! result into a [`CompressedModel`]. The ROM adapters carry the
+//! low-rank factors of every decomposed matrix into the artifact (via
+//! [`CompressedModel::from_rom`]), which is what the factored-form
+//! serving engine ([`crate::serve`]) executes; pruning artifacts carry
+//! none and always serve dense.
 
 use std::time::Instant;
 

@@ -14,4 +14,4 @@ pub mod tables;
 
 pub use cost::{CostReport, CostRow};
 pub use experiment::{Experiment, ExperimentConfig, TrainedArtifacts};
-pub use tables::{run_tables, sweep_table, table1, table2, table3, table4};
+pub use tables::{run_tables, serve_table, sweep_table, table1, table2, table3, table4};

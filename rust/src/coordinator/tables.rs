@@ -14,14 +14,18 @@
 //!   generic corpus).
 //! - **Method sweep** — any registered method list at one budget, in a
 //!   single comparison table (`repro sweep --methods a,b,c`).
+//! - **Serve table** — dense vs factored execution of one artifact through
+//!   the serving engine, with MAC/latency/throughput columns and the
+//!   logits agreement bound (`repro bench-serve`).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::compress::CompressedModel;
 use crate::data::{CalibSource, TaskKind};
 use crate::eval::{format_table, EvalReport};
 use crate::model::macs::{self, CompressionAccounting};
 use crate::model::ParamStore;
+use crate::serve::{synth_requests, ExecMode, ServeConfig, ServeEngine, ServeModel};
 
 use super::experiment::Experiment;
 
@@ -155,6 +159,66 @@ pub fn sweep_table(
         &format!("Method sweep @ {pct}% global budget"),
         &rows,
     ))
+}
+
+/// Dense vs factored serving comparison on one artifact: identical
+/// synthetic workload through both execution modes of the serving engine,
+/// reporting MACs/token, per-token latency, throughput, and the max
+/// absolute logits disagreement — the empirical `r(d1+d2)` vs `d1·d2`
+/// evidence behind `repro bench-serve`.
+pub fn serve_table(
+    cm: &CompressedModel,
+    requests: usize,
+    seq: usize,
+    config: ServeConfig,
+    seed: u64,
+) -> Result<String> {
+    let cfg = cm.params.config();
+    let mut rows = Vec::new();
+    let mut logits: Vec<Vec<f32>> = Vec::new();
+    for mode in [ExecMode::Dense, ExecMode::Factored] {
+        let model = ServeModel::from_artifact(cm, mode)?;
+        let n_factored = model.n_factored();
+        let engine = ServeEngine::new(model, config);
+        let reqs = synth_requests(cfg, requests, seq, seed);
+        let (results, stats) = engine.run(reqs)?;
+        logits.push(results.into_iter().flat_map(|r| r.logits).collect());
+        rows.push((mode, n_factored, stats));
+    }
+    ensure!(logits[0].len() == logits[1].len(), "mode outputs diverge in shape");
+    let max_diff = logits[0]
+        .iter()
+        .zip(&logits[1])
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+
+    let mut out = String::from(
+        "Serve: dense vs factored execution\n\
+         mode      layers(lr)   MMACs/tok   µs/tok     tok/s     p95 lat\n",
+    );
+    for (mode, n_factored, s) in &rows {
+        out.push_str(&format!(
+            "{:<9} {:>10} {:>11.3} {:>8.1} {:>9.0} {:>9.1}ms\n",
+            mode.name(),
+            n_factored,
+            s.macs_per_token() as f64 / 1e6,
+            s.s_per_token() * 1e6,
+            s.tokens_per_s(),
+            s.p95_latency_s * 1e3,
+        ));
+    }
+    let (dense_s, fact_s) = (&rows[0].2, &rows[1].2);
+    let mac_ratio = if fact_s.macs > 0 {
+        dense_s.macs as f64 / fact_s.macs as f64
+    } else {
+        1.0
+    };
+    let speedup = if fact_s.wall_s > 0.0 { dense_s.wall_s / fact_s.wall_s } else { 1.0 };
+    out.push_str(&format!(
+        "MAC reduction {mac_ratio:.2}x, wall-clock speedup {speedup:.2}x, \
+         max |Δlogits| {max_diff:.2e}\n"
+    ));
+    Ok(out)
 }
 
 /// CLI entry: run the requested table(s) and print.

@@ -24,6 +24,10 @@
 //!   streams, the [`compress::CompressedModel`] artifact, and
 //!   [`compress::CompressionSession`] — the front door used by the CLI,
 //!   tables harness, examples, and benches
+//! - [`serve`] — factored-form serving: batched forward engine executing
+//!   compressed layers as two skinny matmuls (`r(d1+d2)` MACs) with
+//!   per-layer dense/low-rank dispatch, a multi-request batching queue,
+//!   and latency/throughput/MAC accounting
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
@@ -37,6 +41,7 @@ pub mod model;
 pub mod prune;
 pub mod rom;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

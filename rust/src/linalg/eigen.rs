@@ -45,13 +45,19 @@ impl EigenDecomposition {
 /// Eigendecomposition of a symmetric matrix.
 ///
 /// The input is symmetrized defensively (covariance accumulation can leave
-/// ~1e-7 asymmetry). Fails only if QL does not converge in 50 sweeps per
-/// eigenvalue, which for real covariance matrices does not happen.
+/// ~1e-7 asymmetry). Fails if the input carries non-finite entries (e.g. a
+/// covariance poisoned by overflowing activations — QL would spin or the
+/// sort would be meaningless on NaN) or if QL does not converge in 50
+/// sweeps per eigenvalue, which for real covariance matrices does not
+/// happen.
 pub fn eigh(a: &Matrix) -> Result<EigenDecomposition> {
     assert_eq!(a.rows(), a.cols(), "eigh: square matrix required");
     let n = a.rows();
     if n == 0 {
         return Ok(EigenDecomposition { values: vec![], vectors: Matrix::zeros(0, 0) });
+    }
+    if let Some(bad) = a.data().iter().find(|x| !x.is_finite()) {
+        bail!("eigh: input contains non-finite entry {bad} (overflowing covariance?)");
     }
     let mut q = a.clone();
     q.symmetrize();
@@ -62,7 +68,7 @@ pub fn eigh(a: &Matrix) -> Result<EigenDecomposition> {
 
     // q columns are eigenvectors; sort descending and emit rows.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    order.sort_by(|&i, &j| d[j].total_cmp(&d[i]));
     let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
     let mut vectors = Matrix::zeros(n, n);
     for (row, &src) in order.iter().enumerate() {
@@ -332,6 +338,19 @@ mod tests {
         let trace: f64 = (0..40).map(|i| a[(i, i)]).sum();
         let sum: f64 = dec.values.iter().sum();
         assert!((trace - sum).abs() < 1e-8);
+    }
+
+    #[test]
+    fn non_finite_input_is_a_clean_error() {
+        // a NaN/Inf sneaking into the covariance must surface as Err, not
+        // as a panic in the descending sort
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut a = random_symmetric(6, 42);
+            a[(2, 4)] = bad;
+            a[(4, 2)] = bad;
+            let err = eigh(&a).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{bad}: {err}");
+        }
     }
 
     #[test]

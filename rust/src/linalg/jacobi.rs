@@ -77,7 +77,7 @@ pub fn eigh_jacobi(a: &Matrix) -> Result<EigenDecomposition> {
 fn sorted(m: Matrix, v: Matrix) -> EigenDecomposition {
     let n = m.rows();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    order.sort_by(|&i, &j| m[(j, j)].total_cmp(&m[(i, i)]));
     let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
     let mut vectors = Matrix::zeros(n, n);
     for (row, &src) in order.iter().enumerate() {

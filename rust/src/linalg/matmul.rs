@@ -91,6 +91,37 @@ pub fn matmul_transb_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> 
     out
 }
 
+/// Cache-blocked `a @ bᵀ`: same contract as [`matmul_transb_f32`], tiled
+/// over (j, k) so a `BLOCK`-wide panel of `b` rows stays L1-resident while
+/// every row of `a` streams past it. This is the serving hot path: the
+/// factored form applies two *skinny* weights (`n = r` or `k = r` with
+/// `r ≪ d`), where the j-panel of `b` fits in cache whole and the k-tiling
+/// keeps long reduction dims from thrashing it.
+pub fn matmul_transb_blocked_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for j0 in (0..n).step_by(BLOCK) {
+        let j1 = (j0 + BLOCK).min(n);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in 0..m {
+                let arow = &a[i * k + k0..i * k + k1];
+                let orow = &mut out[i * n + j0..i * n + j1];
+                for (j, o) in (j0..j1).zip(orow.iter_mut()) {
+                    let brow = &b[j * k + k0..j * k + k1];
+                    let mut acc = 0.0f32;
+                    for (x, y) in arow.iter().zip(brow) {
+                        acc += x * y;
+                    }
+                    *o += acc;
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +175,21 @@ mod tests {
         for i in 0..m {
             for j in 0..n {
                 assert!((got[i * n + j] as f64 - want[(i, j)]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_transb_matches_naive_transb() {
+        let mut rng = Rng::new(4);
+        // shapes straddling the block edge, including skinny r-dims
+        for &(m, k, n) in &[(1, 1, 1), (5, 70, 3), (3, 7, 70), (64, 64, 64), (33, 129, 65)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let got = matmul_transb_blocked_f32(&a, &b, m, k, n);
+            let want = matmul_transb_f32(&a, &b, m, k, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{m}x{k}x{n}: {g} vs {w}");
             }
         }
     }

@@ -15,5 +15,5 @@ pub mod svd;
 pub use eigen::{eigh, EigenDecomposition};
 pub use jacobi::eigh_jacobi;
 pub use matrix::Matrix;
-pub use matmul::{matmul, matmul_f32, matmul_transb_f32};
+pub use matmul::{matmul, matmul_f32, matmul_transb_blocked_f32, matmul_transb_f32};
 pub use svd::{svd, Svd};

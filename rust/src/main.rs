@@ -10,6 +10,8 @@
 //! repro compress --ckpt ckpt.rtz [--method NAME] [--budget B]
 //! repro sweep    --ckpt ckpt.rtz [--methods a,b,c] [--budget B]
 //! repro eval     --ckpt ckpt.rtz [--ppl]
+//! repro serve    --ckpt artifact.rtz [--mode dense|factored] | --self-check
+//! repro bench-serve [--ckpt artifact.rtz] [--budget B]
 //! repro tables   --ckpt ckpt.rtz [--table 1|2|3|4|all]
 //! repro cost     --ckpt ckpt.rtz
 //! ```
@@ -30,8 +32,9 @@ use llm_rom::compress::{self, CompressedModel};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::data::CalibSource;
 use llm_rom::model::macs::{self, CompressionAccounting};
-use llm_rom::model::ParamStore;
-use llm_rom::runtime::Runtime;
+use llm_rom::model::{ModelConfig, ParamStore};
+use llm_rom::runtime::{Manifest, Runtime};
+use llm_rom::serve::{self, ExecMode, ServeConfig, ServeEngine, ServeModel};
 
 fn main() {
     if let Err(e) = run() {
@@ -68,6 +71,10 @@ struct Cmd {
 }
 
 const SEED: Flag = flag("seed", "N", "RNG seed for world/data generation");
+const SERVE_REQUESTS: Flag = flag("requests", "N", "synthetic requests to serve");
+const SERVE_SEQ: Flag = flag("seq", "N", "tokens per synthetic request");
+const SERVE_WORKERS: Flag = flag("workers", "N", "serving worker threads");
+const SERVE_BATCH: Flag = flag("batch", "N", "max requests per dispatch batch");
 const CKPT: Flag = flag("ckpt", "FILE", "checkpoint to load (.rtz)");
 const BUDGET: Flag = flag("budget", "B", "global parameter budget in (0, 1]");
 const ROWS: Flag = flag("rows", "N", "calibration rows");
@@ -119,6 +126,28 @@ static COMMANDS: &[Cmd] = &[
         name: "eval",
         summary: "zero-shot six-task evaluation (+ optional perplexity)",
         flags: &[CKPT, switch("ppl", "also report corpus perplexity"), PER_TASK, SEED],
+    },
+    Cmd {
+        name: "serve",
+        summary: "serve a compressed artifact with the factored-form engine",
+        flags: &[
+            CKPT,
+            flag("mode", "dense|factored", "execution mode (default factored)"),
+            SERVE_REQUESTS,
+            SERVE_SEQ,
+            SERVE_WORKERS,
+            SERVE_BATCH,
+            switch(
+                "self-check",
+                "build a mini artifact offline, serve it both ways, verify logits + MACs",
+            ),
+            SEED,
+        ],
+    },
+    Cmd {
+        name: "bench-serve",
+        summary: "dense vs factored serving comparison on one artifact",
+        flags: &[CKPT, BUDGET, SERVE_REQUESTS, SERVE_SEQ, SERVE_WORKERS, SERVE_BATCH, SEED],
     },
     Cmd {
         name: "generate",
@@ -273,6 +302,8 @@ fn run() -> Result<()> {
         "compress" => cmd_compress(&artifacts, &args),
         "sweep" => cmd_sweep(&artifacts, &args),
         "eval" => cmd_eval(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
+        "bench-serve" => cmd_bench_serve(&artifacts, &args),
         "generate" => cmd_generate(&artifacts, &args),
         "tables" => cmd_tables(&artifacts, &args),
         "cost" => cmd_cost(&artifacts, &args),
@@ -474,6 +505,189 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
     let params = load_ckpt(&exp, args)?;
     let rep = exp.evaluate(&params, args.get("ppl").is_some())?;
     println!("{}", llm_rom::eval::format_table("Evaluation", &[("model".into(), rep)]));
+    Ok(())
+}
+
+/// Model config for serve paths, which must work without a PJRT runtime:
+/// prefer the AOT manifest when present, fall back to the mini config (the
+/// Python exporter's defaults — shape validation on artifact load catches
+/// any mismatch).
+fn serve_cfg(artifacts: &str) -> ModelConfig {
+    match Manifest::load(artifacts) {
+        Ok(m) => ModelConfig::from_manifest(&m.model_config),
+        Err(_) => ModelConfig::mini(),
+    }
+}
+
+fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    if args.get("self-check").is_some() {
+        return serve_self_check(seed);
+    }
+    let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
+    let cfg = serve_cfg(artifacts);
+    let cm = CompressedModel::load(&cfg, path)?;
+    let mode = match args.get("mode") {
+        None => ExecMode::Factored,
+        Some(s) => ExecMode::parse(s)?,
+    };
+    let requests: usize = args.parse_num("requests", 8)?;
+    let seq: usize = args.parse_num("seq", cfg.eval_seq.min(64))?;
+    let workers: usize = args.parse_num("workers", 2)?;
+    let batch: usize = args.parse_num("batch", 4)?;
+    let model = ServeModel::from_artifact(&cm, mode)?;
+    println!(
+        "serving {path} [{}]: {}/{} matrices factored, {requests} requests x {seq} tokens, \
+         {workers} workers (batch {batch})",
+        mode.name(),
+        model.n_factored(),
+        7 * cfg.n_layers,
+    );
+    let engine = ServeEngine::new(model, ServeConfig { workers, max_batch: batch });
+    let (results, stats) = engine.run(serve::synth_requests(&cfg, requests, seq, seed))?;
+    println!(
+        "served {} requests ({} tokens) in {:.3}s — {:.0} tok/s, {:.1} µs/token, \
+         {:.3} MMACs/token",
+        stats.requests,
+        stats.tokens,
+        stats.wall_s,
+        stats.tokens_per_s(),
+        stats.s_per_token() * 1e6,
+        stats.macs_per_token() as f64 / 1e6,
+    );
+    println!(
+        "latency mean {:.2}ms  p95 {:.2}ms  ({} dispatch batches)",
+        stats.mean_latency_s * 1e3,
+        stats.p95_latency_s * 1e3,
+        stats.batches
+    );
+    if let Some(r) = results.first() {
+        let v = cfg.vocab;
+        let last = &r.logits[(r.tokens - 1) * v..];
+        let argmax = last
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!("request 0: argmax next-token id = {argmax}");
+    }
+    Ok(())
+}
+
+/// `repro serve --self-check`: build a mini artifact offline (data-free
+/// weight-space ROM at budget 0.5), round-trip it through `.rtz`, and
+/// serve it in both modes — asserting the factored path matches dense
+/// logits to ≤1e-4 and executes exactly the analytically-accounted (and
+/// strictly fewer) MACs. The CI smoke test behind `scripts/verify.sh`.
+fn serve_self_check(seed: u64) -> Result<()> {
+    let cfg = serve::demo_config();
+    let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0x5EED)?;
+    anyhow::ensure!(!cm.factors.is_empty(), "demo artifact carries no factors");
+
+    // 1. factors survive .rtz serialization losslessly
+    let dir = std::env::temp_dir().join(format!("serve_check_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("mini.rtz");
+    cm.save(&path)?;
+    let loaded = CompressedModel::load(&cfg, &path)?;
+    anyhow::ensure!(
+        loaded.factors.len() == cm.factors.len(),
+        "factor count changed across .rtz round-trip"
+    );
+    for (name, f) in &cm.factors {
+        let g = loaded.factors.get(name).context("factor lost in round-trip")?;
+        anyhow::ensure!(
+            g.rank == f.rank && g.w1.data() == f.w1.data() && g.w2.data() == f.w2.data(),
+            "factor `{name}` not lossless across .rtz"
+        );
+    }
+    println!(
+        "[1/3] .rtz factor round-trip: lossless ({} factored matrices)",
+        loaded.factors.len()
+    );
+
+    // 2. factored serving matches dense serving on the same batch
+    let requests = serve::synth_requests(&cfg, 6, 24, seed);
+    let mut outputs: Vec<(Vec<Vec<f32>>, u128)> = Vec::new();
+    for mode in [ExecMode::Dense, ExecMode::Factored] {
+        let engine = ServeEngine::new(
+            ServeModel::from_artifact(&loaded, mode)?,
+            ServeConfig { workers: 2, max_batch: 2 },
+        );
+        let (results, stats) = engine.run(requests.clone())?;
+        outputs.push((results.into_iter().map(|r| r.logits).collect(), stats.macs));
+    }
+    let mut max_diff = 0.0f64;
+    for (a, b) in outputs[0].0.iter().zip(&outputs[1].0) {
+        for (x, y) in a.iter().zip(b) {
+            max_diff = max_diff.max((x - y).abs() as f64);
+        }
+    }
+    anyhow::ensure!(
+        max_diff <= 1e-4,
+        "dense vs factored logits diverge: max |Δ| = {max_diff:.3e}"
+    );
+    println!("[2/3] dense vs factored logits: max |Δ| = {max_diff:.2e} (bound 1e-4)");
+
+    // 3. MAC accounting: factored strictly fewer, both exactly analytic
+    let (dense_macs, fact_macs) = (outputs[0].1, outputs[1].1);
+    let analytic = |acc: &CompressionAccounting| -> u128 {
+        requests.iter().map(|r| macs::report(&cfg, acc, r.tokens.len()).macs).sum()
+    };
+    anyhow::ensure!(
+        fact_macs == analytic(&loaded.accounting),
+        "served factored MACs != artifact accounting"
+    );
+    anyhow::ensure!(
+        dense_macs == analytic(&CompressionAccounting::dense()),
+        "served dense MACs != dense accounting"
+    );
+    anyhow::ensure!(fact_macs < dense_macs, "factored path must execute fewer MACs");
+    println!(
+        "[3/3] MACs: factored {fact_macs} vs dense {dense_macs} ({:.2}x fewer), \
+         both equal the analytic accounting",
+        dense_macs as f64 / fact_macs as f64
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    println!("serve self-check: OK");
+    Ok(())
+}
+
+fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let budget: f64 = args.parse_num("budget", 0.5)?;
+    let (cm, label) = match args.get("ckpt") {
+        Some(path) => {
+            let cfg = serve_cfg(artifacts);
+            (CompressedModel::load(&cfg, path)?, path.to_string())
+        }
+        None => {
+            let cfg = ModelConfig::mini();
+            println!(
+                "no --ckpt: benchmarking a synthetic mini artifact \
+                 (rom-weight-svd @ {:.0}% budget)",
+                budget * 100.0
+            );
+            (serve::demo_artifact(&cfg, budget, seed ^ 0xBE7C)?, format!("mini@{budget:.2}"))
+        }
+    };
+    let requests: usize = args.parse_num("requests", 8)?;
+    let seq: usize = args.parse_num("seq", 32)?;
+    let workers: usize = args.parse_num("workers", 2)?;
+    let batch: usize = args.parse_num("batch", 4)?;
+    println!(
+        "bench-serve {label}: {requests} requests x {seq} tokens, {workers} workers \
+         (batch {batch})"
+    );
+    let table = llm_rom::coordinator::serve_table(
+        &cm,
+        requests,
+        seq,
+        ServeConfig { workers, max_batch: batch },
+        seed,
+    )?;
+    println!("{table}");
     Ok(())
 }
 

@@ -33,10 +33,12 @@ impl ParamStore {
     }
 
     pub fn from_map(cfg: &ModelConfig, mut map: TensorMap) -> Result<ParamStore> {
-        // `__`-prefixed entries are reserved metadata (e.g. the compression
-        // provenance written by `compress::CompressedModel::save`) — not
+        // `__`-prefixed names and `__`-prefixed *segments* are reserved
+        // metadata — the compression provenance (`__compress_meta__`) and
+        // the per-layer ROM factors (`blocks.N.wq.__w1__`/`.__w2__`)
+        // written by `compress::CompressedModel::save`. They are not
         // parameters; any `.rtz` consumer is free to skip them.
-        map.retain(|k, _| !k.starts_with("__"));
+        map.retain(|k, _| !k.starts_with("__") && !k.contains(".__"));
         let names = schema::param_names(cfg);
         for name in &names {
             let t = map
@@ -180,9 +182,13 @@ mod tests {
         let mut map: TensorMap =
             p.names().iter().map(|n| (n.clone(), p.get(n).unwrap().clone())).collect();
         map.insert("__compress_meta__".into(), Tensor::U8 { shape: vec![2], data: vec![123, 125] });
+        // per-layer factor sidecars are metadata too
+        map.insert("blocks.0.wq.__w1__".into(), Tensor::zeros_f32(&[8, 2]));
+        map.insert("blocks.0.wq.__w2__".into(), Tensor::zeros_f32(&[2, 8]));
         let q = ParamStore::from_map(&cfg, map).unwrap();
         assert_eq!(q.n_params(), cfg.n_params());
         assert!(q.get("__compress_meta__").is_err());
+        assert!(q.get("blocks.0.wq.__w1__").is_err());
     }
 
     #[test]

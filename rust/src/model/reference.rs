@@ -17,8 +17,9 @@ use crate::linalg::matmul_transb_f32;
 use super::config::ModelConfig;
 use super::params::ParamStore;
 
-/// RMSNorm over the last axis (matches `kernels/rmsnorm.py`).
-fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
+/// RMSNorm over the last axis (matches `kernels/rmsnorm.py`). Shared with
+/// the factored-form serving engine ([`crate::serve`]).
+pub(crate) fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
     let d = gain.len();
     debug_assert_eq!(x.len() % d, 0);
     for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
@@ -32,7 +33,7 @@ fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
 
 /// Rotary embedding for one (seq, hd) head slice at absolute positions
 /// `pos0..pos0+seq` (matches `model.apply_rope`).
-fn apply_rope(x: &mut [f32], seq: usize, hd: usize, pos0: usize, theta: f64) {
+pub(crate) fn apply_rope(x: &mut [f32], seq: usize, hd: usize, pos0: usize, theta: f64) {
     for t in 0..seq {
         let row = &mut x[t * hd..(t + 1) * hd];
         let pos = (pos0 + t) as f64;
@@ -47,8 +48,89 @@ fn apply_rope(x: &mut [f32], seq: usize, hd: usize, pos0: usize, theta: f64) {
     }
 }
 
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+/// Apply rotary embeddings head-by-head to full-width `(seq, d)` q/k
+/// buffers at absolute positions `pos0..pos0+seq`. Shared by the
+/// reference forward and the serving engine so the two cannot diverge.
+pub(crate) fn rope_qk(
+    q: &mut [f32],
+    k: &mut [f32],
+    seq: usize,
+    d: usize,
+    nh: usize,
+    pos0: usize,
+    theta: f64,
+) {
+    let hd = d / nh;
+    for head in 0..nh {
+        let mut qh = vec![0.0f32; seq * hd];
+        let mut kh = vec![0.0f32; seq * hd];
+        for t in 0..seq {
+            qh[t * hd..(t + 1) * hd]
+                .copy_from_slice(&q[t * d + head * hd..t * d + (head + 1) * hd]);
+            kh[t * hd..(t + 1) * hd]
+                .copy_from_slice(&k[t * d + head * hd..t * d + (head + 1) * hd]);
+        }
+        apply_rope(&mut qh, seq, hd, pos0, theta);
+        apply_rope(&mut kh, seq, hd, pos0, theta);
+        for t in 0..seq {
+            q[t * d + head * hd..t * d + (head + 1) * hd]
+                .copy_from_slice(&qh[t * hd..(t + 1) * hd]);
+            k[t * d + head * hd..t * d + (head + 1) * hd]
+                .copy_from_slice(&kh[t * hd..(t + 1) * hd]);
+        }
+    }
+}
+
+/// Causal softmax attention (f64 score accumulation): `(seq, d)` queries
+/// at absolute positions `pos0..pos0+seq` over K/V caches of `pos0+seq`
+/// row-major rows. Returns the `(seq, d)` pre-`wo` attention output.
+/// Shared by the reference forward and the serving engine.
+pub(crate) fn causal_attention(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    seq: usize,
+    pos0: usize,
+    d: usize,
+    nh: usize,
+) -> Vec<f32> {
+    let hd = d / nh;
+    let total = pos0 + seq;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = vec![0.0f32; seq * d];
+    let mut scores = vec![0.0f64; total];
+    for t in 0..seq {
+        let t_abs = pos0 + t;
+        for head in 0..nh {
+            let qrow = &q[t * d + head * hd..t * d + (head + 1) * hd];
+            let mut max = f64::NEG_INFINITY;
+            for s in 0..=t_abs {
+                let krow = &kc[s * d + head * hd..s * d + (head + 1) * hd];
+                let dot: f64 =
+                    qrow.iter().zip(krow).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+                scores[s] = dot * scale;
+                max = max.max(scores[s]);
+            }
+            let mut z = 0.0f64;
+            for s in 0..=t_abs {
+                scores[s] = (scores[s] - max).exp();
+                z += scores[s];
+            }
+            let orow = &mut out[t * d + head * hd..t * d + (head + 1) * hd];
+            for s in 0..=t_abs {
+                let p = (scores[s] / z) as f32;
+                let vrow = &vc[s * d + head * hd..s * d + (head + 1) * hd];
+                for j in 0..hd {
+                    orow[j] += p * vrow[j];
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Incremental decoder state: per-block K/V caches, row-major (t, d).
@@ -94,7 +176,8 @@ impl<'p> ReferenceModel<'p> {
     /// each consumed position, advancing the KV cache.
     pub fn forward_with_state(&self, tokens: &[i32], state: &mut DecoderState) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
-        let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+        let (d, nh) = (cfg.d_model, cfg.n_heads);
+        debug_assert_eq!(cfg.head_dim() * nh, d);
         let seq = tokens.len();
         let pos0 = state.pos;
 
@@ -115,62 +198,19 @@ impl<'p> ReferenceModel<'p> {
             let mut q = matmul_transb_f32(&buf, self.weight(&name("wq"))?, seq, d, d);
             let mut k = matmul_transb_f32(&buf, self.weight(&name("wk"))?, seq, d, d);
             let v = matmul_transb_f32(&buf, self.weight(&name("wv"))?, seq, d, d);
-            // rope per head on q, k
-            for head in 0..nh {
-                let mut qh = vec![0.0f32; seq * hd];
-                let mut kh = vec![0.0f32; seq * hd];
-                for t in 0..seq {
-                    qh[t * hd..(t + 1) * hd]
-                        .copy_from_slice(&q[t * d + head * hd..t * d + (head + 1) * hd]);
-                    kh[t * hd..(t + 1) * hd]
-                        .copy_from_slice(&k[t * d + head * hd..t * d + (head + 1) * hd]);
-                }
-                apply_rope(&mut qh, seq, hd, pos0, cfg.rope_theta);
-                apply_rope(&mut kh, seq, hd, pos0, cfg.rope_theta);
-                for t in 0..seq {
-                    q[t * d + head * hd..t * d + (head + 1) * hd]
-                        .copy_from_slice(&qh[t * hd..(t + 1) * hd]);
-                    k[t * d + head * hd..t * d + (head + 1) * hd]
-                        .copy_from_slice(&kh[t * hd..(t + 1) * hd]);
-                }
-            }
-            // extend caches
+            rope_qk(&mut q, &mut k, seq, d, nh, pos0, cfg.rope_theta);
+            // extend caches, then attend over them
             state.k_cache[block].extend_from_slice(&k);
             state.v_cache[block].extend_from_slice(&v);
-            let total = pos0 + seq;
-            let kc = &state.k_cache[block];
-            let vc = &state.v_cache[block];
-
-            // causal attention over the cache
-            let scale = 1.0 / (hd as f64).sqrt();
-            let mut attn_out = vec![0.0f32; seq * d];
-            let mut scores = vec![0.0f64; total];
-            for t in 0..seq {
-                let t_abs = pos0 + t;
-                for head in 0..nh {
-                    let qrow = &q[t * d + head * hd..t * d + (head + 1) * hd];
-                    let mut max = f64::NEG_INFINITY;
-                    for s in 0..=t_abs {
-                        let krow = &kc[s * d + head * hd..s * d + (head + 1) * hd];
-                        let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
-                        scores[s] = dot * scale;
-                        max = max.max(scores[s]);
-                    }
-                    let mut z = 0.0f64;
-                    for s in 0..=t_abs {
-                        scores[s] = (scores[s] - max).exp();
-                        z += scores[s];
-                    }
-                    let orow = &mut attn_out[t * d + head * hd..t * d + (head + 1) * hd];
-                    for s in 0..=t_abs {
-                        let p = (scores[s] / z) as f32;
-                        let vrow = &vc[s * d + head * hd..s * d + (head + 1) * hd];
-                        for j in 0..hd {
-                            orow[j] += p * vrow[j];
-                        }
-                    }
-                }
-            }
+            let attn_out = causal_attention(
+                &q,
+                &state.k_cache[block],
+                &state.v_cache[block],
+                seq,
+                pos0,
+                d,
+                nh,
+            );
             let o = matmul_transb_f32(&attn_out, self.weight(&name("wo"))?, seq, d, d);
             for (hv, ov) in h.iter_mut().zip(&o) {
                 *hv += ov;

@@ -187,7 +187,16 @@ mod tests {
         let r = rank_for_energy(&dec, 0.999);
         assert!(r <= 3, "low-rank data should need ~2 modes, got {r}");
         assert_eq!(rank_for_energy(&dec, 0.0), 1);
-        assert_eq!(rank_for_energy(&dec, 1.0) <= 8, true);
+        // full energy: the selected rank really captures all of the
+        // (clamped-positive) eigenvalue mass, and is minimal in doing so
+        let r_full = rank_for_energy(&dec, 1.0);
+        assert!(r_full >= 1 && r_full <= 8);
+        let mass = |k: usize| dec.values.iter().take(k).map(|l| l.max(0.0)).sum::<f64>();
+        let total = mass(dec.values.len());
+        assert!(mass(r_full) >= total * (1.0 - 1e-12), "rank {r_full} misses mass");
+        if r_full > 1 {
+            assert!(mass(r_full - 1) < total, "rank {r_full} not minimal");
+        }
     }
 
     #[test]

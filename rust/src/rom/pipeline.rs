@@ -367,7 +367,11 @@ impl<'rt> RomPipeline<'rt> {
                     .collect();
                 for (bi, cb) in calib.iter().enumerate() {
                     let outs = self.block_capture(params, block, &hidden[bi])?;
-                    let bytes: usize = outs.values().map(|t| t.len() * 4).sum::<usize>();
+                    // captures + resident hidden-state chunks, same as the
+                    // propagating path — the §4 memory numbers must stay
+                    // comparable across the ablation
+                    let bytes: usize = outs.values().map(|t| t.len() * 4).sum::<usize>()
+                        + hidden.iter().map(|t| t.len() * 4).sum::<usize>();
                     peak_bytes = peak_bytes.max(bytes);
                     for (field, cap_name) in &all {
                         let cap = outs.get(*cap_name).context("capture missing")?;

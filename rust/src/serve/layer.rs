@@ -1,0 +1,163 @@
+//! Per-matrix dense/low-rank dispatch: the unit of factored-form serving.
+//!
+//! A dense layer applies as `y = x·Wᵀ` (one `d_out×d_in` matmul); a
+//! factored layer as `y = (x·W2ᵀ)·W1ᵀ` (two skinny matmuls through the
+//! rank-r bottleneck), costing `r(d_in+d_out)` MACs per row instead of
+//! `d_in·d_out`. Both run on the cache-blocked f32 kernel
+//! ([`crate::linalg::matmul_transb_blocked_f32`]).
+
+use crate::linalg::{matmul_transb_blocked_f32, Matrix};
+use crate::rom::decompose::RomFactors;
+
+/// One weight matrix, in whichever form it executes.
+#[derive(Debug, Clone)]
+pub enum ServeLayer {
+    /// Row-major `(d_out, d_in)` weight, applied as `x·Wᵀ`.
+    Dense { w: Vec<f32>, d_out: usize, d_in: usize },
+    /// Factored pair: `w1` row-major `(d_out, r)`, `w2` row-major
+    /// `(r, d_in)`, applied as `(x·W2ᵀ)·W1ᵀ`.
+    Factored { w1: Vec<f32>, w2: Vec<f32>, rank: usize, d_out: usize, d_in: usize },
+}
+
+impl ServeLayer {
+    pub fn dense(w: Vec<f32>, d_out: usize, d_in: usize) -> ServeLayer {
+        assert_eq!(w.len(), d_out * d_in, "dense layer shape mismatch");
+        ServeLayer::Dense { w, d_out, d_in }
+    }
+
+    /// Factored layer from ROM factors (f64 → f32 for the serving path,
+    /// mirroring how the dense path stores `W_eff` as f32).
+    pub fn factored(f: &RomFactors) -> ServeLayer {
+        ServeLayer::Factored {
+            w1: f.w1.to_f32(),
+            w2: f.w2.to_f32(),
+            rank: f.rank,
+            d_out: f.d_out(),
+            d_in: f.d_in(),
+        }
+    }
+
+    /// Factored layer from explicit `(d_out, r)` / `(r, d_in)` matrices
+    /// (bench/test convenience).
+    pub fn factored_from_matrices(w1: &Matrix, w2: &Matrix) -> ServeLayer {
+        assert_eq!(w1.cols(), w2.rows(), "factor inner dims disagree");
+        ServeLayer::Factored {
+            rank: w1.cols(),
+            d_out: w1.rows(),
+            d_in: w2.cols(),
+            w1: w1.to_f32(),
+            w2: w2.to_f32(),
+        }
+    }
+
+    pub fn d_out(&self) -> usize {
+        match self {
+            ServeLayer::Dense { d_out, .. } | ServeLayer::Factored { d_out, .. } => *d_out,
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        match self {
+            ServeLayer::Dense { d_in, .. } | ServeLayer::Factored { d_in, .. } => *d_in,
+        }
+    }
+
+    pub fn is_factored(&self) -> bool {
+        matches!(self, ServeLayer::Factored { .. })
+    }
+
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            ServeLayer::Dense { .. } => None,
+            ServeLayer::Factored { rank, .. } => Some(*rank),
+        }
+    }
+
+    /// Multiply-accumulates to apply this layer to one input row — the
+    /// paper's `d1·d2` vs `r(d1+d2)` comparison, per layer.
+    pub fn macs_per_row(&self) -> u128 {
+        match self {
+            ServeLayer::Dense { d_out, d_in, .. } => (*d_out * *d_in) as u128,
+            ServeLayer::Factored { rank, d_out, d_in, .. } => (*rank * (*d_out + *d_in)) as u128,
+        }
+    }
+
+    /// `y = x·Wᵀ` over `rows` row-major input rows of width `d_in`.
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), rows * self.d_in());
+        match self {
+            ServeLayer::Dense { w, d_out, d_in } => {
+                matmul_transb_blocked_f32(x, w, rows, *d_in, *d_out)
+            }
+            ServeLayer::Factored { w1, w2, rank, d_out, d_in } => {
+                let t = matmul_transb_blocked_f32(x, w2, rows, *d_in, *rank);
+                matmul_transb_blocked_f32(&t, w1, rows, *rank, *d_out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::rom::decompose::decompose_weight;
+    use crate::util::Rng;
+
+    fn random_factors(d_out: usize, d_in: usize, n: usize, rank: usize, seed: u64) -> RomFactors {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::from_fn(d_out, d_in, |_, _| rng.normal() * 0.1);
+        let y = Matrix::from_fn(n, d_out, |_, _| rng.normal());
+        let cov = matmul(&y.transpose(), &y);
+        decompose_weight(&w, &cov, rank).unwrap()
+    }
+
+    #[test]
+    fn factored_apply_matches_effective_weight_apply() {
+        // the acceptance bar: factored execution ≈ re-densified execution
+        // to ≤1e-5 on random inputs
+        for (seed, (d_out, d_in, rank)) in [(70, 16, 3), (33, 47, 7), (64, 64, 21)].iter().enumerate()
+        {
+            let f = random_factors(*d_out, *d_in, 120, *rank, seed as u64);
+            let weff = f.effective_weight();
+            let dense = ServeLayer::dense(weff.to_f32(), *d_out, *d_in);
+            let fact = ServeLayer::factored(&f);
+            assert!(fact.is_factored() && !dense.is_factored());
+            assert_eq!(fact.rank(), Some(*rank));
+
+            let mut rng = Rng::new(seed as u64 + 100);
+            let rows = 33;
+            let x: Vec<f32> = (0..rows * d_in).map(|_| rng.normal() as f32).collect();
+            let yd = dense.apply(&x, rows);
+            let yf = fact.apply(&x, rows);
+            assert_eq!(yd.len(), rows * d_out);
+            let max_abs = yd
+                .iter()
+                .zip(&yf)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_abs < 1e-5, "d{d_out}x{d_in} r{rank}: max |Δ| = {max_abs}");
+        }
+    }
+
+    #[test]
+    fn mac_accounting_matches_paper_formula() {
+        let f = random_factors(20, 12, 80, 4, 0);
+        let dense = ServeLayer::dense(f.effective_weight().to_f32(), 20, 12);
+        let fact = ServeLayer::factored(&f);
+        assert_eq!(dense.macs_per_row(), 20 * 12);
+        assert_eq!(fact.macs_per_row(), 4 * (20 + 12));
+        assert!(fact.macs_per_row() < dense.macs_per_row());
+    }
+
+    #[test]
+    fn full_rank_factored_apply_is_near_exact() {
+        let f = random_factors(10, 8, 60, 10, 3);
+        let dense = ServeLayer::dense(f.effective_weight().to_f32(), 10, 8);
+        let fact = ServeLayer::factored(&f);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.25 - 1.0).collect();
+        for (a, b) in dense.apply(&x, 1).iter().zip(fact.apply(&x, 1)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Batched forward pass over a [`CompressedModel`] artifact with
+//! per-layer dense/low-rank dispatch.
+//!
+//! Mirrors [`crate::model::ReferenceModel`]'s MiniLLaMA math exactly (same
+//! rmsnorm / rope / attention helpers), but every one of the 7
+//! decomposable matrices per block goes through a [`ServeLayer`]: factored
+//! when the artifact carries [`crate::rom::RomFactors`] for it and the
+//! engine runs in [`ExecMode::Factored`], dense otherwise. The forward
+//! counts the MACs it actually executes, in the same convention as
+//! [`crate::model::macs::report`] (weight matmuls exact, attention
+//! `2·T·d_model` per token per block, tied LM head `vocab·d_model`), so
+//! served MACs are directly comparable to the artifact's analytic
+//! accounting.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::CompressedModel;
+use crate::linalg::matmul_transb_blocked_f32;
+use crate::model::reference::{causal_attention, rmsnorm, rope_qk, silu};
+use crate::model::ModelConfig;
+
+use super::layer::ServeLayer;
+use super::ExecMode;
+
+struct ServeBlock {
+    attn_norm: Vec<f32>,
+    ffn_norm: Vec<f32>,
+    wq: ServeLayer,
+    wk: ServeLayer,
+    wv: ServeLayer,
+    wo: ServeLayer,
+    w_gate: ServeLayer,
+    w_up: ServeLayer,
+    w_down: ServeLayer,
+}
+
+/// A compressed model in executable form.
+pub struct ServeModel {
+    cfg: ModelConfig,
+    mode: ExecMode,
+    embed: Vec<f32>,
+    final_norm: Vec<f32>,
+    blocks: Vec<ServeBlock>,
+}
+
+impl ServeModel {
+    /// Build from an artifact. In [`ExecMode::Factored`], every matrix the
+    /// artifact carries factors for executes in factored form; matrices
+    /// without factors (dense layers of the schedule, pruning artifacts,
+    /// budget-1.0 identities) stay dense, so the two modes coincide
+    /// exactly when there is nothing to factor.
+    pub fn from_artifact(cm: &CompressedModel, mode: ExecMode) -> Result<ServeModel> {
+        let cfg = cm.params.config().clone();
+        let layer = |block: usize, field: &str| -> Result<ServeLayer> {
+            let name = format!("blocks.{block}.{field}");
+            let t = cm.params.get(&name)?;
+            let shape = t.shape();
+            ensure!(shape.len() == 2, "`{name}`: rank-{} tensor", shape.len());
+            let (d_out, d_in) = (shape[0], shape[1]);
+            if mode == ExecMode::Factored {
+                if let Some(f) = cm.factors.get(&name) {
+                    ensure!(
+                        f.d_out() == d_out && f.d_in() == d_in,
+                        "factor `{name}`: {}x{} factors for a {d_out}x{d_in} layer",
+                        f.d_out(),
+                        f.d_in()
+                    );
+                    return Ok(ServeLayer::factored(f));
+                }
+            }
+            Ok(ServeLayer::dense(t.as_f32()?.to_vec(), d_out, d_in))
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            blocks.push(ServeBlock {
+                attn_norm: cm.params.get(&format!("blocks.{b}.attn_norm"))?.as_f32()?.to_vec(),
+                ffn_norm: cm.params.get(&format!("blocks.{b}.ffn_norm"))?.as_f32()?.to_vec(),
+                wq: layer(b, "wq")?,
+                wk: layer(b, "wk")?,
+                wv: layer(b, "wv")?,
+                wo: layer(b, "wo")?,
+                w_gate: layer(b, "w_gate")?,
+                w_up: layer(b, "w_up")?,
+                w_down: layer(b, "w_down")?,
+            });
+        }
+        Ok(ServeModel {
+            embed: cm.params.get("embed")?.as_f32()?.to_vec(),
+            final_norm: cm.params.get("final_norm")?.as_f32()?.to_vec(),
+            cfg,
+            mode,
+            blocks,
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// How many of the decomposable matrices execute in factored form.
+    pub fn n_factored(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| [&b.wq, &b.wk, &b.wv, &b.wo, &b.w_gate, &b.w_up, &b.w_down])
+            .filter(|l| l.is_factored())
+            .count()
+    }
+
+    /// Analytic MACs for a `tokens`-long forward under this model's
+    /// dispatch — what [`ServeModel::forward_logits`] will count.
+    pub fn macs_for(&self, tokens: usize) -> u128 {
+        let t = tokens as u128;
+        let d = self.cfg.d_model as u128;
+        let mut per_token: u128 = (self.cfg.vocab as u128) * d; // tied head
+        for b in &self.blocks {
+            for l in [&b.wq, &b.wk, &b.wv, &b.wo, &b.w_gate, &b.w_up, &b.w_down] {
+                per_token += l.macs_per_row();
+            }
+            per_token += 2 * t * d; // attention scores + weighted values
+        }
+        per_token * t
+    }
+
+    /// Full-sequence forward: tokens -> ((seq, vocab) logits, MACs
+    /// executed). Causal attention, positions from 0 (no KV cache — the
+    /// engine batches whole requests).
+    pub fn forward_logits(&self, tokens: &[i32]) -> Result<(Vec<f32>, u128)> {
+        let cfg = &self.cfg;
+        let (d, nh) = (cfg.d_model, cfg.n_heads);
+        debug_assert_eq!(cfg.head_dim() * nh, d);
+        let seq = tokens.len();
+        if seq == 0 {
+            bail!("empty request");
+        }
+        let mut macs: u128 = 0;
+
+        // embed
+        let mut h = vec![0.0f32; seq * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            ensure!(tok < cfg.vocab, "token {tok} out of vocab");
+            h[t * d..(t + 1) * d].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+        }
+
+        let mut buf = vec![0.0f32; seq * d];
+        for block in &self.blocks {
+            // ---- attention ----
+            rmsnorm(&h, &block.attn_norm, cfg.norm_eps, &mut buf);
+            let mut q = block.wq.apply(&buf, seq);
+            let mut k = block.wk.apply(&buf, seq);
+            let v = block.wv.apply(&buf, seq);
+            macs += seq as u128
+                * (block.wq.macs_per_row() + block.wk.macs_per_row() + block.wv.macs_per_row());
+            // same rope + causal-softmax math as ReferenceModel (shared
+            // helpers; whole request at once, so pos0 = 0 and K/V are the
+            // full projections)
+            rope_qk(&mut q, &mut k, seq, d, nh, 0, cfg.rope_theta);
+            let attn_out = causal_attention(&q, &k, &v, seq, 0, d, nh);
+            // accounting convention: 2·T·d per token per block (QKᵀ + PV),
+            // matching `model::macs::report`
+            macs += 2 * (seq as u128) * (seq as u128) * (d as u128);
+
+            let o = block.wo.apply(&attn_out, seq);
+            macs += seq as u128 * block.wo.macs_per_row();
+            for (hv, ov) in h.iter_mut().zip(&o) {
+                *hv += ov;
+            }
+
+            // ---- ffn ----
+            rmsnorm(&h, &block.ffn_norm, cfg.norm_eps, &mut buf);
+            let gate = block.w_gate.apply(&buf, seq);
+            let up = block.w_up.apply(&buf, seq);
+            macs += seq as u128 * (block.w_gate.macs_per_row() + block.w_up.macs_per_row());
+            let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
+            let down = block.w_down.apply(&act, seq);
+            macs += seq as u128 * block.w_down.macs_per_row();
+            for (hv, dv) in h.iter_mut().zip(&down) {
+                *hv += dv;
+            }
+        }
+
+        // tied head
+        rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut buf);
+        let logits = matmul_transb_blocked_f32(&buf, &self.embed, seq, d, cfg.vocab);
+        macs += (seq * cfg.vocab * d) as u128;
+        Ok((logits, macs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::macs::{self, CompressionAccounting};
+    use crate::model::ReferenceModel;
+    use crate::serve::{demo_artifact, demo_config, synth_requests};
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn factored_forward_matches_dense_forward() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 11).unwrap();
+        let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        assert_eq!(dense.n_factored(), 0);
+        assert!(fact.n_factored() > 0);
+        for req in synth_requests(&cfg, 3, 20, 5) {
+            let (ld, _) = dense.forward_logits(&req.tokens).unwrap();
+            let (lf, _) = fact.forward_logits(&req.tokens).unwrap();
+            let diff = max_abs_diff(&ld, &lf);
+            assert!(diff <= 1e-4, "request {}: max |Δlogits| = {diff}", req.id);
+        }
+    }
+
+    #[test]
+    fn dense_mode_matches_reference_model() {
+        // the serving engine's dense path is an independent forward over
+        // the same weights the ReferenceModel runs — they must agree
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 13).unwrap();
+        let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
+        let reference = ReferenceModel::new(&cm.params);
+        let tokens: Vec<i32> = (0..17).map(|i| (i * 3 % cfg.vocab as i32).max(0)).collect();
+        let (ls, _) = dense.forward_logits(&tokens).unwrap();
+        let lr = reference.forward_logits(&tokens).unwrap();
+        let diff = max_abs_diff(&ls, &lr);
+        assert!(diff <= 1e-4, "serve-dense vs reference: max |Δ| = {diff}");
+    }
+
+    #[test]
+    fn served_macs_match_artifact_accounting() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 17).unwrap();
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
+        for seq in [1usize, 7, 24] {
+            let tokens: Vec<i32> = vec![1; seq];
+            let (_, mf) = fact.forward_logits(&tokens).unwrap();
+            let (_, md) = dense.forward_logits(&tokens).unwrap();
+            assert_eq!(mf, macs::report(&cfg, &cm.accounting, seq).macs, "factored seq {seq}");
+            assert_eq!(md, macs::report(&cfg, &CompressionAccounting::dense(), seq).macs);
+            assert_eq!(mf, fact.macs_for(seq));
+            assert_eq!(md, dense.macs_for(seq));
+            assert!(mf < md, "factored must execute fewer MACs (seq {seq})");
+        }
+    }
+
+    #[test]
+    fn budget_one_artifact_serves_identically_in_both_modes() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 1.0, 19).unwrap();
+        let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        assert_eq!(fact.n_factored(), 0, "identity artifact has nothing to factor");
+        let tokens: Vec<i32> = (0..12).map(|i| i % cfg.vocab as i32).collect();
+        let (ld, md) = dense.forward_logits(&tokens).unwrap();
+        let (lf, mf) = fact.forward_logits(&tokens).unwrap();
+        assert_eq!(ld, lf, "identical dispatch must produce identical logits");
+        assert_eq!(md, mf);
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 23).unwrap();
+        let m = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        assert!(m.forward_logits(&[]).is_err());
+        assert!(m.forward_logits(&[cfg.vocab as i32]).is_err());
+    }
+}

@@ -258,6 +258,15 @@ fn prop_compressed_model_rtz_roundtrip() {
             let d = back.params.distance(&cm.params).unwrap();
             assert!(d < 1e-12, "case {case} {method}: params distance {d}");
             assert_eq!(back.accounting.layers, cm.accounting.layers, "case {case} {method}");
+            // ROM factors ride along bit-exactly (empty for pruning)
+            assert_eq!(back.factors.len(), cm.factors.len(), "case {case} {method}");
+            for (name, f) in &cm.factors {
+                let g = &back.factors[name];
+                assert_eq!(g.rank, f.rank, "case {case} {name}");
+                assert_eq!(g.energy, f.energy, "case {case} {name}");
+                assert_eq!(g.w1.data(), f.w1.data(), "case {case} {name}: w1 not lossless");
+                assert_eq!(g.w2.data(), f.w2.data(), "case {case} {name}: w2 not lossless");
+            }
             assert_eq!(back.provenance, cm.provenance, "case {case} {method}");
             assert_eq!(back.timings.len(), cm.timings.len(), "case {case} {method}");
             assert_eq!(back.peak_capture_bytes, cm.peak_capture_bytes);
@@ -309,6 +318,66 @@ fn prop_rank_for_budget_monotone() {
             assert!(r >= prev, "case {case} b={b}: rank {r} < previous {prev}");
             prev = r;
         }
+    }
+}
+
+/// Property: across random budgets and seeds, factored-form serving
+/// matches the re-densified path to ≤1e-4 on logits, and the MACs it
+/// executes equal the artifact's analytic accounting (never more than the
+/// dense path's).
+#[test]
+fn prop_factored_serving_matches_dense() {
+    use llm_rom::serve::{demo_artifact, demo_config, synth_requests, ExecMode, ServeModel};
+    let cfg = demo_config();
+    for case in 0..8u64 {
+        let mut rng = Rng::new(case * 6007 + 37);
+        let budget = 0.4 + rng.f64() * 0.5;
+        let cm = demo_artifact(&cfg, budget, case).unwrap();
+        let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        assert_eq!(fact.n_factored(), cm.factors.len(), "case {case}");
+        for req in synth_requests(&cfg, 2, 8 + rng.below(16), case * 13 + 1) {
+            let (ld, md) = dense.forward_logits(&req.tokens).unwrap();
+            let (lf, mf) = fact.forward_logits(&req.tokens).unwrap();
+            let diff =
+                ld.iter().zip(&lf).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(diff <= 1e-4, "case {case} b={budget:.2}: max |Δlogits| = {diff}");
+            let t = req.tokens.len();
+            let want = llm_rom::model::macs::report(&cfg, &cm.accounting, t).macs;
+            assert_eq!(mf, want, "case {case}: served MACs != accounting MACs");
+            assert!(mf <= md, "case {case}: factored executed more MACs than dense");
+        }
+    }
+}
+
+/// Property: the serving engine's batching/threading never changes
+/// results — any (workers, max_batch) split serves the same logits and
+/// the same total MACs as the sequential run.
+#[test]
+fn prop_serve_engine_schedule_invariant() {
+    use llm_rom::serve::{
+        demo_artifact, demo_config, synth_requests, ExecMode, ServeConfig, ServeEngine,
+        ServeModel,
+    };
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, 77).unwrap();
+    let reqs = || synth_requests(&cfg, 7, 10, 5);
+    let run = |workers: usize, max_batch: usize| {
+        let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let engine = ServeEngine::new(model, ServeConfig { workers, max_batch });
+        engine.run(reqs()).unwrap()
+    };
+    let (base, base_stats) = run(1, 1);
+    for (w, b) in [(2, 1), (2, 3), (4, 2), (3, 100)] {
+        let (results, stats) = run(w, b);
+        assert_eq!(results.len(), base.len(), "{w}/{b}");
+        for (x, y) in results.iter().zip(&base) {
+            assert_eq!(x.id, y.id, "{w}/{b}");
+            assert_eq!(x.logits, y.logits, "{w}/{b}: scheduling changed logits");
+            assert_eq!(x.macs, y.macs, "{w}/{b}");
+        }
+        assert_eq!(stats.macs, base_stats.macs, "{w}/{b}");
+        assert_eq!(stats.tokens, base_stats.tokens, "{w}/{b}");
     }
 }
 

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Repo verification: build + test + (when the components are installed)
-# format and lint checks. This is the tier-1 gate plus the optional
-# tooling; run it from anywhere: `bash scripts/verify.sh` or `make verify`.
+# Repo verification: build + test + serve smoke test + (when the
+# components are installed) format and lint checks. This is the tier-1
+# gate plus the optional tooling; run it from anywhere:
+# `bash scripts/verify.sh` or `make verify`.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -15,9 +16,18 @@ cargo build --release --examples --benches
 echo "== cargo test -q =="
 cargo test -q
 
+# Serve smoke test: builds a mini artifact offline, round-trips it through
+# .rtz, and checks factored execution against the dense path (logits ≤1e-4,
+# MACs == analytic accounting). Needs no AOT artifacts or PJRT.
+echo "== repro serve --self-check =="
+./target/release/repro serve --self-check
+
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
-  cargo fmt --check
+  if ! cargo fmt --check; then
+    echo "verify: FAILED — cargo fmt --check drift (run \`cargo fmt\` and re-verify)" >&2
+    exit 1
+  fi
 else
   echo "== cargo fmt --check == (skipped: rustfmt not installed)"
 fi
