@@ -1,6 +1,6 @@
 # LLM-ROM reproduction — top-level targets.
 
-.PHONY: verify build test artifacts
+.PHONY: verify build test bench artifacts
 
 # Tier-1 gate + optional fmt/clippy (see scripts/verify.sh).
 verify:
@@ -11,6 +11,13 @@ build:
 
 test:
 	cd rust && cargo test -q
+
+# Machine-readable serving/decoding benchmarks, tracked across PRs
+# (BENCH_serve.json / BENCH_decode.json at the repo root). Offline: both
+# fall back to a synthetic mini artifact when no --ckpt is given.
+bench: build
+	cd rust && ./target/release/repro bench-serve --json ../BENCH_serve.json
+	cd rust && ./target/release/repro bench-decode --json ../BENCH_decode.json
 
 # Export the AOT artifacts (HLO text + manifest + init checkpoint) into
 # rust/artifacts/. Needs the python/jax toolchain from python/compile/.

@@ -1,0 +1,56 @@
+//! Decode-path throughput bench — the generation-side companion of the
+//! serve-layer bench in `rom_layer.rs`, fully offline (synthetic artifact,
+//! no PJRT):
+//!
+//! - KV-cached continuous-batching decode, dense vs factored execution
+//!   (the `r(d1+d2)` win on the incremental path), and
+//! - the cache-less full-recompute baseline, measuring what the KV cache
+//!   itself buys in wall clock on top of the MAC accounting.
+
+use llm_rom::decode::{run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler};
+use llm_rom::model::ModelConfig;
+use llm_rom::serve::{demo_artifact, ExecMode, ServeModel};
+use llm_rom::util::bench::{bench, default_window};
+
+fn main() {
+    let window = default_window();
+    let cfg = ModelConfig::mini();
+    let cm = demo_artifact(&cfg, 0.5, 0xBE).expect("demo artifact");
+    let reqs = synth_gen_requests(&cfg, 4, 16, 7);
+    let config =
+        DecodeConfig { slots: 2, capacity: 48, max_new: 24, seed: 7, ..DecodeConfig::default() };
+    let generated: usize = {
+        // one dry run to know the workload size (EOS may end streams early)
+        let model = ServeModel::from_artifact(&cm, ExecMode::Factored).expect("model");
+        let (_, stats) = DecodeScheduler::new(&model, config).run(reqs.clone()).expect("decode");
+        stats.generated_tokens
+    };
+    println!("# decode bench: {} requests, {generated} generated tokens per run", reqs.len());
+
+    let mut means: Vec<(String, f64)> = Vec::new();
+    for mode in [ExecMode::Dense, ExecMode::Factored] {
+        let model = ServeModel::from_artifact(&cm, mode).expect("model");
+        let scheduler = DecodeScheduler::new(&model, config);
+        let r = bench(&format!("kv-decode {} (2 slots)", mode.name()), window, || {
+            scheduler.run(reqs.clone()).expect("decode")
+        });
+        means.push((format!("kv-{}", mode.name()), r.mean_s));
+    }
+    let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).expect("model");
+    let r = bench("recompute dense (no cache)", window, || {
+        run_recompute(&dense, &reqs, &config).expect("recompute")
+    });
+    means.push(("recompute-dense".to_string(), r.mean_s));
+
+    for (label, mean_s) in &means {
+        println!("    -> {label}: {:.0} tok/s", generated as f64 / mean_s);
+    }
+    let kv_dense = means[0].1;
+    let kv_fact = means[1].1;
+    let recompute = means[2].1;
+    println!(
+        "    -> KV cache speedup {:.2}x (dense), factorization speedup {:.2}x on top",
+        recompute / kv_dense,
+        kv_dense / kv_fact
+    );
+}

@@ -14,4 +14,7 @@ pub mod tables;
 
 pub use cost::{CostReport, CostRow};
 pub use experiment::{Experiment, ExperimentConfig, TrainedArtifacts};
-pub use tables::{run_tables, serve_table, sweep_table, table1, table2, table3, table4};
+pub use tables::{
+    decode_bench, run_tables, serve_bench, serve_table, sweep_table, table1, table2, table3,
+    table4, DecodeBench, DecodeBenchRow, ServeBench, ServeBenchRow,
+};

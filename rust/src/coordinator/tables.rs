@@ -17,15 +17,25 @@
 //! - **Serve table** — dense vs factored execution of one artifact through
 //!   the serving engine, with MAC/latency/throughput columns and the
 //!   logits agreement bound (`repro bench-serve`).
+//! - **Decode table** — recompute vs KV-cached generation, dense vs
+//!   factored, with MACs/token, tokens/sec, TTFT and inter-token latency
+//!   columns (`repro bench-decode`). Both benches also serialize to JSON
+//!   via `--json` ([`ServeBench::to_json`] / [`DecodeBench::to_json`]).
+
+use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
 use crate::compress::CompressedModel;
 use crate::data::{CalibSource, TaskKind};
+use crate::decode::{
+    run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler, DecodeStats,
+};
 use crate::eval::{format_table, EvalReport};
 use crate::model::macs::{self, CompressionAccounting};
 use crate::model::ParamStore;
-use crate::serve::{synth_requests, ExecMode, ServeConfig, ServeEngine, ServeModel};
+use crate::serve::{synth_requests, ExecMode, ServeConfig, ServeEngine, ServeModel, ServeStats};
+use crate::util::json::Json;
 
 use super::experiment::Experiment;
 
@@ -161,18 +171,123 @@ pub fn sweep_table(
     ))
 }
 
+/// One mode's row of the serve benchmark.
+pub struct ServeBenchRow {
+    pub mode: ExecMode,
+    /// Matrices executing in factored form under this mode's dispatch.
+    pub n_factored: usize,
+    pub stats: ServeStats,
+}
+
 /// Dense vs factored serving comparison on one artifact: identical
-/// synthetic workload through both execution modes of the serving engine,
-/// reporting MACs/token, per-token latency, throughput, and the max
-/// absolute logits disagreement — the empirical `r(d1+d2)` vs `d1·d2`
-/// evidence behind `repro bench-serve`.
-pub fn serve_table(
+/// synthetic workload through both execution modes of the serving engine —
+/// the empirical `r(d1+d2)` vs `d1·d2` evidence behind
+/// `repro bench-serve`, renderable as a table ([`ServeBench::format`]) or
+/// machine-readable JSON ([`ServeBench::to_json`], `--json`).
+pub struct ServeBench {
+    pub rows: Vec<ServeBenchRow>,
+    /// Max absolute logits disagreement between the two modes.
+    pub max_logit_diff: f64,
+    pub requests: usize,
+    pub seq: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+impl ServeBench {
+    /// Dense-to-factored total MAC ratio.
+    pub fn mac_reduction(&self) -> f64 {
+        let (d, f) = (&self.rows[0].stats, &self.rows[1].stats);
+        if f.macs > 0 {
+            d.macs as f64 / f.macs as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Dense-to-factored wall-clock ratio.
+    pub fn speedup(&self) -> f64 {
+        let (d, f) = (&self.rows[0].stats, &self.rows[1].stats);
+        if f.wall_s > 0.0 {
+            d.wall_s / f.wall_s
+        } else {
+            1.0
+        }
+    }
+
+    pub fn format(&self) -> String {
+        let mut out = String::from(
+            "Serve: dense vs factored execution\n\
+             mode      layers(lr)   MMACs/tok   µs/tok     tok/s     p95 lat\n",
+        );
+        for row in &self.rows {
+            let s = &row.stats;
+            out.push_str(&format!(
+                "{:<9} {:>10} {:>11.3} {:>8.1} {:>9.0} {:>9.1}ms\n",
+                row.mode.name(),
+                row.n_factored,
+                s.macs_per_token() as f64 / 1e6,
+                s.s_per_token() * 1e6,
+                s.tokens_per_s(),
+                s.latency.p95 * 1e3,
+            ));
+        }
+        out.push_str(&format!(
+            "MAC reduction {:.2}x, wall-clock speedup {:.2}x, max |Δlogits| {:.2e}\n",
+            self.mac_reduction(),
+            self.speedup(),
+            self.max_logit_diff
+        ));
+        out
+    }
+
+    /// Machine-readable form (the `BENCH_serve.json` payload).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                let s = &row.stats;
+                json_obj(vec![
+                    ("mode", Json::Str(row.mode.name().to_string())),
+                    ("factored_layers", Json::Num(row.n_factored as f64)),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("tokens", Json::Num(s.tokens as f64)),
+                    ("macs_per_token", Json::Num(s.macs_per_token() as f64)),
+                    ("tokens_per_s", Json::Num(s.tokens_per_s())),
+                    ("us_per_token", Json::Num(s.s_per_token() * 1e6)),
+                    ("wall_s", Json::Num(s.wall_s)),
+                    ("mean_latency_s", Json::Num(s.latency.mean)),
+                    ("p50_latency_s", Json::Num(s.latency.p50)),
+                    ("p95_latency_s", Json::Num(s.latency.p95)),
+                    ("max_latency_s", Json::Num(s.latency.max)),
+                ])
+            })
+            .collect();
+        json_obj(vec![
+            ("bench", Json::Str("serve".to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("batch", Json::Num(self.max_batch as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("mac_reduction", Json::Num(self.mac_reduction())),
+            ("speedup", Json::Num(self.speedup())),
+            ("max_abs_logit_diff", Json::Num(self.max_logit_diff)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Run the dense-vs-factored serve comparison on one artifact.
+pub fn serve_bench(
     cm: &CompressedModel,
     requests: usize,
     seq: usize,
     config: ServeConfig,
     seed: u64,
-) -> Result<String> {
+) -> Result<ServeBench> {
     let cfg = cm.params.config();
     let mut rows = Vec::new();
     let mut logits: Vec<Vec<f32>> = Vec::new();
@@ -183,42 +298,188 @@ pub fn serve_table(
         let reqs = synth_requests(cfg, requests, seq, seed);
         let (results, stats) = engine.run(reqs)?;
         logits.push(results.into_iter().flat_map(|r| r.logits).collect());
-        rows.push((mode, n_factored, stats));
+        rows.push(ServeBenchRow { mode, n_factored, stats });
     }
     ensure!(logits[0].len() == logits[1].len(), "mode outputs diverge in shape");
-    let max_diff = logits[0]
+    let max_logit_diff = logits[0]
         .iter()
         .zip(&logits[1])
         .map(|(a, b)| (a - b).abs() as f64)
         .fold(0.0f64, f64::max);
+    Ok(ServeBench {
+        rows,
+        max_logit_diff,
+        requests,
+        seq,
+        workers: config.workers,
+        max_batch: config.max_batch,
+        seed,
+    })
+}
 
-    let mut out = String::from(
-        "Serve: dense vs factored execution\n\
-         mode      layers(lr)   MMACs/tok   µs/tok     tok/s     p95 lat\n",
-    );
-    for (mode, n_factored, s) in &rows {
-        out.push_str(&format!(
-            "{:<9} {:>10} {:>11.3} {:>8.1} {:>9.0} {:>9.1}ms\n",
-            mode.name(),
-            n_factored,
-            s.macs_per_token() as f64 / 1e6,
-            s.s_per_token() * 1e6,
-            s.tokens_per_s(),
-            s.p95_latency_s * 1e3,
-        ));
+/// Back-compat text form of [`serve_bench`].
+pub fn serve_table(
+    cm: &CompressedModel,
+    requests: usize,
+    seq: usize,
+    config: ServeConfig,
+    seed: u64,
+) -> Result<String> {
+    Ok(serve_bench(cm, requests, seq, config, seed)?.format())
+}
+
+/// One method's row of the decode benchmark.
+pub struct DecodeBenchRow {
+    /// `dense-recompute`, `dense-kv`, or `factored-kv`.
+    pub method: &'static str,
+    pub stats: DecodeStats,
+}
+
+/// Recompute-vs-KV-cached, dense-vs-factored decode comparison on one
+/// artifact: the same synthetic generation workload driven three ways —
+/// the `repro bench-decode` payload, renderable as a table or JSON.
+pub struct DecodeBench {
+    pub rows: Vec<DecodeBenchRow>,
+    /// Whether KV-cached decode produced token streams identical to the
+    /// cache-less recompute baseline on the same (dense) model — the cache
+    /// correctness invariant. (Dense and factored streams may legitimately
+    /// diverge on near-tie argmaxes, since their logits differ within the
+    /// 1e-4 bound.)
+    pub streams_match: bool,
+    pub requests: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub slots: usize,
+    pub seed: u64,
+}
+
+impl DecodeBench {
+    /// dense-recompute vs factored-KV MACs per generated token — the
+    /// headline `r(d1+d2)` × KV-cache saving.
+    pub fn mac_reduction(&self) -> f64 {
+        let base = self.rows[0].stats.macs_per_generated_token();
+        let fact = self.rows[2].stats.macs_per_generated_token();
+        if fact > 0 {
+            base as f64 / fact as f64
+        } else {
+            1.0
+        }
     }
-    let (dense_s, fact_s) = (&rows[0].2, &rows[1].2);
-    let mac_ratio = if fact_s.macs > 0 {
-        dense_s.macs as f64 / fact_s.macs as f64
-    } else {
-        1.0
+
+    pub fn format(&self) -> String {
+        let mut out = String::from(
+            "Decode: recompute vs KV-cached, dense vs factored\n\
+             method            MMACs/tok   tok/s   ttft p50    itl p95   vs recompute\n",
+        );
+        for row in &self.rows {
+            let s = &row.stats;
+            out.push_str(&format!(
+                "{:<17} {:>9.3} {:>7.0} {:>8.2}ms {:>8.2}ms {:>11.2}x\n",
+                row.method,
+                s.macs_per_generated_token() as f64 / 1e6,
+                s.tokens_per_s(),
+                s.ttft.p50 * 1e3,
+                s.inter_token.p95 * 1e3,
+                s.mac_savings(),
+            ));
+        }
+        out.push_str(&format!(
+            "factored-KV executes {:.2}x fewer MACs/token than dense-recompute; \
+             KV streams ≡ recompute streams: {}\n",
+            self.mac_reduction(),
+            self.streams_match
+        ));
+        out
+    }
+
+    /// Machine-readable form (the `BENCH_decode.json` payload).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                let s = &row.stats;
+                json_obj(vec![
+                    ("method", Json::Str(row.method.to_string())),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("prompt_tokens", Json::Num(s.prompt_tokens as f64)),
+                    ("generated_tokens", Json::Num(s.generated_tokens as f64)),
+                    ("macs_per_token", Json::Num(s.macs_per_generated_token() as f64)),
+                    ("mac_savings_vs_recompute", Json::Num(s.mac_savings())),
+                    ("tokens_per_s", Json::Num(s.tokens_per_s())),
+                    ("wall_s", Json::Num(s.wall_s)),
+                    ("ttft_mean_s", Json::Num(s.ttft.mean)),
+                    ("ttft_p50_s", Json::Num(s.ttft.p50)),
+                    ("ttft_p95_s", Json::Num(s.ttft.p95)),
+                    ("itl_mean_s", Json::Num(s.inter_token.mean)),
+                    ("itl_p50_s", Json::Num(s.inter_token.p50)),
+                    ("itl_p95_s", Json::Num(s.inter_token.p95)),
+                    ("peak_active", Json::Num(s.peak_active as f64)),
+                    ("mid_run_admissions", Json::Num(s.mid_run_admissions as f64)),
+                ])
+            })
+            .collect();
+        json_obj(vec![
+            ("bench", Json::Str("decode".to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("prompt_len", Json::Num(self.prompt_len as f64)),
+            ("max_new", Json::Num(self.max_new as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("mac_reduction", Json::Num(self.mac_reduction())),
+            ("streams_match", Json::Bool(self.streams_match)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Run the three-way decode comparison on one artifact: dense-recompute
+/// (cache-less baseline), dense-KV, and factored-KV, on the same greedy
+/// synthetic workload.
+pub fn decode_bench(
+    cm: &CompressedModel,
+    requests: usize,
+    prompt_len: usize,
+    max_new: usize,
+    slots: usize,
+    seed: u64,
+) -> Result<DecodeBench> {
+    let cfg = cm.params.config();
+    let reqs = synth_gen_requests(cfg, requests, prompt_len, seed);
+    let config = DecodeConfig {
+        slots,
+        capacity: prompt_len + max_new,
+        max_new,
+        seed,
+        ..DecodeConfig::default()
     };
-    let speedup = if fact_s.wall_s > 0.0 { dense_s.wall_s / fact_s.wall_s } else { 1.0 };
-    out.push_str(&format!(
-        "MAC reduction {mac_ratio:.2}x, wall-clock speedup {speedup:.2}x, \
-         max |Δlogits| {max_diff:.2e}\n"
-    ));
-    Ok(out)
+    let dense = ServeModel::from_artifact(cm, ExecMode::Dense)?;
+    let fact = ServeModel::from_artifact(cm, ExecMode::Factored)?;
+
+    let (rc_results, rc_stats) = run_recompute(&dense, &reqs, &config)?;
+    let (dk_results, dk_stats) = DecodeScheduler::new(&dense, config).run(reqs.clone())?;
+    let (_, fk_stats) = DecodeScheduler::new(&fact, config).run(reqs)?;
+
+    let streams_match = rc_results.len() == dk_results.len()
+        && rc_results.iter().zip(&dk_results).all(|(x, y)| x.tokens == y.tokens);
+
+    Ok(DecodeBench {
+        rows: vec![
+            DecodeBenchRow { method: "dense-recompute", stats: rc_stats },
+            DecodeBenchRow { method: "dense-kv", stats: dk_stats },
+            DecodeBenchRow { method: "factored-kv", stats: fk_stats },
+        ],
+        streams_match,
+        requests,
+        prompt_len,
+        max_new,
+        slots,
+        seed,
+    })
+}
+
+fn json_obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
 /// CLI entry: run the requested table(s) and print.
@@ -247,4 +508,59 @@ pub fn run_tables(
         other => anyhow::bail!("unknown table `{other}` (1|2|3|4|all)"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{demo_artifact, demo_config};
+
+    #[test]
+    fn serve_bench_reports_both_modes_with_json() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 3).unwrap();
+        let b = serve_bench(&cm, 4, 10, ServeConfig { workers: 2, max_batch: 2 }, 9).unwrap();
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.rows[0].mode, ExecMode::Dense);
+        assert_eq!(b.rows[1].mode, ExecMode::Factored);
+        assert_eq!(b.rows[0].n_factored, 0);
+        assert!(b.rows[1].n_factored > 0);
+        assert!(b.max_logit_diff <= 1e-4, "modes disagree: {}", b.max_logit_diff);
+        assert!(b.mac_reduction() > 1.0);
+        let text = b.format();
+        assert!(text.contains("dense") && text.contains("factored"));
+        // JSON payload round-trips through the parser with both rows
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("mac_reduction").unwrap().as_f64().unwrap() > 1.0);
+        // text form stays available under the old name
+        assert!(serve_table(&cm, 4, 10, ServeConfig { workers: 2, max_batch: 2 }, 9).is_ok());
+    }
+
+    #[test]
+    fn decode_bench_three_way_acceptance() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 5).unwrap();
+        let b = decode_bench(&cm, 4, 8, 6, 2, 11).unwrap();
+        assert_eq!(b.rows.len(), 3);
+        let methods: Vec<&str> = b.rows.iter().map(|r| r.method).collect();
+        assert_eq!(methods, ["dense-recompute", "dense-kv", "factored-kv"]);
+        // the PR's acceptance bar: factored-KV strictly fewer MACs/token
+        // than dense-recompute
+        let rc = b.rows[0].stats.macs_per_generated_token();
+        let dk = b.rows[1].stats.macs_per_generated_token();
+        let fk = b.rows[2].stats.macs_per_generated_token();
+        assert!(fk < dk, "factorization must save on top of the cache");
+        assert!(dk < rc, "the cache must save on top of recompute");
+        assert!(b.mac_reduction() > 1.0);
+        assert!(b.streams_match, "dense KV streams must equal dense recompute streams");
+        assert!(b.rows[1].stats.mid_run_admissions > 0, "4 requests / 2 slots admit mid-run");
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "decode");
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("streams_match").unwrap(), &Json::Bool(true));
+        let text = b.format();
+        assert!(text.contains("factored-kv") && text.contains("dense-recompute"));
+    }
 }

@@ -1,0 +1,203 @@
+//! Per-sequence KV cache and the slot pool behind the decode scheduler.
+//!
+//! A [`KvCache`] preallocates one `capacity × d_model` K block and V block
+//! per transformer layer (keyed off [`ModelConfig`]), so appending a
+//! token's keys/values during incremental decoding is a bounded
+//! `memcpy` — no reallocation on the token path. A [`KvCachePool`] owns a
+//! fixed number of cache slots; the continuous-batching scheduler acquires
+//! a slot at request admission and releases (resets) it on eviction, so
+//! steady-state serving allocates nothing per request.
+
+use crate::model::ModelConfig;
+
+/// Preallocated per-layer K/V blocks for one decoding sequence.
+///
+/// Rows are row-major `(t, d_model)`, rotary embeddings already applied —
+/// exactly what the shared `causal_attention` helper consumes.
+/// `pos` counts the tokens written so far; writes land at explicit
+/// positions during a chunked forward and `advance` moves the cursor once
+/// per consumed chunk.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    d: usize,
+    capacity: usize,
+    pos: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    /// Preallocate blocks for `capacity` tokens of `cfg`'s geometry.
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> KvCache {
+        KvCache {
+            d: cfg.d_model,
+            capacity,
+            pos: 0,
+            k: vec![vec![0.0; capacity * cfg.d_model]; cfg.n_layers],
+            v: vec![vec![0.0; capacity * cfg.d_model]; cfg.n_layers],
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Row width (`d_model` of the owning config).
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Tokens consumed so far (the next token decodes at this position).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.pos
+    }
+
+    /// Preallocated footprint of this cache in bytes.
+    pub fn bytes(&self) -> usize {
+        2 * self.k.len() * self.capacity * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Forget the sequence (keeps the allocation — slot reuse).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Copy `rows·d` K and V values into `layer`'s blocks at row `at`.
+    pub(crate) fn write(&mut self, layer: usize, at: usize, k_rows: &[f32], v_rows: &[f32]) {
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        debug_assert_eq!(k_rows.len() % self.d, 0);
+        debug_assert!(at * self.d + k_rows.len() <= self.capacity * self.d, "KV write past capacity");
+        let start = at * self.d;
+        self.k[layer][start..start + k_rows.len()].copy_from_slice(k_rows);
+        self.v[layer][start..start + v_rows.len()].copy_from_slice(v_rows);
+    }
+
+    /// The first `rows` K and V rows of `layer` — the attention window.
+    pub(crate) fn view(&self, layer: usize, rows: usize) -> (&[f32], &[f32]) {
+        (&self.k[layer][..rows * self.d], &self.v[layer][..rows * self.d])
+    }
+
+    /// Advance the cursor after a chunk of `seq` tokens was written to
+    /// every layer.
+    pub(crate) fn advance(&mut self, seq: usize) {
+        debug_assert!(self.pos + seq <= self.capacity);
+        self.pos += seq;
+    }
+}
+
+/// A fixed set of [`KvCache`] slots with a free list.
+pub struct KvCachePool {
+    slots: Vec<KvCache>,
+    free: Vec<usize>,
+}
+
+impl KvCachePool {
+    pub fn new(cfg: &ModelConfig, slots: usize, capacity: usize) -> KvCachePool {
+        KvCachePool {
+            slots: (0..slots).map(|_| KvCache::new(cfg, capacity)).collect(),
+            // reversed so `acquire` hands out slot 0 first
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Claim a free slot, if any.
+    pub fn acquire(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+
+    /// Return a slot to the pool, resetting its sequence.
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.slots[slot].reset();
+        self.free.push(slot);
+    }
+
+    pub fn slot_mut(&mut self, slot: usize) -> &mut KvCache {
+        &mut self.slots[slot]
+    }
+
+    /// Preallocated footprint of the whole pool in bytes.
+    pub fn bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig { vocab: 32, d_model: 8, n_heads: 2, n_layers: 3, d_ff: 12, ..ModelConfig::mini() }
+    }
+
+    #[test]
+    fn cache_geometry_follows_config() {
+        let c = KvCache::new(&cfg(), 10);
+        assert_eq!(c.layers(), 3);
+        assert_eq!(c.width(), 8);
+        assert_eq!(c.capacity(), 10);
+        assert_eq!(c.pos(), 0);
+        assert_eq!(c.remaining(), 10);
+        assert_eq!(c.bytes(), 2 * 3 * 10 * 8 * 4);
+    }
+
+    #[test]
+    fn write_view_advance_round_trip() {
+        let mut c = KvCache::new(&cfg(), 4);
+        let k: Vec<f32> = (0..16).map(|i| i as f32).collect(); // 2 rows of 8
+        let v: Vec<f32> = (0..16).map(|i| -(i as f32)).collect();
+        c.write(1, 0, &k, &v);
+        c.advance(2);
+        assert_eq!(c.pos(), 2);
+        assert_eq!(c.remaining(), 2);
+        let (kc, vc) = c.view(1, 2);
+        assert_eq!(kc, &k[..]);
+        assert_eq!(vc, &v[..]);
+        // appending a third row lands after the first two
+        c.write(1, 2, &k[..8], &v[..8]);
+        c.advance(1);
+        let (kc, _) = c.view(1, 3);
+        assert_eq!(&kc[16..], &k[..8]);
+        // untouched layers stay zeroed
+        let (k0, v0) = c.view(0, 3);
+        assert!(k0.iter().all(|&x| x == 0.0) && v0.iter().all(|&x| x == 0.0));
+        c.reset();
+        assert_eq!(c.pos(), 0);
+    }
+
+    #[test]
+    fn pool_acquire_release_cycles() {
+        let mut p = KvCachePool::new(&cfg(), 2, 6);
+        assert_eq!(p.n_slots(), 2);
+        assert_eq!(p.n_free(), 2);
+        let a = p.acquire().unwrap();
+        assert_eq!(a, 0, "slot 0 hands out first");
+        let b = p.acquire().unwrap();
+        assert_eq!(b, 1);
+        assert!(p.acquire().is_none(), "pool exhausted");
+        p.slot_mut(a).advance(3);
+        assert_eq!(p.slot_mut(a).pos(), 3);
+        p.release(a);
+        assert_eq!(p.n_free(), 1);
+        let c = p.acquire().unwrap();
+        assert_eq!(c, a, "released slot is reusable");
+        assert_eq!(p.slot_mut(c).pos(), 0, "release resets the sequence");
+        assert_eq!(p.bytes(), 2 * (2 * 3 * 6 * 8 * 4));
+    }
+}

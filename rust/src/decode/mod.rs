@@ -1,0 +1,223 @@
+//! Autoregressive decode subsystem — KV-cached incremental generation with
+//! continuous batching over the factored serve path.
+//!
+//! The paper's serving claim (`r(d1+d2)` instead of `d1·d2` MACs per
+//! token) pays off at scale only when tokens are *generated*
+//! incrementally, not re-forwarded from scratch. This module is that
+//! generation engine, layered on [`crate::serve`]:
+//!
+//! - [`KvCache`] / [`KvCachePool`] — preallocated per-layer K/V blocks per
+//!   sequence slot, keyed off [`crate::model::ModelConfig`]; the substrate
+//!   of [`crate::serve::ServeModel::forward_step`], the single-token
+//!   incremental forward that applies the shared rope/causal-attention
+//!   helpers in both dense and factored [`crate::serve::ExecMode`].
+//! - [`DecodeScheduler`] — prefill/decode phase split with request-level
+//!   continuous batching: FIFO admission into free slots (including
+//!   *mid-run*, as finished sequences are evicted on EOS/max-tokens) and
+//!   round-robin decode rounds so no request starves.
+//! - [`Sampling`] — greedy / temperature / top-k next-token selection,
+//!   seeded through [`crate::util::Rng`] per request for reproducibility.
+//! - [`DecodeStats`] — time-to-first-token and inter-token latency
+//!   summaries, throughput, and executed-vs-recompute MAC accounting that
+//!   matches [`crate::model::macs::decode_report`] exactly.
+//!
+//! `repro generate` (incl. the fully-offline `--self-check`) and
+//! `repro bench-decode` drive this module; [`run_recompute`] is the
+//! cache-less baseline those commands compare against.
+
+pub mod kv;
+pub mod sampler;
+pub mod scheduler;
+pub mod stats;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::ModelConfig;
+use crate::serve::{synth_requests, ServeModel};
+use crate::util::LatencySummary;
+
+pub use kv::{KvCache, KvCachePool};
+pub use sampler::Sampling;
+pub use scheduler::{DecodeConfig, DecodeScheduler, FinishReason, GenRequest, GenResult};
+pub use stats::DecodeStats;
+
+/// Deterministic synthetic generation workload: `n` requests of
+/// `prompt_len` random in-vocab tokens (same token streams as
+/// [`crate::serve::synth_requests`] at the same seed).
+pub fn synth_gen_requests(
+    cfg: &ModelConfig,
+    n: usize,
+    prompt_len: usize,
+    seed: u64,
+) -> Vec<GenRequest> {
+    synth_requests(cfg, n, prompt_len, seed)
+        .into_iter()
+        .map(|r| GenRequest { id: r.id, prompt: r.tokens, max_new: None })
+        .collect()
+}
+
+/// The cache-less baseline: decode every request sequentially by
+/// re-forwarding the growing prefix from scratch for each token. Uses the
+/// same per-request RNG streams and stopping rules as
+/// [`DecodeScheduler::run`], so at equal seeds the token streams are
+/// directly comparable (identical under greedy sampling). Returns results
+/// in request id order plus aggregate stats — the "dense-recompute" row of
+/// `repro bench-decode`.
+pub fn run_recompute(
+    model: &ServeModel,
+    requests: &[GenRequest],
+    config: &DecodeConfig,
+) -> Result<(Vec<GenResult>, DecodeStats)> {
+    let vocab = model.config().vocab;
+    let t0 = Instant::now();
+    let mut results: Vec<GenResult> = Vec::with_capacity(requests.len());
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut itls: Vec<f64> = Vec::new();
+    let prompt_tokens: usize = requests.iter().map(|r| r.prompt.len()).sum();
+
+    for (order, req) in requests.iter().enumerate() {
+        anyhow::ensure!(!req.prompt.is_empty(), "request {}: empty prompt", req.id);
+        let max_new = req.max_new.unwrap_or(config.max_new).max(1);
+        let mut rng = scheduler::request_rng(config.seed, req.id);
+        let mut seq = req.prompt.clone();
+        let mut tokens: Vec<i32> = Vec::with_capacity(max_new);
+        let mut macs: u128 = 0;
+        let mut finish = FinishReason::MaxTokens;
+        let (mut ttft_s, mut last_s) = (0.0f64, 0.0f64);
+        loop {
+            let (logits, m) = model.forward_logits(&seq)?;
+            macs += m;
+            let next = config.sampling.sample(&logits[(seq.len() - 1) * vocab..], &mut rng);
+            let now = t0.elapsed().as_secs_f64();
+            if tokens.is_empty() {
+                ttft_s = now;
+                ttfts.push(now);
+            } else {
+                itls.push(now - last_s);
+            }
+            last_s = now;
+            tokens.push(next);
+            if Some(next) == config.eos {
+                finish = FinishReason::Eos;
+                break;
+            }
+            if tokens.len() >= max_new {
+                break;
+            }
+            seq.push(next);
+        }
+        results.push(GenResult {
+            id: req.id,
+            admitted: order,
+            prompt_len: req.prompt.len(),
+            tokens,
+            finish,
+            ttft_s,
+            latency_s: last_s,
+            macs,
+            // the recompute path *is* its own baseline
+            recompute_macs: macs,
+        });
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    results.sort_by_key(|r| r.id);
+    let generated: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let total_macs: u128 = results.iter().map(|r| r.macs).sum();
+    let stats = DecodeStats {
+        requests: results.len(),
+        prompt_tokens,
+        generated_tokens: generated,
+        wall_s,
+        macs: total_macs,
+        recompute_macs: total_macs,
+        ttft: LatencySummary::from_unsorted(ttfts),
+        inter_token: LatencySummary::from_unsorted(itls),
+        peak_active: usize::from(!results.is_empty()),
+        mid_run_admissions: 0,
+        decode_rounds: generated.saturating_sub(results.len()),
+    };
+    Ok((results, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::macs::{self, CompressionAccounting};
+    use crate::serve::{demo_artifact, demo_config, ExecMode};
+
+    #[test]
+    fn synth_gen_requests_are_deterministic_and_in_vocab() {
+        let cfg = demo_config();
+        let a = synth_gen_requests(&cfg, 4, 9, 3);
+        let b = synth_gen_requests(&cfg, 4, 9, 3);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.prompt.len(), 9);
+            assert!(x.max_new.is_none());
+            assert!(x.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn kv_decode_matches_recompute_streams_and_analytic_macs() {
+        // the subsystem's central invariant, in both execution modes:
+        // identical greedy token streams, and executed MACs equal to the
+        // analytic cached-decode accounting
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 67).unwrap();
+        let reqs = synth_gen_requests(&cfg, 4, 7, 13);
+        let config = DecodeConfig {
+            slots: 2,
+            capacity: 32,
+            max_new: 8,
+            sampling: Sampling::Greedy,
+            seed: 13,
+            eos: None,
+        };
+        for mode in [ExecMode::Dense, ExecMode::Factored] {
+            let model = ServeModel::from_artifact(&cm, mode).unwrap();
+            let acc = match mode {
+                ExecMode::Dense => CompressionAccounting::dense(),
+                ExecMode::Factored => cm.accounting.clone(),
+            };
+            let (kv, kv_stats) = DecodeScheduler::new(&model, config).run(reqs.clone()).unwrap();
+            let (rc, rc_stats) = run_recompute(&model, &reqs, &config).unwrap();
+            assert_eq!(kv.len(), rc.len());
+            for (a, b) in kv.iter().zip(&rc) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.tokens, b.tokens, "{}: KV stream diverged", mode.name());
+                assert_eq!(a.finish, b.finish);
+                let rep = macs::decode_report(&cfg, &acc, a.prompt_len, a.tokens.len());
+                assert_eq!(a.macs, rep.cached_macs(), "{}: executed != analytic", mode.name());
+                assert_eq!(a.recompute_macs, rep.recompute_macs);
+                assert_eq!(b.macs, rep.recompute_macs, "recompute executed != analytic");
+            }
+            assert_eq!(kv_stats.recompute_macs, rc_stats.macs);
+            assert!(kv_stats.macs < rc_stats.macs, "{}: cache must save MACs", mode.name());
+        }
+    }
+
+    #[test]
+    fn factored_kv_beats_dense_recompute_on_macs() {
+        // the acceptance bar of `repro bench-decode`
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 71).unwrap();
+        let reqs = synth_gen_requests(&cfg, 3, 6, 5);
+        let config = DecodeConfig { slots: 2, capacity: 24, max_new: 6, ..Default::default() };
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
+        let (_, kv) = DecodeScheduler::new(&fact, config).run(reqs.clone()).unwrap();
+        let (_, rc) = run_recompute(&dense, &reqs, &config).unwrap();
+        assert!(
+            kv.macs_per_generated_token() < rc.macs_per_generated_token(),
+            "factored-KV {} vs dense-recompute {}",
+            kv.macs_per_generated_token(),
+            rc.macs_per_generated_token()
+        );
+    }
+}

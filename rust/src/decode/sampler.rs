@@ -1,0 +1,183 @@
+//! Seeded next-token sampling: greedy, temperature, top-k.
+//!
+//! Every draw flows through [`crate::util::Rng`], so generation is
+//! reproducible run-to-run given the same seed — the scheduler derives one
+//! independent stream per request, which also makes token streams
+//! invariant to slot assignment and admission timing.
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+/// Next-token selection policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Argmax of the logits (ties break toward the highest token id, like
+    /// the reference model's sampler).
+    Greedy,
+    /// Softmax at the given temperature over the full vocabulary.
+    Temperature(f32),
+    /// Softmax at `temperature` restricted to the `k` highest logits
+    /// (`temperature <= 0` degenerates to greedy).
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampling {
+    /// Build a policy from the CLI's `--temp` / `--top-k` flags:
+    /// `top_k > 0` restricts to the top-k set; `temperature <= 0` is
+    /// greedy.
+    pub fn from_flags(temperature: f32, top_k: usize) -> Sampling {
+        if top_k > 0 {
+            Sampling::TopK { k: top_k, temperature }
+        } else if temperature > 0.0 {
+            Sampling::Temperature(temperature)
+        } else {
+            Sampling::Greedy
+        }
+    }
+
+    pub fn parse(temperature: f32, top_k: usize) -> Result<Sampling> {
+        if temperature < 0.0 {
+            bail!("--temp must be >= 0 (got {temperature})");
+        }
+        Ok(Sampling::from_flags(temperature, top_k))
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Sampling::Greedy => "greedy".to_string(),
+            Sampling::Temperature(t) => format!("temp {t}"),
+            Sampling::TopK { k, temperature } => format!("top-{k} @ temp {temperature}"),
+        }
+    }
+
+    /// Draw the next token id from one row of logits.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        debug_assert!(!logits.is_empty());
+        match *self {
+            Sampling::Greedy => argmax(logits),
+            Sampling::Temperature(t) => {
+                if t <= 0.0 {
+                    argmax(logits)
+                } else {
+                    let all: Vec<usize> = (0..logits.len()).collect();
+                    draw_softmax(logits, &all, t, rng)
+                }
+            }
+            Sampling::TopK { k, temperature } => {
+                if k == 0 || k >= logits.len() {
+                    // degenerate top-k: plain temperature sampling
+                    return Sampling::from_flags(temperature, 0).sample(logits, rng);
+                }
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                // logit descending, ties toward the highest id (same
+                // tie-break as greedy argmax)
+                idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(b.cmp(&a)));
+                idx.truncate(k);
+                if temperature <= 0.0 {
+                    idx[0] as i32
+                } else {
+                    draw_softmax(logits, &idx, temperature, rng)
+                }
+            }
+        }
+    }
+}
+
+/// Argmax over logits; of equal maxima the highest index wins (matches the
+/// reference model's greedy tie-break).
+fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .expect("non-empty logits")
+}
+
+/// Sample from softmax(logits[subset] / temperature), f64 accumulation.
+fn draw_softmax(logits: &[f32], subset: &[usize], temperature: f32, rng: &mut Rng) -> i32 {
+    let max = subset.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let probs: Vec<f64> =
+        subset.iter().map(|&i| (((logits[i] - max) / temperature) as f64).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    let mut r = rng.f64() * z;
+    for (p, &i) in probs.iter().zip(subset) {
+        r -= p;
+        if r <= 0.0 {
+            return i as i32;
+        }
+    }
+    subset[subset.len() - 1] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing_picks_the_right_policy() {
+        assert_eq!(Sampling::from_flags(0.0, 0), Sampling::Greedy);
+        assert_eq!(Sampling::from_flags(0.7, 0), Sampling::Temperature(0.7));
+        assert_eq!(Sampling::from_flags(0.7, 5), Sampling::TopK { k: 5, temperature: 0.7 });
+        assert!(Sampling::parse(-0.1, 0).is_err());
+        assert_eq!(Sampling::parse(0.0, 3).unwrap(), Sampling::TopK { k: 3, temperature: 0.0 });
+        assert!(Sampling::Greedy.label().contains("greedy"));
+        assert!(Sampling::TopK { k: 4, temperature: 0.5 }.label().contains("top-4"));
+    }
+
+    #[test]
+    fn greedy_is_deterministic_and_breaks_ties_high() {
+        let mut rng = Rng::new(0);
+        let logits = [0.0f32, 3.0, 3.0, -1.0];
+        for _ in 0..10 {
+            assert_eq!(Sampling::Greedy.sample(&logits, &mut rng), 2);
+        }
+        assert_eq!(Sampling::Temperature(0.0).sample(&logits, &mut rng), 2);
+        assert_eq!(
+            Sampling::TopK { k: 2, temperature: 0.0 }.sample(&logits, &mut rng),
+            2,
+            "zero-temperature top-k is greedy, same high-id tie-break"
+        );
+    }
+
+    #[test]
+    fn temperature_respects_support() {
+        let mut logits = vec![-1e9f32; 10];
+        logits[3] = 0.0;
+        logits[7] = 0.0;
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..200 {
+            let s = Sampling::Temperature(1.0).sample(&logits, &mut rng) as usize;
+            assert!(s == 3 || s == 7, "impossible token {s}");
+            seen[s] = true;
+        }
+        assert!(seen[3] && seen[7], "both supported tokens should appear");
+    }
+
+    #[test]
+    fn top_k_only_emits_the_top_set() {
+        let logits: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect(); // 11 is best
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let s = Sampling::TopK { k: 3, temperature: 1.5 }.sample(&logits, &mut rng);
+            assert!((9..=11).contains(&s), "token {s} outside the top-3");
+        }
+        // k >= vocab degenerates to plain temperature sampling
+        let s = Sampling::TopK { k: 100, temperature: 0.0 }.sample(&logits, &mut rng);
+        assert_eq!(s, 11);
+    }
+
+    #[test]
+    fn seeded_draws_are_reproducible() {
+        let logits: Vec<f32> = (0..20).map(|i| ((i * 7) % 13) as f32 * 0.3).collect();
+        let pol = Sampling::TopK { k: 5, temperature: 0.9 };
+        let run = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| pol.sample(&logits, &mut rng)).collect()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43), "different seeds should diverge somewhere");
+    }
+}

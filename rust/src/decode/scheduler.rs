@@ -1,0 +1,424 @@
+//! Continuous-batching decode scheduler: prefill/decode phase split,
+//! mid-run admission, EOS/max-token eviction, round-robin fairness.
+//!
+//! The scheduler owns a [`KvCachePool`] of `slots` preallocated caches.
+//! Requests wait in a FIFO; whenever a slot is free the head of the queue
+//! is admitted — its prompt is prefilled through the cache in one chunk
+//! and its first token sampled (time-to-first-token). Active sequences
+//! then advance in *decode rounds*: every round steps each active
+//! sequence by exactly one token, in admission order, so no request can
+//! starve while another streams ahead. Sequences finishing (EOS or their
+//! token budget) are evicted at the end of the round, their slots
+//! released, and the queue drains into the freed slots *mid-run* — the
+//! continuous-batching behavior, observable as
+//! [`DecodeStats::mid_run_admissions`].
+//!
+//! Determinism: each request samples from its own [`Rng`] stream derived
+//! from `seed ^ id`, so token streams are identical run-to-run and
+//! independent of slot assignment, admission timing, and the slot count.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::serve::ServeModel;
+use crate::util::{LatencySummary, Rng};
+
+use super::kv::KvCachePool;
+use super::sampler::Sampling;
+use super::stats::DecodeStats;
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: usize,
+    /// Prompt token ids (non-empty, in-vocab).
+    pub prompt: Vec<i32>,
+    /// Per-request generation cap; `None` uses [`DecodeConfig::max_new`].
+    pub max_new: Option<usize>,
+}
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The configured end-of-sequence token was sampled (it is included as
+    /// the last generated token).
+    Eos,
+    /// The request's token budget was reached.
+    MaxTokens,
+}
+
+impl FinishReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max-tokens",
+        }
+    }
+}
+
+/// One finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: usize,
+    /// Admission sequence number (0-based): the order the scheduler
+    /// granted slots, which for the FIFO queue equals submission order.
+    pub admitted: usize,
+    pub prompt_len: usize,
+    /// Generated tokens (terminating EOS included when present).
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Run start → first token (queue wait + prefill).
+    pub ttft_s: f64,
+    /// Run start → last token.
+    pub latency_s: f64,
+    /// MACs executed for this request (KV-cached regime).
+    pub macs: u128,
+    /// Analytic MACs a full-recompute decode of the same stream would
+    /// execute (sum of from-scratch forwards over the growing prefix).
+    pub recompute_macs: u128,
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeConfig {
+    /// Concurrent sequences (KV cache slots).
+    pub slots: usize,
+    /// KV capacity per slot, in tokens. Every request must satisfy
+    /// `prompt + max_new <= capacity` to be admissible.
+    pub capacity: usize,
+    /// Default generation cap per request.
+    pub max_new: usize,
+    pub sampling: Sampling,
+    /// Base seed; each request derives an independent stream from it.
+    pub seed: u64,
+    /// Token that terminates a sequence (`None` disables EOS eviction).
+    pub eos: Option<i32>,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig {
+            slots: 4,
+            capacity: 192,
+            max_new: 32,
+            sampling: Sampling::Greedy,
+            seed: 0,
+            eos: Some(crate::data::EOS),
+        }
+    }
+}
+
+/// The per-request RNG stream: independent of scheduling, stable across
+/// slot counts — shared with the recompute baseline so both paths draw
+/// identical samples.
+pub(crate) fn request_rng(seed: u64, id: usize) -> Rng {
+    Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD0DE))
+}
+
+/// A sequence occupying a slot.
+struct Active {
+    id: usize,
+    admitted: usize,
+    slot: usize,
+    prompt_len: usize,
+    max_new: usize,
+    tokens: Vec<i32>,
+    rng: Rng,
+    macs: u128,
+    recompute_macs: u128,
+    ttft_s: f64,
+    last_s: f64,
+    done: Option<FinishReason>,
+}
+
+/// KV-cached autoregressive generation over one loaded [`ServeModel`].
+pub struct DecodeScheduler<'m> {
+    model: &'m ServeModel,
+    config: DecodeConfig,
+}
+
+impl<'m> DecodeScheduler<'m> {
+    pub fn new(model: &'m ServeModel, config: DecodeConfig) -> DecodeScheduler<'m> {
+        DecodeScheduler { model, config }
+    }
+
+    pub fn model(&self) -> &ServeModel {
+        self.model
+    }
+
+    pub fn config(&self) -> &DecodeConfig {
+        &self.config
+    }
+
+    /// Drive every request to completion. Results are returned in request
+    /// id order with the run's aggregate stats.
+    pub fn run(&self, requests: Vec<GenRequest>) -> Result<(Vec<GenResult>, DecodeStats)> {
+        let cfg = self.model.config();
+        let vocab = cfg.vocab;
+        let slots = self.config.slots.max(1);
+        let n = requests.len();
+        let prompt_tokens: usize = requests.iter().map(|r| r.prompt.len()).sum();
+
+        // validate everything up-front so a bad request fails before any
+        // compute is spent
+        for r in &requests {
+            ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
+            let max_new = r.max_new.unwrap_or(self.config.max_new).max(1);
+            ensure!(
+                r.prompt.len() + max_new <= self.config.capacity,
+                "request {}: prompt {} + max_new {max_new} exceeds KV capacity {}",
+                r.id,
+                r.prompt.len(),
+                self.config.capacity
+            );
+        }
+
+        let t0 = Instant::now();
+        let mut pool = KvCachePool::new(cfg, slots, self.config.capacity);
+        let mut pending: VecDeque<GenRequest> = requests.into();
+        let mut active: Vec<Active> = Vec::new();
+        let mut results: Vec<GenResult> = Vec::with_capacity(n);
+        let mut ttfts: Vec<f64> = Vec::with_capacity(n);
+        let mut itls: Vec<f64> = Vec::new();
+        let (mut admitted_count, mut mid_run) = (0usize, 0usize);
+        let (mut peak_active, mut rounds) = (0usize, 0usize);
+
+        loop {
+            // ---- admission: drain the queue into free slots ----
+            while active.len() < slots {
+                let Some(req) = pending.pop_front() else { break };
+                let max_new = req.max_new.unwrap_or(self.config.max_new).max(1);
+                let slot = pool.acquire().expect("free slot under the active-count bound");
+                let admitted = admitted_count;
+                admitted_count += 1;
+                // continuous batching: an admission after any eviction means
+                // this request entered a slot another sequence freed mid-run
+                if !results.is_empty() {
+                    mid_run += 1;
+                }
+                let mut rng = request_rng(self.config.seed, req.id);
+                // prefill phase: the whole prompt in one cached chunk
+                let (logits, macs) = self.model.forward_cached(&req.prompt, pool.slot_mut(slot))?;
+                let last = &logits[(req.prompt.len() - 1) * vocab..];
+                let first = self.config.sampling.sample(last, &mut rng);
+                let now = t0.elapsed().as_secs_f64();
+                ttfts.push(now);
+                let mut a = Active {
+                    id: req.id,
+                    admitted,
+                    slot,
+                    prompt_len: req.prompt.len(),
+                    max_new,
+                    tokens: vec![first],
+                    rng,
+                    macs,
+                    recompute_macs: self.model.macs_for(req.prompt.len()),
+                    ttft_s: now,
+                    last_s: now,
+                    done: None,
+                };
+                if Some(first) == self.config.eos {
+                    a.done = Some(FinishReason::Eos);
+                } else if a.tokens.len() >= max_new {
+                    a.done = Some(FinishReason::MaxTokens);
+                }
+                active.push(a);
+                peak_active = peak_active.max(active.len());
+            }
+            evict(&mut active, &mut pool, &mut results);
+            if active.is_empty() {
+                if pending.is_empty() {
+                    break;
+                }
+                continue; // every admission finished instantly; admit more
+            }
+
+            // ---- one decode round: each active sequence advances a token ----
+            rounds += 1;
+            for a in active.iter_mut() {
+                let last_tok = *a.tokens.last().expect("active sequences hold >= 1 token");
+                let (logits, m) = self.model.forward_step(last_tok, pool.slot_mut(a.slot))?;
+                a.macs += m;
+                a.recompute_macs += self.model.macs_for(a.prompt_len + a.tokens.len());
+                let next = self.config.sampling.sample(&logits, &mut a.rng);
+                let now = t0.elapsed().as_secs_f64();
+                itls.push(now - a.last_s);
+                a.last_s = now;
+                a.tokens.push(next);
+                if Some(next) == self.config.eos {
+                    a.done = Some(FinishReason::Eos);
+                } else if a.tokens.len() >= a.max_new {
+                    a.done = Some(FinishReason::MaxTokens);
+                }
+            }
+            evict(&mut active, &mut pool, &mut results);
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        results.sort_by_key(|r| r.id);
+        let stats = DecodeStats {
+            requests: results.len(),
+            prompt_tokens,
+            generated_tokens: results.iter().map(|r| r.tokens.len()).sum(),
+            wall_s,
+            macs: results.iter().map(|r| r.macs).sum(),
+            recompute_macs: results.iter().map(|r| r.recompute_macs).sum(),
+            ttft: LatencySummary::from_unsorted(ttfts),
+            inter_token: LatencySummary::from_unsorted(itls),
+            peak_active,
+            mid_run_admissions: mid_run,
+            decode_rounds: rounds,
+        };
+        Ok((results, stats))
+    }
+}
+
+/// Move finished sequences out of the active set, releasing their slots.
+fn evict(active: &mut Vec<Active>, pool: &mut KvCachePool, results: &mut Vec<GenResult>) {
+    let mut i = 0;
+    while i < active.len() {
+        if let Some(finish) = active[i].done {
+            let a = active.remove(i);
+            pool.release(a.slot);
+            results.push(GenResult {
+                id: a.id,
+                admitted: a.admitted,
+                prompt_len: a.prompt_len,
+                tokens: a.tokens,
+                finish,
+                ttft_s: a.ttft_s,
+                latency_s: a.last_s,
+                macs: a.macs,
+                recompute_macs: a.recompute_macs,
+            });
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+
+    fn model(mode: ExecMode, seed: u64) -> ServeModel {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, seed).unwrap();
+        ServeModel::from_artifact(&cm, mode).unwrap()
+    }
+
+    fn config() -> DecodeConfig {
+        DecodeConfig {
+            slots: 2,
+            capacity: 32,
+            max_new: 6,
+            sampling: Sampling::Greedy,
+            seed: 7,
+            eos: None,
+        }
+    }
+
+    fn requests(n: usize, prompt_len: usize) -> Vec<GenRequest> {
+        super::super::synth_gen_requests(&demo_config(), n, prompt_len, 11)
+    }
+
+    #[test]
+    fn completes_every_request_in_fifo_admission_order() {
+        let m = model(ExecMode::Factored, 41);
+        let sched = DecodeScheduler::new(&m, config());
+        let (results, stats) = sched.run(requests(5, 8)).unwrap();
+        assert_eq!(results.len(), 5);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i, "results sorted by id");
+            assert_eq!(r.admitted, i, "FIFO admission: no request overtakes an earlier one");
+            assert_eq!(r.prompt_len, 8);
+            assert_eq!(r.tokens.len(), 6, "greedy runs to the token budget");
+            assert_eq!(r.finish, FinishReason::MaxTokens);
+            assert!(r.tokens.iter().all(|&t| (t as usize) < demo_config().vocab));
+            assert!(r.ttft_s >= 0.0 && r.ttft_s <= r.latency_s);
+            assert!(r.macs > 0 && r.recompute_macs > r.macs);
+        }
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.prompt_tokens, 5 * 8);
+        assert_eq!(stats.generated_tokens, 5 * 6);
+        assert_eq!(stats.peak_active, 2, "2 slots cap concurrency");
+        assert!(stats.mid_run_admissions >= 3, "5 requests through 2 slots admit mid-run");
+        assert!(stats.mac_savings() > 1.0);
+        assert_eq!(stats.ttft.n, 5);
+        assert_eq!(stats.inter_token.n, 5 * 5, "max_new-1 steps per request");
+    }
+
+    #[test]
+    fn token_streams_are_slot_count_invariant() {
+        let m = model(ExecMode::Factored, 43);
+        let runs: Vec<Vec<Vec<i32>>> = [1usize, 2, 4]
+            .iter()
+            .map(|&slots| {
+                let sched = DecodeScheduler::new(&m, DecodeConfig { slots, ..config() });
+                let (results, _) = sched.run(requests(5, 6)).unwrap();
+                results.into_iter().map(|r| r.tokens).collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "1 vs 2 slots");
+        assert_eq!(runs[0], runs[2], "1 vs 4 slots");
+    }
+
+    #[test]
+    fn seeded_sampling_is_reproducible_and_seed_sensitive() {
+        let m = model(ExecMode::Dense, 47);
+        let run = |seed: u64| {
+            let cfg = DecodeConfig {
+                sampling: Sampling::TopK { k: 8, temperature: 0.9 },
+                seed,
+                ..config()
+            };
+            let (results, _) = DecodeScheduler::new(&m, cfg).run(requests(3, 6)).unwrap();
+            results.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5), "same seed, same streams");
+        assert_ne!(run(5), run(6), "different seed should move some stream");
+    }
+
+    #[test]
+    fn eos_evicts_early() {
+        let m = model(ExecMode::Factored, 53);
+        // discover what greedy generates, then declare its second token EOS
+        let sched = DecodeScheduler::new(&m, config());
+        let (base, _) = sched.run(requests(1, 5)).unwrap();
+        let eos_tok = base[0].tokens[1];
+        let cfg_eos = DecodeConfig { eos: Some(eos_tok), ..config() };
+        let (results, _) = DecodeScheduler::new(&m, cfg_eos).run(requests(1, 5)).unwrap();
+        assert_eq!(results[0].finish, FinishReason::Eos);
+        assert_eq!(results[0].tokens.len(), 2, "stops at the EOS token, inclusive");
+        assert_eq!(results[0].tokens[1], eos_tok);
+    }
+
+    #[test]
+    fn per_request_max_new_overrides_config() {
+        let m = model(ExecMode::Factored, 59);
+        let mut reqs = requests(3, 4);
+        reqs[0].max_new = Some(1);
+        reqs[2].max_new = Some(3);
+        let (results, _) = DecodeScheduler::new(&m, config()).run(reqs).unwrap();
+        assert_eq!(results[0].tokens.len(), 1, "max_new 1 finishes right after prefill");
+        assert_eq!(results[1].tokens.len(), 6);
+        assert_eq!(results[2].tokens.len(), 3);
+    }
+
+    #[test]
+    fn invalid_requests_fail_before_compute() {
+        let m = model(ExecMode::Factored, 61);
+        let sched = DecodeScheduler::new(&m, config());
+        let empty = vec![GenRequest { id: 0, prompt: Vec::new(), max_new: None }];
+        assert!(sched.run(empty).is_err(), "empty prompt");
+        let too_long = vec![GenRequest { id: 0, prompt: vec![1; 40], max_new: None }];
+        assert!(sched.run(too_long).is_err(), "prompt + max_new > capacity");
+        let (results, stats) = sched.run(Vec::new()).unwrap();
+        assert!(results.is_empty());
+        assert_eq!(stats.generated_tokens, 0);
+        assert_eq!(stats.ttft.n, 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Aggregate accounting for one decode run — the generation-side analog of
+//! [`crate::serve::ServeStats`].
+//!
+//! Beyond throughput, the decode regime has its own latency anatomy:
+//! time-to-first-token (prefill + queue wait) and inter-token latency
+//! (steady-state step time), both summarized with the small-sample-safe
+//! [`LatencySummary`]. The MAC side carries *two* totals — what the
+//! KV-cached path executed and what a cache-less server re-forwarding the
+//! growing prefix would have executed — so the cache's algorithmic saving
+//! is reported next to the paper's `r(d1+d2)` factorization saving.
+
+use crate::util::LatencySummary;
+
+/// Aggregate result of one [`crate::decode::DecodeScheduler::run`].
+#[derive(Debug, Clone)]
+pub struct DecodeStats {
+    /// Requests completed.
+    pub requests: usize,
+    /// Prompt tokens consumed across all requests (prefill).
+    pub prompt_tokens: usize,
+    /// Tokens generated across all requests.
+    pub generated_tokens: usize,
+    /// Wall clock of the whole run.
+    pub wall_s: f64,
+    /// MACs actually executed (KV-cached regime).
+    pub macs: u128,
+    /// Analytic MACs a full-recompute decode of the same streams would
+    /// have executed (the cache-less baseline).
+    pub recompute_macs: u128,
+    /// Time to first token per request, from run start (queue wait +
+    /// prefill).
+    pub ttft: LatencySummary,
+    /// Latency between consecutive generated tokens of a request.
+    pub inter_token: LatencySummary,
+    /// Peak concurrently-decoding sequences.
+    pub peak_active: usize,
+    /// Requests admitted after an earlier request finished — i.e. into a
+    /// slot another sequence freed, the continuous-batching behavior.
+    pub mid_run_admissions: usize,
+    /// Decode rounds executed (each advances every active sequence by one
+    /// token — the fairness unit).
+    pub decode_rounds: usize,
+}
+
+impl DecodeStats {
+    /// Generated tokens per wall-clock second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.generated_tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Executed MACs amortized per generated token.
+    pub fn macs_per_generated_token(&self) -> u128 {
+        if self.generated_tokens > 0 {
+            self.macs / self.generated_tokens as u128
+        } else {
+            0
+        }
+    }
+
+    /// Recompute-baseline MACs amortized per generated token.
+    pub fn recompute_macs_per_generated_token(&self) -> u128 {
+        if self.generated_tokens > 0 {
+            self.recompute_macs / self.generated_tokens as u128
+        } else {
+            0
+        }
+    }
+
+    /// How many times more MACs the cache-less baseline would execute.
+    /// The baseline bills in `macs::report`'s full-window attention
+    /// convention (see `macs::DecodeMacsReport::recompute_macs`), so the
+    /// attention share of this ratio is an upper bound; weight/head MACs
+    /// dominate and are billed identically on both sides.
+    pub fn mac_savings(&self) -> f64 {
+        if self.macs == 0 {
+            1.0
+        } else {
+            self.recompute_macs as f64 / self.macs as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(generated: usize, macs: u128, recompute: u128, wall: f64) -> DecodeStats {
+        DecodeStats {
+            requests: 1,
+            prompt_tokens: 4,
+            generated_tokens: generated,
+            wall_s: wall,
+            macs,
+            recompute_macs: recompute,
+            ttft: LatencySummary::default(),
+            inter_token: LatencySummary::default(),
+            peak_active: 1,
+            mid_run_admissions: 0,
+            decode_rounds: generated,
+        }
+    }
+
+    #[test]
+    fn derived_rates() {
+        let s = stats(10, 1_000, 4_000, 2.0);
+        assert_eq!(s.tokens_per_s(), 5.0);
+        assert_eq!(s.macs_per_generated_token(), 100);
+        assert_eq!(s.recompute_macs_per_generated_token(), 400);
+        assert_eq!(s.mac_savings(), 4.0);
+    }
+
+    #[test]
+    fn degenerate_runs_are_well_defined() {
+        let s = stats(0, 0, 0, 0.0);
+        assert_eq!(s.tokens_per_s(), 0.0);
+        assert_eq!(s.macs_per_generated_token(), 0);
+        assert_eq!(s.recompute_macs_per_generated_token(), 0);
+        assert_eq!(s.mac_savings(), 1.0);
+    }
+}

@@ -28,6 +28,11 @@
 //!   compressed layers as two skinny matmuls (`r(d1+d2)` MACs) with
 //!   per-layer dense/low-rank dispatch, a multi-request batching queue,
 //!   and latency/throughput/MAC accounting
+//! - [`decode`] — autoregressive generation over the serve path: per-slot
+//!   KV cache pool, single-token dense/factored `forward_step`, a
+//!   continuous-batching scheduler (mid-run admission, EOS/max-token
+//!   eviction, round-robin fairness), seeded greedy/temperature/top-k
+//!   sampling, and TTFT/inter-token-latency/MAC-savings stats
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
@@ -35,6 +40,7 @@
 pub mod compress;
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod eval;
 pub mod linalg;
 pub mod model;

@@ -11,7 +11,9 @@
 //! repro sweep    --ckpt ckpt.rtz [--methods a,b,c] [--budget B]
 //! repro eval     --ckpt ckpt.rtz [--ppl]
 //! repro serve    --ckpt artifact.rtz [--mode dense|factored] | --self-check
-//! repro bench-serve [--ckpt artifact.rtz] [--budget B]
+//! repro bench-serve [--ckpt artifact.rtz] [--budget B] [--json FILE]
+//! repro generate --ckpt artifact.rtz [--prompt TEXT | --requests N] | --self-check
+//! repro bench-decode [--ckpt artifact.rtz] [--budget B] [--json FILE]
 //! repro tables   --ckpt ckpt.rtz [--table 1|2|3|4|all]
 //! repro cost     --ckpt ckpt.rtz
 //! ```
@@ -28,11 +30,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use llm_rom::compress::{self, CompressedModel};
+use llm_rom::compress::{self, CompressedModel, Provenance};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::data::CalibSource;
+use llm_rom::decode::{self, DecodeConfig, DecodeScheduler, GenRequest, KvCache, Sampling};
 use llm_rom::model::macs::{self, CompressionAccounting};
 use llm_rom::model::{ModelConfig, ParamStore};
+use llm_rom::rom::ModuleSchedule;
 use llm_rom::runtime::{Manifest, Runtime};
 use llm_rom::serve::{self, ExecMode, ServeConfig, ServeEngine, ServeModel};
 
@@ -70,11 +74,17 @@ struct Cmd {
     flags: &'static [Flag],
 }
 
-const SEED: Flag = flag("seed", "N", "RNG seed for world/data generation");
+const SEED: Flag = flag("seed", "N", "RNG seed (synthetic workloads, sampling)");
 const SERVE_REQUESTS: Flag = flag("requests", "N", "synthetic requests to serve");
 const SERVE_SEQ: Flag = flag("seq", "N", "tokens per synthetic request");
 const SERVE_WORKERS: Flag = flag("workers", "N", "serving worker threads");
 const SERVE_BATCH: Flag = flag("batch", "N", "max requests per dispatch batch");
+const JSON_OUT: Flag = flag("json", "FILE", "also write the benchmark as machine-readable JSON");
+const MAX_NEW: Flag = flag("max-new", "N", "tokens to generate per request");
+const TEMP: Flag = flag("temp", "T", "sampling temperature (0 = greedy)");
+const TOP_K: Flag = flag("top-k", "K", "restrict sampling to the K best logits (0 = off)");
+const SLOTS: Flag = flag("slots", "N", "concurrent KV cache slots (continuous batching)");
+const PROMPT_LEN: Flag = flag("prompt-len", "N", "tokens per synthetic prompt");
 const CKPT: Flag = flag("ckpt", "FILE", "checkpoint to load (.rtz)");
 const BUDGET: Flag = flag("budget", "B", "global parameter budget in (0, 1]");
 const ROWS: Flag = flag("rows", "N", "calibration rows");
@@ -147,18 +157,32 @@ static COMMANDS: &[Cmd] = &[
     Cmd {
         name: "bench-serve",
         summary: "dense vs factored serving comparison on one artifact",
-        flags: &[CKPT, BUDGET, SERVE_REQUESTS, SERVE_SEQ, SERVE_WORKERS, SERVE_BATCH, SEED],
+        flags: &[CKPT, BUDGET, SERVE_REQUESTS, SERVE_SEQ, SERVE_WORKERS, SERVE_BATCH, SEED, JSON_OUT],
     },
     Cmd {
         name: "generate",
-        summary: "sample from a checkpoint (KV-cached rust decoding)",
+        summary: "KV-cached autoregressive generation (continuous batching)",
         flags: &[
             CKPT,
-            flag("prompt", "TEXT", "prompt text"),
-            flag("max-new", "N", "tokens to generate"),
-            flag("temp", "T", "sampling temperature (0 = greedy)"),
+            flag("mode", "dense|factored", "execution mode (default factored)"),
+            flag("prompt", "TEXT", "prompt text (omit for a synthetic workload)"),
+            SERVE_REQUESTS,
+            PROMPT_LEN,
+            MAX_NEW,
+            TEMP,
+            TOP_K,
+            SLOTS,
+            switch(
+                "self-check",
+                "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC accounting",
+            ),
             SEED,
         ],
+    },
+    Cmd {
+        name: "bench-decode",
+        summary: "recompute vs KV-cached decode comparison (dense + factored)",
+        flags: &[CKPT, BUDGET, SERVE_REQUESTS, PROMPT_LEN, MAX_NEW, SLOTS, SEED, JSON_OUT],
     },
     Cmd {
         name: "tables",
@@ -305,6 +329,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&artifacts, &args),
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
         "generate" => cmd_generate(&artifacts, &args),
+        "bench-decode" => cmd_bench_decode(&artifacts, &args),
         "tables" => cmd_tables(&artifacts, &args),
         "cost" => cmd_cost(&artifacts, &args),
         "spectrum" => cmd_spectrum(&artifacts, &args),
@@ -557,8 +582,8 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     );
     println!(
         "latency mean {:.2}ms  p95 {:.2}ms  ({} dispatch batches)",
-        stats.mean_latency_s * 1e3,
-        stats.p95_latency_s * 1e3,
+        stats.latency.mean * 1e3,
+        stats.latency.p95 * 1e3,
         stats.batches
     );
     if let Some(r) = results.first() {
@@ -680,43 +705,317 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
         "bench-serve {label}: {requests} requests x {seq} tokens, {workers} workers \
          (batch {batch})"
     );
-    let table = llm_rom::coordinator::serve_table(
+    let bench = llm_rom::coordinator::serve_bench(
         &cm,
         requests,
         seq,
         ServeConfig { workers, max_batch: batch },
         seed,
     )?;
-    println!("{table}");
+    println!("{}", bench.format());
+    write_bench_json(args, &bench.to_json())?;
     Ok(())
+}
+
+/// Write a benchmark's JSON payload when `--json FILE` was given.
+fn write_bench_json(args: &Args, payload: &llm_rom::util::json::Json) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        ensure_parent(path)?;
+        std::fs::write(path, format!("{payload}\n"))
+            .with_context(|| format!("write benchmark JSON {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Load a `.rtz` for the decode/serve paths: a compressed artifact when it
+/// carries `__compress_meta__`, otherwise a plain checkpoint wrapped as a
+/// dense identity artifact (so `repro generate` also works on `repro
+/// train` output).
+fn load_artifact_or_ckpt(cfg: &ModelConfig, path: &str) -> Result<CompressedModel> {
+    match CompressedModel::load(cfg, path) {
+        Ok(cm) => Ok(cm),
+        // only the "not a compressed artifact" failure falls back to the
+        // plain-checkpoint path — a *corrupt* artifact (bad sidecar, bad
+        // metadata) must surface its own diagnosis, not silently serve
+        // dense as an identity
+        Err(e) if e.to_string().contains(&format!("no `{}` entry", compress::META_KEY)) => {
+            let params = ParamStore::load(cfg, path)
+                .with_context(|| format!("load {path} as a plain checkpoint"))?;
+            Ok(CompressedModel::identity(
+                params,
+                Provenance {
+                    method: "dense".into(),
+                    global_budget: 1.0,
+                    schedule: ModuleSchedule { start_block: cfg.n_layers, module_budget: 1.0 },
+                    calib_label: "none".into(),
+                    calib_rows: 0,
+                    calib_seq: 0,
+                },
+            ))
+        }
+        Err(e) => Err(e),
+    }
 }
 
 fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     use llm_rom::data::{Tokenizer, BOS};
-    let rt = Runtime::new(artifacts)?;
-    let exp = Experiment::new(&rt, xcfg_from(args)?);
-    let params = load_ckpt(&exp, args)?;
-    let prompt = args.get("prompt").context("--prompt required")?;
-    let max_new: usize = args.parse_num("max-new", 120)?;
-    let temp: f32 = args.parse_num("temp", 0.0)?;
     let seed: u64 = args.parse_num("seed", 0)?;
+    if args.get("self-check").is_some() {
+        return decode_self_check(seed);
+    }
+    let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
+    let cfg = serve_cfg(artifacts);
+    let cm = load_artifact_or_ckpt(&cfg, path)?;
+    let mode = match args.get("mode") {
+        None => ExecMode::Factored,
+        Some(s) => ExecMode::parse(s)?,
+    };
+    let model = ServeModel::from_artifact(&cm, mode)?;
+    let max_new: usize = args.parse_num("max-new", 48)?;
+    let temp: f32 = args.parse_num("temp", 0.0)?;
+    let top_k: usize = args.parse_num("top-k", 0)?;
+    let slots: usize = args.parse_num("slots", 4)?;
+    let sampling = Sampling::parse(temp, top_k)?;
 
-    let tk = Tokenizer::new();
-    let mut ids = vec![BOS];
-    ids.extend(tk.encode(prompt));
-    // KV-cached incremental decoding on the pure-rust reference model
-    let model = llm_rom::model::ReferenceModel::new(&params);
-    let t0 = std::time::Instant::now();
-    let out = model.generate(&ids, max_new, temp, seed)?;
-    let dt = t0.elapsed().as_secs_f64();
-    println!("{}{}", prompt, tk.decode(&out));
-    eprintln!(
-        "\n[{} prompt + {} generated tokens in {:.2}s — {:.1} tok/s, KV-cached rust path]",
-        ids.len(),
-        out.len(),
-        dt,
-        out.len() as f64 / dt
+    match args.get("prompt") {
+        Some(prompt) => {
+            // single-request decode of a text prompt
+            let tk = Tokenizer::new();
+            let mut ids = vec![BOS];
+            ids.extend(tk.encode(prompt));
+            let config = DecodeConfig {
+                slots: 1,
+                capacity: ids.len() + max_new,
+                max_new,
+                sampling,
+                seed,
+                ..DecodeConfig::default()
+            };
+            let scheduler = DecodeScheduler::new(&model, config);
+            let (results, stats) =
+                scheduler.run(vec![GenRequest { id: 0, prompt: ids, max_new: None }])?;
+            let r = &results[0];
+            println!("{}{}", prompt, tk.decode(&r.tokens));
+            eprintln!(
+                "\n[{} [{}], {} prompt + {} generated tokens, {} — ttft {:.1}ms, \
+                 {:.1} tok/s, {:.3} MMACs/token, {:.2}x fewer MACs than recompute]",
+                mode.name(),
+                sampling.label(),
+                r.prompt_len,
+                r.tokens.len(),
+                r.finish.name(),
+                r.ttft_s * 1e3,
+                stats.tokens_per_s(),
+                stats.macs_per_generated_token() as f64 / 1e6,
+                stats.mac_savings(),
+            );
+        }
+        None => {
+            // synthetic multi-request workload: the continuous-batching demo
+            let n: usize = args.parse_num("requests", 6)?;
+            let prompt_len: usize = args.parse_num("prompt-len", 16)?;
+            let config = DecodeConfig {
+                slots,
+                capacity: prompt_len + max_new,
+                max_new,
+                sampling,
+                seed,
+                ..DecodeConfig::default()
+            };
+            println!(
+                "generate [{}] [{}]: {n} synthetic requests x {prompt_len} prompt tokens, \
+                 max-new {max_new}, {slots} slots",
+                mode.name(),
+                sampling.label(),
+            );
+            let reqs = decode::synth_gen_requests(&cfg, n, prompt_len, seed);
+            let scheduler = DecodeScheduler::new(&model, config);
+            let (results, stats) = scheduler.run(reqs)?;
+            for r in &results {
+                println!(
+                    "  request {:>2}: admitted #{:<2} {} tokens ({}), ttft {:>7.2}ms",
+                    r.id,
+                    r.admitted,
+                    r.tokens.len(),
+                    r.finish.name(),
+                    r.ttft_s * 1e3,
+                );
+            }
+            println!(
+                "generated {} tokens in {:.3}s — {:.0} tok/s, {:.3} MMACs/token \
+                 ({:.2}x fewer than recompute)",
+                stats.generated_tokens,
+                stats.wall_s,
+                stats.tokens_per_s(),
+                stats.macs_per_generated_token() as f64 / 1e6,
+                stats.mac_savings(),
+            );
+            println!(
+                "ttft p50 {:.2}ms p95 {:.2}ms — inter-token p50 {:.2}ms p95 {:.2}ms — \
+                 peak {} active, {} mid-run admissions over {} rounds",
+                stats.ttft.p50 * 1e3,
+                stats.ttft.p95 * 1e3,
+                stats.inter_token.p50 * 1e3,
+                stats.inter_token.p95 * 1e3,
+                stats.peak_active,
+                stats.mid_run_admissions,
+                stats.decode_rounds,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `repro generate --self-check`: fully-offline verification of the decode
+/// subsystem on a synthetic factored artifact —
+///
+/// 1. KV-cached incremental logits (chunked prefill + single-token steps)
+///    match the full-recompute forward in both exec modes, and the
+///    factored-KV logits match the *dense* recompute logits, all ≤1e-4;
+/// 2. greedy KV-cached token streams equal full-recompute streams under
+///    continuous batching (more requests than slots, mid-run admission);
+/// 3. executed MACs equal `macs::decode_report`'s analytic accounting per
+///    request, and factored-KV executes strictly fewer MACs than
+///    dense-recompute.
+///
+/// Run by `scripts/verify.sh` next to `repro serve --self-check`.
+fn decode_self_check(seed: u64) -> Result<()> {
+    let cfg = serve::demo_config();
+    let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0xDECD)?;
+    anyhow::ensure!(!cm.factors.is_empty(), "demo artifact carries no factors");
+    let dense = ServeModel::from_artifact(&cm, ExecMode::Dense)?;
+    let fact = ServeModel::from_artifact(&cm, ExecMode::Factored)?;
+
+    // 1. incremental ≡ recompute logits
+    let prompt = serve::synth_requests(&cfg, 1, 24, seed)[0].tokens.clone();
+    let (full_dense, _) = dense.forward_logits(&prompt)?;
+    let incremental = |model: &ServeModel| -> Result<Vec<f32>> {
+        let mut cache = KvCache::new(&cfg, prompt.len());
+        let mut inc = Vec::new();
+        let split = prompt.len() / 2;
+        let (l, _) = model.forward_cached(&prompt[..split], &mut cache)?;
+        inc.extend(l);
+        for &t in &prompt[split..] {
+            let (l, _) = model.forward_step(t, &mut cache)?;
+            inc.extend(l);
+        }
+        Ok(inc)
+    };
+    let max_diff = |a: &[f32], b: &[f32]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0f64, f64::max)
+    };
+    for (label, model, reference) in [
+        ("dense-KV vs dense-recompute", &dense, &full_dense),
+        ("factored-KV vs dense-recompute", &fact, &full_dense),
+    ] {
+        let inc = incremental(model)?;
+        let d = max_diff(&inc, reference);
+        anyhow::ensure!(d <= 1e-4, "{label}: max |Δlogits| = {d:.3e} > 1e-4");
+        println!("[1/3] {label}: max |Δlogits| = {d:.2e} (bound 1e-4)");
+    }
+
+    // 2. + 3. greedy streams and MAC accounting under continuous batching
+    let reqs = decode::synth_gen_requests(&cfg, 6, 12, seed);
+    let config = DecodeConfig {
+        slots: 2,
+        capacity: 12 + 16,
+        max_new: 16,
+        sampling: Sampling::Greedy,
+        seed,
+        eos: None,
+    };
+    let mut totals: Vec<(u128, u128)> = Vec::new(); // (cached, recompute) per mode
+    for (label, model, acc) in [
+        ("dense", &dense, CompressionAccounting::dense()),
+        ("factored", &fact, cm.accounting.clone()),
+    ] {
+        let scheduler = DecodeScheduler::new(model, config);
+        let (kv_results, kv_stats) = scheduler.run(reqs.clone())?;
+        let (rc_results, _) = decode::run_recompute(model, &reqs, &config)?;
+        anyhow::ensure!(kv_results.len() == rc_results.len(), "{label}: result count");
+        for (a, b) in kv_results.iter().zip(&rc_results) {
+            anyhow::ensure!(a.id == b.id, "{label}: result order");
+            anyhow::ensure!(
+                a.tokens == b.tokens,
+                "{label}: request {} KV stream diverged from recompute",
+                a.id
+            );
+            let rep = macs::decode_report(&cfg, &acc, a.prompt_len, a.tokens.len());
+            anyhow::ensure!(
+                a.macs == rep.cached_macs(),
+                "{label}: request {} executed {} MACs, analytic says {}",
+                a.id,
+                a.macs,
+                rep.cached_macs()
+            );
+            anyhow::ensure!(
+                a.recompute_macs == rep.recompute_macs && b.macs == rep.recompute_macs,
+                "{label}: recompute accounting mismatch on request {}",
+                a.id
+            );
+        }
+        anyhow::ensure!(
+            kv_stats.mid_run_admissions > 0,
+            "{label}: 6 requests through 2 slots must admit mid-run"
+        );
+        println!(
+            "[2/3] {label}: {} greedy streams identical KV vs recompute \
+             ({} mid-run admissions, peak {} active)",
+            kv_results.len(),
+            kv_stats.mid_run_admissions,
+            kv_stats.peak_active
+        );
+        totals.push((kv_stats.macs, kv_stats.recompute_macs));
+    }
+    let (dense_recompute, fact_cached) = (totals[0].1, totals[1].0);
+    anyhow::ensure!(
+        fact_cached < totals[0].0,
+        "factored-KV must execute fewer MACs than dense-KV"
     );
+    anyhow::ensure!(
+        fact_cached < dense_recompute,
+        "factored-KV must execute fewer MACs than dense-recompute"
+    );
+    println!(
+        "[3/3] MACs: factored-KV {fact_cached} vs dense-recompute {dense_recompute} \
+         ({:.2}x fewer), all equal the analytic decode accounting",
+        dense_recompute as f64 / fact_cached as f64
+    );
+    println!("decode self-check: OK");
+    Ok(())
+}
+
+fn cmd_bench_decode(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let budget: f64 = args.parse_num("budget", 0.5)?;
+    let (cm, label) = match args.get("ckpt") {
+        Some(path) => {
+            let cfg = serve_cfg(artifacts);
+            (load_artifact_or_ckpt(&cfg, path)?, path.to_string())
+        }
+        None => {
+            let cfg = ModelConfig::mini();
+            println!(
+                "no --ckpt: benchmarking a synthetic mini artifact \
+                 (rom-weight-svd @ {:.0}% budget)",
+                budget * 100.0
+            );
+            (serve::demo_artifact(&cfg, budget, seed ^ 0xDEC0)?, format!("mini@{budget:.2}"))
+        }
+    };
+    let requests: usize = args.parse_num("requests", 6)?;
+    let prompt_len: usize = args.parse_num("prompt-len", 16)?;
+    let max_new: usize = args.parse_num("max-new", 24)?;
+    let slots: usize = args.parse_num("slots", 3)?;
+    println!(
+        "bench-decode {label}: {requests} requests x {prompt_len} prompt tokens, \
+         max-new {max_new}, {slots} slots"
+    );
+    let bench =
+        llm_rom::coordinator::decode_bench(&cm, requests, prompt_len, max_new, slots, seed)?;
+    println!("{}", bench.format());
+    write_bench_json(args, &bench.to_json())?;
     Ok(())
 }
 

@@ -111,6 +111,78 @@ pub fn report(cfg: &ModelConfig, acc: &CompressionAccounting, tokens: usize) -> 
     MacsReport { n_params, macs: macs_per_token * tokens as u128, tokens }
 }
 
+/// MACs to decode one token at absolute position `pos` with a KV cache
+/// holding the `pos` previous tokens: every weight matrix contributes its
+/// (factored) parameter count once, the tied head adds `vocab·d_model`,
+/// and attention adds `2·(pos+1)·d_model` per block (scores over the
+/// cached keys + weighted values) — the exact causal cost, which is what
+/// [`crate::serve::ServeModel::forward_step`] executes and counts.
+pub fn decode_step_macs(cfg: &ModelConfig, acc: &CompressionAccounting, pos: usize) -> u128 {
+    // report(·, 1) is one token attending over one key; a cached step at
+    // position `pos` attends over `pos` additional keys per block.
+    report(cfg, acc, 1).macs + 2 * (pos as u128) * (cfg.d_model as u128) * (cfg.n_layers as u128)
+}
+
+/// Cost report for one KV-cached generation: `prompt` prefill tokens, then
+/// `generated` sampled tokens (the first comes free with the prefill's
+/// last logits, the rest are single-token steps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeMacsReport {
+    pub prompt: usize,
+    pub generated: usize,
+    /// MACs to consume the prompt through the cache.
+    pub prefill_macs: u128,
+    /// MACs for the `generated - 1` single-token decode steps.
+    pub decode_macs: u128,
+    /// Full-recompute baseline: re-forwarding the growing prefix from
+    /// scratch for every generated token, in [`report`]'s convention —
+    /// what a cache-less server would *bill* (and what
+    /// `ServeModel::forward_logits` counts).
+    ///
+    /// Convention note: `report` bills attention at the paper's
+    /// `2·T·d` per token (as if every token attended the full window),
+    /// while the cached side bills the exact causal `2·(pos+1)·d` — so
+    /// the attention share of [`DecodeMacsReport::savings`] is an upper
+    /// bound. Weight and head MACs (the dominant terms) are billed
+    /// identically on both sides.
+    pub recompute_macs: u128,
+}
+
+impl DecodeMacsReport {
+    /// Total MACs the KV-cached path executes.
+    pub fn cached_macs(&self) -> u128 {
+        self.prefill_macs + self.decode_macs
+    }
+
+    /// How many times more MACs the recompute baseline costs.
+    pub fn savings(&self) -> f64 {
+        if self.cached_macs() == 0 {
+            1.0
+        } else {
+            self.recompute_macs as f64 / self.cached_macs() as f64
+        }
+    }
+}
+
+/// Analytic accounting for KV-cached generation under a compression state —
+/// the decode-regime companion of [`report`], and what
+/// `repro generate --self-check` asserts the decode subsystem actually
+/// executed.
+pub fn decode_report(
+    cfg: &ModelConfig,
+    acc: &CompressionAccounting,
+    prompt: usize,
+    generated: usize,
+) -> DecodeMacsReport {
+    let prefill_macs = (0..prompt).map(|p| decode_step_macs(cfg, acc, p)).sum();
+    let decode_macs = (0..generated.saturating_sub(1))
+        .map(|k| decode_step_macs(cfg, acc, prompt + k))
+        .sum();
+    let recompute_macs =
+        (1..=generated).map(|k| report(cfg, acc, prompt + k - 1).macs).sum();
+    DecodeMacsReport { prompt, generated, prefill_macs, decode_macs, recompute_macs }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +256,70 @@ mod tests {
         let comp = report(&cfg, &acc, 64);
         assert!(comp.n_params < dense.n_params);
         assert!(comp.macs < dense.macs);
+    }
+
+    #[test]
+    fn decode_step_matches_hand_formula() {
+        let cfg = ModelConfig::mini();
+        let acc = CompressionAccounting::dense();
+        let (d, l) = (cfg.d_model as u128, cfg.n_layers as u128);
+        let weights: u128 = (0..cfg.n_layers)
+            .flat_map(|b| block_matrices(&cfg, b))
+            .map(|(_, o, i)| (o * i) as u128)
+            .sum();
+        let head = (cfg.vocab * cfg.d_model) as u128;
+        for pos in [0usize, 1, 7, 63] {
+            let want = weights + head + 2 * (pos as u128 + 1) * d * l;
+            assert_eq!(decode_step_macs(&cfg, &acc, pos), want, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn decode_report_sums_steps_and_recompute_dominates() {
+        let cfg = ModelConfig::mini();
+        let acc = CompressionAccounting::dense();
+        let rep = decode_report(&cfg, &acc, 16, 8);
+        let prefill: u128 = (0..16).map(|p| decode_step_macs(&cfg, &acc, p)).sum();
+        let decode: u128 = (16..23).map(|p| decode_step_macs(&cfg, &acc, p)).sum();
+        assert_eq!(rep.prefill_macs, prefill);
+        assert_eq!(rep.decode_macs, decode);
+        assert_eq!(rep.cached_macs(), prefill + decode);
+        let recompute: u128 = (1..=8u128)
+            .map(|k| report(&cfg, &acc, 16 + k as usize - 1).macs)
+            .sum();
+        assert_eq!(rep.recompute_macs, recompute);
+        assert!(rep.recompute_macs > rep.cached_macs(), "recompute must cost more");
+        assert!(rep.savings() > 1.0);
+        // degenerate generations stay well-defined
+        let zero = decode_report(&cfg, &acc, 4, 0);
+        assert_eq!(zero.decode_macs, 0);
+        assert_eq!(zero.recompute_macs, 0);
+        let one = decode_report(&cfg, &acc, 4, 1);
+        assert_eq!(one.decode_macs, 0, "first token rides on the prefill logits");
+        assert_eq!(one.recompute_macs, report(&cfg, &acc, 4).macs);
+    }
+
+    #[test]
+    fn factored_decode_steps_are_cheaper() {
+        let cfg = ModelConfig::mini();
+        let mut acc = CompressionAccounting::dense();
+        for b in 0..cfg.n_layers {
+            for (name, o, i) in block_matrices(&cfg, b) {
+                let r = (0.4 * (o * i) as f64 / (o + i) as f64) as usize;
+                acc.set(&name, LayerCompression::LowRank { rank: r.max(1) });
+            }
+        }
+        let dense = CompressionAccounting::dense();
+        for pos in [0usize, 5, 31] {
+            assert!(
+                decode_step_macs(&cfg, &acc, pos) < decode_step_macs(&cfg, &dense, pos),
+                "pos {pos}"
+            );
+        }
+        let f = decode_report(&cfg, &acc, 12, 6);
+        let d = decode_report(&cfg, &dense, 12, 6);
+        assert!(f.cached_macs() < d.cached_macs());
+        assert!(f.cached_macs() < d.recompute_macs, "factored-KV beats dense-recompute");
     }
 
     #[test]

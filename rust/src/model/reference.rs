@@ -6,9 +6,12 @@
 //!    through this implementation and through the AOT HLO graphs and
 //!    asserts the logits agree — an end-to-end check on the marshalling,
 //!    the manifest, and the Pallas kernels at once.
-//! 2. **Serving demo**: incremental decoding with a KV cache
-//!    ([`DecoderState`]) for the `repro generate` path, where the
-//!    batch-128 HLO graphs would be wasteful for one token at a time.
+//! 2. **Decoding reference**: incremental decoding with a KV cache
+//!    ([`DecoderState`]) — the minimal reference the production decode
+//!    subsystem ([`crate::decode`], `repro generate`) is validated
+//!    against. Production generation runs over [`crate::serve::ServeModel`]
+//!    with [`crate::decode::Sampling`]; [`ReferenceModel::generate`] stays
+//!    as the simplest self-contained decode loop.
 
 use anyhow::Result;
 
@@ -263,13 +266,15 @@ impl<'p> ReferenceModel<'p> {
     }
 }
 
-/// Sample from logits (greedy when `temperature == 0`).
+/// Sample from logits (greedy when `temperature == 0`). Total-order
+/// comparison, so NaN logits select deterministically instead of
+/// panicking.
 fn sample(logits: &[f32], temperature: f32, rng: &mut crate::util::Rng) -> i32 {
     if temperature <= 0.0 {
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap();
     }

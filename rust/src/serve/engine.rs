@@ -17,6 +17,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::util::LatencySummary;
+
 use super::model::ServeModel;
 
 /// Engine knobs.
@@ -65,8 +67,9 @@ pub struct ServeStats {
     pub macs: u128,
     /// Wall clock of the whole run (all workers).
     pub wall_s: f64,
-    pub mean_latency_s: f64,
-    pub p95_latency_s: f64,
+    /// Latency summary (small-sample safe: 0 or 1 completed requests
+    /// yield well-defined values, not degenerate indexing).
+    pub latency: LatencySummary,
 }
 
 impl ServeStats {
@@ -172,23 +175,15 @@ impl ServeEngine {
         let wall_s = t0.elapsed().as_secs_f64();
         let mut results = results.into_inner().unwrap();
         results.sort_by_key(|r| r.id);
-        let mut lat: Vec<f64> = results.iter().map(|r| r.latency_s).collect();
-        lat.sort_by(f64::total_cmp);
         let stats = ServeStats {
             requests: results.len(),
             batches: batches.into_inner().unwrap(),
             tokens: results.iter().map(|r| r.tokens).sum(),
             macs: results.iter().map(|r| r.macs).sum(),
             wall_s,
-            mean_latency_s: if lat.is_empty() {
-                0.0
-            } else {
-                lat.iter().sum::<f64>() / lat.len() as f64
-            },
-            p95_latency_s: lat
-                .get(((lat.len() as f64 * 0.95).ceil() as usize).saturating_sub(1))
-                .copied()
-                .unwrap_or(0.0),
+            latency: LatencySummary::from_unsorted(
+                results.iter().map(|r| r.latency_s).collect(),
+            ),
         };
         Ok((results, stats))
     }
@@ -224,7 +219,7 @@ mod tests {
         assert_eq!(stats.macs, results.iter().map(|r| r.macs).sum::<u128>());
         // 9 requests at batch 2 need at least 5 dispatches
         assert!(stats.batches >= 5, "batches {}", stats.batches);
-        assert!(stats.wall_s > 0.0 && stats.p95_latency_s >= stats.mean_latency_s * 0.5);
+        assert!(stats.wall_s > 0.0 && stats.latency.p95 >= stats.latency.mean * 0.5);
     }
 
     #[test]
@@ -254,6 +249,24 @@ mod tests {
         let (results, stats) = e.run(reqs).unwrap();
         assert_eq!(results.len(), 2);
         assert_eq!(stats.batches, 1, "one worker claims both requests at once");
+    }
+
+    #[test]
+    fn tiny_sample_counts_have_well_defined_percentiles() {
+        // 0 completed requests: every latency figure is zero, not garbage
+        let e = engine(ExecMode::Factored, 2, 2);
+        let (_, s0) = e.run(Vec::new()).unwrap();
+        assert_eq!(s0.latency.n, 0);
+        assert_eq!((s0.latency.mean, s0.latency.p95), (0.0, 0.0));
+        assert_eq!((s0.latency.p50, s0.latency.max), (0.0, 0.0));
+        // 1 completed request: the lone sample is every percentile
+        let reqs = synth_requests(e.model().config(), 1, 6, 2);
+        let (r1, s1) = e.run(reqs).unwrap();
+        assert_eq!(s1.latency.n, 1);
+        assert_eq!(s1.latency.mean, r1[0].latency_s);
+        assert_eq!(s1.latency.p95, r1[0].latency_s);
+        assert_eq!(s1.latency.p50, r1[0].latency_s);
+        assert_eq!(s1.latency.max, r1[0].latency_s);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::compress::CompressedModel;
+use crate::decode::KvCache;
 use crate::linalg::matmul_transb_blocked_f32;
 use crate::model::reference::{causal_attention, rmsnorm, rope_qk, silu};
 use crate::model::ModelConfig;
@@ -189,6 +190,102 @@ impl ServeModel {
         macs += (seq * cfg.vocab * d) as u128;
         Ok((logits, macs))
     }
+
+    /// Incremental forward: consume `tokens` as the continuation of the
+    /// sequence held in `cache` (appended at position `cache.pos()`),
+    /// returning `(seq, vocab)` logits for every consumed position and the
+    /// MACs executed. K/V projections land in the preallocated cache
+    /// blocks; attention runs over the full cached window, so feeding a
+    /// prompt chunk-by-chunk (or token-by-token) reproduces
+    /// [`ServeModel::forward_logits`] on the concatenation.
+    ///
+    /// MAC accounting is the exact cached-decode convention of
+    /// [`crate::model::macs::decode_step_macs`]: weight matmuls per their
+    /// dense/factored dispatch, attention `2·(pos+1)·d_model` per block
+    /// for the token at absolute position `pos`, tied head
+    /// `vocab·d_model` — per consumed token.
+    pub fn forward_cached(&self, tokens: &[i32], cache: &mut KvCache) -> Result<(Vec<f32>, u128)> {
+        let cfg = &self.cfg;
+        let (d, nh) = (cfg.d_model, cfg.n_heads);
+        let seq = tokens.len();
+        if seq == 0 {
+            bail!("empty chunk");
+        }
+        ensure!(
+            cache.layers() == cfg.n_layers && cache.width() == d,
+            "KV cache geometry ({} layers × d {}) does not match the model ({} × {d})",
+            cache.layers(),
+            cache.width(),
+            cfg.n_layers,
+        );
+        ensure!(
+            seq <= cache.remaining(),
+            "KV cache overflow: {} cached + {seq} new > capacity {}",
+            cache.pos(),
+            cache.capacity()
+        );
+        let pos0 = cache.pos();
+        let mut macs: u128 = 0;
+
+        // embed
+        let mut h = vec![0.0f32; seq * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            ensure!(tok < cfg.vocab, "token {tok} out of vocab");
+            h[t * d..(t + 1) * d].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+        }
+
+        let mut buf = vec![0.0f32; seq * d];
+        for (b, block) in self.blocks.iter().enumerate() {
+            // ---- attention (over the cache) ----
+            rmsnorm(&h, &block.attn_norm, cfg.norm_eps, &mut buf);
+            let mut q = block.wq.apply(&buf, seq);
+            let mut k = block.wk.apply(&buf, seq);
+            let v = block.wv.apply(&buf, seq);
+            macs += seq as u128
+                * (block.wq.macs_per_row() + block.wk.macs_per_row() + block.wv.macs_per_row());
+            rope_qk(&mut q, &mut k, seq, d, nh, pos0, cfg.rope_theta);
+            cache.write(b, pos0, &k, &v);
+            let (kc, vc) = cache.view(b, pos0 + seq);
+            let attn_out = causal_attention(&q, kc, vc, seq, pos0, d, nh);
+            // exact causal cost: token t attends over pos0+t+1 cached keys
+            for t in 0..seq {
+                macs += 2 * (pos0 + t + 1) as u128 * d as u128;
+            }
+
+            let o = block.wo.apply(&attn_out, seq);
+            macs += seq as u128 * block.wo.macs_per_row();
+            for (hv, ov) in h.iter_mut().zip(&o) {
+                *hv += ov;
+            }
+
+            // ---- ffn ----
+            rmsnorm(&h, &block.ffn_norm, cfg.norm_eps, &mut buf);
+            let gate = block.w_gate.apply(&buf, seq);
+            let up = block.w_up.apply(&buf, seq);
+            macs += seq as u128 * (block.w_gate.macs_per_row() + block.w_up.macs_per_row());
+            let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
+            let down = block.w_down.apply(&act, seq);
+            macs += seq as u128 * block.w_down.macs_per_row();
+            for (hv, dv) in h.iter_mut().zip(&down) {
+                *hv += dv;
+            }
+        }
+
+        // tied head
+        rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut buf);
+        let logits = matmul_transb_blocked_f32(&buf, &self.embed, seq, d, cfg.vocab);
+        macs += (seq * cfg.vocab * d) as u128;
+        cache.advance(seq);
+        Ok((logits, macs))
+    }
+
+    /// One decode step: consume a single token through the cache and
+    /// return its `(vocab,)` logits row plus the MACs executed — the unit
+    /// of KV-cached autoregressive generation.
+    pub fn forward_step(&self, token: i32, cache: &mut KvCache) -> Result<(Vec<f32>, u128)> {
+        self.forward_cached(&[token], cache)
+    }
 }
 
 #[cfg(test)]
@@ -273,5 +370,75 @@ mod tests {
         let m = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
         assert!(m.forward_logits(&[]).is_err());
         assert!(m.forward_logits(&[cfg.vocab as i32]).is_err());
+    }
+
+    #[test]
+    fn kv_cached_forward_matches_full_forward() {
+        // chunked prefill + token-at-a-time through the cache must agree
+        // with the from-scratch forward, in both execution modes
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 29).unwrap();
+        let tokens = synth_requests(&cfg, 1, 18, 3)[0].tokens.clone();
+        for mode in [ExecMode::Dense, ExecMode::Factored] {
+            let m = ServeModel::from_artifact(&cm, mode).unwrap();
+            let (full, _) = m.forward_logits(&tokens).unwrap();
+            let mut cache = KvCache::new(&cfg, tokens.len());
+            let mut inc = Vec::new();
+            let split = 7;
+            let (l, _) = m.forward_cached(&tokens[..split], &mut cache).unwrap();
+            inc.extend(l);
+            for &t in &tokens[split..] {
+                let (l, _) = m.forward_step(t, &mut cache).unwrap();
+                assert_eq!(l.len(), cfg.vocab);
+                inc.extend(l);
+            }
+            assert_eq!(cache.pos(), tokens.len());
+            let diff = max_abs_diff(&full, &inc);
+            assert!(diff <= 1e-4, "{}: KV vs full max |Δ| = {diff}", mode.name());
+        }
+    }
+
+    #[test]
+    fn cached_macs_match_decode_accounting() {
+        use crate::model::macs::decode_step_macs;
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 31).unwrap();
+        let tokens = synth_requests(&cfg, 1, 12, 9)[0].tokens.clone();
+        for (mode, acc) in [
+            (ExecMode::Dense, CompressionAccounting::dense()),
+            (ExecMode::Factored, cm.accounting.clone()),
+        ] {
+            let m = ServeModel::from_artifact(&cm, mode).unwrap();
+            let mut cache = KvCache::new(&cfg, tokens.len());
+            // prefill chunk of 5, then single steps — chunking must not
+            // change the executed MACs
+            let (_, m_prefill) = m.forward_cached(&tokens[..5], &mut cache).unwrap();
+            let want_prefill: u128 = (0..5).map(|p| decode_step_macs(&cfg, &acc, p)).sum();
+            assert_eq!(m_prefill, want_prefill, "{} prefill", mode.name());
+            for (i, &t) in tokens[5..].iter().enumerate() {
+                let (_, ms) = m.forward_step(t, &mut cache).unwrap();
+                assert_eq!(ms, decode_step_macs(&cfg, &acc, 5 + i), "{} step {i}", mode.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cache_overflow_and_geometry_mismatch_are_errors() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 37).unwrap();
+        let m = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let mut cache = KvCache::new(&cfg, 3);
+        assert!(m.forward_cached(&[1, 2, 3, 1], &mut cache).is_err(), "chunk > capacity");
+        m.forward_cached(&[1, 2], &mut cache).unwrap();
+        assert!(m.forward_cached(&[1, 2], &mut cache).is_err(), "overflow at pos 2/3");
+        assert!(m.forward_step(1, &mut cache).is_ok(), "exactly filling is fine");
+        assert!(m.forward_step(1, &mut cache).is_err(), "full cache rejects more");
+        // cache built for a different geometry
+        let other = crate::model::ModelConfig { n_layers: 1, ..cfg.clone() };
+        let mut wrong = KvCache::new(&other, 8);
+        assert!(m.forward_cached(&[1], &mut wrong).is_err());
+        // empty chunks are rejected like empty requests
+        let mut ok = KvCache::new(&cfg, 8);
+        assert!(m.forward_cached(&[], &mut ok).is_err());
     }
 }

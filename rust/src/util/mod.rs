@@ -1,9 +1,12 @@
-//! Small shared utilities: deterministic PRNG, timing helpers.
+//! Small shared utilities: deterministic PRNG, timing helpers, latency
+//! summaries.
 
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod stats;
 pub mod timer;
 
 pub use rng::Rng;
+pub use stats::LatencySummary;
 pub use timer::Stopwatch;

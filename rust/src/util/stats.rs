@@ -1,0 +1,115 @@
+//! Small-sample-safe latency summaries, shared by the serving engine
+//! ([`crate::serve::ServeStats`]) and the decode scheduler
+//! ([`crate::decode::DecodeStats`]).
+//!
+//! Percentiles use the nearest-rank method over a total order
+//! (`f64::total_cmp`), and the degenerate sample counts a light run
+//! produces — zero or one completed request — yield well-defined values
+//! (0.0 / the lone sample) instead of panicking or indexing out of range.
+
+/// Five-number summary of a latency sample set.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    /// Number of samples summarized.
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a sample set (any order). Empty input returns the all-zero
+    /// summary; a single sample is every percentile of itself.
+    pub fn from_unsorted(mut samples: Vec<f64>) -> LatencySummary {
+        samples.sort_by(f64::total_cmp);
+        let n = samples.len();
+        if n == 0 {
+            return LatencySummary::default();
+        }
+        LatencySummary {
+            n,
+            mean: samples.iter().sum::<f64>() / n as f64,
+            p50: percentile(&samples, 0.50),
+            p95: percentile(&samples, 0.95),
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice. Total on every
+/// input: empty slices give 0.0, a single sample is returned for any `q`,
+/// and `q` outside [0, 1] is clamped.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_samples_are_well_defined() {
+        // the 0-completed-requests boundary: no panic, no garbage index
+        assert_eq!(percentile(&[], 0.95), 0.0);
+        let s = LatencySummary::from_unsorted(Vec::new());
+        assert_eq!(s.n, 0);
+        assert_eq!((s.mean, s.p50, s.p95, s.max), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        // the 1-completed-request boundary
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile(&[3.5], q), 3.5, "q={q}");
+        }
+        let s = LatencySummary::from_unsorted(vec![3.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!((s.mean, s.p50, s.p95, s.max), (3.5, 3.5, 3.5, 3.5));
+    }
+
+    #[test]
+    fn two_samples() {
+        let sorted = [1.0, 2.0];
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 0.5), 1.0);
+        assert_eq!(percentile(&sorted, 0.51), 2.0);
+        assert_eq!(percentile(&sorted, 1.0), 2.0);
+        let s = LatencySummary::from_unsorted(vec![2.0, 1.0]);
+        assert_eq!(s.mean, 1.5);
+        assert_eq!(s.p50, 1.0);
+        assert_eq!(s.p95, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn nearest_rank_on_a_hundred_samples() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 0.50), 50.0);
+        assert_eq!(percentile(&sorted, 0.95), 95.0);
+        assert_eq!(percentile(&sorted, 1.0), 100.0);
+        assert_eq!(percentile(&sorted, 0.001), 1.0);
+    }
+
+    #[test]
+    fn out_of_range_q_is_clamped() {
+        let sorted = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&sorted, -1.0), 1.0);
+        assert_eq!(percentile(&sorted, 7.0), 3.0);
+    }
+
+    #[test]
+    fn summary_orders_inputs() {
+        let s = LatencySummary::from_unsorted(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p95, 5.0);
+        assert_eq!(s.max, 5.0);
+    }
+}

@@ -381,6 +381,136 @@ fn prop_serve_engine_schedule_invariant() {
     }
 }
 
+/// Property: for random small configs and budgets, KV-cached incremental
+/// decode produces token streams identical to full-recompute greedy
+/// decode — in both execution modes — and the MACs it executes equal the
+/// analytic cached-decode accounting (`macs::decode_report`), which is
+/// strictly below the recompute baseline.
+#[test]
+fn prop_kv_decode_matches_recompute_decode() {
+    use llm_rom::decode::{
+        run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler, Sampling,
+    };
+    use llm_rom::model::macs::{decode_report, CompressionAccounting};
+    use llm_rom::serve::{demo_artifact, ExecMode, ServeModel};
+    for case in 0..6u64 {
+        let mut rng = Rng::new(case * 9973 + 41);
+        let (d_model, n_heads) = *rng.choose(&[(16usize, 2usize), (24, 2), (32, 4)]);
+        let cfg = ModelConfig {
+            vocab: 40 + rng.below(40),
+            d_model,
+            n_heads,
+            n_layers: 2 + rng.below(2),
+            d_ff: d_model + rng.below(d_model),
+            ..ModelConfig::mini()
+        };
+        let budget = 0.4 + rng.f64() * 0.5;
+        let cm = demo_artifact(&cfg, budget, case * 7 + 1).unwrap();
+        let prompt_len = 3 + rng.below(8);
+        let max_new = 3 + rng.below(8);
+        let config = DecodeConfig {
+            slots: 1 + rng.below(3),
+            capacity: prompt_len + max_new,
+            max_new,
+            sampling: Sampling::Greedy,
+            seed: case,
+            eos: None,
+        };
+        let reqs = synth_gen_requests(&cfg, 2 + rng.below(4), prompt_len, case * 13 + 3);
+        for mode in [ExecMode::Dense, ExecMode::Factored] {
+            let model = ServeModel::from_artifact(&cm, mode).unwrap();
+            let acc = match mode {
+                ExecMode::Dense => CompressionAccounting::dense(),
+                ExecMode::Factored => cm.accounting.clone(),
+            };
+            let (kv, kv_stats) =
+                DecodeScheduler::new(&model, config).run(reqs.clone()).unwrap();
+            let (rc, rc_stats) = run_recompute(&model, &reqs, &config).unwrap();
+            assert_eq!(kv.len(), rc.len(), "case {case} {mode:?}");
+            for (a, b) in kv.iter().zip(&rc) {
+                assert_eq!(a.id, b.id, "case {case} {mode:?}");
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "case {case} {mode:?}: request {} stream diverged",
+                    a.id
+                );
+                let rep = decode_report(&cfg, &acc, a.prompt_len, a.tokens.len());
+                assert_eq!(
+                    a.macs,
+                    rep.cached_macs(),
+                    "case {case} {mode:?}: executed != analytic (request {})",
+                    a.id
+                );
+                assert_eq!(b.macs, rep.recompute_macs, "case {case} {mode:?}");
+            }
+            assert_eq!(kv_stats.recompute_macs, rc_stats.macs, "case {case} {mode:?}");
+            assert!(
+                kv_stats.macs < rc_stats.macs,
+                "case {case} {mode:?}: the cache must save MACs"
+            );
+        }
+    }
+}
+
+/// Property: scheduler admission is FIFO for any (requests, slots,
+/// per-request budgets) mix — no request is overtaken or starved, every
+/// request completes within its budget, and concurrency never exceeds the
+/// slot count.
+#[test]
+fn prop_scheduler_admission_fifo_never_starves() {
+    use llm_rom::decode::{DecodeConfig, DecodeScheduler, GenRequest, Sampling};
+    use llm_rom::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, 83).unwrap();
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+    for case in 0..8u64 {
+        let mut rng = Rng::new(case * 6133 + 47);
+        let n = 1 + rng.below(10);
+        let slots = 1 + rng.below(4);
+        let reqs: Vec<GenRequest> = (0..n)
+            .map(|id| GenRequest {
+                id,
+                prompt: (0..2 + rng.below(6)).map(|_| rng.below(cfg.vocab) as i32).collect(),
+                max_new: Some(1 + rng.below(7)),
+            })
+            .collect();
+        let budgets: Vec<usize> = reqs.iter().map(|r| r.max_new.unwrap()).collect();
+        let config = DecodeConfig {
+            slots,
+            capacity: 16,
+            max_new: 4,
+            sampling: Sampling::Greedy,
+            seed: case,
+            eos: None,
+        };
+        let (results, stats) =
+            DecodeScheduler::new(&model, config).run(reqs).unwrap();
+        assert_eq!(results.len(), n, "case {case}: every request completes");
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i, "case {case}: results in id order");
+            assert_eq!(
+                r.admitted, i,
+                "case {case}: FIFO admission — request {i} was overtaken"
+            );
+            assert_eq!(
+                r.tokens.len(),
+                budgets[i],
+                "case {case}: greedy without EOS runs to its exact budget"
+            );
+            assert!(r.ttft_s <= r.latency_s, "case {case}");
+        }
+        assert!(stats.peak_active <= slots, "case {case}: {} > {slots}", stats.peak_active);
+        assert_eq!(
+            stats.generated_tokens,
+            budgets.iter().sum::<usize>(),
+            "case {case}"
+        );
+        if n > slots {
+            assert!(stats.mid_run_admissions > 0, "case {case}: queue must drain mid-run");
+        }
+    }
+}
+
 /// Property: task generators always emit valid instances for random
 /// worlds, and calib/eval streams stay disjoint.
 #[test]

@@ -22,6 +22,12 @@ cargo test -q
 echo "== repro serve --self-check =="
 ./target/release/repro serve --self-check
 
+# Decode smoke test: KV-cached incremental decode ≡ full-recompute forward
+# (logits ≤1e-4, identical greedy streams under continuous batching, MACs
+# == analytic decode accounting, factored-KV < dense-recompute). Offline.
+echo "== repro generate --self-check =="
+./target/release/repro generate --self-check
+
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
   if ! cargo fmt --check; then
