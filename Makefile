@@ -12,12 +12,15 @@ build:
 test:
 	cd rust && cargo test -q
 
-# Machine-readable serving/decoding benchmarks, tracked across PRs
-# (BENCH_serve.json / BENCH_decode.json at the repo root). Offline: both
-# fall back to a synthetic mini artifact when no --ckpt is given.
+# Machine-readable serving/decoding/scaling benchmarks, tracked across PRs
+# (BENCH_serve.json / BENCH_decode.json / BENCH_parallel.json at the repo
+# root). Offline: all fall back to a synthetic mini artifact when no --ckpt
+# is given. BENCH_parallel.json captures 1-vs-4-thread tokens/sec and
+# compress wall-clock so the perf trajectory records scaling.
 bench: build
 	cd rust && ./target/release/repro bench-serve --json ../BENCH_serve.json
 	cd rust && ./target/release/repro bench-decode --json ../BENCH_decode.json
+	cd rust && ./target/release/repro bench-parallel --threads 4 --json ../BENCH_parallel.json
 
 # Export the AOT artifacts (HLO text + manifest + init checkpoint) into
 # rust/artifacts/. Needs the python/jax toolchain from python/compile/.

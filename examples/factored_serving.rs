@@ -58,7 +58,9 @@ fn main() -> Result<()> {
     assert!(lossless, "factor round-trip must be lossless");
 
     println!("\n== stage 3: serve it, dense vs factored ==");
-    let table = serve_table(&loaded, 8, 32, ServeConfig { workers: 2, max_batch: 4 }, 7)?;
+    // the default ExecConfig uses every core; the forwards are row-sharded
+    // over the worker pool but bitwise identical to a serial run
+    let table = serve_table(&loaded, 8, 32, ServeConfig { workers: 2, ..Default::default() }, 7)?;
     println!("{table}");
     println!("(dense runs the re-densified W_eff; factored runs two skinny matmuls per layer)");
     Ok(())

@@ -5,7 +5,11 @@
 
 use std::time::Duration;
 
-use llm_rom::linalg::{eigh, eigh_jacobi, matmul, matmul_transb_f32, Matrix};
+use llm_rom::exec::ExecPool;
+use llm_rom::linalg::{
+    eigh, eigh_jacobi, matmul, matmul_transb_blocked_f32, matmul_transb_f32,
+    par_matmul_transb_blocked_f32, Matrix,
+};
 use llm_rom::util::bench::{bench, default_window};
 use llm_rom::util::Rng;
 
@@ -65,4 +69,16 @@ fn main() {
         let t = matmul_transb_f32(&x, &w2f, 4096, 128, 29);
         matmul_transb_f32(&t, &w1f, 4096, 29, 128)
     });
+
+    // row-sharded serving kernel: serial vs the worker pool (the exec
+    // core's speedup on the batched-forward hot path)
+    bench("serve_kernel_serial (4096x128 @ 128x128ᵀ)", w, || {
+        matmul_transb_blocked_f32(&x, &wd, 4096, 128, 128)
+    });
+    for threads in [2usize, 4] {
+        let pool = ExecPool::new(threads);
+        bench(&format!("serve_kernel_par_t{threads} (4096x128 @ 128x128ᵀ)"), w, || {
+            par_matmul_transb_blocked_f32(&x, &wd, 4096, 128, 128, &pool)
+        });
+    }
 }

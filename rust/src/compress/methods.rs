@@ -56,6 +56,7 @@ impl Compressor for RomFeature {
             pallas_covariance: ctx.pallas_covariance,
             propagate_errors: self.propagate_errors,
             space: DecompositionSpace::Feature,
+            exec: ctx.exec,
             ..RomConfig::default()
         };
         let rom = RomPipeline::new(rt).compress(ctx.params, &batches, &rcfg)?;
@@ -78,6 +79,7 @@ impl Compressor for RomWeightSvd {
         let rcfg = RomConfig {
             schedule: ctx.schedule,
             space: DecompositionSpace::Weight,
+            exec: ctx.exec,
             ..RomConfig::default()
         };
         let rom = compress_weight_space(&ctx.cfg, ctx.params, &rcfg)?;

@@ -29,6 +29,7 @@ pub mod session;
 
 use anyhow::Result;
 
+use crate::exec::ExecConfig;
 use crate::model::{ModelConfig, ParamStore};
 use crate::rom::budget::ModuleSchedule;
 use crate::runtime::Runtime;
@@ -54,6 +55,9 @@ pub struct CompressCtx<'a> {
     pub global_budget: f64,
     /// Use the Pallas Gram kernel for covariance accumulation.
     pub pallas_covariance: bool,
+    /// Worker-pool budget (the global `--threads` knob). Methods that
+    /// parallelize must stay bitwise deterministic across thread counts.
+    pub exec: ExecConfig,
 }
 
 impl CompressCtx<'_> {

@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::exec::ExecConfig;
 use crate::model::{ModelConfig, ParamStore};
 use crate::rom::budget::{paper_preset, ModuleSchedule};
 use crate::runtime::Runtime;
@@ -24,24 +25,43 @@ pub struct CompressionSession<'rt> {
     runtime: Option<&'rt Runtime>,
     cfg: ModelConfig,
     pallas_covariance: bool,
+    exec: ExecConfig,
 }
 
 impl<'rt> CompressionSession<'rt> {
     /// Session over a live PJRT runtime (all methods available).
     pub fn new(runtime: &'rt Runtime) -> CompressionSession<'rt> {
         let cfg = ModelConfig::from_manifest(&runtime.manifest().model_config);
-        CompressionSession { runtime: Some(runtime), cfg, pallas_covariance: true }
+        CompressionSession {
+            runtime: Some(runtime),
+            cfg,
+            pallas_covariance: true,
+            exec: ExecConfig::default(),
+        }
     }
 
     /// Runtime-free session: data-free methods only (plus the budget-1.0
     /// identity path for every method).
     pub fn offline(cfg: ModelConfig) -> CompressionSession<'static> {
-        CompressionSession { runtime: None, cfg, pallas_covariance: false }
+        CompressionSession {
+            runtime: None,
+            cfg,
+            pallas_covariance: false,
+            exec: ExecConfig::default(),
+        }
     }
 
     /// Toggle the Pallas Gram kernel for covariance accumulation.
     pub fn with_pallas_covariance(mut self, on: bool) -> Self {
         self.pallas_covariance = on;
+        self
+    }
+
+    /// Set the worker-pool budget for this session's runs (the `--threads`
+    /// knob). Compression output is bitwise identical for any value; this
+    /// only changes wall-clock.
+    pub fn with_exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -90,6 +110,7 @@ impl<'rt> CompressionSession<'rt> {
             schedule,
             global_budget,
             pallas_covariance: self.pallas_covariance,
+            exec: self.exec,
         };
         compressor.compress(&mut ctx)
     }

@@ -12,6 +12,7 @@ use crate::data::{
     build_calibration, pack_lm_batches, render_corpus, CalibBatch, CalibSource, World,
 };
 use crate::eval::{EvalReport, Evaluator};
+use crate::exec::ExecConfig;
 use crate::model::{ModelConfig, ParamStore};
 use crate::rom::ModuleSchedule;
 use crate::runtime::Runtime;
@@ -37,6 +38,9 @@ pub struct ExperimentConfig {
     pub calib_source: CalibSource,
     /// Eval instances per task.
     pub eval_per_task: usize,
+    /// Worker-pool budget for compression runs (the `--threads` knob;
+    /// artifacts are bitwise identical for any value).
+    pub exec: ExecConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -51,6 +55,7 @@ impl Default for ExperimentConfig {
             calib_seq: 128,
             calib_source: CalibSource::Combination,
             eval_per_task: 200,
+            exec: ExecConfig::default(),
         }
     }
 }
@@ -136,9 +141,10 @@ impl<'rt> Experiment<'rt> {
         )
     }
 
-    /// Compression session bound to this experiment's runtime.
+    /// Compression session bound to this experiment's runtime and thread
+    /// budget.
     pub fn session(&self) -> CompressionSession<'rt> {
-        CompressionSession::new(self.runtime)
+        CompressionSession::new(self.runtime).with_exec(self.xcfg.exec)
     }
 
     /// Calibration as a pluggable stream (the [`crate::compress`] form of

@@ -32,6 +32,7 @@ use crate::decode::{
     run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler, DecodeStats,
 };
 use crate::eval::{format_table, EvalReport};
+use crate::exec::ExecConfig;
 use crate::model::macs::{self, CompressionAccounting};
 use crate::model::ParamStore;
 use crate::serve::{synth_requests, ExecMode, ServeConfig, ServeEngine, ServeModel, ServeStats};
@@ -192,6 +193,8 @@ pub struct ServeBench {
     pub seq: usize,
     pub workers: usize,
     pub max_batch: usize,
+    /// Resolved worker-pool budget the run executed under (`--threads`).
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -219,18 +222,19 @@ impl ServeBench {
     pub fn format(&self) -> String {
         let mut out = String::from(
             "Serve: dense vs factored execution\n\
-             mode      layers(lr)   MMACs/tok   µs/tok     tok/s     p95 lat\n",
+             mode      layers(lr)   MMACs/tok   µs/tok     tok/s     p95 lat   threads\n",
         );
         for row in &self.rows {
             let s = &row.stats;
             out.push_str(&format!(
-                "{:<9} {:>10} {:>11.3} {:>8.1} {:>9.0} {:>9.1}ms\n",
+                "{:<9} {:>10} {:>11.3} {:>8.1} {:>9.0} {:>9.1}ms {:>9}\n",
                 row.mode.name(),
                 row.n_factored,
                 s.macs_per_token() as f64 / 1e6,
                 s.s_per_token() * 1e6,
                 s.tokens_per_s(),
                 s.latency.p95 * 1e3,
+                self.threads,
             ));
         }
         out.push_str(&format!(
@@ -271,6 +275,7 @@ impl ServeBench {
             ("seq", Json::Num(self.seq as f64)),
             ("workers", Json::Num(self.workers as f64)),
             ("batch", Json::Num(self.max_batch as f64)),
+            ("threads", Json::Num(self.threads as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("mac_reduction", Json::Num(self.mac_reduction())),
             ("speedup", Json::Num(self.speedup())),
@@ -313,6 +318,7 @@ pub fn serve_bench(
         seq,
         workers: config.workers,
         max_batch: config.max_batch,
+        threads: config.exec.resolve(),
         seed,
     })
 }
@@ -350,6 +356,8 @@ pub struct DecodeBench {
     pub prompt_len: usize,
     pub max_new: usize,
     pub slots: usize,
+    /// Resolved worker-pool budget the run executed under (`--threads`).
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -369,18 +377,19 @@ impl DecodeBench {
     pub fn format(&self) -> String {
         let mut out = String::from(
             "Decode: recompute vs KV-cached, dense vs factored\n\
-             method            MMACs/tok   tok/s   ttft p50    itl p95   vs recompute\n",
+             method            MMACs/tok   tok/s   ttft p50    itl p95   vs recompute   threads\n",
         );
         for row in &self.rows {
             let s = &row.stats;
             out.push_str(&format!(
-                "{:<17} {:>9.3} {:>7.0} {:>8.2}ms {:>8.2}ms {:>11.2}x\n",
+                "{:<17} {:>9.3} {:>7.0} {:>8.2}ms {:>8.2}ms {:>11.2}x {:>9}\n",
                 row.method,
                 s.macs_per_generated_token() as f64 / 1e6,
                 s.tokens_per_s(),
                 s.ttft.p50 * 1e3,
                 s.inter_token.p95 * 1e3,
                 s.mac_savings(),
+                self.threads,
             ));
         }
         out.push_str(&format!(
@@ -425,6 +434,7 @@ impl DecodeBench {
             ("prompt_len", Json::Num(self.prompt_len as f64)),
             ("max_new", Json::Num(self.max_new as f64)),
             ("slots", Json::Num(self.slots as f64)),
+            ("threads", Json::Num(self.threads as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("mac_reduction", Json::Num(self.mac_reduction())),
             ("streams_match", Json::Bool(self.streams_match)),
@@ -442,6 +452,7 @@ pub fn decode_bench(
     prompt_len: usize,
     max_new: usize,
     slots: usize,
+    exec: ExecConfig,
     seed: u64,
 ) -> Result<DecodeBench> {
     let cfg = cm.params.config();
@@ -451,6 +462,7 @@ pub fn decode_bench(
         capacity: prompt_len + max_new,
         max_new,
         seed,
+        exec,
         ..DecodeConfig::default()
     };
     let dense = ServeModel::from_artifact(cm, ExecMode::Dense)?;
@@ -471,6 +483,185 @@ pub fn decode_bench(
         ],
         streams_match,
         requests,
+        prompt_len,
+        max_new,
+        slots,
+        threads: exec.resolve(),
+        seed,
+    })
+}
+
+/// One thread count's measurements of the scaling benchmark.
+pub struct ParallelBenchRow {
+    pub threads: usize,
+    /// Factored serve throughput (engine, batched full forwards).
+    pub serve_tokens_per_s: f64,
+    /// Factored KV-decode throughput (scheduler, continuous batching).
+    pub decode_tokens_per_s: f64,
+    /// Offline `rom-weight-svd` compression wall-clock.
+    pub compress_s: f64,
+}
+
+/// 1-vs-N-thread scaling comparison on one artifact: factored serve
+/// throughput, factored KV-decode throughput, and offline compression
+/// wall-clock at `--threads 1` and `--threads N`, plus the determinism
+/// verdicts (logits and greedy streams bitwise identical across the two
+/// thread counts). The `repro bench-parallel` payload — `make bench`
+/// writes it as `BENCH_parallel.json` so the perf trajectory captures
+/// scaling.
+pub struct ParallelBench {
+    /// Exactly two rows: serial first, then the N-thread run.
+    pub rows: Vec<ParallelBenchRow>,
+    /// Serve logits bitwise identical across the two thread counts.
+    pub serve_logits_match: bool,
+    /// Greedy decode token streams identical across the two thread counts.
+    pub decode_streams_match: bool,
+    pub requests: usize,
+    pub seq: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub slots: usize,
+    pub seed: u64,
+}
+
+impl ParallelBench {
+    pub fn serve_speedup(&self) -> f64 {
+        ratio(self.rows[1].serve_tokens_per_s, self.rows[0].serve_tokens_per_s)
+    }
+
+    pub fn decode_speedup(&self) -> f64 {
+        ratio(self.rows[1].decode_tokens_per_s, self.rows[0].decode_tokens_per_s)
+    }
+
+    pub fn compress_speedup(&self) -> f64 {
+        ratio(self.rows[0].compress_s, self.rows[1].compress_s)
+    }
+
+    pub fn format(&self) -> String {
+        let mut out = String::from(
+            "Parallel scaling: 1 vs N threads (factored path)\n\
+             threads   serve tok/s   decode tok/s   compress s\n",
+        );
+        for row in &self.rows {
+            out.push_str(&format!(
+                "{:>7} {:>13.0} {:>14.0} {:>12.3}\n",
+                row.threads, row.serve_tokens_per_s, row.decode_tokens_per_s, row.compress_s,
+            ));
+        }
+        out.push_str(&format!(
+            "speedup: serve {:.2}x, decode {:.2}x, compress {:.2}x — \
+             logits identical: {}, streams identical: {}\n",
+            self.serve_speedup(),
+            self.decode_speedup(),
+            self.compress_speedup(),
+            self.serve_logits_match,
+            self.decode_streams_match,
+        ));
+        out
+    }
+
+    /// Machine-readable form (the `BENCH_parallel.json` payload).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                json_obj(vec![
+                    ("threads", Json::Num(row.threads as f64)),
+                    ("serve_tokens_per_s", Json::Num(row.serve_tokens_per_s)),
+                    ("decode_tokens_per_s", Json::Num(row.decode_tokens_per_s)),
+                    ("compress_s", Json::Num(row.compress_s)),
+                ])
+            })
+            .collect();
+        json_obj(vec![
+            ("bench", Json::Str("parallel".to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("prompt_len", Json::Num(self.prompt_len as f64)),
+            ("max_new", Json::Num(self.max_new as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("serve_speedup", Json::Num(self.serve_speedup())),
+            ("decode_speedup", Json::Num(self.decode_speedup())),
+            ("compress_speedup", Json::Num(self.compress_speedup())),
+            ("serve_logits_match", Json::Bool(self.serve_logits_match)),
+            ("decode_streams_match", Json::Bool(self.decode_streams_match)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        1.0
+    }
+}
+
+/// Run the scaling comparison: the same factored serve + decode workloads
+/// and an offline `rom-weight-svd` compression of the artifact's params,
+/// once at `--threads 1` and once at `threads`, asserting along the way
+/// that outputs are identical (the determinism contract under load).
+#[allow(clippy::too_many_arguments)]
+pub fn parallel_bench(
+    cm: &CompressedModel,
+    requests: usize,
+    seq: usize,
+    prompt_len: usize,
+    max_new: usize,
+    slots: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<ParallelBench> {
+    use crate::compress::{CompressionSession, EmptyStream};
+
+    let cfg = cm.params.config();
+    let mut rows = Vec::new();
+    let mut serve_logits: Vec<Vec<f32>> = Vec::new();
+    let mut decode_streams: Vec<Vec<Vec<i32>>> = Vec::new();
+    for t in [1usize, threads.max(1)] {
+        let exec = ExecConfig::with_threads(t);
+        // factored serve throughput
+        let model = ServeModel::from_artifact(cm, ExecMode::Factored)?;
+        let engine = ServeEngine::new(model, ServeConfig { workers: t, max_batch: 2, exec });
+        let (results, serve_stats) = engine.run(synth_requests(cfg, requests, seq, seed))?;
+        serve_logits.push(results.into_iter().flat_map(|r| r.logits).collect());
+
+        // factored KV-decode throughput
+        let fact = ServeModel::from_artifact(cm, ExecMode::Factored)?;
+        let config = DecodeConfig {
+            slots,
+            capacity: prompt_len + max_new,
+            max_new,
+            seed,
+            exec,
+            ..DecodeConfig::default()
+        };
+        let reqs = synth_gen_requests(cfg, requests, prompt_len, seed);
+        let (dresults, decode_stats) = DecodeScheduler::new(&fact, config).run(reqs)?;
+        decode_streams.push(dresults.into_iter().map(|r| r.tokens).collect());
+
+        // offline compression wall-clock (data-free weight-space ROM)
+        let session = CompressionSession::offline(cfg.clone()).with_exec(exec);
+        let t0 = std::time::Instant::now();
+        let _ = session.compress_at("rom-weight-svd", &cm.params, 0.5, &mut EmptyStream)?;
+        let compress_s = t0.elapsed().as_secs_f64();
+
+        rows.push(ParallelBenchRow {
+            threads: t,
+            serve_tokens_per_s: serve_stats.tokens_per_s(),
+            decode_tokens_per_s: decode_stats.tokens_per_s(),
+            compress_s,
+        });
+    }
+    Ok(ParallelBench {
+        rows,
+        serve_logits_match: serve_logits[0] == serve_logits[1],
+        decode_streams_match: decode_streams[0] == decode_streams[1],
+        requests,
+        seq,
         prompt_len,
         max_new,
         slots,
@@ -515,34 +706,42 @@ mod tests {
     use super::*;
     use crate::serve::{demo_artifact, demo_config};
 
+    fn two_worker_config() -> ServeConfig {
+        ServeConfig { workers: 2, max_batch: 2, exec: ExecConfig::with_threads(2) }
+    }
+
     #[test]
     fn serve_bench_reports_both_modes_with_json() {
         let cfg = demo_config();
         let cm = demo_artifact(&cfg, 0.5, 3).unwrap();
-        let b = serve_bench(&cm, 4, 10, ServeConfig { workers: 2, max_batch: 2 }, 9).unwrap();
+        let b = serve_bench(&cm, 4, 10, two_worker_config(), 9).unwrap();
         assert_eq!(b.rows.len(), 2);
         assert_eq!(b.rows[0].mode, ExecMode::Dense);
         assert_eq!(b.rows[1].mode, ExecMode::Factored);
         assert_eq!(b.rows[0].n_factored, 0);
         assert!(b.rows[1].n_factored > 0);
+        assert_eq!(b.threads, 2, "resolved thread budget lands in the bench");
         assert!(b.max_logit_diff <= 1e-4, "modes disagree: {}", b.max_logit_diff);
         assert!(b.mac_reduction() > 1.0);
         let text = b.format();
         assert!(text.contains("dense") && text.contains("factored"));
+        assert!(text.contains("threads"), "threads column missing: {text}");
         // JSON payload round-trips through the parser with both rows
         let j = Json::parse(&b.to_json().to_string()).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "serve");
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("mac_reduction").unwrap().as_f64().unwrap() > 1.0);
+        assert_eq!(j.get("threads").unwrap().as_f64().unwrap(), 2.0);
         // text form stays available under the old name
-        assert!(serve_table(&cm, 4, 10, ServeConfig { workers: 2, max_batch: 2 }, 9).is_ok());
+        assert!(serve_table(&cm, 4, 10, two_worker_config(), 9).is_ok());
     }
 
     #[test]
     fn decode_bench_three_way_acceptance() {
         let cfg = demo_config();
         let cm = demo_artifact(&cfg, 0.5, 5).unwrap();
-        let b = decode_bench(&cm, 4, 8, 6, 2, 11).unwrap();
+        let b = decode_bench(&cm, 4, 8, 6, 2, ExecConfig::serial(), 11).unwrap();
+        assert_eq!(b.threads, 1);
         assert_eq!(b.rows.len(), 3);
         let methods: Vec<&str> = b.rows.iter().map(|r| r.method).collect();
         assert_eq!(methods, ["dense-recompute", "dense-kv", "factored-kv"]);
@@ -560,7 +759,28 @@ mod tests {
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "decode");
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(j.get("streams_match").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("threads").unwrap().as_f64().unwrap(), 1.0);
         let text = b.format();
         assert!(text.contains("factored-kv") && text.contains("dense-recompute"));
+    }
+
+    #[test]
+    fn parallel_bench_scales_and_stays_deterministic() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 7).unwrap();
+        let b = parallel_bench(&cm, 4, 10, 6, 5, 2, 4, 13).unwrap();
+        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.rows[0].threads, 1);
+        assert_eq!(b.rows[1].threads, 4);
+        assert!(b.serve_logits_match, "serve logits moved under threads");
+        assert!(b.decode_streams_match, "decode streams moved under threads");
+        assert!(b.rows.iter().all(|r| r.compress_s >= 0.0));
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "parallel");
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("serve_logits_match").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("decode_streams_match").unwrap(), &Json::Bool(true));
+        let text = b.format();
+        assert!(text.contains("serve tok/s") && text.contains("compress s"), "{text}");
     }
 }

@@ -5,8 +5,14 @@
 //! token's keys/values during incremental decoding is a bounded
 //! `memcpy` — no reallocation on the token path. A [`KvCachePool`] owns a
 //! fixed number of cache slots; the continuous-batching scheduler acquires
-//! a slot at request admission and releases (resets) it on eviction, so
-//! steady-state serving allocates nothing per request.
+//! an *owned* cache at request admission (so active sequences can step on
+//! worker threads without aliasing the pool) and releases (resets) it on
+//! eviction — steady-state serving allocates nothing per request. Pool
+//! construction can be capped ([`KvCachePool::with_cap`]): a requested
+//! footprint beyond the cap is a proper `Err` before any slot is
+//! allocated, not a later panic.
+
+use anyhow::{ensure, Result};
 
 use crate::model::ModelConfig;
 
@@ -93,48 +99,81 @@ impl KvCache {
     }
 }
 
-/// A fixed set of [`KvCache`] slots with a free list.
+/// Preallocated per-slot footprint of a pool over `cfg`/`capacity`, in
+/// bytes (computable before any allocation — the cap guard's currency).
+pub fn kv_slot_bytes(cfg: &ModelConfig, capacity: usize) -> usize {
+    2 * cfg.n_layers * capacity * cfg.d_model * std::mem::size_of::<f32>()
+}
+
+/// A fixed set of [`KvCache`] slots, handed out by value.
 pub struct KvCachePool {
-    slots: Vec<KvCache>,
-    free: Vec<usize>,
+    free: Vec<KvCache>,
+    slots: usize,
+    per_slot_bytes: usize,
 }
 
 impl KvCachePool {
+    /// An uncapped pool (never fails).
     pub fn new(cfg: &ModelConfig, slots: usize, capacity: usize) -> KvCachePool {
-        KvCachePool {
-            slots: (0..slots).map(|_| KvCache::new(cfg, capacity)).collect(),
-            // reversed so `acquire` hands out slot 0 first
-            free: (0..slots).rev().collect(),
+        Self::with_cap(cfg, slots, capacity, None).expect("uncapped pool")
+    }
+
+    /// A pool whose preallocated footprint must stay within `max_bytes`
+    /// (when given). The guard runs *before* the slots are allocated, so
+    /// an over-budget request is a clean `Err` — not an OOM or a
+    /// slot-exhaustion panic later.
+    pub fn with_cap(
+        cfg: &ModelConfig,
+        slots: usize,
+        capacity: usize,
+        max_bytes: Option<usize>,
+    ) -> Result<KvCachePool> {
+        let per_slot_bytes = kv_slot_bytes(cfg, capacity);
+        if let Some(cap) = max_bytes {
+            let need = slots * per_slot_bytes;
+            ensure!(
+                need <= cap,
+                "KV cache pool over budget: {slots} slots × {per_slot_bytes} bytes/slot = \
+                 {need} bytes > cap {cap} (lower --slots, shorten the capacity, or raise the cap)"
+            );
         }
+        Ok(KvCachePool {
+            free: (0..slots).map(|_| KvCache::new(cfg, capacity)).collect(),
+            slots,
+            per_slot_bytes,
+        })
     }
 
     pub fn n_slots(&self) -> usize {
-        self.slots.len()
+        self.slots
     }
 
     pub fn n_free(&self) -> usize {
         self.free.len()
     }
 
-    /// Claim a free slot, if any.
-    pub fn acquire(&mut self) -> Option<usize> {
+    /// Claim a free cache, if any. Ownership moves to the caller (the
+    /// scheduler's active sequence) until [`KvCachePool::release`].
+    pub fn acquire(&mut self) -> Option<KvCache> {
         self.free.pop()
     }
 
-    /// Return a slot to the pool, resetting its sequence.
-    pub fn release(&mut self, slot: usize) {
-        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
-        self.slots[slot].reset();
-        self.free.push(slot);
+    /// Return a cache to the pool, resetting its sequence.
+    pub fn release(&mut self, mut cache: KvCache) {
+        debug_assert!(self.free.len() < self.slots, "released more caches than the pool owns");
+        cache.reset();
+        self.free.push(cache);
     }
 
-    pub fn slot_mut(&mut self, slot: usize) -> &mut KvCache {
-        &mut self.slots[slot]
+    /// Preallocated footprint of the whole pool in bytes (including
+    /// caches currently out with active sequences).
+    pub fn footprint_bytes(&self) -> usize {
+        self.slots * self.per_slot_bytes
     }
 
-    /// Preallocated footprint of the whole pool in bytes.
+    /// Back-compat alias of [`KvCachePool::footprint_bytes`].
     pub fn bytes(&self) -> usize {
-        self.slots.iter().map(|s| s.bytes()).sum()
+        self.footprint_bytes()
     }
 }
 
@@ -186,18 +225,34 @@ mod tests {
         let mut p = KvCachePool::new(&cfg(), 2, 6);
         assert_eq!(p.n_slots(), 2);
         assert_eq!(p.n_free(), 2);
-        let a = p.acquire().unwrap();
-        assert_eq!(a, 0, "slot 0 hands out first");
+        let mut a = p.acquire().unwrap();
         let b = p.acquire().unwrap();
-        assert_eq!(b, 1);
+        assert_eq!(b.capacity(), 6);
         assert!(p.acquire().is_none(), "pool exhausted");
-        p.slot_mut(a).advance(3);
-        assert_eq!(p.slot_mut(a).pos(), 3);
+        a.advance(3);
+        assert_eq!(a.pos(), 3);
         p.release(a);
         assert_eq!(p.n_free(), 1);
         let c = p.acquire().unwrap();
-        assert_eq!(c, a, "released slot is reusable");
-        assert_eq!(p.slot_mut(c).pos(), 0, "release resets the sequence");
-        assert_eq!(p.bytes(), 2 * (2 * 3 * 6 * 8 * 4));
+        assert_eq!(c.pos(), 0, "release resets the sequence");
+        assert_eq!(p.footprint_bytes(), 2 * (2 * 3 * 6 * 8 * 4));
+        assert_eq!(p.bytes(), p.footprint_bytes(), "footprint counts caches out on loan too");
+        assert_eq!(kv_slot_bytes(&cfg(), 6), 2 * 3 * 6 * 8 * 4);
+    }
+
+    #[test]
+    fn capacity_cap_is_enforced_before_allocation() {
+        let cfg = cfg();
+        let per_slot = kv_slot_bytes(&cfg, 6);
+        // exactly at the cap: fine
+        let p = KvCachePool::with_cap(&cfg, 2, 6, Some(2 * per_slot)).unwrap();
+        assert_eq!(p.footprint_bytes(), 2 * per_slot);
+        // one byte under: a proper Err naming the shortfall
+        let e = KvCachePool::with_cap(&cfg, 2, 6, Some(2 * per_slot - 1)).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("over budget"), "{msg}");
+        assert!(msg.contains(&format!("{}", 2 * per_slot)), "{msg}");
+        // no cap: anything goes
+        assert!(KvCachePool::with_cap(&cfg, 64, 6, None).is_ok());
     }
 }

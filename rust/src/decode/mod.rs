@@ -38,7 +38,7 @@ use crate::model::ModelConfig;
 use crate::serve::{synth_requests, ServeModel};
 use crate::util::LatencySummary;
 
-pub use kv::{KvCache, KvCachePool};
+pub use kv::{kv_slot_bytes, KvCache, KvCachePool};
 pub use sampler::Sampling;
 pub use scheduler::{DecodeConfig, DecodeScheduler, FinishReason, GenRequest, GenResult};
 pub use stats::DecodeStats;
@@ -71,6 +71,9 @@ pub fn run_recompute(
     config: &DecodeConfig,
 ) -> Result<(Vec<GenResult>, DecodeStats)> {
     let vocab = model.config().vocab;
+    // the baseline decodes sequentially; its growing-prefix forwards still
+    // row-shard over the same thread budget (intra-op only)
+    let pool = config.exec.pool();
     let t0 = Instant::now();
     let mut results: Vec<GenResult> = Vec::with_capacity(requests.len());
     let mut ttfts: Vec<f64> = Vec::new();
@@ -87,7 +90,7 @@ pub fn run_recompute(
         let mut finish = FinishReason::MaxTokens;
         let (mut ttft_s, mut last_s) = (0.0f64, 0.0f64);
         loop {
-            let (logits, m) = model.forward_logits(&seq)?;
+            let (logits, m) = model.forward_logits_pooled(&seq, &pool)?;
             macs += m;
             let next = config.sampling.sample(&logits[(seq.len() - 1) * vocab..], &mut rng);
             let now = t0.elapsed().as_secs_f64();
@@ -178,6 +181,7 @@ mod tests {
             sampling: Sampling::Greedy,
             seed: 13,
             eos: None,
+            ..DecodeConfig::default()
         };
         for mode in [ExecMode::Dense, ExecMode::Factored] {
             let model = ServeModel::from_artifact(&cm, mode).unwrap();

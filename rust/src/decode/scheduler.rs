@@ -3,29 +3,38 @@
 //!
 //! The scheduler owns a [`KvCachePool`] of `slots` preallocated caches.
 //! Requests wait in a FIFO; whenever a slot is free the head of the queue
-//! is admitted — its prompt is prefilled through the cache in one chunk
-//! and its first token sampled (time-to-first-token). Active sequences
-//! then advance in *decode rounds*: every round steps each active
-//! sequence by exactly one token, in admission order, so no request can
-//! starve while another streams ahead. Sequences finishing (EOS or their
-//! token budget) are evicted at the end of the round, their slots
-//! released, and the queue drains into the freed slots *mid-run* — the
-//! continuous-batching behavior, observable as
-//! [`DecodeStats::mid_run_admissions`].
+//! is admitted — its prompt is prefilled through the cache (the LM head
+//! sliced to the final position, the only row the sampler reads) and its
+//! first token sampled (time-to-first-token). Active sequences then
+//! advance in *decode rounds*: every round steps each active sequence by
+//! exactly one token, in admission order, so no request can starve while
+//! another streams ahead. Sequences finishing (EOS or their token budget)
+//! are evicted at the end of the round, their slots released, and the
+//! queue drains into the freed slots *mid-run* — the continuous-batching
+//! behavior, observable as [`DecodeStats::mid_run_admissions`].
+//!
+//! Parallelism ([`DecodeConfig::exec`]): prefills of a freshly admitted
+//! batch and the per-sequence steps of a decode round fan out over the
+//! shared [`ExecPool`] (each active sequence owns its cache, so steps are
+//! embarrassingly parallel); leftover thread budget goes to row-sharded
+//! matmuls inside each forward, so request-level and intra-op parallelism
+//! split one knob and can't oversubscribe.
 //!
 //! Determinism: each request samples from its own [`Rng`] stream derived
 //! from `seed ^ id`, so token streams are identical run-to-run and
-//! independent of slot assignment, admission timing, and the slot count.
+//! independent of slot assignment, admission timing, the slot count —
+//! and, because every parallel kernel is bitwise stable, the thread count.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::exec::{ExecConfig, ExecPool};
 use crate::serve::ServeModel;
 use crate::util::{LatencySummary, Rng};
 
-use super::kv::KvCachePool;
+use super::kv::{KvCache, KvCachePool};
 use super::sampler::Sampling;
 use super::stats::DecodeStats;
 
@@ -95,6 +104,12 @@ pub struct DecodeConfig {
     pub seed: u64,
     /// Token that terminates a sequence (`None` disables EOS eviction).
     pub eos: Option<i32>,
+    /// Worker-pool budget shared by sequence-level fan-out and intra-op
+    /// row sharding (token streams are invariant to it).
+    pub exec: ExecConfig,
+    /// Cap on the KV cache pool's preallocated footprint; construction
+    /// fails cleanly when `slots × per-slot bytes` exceeds it.
+    pub max_cache_bytes: Option<usize>,
 }
 
 impl Default for DecodeConfig {
@@ -106,6 +121,8 @@ impl Default for DecodeConfig {
             sampling: Sampling::Greedy,
             seed: 0,
             eos: Some(crate::data::EOS),
+            exec: ExecConfig::default(),
+            max_cache_bytes: None,
         }
     }
 }
@@ -117,20 +134,35 @@ pub(crate) fn request_rng(seed: u64, id: usize) -> Rng {
     Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD0DE))
 }
 
-/// A sequence occupying a slot.
+/// A sequence occupying a slot. Owns its KV cache for the duration of the
+/// run, so decode rounds can step every active sequence on worker threads
+/// without aliasing the pool.
 struct Active {
     id: usize,
     admitted: usize,
-    slot: usize,
-    prompt_len: usize,
+    prompt: Vec<i32>,
     max_new: usize,
     tokens: Vec<i32>,
+    cache: KvCache,
     rng: Rng,
     macs: u128,
     recompute_macs: u128,
     ttft_s: f64,
     last_s: f64,
+    /// Inter-token latency of this sequence's step in the current round.
+    itl_s: f64,
     done: Option<FinishReason>,
+}
+
+impl Active {
+    /// Apply the stopping rules after `token` was appended.
+    fn note_stop(&mut self, eos: Option<i32>, token: i32) {
+        if Some(token) == eos {
+            self.done = Some(FinishReason::Eos);
+        } else if self.tokens.len() >= self.max_new {
+            self.done = Some(FinishReason::MaxTokens);
+        }
+    }
 }
 
 /// KV-cached autoregressive generation over one loaded [`ServeModel`].
@@ -156,7 +188,6 @@ impl<'m> DecodeScheduler<'m> {
     /// id order with the run's aggregate stats.
     pub fn run(&self, requests: Vec<GenRequest>) -> Result<(Vec<GenResult>, DecodeStats)> {
         let cfg = self.model.config();
-        let vocab = cfg.vocab;
         let slots = self.config.slots.max(1);
         let n = requests.len();
         let prompt_tokens: usize = requests.iter().map(|r| r.prompt.len()).sum();
@@ -176,7 +207,11 @@ impl<'m> DecodeScheduler<'m> {
         }
 
         let t0 = Instant::now();
-        let mut pool = KvCachePool::new(cfg, slots, self.config.capacity);
+        let mut pool =
+            KvCachePool::with_cap(cfg, slots, self.config.capacity, self.config.max_cache_bytes)?;
+        let threads = self.config.exec.resolve().max(1);
+        let sampling = self.config.sampling;
+        let eos = self.config.eos;
         let mut pending: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<Active> = Vec::new();
         let mut results: Vec<GenResult> = Vec::with_capacity(n);
@@ -187,10 +222,11 @@ impl<'m> DecodeScheduler<'m> {
 
         loop {
             // ---- admission: drain the queue into free slots ----
-            while active.len() < slots {
+            let mut fresh: Vec<Active> = Vec::new();
+            while active.len() + fresh.len() < slots {
                 let Some(req) = pending.pop_front() else { break };
                 let max_new = req.max_new.unwrap_or(self.config.max_new).max(1);
-                let slot = pool.acquire().expect("free slot under the active-count bound");
+                let cache = pool.acquire().expect("free cache under the active-count bound");
                 let admitted = admitted_count;
                 admitted_count += 1;
                 // continuous batching: an admission after any eviction means
@@ -198,34 +234,48 @@ impl<'m> DecodeScheduler<'m> {
                 if !results.is_empty() {
                     mid_run += 1;
                 }
-                let mut rng = request_rng(self.config.seed, req.id);
-                // prefill phase: the whole prompt in one cached chunk
-                let (logits, macs) = self.model.forward_cached(&req.prompt, pool.slot_mut(slot))?;
-                let last = &logits[(req.prompt.len() - 1) * vocab..];
-                let first = self.config.sampling.sample(last, &mut rng);
-                let now = t0.elapsed().as_secs_f64();
-                ttfts.push(now);
-                let mut a = Active {
+                let rng = request_rng(self.config.seed, req.id);
+                fresh.push(Active {
                     id: req.id,
                     admitted,
-                    slot,
-                    prompt_len: req.prompt.len(),
+                    prompt: req.prompt,
                     max_new,
-                    tokens: vec![first],
+                    tokens: Vec::new(),
+                    cache,
                     rng,
-                    macs,
-                    recompute_macs: self.model.macs_for(req.prompt.len()),
-                    ttft_s: now,
-                    last_s: now,
+                    macs: 0,
+                    recompute_macs: 0,
+                    ttft_s: 0.0,
+                    last_s: 0.0,
+                    itl_s: 0.0,
                     done: None,
-                };
-                if Some(first) == self.config.eos {
-                    a.done = Some(FinishReason::Eos);
-                } else if a.tokens.len() >= max_new {
-                    a.done = Some(FinishReason::MaxTokens);
+                });
+            }
+            if !fresh.is_empty() {
+                // prefill phase: the freshly admitted prompts fan out over
+                // the pool (each owns its cache); leftover thread budget
+                // row-shards the matmuls inside each prefill
+                let n_par = threads.min(fresh.len()).max(1);
+                let outer = ExecPool::new(n_par);
+                let intra = ExecPool::new(threads).split(n_par);
+                outer.try_parallel_for(&mut fresh, |_, a| -> Result<()> {
+                    let (logits, macs) =
+                        self.model.forward_prefill(&a.prompt, &mut a.cache, &intra)?;
+                    let first = sampling.sample(&logits, &mut a.rng);
+                    let now = t0.elapsed().as_secs_f64();
+                    a.macs = macs;
+                    a.recompute_macs = self.model.macs_for(a.prompt.len());
+                    a.ttft_s = now;
+                    a.last_s = now;
+                    a.tokens.push(first);
+                    a.note_stop(eos, first);
+                    Ok(())
+                })?;
+                for a in fresh {
+                    ttfts.push(a.ttft_s);
+                    active.push(a);
+                    peak_active = peak_active.max(active.len());
                 }
-                active.push(a);
-                peak_active = peak_active.max(active.len());
             }
             evict(&mut active, &mut pool, &mut results);
             if active.is_empty() {
@@ -235,23 +285,28 @@ impl<'m> DecodeScheduler<'m> {
                 continue; // every admission finished instantly; admit more
             }
 
-            // ---- one decode round: each active sequence advances a token ----
+            // ---- one decode round: each active sequence advances a token,
+            // all sequences stepping concurrently on the pool ----
             rounds += 1;
-            for a in active.iter_mut() {
+            let n_par = threads.min(active.len()).max(1);
+            let outer = ExecPool::new(n_par);
+            let intra = ExecPool::new(threads).split(n_par);
+            outer.try_parallel_for(&mut active, |_, a| -> Result<()> {
                 let last_tok = *a.tokens.last().expect("active sequences hold >= 1 token");
-                let (logits, m) = self.model.forward_step(last_tok, pool.slot_mut(a.slot))?;
+                let (logits, m) =
+                    self.model.forward_step_pooled(last_tok, &mut a.cache, &intra)?;
                 a.macs += m;
-                a.recompute_macs += self.model.macs_for(a.prompt_len + a.tokens.len());
-                let next = self.config.sampling.sample(&logits, &mut a.rng);
+                a.recompute_macs += self.model.macs_for(a.prompt.len() + a.tokens.len());
+                let next = sampling.sample(&logits, &mut a.rng);
                 let now = t0.elapsed().as_secs_f64();
-                itls.push(now - a.last_s);
+                a.itl_s = now - a.last_s;
                 a.last_s = now;
                 a.tokens.push(next);
-                if Some(next) == self.config.eos {
-                    a.done = Some(FinishReason::Eos);
-                } else if a.tokens.len() >= a.max_new {
-                    a.done = Some(FinishReason::MaxTokens);
-                }
+                a.note_stop(eos, next);
+                Ok(())
+            })?;
+            for a in &active {
+                itls.push(a.itl_s);
             }
             evict(&mut active, &mut pool, &mut results);
         }
@@ -275,17 +330,17 @@ impl<'m> DecodeScheduler<'m> {
     }
 }
 
-/// Move finished sequences out of the active set, releasing their slots.
+/// Move finished sequences out of the active set, releasing their caches.
 fn evict(active: &mut Vec<Active>, pool: &mut KvCachePool, results: &mut Vec<GenResult>) {
     let mut i = 0;
     while i < active.len() {
         if let Some(finish) = active[i].done {
             let a = active.remove(i);
-            pool.release(a.slot);
+            pool.release(a.cache);
             results.push(GenResult {
                 id: a.id,
                 admitted: a.admitted,
-                prompt_len: a.prompt_len,
+                prompt_len: a.prompt.len(),
                 tokens: a.tokens,
                 finish,
                 ttft_s: a.ttft_s,
@@ -318,6 +373,7 @@ mod tests {
             sampling: Sampling::Greedy,
             seed: 7,
             eos: None,
+            ..DecodeConfig::default()
         }
     }
 
@@ -364,6 +420,33 @@ mod tests {
             .collect();
         assert_eq!(runs[0], runs[1], "1 vs 2 slots");
         assert_eq!(runs[0], runs[2], "1 vs 4 slots");
+    }
+
+    #[test]
+    fn token_streams_and_macs_are_thread_count_invariant() {
+        let m = model(ExecMode::Factored, 97);
+        let run = |threads: usize| {
+            let cfg = DecodeConfig { exec: ExecConfig::with_threads(threads), ..config() };
+            let (results, _) = DecodeScheduler::new(&m, cfg).run(requests(5, 7)).unwrap();
+            results.into_iter().map(|r| (r.id, r.tokens, r.macs, r.recompute_macs)).collect::<Vec<_>>()
+        };
+        let serial = run(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(run(threads), serial, "--threads {threads} changed the streams");
+        }
+    }
+
+    #[test]
+    fn cache_cap_rejects_oversized_pools_cleanly() {
+        use crate::decode::kv_slot_bytes;
+        let m = model(ExecMode::Factored, 101);
+        let per_slot = kv_slot_bytes(m.config(), config().capacity);
+        let tight = DecodeConfig { max_cache_bytes: Some(2 * per_slot - 1), ..config() };
+        let err = DecodeScheduler::new(&m, tight).run(requests(2, 4)).unwrap_err();
+        assert!(err.to_string().contains("over budget"), "{err}");
+        let roomy = DecodeConfig { max_cache_bytes: Some(2 * per_slot), ..config() };
+        let (results, _) = DecodeScheduler::new(&m, roomy).run(requests(2, 4)).unwrap();
+        assert_eq!(results.len(), 2, "a pool exactly at the cap still serves");
     }
 
     #[test]

@@ -1,0 +1,409 @@
+//! Unified parallel execution core — the one worker-pool substrate behind
+//! every compute layer of the crate.
+//!
+//! Before this module the hot paths ran on three ad-hoc threading islands
+//! (the ROM pipeline's `thread::scope` over eigendecompositions, the serve
+//! engine's worker threads, and everything else single-threaded). They now
+//! all share one substrate:
+//!
+//! - [`ExecConfig`] — the global `--threads` knob (`0` = all cores),
+//!   threaded through the CLI, [`crate::compress::CompressCtx`],
+//!   [`crate::serve::ServeConfig`], and [`crate::decode::DecodeConfig`].
+//! - [`ExecPool`] — a scoped worker pool with *deterministic* fan-out
+//!   primitives: static contiguous chunking, results written into
+//!   pre-sized slots, so for any pure per-item function the output is
+//!   **bitwise identical for every thread count, including 1**. Callers
+//!   that reduce across items (e.g. covariance accumulation) keep the
+//!   contract by fixing the reduction tree independently of the worker
+//!   count (see `rom::covariance::accumulate_rows_tiled`).
+//!
+//! The determinism contract is the load-bearing design decision: it makes
+//! `--threads` purely a performance knob, asserted (not assumed) by the
+//! cross-thread-count tests in `tests/proptests.rs` and by
+//! `scripts/verify.sh` running the serve/decode self-checks at both
+//! `--threads 1` and `--threads 4`.
+
+/// Worker threads to use when the knob is `0` (auto).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The global parallelism knob. `threads == 0` means "all cores".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecConfig {
+    pub threads: usize,
+}
+
+impl ExecConfig {
+    /// Use every available core.
+    pub fn auto() -> ExecConfig {
+        ExecConfig { threads: 0 }
+    }
+
+    /// Single-threaded execution.
+    pub fn serial() -> ExecConfig {
+        ExecConfig { threads: 1 }
+    }
+
+    /// An explicit thread count (`0` = auto).
+    pub fn with_threads(threads: usize) -> ExecConfig {
+        ExecConfig { threads }
+    }
+
+    /// The concrete worker count this config resolves to.
+    pub fn resolve(&self) -> usize {
+        if self.threads == 0 {
+            auto_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// A pool sized to this config.
+    pub fn pool(&self) -> ExecPool {
+        ExecPool::new(self.threads)
+    }
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig::auto()
+    }
+}
+
+/// A scoped worker pool over `threads` workers.
+///
+/// Workers are spawned per call via `std::thread::scope`, so the pool is a
+/// plain value (`Copy`) that can be shared freely; there is no channel
+/// state and nothing to shut down. Every primitive uses *static*
+/// contiguous chunking — chunk boundaries depend only on the item count
+/// and the pool size, never on timing — and writes results into pre-sized
+/// slots, so output order always equals input order.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecPool {
+    threads: usize,
+}
+
+impl ExecPool {
+    /// A pool over `threads` workers (`0` = all cores).
+    pub fn new(threads: usize) -> ExecPool {
+        ExecPool { threads: if threads == 0 { auto_threads() } else { threads } }
+    }
+
+    /// The single-threaded pool: every primitive degenerates to a plain
+    /// serial loop (no threads are ever spawned).
+    pub fn serial() -> ExecPool {
+        ExecPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split this pool's thread budget across `groups` concurrent users,
+    /// at least one thread each — the anti-oversubscription story when an
+    /// outer fan-out (requests, sequences) nests an inner one (row-sharded
+    /// matmuls).
+    pub fn split(&self, groups: usize) -> ExecPool {
+        ExecPool { threads: (self.threads / groups.max(1)).max(1) }
+    }
+
+    /// Map `f` over `items`, returning results in input order.
+    ///
+    /// Items are split into at most `threads` contiguous chunks; each
+    /// worker writes its results into the pre-sized slot range for its
+    /// chunk, so the output is identical for any thread count.
+    pub fn parallel_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let bounds = chunk_bounds(n, self.threads);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest: &mut [Option<R>] = &mut out[..];
+            for &(start, end) in &bounds {
+                let (slots, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                let chunk = &items[start..end];
+                scope.spawn(move || {
+                    for (off, (slot, item)) in slots.iter_mut().zip(chunk).enumerate() {
+                        *slot = Some(f(start + off, item));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("exec worker filled every slot")).collect()
+    }
+
+    /// Run `f(index, &mut item)` over every item, chunked contiguously
+    /// across the workers.
+    pub fn parallel_for<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            for (i, t) in items.iter_mut().enumerate() {
+                f(i, t);
+            }
+            return;
+        }
+        let bounds = chunk_bounds(n, self.threads);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest: &mut [T] = items;
+            for &(start, end) in &bounds {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                scope.spawn(move || {
+                    for (off, t) in chunk.iter_mut().enumerate() {
+                        f(start + off, t);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Fallible [`ExecPool::parallel_for`]: every chunk stops at its first
+    /// error; the first error in *chunk order* is returned (deterministic
+    /// for a deterministic `f`). Items after a failing one in the same
+    /// chunk are left untouched.
+    pub fn try_parallel_for<T, E, F>(&self, items: &mut [T], f: F) -> Result<(), E>
+    where
+        T: Send,
+        E: Send,
+        F: Fn(usize, &mut T) -> Result<(), E> + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            for (i, t) in items.iter_mut().enumerate() {
+                f(i, t)?;
+            }
+            return Ok(());
+        }
+        let bounds = chunk_bounds(n, self.threads);
+        let mut outcomes: Vec<Result<(), E>> = Vec::with_capacity(bounds.len());
+        outcomes.resize_with(bounds.len(), || Ok(()));
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest: &mut [T] = items;
+            for (&(start, end), outcome) in bounds.iter().zip(outcomes.iter_mut()) {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                scope.spawn(move || {
+                    for (off, t) in chunk.iter_mut().enumerate() {
+                        if let Err(e) = f(start + off, t) {
+                            *outcome = Err(e);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        for o in outcomes {
+            o?;
+        }
+        Ok(())
+    }
+
+    /// Partition `data` into unit-aligned contiguous spans (one per
+    /// worker) and run `f(first_unit_index, span)` on each — the substrate
+    /// of the row-sharded matmul kernels, where `unit` is the output row
+    /// width. `data.len()` must be a multiple of `unit`.
+    pub fn parallel_chunks<T, F>(&self, data: &mut [T], unit: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(unit > 0, "parallel_chunks: zero unit");
+        assert_eq!(data.len() % unit, 0, "parallel_chunks: {} % {unit} != 0", data.len());
+        let units = data.len() / unit;
+        if self.threads <= 1 || units <= 1 {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            return;
+        }
+        let bounds = chunk_bounds(units, self.threads);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest: &mut [T] = data;
+            for &(start, end) in &bounds {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((end - start) * unit);
+                rest = tail;
+                scope.spawn(move || f(start, chunk));
+            }
+        });
+    }
+
+    /// Run `f(worker_index)` once per worker concurrently, collecting the
+    /// results in worker order — the shape of a shared-queue worker loop
+    /// (the serve engine's request workers).
+    pub fn broadcast<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.threads <= 1 {
+            return vec![f(0)];
+        }
+        let mut out: Vec<Option<R>> = Vec::with_capacity(self.threads);
+        out.resize_with(self.threads, || None);
+        std::thread::scope(|scope| {
+            let f = &f;
+            for (w, slot) in out.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    *slot = Some(f(w));
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("broadcast worker finished")).collect()
+    }
+}
+
+/// Static chunk boundaries: `min(parts, n)` contiguous chunks whose sizes
+/// differ by at most one, in index order. Depends only on `(n, parts)`.
+fn chunk_bounds(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(n).max(1);
+    let (base, rem) = (n / parts, n % parts);
+    let mut bounds = Vec::with_capacity(parts);
+    let mut start = 0;
+    for w in 0..parts {
+        let len = base + usize::from(w < rem);
+        bounds.push((start, start + len));
+        start += len;
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_bounds_cover_exactly_once() {
+        for n in [0usize, 1, 2, 5, 7, 64, 100] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let b = chunk_bounds(n, parts);
+                assert!(!b.is_empty());
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b.last().unwrap().1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous");
+                }
+                for &(s, e) in &b {
+                    assert!(n == 0 || e > s, "no empty chunk for n={n} parts={parts}");
+                }
+                // sizes differ by at most one
+                let sizes: Vec<usize> = b.iter().map(|&(s, e)| e - s).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "n={n} parts={parts}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_for_any_thread_count() {
+        let items: Vec<usize> = (0..37).collect();
+        let want: Vec<usize> = items.iter().map(|x| x * x + 1).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let pool = ExecPool::new(threads);
+            let got = pool.parallel_map(&items, |i, &x| {
+                assert_eq!(i, x, "index matches item position");
+                x * x + 1
+            });
+            assert_eq!(got, want, "threads={threads}");
+        }
+        // empty and singleton inputs
+        let empty: Vec<usize> = Vec::new();
+        assert!(ExecPool::new(4).parallel_map(&empty, |_, &x: &usize| x).is_empty());
+        assert_eq!(ExecPool::new(4).parallel_map(&[9usize], |_, &x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn parallel_for_touches_every_item_once() {
+        for threads in [1usize, 2, 5, 16] {
+            let mut items = vec![0u32; 23];
+            ExecPool::new(threads).parallel_for(&mut items, |i, v| *v += i as u32 + 1);
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn try_parallel_for_returns_first_error_in_chunk_order() {
+        for threads in [1usize, 2, 4] {
+            let mut items: Vec<usize> = (0..20).collect();
+            let err = ExecPool::new(threads)
+                .try_parallel_for(&mut items, |i, _| {
+                    if i == 3 || i == 17 {
+                        Err(i)
+                    } else {
+                        Ok(())
+                    }
+                })
+                .unwrap_err();
+            assert_eq!(err, 3, "threads={threads}: earliest chunk's error wins");
+            let ok: Result<(), usize> =
+                ExecPool::new(threads).try_parallel_for(&mut items, |_, _| Ok(()));
+            assert!(ok.is_ok());
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_are_unit_aligned_and_disjoint() {
+        let unit = 5;
+        for threads in [1usize, 2, 3, 7] {
+            let mut data = vec![0usize; 9 * unit];
+            ExecPool::new(threads).parallel_chunks(&mut data, unit, |first, chunk| {
+                assert_eq!(chunk.len() % unit, 0);
+                for (off, v) in chunk.iter_mut().enumerate() {
+                    *v = first * unit + off; // absolute flat index
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i, "threads={threads}");
+            }
+        }
+        // empty data is a no-op
+        let mut empty: Vec<usize> = Vec::new();
+        ExecPool::new(4).parallel_chunks(&mut empty, 3, |_, _| panic!("no work"));
+    }
+
+    #[test]
+    fn broadcast_runs_every_worker() {
+        let hits = AtomicUsize::new(0);
+        let ids = ExecPool::new(4).broadcast(|w| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            w
+        });
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        assert_eq!(ExecPool::serial().broadcast(|w| w), vec![0]);
+    }
+
+    #[test]
+    fn config_resolution_and_split() {
+        assert_eq!(ExecConfig::serial().resolve(), 1);
+        assert_eq!(ExecConfig::with_threads(3).resolve(), 3);
+        assert!(ExecConfig::auto().resolve() >= 1);
+        assert_eq!(ExecConfig::default(), ExecConfig::auto());
+        assert_eq!(ExecPool::new(0).threads(), auto_threads());
+        let pool = ExecPool::new(8);
+        assert_eq!(pool.split(2).threads(), 4);
+        assert_eq!(pool.split(3).threads(), 2);
+        assert_eq!(pool.split(100).threads(), 1);
+        assert_eq!(pool.split(0).threads(), 8);
+    }
+}

@@ -11,6 +11,12 @@
 //! re-parameterization — natively.
 //!
 //! Module map (see DESIGN.md for the full inventory):
+//! - [`exec`] — the unified parallel execution core: [`exec::ExecPool`]
+//!   (scoped worker pool with deterministic `parallel_for`/`parallel_map`
+//!   fan-out — static chunking into pre-sized slots, bitwise-identical
+//!   output for any thread count) and the global [`exec::ExecConfig`]
+//!   `--threads` knob shared by the matmul kernels, the ROM pipeline,
+//!   the serve engine, and the decode scheduler
 //! - [`linalg`] — dense matrix substrate + symmetric eigensolvers
 //! - [`tensor`] — named tensors and the `.rtz` interchange container
 //! - [`runtime`] — PJRT executable loading/caching/marshalling
@@ -42,6 +48,7 @@ pub mod coordinator;
 pub mod data;
 pub mod decode;
 pub mod eval;
+pub mod exec;
 pub mod linalg;
 pub mod model;
 pub mod prune;

@@ -4,6 +4,15 @@
 //! and the Rust-side covariance fallback (`YᵀY` on calibration captures).
 //! The kernel is an i-k-j loop order (streaming the B rows) with L1-sized
 //! blocking — no SIMD intrinsics, but the loop body autovectorizes.
+//!
+//! Every kernel also has a row-sharded `par_*` twin over an
+//! [`ExecPool`]: the output rows are statically partitioned across the
+//! workers and each shard runs the *same* serial kernel, so — because
+//! every output row is computed independently of which rows share its
+//! shard — the parallel results are bitwise identical to the serial ones
+//! for any thread count.
+
+use crate::exec::ExecPool;
 
 use super::matrix::Matrix;
 
@@ -11,11 +20,21 @@ use super::matrix::Matrix;
 /// inner panels L1-resident).
 const BLOCK: usize = 64;
 
-/// `a @ b` for f64 matrices.
-pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut out = Matrix::zeros(m, n);
+/// Minimum multiply-accumulates (`m·k·n`) before a `par_*` kernel fans
+/// out: below this, scoped-thread spawn overhead (~tens of µs) rivals the
+/// matmul itself — the skinny factored matmuls stay serial and the outer
+/// request/sequence-level fan-out carries the parallelism. Purely a
+/// performance cutoff; results are identical either way.
+const PAR_MIN_MACS: usize = 1 << 18;
+
+/// The blocked f64 kernel over row-major slices: `out += a @ b` with
+/// `out` pre-zeroed. Row `i` of the output depends only on row `i` of `a`
+/// (k/j blocking is row-independent), which is what makes row sharding
+/// exact.
+fn matmul_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, out: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
     for i0 in (0..m).step_by(BLOCK) {
         let i1 = (i0 + BLOCK).min(m);
         for k0 in (0..k).step_by(BLOCK) {
@@ -23,13 +42,14 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
             for j0 in (0..n).step_by(BLOCK) {
                 let j1 = (j0 + BLOCK).min(n);
                 for i in i0..i1 {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n + j0..i * n + j1];
                     for kk in k0..k1 {
-                        let aik = a[(i, kk)];
+                        let aik = arow[kk];
                         if aik == 0.0 {
                             continue;
                         }
-                        let brow = &b.row(kk)[j0..j1];
-                        let orow = &mut out.row_mut(i)[j0..j1];
+                        let brow = &b[kk * n + j0..kk * n + j1];
                         for (o, &bv) in orow.iter_mut().zip(brow) {
                             *o += aik * bv;
                         }
@@ -38,15 +58,39 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
+}
+
+/// `a @ b` for f64 matrices.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    matmul_into(a.data(), b.data(), m, k, n, out.data_mut());
     out
 }
 
-/// `a @ b` over f32 slices (row-major), f32 accumulation into f64 rows.
-/// Shapes: a is (m, k), b is (k, n); returns (m, n) f32.
-pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+/// Row-sharded [`matmul`]: output rows are partitioned across the pool's
+/// workers, each shard running the serial kernel — bitwise identical to
+/// [`matmul`] for any thread count.
+pub fn par_matmul(a: &Matrix, b: &Matrix, pool: &ExecPool) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if pool.threads() <= 1 || m <= 1 || n == 0 || m * k * n < PAR_MIN_MACS {
+        return matmul(a, b);
+    }
+    let mut out = Matrix::zeros(m, n);
+    pool.parallel_chunks(out.data_mut(), n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_into(&a.data()[row0 * k..(row0 + rows) * k], b.data(), rows, k, n, chunk);
+    });
+    out
+}
+
+/// The blocked f32 kernel over row-major slices (`out` pre-zeroed).
+fn matmul_f32_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
     for i0 in (0..m).step_by(BLOCK) {
         let i1 = (i0 + BLOCK).min(m);
         for k0 in (0..k).step_by(BLOCK) {
@@ -67,6 +111,37 @@ pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32
             }
         }
     }
+}
+
+/// `a @ b` over f32 slices (row-major), f32 accumulation.
+/// Shapes: a is (m, k), b is (k, n); returns (m, n) f32.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    matmul_f32_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// Row-sharded [`matmul_f32`] — bitwise identical for any thread count.
+pub fn par_matmul_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &ExecPool,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    if pool.threads() <= 1 || m <= 1 || n == 0 || m * k * n < PAR_MIN_MACS {
+        return matmul_f32(a, b, m, k, n);
+    }
+    let mut out = vec![0.0f32; m * n];
+    pool.parallel_chunks(&mut out, n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_f32_into(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, chunk);
+    });
     out
 }
 
@@ -91,16 +166,13 @@ pub fn matmul_transb_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> 
     out
 }
 
-/// Cache-blocked `a @ bᵀ`: same contract as [`matmul_transb_f32`], tiled
-/// over (j, k) so a `BLOCK`-wide panel of `b` rows stays L1-resident while
-/// every row of `a` streams past it. This is the serving hot path: the
-/// factored form applies two *skinny* weights (`n = r` or `k = r` with
-/// `r ≪ d`), where the j-panel of `b` fits in cache whole and the k-tiling
-/// keeps long reduction dims from thrashing it.
-pub fn matmul_transb_blocked_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
-    let mut out = vec![0.0f32; m * n];
+/// The blocked transposed-B f32 kernel over row-major slices (`out`
+/// pre-zeroed). Output row `i` depends only on input row `i` — the basis
+/// of the row-sharded serving kernel.
+fn matmul_transb_blocked_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
     for j0 in (0..n).step_by(BLOCK) {
         let j1 = (j0 + BLOCK).min(n);
         for k0 in (0..k).step_by(BLOCK) {
@@ -119,6 +191,46 @@ pub fn matmul_transb_blocked_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: us
             }
         }
     }
+}
+
+/// Cache-blocked `a @ bᵀ`: same contract as [`matmul_transb_f32`], tiled
+/// over (j, k) so a `BLOCK`-wide panel of `b` rows stays L1-resident while
+/// every row of `a` streams past it. This is the serving hot path: the
+/// factored form applies two *skinny* weights (`n = r` or `k = r` with
+/// `r ≪ d`), where the j-panel of `b` fits in cache whole and the k-tiling
+/// keeps long reduction dims from thrashing it.
+pub fn matmul_transb_blocked_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    matmul_transb_blocked_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// Row-sharded [`matmul_transb_blocked_f32`]: the output rows of
+/// `y = x·Wᵀ` are statically partitioned across the pool's workers (each
+/// shard running the serial blocked kernel on its row range), so batched
+/// prefill and serve forwards scale with cores while staying bitwise
+/// identical to the serial kernel for any thread count — including the
+/// degenerate single-row decode step, which simply runs serial.
+pub fn par_matmul_transb_blocked_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &ExecPool,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    if pool.threads() <= 1 || m <= 1 || n == 0 || m * k * n < PAR_MIN_MACS {
+        return matmul_transb_blocked_f32(a, b, m, k, n);
+    }
+    let mut out = vec![0.0f32; m * n];
+    pool.parallel_chunks(&mut out, n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_transb_blocked_into(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, chunk);
+    });
     out
 }
 
@@ -190,6 +302,44 @@ mod tests {
             let want = matmul_transb_f32(&a, &b, m, k, n);
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-4, "{m}x{k}x{n}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_kernels_match_serial_bitwise_for_any_thread_count() {
+        let mut rng = Rng::new(7);
+        // shapes on both sides of PAR_MIN_MACS: the small ones exercise
+        // the serial fallback, (96,64,64) and (129,70,40) genuinely shard
+        for &(m, k, n) in &[
+            (1usize, 3usize, 4usize),
+            (5, 70, 3),
+            (33, 17, 65),
+            (129, 40, 10),
+            (96, 64, 64),
+            (129, 70, 40),
+        ] {
+            let af: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let bf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+            let a64 = Matrix::from_f32(m, k, &af);
+            let b64 = Matrix::from_f32(k, n, &bf);
+            let want_f32 = matmul_f32(&af, &bf, m, k, n);
+            let want_tb = matmul_transb_blocked_f32(&af, &bt, m, k, n);
+            let want_f64 = matmul(&a64, &b64);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = ExecPool::new(threads);
+                assert_eq!(par_matmul_f32(&af, &bf, m, k, n, &pool), want_f32, "{m}x{k}x{n} t{threads}");
+                assert_eq!(
+                    par_matmul_transb_blocked_f32(&af, &bt, m, k, n, &pool),
+                    want_tb,
+                    "{m}x{k}x{n} t{threads}"
+                );
+                assert_eq!(
+                    par_matmul(&a64, &b64, &pool).data(),
+                    want_f64.data(),
+                    "{m}x{k}x{n} t{threads}"
+                );
             }
         }
     }

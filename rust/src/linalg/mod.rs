@@ -15,5 +15,8 @@ pub mod svd;
 pub use eigen::{eigh, EigenDecomposition};
 pub use jacobi::eigh_jacobi;
 pub use matrix::Matrix;
-pub use matmul::{matmul, matmul_f32, matmul_transb_blocked_f32, matmul_transb_f32};
+pub use matmul::{
+    matmul, matmul_f32, matmul_transb_blocked_f32, matmul_transb_f32, par_matmul, par_matmul_f32,
+    par_matmul_transb_blocked_f32,
+};
 pub use svd::{svd, Svd};

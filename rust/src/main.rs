@@ -10,10 +10,11 @@
 //! repro compress --ckpt ckpt.rtz [--method NAME] [--budget B]
 //! repro sweep    --ckpt ckpt.rtz [--methods a,b,c] [--budget B]
 //! repro eval     --ckpt ckpt.rtz [--ppl]
-//! repro serve    --ckpt artifact.rtz [--mode dense|factored] | --self-check
-//! repro bench-serve [--ckpt artifact.rtz] [--budget B] [--json FILE]
+//! repro serve    --ckpt artifact.rtz [--mode dense|factored] [--threads N] | --self-check
+//! repro bench-serve [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
 //! repro generate --ckpt artifact.rtz [--prompt TEXT | --requests N] | --self-check
-//! repro bench-decode [--ckpt artifact.rtz] [--budget B] [--json FILE]
+//! repro bench-decode [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
+//! repro bench-parallel [--ckpt artifact.rtz] [--threads N] [--json FILE]
 //! repro tables   --ckpt ckpt.rtz [--table 1|2|3|4|all]
 //! repro cost     --ckpt ckpt.rtz
 //! ```
@@ -34,6 +35,7 @@ use llm_rom::compress::{self, CompressedModel, Provenance};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
 use llm_rom::data::CalibSource;
 use llm_rom::decode::{self, DecodeConfig, DecodeScheduler, GenRequest, KvCache, Sampling};
+use llm_rom::exec::ExecConfig;
 use llm_rom::model::macs::{self, CompressionAccounting};
 use llm_rom::model::{ModelConfig, ParamStore};
 use llm_rom::rom::ModuleSchedule;
@@ -75,6 +77,10 @@ struct Cmd {
 }
 
 const SEED: Flag = flag("seed", "N", "RNG seed (synthetic workloads, sampling)");
+const THREADS: Flag =
+    flag("threads", "N", "worker-pool threads (0 = all cores; results are identical for any N)");
+const KV_CAP: Flag =
+    flag("kv-cap-mb", "MB", "fail if the KV cache pool would preallocate more than MB megabytes");
 const SERVE_REQUESTS: Flag = flag("requests", "N", "synthetic requests to serve");
 const SERVE_SEQ: Flag = flag("seq", "N", "tokens per synthetic request");
 const SERVE_WORKERS: Flag = flag("workers", "N", "serving worker threads");
@@ -114,6 +120,7 @@ static COMMANDS: &[Cmd] = &[
             ROWS,
             SEQ,
             SOURCE,
+            THREADS,
             SEED,
         ],
     },
@@ -129,6 +136,7 @@ static COMMANDS: &[Cmd] = &[
             SEQ,
             SOURCE,
             PER_TASK,
+            THREADS,
             SEED,
         ],
     },
@@ -147,6 +155,7 @@ static COMMANDS: &[Cmd] = &[
             SERVE_SEQ,
             SERVE_WORKERS,
             SERVE_BATCH,
+            THREADS,
             switch(
                 "self-check",
                 "build a mini artifact offline, serve it both ways, verify logits + MACs",
@@ -157,7 +166,17 @@ static COMMANDS: &[Cmd] = &[
     Cmd {
         name: "bench-serve",
         summary: "dense vs factored serving comparison on one artifact",
-        flags: &[CKPT, BUDGET, SERVE_REQUESTS, SERVE_SEQ, SERVE_WORKERS, SERVE_BATCH, SEED, JSON_OUT],
+        flags: &[
+            CKPT,
+            BUDGET,
+            SERVE_REQUESTS,
+            SERVE_SEQ,
+            SERVE_WORKERS,
+            SERVE_BATCH,
+            THREADS,
+            SEED,
+            JSON_OUT,
+        ],
     },
     Cmd {
         name: "generate",
@@ -172,6 +191,8 @@ static COMMANDS: &[Cmd] = &[
             TEMP,
             TOP_K,
             SLOTS,
+            THREADS,
+            KV_CAP,
             switch(
                 "self-check",
                 "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC accounting",
@@ -182,7 +203,23 @@ static COMMANDS: &[Cmd] = &[
     Cmd {
         name: "bench-decode",
         summary: "recompute vs KV-cached decode comparison (dense + factored)",
-        flags: &[CKPT, BUDGET, SERVE_REQUESTS, PROMPT_LEN, MAX_NEW, SLOTS, SEED, JSON_OUT],
+        flags: &[CKPT, BUDGET, SERVE_REQUESTS, PROMPT_LEN, MAX_NEW, SLOTS, THREADS, SEED, JSON_OUT],
+    },
+    Cmd {
+        name: "bench-parallel",
+        summary: "1 vs N-thread scaling on the factored path (serve/decode/compress)",
+        flags: &[
+            CKPT,
+            BUDGET,
+            SERVE_REQUESTS,
+            SERVE_SEQ,
+            PROMPT_LEN,
+            MAX_NEW,
+            SLOTS,
+            THREADS,
+            SEED,
+            JSON_OUT,
+        ],
     },
     Cmd {
         name: "tables",
@@ -330,11 +367,17 @@ fn run() -> Result<()> {
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
         "generate" => cmd_generate(&artifacts, &args),
         "bench-decode" => cmd_bench_decode(&artifacts, &args),
+        "bench-parallel" => cmd_bench_parallel(&artifacts, &args),
         "tables" => cmd_tables(&artifacts, &args),
         "cost" => cmd_cost(&artifacts, &args),
         "spectrum" => cmd_spectrum(&artifacts, &args),
         other => bail!("unknown subcommand `{other}` (try `repro help`)"),
     }
+}
+
+/// The `--threads` knob as an [`ExecConfig`] (absent or 0 = all cores).
+fn exec_from(args: &Args) -> Result<ExecConfig> {
+    Ok(ExecConfig::with_threads(args.parse_num("threads", 0usize)?))
 }
 
 fn xcfg_from(args: &Args) -> Result<ExperimentConfig> {
@@ -350,6 +393,7 @@ fn xcfg_from(args: &Args) -> Result<ExperimentConfig> {
         calib_seq: args.parse_num("seq", d.calib_seq)?,
         eval_per_task: args.parse_num("per-task", d.eval_per_task)?,
         calib_source,
+        exec: exec_from(args)?,
         ..d
     })
 }
@@ -546,8 +590,9 @@ fn serve_cfg(artifacts: &str) -> ModelConfig {
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
+    let exec = exec_from(args)?;
     if args.get("self-check").is_some() {
-        return serve_self_check(seed);
+        return serve_self_check(seed, exec);
     }
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
@@ -563,12 +608,13 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let model = ServeModel::from_artifact(&cm, mode)?;
     println!(
         "serving {path} [{}]: {}/{} matrices factored, {requests} requests x {seq} tokens, \
-         {workers} workers (batch {batch})",
+         {workers} workers (batch {batch}, {} threads)",
         mode.name(),
         model.n_factored(),
         7 * cfg.n_layers,
+        exec.resolve(),
     );
-    let engine = ServeEngine::new(model, ServeConfig { workers, max_batch: batch });
+    let engine = ServeEngine::new(model, ServeConfig { workers, max_batch: batch, exec });
     let (results, stats) = engine.run(serve::synth_requests(&cfg, requests, seq, seed))?;
     println!(
         "served {} requests ({} tokens) in {:.3}s — {:.0} tok/s, {:.1} µs/token, \
@@ -604,8 +650,11 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// weight-space ROM at budget 0.5), round-trip it through `.rtz`, and
 /// serve it in both modes — asserting the factored path matches dense
 /// logits to ≤1e-4 and executes exactly the analytically-accounted (and
-/// strictly fewer) MACs. The CI smoke test behind `scripts/verify.sh`.
-fn serve_self_check(seed: u64) -> Result<()> {
+/// strictly fewer) MACs. The CI smoke test behind `scripts/verify.sh`,
+/// which runs it at `--threads 1` and `--threads 4` and diffs the output
+/// (everything printed is deterministic, so any thread-count divergence
+/// fails the gate).
+fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
     let cfg = serve::demo_config();
     let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0x5EED)?;
     anyhow::ensure!(!cm.factors.is_empty(), "demo artifact carries no factors");
@@ -638,7 +687,7 @@ fn serve_self_check(seed: u64) -> Result<()> {
     for mode in [ExecMode::Dense, ExecMode::Factored] {
         let engine = ServeEngine::new(
             ServeModel::from_artifact(&loaded, mode)?,
-            ServeConfig { workers: 2, max_batch: 2 },
+            ServeConfig { workers: 2, max_batch: 2, exec },
         );
         let (results, stats) = engine.run(requests.clone())?;
         outputs.push((results.into_iter().map(|r| r.logits).collect(), stats.macs));
@@ -679,13 +728,17 @@ fn serve_self_check(seed: u64) -> Result<()> {
     Ok(())
 }
 
-fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
+/// Artifact for a `bench-*` command: `--ckpt` when given (plain
+/// checkpoints wrap as dense identity artifacts), otherwise a synthetic
+/// mini artifact at `--budget`. `salt` keeps each bench's fallback
+/// artifact on its own seed stream.
+fn bench_artifact(artifacts: &str, args: &Args, salt: u64) -> Result<(CompressedModel, String)> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let budget: f64 = args.parse_num("budget", 0.5)?;
-    let (cm, label) = match args.get("ckpt") {
+    match args.get("ckpt") {
         Some(path) => {
             let cfg = serve_cfg(artifacts);
-            (CompressedModel::load(&cfg, path)?, path.to_string())
+            Ok((load_artifact_or_ckpt(&cfg, path)?, path.to_string()))
         }
         None => {
             let cfg = ModelConfig::mini();
@@ -694,22 +747,29 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
                  (rom-weight-svd @ {:.0}% budget)",
                 budget * 100.0
             );
-            (serve::demo_artifact(&cfg, budget, seed ^ 0xBE7C)?, format!("mini@{budget:.2}"))
+            Ok((serve::demo_artifact(&cfg, budget, seed ^ salt)?, format!("mini@{budget:.2}")))
         }
-    };
+    }
+}
+
+fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let (cm, label) = bench_artifact(artifacts, args, 0xBE7C)?;
     let requests: usize = args.parse_num("requests", 8)?;
     let seq: usize = args.parse_num("seq", 32)?;
     let workers: usize = args.parse_num("workers", 2)?;
     let batch: usize = args.parse_num("batch", 4)?;
+    let exec = exec_from(args)?;
     println!(
         "bench-serve {label}: {requests} requests x {seq} tokens, {workers} workers \
-         (batch {batch})"
+         (batch {batch}, {} threads)",
+        exec.resolve()
     );
     let bench = llm_rom::coordinator::serve_bench(
         &cm,
         requests,
         seq,
-        ServeConfig { workers, max_batch: batch },
+        ServeConfig { workers, max_batch: batch, exec },
         seed,
     )?;
     println!("{}", bench.format());
@@ -761,8 +821,9 @@ fn load_artifact_or_ckpt(cfg: &ModelConfig, path: &str) -> Result<CompressedMode
 fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     use llm_rom::data::{Tokenizer, BOS};
     let seed: u64 = args.parse_num("seed", 0)?;
+    let exec = exec_from(args)?;
     if args.get("self-check").is_some() {
-        return decode_self_check(seed);
+        return decode_self_check(seed, exec);
     }
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
@@ -776,6 +837,8 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     let temp: f32 = args.parse_num("temp", 0.0)?;
     let top_k: usize = args.parse_num("top-k", 0)?;
     let slots: usize = args.parse_num("slots", 4)?;
+    let cap_mb: usize = args.parse_num("kv-cap-mb", 0)?;
+    let max_cache_bytes = if cap_mb > 0 { Some(cap_mb * 1_000_000) } else { None };
     let sampling = Sampling::parse(temp, top_k)?;
 
     match args.get("prompt") {
@@ -790,6 +853,8 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 max_new,
                 sampling,
                 seed,
+                exec,
+                max_cache_bytes,
                 ..DecodeConfig::default()
             };
             let scheduler = DecodeScheduler::new(&model, config);
@@ -821,13 +886,16 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 max_new,
                 sampling,
                 seed,
+                exec,
+                max_cache_bytes,
                 ..DecodeConfig::default()
             };
             println!(
                 "generate [{}] [{}]: {n} synthetic requests x {prompt_len} prompt tokens, \
-                 max-new {max_new}, {slots} slots",
+                 max-new {max_new}, {slots} slots, {} threads",
                 mode.name(),
                 sampling.label(),
+                exec.resolve(),
             );
             let reqs = decode::synth_gen_requests(&cfg, n, prompt_len, seed);
             let scheduler = DecodeScheduler::new(&model, config);
@@ -879,8 +947,10 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
 ///    request, and factored-KV executes strictly fewer MACs than
 ///    dense-recompute.
 ///
-/// Run by `scripts/verify.sh` next to `repro serve --self-check`.
-fn decode_self_check(seed: u64) -> Result<()> {
+/// Run by `scripts/verify.sh` next to `repro serve --self-check`, at
+/// `--threads 1` and `--threads 4` with an output diff (everything printed
+/// is deterministic, so thread-count divergence fails the gate).
+fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
     let cfg = serve::demo_config();
     let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0xDECD)?;
     anyhow::ensure!(!cm.factors.is_empty(), "demo artifact carries no factors");
@@ -924,6 +994,8 @@ fn decode_self_check(seed: u64) -> Result<()> {
         sampling: Sampling::Greedy,
         seed,
         eos: None,
+        exec,
+        ..DecodeConfig::default()
     };
     let mut totals: Vec<(u128, u128)> = Vec::new(); // (cached, recompute) per mode
     for (label, model, acc) in [
@@ -988,33 +1060,56 @@ fn decode_self_check(seed: u64) -> Result<()> {
 
 fn cmd_bench_decode(artifacts: &str, args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
-    let budget: f64 = args.parse_num("budget", 0.5)?;
-    let (cm, label) = match args.get("ckpt") {
-        Some(path) => {
-            let cfg = serve_cfg(artifacts);
-            (load_artifact_or_ckpt(&cfg, path)?, path.to_string())
-        }
-        None => {
-            let cfg = ModelConfig::mini();
-            println!(
-                "no --ckpt: benchmarking a synthetic mini artifact \
-                 (rom-weight-svd @ {:.0}% budget)",
-                budget * 100.0
-            );
-            (serve::demo_artifact(&cfg, budget, seed ^ 0xDEC0)?, format!("mini@{budget:.2}"))
-        }
-    };
+    let (cm, label) = bench_artifact(artifacts, args, 0xDEC0)?;
     let requests: usize = args.parse_num("requests", 6)?;
     let prompt_len: usize = args.parse_num("prompt-len", 16)?;
     let max_new: usize = args.parse_num("max-new", 24)?;
-    let slots: usize = args.parse_num("slots", 3)?;
+    // 4 slots: 6 requests still admit mid-run, and decode rounds carry
+    // enough concurrent sequences to scale on small core counts
+    let slots: usize = args.parse_num("slots", 4)?;
+    let exec = exec_from(args)?;
     println!(
         "bench-decode {label}: {requests} requests x {prompt_len} prompt tokens, \
-         max-new {max_new}, {slots} slots"
+         max-new {max_new}, {slots} slots, {} threads",
+        exec.resolve()
     );
     let bench =
-        llm_rom::coordinator::decode_bench(&cm, requests, prompt_len, max_new, slots, seed)?;
+        llm_rom::coordinator::decode_bench(&cm, requests, prompt_len, max_new, slots, exec, seed)?;
     println!("{}", bench.format());
+    write_bench_json(args, &bench.to_json())?;
+    Ok(())
+}
+
+/// `repro bench-parallel`: the 1-vs-N-thread scaling comparison on the
+/// factored path (serve throughput, decode throughput, offline compress
+/// wall-clock), failing hard if any output moves with the thread count.
+/// `make bench` writes it as `BENCH_parallel.json`.
+fn cmd_bench_parallel(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let (cm, label) = bench_artifact(artifacts, args, 0x9A2A)?;
+    let requests: usize = args.parse_num("requests", 8)?;
+    let seq: usize = args.parse_num("seq", 32)?;
+    let prompt_len: usize = args.parse_num("prompt-len", 16)?;
+    let max_new: usize = args.parse_num("max-new", 24)?;
+    let slots: usize = args.parse_num("slots", 4)?;
+    let threads: usize = match args.parse_num("threads", 0usize)? {
+        0 => ExecConfig::auto().resolve().max(2),
+        t => t,
+    };
+    println!(
+        "bench-parallel {label}: {requests} requests (serve x{seq} tok, decode \
+         x{prompt_len}+{max_new} tok, {slots} slots), 1 vs {threads} threads"
+    );
+    let bench = llm_rom::coordinator::parallel_bench(
+        &cm, requests, seq, prompt_len, max_new, slots, threads, seed,
+    )?;
+    print!("{}", bench.format());
+    anyhow::ensure!(
+        bench.serve_logits_match && bench.decode_streams_match,
+        "thread-count divergence: logits identical = {}, streams identical = {}",
+        bench.serve_logits_match,
+        bench.decode_streams_match
+    );
     write_bench_json(args, &bench.to_json())?;
     Ok(())
 }

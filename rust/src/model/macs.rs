@@ -126,6 +126,12 @@ pub fn decode_step_macs(cfg: &ModelConfig, acc: &CompressionAccounting, pos: usi
 /// Cost report for one KV-cached generation: `prompt` prefill tokens, then
 /// `generated` sampled tokens (the first comes free with the prefill's
 /// last logits, the rest are single-token steps).
+///
+/// Prefill convention: the scheduler samples only the prompt's final
+/// position, so the serving prefill (`ServeModel::forward_prefill`) slices
+/// the LM-head matmul to that row — `prefill_macs` bills the `vocab·d`
+/// head **once**, while every prompt position still pays its weight and
+/// exact causal attention MACs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DecodeMacsReport {
     pub prompt: usize,
@@ -174,7 +180,13 @@ pub fn decode_report(
     prompt: usize,
     generated: usize,
 ) -> DecodeMacsReport {
-    let prefill_macs = (0..prompt).map(|p| decode_step_macs(cfg, acc, p)).sum();
+    // last-position-only prefill head: per position, a cached step minus
+    // its head; plus one head for the row the scheduler actually samples
+    let head = (cfg.vocab * cfg.d_model) as u128;
+    let prefill_macs = (0..prompt)
+        .map(|p| decode_step_macs(cfg, acc, p) - head)
+        .sum::<u128>()
+        + if prompt > 0 { head } else { 0 };
     let decode_macs = (0..generated.saturating_sub(1))
         .map(|k| decode_step_macs(cfg, acc, prompt + k))
         .sum();
@@ -279,7 +291,11 @@ mod tests {
         let cfg = ModelConfig::mini();
         let acc = CompressionAccounting::dense();
         let rep = decode_report(&cfg, &acc, 16, 8);
-        let prefill: u128 = (0..16).map(|p| decode_step_macs(&cfg, &acc, p)).sum();
+        // prefill: per-position cached-step MACs minus the head, plus ONE
+        // head for the sampled last position (the prefill head is sliced)
+        let head = (cfg.vocab * cfg.d_model) as u128;
+        let prefill: u128 =
+            (0..16).map(|p| decode_step_macs(&cfg, &acc, p) - head).sum::<u128>() + head;
         let decode: u128 = (16..23).map(|p| decode_step_macs(&cfg, &acc, p)).sum();
         assert_eq!(rep.prefill_macs, prefill);
         assert_eq!(rep.decode_macs, decode);

@@ -8,6 +8,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::exec::ExecPool;
 use crate::linalg::Matrix;
 use crate::tensor::Tensor;
 
@@ -107,6 +108,50 @@ impl CovarianceAccumulator {
         }
         out
     }
+}
+
+/// Row-tile size of the deterministic parallel accumulation. Fixed (never
+/// derived from the worker count) so the reduction tree — per-tile Gram
+/// sums merged in tile order — is identical for every thread count,
+/// which keeps the accumulated covariance bitwise stable under
+/// `--threads`.
+pub const COV_TILE_ROWS: usize = 256;
+
+/// Fold a `(n, d)` f32 chunk into `acc` with the row work fanned out over
+/// `pool`: rows are split into fixed [`COV_TILE_ROWS`]-sized tiles, each
+/// tile's Gram sum is computed independently (`parallel_map`), and the
+/// partials reduce into `acc` through [`CovarianceAccumulator::merge`] in
+/// tile order. Bitwise identical for any thread count (including 1),
+/// because the tile boundaries and the merge order depend only on `n`.
+pub fn accumulate_rows_tiled(
+    acc: &mut CovarianceAccumulator,
+    rows: &[f32],
+    n: usize,
+    valid_rows: Option<&[bool]>,
+    pool: &ExecPool,
+) -> Result<()> {
+    let d = acc.dim();
+    if rows.len() != n * d {
+        bail!("accumulate_rows_tiled: {} values for {}x{}", rows.len(), n, d);
+    }
+    if n <= COV_TILE_ROWS {
+        return acc.update_rows(rows, n, valid_rows);
+    }
+    let tiles: Vec<(usize, usize)> =
+        (0..n).step_by(COV_TILE_ROWS).map(|s| (s, (s + COV_TILE_ROWS).min(n))).collect();
+    let partials = pool.parallel_map(&tiles, |_, &(start, end)| {
+        let mut part = CovarianceAccumulator::new(d);
+        part.update_rows(
+            &rows[start * d..end * d],
+            end - start,
+            valid_rows.map(|v| &v[start..end]),
+        )?;
+        Ok::<CovarianceAccumulator, anyhow::Error>(part)
+    });
+    for part in partials {
+        acc.merge(&part?)?;
+    }
+    Ok(())
 }
 
 /// Zero the invalid rows of a flattened `(n, d)` f32 buffer in place.
@@ -227,6 +272,38 @@ mod tests {
             let row = (seq + t) * d;
             assert_eq!(&data[row..row + d], &[0.0, 0.0][..]);
         }
+    }
+
+    #[test]
+    fn tiled_accumulation_is_thread_count_invariant() {
+        let mut rng = Rng::new(6);
+        let (n, d) = (3 * COV_TILE_ROWS + 37, 5);
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let valid: Vec<bool> = (0..n).map(|i| i % 7 != 0).collect();
+        let finalize = |threads: usize| {
+            let mut acc = CovarianceAccumulator::new(d);
+            accumulate_rows_tiled(&mut acc, &rows, n, Some(&valid), &ExecPool::new(threads))
+                .unwrap();
+            (acc.samples(), acc.finalize(true))
+        };
+        let (samples1, cov1) = finalize(1);
+        for threads in [2usize, 3, 8] {
+            let (s, c) = finalize(threads);
+            assert_eq!(s, samples1, "threads={threads}");
+            assert_eq!(c.data(), cov1.data(), "threads={threads}: covariance not bitwise stable");
+        }
+        // and it agrees with the untiled single pass to fp tolerance
+        let mut whole = CovarianceAccumulator::new(d);
+        whole.update_rows(&rows, n, Some(&valid)).unwrap();
+        assert_eq!(whole.samples(), samples1);
+        assert!(whole.finalize(true).sub(&cov1).max_abs() < 1e-9);
+        // small chunks take the single-tile fast path
+        let mut small = CovarianceAccumulator::new(d);
+        accumulate_rows_tiled(&mut small, &rows[..8 * d], 8, None, &ExecPool::new(4)).unwrap();
+        assert_eq!(small.samples(), 8);
+        // shape mismatch is an error
+        let mut bad = CovarianceAccumulator::new(d);
+        assert!(accumulate_rows_tiled(&mut bad, &rows, n + 1, None, &ExecPool::serial()).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod decompose;
 pub mod pipeline;
 
 pub use budget::{paper_preset, rank_for_budget, solve_module_budget, ModuleSchedule};
-pub use covariance::CovarianceAccumulator;
+pub use covariance::{accumulate_rows_tiled, CovarianceAccumulator, COV_TILE_ROWS};
 pub use decompose::{decompose_weight, RomFactors};
 pub use pipeline::{
     compress_weight_space, DecompositionSpace, LayerTiming, RomConfig, RomModel, RomPipeline,

@@ -17,6 +17,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::data::CalibBatch;
+use crate::exec::{ExecConfig, ExecPool};
 use crate::linalg::Matrix;
 use crate::model::macs::{block_matrices, CompressionAccounting, LayerCompression};
 use crate::model::{ModelConfig, ParamStore};
@@ -24,7 +25,9 @@ use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
 use super::budget::{rank_for_budget, ModuleSchedule};
-use super::covariance::{valid_row_flags, zero_invalid_rows, CovarianceAccumulator};
+use super::covariance::{
+    accumulate_rows_tiled, valid_row_flags, zero_invalid_rows, CovarianceAccumulator,
+};
 use super::decompose::{decompose_weight, RomFactors};
 
 /// Matrix groups in dataflow order, with their capture names.
@@ -58,8 +61,12 @@ pub struct RomConfig {
     /// Normalize covariance by sample count before eigendecomposition
     /// (does not change eigenvectors; keeps magnitudes stable).
     pub normalize: bool,
-    /// Eigendecompose the matrices of a group on worker threads.
-    pub parallel_eigen: bool,
+    /// Worker-pool budget for the pass: covariance accumulation fans out
+    /// over fixed row tiles and eigendecompositions across the matrices of
+    /// a group/schedule, both deterministically — results are bitwise
+    /// identical for any thread count (supersedes the old `parallel_eigen`
+    /// bool).
+    pub exec: ExecConfig,
     /// Paper §2 error propagation: calibrate each layer against the
     /// already-compressed prefix (true) or against the original model's
     /// activations (false — ablation).
@@ -74,7 +81,7 @@ impl Default for RomConfig {
             schedule: ModuleSchedule { start_block: 0, module_budget: 0.5 },
             pallas_covariance: true,
             normalize: true,
-            parallel_eigen: false,
+            exec: ExecConfig::default(),
             propagate_errors: true,
             space: DecompositionSpace::Feature,
         }
@@ -177,6 +184,7 @@ impl<'rt> RomPipeline<'rt> {
             }
         }
 
+        let pool = rcfg.exec.pool();
         let mut params = params.clone();
         let mut factors = BTreeMap::new();
         let mut timings = Vec::new();
@@ -222,6 +230,7 @@ impl<'rt> RomPipeline<'rt> {
                                 cap,
                                 cb,
                                 rcfg.pallas_covariance,
+                                &pool,
                             )?;
                         }
                     }
@@ -240,7 +249,7 @@ impl<'rt> RomPipeline<'rt> {
                         })
                         .collect::<Result<_>>()?;
 
-                    let results = decompose_jobs(jobs, rcfg.parallel_eigen)?;
+                    let results = decompose_jobs(jobs, &pool)?;
                     for (name, f, secs) in results {
                         params.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
                         timings.push(LayerTiming {
@@ -305,7 +314,13 @@ impl<'rt> RomPipeline<'rt> {
                     let outs = self.block_capture(params, block, &hidden[bi])?;
                     for (field, cap_name) in &all {
                         let cap = outs.get(*cap_name).context("capture missing")?;
-                        self.accumulate(accs.get_mut(field).unwrap(), cap, cb, true)?;
+                        self.accumulate(
+                            accs.get_mut(field).unwrap(),
+                            cap,
+                            cb,
+                            true,
+                            &ExecPool::serial(),
+                        )?;
                     }
                 }
                 for (field, _) in &all {
@@ -338,6 +353,7 @@ impl<'rt> RomPipeline<'rt> {
             bail!("ROM needs at least one calibration batch");
         }
         let (eb, es) = (self.cfg.eval_batch, self.cfg.eval_seq);
+        let pool = rcfg.exec.pool();
         let mut out = params.clone();
         let mut factors = BTreeMap::new();
         let mut timings = Vec::new();
@@ -375,23 +391,33 @@ impl<'rt> RomPipeline<'rt> {
                     peak_bytes = peak_bytes.max(bytes);
                     for (field, cap_name) in &all {
                         let cap = outs.get(*cap_name).context("capture missing")?;
-                        self.accumulate(accs.get_mut(field).unwrap(), cap, cb, rcfg.pallas_covariance)?;
+                        self.accumulate(
+                            accs.get_mut(field).unwrap(),
+                            cap,
+                            cb,
+                            rcfg.pallas_covariance,
+                            &pool,
+                        )?;
                     }
                 }
                 let covariance_s = t_cov.elapsed().as_secs_f64() / all.len() as f64;
-                for (field, _) in &all {
-                    let name = format!("blocks.{block}.{field}");
-                    let (d_out, d_in) = dims_of(&self.cfg, &name);
-                    let t0 = Instant::now();
-                    let w = params.get(&name)?.to_matrix()?;
-                    let cov = accs[field].finalize(rcfg.normalize);
-                    let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
-                    let f = decompose_weight(&w, &cov, rank)?;
+                let jobs: Vec<(String, Matrix, Matrix, usize)> = all
+                    .iter()
+                    .map(|(field, _)| {
+                        let name = format!("blocks.{block}.{field}");
+                        let (d_out, d_in) = dims_of(&self.cfg, &name);
+                        let w = params.get(&name)?.to_matrix()?;
+                        let cov = accs[field].finalize(rcfg.normalize);
+                        let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
+                        Ok((name, w, cov, rank))
+                    })
+                    .collect::<Result<_>>()?;
+                for (name, f, secs) in decompose_jobs(jobs, &pool)? {
                     out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
                     timings.push(LayerTiming {
                         name: name.clone(),
                         covariance_s,
-                        decompose_s: t0.elapsed().as_secs_f64(),
+                        decompose_s: secs,
                     });
                     factors.insert(name, f);
                 }
@@ -433,13 +459,16 @@ impl<'rt> RomPipeline<'rt> {
     }
 
     /// Fold one capture chunk into a covariance accumulator, excluding
-    /// padded rows.
+    /// padded rows. The pure-Rust path fans the row work out over `pool`
+    /// in fixed tiles (deterministic for any thread count); the Pallas
+    /// path is a single kernel call and ignores the pool.
     fn accumulate(
         &self,
         acc: &mut CovarianceAccumulator,
         cap: &Tensor,
         cb: &CalibBatch,
         pallas: bool,
+        pool: &ExecPool,
     ) -> Result<()> {
         let d = *cap.shape().last().unwrap();
         let n = cap.len() / d;
@@ -463,7 +492,7 @@ impl<'rt> RomPipeline<'rt> {
         } else {
             let flags = valid_row_flags(cb.batch, cb.seq, &cb.valid);
             let flat = cap.flatten_to_2d()?;
-            acc.update_rows(flat.as_f32()?, n, Some(&flags))?;
+            accumulate_rows_tiled(acc, flat.as_f32()?, n, Some(&flags), pool)?;
         }
         Ok(())
     }
@@ -481,24 +510,41 @@ pub fn compress_weight_space(
     let mut out = params.clone();
     let mut factors = BTreeMap::new();
     let mut timings = Vec::new();
+    // with no error propagation in weight space, every matrix of the
+    // schedule is independent — fan the whole schedule out over the pool.
+    // Workers fetch W from the (immutable here) store themselves, so peak
+    // memory stays at one matrix per worker, not one per job.
+    let pool = rcfg.exec.pool();
+    let mut jobs: Vec<(String, usize)> = Vec::new();
     for block in 0..cfg.n_layers {
         if !rcfg.schedule.compresses(block) {
             continue;
         }
         for (name, d_out, d_in) in block_matrices(cfg, block) {
-            let t0 = Instant::now();
-            let w = out.get(&name)?.to_matrix()?;
-            let wwt = crate::linalg::matmul(&w, &w.transpose());
-            let rank = rank_for_budget(d_out, d_in, rcfg.schedule.module_budget);
-            let f = decompose_weight(&w, &wwt, rank)?;
-            out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
-            timings.push(LayerTiming {
-                name: name.clone(),
-                covariance_s: 0.0,
-                decompose_s: t0.elapsed().as_secs_f64(),
-            });
-            factors.insert(name, f);
+            jobs.push((name, rank_for_budget(d_out, d_in, rcfg.schedule.module_budget)));
         }
+    }
+    let results = {
+        let src = &out;
+        pool.parallel_map(&jobs, |_, job| {
+            let (name, rank) = job;
+            let t0 = Instant::now();
+            let w = src.get(name)?.to_matrix()?;
+            let wwt = crate::linalg::matmul(&w, &w.transpose());
+            let f =
+                decompose_weight(&w, &wwt, *rank).with_context(|| format!("decompose {name}"))?;
+            Ok::<(String, RomFactors, f64), anyhow::Error>((
+                name.clone(),
+                f,
+                t0.elapsed().as_secs_f64(),
+            ))
+        })
+    };
+    for res in results {
+        let (name, f, secs) = res?;
+        out.set(&name, Tensor::from_matrix(&f.effective_weight()))?;
+        timings.push(LayerTiming { name: name.clone(), covariance_s: 0.0, decompose_s: secs });
+        factors.insert(name, f);
     }
     Ok(RomModel {
         params: out,
@@ -519,40 +565,27 @@ fn dims_of(cfg: &ModelConfig, name: &str) -> (usize, usize) {
         .expect("known matrix")
 }
 
-/// Decompose a set of (name, W, cov, rank) jobs, optionally on threads.
+/// Decompose a set of (name, W, cov, rank) jobs on the worker pool.
+/// Results come back in job order and each job is decomposed by the same
+/// serial routine, so the output is identical for any thread count (the
+/// old hand-rolled `thread::scope` island, retired onto [`ExecPool`]).
 #[allow(clippy::type_complexity)]
 fn decompose_jobs(
     jobs: Vec<(String, Matrix, Matrix, usize)>,
-    parallel: bool,
+    pool: &ExecPool,
 ) -> Result<Vec<(String, RomFactors, f64)>> {
-    if !parallel || jobs.len() == 1 {
-        return jobs
-            .into_iter()
-            .map(|(name, w, cov, rank)| {
-                let t0 = Instant::now();
-                let f = decompose_weight(&w, &cov, rank)
-                    .with_context(|| format!("decompose {name}"))?;
-                Ok((name, f, t0.elapsed().as_secs_f64()))
-            })
-            .collect();
-    }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = jobs
-            .into_iter()
-            .map(|(name, w, cov, rank)| {
-                scope.spawn(move || {
-                    let t0 = Instant::now();
-                    let f = decompose_weight(&w, &cov, rank)
-                        .with_context(|| format!("decompose {name}"))?;
-                    Ok::<_, anyhow::Error>((name, f, t0.elapsed().as_secs_f64()))
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().map_err(|_| anyhow::anyhow!("decompose worker panicked"))?)
-            .collect()
+    pool.parallel_map(&jobs, |_, job| {
+        let (name, w, cov, rank) = job;
+        let t0 = Instant::now();
+        let f = decompose_weight(w, cov, *rank).with_context(|| format!("decompose {name}"))?;
+        Ok::<(String, RomFactors, f64), anyhow::Error>((
+            name.clone(),
+            f,
+            t0.elapsed().as_secs_f64(),
+        ))
     })
+    .into_iter()
+    .collect()
 }
 
 #[cfg(test)]
@@ -566,7 +599,7 @@ mod tests {
     }
 
     #[test]
-    fn decompose_jobs_parallel_matches_serial() {
+    fn decompose_jobs_bitwise_identical_for_any_thread_count() {
         use crate::util::Rng;
         let mut rng = Rng::new(0);
         let mk = |rng: &mut Rng| {
@@ -577,15 +610,24 @@ mod tests {
         };
         let (w1, c1) = mk(&mut rng);
         let (w2, c2) = mk(&mut rng);
+        let (w3, c3) = mk(&mut rng);
         let jobs = vec![
-            ("a".to_string(), w1.clone(), c1.clone(), 3),
-            ("b".to_string(), w2.clone(), c2.clone(), 4),
+            ("a".to_string(), w1, c1, 3),
+            ("b".to_string(), w2, c2, 4),
+            ("c".to_string(), w3, c3, 2),
         ];
-        let serial = decompose_jobs(jobs.clone(), false).unwrap();
-        let parallel = decompose_jobs(jobs, true).unwrap();
-        for ((n1, f1, _), (n2, f2, _)) in serial.iter().zip(&parallel) {
-            assert_eq!(n1, n2);
-            assert!(f1.effective_weight().sub(&f2.effective_weight()).max_abs() < 1e-12);
+        let serial = decompose_jobs(jobs.clone(), &ExecPool::serial()).unwrap();
+        for threads in [2usize, 3, 8] {
+            let parallel = decompose_jobs(jobs.clone(), &ExecPool::new(threads)).unwrap();
+            assert_eq!(serial.len(), parallel.len());
+            for ((n1, f1, _), (n2, f2, _)) in serial.iter().zip(&parallel) {
+                assert_eq!(n1, n2, "threads={threads}: job order");
+                assert_eq!(
+                    f1.effective_weight().data(),
+                    f2.effective_weight().data(),
+                    "threads={threads}: {n1} not bitwise identical"
+                );
+            }
         }
     }
 }

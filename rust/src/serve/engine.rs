@@ -1,14 +1,18 @@
-//! Multi-request serving: a shared batching queue drained by worker
-//! threads, with per-request latency and MAC accounting.
+//! Multi-request serving: a shared batching queue drained by the worker
+//! pool, with per-request latency and MAC accounting.
 //!
 //! Requests land in one FIFO; each worker repeatedly claims a batch of up
 //! to [`ServeConfig::max_batch`] requests and forwards them through the
 //! shared [`ServeModel`] (read-only, so workers need no locking on the
-//! weights). Per-request latency is measured from engine start — queue
-//! wait plus compute — which is what a caller of a loaded server observes;
-//! [`ServeStats`] aggregates latency percentiles, throughput, and the
-//! exact MACs executed, the empirical side of the paper's `r(d1+d2)` vs
-//! `d1·d2` argument.
+//! weights). The workers are an [`ExecPool`] broadcast, and the engine
+//! splits the [`ExecConfig`] thread budget between request-level workers
+//! and intra-op row sharding inside each forward — one knob, no
+//! oversubscription: `workers` request threads each drive a
+//! `threads/workers`-wide matmul pool. Per-request latency is measured
+//! from engine start — queue wait plus compute — which is what a caller of
+//! a loaded server observes; [`ServeStats`] aggregates latency
+//! percentiles, throughput, and the exact MACs executed, the empirical
+//! side of the paper's `r(d1+d2)` vs `d1·d2` argument.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -17,6 +21,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::exec::{ExecConfig, ExecPool};
 use crate::util::LatencySummary;
 
 use super::model::ServeModel;
@@ -24,15 +29,18 @@ use super::model::ServeModel;
 /// Engine knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Worker threads executing requests.
+    /// Request-level worker threads (capped by the exec thread budget).
     pub workers: usize,
     /// Max requests a worker claims from the queue per dispatch.
     pub max_batch: usize,
+    /// Total thread budget shared by request workers and intra-op row
+    /// sharding (the global `--threads` knob; results are invariant to it).
+    pub exec: ExecConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, max_batch: 4 }
+        ServeConfig { workers: 2, max_batch: 4, exec: ExecConfig::default() }
     }
 }
 
@@ -125,52 +133,62 @@ impl ServeEngine {
         // once any request fails, other workers stop claiming new batches
         // instead of computing forwards whose results will be discarded
         let failed = AtomicBool::new(false);
-        let workers = self.config.workers.max(1);
-        let max_batch = self.config.max_batch.max(1);
+        // one thread budget, two levels: `workers` request-claiming pool
+        // threads, each driving an intra-op pool over its share — total
+        // concurrency never exceeds the exec budget
+        let threads = self.config.exec.resolve().max(1);
+        let workers = self.config.workers.max(1).min(threads);
+        let intra = ExecPool::new(threads).split(workers);
+        let pool = ExecPool::new(workers);
 
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::with_capacity(workers);
-            for _ in 0..workers {
-                handles.push(scope.spawn(|| -> Result<()> {
-                    loop {
-                        if failed.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        let batch: Vec<ServeRequest> = {
-                            let mut q = queue.lock().unwrap();
-                            if q.is_empty() {
-                                break;
-                            }
-                            let take = max_batch.min(q.len());
-                            q.drain(..take).collect()
-                        };
-                        *batches.lock().unwrap() += 1;
-                        for req in batch {
-                            let (logits, macs) = match self.model.forward_logits(&req.tokens) {
-                                Ok(out) => out,
-                                Err(e) => {
-                                    failed.store(true, Ordering::Relaxed);
-                                    return Err(e);
-                                }
-                            };
-                            let r = ServeResult {
-                                id: req.id,
-                                tokens: req.tokens.len(),
-                                logits,
-                                macs,
-                                latency_s: t0.elapsed().as_secs_f64(),
-                            };
-                            results.lock().unwrap().push(r);
-                        }
+        let worker_loop = || -> Result<()> {
+            loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let batch: Vec<ServeRequest> = {
+                    let mut q = queue.lock().unwrap();
+                    if q.is_empty() {
+                        break;
                     }
-                    Ok(())
-                }));
-            }
-            for h in handles {
-                h.join().map_err(|_| anyhow!("serve worker panicked"))??;
+                    let take = self.config.max_batch.max(1).min(q.len());
+                    q.drain(..take).collect()
+                };
+                *batches.lock().unwrap() += 1;
+                for req in batch {
+                    let (logits, macs) =
+                        match self.model.forward_logits_pooled(&req.tokens, &intra) {
+                            Ok(out) => out,
+                            Err(e) => {
+                                failed.store(true, Ordering::Relaxed);
+                                return Err(e);
+                            }
+                        };
+                    let r = ServeResult {
+                        id: req.id,
+                        tokens: req.tokens.len(),
+                        logits,
+                        macs,
+                        latency_s: t0.elapsed().as_secs_f64(),
+                    };
+                    results.lock().unwrap().push(r);
+                }
             }
             Ok(())
-        })?;
+        };
+        let outcomes: Vec<Result<()>> = pool.broadcast(|_worker| -> Result<()> {
+            // panic containment, matching the engine's pre-pool behavior: a
+            // panicking worker surfaces as this run's Err, not a process
+            // abort of a long-lived server
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(&worker_loop))
+                .unwrap_or_else(|_| {
+                    failed.store(true, Ordering::Relaxed);
+                    Err(anyhow!("serve worker panicked"))
+                })
+        });
+        for outcome in outcomes {
+            outcome?;
+        }
 
         let wall_s = t0.elapsed().as_secs_f64();
         let mut results = results.into_inner().unwrap();
@@ -198,7 +216,10 @@ mod tests {
         let cfg = demo_config();
         let cm = demo_artifact(&cfg, 0.5, 31).unwrap();
         let model = ServeModel::from_artifact(&cm, mode).unwrap();
-        ServeEngine::new(model, ServeConfig { workers, max_batch })
+        // workers beyond the thread budget would be capped — size the
+        // budget to the requested workers so the tests exercise them
+        let exec = ExecConfig::with_threads(workers.max(1));
+        ServeEngine::new(model, ServeConfig { workers, max_batch, exec })
     }
 
     #[test]
@@ -235,6 +256,33 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.logits, b.logits);
             assert_eq!(a.macs, b.macs);
+        }
+    }
+
+    #[test]
+    fn thread_budget_is_invisible_in_results() {
+        // a fixed worker split under different --threads budgets (serial,
+        // balanced, oversubscribed-then-capped): identical logits and MACs
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 37).unwrap();
+        let run = |threads: usize| {
+            let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+            let config = ServeConfig {
+                workers: 2,
+                max_batch: 2,
+                exec: ExecConfig::with_threads(threads),
+            };
+            let reqs = synth_requests(&cfg, 5, 14, 11);
+            ServeEngine::new(model, config).run(reqs).unwrap().0
+        };
+        let base = run(1);
+        for threads in [2usize, 4, 8] {
+            let got = run(threads);
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.id, b.id, "threads={threads}");
+                assert_eq!(a.logits, b.logits, "threads={threads}: logits moved");
+                assert_eq!(a.macs, b.macs, "threads={threads}");
+            }
         }
     }
 

@@ -6,7 +6,8 @@
 //! `d_in·d_out`. Both run on the cache-blocked f32 kernel
 //! ([`crate::linalg::matmul_transb_blocked_f32`]).
 
-use crate::linalg::{matmul_transb_blocked_f32, Matrix};
+use crate::exec::ExecPool;
+use crate::linalg::{par_matmul_transb_blocked_f32, Matrix};
 use crate::rom::decompose::RomFactors;
 
 /// One weight matrix, in whichever form it executes.
@@ -84,14 +85,21 @@ impl ServeLayer {
 
     /// `y = x·Wᵀ` over `rows` row-major input rows of width `d_in`.
     pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        self.apply_pooled(x, rows, &ExecPool::serial())
+    }
+
+    /// [`ServeLayer::apply`] with the output rows sharded across `pool`'s
+    /// workers — bitwise identical to the serial apply for any thread
+    /// count (single-row inputs degenerate to the serial kernel).
+    pub fn apply_pooled(&self, x: &[f32], rows: usize, pool: &ExecPool) -> Vec<f32> {
         debug_assert_eq!(x.len(), rows * self.d_in());
         match self {
             ServeLayer::Dense { w, d_out, d_in } => {
-                matmul_transb_blocked_f32(x, w, rows, *d_in, *d_out)
+                par_matmul_transb_blocked_f32(x, w, rows, *d_in, *d_out, pool)
             }
             ServeLayer::Factored { w1, w2, rank, d_out, d_in } => {
-                let t = matmul_transb_blocked_f32(x, w2, rows, *d_in, *rank);
-                matmul_transb_blocked_f32(&t, w1, rows, *rank, *d_out)
+                let t = par_matmul_transb_blocked_f32(x, w2, rows, *d_in, *rank, pool);
+                par_matmul_transb_blocked_f32(&t, w1, rows, *rank, *d_out, pool)
             }
         }
     }

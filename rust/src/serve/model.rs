@@ -16,7 +16,8 @@ use anyhow::{bail, ensure, Result};
 
 use crate::compress::CompressedModel;
 use crate::decode::KvCache;
-use crate::linalg::matmul_transb_blocked_f32;
+use crate::exec::ExecPool;
+use crate::linalg::{matmul_transb_blocked_f32, par_matmul_transb_blocked_f32};
 use crate::model::reference::{causal_attention, rmsnorm, rope_qk, silu};
 use crate::model::ModelConfig;
 
@@ -130,6 +131,18 @@ impl ServeModel {
     /// executed). Causal attention, positions from 0 (no KV cache — the
     /// engine batches whole requests).
     pub fn forward_logits(&self, tokens: &[i32]) -> Result<(Vec<f32>, u128)> {
+        self.forward_logits_pooled(tokens, &ExecPool::serial())
+    }
+
+    /// [`ServeModel::forward_logits`] with every weight matmul (and the
+    /// head) row-sharded over `pool` — bitwise identical to the serial
+    /// forward for any thread count, so `--threads` is purely a
+    /// performance knob.
+    pub fn forward_logits_pooled(
+        &self,
+        tokens: &[i32],
+        pool: &ExecPool,
+    ) -> Result<(Vec<f32>, u128)> {
         let cfg = &self.cfg;
         let (d, nh) = (cfg.d_model, cfg.n_heads);
         debug_assert_eq!(cfg.head_dim() * nh, d);
@@ -151,9 +164,9 @@ impl ServeModel {
         for block in &self.blocks {
             // ---- attention ----
             rmsnorm(&h, &block.attn_norm, cfg.norm_eps, &mut buf);
-            let mut q = block.wq.apply(&buf, seq);
-            let mut k = block.wk.apply(&buf, seq);
-            let v = block.wv.apply(&buf, seq);
+            let mut q = block.wq.apply_pooled(&buf, seq, pool);
+            let mut k = block.wk.apply_pooled(&buf, seq, pool);
+            let v = block.wv.apply_pooled(&buf, seq, pool);
             macs += seq as u128
                 * (block.wq.macs_per_row() + block.wk.macs_per_row() + block.wv.macs_per_row());
             // same rope + causal-softmax math as ReferenceModel (shared
@@ -165,7 +178,7 @@ impl ServeModel {
             // matching `model::macs::report`
             macs += 2 * (seq as u128) * (seq as u128) * (d as u128);
 
-            let o = block.wo.apply(&attn_out, seq);
+            let o = block.wo.apply_pooled(&attn_out, seq, pool);
             macs += seq as u128 * block.wo.macs_per_row();
             for (hv, ov) in h.iter_mut().zip(&o) {
                 *hv += ov;
@@ -173,11 +186,11 @@ impl ServeModel {
 
             // ---- ffn ----
             rmsnorm(&h, &block.ffn_norm, cfg.norm_eps, &mut buf);
-            let gate = block.w_gate.apply(&buf, seq);
-            let up = block.w_up.apply(&buf, seq);
+            let gate = block.w_gate.apply_pooled(&buf, seq, pool);
+            let up = block.w_up.apply_pooled(&buf, seq, pool);
             macs += seq as u128 * (block.w_gate.macs_per_row() + block.w_up.macs_per_row());
             let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
-            let down = block.w_down.apply(&act, seq);
+            let down = block.w_down.apply_pooled(&act, seq, pool);
             macs += seq as u128 * block.w_down.macs_per_row();
             for (hv, dv) in h.iter_mut().zip(&down) {
                 *hv += dv;
@@ -186,7 +199,7 @@ impl ServeModel {
 
         // tied head
         rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut buf);
-        let logits = matmul_transb_blocked_f32(&buf, &self.embed, seq, d, cfg.vocab);
+        let logits = par_matmul_transb_blocked_f32(&buf, &self.embed, seq, d, cfg.vocab, pool);
         macs += (seq * cfg.vocab * d) as u128;
         Ok((logits, macs))
     }
@@ -205,6 +218,65 @@ impl ServeModel {
     /// for the token at absolute position `pos`, tied head
     /// `vocab·d_model` — per consumed token.
     pub fn forward_cached(&self, tokens: &[i32], cache: &mut KvCache) -> Result<(Vec<f32>, u128)> {
+        self.forward_cached_pooled(tokens, cache, &ExecPool::serial())
+    }
+
+    /// [`ServeModel::forward_cached`] with the weight matmuls row-sharded
+    /// over `pool` — bitwise identical for any thread count.
+    pub fn forward_cached_pooled(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        pool: &ExecPool,
+    ) -> Result<(Vec<f32>, u128)> {
+        let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
+        let seq = tokens.len();
+        let (buf, mut macs) = self.cached_hidden(tokens, cache, pool)?;
+        // tied head over every consumed position
+        let logits = par_matmul_transb_blocked_f32(&buf, &self.embed, seq, d, vocab, pool);
+        macs += (seq * vocab * d) as u128;
+        cache.advance(seq);
+        Ok((logits, macs))
+    }
+
+    /// Prefill variant of [`ServeModel::forward_cached_pooled`] computing
+    /// the LM head **only for the final position**: the scheduler samples
+    /// nothing but the last row, and at real vocab sizes the `seq·vocab·d`
+    /// head matmul dominates prefill — slicing it to `1·vocab·d` removes
+    /// that waste. Returns the `(vocab,)` logits of the last consumed
+    /// position plus the MACs executed; the last-row logits are bitwise
+    /// identical to [`ServeModel::forward_cached`]'s final row (the head
+    /// kernel is row-independent). Accounting matches
+    /// [`crate::model::macs::decode_report`]'s prefill convention: per
+    /// position weights + exact causal attention, plus one `vocab·d` head.
+    pub fn forward_prefill(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        pool: &ExecPool,
+    ) -> Result<(Vec<f32>, u128)> {
+        let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
+        let seq = tokens.len();
+        let (buf, mut macs) = self.cached_hidden(tokens, cache, pool)?;
+        // tied head, last position only
+        let last = &buf[(seq - 1) * d..seq * d];
+        let logits = matmul_transb_blocked_f32(last, &self.embed, 1, d, vocab);
+        macs += (vocab * d) as u128;
+        cache.advance(seq);
+        Ok((logits, macs))
+    }
+
+    /// The shared cached-forward body: consume `tokens` through every
+    /// block over `cache` (K/V written at `cache.pos()`, cursor **not**
+    /// advanced — the head variants advance after reading), returning the
+    /// final-norm hidden states `(seq, d)` and the MACs executed so far
+    /// (weights + exact causal attention, no head).
+    fn cached_hidden(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        pool: &ExecPool,
+    ) -> Result<(Vec<f32>, u128)> {
         let cfg = &self.cfg;
         let (d, nh) = (cfg.d_model, cfg.n_heads);
         let seq = tokens.len();
@@ -239,9 +311,9 @@ impl ServeModel {
         for (b, block) in self.blocks.iter().enumerate() {
             // ---- attention (over the cache) ----
             rmsnorm(&h, &block.attn_norm, cfg.norm_eps, &mut buf);
-            let mut q = block.wq.apply(&buf, seq);
-            let mut k = block.wk.apply(&buf, seq);
-            let v = block.wv.apply(&buf, seq);
+            let mut q = block.wq.apply_pooled(&buf, seq, pool);
+            let mut k = block.wk.apply_pooled(&buf, seq, pool);
+            let v = block.wv.apply_pooled(&buf, seq, pool);
             macs += seq as u128
                 * (block.wq.macs_per_row() + block.wk.macs_per_row() + block.wv.macs_per_row());
             rope_qk(&mut q, &mut k, seq, d, nh, pos0, cfg.rope_theta);
@@ -253,7 +325,7 @@ impl ServeModel {
                 macs += 2 * (pos0 + t + 1) as u128 * d as u128;
             }
 
-            let o = block.wo.apply(&attn_out, seq);
+            let o = block.wo.apply_pooled(&attn_out, seq, pool);
             macs += seq as u128 * block.wo.macs_per_row();
             for (hv, ov) in h.iter_mut().zip(&o) {
                 *hv += ov;
@@ -261,23 +333,20 @@ impl ServeModel {
 
             // ---- ffn ----
             rmsnorm(&h, &block.ffn_norm, cfg.norm_eps, &mut buf);
-            let gate = block.w_gate.apply(&buf, seq);
-            let up = block.w_up.apply(&buf, seq);
+            let gate = block.w_gate.apply_pooled(&buf, seq, pool);
+            let up = block.w_up.apply_pooled(&buf, seq, pool);
             macs += seq as u128 * (block.w_gate.macs_per_row() + block.w_up.macs_per_row());
             let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
-            let down = block.w_down.apply(&act, seq);
+            let down = block.w_down.apply_pooled(&act, seq, pool);
             macs += seq as u128 * block.w_down.macs_per_row();
             for (hv, dv) in h.iter_mut().zip(&down) {
                 *hv += dv;
             }
         }
 
-        // tied head
+        // final norm (the head variants consume `buf`)
         rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut buf);
-        let logits = matmul_transb_blocked_f32(&buf, &self.embed, seq, d, cfg.vocab);
-        macs += (seq * cfg.vocab * d) as u128;
-        cache.advance(seq);
-        Ok((logits, macs))
+        Ok((buf, macs))
     }
 
     /// One decode step: consume a single token through the cache and
@@ -285,6 +354,18 @@ impl ServeModel {
     /// of KV-cached autoregressive generation.
     pub fn forward_step(&self, token: i32, cache: &mut KvCache) -> Result<(Vec<f32>, u128)> {
         self.forward_cached(&[token], cache)
+    }
+
+    /// [`ServeModel::forward_step`] over a pool (single-row matmuls run
+    /// serial either way; the pool matters only for factored layers with
+    /// unusually wide ranks — kept for knob symmetry).
+    pub fn forward_step_pooled(
+        &self,
+        token: i32,
+        cache: &mut KvCache,
+        pool: &ExecPool,
+    ) -> Result<(Vec<f32>, u128)> {
+        self.forward_cached_pooled(&[token], cache, pool)
     }
 }
 
@@ -419,6 +500,62 @@ mod tests {
                 let (_, ms) = m.forward_step(t, &mut cache).unwrap();
                 assert_eq!(ms, decode_step_macs(&cfg, &acc, 5 + i), "{} step {i}", mode.name());
             }
+        }
+    }
+
+    #[test]
+    fn pooled_forwards_are_bitwise_identical_to_serial() {
+        use crate::exec::ExecPool;
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 41).unwrap();
+        let tokens = synth_requests(&cfg, 1, 21, 13)[0].tokens.clone();
+        for mode in [ExecMode::Dense, ExecMode::Factored] {
+            let m = ServeModel::from_artifact(&cm, mode).unwrap();
+            let (serial, macs_serial) = m.forward_logits(&tokens).unwrap();
+            let mut cache_s = KvCache::new(&cfg, tokens.len());
+            let (cached_serial, cmacs_serial) = m.forward_cached(&tokens, &mut cache_s).unwrap();
+            for threads in [2usize, 3, 8] {
+                let pool = ExecPool::new(threads);
+                let (pooled, macs_pooled) = m.forward_logits_pooled(&tokens, &pool).unwrap();
+                assert_eq!(pooled, serial, "{} t{threads}: full forward", mode.name());
+                assert_eq!(macs_pooled, macs_serial);
+                let mut cache_p = KvCache::new(&cfg, tokens.len());
+                let (cached_pooled, cmacs_pooled) =
+                    m.forward_cached_pooled(&tokens, &mut cache_p, &pool).unwrap();
+                assert_eq!(cached_pooled, cached_serial, "{} t{threads}: cached", mode.name());
+                assert_eq!(cmacs_pooled, cmacs_serial);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_head_slice_matches_last_row_and_saves_head_macs() {
+        use crate::exec::ExecPool;
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 43).unwrap();
+        let tokens = synth_requests(&cfg, 1, 15, 17)[0].tokens.clone();
+        let seq = tokens.len();
+        let head = (cfg.vocab * cfg.d_model) as u128;
+        for mode in [ExecMode::Dense, ExecMode::Factored] {
+            let m = ServeModel::from_artifact(&cm, mode).unwrap();
+            let mut full_cache = KvCache::new(&cfg, seq);
+            let (full, full_macs) = m.forward_cached(&tokens, &mut full_cache).unwrap();
+            let mut pre_cache = KvCache::new(&cfg, seq);
+            let (last, pre_macs) =
+                m.forward_prefill(&tokens, &mut pre_cache, &ExecPool::serial()).unwrap();
+            assert_eq!(last.len(), cfg.vocab);
+            // the sampled row is bitwise identical to the full head's last row
+            assert_eq!(last[..], full[(seq - 1) * cfg.vocab..], "{}", mode.name());
+            // and the head was billed once instead of `seq` times
+            assert_eq!(pre_macs, full_macs - (seq as u128 - 1) * head, "{}", mode.name());
+            assert_eq!(pre_cache.pos(), seq, "prefill advances the cache");
+            // analytic accounting: decode_report's prefill convention
+            let acc = match mode {
+                ExecMode::Dense => CompressionAccounting::dense(),
+                ExecMode::Factored => cm.accounting.clone(),
+            };
+            let rep = macs::decode_report(&cfg, &acc, seq, 1);
+            assert_eq!(pre_macs, rep.prefill_macs, "{}", mode.name());
         }
     }
 

@@ -364,7 +364,8 @@ fn prop_serve_engine_schedule_invariant() {
     let reqs = || synth_requests(&cfg, 7, 10, 5);
     let run = |workers: usize, max_batch: usize| {
         let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
-        let engine = ServeEngine::new(model, ServeConfig { workers, max_batch });
+        let engine =
+            ServeEngine::new(model, ServeConfig { workers, max_batch, ..Default::default() });
         engine.run(reqs()).unwrap()
     };
     let (base, base_stats) = run(1, 1);
@@ -415,6 +416,7 @@ fn prop_kv_decode_matches_recompute_decode() {
             sampling: Sampling::Greedy,
             seed: case,
             eos: None,
+            ..DecodeConfig::default()
         };
         let reqs = synth_gen_requests(&cfg, 2 + rng.below(4), prompt_len, case * 13 + 3);
         for mode in [ExecMode::Dense, ExecMode::Factored] {
@@ -482,6 +484,7 @@ fn prop_scheduler_admission_fifo_never_starves() {
             sampling: Sampling::Greedy,
             seed: case,
             eos: None,
+            ..DecodeConfig::default()
         };
         let (results, stats) =
             DecodeScheduler::new(&model, config).run(reqs).unwrap();
@@ -507,6 +510,133 @@ fn prop_scheduler_admission_fifo_never_starves() {
         );
         if n > slots {
             assert!(stats.mid_run_admissions > 0, "case {case}: queue must drain mid-run");
+        }
+    }
+}
+
+/// Property: the row-sharded `par_matmul_*` kernels are bitwise identical
+/// to their serial twins for random shapes and any thread count — the
+/// exec core's determinism contract at the kernel level.
+#[test]
+fn prop_par_matmuls_bitwise_equal_serial_for_any_threads() {
+    use llm_rom::exec::ExecPool;
+    use llm_rom::linalg::{
+        matmul_f32, matmul_transb_blocked_f32, par_matmul, par_matmul_f32,
+        par_matmul_transb_blocked_f32,
+    };
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 2657 + 11);
+        let m = 1 + rng.below(90);
+        let k = 1 + rng.below(60);
+        let n = 1 + rng.below(90);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let a64 = Matrix::from_f32(m, k, &a);
+        let b64 = Matrix::from_f32(k, n, &b);
+        let want = matmul_f32(&a, &b, m, k, n);
+        let want_tb = matmul_transb_blocked_f32(&a, &bt, m, k, n);
+        let want64 = matmul(&a64, &b64);
+        let threads = 1 + rng.below(9);
+        let pool = ExecPool::new(threads);
+        assert_eq!(
+            par_matmul_f32(&a, &b, m, k, n, &pool),
+            want,
+            "case {case}: {m}x{k}x{n} t{threads}"
+        );
+        assert_eq!(
+            par_matmul_transb_blocked_f32(&a, &bt, m, k, n, &pool),
+            want_tb,
+            "case {case}: transb {m}x{k}x{n} t{threads}"
+        );
+        assert_eq!(
+            par_matmul(&a64, &b64, &pool).data(),
+            want64.data(),
+            "case {case}: f64 {m}x{k}x{n} t{threads}"
+        );
+    }
+}
+
+/// Property: the whole compression pipeline is thread-count invariant —
+/// the serialized `.rtz` artifact bytes and the accounting of an offline
+/// `rom-weight-svd` run are identical at `--threads 1/2/8`.
+#[test]
+fn prop_artifact_bytes_invariant_to_threads() {
+    use llm_rom::exec::ExecConfig;
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join(format!("exec_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..4u64 {
+        let params = random_params(&cfg, case * 31 + 5);
+        let budget = 0.4 + 0.15 * case as f64;
+        let artifact_bytes = |threads: usize| {
+            let session =
+                CompressionSession::offline(cfg.clone()).with_exec(ExecConfig::with_threads(threads));
+            let mut cm = session
+                .compress_at("rom-weight-svd", &params, budget, &mut EmptyStream)
+                .unwrap();
+            // timings are wall-clock profiling data and differ run to run
+            // even at equal thread counts — blank them so the byte compare
+            // covers exactly the deterministic payload (params, factors,
+            // accounting, provenance)
+            cm.timings.clear();
+            let path = dir.join(format!("t{threads}_{case}.rtz"));
+            cm.save(&path).unwrap();
+            (std::fs::read(&path).unwrap(), cm.accounting.layers.len())
+        };
+        let (bytes1, layers1) = artifact_bytes(1);
+        for threads in [2usize, 8] {
+            let (bytes_n, layers_n) = artifact_bytes(threads);
+            assert_eq!(layers_n, layers1, "case {case} t{threads}: accounting moved");
+            assert_eq!(
+                bytes_n, bytes1,
+                "case {case} t{threads}: .rtz bytes not identical across thread counts"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: greedy decode token streams (and executed MACs) are invariant
+/// to the `--threads` knob for random configs, slot counts, and budgets.
+#[test]
+fn prop_decode_streams_invariant_to_threads() {
+    use llm_rom::decode::{synth_gen_requests, DecodeConfig, DecodeScheduler, Sampling};
+    use llm_rom::exec::ExecConfig;
+    use llm_rom::serve::{demo_artifact, ExecMode, ServeModel};
+    for case in 0..5u64 {
+        let mut rng = Rng::new(case * 4241 + 29);
+        let cfg = ModelConfig {
+            vocab: 40 + rng.below(30),
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            ..ModelConfig::mini()
+        };
+        let cm = demo_artifact(&cfg, 0.4 + rng.f64() * 0.4, case * 3 + 7).unwrap();
+        let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let prompt_len = 3 + rng.below(6);
+        let max_new = 3 + rng.below(6);
+        let slots = 1 + rng.below(3);
+        let reqs = synth_gen_requests(&cfg, 2 + rng.below(4), prompt_len, case * 17 + 1);
+        let run = |threads: usize| {
+            let config = DecodeConfig {
+                slots,
+                capacity: prompt_len + max_new,
+                max_new,
+                sampling: Sampling::Greedy,
+                seed: case,
+                eos: None,
+                exec: ExecConfig::with_threads(threads),
+                ..DecodeConfig::default()
+            };
+            let (results, _) = DecodeScheduler::new(&model, config).run(reqs.clone()).unwrap();
+            results.into_iter().map(|r| (r.id, r.tokens, r.macs)).collect::<Vec<_>>()
+        };
+        let serial = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads), serial, "case {case} t{threads}: streams moved");
         }
     }
 }

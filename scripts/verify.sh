@@ -16,17 +16,32 @@ cargo build --release --examples --benches
 echo "== cargo test -q =="
 cargo test -q
 
-# Serve smoke test: builds a mini artifact offline, round-trips it through
-# .rtz, and checks factored execution against the dense path (logits ≤1e-4,
-# MACs == analytic accounting). Needs no AOT artifacts or PJRT.
-echo "== repro serve --self-check =="
-./target/release/repro serve --self-check
-
-# Decode smoke test: KV-cached incremental decode ≡ full-recompute forward
-# (logits ≤1e-4, identical greedy streams under continuous batching, MACs
-# == analytic decode accounting, factored-KV < dense-recompute). Offline.
-echo "== repro generate --self-check =="
-./target/release/repro generate --self-check
+# Serve + decode smoke tests, at --threads 1 AND --threads 4: each run
+# asserts its own invariants (factored ≡ dense logits ≤1e-4, KV ≡ recompute
+# streams, MACs == analytic accounting), and everything the self-checks
+# print is deterministic — so any divergence between the two thread counts
+# is a determinism regression in the exec core and fails the gate here.
+for check in "serve" "generate"; do
+  echo "== repro $check --self-check --threads 1 =="
+  if ! out_t1=$(./target/release/repro "$check" --self-check --threads 1); then
+    echo "$out_t1"
+    echo "verify: FAILED — repro $check --self-check --threads 1" >&2
+    exit 1
+  fi
+  echo "$out_t1"
+  echo "== repro $check --self-check --threads 4 =="
+  if ! out_t4=$(./target/release/repro "$check" --self-check --threads 4); then
+    echo "$out_t4"
+    echo "verify: FAILED — repro $check --self-check --threads 4" >&2
+    exit 1
+  fi
+  echo "$out_t4"
+  if [ "$out_t1" != "$out_t4" ]; then
+    echo "verify: FAILED — repro $check --self-check diverges between --threads 1 and 4" >&2
+    diff <(echo "$out_t1") <(echo "$out_t4") >&2 || true
+    exit 1
+  fi
+done
 
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
