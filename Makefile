@@ -15,8 +15,10 @@ test:
 # Machine-readable serving/decoding/scaling benchmarks, tracked across PRs
 # (BENCH_serve.json / BENCH_decode.json / BENCH_parallel.json at the repo
 # root). Offline: all fall back to a synthetic mini artifact when no --ckpt
-# is given. BENCH_parallel.json captures 1-vs-4-thread tokens/sec and
-# compress wall-clock so the perf trajectory records scaling.
+# is given. BENCH_decode.json records TTFT/inter-token percentiles derived
+# from the engine core's per-token event timeline (latency_source:
+# "event-timeline"); BENCH_parallel.json captures 1-vs-4-thread tokens/sec
+# and compress wall-clock so the perf trajectory records scaling.
 bench: build
 	cd rust && ./target/release/repro bench-serve --json ../BENCH_serve.json
 	cd rust && ./target/release/repro bench-decode --json ../BENCH_decode.json

@@ -83,7 +83,7 @@ fn main() -> Result<()> {
         println!(
             "  request {}: admitted #{} -> {} tokens ({}), ttft {:.2}ms",
             r.id,
-            r.admitted,
+            r.admitted.expect("every request here runs to completion"),
             r.tokens.len(),
             r.finish.name(),
             r.ttft_s * 1e3

@@ -1,0 +1,187 @@
+//! Streaming generation walkthrough — the event-driven session API of the
+//! unified inference core, end to end and fully offline (no AOT
+//! artifacts, no PJRT):
+//!
+//! 1. compress a mini model offline and load it in factored form
+//!    (`r(d1+d2)` MACs per token),
+//! 2. drive the callback API ([`DecodeScheduler::run_streaming`]): tokens
+//!    printed the instant they are sampled, interleaved across requests
+//!    exactly as the continuous-batching scheduler produces them,
+//! 3. drive a raw [`Session`] by hand — bounded-queue backpressure,
+//!    explicit `step()`s, per-event handling, and a mid-flight
+//!    `cancel()` that frees a slot for a queued request,
+//! 4. mix `Score` and `Generate` requests in one session (the serve and
+//!    decode front-ends share this one lifecycle),
+//! 5. check the streaming invariant: concatenated `Token` events equal
+//!    the batch `run()` streams, bitwise.
+//!
+//! ```bash
+//! cargo run --release --example streaming_generation
+//! ```
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+use llm_rom::decode::{DecodeConfig, DecodeScheduler, EventKind, Sampling, StreamControl};
+use llm_rom::engine::{EngineConfig, EngineCore, FinishReason, InferenceRequest};
+use llm_rom::model::ModelConfig;
+use llm_rom::serve::{self, ExecMode, ServeModel};
+
+fn main() -> Result<()> {
+    let cfg = ModelConfig::mini();
+    println!(
+        "== stage 1: offline weight-space ROM @ 50% budget (MiniLLaMA d={} L={}) ==",
+        cfg.d_model, cfg.n_layers
+    );
+    let cm = serve::demo_artifact(&cfg, 0.5, 42)?;
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored)?;
+    println!(
+        "loaded factored: {}/{} matrices execute as two skinny matmuls",
+        model.n_factored(),
+        7 * cfg.n_layers
+    );
+
+    println!("\n== stage 2: the callback API — tokens as they are produced ==");
+    let config = DecodeConfig {
+        slots: 2,
+        capacity: 10 + 8,
+        max_new: 8,
+        sampling: Sampling::Greedy,
+        seed: 5,
+        eos: None,
+        ..DecodeConfig::default()
+    };
+    let scheduler = DecodeScheduler::new(&model, config);
+    let reqs = llm_rom::decode::synth_gen_requests(&cfg, 5, 10, 5);
+    let mut token_events = 0usize;
+    let (results, stats) = scheduler.run_streaming(reqs.clone(), |ev| {
+        match &ev.kind {
+            EventKind::Admitted { seq } => println!("  [r{} admitted as #{seq}]", ev.id),
+            EventKind::Prefilled { prompt_len, ttft_s } => {
+                println!("  [r{} prefilled {prompt_len} tokens, ttft {:.2}ms]", ev.id, ttft_s * 1e3)
+            }
+            EventKind::Token { index, token, .. } => {
+                token_events += 1;
+                if *index == 0 {
+                    println!("  [r{} first token: {token}]", ev.id);
+                }
+            }
+            EventKind::Finished { reason, tokens } => {
+                println!("  [r{} finished: {tokens} tokens, {}]", ev.id, reason.name())
+            }
+        }
+        StreamControl::Continue
+    })?;
+    println!(
+        "streamed {token_events} Token events for {} generated tokens — \
+     ttft p95 {:.2}ms, inter-token p95 {:.2}ms (percentiles from the event timeline)",
+        stats.generated_tokens(),
+        stats.ttft.p95 * 1e3,
+        stats.inter_token.p95 * 1e3,
+    );
+    assert_eq!(token_events, stats.generated_tokens());
+
+    println!("\n== stage 3: a hand-driven session — backpressure and cancellation ==");
+    // a deliberately tiny admission queue: submissions bounce until steps
+    // drain slots (the backpressure contract of a loaded server)
+    let core = EngineCore::new(
+        &model,
+        EngineConfig {
+            slots: 2,
+            queue_cap: 2,
+            capacity: 10 + 8,
+            max_new: 8,
+            sampling: Sampling::Greedy,
+            seed: 5,
+            eos: None,
+            ..EngineConfig::default()
+        },
+    );
+    let mut session = core.session();
+    let mut waiting: VecDeque<InferenceRequest> =
+        reqs.clone().into_iter().map(Into::into).collect();
+    let mut bounced = 0usize;
+    let mut cancelled_id: Option<usize> = None;
+    loop {
+        while let Some(req) = waiting.pop_front() {
+            if let Some(back) = session.try_submit(req)? {
+                bounced += 1;
+                waiting.push_front(back);
+                break; // queue full: step the engine before resubmitting
+            }
+        }
+        let worked = session.step()?;
+        for ev in session.take_events() {
+            // cancel request 3 the moment its second token appears
+            if cancelled_id.is_none() {
+                if let EventKind::Token { index: 1.., .. } = ev.kind {
+                    if ev.id == 3 {
+                        session.cancel(3);
+                        cancelled_id = Some(3);
+                    }
+                }
+            }
+        }
+        if !worked && waiting.is_empty() {
+            break;
+        }
+    }
+    let (hand_results, hand_stats) = session.finish();
+    println!(
+        "queue cap 2: {bounced} submissions bounced (backpressure), \
+         {} mid-run admissions reused freed slots",
+        hand_stats.mid_run_admissions
+    );
+    let r3 = hand_results.iter().find(|f| f.id == 3).expect("request 3 finished");
+    println!(
+        "request 3: cancelled mid-flight with {} tokens ({})",
+        r3.tokens.len(),
+        r3.reason.name()
+    );
+    assert_eq!(r3.reason, FinishReason::Cancelled);
+    assert!(bounced > 0, "5 requests through a 2-deep queue must bounce");
+
+    println!("\n== stage 4: Score and Generate share one session ==");
+    let mixed: Vec<InferenceRequest> = reqs
+        .iter()
+        .take(4)
+        .map(|r| {
+            if r.id % 2 == 0 {
+                InferenceRequest::score(r.id, r.prompt.clone())
+            } else {
+                InferenceRequest::generate(r.id, r.prompt.clone(), Some(4))
+            }
+        })
+        .collect();
+    let (mixed_results, mixed_stats) = core.run(mixed)?;
+    for f in &mixed_results {
+        match f.reason {
+            FinishReason::Scored => println!(
+                "  r{}: scored {} positions ({} logits)",
+                f.id,
+                f.prompt_len,
+                f.logits.len()
+            ),
+            _ => println!("  r{}: generated {} tokens ({})", f.id, f.tokens.len(), f.reason.name()),
+        }
+    }
+    println!(
+        "one lifecycle, two request kinds: {} prompt positions scored + {} tokens generated",
+        mixed_stats.scored_tokens, mixed_stats.generated_tokens
+    );
+
+    println!("\n== stage 5: streamed events ≡ batch run ==");
+    let (batch, _) = scheduler.run(reqs.clone())?;
+    let mut streamed_tokens: Vec<Vec<i32>> = vec![Vec::new(); reqs.len()];
+    scheduler.run_streaming(reqs, |ev| {
+        if let EventKind::Token { token, .. } = ev.kind {
+            streamed_tokens[ev.id].push(token);
+        }
+        StreamControl::Continue
+    })?;
+    for b in &batch {
+        assert_eq!(streamed_tokens[b.id], b.tokens, "request {} diverged", b.id);
+    }
+    println!("all {} request streams identical, event path vs batch path", batch.len());
+    Ok(())
+}

@@ -23,7 +23,7 @@ fn main() {
         // one dry run to know the workload size (EOS may end streams early)
         let model = ServeModel::from_artifact(&cm, ExecMode::Factored).expect("model");
         let (_, stats) = DecodeScheduler::new(&model, config).run(reqs.clone()).expect("decode");
-        stats.generated_tokens
+        stats.generated_tokens()
     };
     println!("# decode bench: {} requests, {generated} generated tokens per run", reqs.len());
 

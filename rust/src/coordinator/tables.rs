@@ -201,7 +201,7 @@ pub struct ServeBench {
 impl ServeBench {
     /// Dense-to-factored total MAC ratio.
     pub fn mac_reduction(&self) -> f64 {
-        let (d, f) = (&self.rows[0].stats, &self.rows[1].stats);
+        let (d, f) = (&self.rows[0].stats.core, &self.rows[1].stats.core);
         if f.macs > 0 {
             d.macs as f64 / f.macs as f64
         } else {
@@ -211,7 +211,7 @@ impl ServeBench {
 
     /// Dense-to-factored wall-clock ratio.
     pub fn speedup(&self) -> f64 {
-        let (d, f) = (&self.rows[0].stats, &self.rows[1].stats);
+        let (d, f) = (&self.rows[0].stats.core, &self.rows[1].stats.core);
         if f.wall_s > 0.0 {
             d.wall_s / f.wall_s
         } else {
@@ -233,7 +233,7 @@ impl ServeBench {
                 s.macs_per_token() as f64 / 1e6,
                 s.s_per_token() * 1e6,
                 s.tokens_per_s(),
-                s.latency.p95 * 1e3,
+                s.core.latency.p95 * 1e3,
                 self.threads,
             ));
         }
@@ -256,16 +256,16 @@ impl ServeBench {
                 json_obj(vec![
                     ("mode", Json::Str(row.mode.name().to_string())),
                     ("factored_layers", Json::Num(row.n_factored as f64)),
-                    ("requests", Json::Num(s.requests as f64)),
-                    ("tokens", Json::Num(s.tokens as f64)),
+                    ("requests", Json::Num(s.core.requests as f64)),
+                    ("tokens", Json::Num(s.core.tokens as f64)),
                     ("macs_per_token", Json::Num(s.macs_per_token() as f64)),
                     ("tokens_per_s", Json::Num(s.tokens_per_s())),
                     ("us_per_token", Json::Num(s.s_per_token() * 1e6)),
-                    ("wall_s", Json::Num(s.wall_s)),
-                    ("mean_latency_s", Json::Num(s.latency.mean)),
-                    ("p50_latency_s", Json::Num(s.latency.p50)),
-                    ("p95_latency_s", Json::Num(s.latency.p95)),
-                    ("max_latency_s", Json::Num(s.latency.max)),
+                    ("wall_s", Json::Num(s.core.wall_s)),
+                    ("mean_latency_s", Json::Num(s.core.latency.mean)),
+                    ("p50_latency_s", Json::Num(s.core.latency.p50)),
+                    ("p95_latency_s", Json::Num(s.core.latency.p95)),
+                    ("max_latency_s", Json::Num(s.core.latency.max)),
                 ])
             })
             .collect();
@@ -410,13 +410,13 @@ impl DecodeBench {
                 let s = &row.stats;
                 json_obj(vec![
                     ("method", Json::Str(row.method.to_string())),
-                    ("requests", Json::Num(s.requests as f64)),
+                    ("requests", Json::Num(s.core.requests as f64)),
                     ("prompt_tokens", Json::Num(s.prompt_tokens as f64)),
-                    ("generated_tokens", Json::Num(s.generated_tokens as f64)),
+                    ("generated_tokens", Json::Num(s.generated_tokens() as f64)),
                     ("macs_per_token", Json::Num(s.macs_per_generated_token() as f64)),
                     ("mac_savings_vs_recompute", Json::Num(s.mac_savings())),
                     ("tokens_per_s", Json::Num(s.tokens_per_s())),
-                    ("wall_s", Json::Num(s.wall_s)),
+                    ("wall_s", Json::Num(s.core.wall_s)),
                     ("ttft_mean_s", Json::Num(s.ttft.mean)),
                     ("ttft_p50_s", Json::Num(s.ttft.p50)),
                     ("ttft_p95_s", Json::Num(s.ttft.p95)),
@@ -430,6 +430,9 @@ impl DecodeBench {
             .collect();
         json_obj(vec![
             ("bench", Json::Str("decode".to_string())),
+            // TTFT/inter-token percentiles in `rows` are derived from the
+            // engine core's per-token event timestamps (the event timeline)
+            ("latency_source", Json::Str("event-timeline".to_string())),
             ("requests", Json::Num(self.requests as f64)),
             ("prompt_len", Json::Num(self.prompt_len as f64)),
             ("max_new", Json::Num(self.max_new as f64)),

@@ -4,26 +4,31 @@
 //! The paper's serving claim (`r(d1+d2)` instead of `d1·d2` MACs per
 //! token) pays off at scale only when tokens are *generated*
 //! incrementally, not re-forwarded from scratch. This module is that
-//! generation engine, layered on [`crate::serve`]:
+//! generation engine, layered on [`crate::serve`] and — since the request
+//! lifecycle moved into the shared streaming core — on [`crate::engine`]:
 //!
 //! - [`KvCache`] / [`KvCachePool`] — preallocated per-layer K/V blocks per
 //!   sequence slot, keyed off [`crate::model::ModelConfig`]; the substrate
 //!   of [`crate::serve::ServeModel::forward_step`], the single-token
 //!   incremental forward that applies the shared rope/causal-attention
 //!   helpers in both dense and factored [`crate::serve::ExecMode`].
-//! - [`DecodeScheduler`] — prefill/decode phase split with request-level
-//!   continuous batching: FIFO admission into free slots (including
-//!   *mid-run*, as finished sequences are evicted on EOS/max-tokens) and
-//!   round-robin decode rounds so no request starves.
+//! - [`DecodeScheduler`] — the batch front door over the engine core's
+//!   continuous-batching lifecycle: FIFO admission into free slots
+//!   (including *mid-run*, as finished sequences are evicted on
+//!   EOS/max-tokens/cancel/deadline) and round-robin decode rounds so no
+//!   request starves. Streaming callers open
+//!   [`DecodeScheduler::session`] and drain per-token events instead.
 //! - [`Sampling`] — greedy / temperature / top-k next-token selection,
 //!   seeded through [`crate::util::Rng`] per request for reproducibility.
-//! - [`DecodeStats`] — time-to-first-token and inter-token latency
-//!   summaries, throughput, and executed-vs-recompute MAC accounting that
+//! - [`DecodeStats`] — the shared [`crate::util::RequestStats`] core plus
+//!   time-to-first-token and inter-token latency summaries (derived from
+//!   the event timeline) and executed-vs-recompute MAC accounting that
 //!   matches [`crate::model::macs::decode_report`] exactly.
 //!
-//! `repro generate` (incl. the fully-offline `--self-check`) and
-//! `repro bench-decode` drive this module; [`run_recompute`] is the
-//! cache-less baseline those commands compare against.
+//! `repro generate` (incl. `--stream` and the fully-offline
+//! `--self-check`s) and `repro bench-decode` drive this module;
+//! [`run_recompute`] is the cache-less baseline those commands compare
+//! against.
 
 pub mod kv;
 pub mod sampler;
@@ -34,27 +39,34 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::data::Tokenizer;
 use crate::model::ModelConfig;
-use crate::serve::{synth_requests, ServeModel};
-use crate::util::LatencySummary;
+use crate::serve::ServeModel;
+use crate::util::{LatencySummary, RequestStats};
 
 pub use kv::{kv_slot_bytes, KvCache, KvCachePool};
 pub use sampler::Sampling;
-pub use scheduler::{DecodeConfig, DecodeScheduler, FinishReason, GenRequest, GenResult};
+pub use scheduler::{
+    DecodeConfig, DecodeScheduler, Event, EventKind, FinishReason, GenRequest, GenResult,
+    StreamControl,
+};
 pub use stats::DecodeStats;
 
 /// Deterministic synthetic generation workload: `n` requests of
-/// `prompt_len` random in-vocab tokens (same token streams as
-/// [`crate::serve::synth_requests`] at the same seed).
+/// `prompt_len` random in-vocab tokens — a [`GenRequest`] view over the
+/// one shared stream generator [`crate::engine::synth_token_streams`]
+/// (same token streams as [`crate::serve::synth_requests`] at the same
+/// seed).
 pub fn synth_gen_requests(
     cfg: &ModelConfig,
     n: usize,
     prompt_len: usize,
     seed: u64,
 ) -> Vec<GenRequest> {
-    synth_requests(cfg, n, prompt_len, seed)
+    crate::engine::synth_token_streams(cfg, n, prompt_len, seed)
         .into_iter()
-        .map(|r| GenRequest { id: r.id, prompt: r.tokens, max_new: None })
+        .enumerate()
+        .map(|(id, prompt)| GenRequest { id, prompt, max_new: None, deadline_s: None })
         .collect()
 }
 
@@ -71,6 +83,7 @@ pub fn run_recompute(
     config: &DecodeConfig,
 ) -> Result<(Vec<GenResult>, DecodeStats)> {
     let vocab = model.config().vocab;
+    let tokenizer = Tokenizer::new();
     // the baseline decodes sequentially; its growing-prefix forwards still
     // row-shard over the same thread budget (intra-op only)
     let pool = config.exec.pool();
@@ -111,11 +124,13 @@ pub fn run_recompute(
             }
             seq.push(next);
         }
+        let text = tokenizer.decode(&tokens);
         results.push(GenResult {
             id: req.id,
-            admitted: order,
+            admitted: Some(order),
             prompt_len: req.prompt.len(),
             tokens,
+            text,
             finish,
             ttft_s,
             latency_s: last_s,
@@ -130,11 +145,16 @@ pub fn run_recompute(
     let generated: usize = results.iter().map(|r| r.tokens.len()).sum();
     let total_macs: u128 = results.iter().map(|r| r.macs).sum();
     let stats = DecodeStats {
-        requests: results.len(),
+        core: RequestStats {
+            requests: results.len(),
+            tokens: generated,
+            macs: total_macs,
+            wall_s,
+            latency: LatencySummary::from_unsorted(
+                results.iter().map(|r| r.latency_s).collect(),
+            ),
+        },
         prompt_tokens,
-        generated_tokens: generated,
-        wall_s,
-        macs: total_macs,
         recompute_macs: total_macs,
         ttft: LatencySummary::from_unsorted(ttfts),
         inter_token: LatencySummary::from_unsorted(itls),
@@ -162,7 +182,13 @@ mod tests {
             assert_eq!(x.prompt, y.prompt);
             assert_eq!(x.prompt.len(), 9);
             assert!(x.max_new.is_none());
+            assert!(x.deadline_s.is_none());
             assert!(x.prompt.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+        // identical streams to the serve-side helper: one shared generator
+        let s = crate::serve::synth_requests(&cfg, 4, 9, 3);
+        for (g, r) in a.iter().zip(&s) {
+            assert_eq!(g.prompt, r.tokens);
         }
     }
 
@@ -196,13 +222,18 @@ mod tests {
                 assert_eq!(a.id, b.id);
                 assert_eq!(a.tokens, b.tokens, "{}: KV stream diverged", mode.name());
                 assert_eq!(a.finish, b.finish);
+                assert_eq!(a.text, b.text, "{}: decoded text diverged", mode.name());
                 let rep = macs::decode_report(&cfg, &acc, a.prompt_len, a.tokens.len());
                 assert_eq!(a.macs, rep.cached_macs(), "{}: executed != analytic", mode.name());
                 assert_eq!(a.recompute_macs, rep.recompute_macs);
                 assert_eq!(b.macs, rep.recompute_macs, "recompute executed != analytic");
             }
-            assert_eq!(kv_stats.recompute_macs, rc_stats.macs);
-            assert!(kv_stats.macs < rc_stats.macs, "{}: cache must save MACs", mode.name());
+            assert_eq!(kv_stats.recompute_macs, rc_stats.core.macs);
+            assert!(
+                kv_stats.core.macs < rc_stats.core.macs,
+                "{}: cache must save MACs",
+                mode.name()
+            );
         }
     }
 

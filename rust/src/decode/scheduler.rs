@@ -1,42 +1,46 @@
-//! Continuous-batching decode scheduler: prefill/decode phase split,
-//! mid-run admission, EOS/max-token eviction, round-robin fairness.
+//! Continuous-batching decode scheduler — now a thin adapter over the
+//! shared streaming core ([`crate::engine`]).
 //!
-//! The scheduler owns a [`KvCachePool`] of `slots` preallocated caches.
-//! Requests wait in a FIFO; whenever a slot is free the head of the queue
-//! is admitted — its prompt is prefilled through the cache (the LM head
-//! sliced to the final position, the only row the sampler reads) and its
-//! first token sampled (time-to-first-token). Active sequences then
-//! advance in *decode rounds*: every round steps each active sequence by
-//! exactly one token, in admission order, so no request can starve while
-//! another streams ahead. Sequences finishing (EOS or their token budget)
-//! are evicted at the end of the round, their slots released, and the
-//! queue drains into the freed slots *mid-run* — the continuous-batching
-//! behavior, observable as [`DecodeStats::mid_run_admissions`].
+//! The scheduling semantics are unchanged from the original
+//! implementation (they are the engine core's contract): requests wait in
+//! a FIFO, free KV slots admit the queue head, prompts prefill with a
+//! last-position LM head and sample their first token
+//! (time-to-first-token), and active sequences advance one token per
+//! *decode round* in admission order so no request starves. Sequences
+//! finishing (EOS, token budget — or now a [`Session::cancel`] or a
+//! per-request deadline) are evicted, their slots released, and the queue
+//! drains into the freed slots *mid-run*
+//! ([`DecodeStats::mid_run_admissions`]).
 //!
-//! Parallelism ([`DecodeConfig::exec`]): prefills of a freshly admitted
-//! batch and the per-sequence steps of a decode round fan out over the
-//! shared [`ExecPool`] (each active sequence owns its cache, so steps are
-//! embarrassingly parallel); leftover thread budget goes to row-sharded
-//! matmuls inside each forward, so request-level and intra-op parallelism
-//! split one knob and can't oversubscribe.
+//! What this file owns is only the *batch front door*: [`GenRequest`] /
+//! [`GenResult`] and the [`DecodeScheduler::run`] signature every caller,
+//! bench, and self-check already uses. `run` validates the whole batch
+//! up-front (a bad request fails before any compute), feeds the session
+//! under queue backpressure, and projects [`FinishedRequest`]s and
+//! [`CoreStats`] back into decode vocabulary. Streaming callers drive
+//! [`crate::engine::Session`] directly and receive the same token
+//! streams, bitwise, in event form.
 //!
-//! Determinism: each request samples from its own [`Rng`] stream derived
-//! from `seed ^ id`, so token streams are identical run-to-run and
-//! independent of slot assignment, admission timing, the slot count —
-//! and, because every parallel kernel is bitwise stable, the thread count.
+//! Determinism: each request samples from its own [`crate::util::Rng`]
+//! stream derived from `seed ^ id`, so token streams are identical
+//! run-to-run and independent of slot assignment, admission timing, the
+//! slot count — and, because every parallel kernel is bitwise stable, the
+//! thread count.
 
-use std::collections::VecDeque;
-use std::time::Instant;
+use anyhow::Result;
 
-use anyhow::{ensure, Result};
-
-use crate::exec::{ExecConfig, ExecPool};
+use crate::engine::{
+    CoreStats, EngineConfig, EngineCore, FinishedRequest, InferenceRequest, Session,
+};
+use crate::exec::ExecConfig;
 use crate::serve::ServeModel;
-use crate::util::{LatencySummary, Rng};
+use crate::util::RequestStats;
 
-use super::kv::{KvCache, KvCachePool};
 use super::sampler::Sampling;
 use super::stats::DecodeStats;
+
+pub use crate::engine::{Event, EventKind, FinishReason, StreamControl};
+pub(crate) use crate::engine::request_rng;
 
 /// One generation request.
 #[derive(Debug, Clone)]
@@ -46,25 +50,9 @@ pub struct GenRequest {
     pub prompt: Vec<i32>,
     /// Per-request generation cap; `None` uses [`DecodeConfig::max_new`].
     pub max_new: Option<usize>,
-}
-
-/// Why a sequence stopped.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FinishReason {
-    /// The configured end-of-sequence token was sampled (it is included as
-    /// the last generated token).
-    Eos,
-    /// The request's token budget was reached.
-    MaxTokens,
-}
-
-impl FinishReason {
-    pub fn name(self) -> &'static str {
-        match self {
-            FinishReason::Eos => "eos",
-            FinishReason::MaxTokens => "max-tokens",
-        }
-    }
+    /// Optional wall-clock budget (seconds from run start); an unfinished
+    /// request is evicted with [`FinishReason::Deadline`] on expiry.
+    pub deadline_s: Option<f64>,
 }
 
 /// One finished generation.
@@ -73,10 +61,15 @@ pub struct GenResult {
     pub id: usize,
     /// Admission sequence number (0-based): the order the scheduler
     /// granted slots, which for the FIFO queue equals submission order.
-    pub admitted: usize,
+    /// `None` when the request was cancelled straight from the queue,
+    /// before it ever took a slot.
+    pub admitted: Option<usize>,
     pub prompt_len: usize,
     /// Generated tokens (terminating EOS included when present).
     pub tokens: Vec<i32>,
+    /// `tokens` decoded through the byte-level tokenizer (specials
+    /// skipped) — what `repro generate` prints.
+    pub text: String,
     pub finish: FinishReason,
     /// Run start → first token (queue wait + prefill).
     pub ttft_s: f64,
@@ -87,6 +80,23 @@ pub struct GenResult {
     /// Analytic MACs a full-recompute decode of the same stream would
     /// execute (sum of from-scratch forwards over the growing prefix).
     pub recompute_macs: u128,
+}
+
+impl GenResult {
+    pub(crate) fn from_finished(f: FinishedRequest) -> GenResult {
+        GenResult {
+            id: f.id,
+            admitted: f.admitted,
+            prompt_len: f.prompt_len,
+            tokens: f.tokens,
+            text: f.text,
+            finish: f.reason,
+            ttft_s: f.ttft_s,
+            latency_s: f.latency_s,
+            macs: f.macs,
+            recompute_macs: f.recompute_macs,
+        }
+    }
 }
 
 /// Scheduler knobs.
@@ -127,41 +137,46 @@ impl Default for DecodeConfig {
     }
 }
 
-/// The per-request RNG stream: independent of scheduling, stable across
-/// slot counts — shared with the recompute baseline so both paths draw
-/// identical samples.
-pub(crate) fn request_rng(seed: u64, id: usize) -> Rng {
-    Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD0DE))
-}
-
-/// A sequence occupying a slot. Owns its KV cache for the duration of the
-/// run, so decode rounds can step every active sequence on worker threads
-/// without aliasing the pool.
-struct Active {
-    id: usize,
-    admitted: usize,
-    prompt: Vec<i32>,
-    max_new: usize,
-    tokens: Vec<i32>,
-    cache: KvCache,
-    rng: Rng,
-    macs: u128,
-    recompute_macs: u128,
-    ttft_s: f64,
-    last_s: f64,
-    /// Inter-token latency of this sequence's step in the current round.
-    itl_s: f64,
-    done: Option<FinishReason>,
-}
-
-impl Active {
-    /// Apply the stopping rules after `token` was appended.
-    fn note_stop(&mut self, eos: Option<i32>, token: i32) {
-        if Some(token) == eos {
-            self.done = Some(FinishReason::Eos);
-        } else if self.tokens.len() >= self.max_new {
-            self.done = Some(FinishReason::MaxTokens);
+impl DecodeConfig {
+    /// This front-end's knobs as an [`EngineConfig`]: every free slot is
+    /// admissible per step (`max_admit = 0`) and the queue is bounded by
+    /// the caller-visible workload (`queue_cap`).
+    pub(crate) fn engine_config(&self, queue_cap: usize) -> EngineConfig {
+        EngineConfig {
+            slots: self.slots.max(1),
+            queue_cap: queue_cap.max(1),
+            max_admit: 0,
+            capacity: self.capacity,
+            max_new: self.max_new,
+            sampling: self.sampling,
+            seed: self.seed,
+            eos: self.eos,
+            exec: self.exec,
+            // decode's historical behavior: lane fan-out bounded only by
+            // the thread budget
+            lane_parallelism: 0,
+            max_cache_bytes: self.max_cache_bytes,
         }
+    }
+}
+
+/// Project the core's aggregate stats into decode vocabulary.
+pub(crate) fn decode_stats(cs: CoreStats) -> DecodeStats {
+    DecodeStats {
+        core: RequestStats {
+            requests: cs.requests,
+            tokens: cs.generated_tokens,
+            macs: cs.macs,
+            wall_s: cs.wall_s,
+            latency: cs.latency,
+        },
+        prompt_tokens: cs.prompt_tokens,
+        recompute_macs: cs.recompute_macs,
+        ttft: cs.ttft,
+        inter_token: cs.inter_token,
+        peak_active: cs.peak_active,
+        mid_run_admissions: cs.mid_run_admissions,
+        decode_rounds: cs.decode_rounds,
     }
 }
 
@@ -184,173 +199,58 @@ impl<'m> DecodeScheduler<'m> {
         &self.config
     }
 
-    /// Drive every request to completion. Results are returned in request
-    /// id order with the run's aggregate stats.
-    pub fn run(&self, requests: Vec<GenRequest>) -> Result<(Vec<GenResult>, DecodeStats)> {
-        let cfg = self.model.config();
-        let slots = self.config.slots.max(1);
-        let n = requests.len();
-        let prompt_tokens: usize = requests.iter().map(|r| r.prompt.len()).sum();
-
-        // validate everything up-front so a bad request fails before any
-        // compute is spent
-        for r in &requests {
-            ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
-            let max_new = r.max_new.unwrap_or(self.config.max_new).max(1);
-            ensure!(
-                r.prompt.len() + max_new <= self.config.capacity,
-                "request {}: prompt {} + max_new {max_new} exceeds KV capacity {}",
-                r.id,
-                r.prompt.len(),
-                self.config.capacity
-            );
-        }
-
-        let t0 = Instant::now();
-        let mut pool =
-            KvCachePool::with_cap(cfg, slots, self.config.capacity, self.config.max_cache_bytes)?;
-        let threads = self.config.exec.resolve().max(1);
-        let sampling = self.config.sampling;
-        let eos = self.config.eos;
-        let mut pending: VecDeque<GenRequest> = requests.into();
-        let mut active: Vec<Active> = Vec::new();
-        let mut results: Vec<GenResult> = Vec::with_capacity(n);
-        let mut ttfts: Vec<f64> = Vec::with_capacity(n);
-        let mut itls: Vec<f64> = Vec::new();
-        let (mut admitted_count, mut mid_run) = (0usize, 0usize);
-        let (mut peak_active, mut rounds) = (0usize, 0usize);
-
-        loop {
-            // ---- admission: drain the queue into free slots ----
-            let mut fresh: Vec<Active> = Vec::new();
-            while active.len() + fresh.len() < slots {
-                let Some(req) = pending.pop_front() else { break };
-                let max_new = req.max_new.unwrap_or(self.config.max_new).max(1);
-                let cache = pool.acquire().expect("free cache under the active-count bound");
-                let admitted = admitted_count;
-                admitted_count += 1;
-                // continuous batching: an admission after any eviction means
-                // this request entered a slot another sequence freed mid-run
-                if !results.is_empty() {
-                    mid_run += 1;
-                }
-                let rng = request_rng(self.config.seed, req.id);
-                fresh.push(Active {
-                    id: req.id,
-                    admitted,
-                    prompt: req.prompt,
-                    max_new,
-                    tokens: Vec::new(),
-                    cache,
-                    rng,
-                    macs: 0,
-                    recompute_macs: 0,
-                    ttft_s: 0.0,
-                    last_s: 0.0,
-                    itl_s: 0.0,
-                    done: None,
-                });
-            }
-            if !fresh.is_empty() {
-                // prefill phase: the freshly admitted prompts fan out over
-                // the pool (each owns its cache); leftover thread budget
-                // row-shards the matmuls inside each prefill
-                let n_par = threads.min(fresh.len()).max(1);
-                let outer = ExecPool::new(n_par);
-                let intra = ExecPool::new(threads).split(n_par);
-                outer.try_parallel_for(&mut fresh, |_, a| -> Result<()> {
-                    let (logits, macs) =
-                        self.model.forward_prefill(&a.prompt, &mut a.cache, &intra)?;
-                    let first = sampling.sample(&logits, &mut a.rng);
-                    let now = t0.elapsed().as_secs_f64();
-                    a.macs = macs;
-                    a.recompute_macs = self.model.macs_for(a.prompt.len());
-                    a.ttft_s = now;
-                    a.last_s = now;
-                    a.tokens.push(first);
-                    a.note_stop(eos, first);
-                    Ok(())
-                })?;
-                for a in fresh {
-                    ttfts.push(a.ttft_s);
-                    active.push(a);
-                    peak_active = peak_active.max(active.len());
-                }
-            }
-            evict(&mut active, &mut pool, &mut results);
-            if active.is_empty() {
-                if pending.is_empty() {
-                    break;
-                }
-                continue; // every admission finished instantly; admit more
-            }
-
-            // ---- one decode round: each active sequence advances a token,
-            // all sequences stepping concurrently on the pool ----
-            rounds += 1;
-            let n_par = threads.min(active.len()).max(1);
-            let outer = ExecPool::new(n_par);
-            let intra = ExecPool::new(threads).split(n_par);
-            outer.try_parallel_for(&mut active, |_, a| -> Result<()> {
-                let last_tok = *a.tokens.last().expect("active sequences hold >= 1 token");
-                let (logits, m) =
-                    self.model.forward_step_pooled(last_tok, &mut a.cache, &intra)?;
-                a.macs += m;
-                a.recompute_macs += self.model.macs_for(a.prompt.len() + a.tokens.len());
-                let next = sampling.sample(&logits, &mut a.rng);
-                let now = t0.elapsed().as_secs_f64();
-                a.itl_s = now - a.last_s;
-                a.last_s = now;
-                a.tokens.push(next);
-                a.note_stop(eos, next);
-                Ok(())
-            })?;
-            for a in &active {
-                itls.push(a.itl_s);
-            }
-            evict(&mut active, &mut pool, &mut results);
-        }
-
-        let wall_s = t0.elapsed().as_secs_f64();
-        results.sort_by_key(|r| r.id);
-        let stats = DecodeStats {
-            requests: results.len(),
-            prompt_tokens,
-            generated_tokens: results.iter().map(|r| r.tokens.len()).sum(),
-            wall_s,
-            macs: results.iter().map(|r| r.macs).sum(),
-            recompute_macs: results.iter().map(|r| r.recompute_macs).sum(),
-            ttft: LatencySummary::from_unsorted(ttfts),
-            inter_token: LatencySummary::from_unsorted(itls),
-            peak_active,
-            mid_run_admissions: mid_run,
-            decode_rounds: rounds,
-        };
-        Ok((results, stats))
+    /// An event-driven session over this scheduler's model and knobs —
+    /// the streaming face of the same lifecycle `run` drives in batch.
+    pub fn session(&self, queue_cap: usize) -> Session<'m> {
+        EngineCore::new(self.model, self.config.engine_config(queue_cap)).session()
     }
-}
 
-/// Move finished sequences out of the active set, releasing their caches.
-fn evict(active: &mut Vec<Active>, pool: &mut KvCachePool, results: &mut Vec<GenResult>) {
-    let mut i = 0;
-    while i < active.len() {
-        if let Some(finish) = active[i].done {
-            let a = active.remove(i);
-            pool.release(a.cache);
-            results.push(GenResult {
-                id: a.id,
-                admitted: a.admitted,
-                prompt_len: a.prompt.len(),
-                tokens: a.tokens,
-                finish,
-                ttft_s: a.ttft_s,
-                latency_s: a.last_s,
-                macs: a.macs,
-                recompute_macs: a.recompute_macs,
-            });
-        } else {
-            i += 1;
-        }
+    /// Validate a batch up-front with the core's own rules (so a bad
+    /// request or duplicate id fails before any compute is spent — the
+    /// session would catch each only at its own submission, after earlier
+    /// requests were already served) and convert it for the engine.
+    fn prepare(
+        &self,
+        requests: Vec<GenRequest>,
+    ) -> Result<(EngineConfig, Vec<InferenceRequest>)> {
+        let ecfg = self.config.engine_config(requests.len());
+        let reqs: Vec<InferenceRequest> = requests.into_iter().map(Into::into).collect();
+        ecfg.validate_batch(&reqs)?;
+        Ok((ecfg, reqs))
+    }
+
+    /// Drive every request to completion. Results are returned in request
+    /// id order with the run's aggregate stats. This is the no-event fast
+    /// path: no per-token event or text is materialized.
+    pub fn run(&self, requests: Vec<GenRequest>) -> Result<(Vec<GenResult>, DecodeStats)> {
+        let (ecfg, reqs) = self.prepare(requests)?;
+        let (finished, cs) = EngineCore::new(self.model, ecfg).run(reqs)?;
+        let results = finished.into_iter().map(GenResult::from_finished).collect();
+        Ok((results, decode_stats(cs)))
+    }
+
+    /// The streaming face of [`DecodeScheduler::run`]: identical
+    /// scheduling, token streams, and stats, but every lifecycle step is
+    /// surfaced to `on_event` as it happens — `Admitted`,
+    /// `Prefilled{ttft}`, `Token{id, text}` (one per generated token, in
+    /// deterministic order), `Finished{reason}`. Returning
+    /// [`StreamControl::Cancel`] evicts that event's request at the next
+    /// token boundary (finish reason `Cancelled`, partial stream kept,
+    /// slot recycled to the queue). The concatenated `Token` payloads per
+    /// request are byte-identical to the batch `run()` result — asserted
+    /// by `repro generate --stream --self-check`.
+    pub fn run_streaming<F>(
+        &self,
+        requests: Vec<GenRequest>,
+        on_event: F,
+    ) -> Result<(Vec<GenResult>, DecodeStats)>
+    where
+        F: FnMut(&Event) -> StreamControl,
+    {
+        let (ecfg, reqs) = self.prepare(requests)?;
+        let (finished, cs) = EngineCore::new(self.model, ecfg).run_streaming(reqs, on_event)?;
+        let results = finished.into_iter().map(GenResult::from_finished).collect();
+        Ok((results, decode_stats(cs)))
     }
 }
 
@@ -389,22 +289,24 @@ mod tests {
         assert_eq!(results.len(), 5);
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.id, i, "results sorted by id");
-            assert_eq!(r.admitted, i, "FIFO admission: no request overtakes an earlier one");
+            assert_eq!(r.admitted, Some(i), "FIFO admission: no request overtakes an earlier one");
             assert_eq!(r.prompt_len, 8);
             assert_eq!(r.tokens.len(), 6, "greedy runs to the token budget");
             assert_eq!(r.finish, FinishReason::MaxTokens);
             assert!(r.tokens.iter().all(|&t| (t as usize) < demo_config().vocab));
             assert!(r.ttft_s >= 0.0 && r.ttft_s <= r.latency_s);
             assert!(r.macs > 0 && r.recompute_macs > r.macs);
+            assert_eq!(r.text, crate::data::Tokenizer::new().decode(&r.tokens));
         }
-        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.core.requests, 5);
         assert_eq!(stats.prompt_tokens, 5 * 8);
-        assert_eq!(stats.generated_tokens, 5 * 6);
+        assert_eq!(stats.core.tokens, 5 * 6);
         assert_eq!(stats.peak_active, 2, "2 slots cap concurrency");
         assert!(stats.mid_run_admissions >= 3, "5 requests through 2 slots admit mid-run");
         assert!(stats.mac_savings() > 1.0);
         assert_eq!(stats.ttft.n, 5);
         assert_eq!(stats.inter_token.n, 5 * 5, "max_new-1 steps per request");
+        assert_eq!(stats.core.latency.n, 5, "per-request completion latencies");
     }
 
     #[test]
@@ -492,16 +394,32 @@ mod tests {
     }
 
     #[test]
+    fn per_request_deadline_is_honored_by_the_batch_path() {
+        let m = model(ExecMode::Factored, 63);
+        let mut reqs = requests(3, 4);
+        // expires right after prefill: keeps its first token, steps no more
+        reqs[1].deadline_s = Some(1e-9);
+        let (results, _) = DecodeScheduler::new(&m, config()).run(reqs).unwrap();
+        assert_eq!(results[0].finish, FinishReason::MaxTokens);
+        assert_eq!(results[1].finish, FinishReason::Deadline);
+        assert_eq!(results[1].tokens.len(), 1);
+        assert_eq!(results[2].finish, FinishReason::MaxTokens);
+        assert_eq!(results[2].tokens.len(), 6);
+    }
+
+    #[test]
     fn invalid_requests_fail_before_compute() {
         let m = model(ExecMode::Factored, 61);
         let sched = DecodeScheduler::new(&m, config());
-        let empty = vec![GenRequest { id: 0, prompt: Vec::new(), max_new: None }];
+        let empty =
+            vec![GenRequest { id: 0, prompt: Vec::new(), max_new: None, deadline_s: None }];
         assert!(sched.run(empty).is_err(), "empty prompt");
-        let too_long = vec![GenRequest { id: 0, prompt: vec![1; 40], max_new: None }];
+        let too_long =
+            vec![GenRequest { id: 0, prompt: vec![1; 40], max_new: None, deadline_s: None }];
         assert!(sched.run(too_long).is_err(), "prompt + max_new > capacity");
         let (results, stats) = sched.run(Vec::new()).unwrap();
         assert!(results.is_empty());
-        assert_eq!(stats.generated_tokens, 0);
+        assert_eq!(stats.core.tokens, 0);
         assert_eq!(stats.ttft.n, 0);
     }
 }

@@ -1,36 +1,36 @@
 //! Aggregate accounting for one decode run — the generation-side analog of
-//! [`crate::serve::ServeStats`].
+//! [`crate::serve::ServeStats`], built on the same shared
+//! [`RequestStats`] core ([`crate::util::stats`]).
 //!
-//! Beyond throughput, the decode regime has its own latency anatomy:
-//! time-to-first-token (prefill + queue wait) and inter-token latency
-//! (steady-state step time), both summarized with the small-sample-safe
-//! [`LatencySummary`]. The MAC side carries *two* totals — what the
-//! KV-cached path executed and what a cache-less server re-forwarding the
-//! growing prefix would have executed — so the cache's algorithmic saving
-//! is reported next to the paper's `r(d1+d2)` factorization saving.
+//! Beyond the core's requests/tokens/MACs/latency, the decode regime has
+//! its own latency anatomy: time-to-first-token (prefill + queue wait) and
+//! inter-token latency (steady-state step time), both **derived from the
+//! engine core's event timestamps** (each `Prefilled`/`Token` event
+//! carries the instant its token was produced) and summarized with the
+//! small-sample-safe [`LatencySummary`]. The MAC side carries *two*
+//! totals — what the KV-cached path executed (`core.macs`) and what a
+//! cache-less server re-forwarding the growing prefix would have executed
+//! — so the cache's algorithmic saving is reported next to the paper's
+//! `r(d1+d2)` factorization saving.
 
-use crate::util::LatencySummary;
+use crate::util::{LatencySummary, RequestStats};
 
 /// Aggregate result of one [`crate::decode::DecodeScheduler::run`].
 #[derive(Debug, Clone)]
 pub struct DecodeStats {
-    /// Requests completed.
-    pub requests: usize,
+    /// The shared request-lifecycle core: requests completed, tokens
+    /// *generated*, MACs executed (KV-cached regime), wall clock, and the
+    /// per-request completion-latency summary.
+    pub core: RequestStats,
     /// Prompt tokens consumed across all requests (prefill).
     pub prompt_tokens: usize,
-    /// Tokens generated across all requests.
-    pub generated_tokens: usize,
-    /// Wall clock of the whole run.
-    pub wall_s: f64,
-    /// MACs actually executed (KV-cached regime).
-    pub macs: u128,
     /// Analytic MACs a full-recompute decode of the same streams would
     /// have executed (the cache-less baseline).
     pub recompute_macs: u128,
     /// Time to first token per request, from run start (queue wait +
-    /// prefill).
+    /// prefill) — the `Prefilled` event timestamps.
     pub ttft: LatencySummary,
-    /// Latency between consecutive generated tokens of a request.
+    /// Latency between consecutive `Token` events of a request.
     pub inter_token: LatencySummary,
     /// Peak concurrently-decoding sequences.
     pub peak_active: usize,
@@ -43,28 +43,25 @@ pub struct DecodeStats {
 }
 
 impl DecodeStats {
+    /// Tokens generated across all requests.
+    pub fn generated_tokens(&self) -> usize {
+        self.core.tokens
+    }
+
     /// Generated tokens per wall-clock second.
     pub fn tokens_per_s(&self) -> f64 {
-        if self.wall_s > 0.0 {
-            self.generated_tokens as f64 / self.wall_s
-        } else {
-            0.0
-        }
+        self.core.tokens_per_s()
     }
 
     /// Executed MACs amortized per generated token.
     pub fn macs_per_generated_token(&self) -> u128 {
-        if self.generated_tokens > 0 {
-            self.macs / self.generated_tokens as u128
-        } else {
-            0
-        }
+        self.core.macs_per_token()
     }
 
     /// Recompute-baseline MACs amortized per generated token.
     pub fn recompute_macs_per_generated_token(&self) -> u128 {
-        if self.generated_tokens > 0 {
-            self.recompute_macs / self.generated_tokens as u128
+        if self.core.tokens > 0 {
+            self.recompute_macs / self.core.tokens as u128
         } else {
             0
         }
@@ -76,10 +73,10 @@ impl DecodeStats {
     /// attention share of this ratio is an upper bound; weight/head MACs
     /// dominate and are billed identically on both sides.
     pub fn mac_savings(&self) -> f64 {
-        if self.macs == 0 {
+        if self.core.macs == 0 {
             1.0
         } else {
-            self.recompute_macs as f64 / self.macs as f64
+            self.recompute_macs as f64 / self.core.macs as f64
         }
     }
 }
@@ -90,11 +87,14 @@ mod tests {
 
     fn stats(generated: usize, macs: u128, recompute: u128, wall: f64) -> DecodeStats {
         DecodeStats {
-            requests: 1,
+            core: RequestStats {
+                requests: 1,
+                tokens: generated,
+                macs,
+                wall_s: wall,
+                latency: LatencySummary::default(),
+            },
             prompt_tokens: 4,
-            generated_tokens: generated,
-            wall_s: wall,
-            macs,
             recompute_macs: recompute,
             ttft: LatencySummary::default(),
             inter_token: LatencySummary::default(),
@@ -107,6 +107,7 @@ mod tests {
     #[test]
     fn derived_rates() {
         let s = stats(10, 1_000, 4_000, 2.0);
+        assert_eq!(s.generated_tokens(), 10);
         assert_eq!(s.tokens_per_s(), 5.0);
         assert_eq!(s.macs_per_generated_token(), 100);
         assert_eq!(s.recompute_macs_per_generated_token(), 400);

@@ -1,0 +1,1161 @@
+//! The shared streaming inference core: one event-driven request
+//! lifecycle behind both the serve engine and the decode scheduler.
+//!
+//! An [`EngineCore`] binds a loaded [`ServeModel`] to an [`EngineConfig`]
+//! and opens [`Session`]s. A session is a deterministic, explicitly
+//! stepped event loop:
+//!
+//! - [`Session::submit`] places a request in a **bounded admission queue**
+//!   ([`EngineConfig::queue_cap`]); a full queue is backpressure, surfaced
+//!   either as a clean `Err` (`submit`) or as the request handed back
+//!   ([`Session::try_submit`]) so the caller can drive the loop and retry.
+//! - [`Session::step`] runs one scheduling round: expired deadlines are
+//!   enforced, free slots are filled from the queue FIFO (each claim of up
+//!   to [`EngineConfig::max_admit`] requests is one *dispatch batch*),
+//!   fresh lanes are prefilled/scored in parallel on the [`ExecPool`], and
+//!   every active generation advances by exactly one token (round-robin
+//!   fairness, the decode scheduler's contract).
+//! - Progress streams out as [`Event`]s — `Admitted` / `Prefilled{ttft}` /
+//!   `Token{id, text}` / `Finished{reason}` — drained with
+//!   [`Session::next_event`] / [`Session::take_events`]. Event order and
+//!   payloads are **bitwise invariant** to the thread count, the slot
+//!   count, and admission timing: workers write into their own lanes and
+//!   events are emitted serially in admission order after each join.
+//!   TTFT and inter-token latency are derived from the event timestamps
+//!   themselves, so the reported percentiles *are* the event timeline.
+//! - [`Session::cancel`] evicts a request mid-flight (queued or active),
+//!   and a per-request deadline ([`InferenceRequest::deadline_s`]) does
+//!   the same on expiry — either way the slot is released and the queue
+//!   drains into it on the next step, exactly like an EOS eviction.
+//!
+//! [`EngineCore::run`] is the batch convenience both adapters use: it
+//! feeds the queue under backpressure, steps to completion, and returns
+//! ordered [`FinishedRequest`]s plus the aggregate [`CoreStats`].
+
+use std::collections::{BTreeSet, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::data::Tokenizer;
+use crate::decode::{KvCache, KvCachePool, Sampling};
+use crate::exec::{ExecConfig, ExecPool};
+use crate::serve::ServeModel;
+use crate::util::{LatencySummary, RequestStats, Rng};
+
+use super::request::{
+    Event, EventKind, FinishReason, FinishedRequest, InferenceRequest, RequestKind, StreamControl,
+};
+
+/// Engine knobs — the union of the serve and decode front-end knobs, with
+/// the same defaults as [`crate::decode::DecodeConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Concurrent lanes (KV cache slots for generation requests).
+    pub slots: usize,
+    /// Bounded admission-queue capacity; submission beyond it is
+    /// backpressure, not silent buffering.
+    pub queue_cap: usize,
+    /// Max requests claimed from the queue per dispatch batch
+    /// (the serve engine's `max_batch`); 0 = `slots`.
+    pub max_admit: usize,
+    /// KV capacity per slot, in tokens. Every generation request must
+    /// satisfy `prompt + max_new <= capacity` to be admissible.
+    pub capacity: usize,
+    /// Default generation cap per request.
+    pub max_new: usize,
+    pub sampling: Sampling,
+    /// Base seed; each request derives an independent stream from it.
+    pub seed: u64,
+    /// Token that terminates a sequence (`None` disables EOS eviction).
+    pub eos: Option<i32>,
+    /// Worker-pool budget shared by lane-level fan-out and intra-op row
+    /// sharding (event order and payloads are invariant to it).
+    pub exec: ExecConfig,
+    /// Cap on *lane-level* parallelism within one phase (0 = the thread
+    /// budget): at most this many lanes forward concurrently, the rest of
+    /// the thread budget row-shards inside each forward. The serve
+    /// adapter maps its `workers` knob here, so `workers: 1` still means
+    /// sequential request processing with full-width matmuls. Results are
+    /// invariant to it; only latency anatomy moves.
+    pub lane_parallelism: usize,
+    /// Cap on the KV cache pool's preallocated footprint; the pool is
+    /// built lazily at the first generation admission and an over-budget
+    /// pool is a clean `Err` before allocation.
+    pub max_cache_bytes: Option<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            slots: 4,
+            queue_cap: 64,
+            max_admit: 0,
+            capacity: 192,
+            max_new: 32,
+            sampling: Sampling::Greedy,
+            seed: 0,
+            eos: Some(crate::data::EOS),
+            exec: ExecConfig::default(),
+            lane_parallelism: 0,
+            max_cache_bytes: None,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The per-request admissibility rules [`Session::try_submit`]
+    /// enforces, callable up-front by the batch adapters so a bad request
+    /// fails before any compute is spent on earlier ones.
+    pub fn validate(&self, req: &InferenceRequest) -> Result<()> {
+        ensure!(req.prompt_len() > 0, "request {}: empty prompt", req.id);
+        if let RequestKind::Generate { ref prompt, max_new } = req.kind {
+            let max_new = max_new.unwrap_or(self.max_new).max(1);
+            ensure!(
+                prompt.len() + max_new <= self.capacity,
+                "request {}: prompt {} + max_new {max_new} exceeds KV capacity {}",
+                req.id,
+                prompt.len(),
+                self.capacity
+            );
+        }
+        Ok(())
+    }
+
+    /// [`EngineConfig::validate`] over a whole batch, plus duplicate-id
+    /// rejection — the one up-front check both batch adapters run so a
+    /// bad batch fails before any compute is spent on earlier requests.
+    pub fn validate_batch(&self, reqs: &[InferenceRequest]) -> Result<()> {
+        let mut ids = BTreeSet::new();
+        for r in reqs {
+            self.validate(r)?;
+            ensure!(ids.insert(r.id), "request {}: duplicate id in this batch", r.id);
+        }
+        Ok(())
+    }
+}
+
+/// The per-request RNG stream: independent of scheduling, stable across
+/// slot counts — shared with the recompute baseline so both paths draw
+/// identical samples.
+pub(crate) fn request_rng(seed: u64, id: usize) -> Rng {
+    Rng::new(seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD0DE))
+}
+
+/// Aggregate accounting of one session — the superset both adapters
+/// project their stats from.
+#[derive(Debug, Clone, Default)]
+pub struct CoreStats {
+    pub requests: usize,
+    /// Dispatch batches claimed from the queue.
+    pub batches: usize,
+    /// Prompt positions scored (Score requests).
+    pub scored_tokens: usize,
+    /// Prompt tokens consumed by generation requests (prefill).
+    pub prompt_tokens: usize,
+    /// Tokens generated (Generate requests).
+    pub generated_tokens: usize,
+    pub macs: u128,
+    /// Analytic cache-less recompute MACs of the generation streams (plus
+    /// the scored MACs, which are their own baseline).
+    pub recompute_macs: u128,
+    pub wall_s: f64,
+    /// Per-request completion latency.
+    pub latency: LatencySummary,
+    /// Time to first token per generation request, derived from the
+    /// `Prefilled` event timestamps.
+    pub ttft: LatencySummary,
+    /// Latency between consecutive `Token` events of a request.
+    pub inter_token: LatencySummary,
+    pub peak_active: usize,
+    /// Admissions into a slot another request freed mid-run.
+    pub mid_run_admissions: usize,
+    /// Decode rounds executed (each advances every active sequence by one
+    /// token — the fairness unit).
+    pub decode_rounds: usize,
+    /// Requests evicted by [`Session::cancel`].
+    pub cancelled: usize,
+    /// Requests evicted by deadline expiry.
+    pub deadline_evictions: usize,
+}
+
+impl CoreStats {
+    /// This run reduced to the shared [`RequestStats`] core, counting
+    /// `tokens` delivered as scored positions plus generated tokens.
+    pub fn request_stats(&self) -> RequestStats {
+        RequestStats {
+            requests: self.requests,
+            tokens: self.scored_tokens + self.generated_tokens,
+            macs: self.macs,
+            wall_s: self.wall_s,
+            latency: self.latency,
+        }
+    }
+}
+
+/// A request occupying a lane (slot) for the duration of its life.
+struct Lane {
+    id: usize,
+    admitted: usize,
+    deadline_s: Option<f64>,
+    macs: u128,
+    ttft_s: f64,
+    /// Timestamp of this lane's previous token (inter-token base).
+    last_s: f64,
+    /// Timestamp taken inside the worker for the current phase's result —
+    /// the value stamped on this phase's events.
+    step_t_s: f64,
+    done: Option<FinishReason>,
+    kind: LaneKind,
+}
+
+enum LaneKind {
+    Score {
+        tokens: Vec<i32>,
+        logits: Vec<f32>,
+    },
+    Generate {
+        prompt: Vec<i32>,
+        max_new: usize,
+        tokens: Vec<i32>,
+        cache: KvCache,
+        rng: Rng,
+        recompute_macs: u128,
+    },
+}
+
+/// The streaming inference core over one loaded model.
+#[derive(Clone, Copy)]
+pub struct EngineCore<'m> {
+    model: &'m ServeModel,
+    config: EngineConfig,
+}
+
+impl<'m> EngineCore<'m> {
+    pub fn new(model: &'m ServeModel, config: EngineConfig) -> EngineCore<'m> {
+        EngineCore { model, config }
+    }
+
+    pub fn model(&self) -> &'m ServeModel {
+        self.model
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Open a fresh session (its own clock, queue, slots, and events).
+    pub fn session(&self) -> Session<'m> {
+        Session {
+            core: *self,
+            t0: Instant::now(),
+            tokenizer: Tokenizer::new(),
+            pool: None,
+            pending: VecDeque::new(),
+            collect_events: true,
+            seen_ids: BTreeSet::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            events: VecDeque::new(),
+            ttfts: Vec::new(),
+            itls: Vec::new(),
+            admitted_count: 0,
+            slot_retirements: 0,
+            batches: 0,
+            mid_run: 0,
+            peak_active: 0,
+            rounds: 0,
+            cancelled: 0,
+            deadline_evictions: 0,
+        }
+    }
+
+    /// Batch convenience: feed every request through a session under
+    /// queue backpressure and step it to completion, discarding the event
+    /// stream. Results are returned in request id order.
+    pub fn run(
+        &self,
+        requests: Vec<InferenceRequest>,
+    ) -> Result<(Vec<FinishedRequest>, CoreStats)> {
+        self.drive_queue(requests, None)
+    }
+
+    /// The callback face of the core: drive the whole workload to
+    /// completion under queue backpressure, invoking `on_event` for every
+    /// event in deterministic order (the same order a hand-driven
+    /// [`Session`] would drain). Returning [`StreamControl::Cancel`]
+    /// evicts that event's request at the next token boundary.
+    pub fn run_streaming<F>(
+        &self,
+        requests: Vec<InferenceRequest>,
+        mut on_event: F,
+    ) -> Result<(Vec<FinishedRequest>, CoreStats)>
+    where
+        F: FnMut(&Event) -> StreamControl,
+    {
+        self.drive_queue(requests, Some(&mut on_event))
+    }
+
+    /// The shared driver behind [`EngineCore::run`] and
+    /// [`EngineCore::run_streaming`]. With no consumer, event
+    /// construction is skipped entirely (no per-token allocation on the
+    /// batch hot path); the timestamps feeding TTFT/inter-token stats are
+    /// taken identically either way.
+    fn drive_queue(
+        &self,
+        requests: Vec<InferenceRequest>,
+        mut on_event: Option<&mut dyn FnMut(&Event) -> StreamControl>,
+    ) -> Result<(Vec<FinishedRequest>, CoreStats)> {
+        let mut queue: VecDeque<InferenceRequest> = requests.into();
+        let mut session = self.session();
+        session.collect_events = on_event.is_some();
+        loop {
+            while let Some(req) = queue.pop_front() {
+                if let Some(back) = session.try_submit(req)? {
+                    queue.push_front(back); // bounded queue: retry after a step
+                    break;
+                }
+            }
+            let worked = session.step()?;
+            if let Some(cb) = on_event.as_mut() {
+                let mut cancels: Vec<usize> = Vec::new();
+                for ev in session.take_events() {
+                    if cb(&ev) == StreamControl::Cancel {
+                        cancels.push(ev.id);
+                    }
+                }
+                for id in cancels {
+                    session.cancel(id);
+                }
+            }
+            if !worked && queue.is_empty() {
+                break;
+            }
+        }
+        Ok(session.finish())
+    }
+}
+
+/// One live event-driven run: submit / cancel / step / drain events.
+pub struct Session<'m> {
+    core: EngineCore<'m>,
+    t0: Instant,
+    tokenizer: Tokenizer,
+    /// Lazily built at the first generation admission (scoring-only
+    /// sessions never allocate KV).
+    pool: Option<KvCachePool>,
+    pending: VecDeque<InferenceRequest>,
+    /// False on the batch path, where no consumer drains events: skips
+    /// event construction (incl. per-token text decoding) entirely while
+    /// keeping the TTFT/inter-token timestamps identical.
+    collect_events: bool,
+    /// Every id ever accepted, for O(1) duplicate rejection.
+    seen_ids: BTreeSet<usize>,
+    active: Vec<Lane>,
+    finished: Vec<FinishedRequest>,
+    events: VecDeque<Event>,
+    ttfts: Vec<f64>,
+    itls: Vec<f64>,
+    admitted_count: usize,
+    /// Requests retired *from a slot* (the mid-run admission trigger).
+    slot_retirements: usize,
+    batches: usize,
+    mid_run: usize,
+    peak_active: usize,
+    rounds: usize,
+    cancelled: usize,
+    deadline_evictions: usize,
+}
+
+impl<'m> Session<'m> {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Free admission-queue capacity before backpressure kicks in.
+    pub fn queue_free(&self) -> usize {
+        self.core.config.queue_cap.max(1).saturating_sub(self.pending.len())
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
+    }
+
+    /// Submit, treating a full queue as an error that drops the request.
+    /// Prefer [`Session::try_submit`] when driving the loop yourself — it
+    /// hands a refused request back so it can be resubmitted after a
+    /// `step()` drains the queue.
+    pub fn submit(&mut self, req: InferenceRequest) -> Result<()> {
+        if let Some(req) = self.try_submit(req)? {
+            bail!(
+                "admission queue full ({} pending, cap {}): request {} refused and dropped — \
+                 use try_submit() to get a refused request handed back for retry",
+                self.pending.len(),
+                self.core.config.queue_cap.max(1),
+                req.id
+            );
+        }
+        Ok(())
+    }
+
+    /// Validate and enqueue a request. `Ok(Some(request))` hands the
+    /// request back when the bounded queue is full (backpressure — step
+    /// the session and retry); `Err` means the request itself is invalid.
+    pub fn try_submit(&mut self, req: InferenceRequest) -> Result<Option<InferenceRequest>> {
+        self.core.config.validate(&req)?;
+        ensure!(
+            !self.seen_ids.contains(&req.id),
+            "request {}: duplicate id in this session",
+            req.id
+        );
+        if self.pending.len() >= self.core.config.queue_cap.max(1) {
+            return Ok(Some(req)); // backpressure
+        }
+        self.seen_ids.insert(req.id);
+        self.pending.push_back(req);
+        Ok(None)
+    }
+
+    /// Cancel a request mid-flight. A queued request is retired without
+    /// ever taking a slot; an active one is evicted immediately (tokens
+    /// produced so far are kept) and its slot freed for the queue.
+    /// Returns false when the id is unknown or already finished.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
+            let req = self.pending.remove(pos).expect("position just found");
+            self.retire_unadmitted(req, FinishReason::Cancelled);
+            return true;
+        }
+        let mut hit = false;
+        for lane in &mut self.active {
+            if lane.id == id && lane.done.is_none() {
+                lane.done = Some(FinishReason::Cancelled);
+                hit = true;
+            }
+        }
+        if hit {
+            self.evict_done();
+        }
+        hit
+    }
+
+    /// Pop the oldest undelivered event.
+    pub fn next_event(&mut self) -> Option<Event> {
+        self.events.pop_front()
+    }
+
+    /// Drain every undelivered event, oldest first.
+    pub fn take_events(&mut self) -> Vec<Event> {
+        self.events.drain(..).collect()
+    }
+
+    /// One scheduling round: deadlines → admission → prefill/score →
+    /// one decode round. Returns `Ok(false)` when the session is idle
+    /// (nothing pending, nothing active).
+    pub fn step(&mut self) -> Result<bool> {
+        if !self.has_work() {
+            return Ok(false);
+        }
+        self.enforce_deadlines();
+
+        // ---- admission: drain the queue into free slots, one dispatch
+        // batch (<= max_admit requests) per claim ----
+        let slots = self.core.config.slots.max(1);
+        let max_admit = match self.core.config.max_admit {
+            0 => slots,
+            n => n,
+        };
+        let mut fresh: Vec<Lane> = Vec::new();
+        loop {
+            let free = slots - (self.active.len() + fresh.len());
+            let claim = free.min(max_admit).min(self.pending.len());
+            if claim == 0 {
+                break;
+            }
+            self.batches += 1;
+            for _ in 0..claim {
+                let req = self.pending.pop_front().expect("claim bounded by queue length");
+                let lane = self.admit(req)?;
+                fresh.push(lane);
+            }
+        }
+
+        // ---- prefill / score phase: fresh lanes fan out over the pool;
+        // leftover thread budget row-shards the matmuls inside each ----
+        if !fresh.is_empty() {
+            self.forward_fresh(&mut fresh)?;
+            for mut lane in fresh {
+                match &lane.kind {
+                    LaneKind::Score { .. } => {
+                        lane.ttft_s = lane.step_t_s;
+                        lane.last_s = lane.step_t_s;
+                    }
+                    LaneKind::Generate { prompt, tokens, .. } => {
+                        let t = lane.step_t_s;
+                        if self.collect_events {
+                            self.events.push_back(Event {
+                                id: lane.id,
+                                t_s: t,
+                                kind: EventKind::Prefilled { prompt_len: prompt.len(), ttft_s: t },
+                            });
+                            let first = *tokens.last().expect("prefill sampled a token");
+                            self.events.push_back(Event {
+                                id: lane.id,
+                                t_s: t,
+                                kind: EventKind::Token {
+                                    index: 0,
+                                    token: first,
+                                    text: self.tokenizer.decode(&[first]),
+                                },
+                            });
+                        }
+                        // TTFT is the Prefilled event's timestamp
+                        self.ttfts.push(t);
+                        lane.ttft_s = t;
+                        lane.last_s = t;
+                    }
+                }
+                self.check_deadline(&mut lane);
+                self.active.push(lane);
+                self.peak_active = self.peak_active.max(self.active.len());
+            }
+            self.evict_done();
+        }
+        if self.active.is_empty() {
+            return Ok(true); // everything admitted finished instantly
+        }
+
+        // ---- one decode round: each active sequence advances a token,
+        // all sequences stepping concurrently on the pool ----
+        self.rounds += 1;
+        self.decode_round()?;
+        // gather this round's (id, timestamp, token) in admission order…
+        let mut produced: Vec<(usize, f64, usize, i32, f64)> =
+            Vec::with_capacity(self.active.len());
+        for lane in &self.active {
+            let LaneKind::Generate { tokens, .. } = &lane.kind else {
+                unreachable!("score lanes retire at admission")
+            };
+            produced.push((
+                lane.id,
+                lane.step_t_s,
+                tokens.len() - 1,
+                *tokens.last().expect("round appended a token"),
+                lane.last_s,
+            ));
+        }
+        // …emit the Token events serially (deterministic order), deriving
+        // inter-token latency from the event timestamps themselves…
+        for &(id, t, index, token, prev_last) in &produced {
+            if self.collect_events {
+                let text = self.tokenizer.decode(&[token]);
+                let kind = EventKind::Token { index, token, text };
+                self.events.push_back(Event { id, t_s: t, kind });
+            }
+            self.itls.push(t - prev_last);
+        }
+        // …then advance the lanes' clocks and apply deadlines
+        for lane in &mut self.active {
+            lane.last_s = lane.step_t_s;
+            if lane.done.is_none() && lane.deadline_s.is_some_and(|d| lane.step_t_s > d) {
+                lane.done = Some(FinishReason::Deadline);
+            }
+        }
+        self.evict_done();
+        Ok(true)
+    }
+
+    /// Step until idle, discarding no events (the caller drains them).
+    pub fn drive(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Close the session: order results by request id and aggregate stats.
+    pub fn finish(mut self) -> (Vec<FinishedRequest>, CoreStats) {
+        let wall_s = self.now();
+        self.finished.sort_by_key(|f| f.id);
+        let mut stats = CoreStats {
+            requests: self.finished.len(),
+            batches: self.batches,
+            wall_s,
+            latency: LatencySummary::from_unsorted(
+                self.finished.iter().map(|f| f.latency_s).collect(),
+            ),
+            ttft: LatencySummary::from_unsorted(std::mem::take(&mut self.ttfts)),
+            inter_token: LatencySummary::from_unsorted(std::mem::take(&mut self.itls)),
+            peak_active: self.peak_active,
+            mid_run_admissions: self.mid_run,
+            decode_rounds: self.rounds,
+            cancelled: self.cancelled,
+            deadline_evictions: self.deadline_evictions,
+            ..CoreStats::default()
+        };
+        for f in &self.finished {
+            stats.macs += f.macs;
+            stats.recompute_macs += f.recompute_macs;
+            if f.is_generate {
+                // a request cancelled straight from the queue never
+                // prefilled, so its prompt was not consumed
+                if f.admitted.is_some() {
+                    stats.prompt_tokens += f.prompt_len;
+                }
+                stats.generated_tokens += f.tokens.len();
+            } else if f.reason == FinishReason::Scored {
+                stats.scored_tokens += f.prompt_len;
+            }
+        }
+        (self.finished, stats)
+    }
+
+    // ---- internals -------------------------------------------------------
+
+    /// Take a request out of the queue into a lane, building the KV pool
+    /// on the first generation admission.
+    fn admit(&mut self, req: InferenceRequest) -> Result<Lane> {
+        let admitted = self.admitted_count;
+        self.admitted_count += 1;
+        // continuous batching: an admission after any slot retirement
+        // means this request entered a slot another request freed mid-run
+        if self.slot_retirements > 0 {
+            self.mid_run += 1;
+        }
+        let now = self.now();
+        if self.collect_events {
+            self.events.push_back(Event {
+                id: req.id,
+                t_s: now,
+                kind: EventKind::Admitted { seq: admitted },
+            });
+        }
+        let kind = match req.kind {
+            RequestKind::Score { tokens } => LaneKind::Score { tokens, logits: Vec::new() },
+            RequestKind::Generate { prompt, max_new } => {
+                let cfg = self.core.config;
+                if self.pool.is_none() {
+                    self.pool = Some(KvCachePool::with_cap(
+                        self.core.model.config(),
+                        cfg.slots.max(1),
+                        cfg.capacity,
+                        cfg.max_cache_bytes,
+                    )?);
+                }
+                let cache = self
+                    .pool
+                    .as_mut()
+                    .expect("pool just built")
+                    .acquire()
+                    .expect("free cache under the active-count bound");
+                LaneKind::Generate {
+                    max_new: max_new.unwrap_or(cfg.max_new).max(1),
+                    rng: request_rng(cfg.seed, req.id),
+                    prompt,
+                    tokens: Vec::new(),
+                    cache,
+                    recompute_macs: 0,
+                }
+            }
+        };
+        Ok(Lane {
+            id: req.id,
+            admitted,
+            deadline_s: req.deadline_s,
+            macs: 0,
+            ttft_s: 0.0,
+            last_s: 0.0,
+            step_t_s: 0.0,
+            done: None,
+            kind,
+        })
+    }
+
+    /// Forward every freshly admitted lane (score forwards and generation
+    /// prefills) in parallel; deterministic because each worker writes
+    /// only its own lanes and emission happens serially afterwards.
+    fn forward_fresh(&mut self, fresh: &mut [Lane]) -> Result<()> {
+        let model = self.core.model;
+        let (sampling, eos) = (self.core.config.sampling, self.core.config.eos);
+        let threads = self.core.config.exec.resolve().max(1);
+        let n_par = threads.min(fresh.len()).min(self.lane_cap()).max(1);
+        let outer = ExecPool::new(n_par);
+        let intra = ExecPool::new(threads).split(n_par);
+        let t0 = &self.t0;
+        outer.try_parallel_for(fresh, |_, lane| -> Result<()> {
+            let Lane { kind, macs, step_t_s, done, .. } = lane;
+            match kind {
+                LaneKind::Score { tokens, logits } => {
+                    let (l, m) = model.forward_logits_pooled(tokens, &intra)?;
+                    *logits = l;
+                    *macs = m;
+                    *step_t_s = t0.elapsed().as_secs_f64();
+                    *done = Some(FinishReason::Scored);
+                }
+                LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } => {
+                    let (logits, m) = model.forward_prefill(prompt, cache, &intra)?;
+                    let first = sampling.sample(&logits, rng);
+                    *macs = m;
+                    *recompute_macs = model.macs_for(prompt.len());
+                    *step_t_s = t0.elapsed().as_secs_f64();
+                    tokens.push(first);
+                    *done = stop_reason(eos, first, tokens.len(), *max_new);
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// Advance every active generation lane by one token.
+    fn decode_round(&mut self) -> Result<()> {
+        let model = self.core.model;
+        let (sampling, eos) = (self.core.config.sampling, self.core.config.eos);
+        let threads = self.core.config.exec.resolve().max(1);
+        let n_par = threads.min(self.active.len()).min(self.lane_cap()).max(1);
+        let outer = ExecPool::new(n_par);
+        let intra = ExecPool::new(threads).split(n_par);
+        let t0 = &self.t0;
+        outer.try_parallel_for(&mut self.active, |_, lane| -> Result<()> {
+            let Lane { kind, macs, step_t_s, done, .. } = lane;
+            let LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } = kind
+            else {
+                unreachable!("score lanes retire at admission")
+            };
+            let last_tok = *tokens.last().expect("active sequences hold >= 1 token");
+            let (logits, m) = model.forward_step_pooled(last_tok, cache, &intra)?;
+            *macs += m;
+            *recompute_macs += model.macs_for(prompt.len() + tokens.len());
+            let next = sampling.sample(&logits, rng);
+            *step_t_s = t0.elapsed().as_secs_f64();
+            tokens.push(next);
+            *done = stop_reason(eos, next, tokens.len(), *max_new);
+            Ok(())
+        })
+    }
+
+    /// The configured lane-parallelism cap (0 = unbounded).
+    fn lane_cap(&self) -> usize {
+        match self.core.config.lane_parallelism {
+            0 => usize::MAX,
+            n => n,
+        }
+    }
+
+    /// Deadline sweep over the active lanes. Deadlines bind at *token
+    /// boundaries* only — a queued request is never evicted while waiting
+    /// and an admitted one always completes its prefill — so the
+    /// smallest-possible deadline deterministically yields exactly one
+    /// token, not a timing-dependent queue eviction.
+    fn enforce_deadlines(&mut self) {
+        let now = self.now();
+        let mut any = false;
+        for lane in &mut self.active {
+            if lane.done.is_none() && lane.deadline_s.is_some_and(|d| now > d) {
+                lane.done = Some(FinishReason::Deadline);
+                any = true;
+            }
+        }
+        if any {
+            self.evict_done();
+        }
+    }
+
+    /// Mark a lane past-deadline using its own phase timestamp (so the
+    /// check is the same one the event timeline shows).
+    fn check_deadline(&self, lane: &mut Lane) {
+        if lane.done.is_none() && lane.deadline_s.is_some_and(|d| lane.step_t_s > d) {
+            lane.done = Some(FinishReason::Deadline);
+        }
+    }
+
+    /// Retire a request straight from the queue (never took a slot).
+    fn retire_unadmitted(&mut self, req: InferenceRequest, reason: FinishReason) {
+        let now = self.now();
+        match reason {
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::Deadline => self.deadline_evictions += 1,
+            _ => {}
+        }
+        if self.collect_events {
+            self.events.push_back(Event {
+                id: req.id,
+                t_s: now,
+                kind: EventKind::Finished { reason, tokens: 0 },
+            });
+        }
+        self.finished.push(FinishedRequest {
+            id: req.id,
+            admitted: None,
+            reason,
+            is_generate: matches!(req.kind, RequestKind::Generate { .. }),
+            prompt_len: req.prompt_len(),
+            tokens: Vec::new(),
+            text: String::new(),
+            logits: Vec::new(),
+            ttft_s: 0.0,
+            latency_s: now,
+            macs: 0,
+            recompute_macs: 0,
+        });
+    }
+
+    /// Move finished lanes out of the active set, releasing their caches
+    /// and emitting their `Finished` events in admission order.
+    fn evict_done(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].done.is_some() {
+                let lane = self.active.remove(i);
+                self.retire_lane(lane);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn retire_lane(&mut self, lane: Lane) {
+        let reason = lane.done.expect("retire only done lanes");
+        match reason {
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::Deadline => self.deadline_evictions += 1,
+            _ => {}
+        }
+        self.slot_retirements += 1;
+        let (is_generate, prompt_len, tokens, logits, recompute_macs) = match lane.kind {
+            LaneKind::Score { tokens, logits } => {
+                (false, tokens.len(), Vec::new(), logits, lane.macs)
+            }
+            LaneKind::Generate { prompt, tokens, cache, recompute_macs, .. } => {
+                self.pool.as_mut().expect("pool exists for generate lanes").release(cache);
+                (true, prompt.len(), tokens, Vec::new(), recompute_macs)
+            }
+        };
+        let produced = if is_generate { tokens.len() } else { prompt_len };
+        if self.collect_events {
+            self.events.push_back(Event {
+                id: lane.id,
+                t_s: lane.last_s,
+                kind: EventKind::Finished { reason, tokens: produced },
+            });
+        }
+        let text = FinishedRequest::decode_text(&tokens);
+        self.finished.push(FinishedRequest {
+            id: lane.id,
+            admitted: Some(lane.admitted),
+            reason,
+            is_generate,
+            prompt_len,
+            tokens,
+            text,
+            logits,
+            ttft_s: lane.ttft_s,
+            latency_s: lane.last_s,
+            macs: lane.macs,
+            recompute_macs,
+        });
+    }
+}
+
+/// The stopping rules after a token was appended.
+fn stop_reason(
+    eos: Option<i32>,
+    token: i32,
+    produced: usize,
+    max_new: usize,
+) -> Option<FinishReason> {
+    if Some(token) == eos {
+        Some(FinishReason::Eos)
+    } else if produced >= max_new {
+        Some(FinishReason::MaxTokens)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+
+    fn model(seed: u64) -> ServeModel {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, seed).unwrap();
+        ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap()
+    }
+
+    fn gen_config(slots: usize) -> EngineConfig {
+        EngineConfig {
+            slots,
+            capacity: 32,
+            max_new: 6,
+            seed: 7,
+            eos: None,
+            exec: ExecConfig::with_threads(2),
+            ..EngineConfig::default()
+        }
+    }
+
+    fn gen_requests(n: usize, prompt_len: usize) -> Vec<InferenceRequest> {
+        crate::engine::synth_generate_requests(&demo_config(), n, prompt_len, 11)
+    }
+
+    /// Event-stream payloads of a driven session, per request id.
+    fn drive_collect(
+        core: &EngineCore,
+        requests: Vec<InferenceRequest>,
+    ) -> (Vec<Event>, Vec<FinishedRequest>, CoreStats) {
+        let mut session = core.session();
+        let mut queue: VecDeque<InferenceRequest> = requests.into();
+        let mut events = Vec::new();
+        loop {
+            while let Some(req) = queue.pop_front() {
+                if let Some(back) = session.try_submit(req).unwrap() {
+                    queue.push_front(back);
+                    break;
+                }
+            }
+            let worked = session.step().unwrap();
+            events.extend(session.take_events());
+            if !worked && queue.is_empty() {
+                break;
+            }
+        }
+        let (finished, stats) = session.finish();
+        (events, finished, stats)
+    }
+
+    #[test]
+    fn streamed_token_events_equal_batch_results() {
+        let m = model(41);
+        let core = EngineCore::new(&m, gen_config(2));
+        let (_, batch, _) = drive_collect(&core, gen_requests(5, 8));
+        let (events, streamed, _) = drive_collect(&core, gen_requests(5, 8));
+        assert_eq!(batch.len(), streamed.len());
+        for (a, b) in batch.iter().zip(&streamed) {
+            assert_eq!(a.tokens, b.tokens, "two drives of the same workload diverge");
+        }
+        // the concatenated Token payloads of each request equal its result
+        for f in &streamed {
+            let from_events: Vec<i32> = events
+                .iter()
+                .filter(|e| e.id == f.id)
+                .filter_map(|e| match &e.kind {
+                    EventKind::Token { token, .. } => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(from_events, f.tokens, "request {}", f.id);
+            assert_eq!(f.text, FinishedRequest::decode_text(&f.tokens));
+        }
+        // per-request lifecycle order: Admitted, Prefilled, Token*, Finished
+        for f in &streamed {
+            let kinds: Vec<&EventKind> =
+                events.iter().filter(|e| e.id == f.id).map(|e| &e.kind).collect();
+            assert!(matches!(kinds[0], EventKind::Admitted { .. }), "request {}", f.id);
+            assert!(matches!(kinds[1], EventKind::Prefilled { .. }));
+            assert!(matches!(kinds.last().unwrap(), EventKind::Finished { .. }));
+            assert_eq!(kinds.len(), 2 + f.tokens.len() + 1);
+        }
+    }
+
+    #[test]
+    fn event_order_is_invariant_across_thread_counts() {
+        let m = model(43);
+        let order = |threads: usize| {
+            let config =
+                EngineConfig { exec: ExecConfig::with_threads(threads), ..gen_config(2) };
+            let core = EngineCore::new(&m, config);
+            let (events, _, _) = drive_collect(&core, gen_requests(5, 6));
+            // strip timestamps: (id, kind) must be bitwise stable
+            events.into_iter().map(|e| (e.id, strip(e.kind))).collect::<Vec<_>>()
+        };
+        let serial = order(1);
+        for threads in [2usize, 8] {
+            assert_eq!(order(threads), serial, "--threads {threads} moved the event stream");
+        }
+    }
+
+    /// Event kinds with the wall-clock field zeroed (payload comparison).
+    fn strip(kind: EventKind) -> EventKind {
+        match kind {
+            EventKind::Prefilled { prompt_len, .. } => {
+                EventKind::Prefilled { prompt_len, ttft_s: 0.0 }
+            }
+            other => other,
+        }
+    }
+
+    #[test]
+    fn cancel_queued_request_never_takes_a_slot() {
+        // 1 slot, 2 requests: cancel the queued one while the first is
+        // still decoding — "mid-prefill" cancellation, before admission
+        let m = model(47);
+        let core = EngineCore::new(&m, gen_config(1));
+        let mut session = core.session();
+        for r in gen_requests(2, 5) {
+            session.submit(r).unwrap();
+        }
+        assert!(session.step().unwrap());
+        assert_eq!(session.active_len(), 1, "one slot admits one request");
+        assert_eq!(session.pending_len(), 1);
+        assert!(session.cancel(1), "queued request is cancellable");
+        assert!(!session.cancel(1), "second cancel is a no-op");
+        session.drive().unwrap();
+        let (finished, stats) = session.finish();
+        assert_eq!(finished.len(), 2);
+        assert_eq!(finished[0].reason, FinishReason::MaxTokens);
+        assert_eq!(finished[1].reason, FinishReason::Cancelled);
+        assert!(finished[1].tokens.is_empty(), "cancelled before any token");
+        assert_eq!(finished[1].admitted, None, "never granted a slot");
+        assert_eq!(stats.cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_mid_decode_frees_the_slot_for_the_queue() {
+        // 1 slot, 2 requests: cancel the active one after its first
+        // tokens — the queued request must be admitted into the freed slot
+        let m = model(53);
+        let core = EngineCore::new(&m, gen_config(1));
+        let mut session = core.session();
+        for r in gen_requests(2, 5) {
+            session.submit(r).unwrap();
+        }
+        session.step().unwrap(); // request 0 admitted + prefilled + 1 round
+        assert!(session.cancel(0), "active request is cancellable");
+        session.drive().unwrap();
+        let (finished, stats) = session.finish();
+        assert_eq!(finished[0].reason, FinishReason::Cancelled);
+        assert!(
+            !finished[0].tokens.is_empty() && finished[0].tokens.len() < 6,
+            "cancelled mid-decode keeps a partial stream ({} tokens)",
+            finished[0].tokens.len()
+        );
+        assert_eq!(finished[1].reason, FinishReason::MaxTokens);
+        assert_eq!(finished[1].tokens.len(), 6, "queued request ran to its budget");
+        assert_eq!(finished[1].admitted, Some(1), "admitted into the freed slot");
+        assert_eq!(stats.mid_run_admissions, 1);
+        assert_eq!(stats.cancelled, 1);
+    }
+
+    #[test]
+    fn deadline_eviction_frees_the_slot_for_a_queued_request() {
+        // 1 slot: the first request's deadline expires right after its
+        // prefill (any positive wall-clock beats 1e-9 s), evicting it and
+        // admitting the queued request into the freed slot
+        let m = model(59);
+        let core = EngineCore::new(&m, gen_config(1));
+        let mut reqs = gen_requests(2, 5);
+        reqs[0].deadline_s = Some(1e-9);
+        let (finished, stats) = core.run(reqs).unwrap();
+        assert_eq!(finished[0].reason, FinishReason::Deadline);
+        assert_eq!(finished[0].tokens.len(), 1, "keeps the prefill token, steps no further");
+        assert_eq!(finished[1].reason, FinishReason::MaxTokens);
+        assert_eq!(finished[1].admitted, Some(1), "queued request reused the slot");
+        assert_eq!(stats.deadline_evictions, 1);
+        assert_eq!(stats.mid_run_admissions, 1);
+    }
+
+    #[test]
+    fn expired_requests_still_get_their_prefill() {
+        // deadlines bind at token boundaries: even an already-expired
+        // request is admitted, prefills once, and leaves with exactly one
+        // token — deterministically, for any wall-clock timing
+        let m = model(61);
+        let core = EngineCore::new(&m, gen_config(1));
+        let mut reqs = gen_requests(2, 5);
+        reqs[0].deadline_s = Some(0.0);
+        reqs[1].deadline_s = Some(0.0);
+        let (finished, stats) = core.run(reqs).unwrap();
+        for f in &finished {
+            assert_eq!(f.reason, FinishReason::Deadline);
+            assert_eq!(f.tokens.len(), 1, "request {}", f.id);
+            assert!(f.admitted.is_some(), "expired requests still take their turn");
+        }
+        assert_eq!(stats.deadline_evictions, 2);
+        assert_eq!(stats.mid_run_admissions, 1, "the freed slot served the queue");
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let m = model(67);
+        let config = EngineConfig { queue_cap: 2, ..gen_config(1) };
+        let core = EngineCore::new(&m, config);
+        let mut session = core.session();
+        let mut reqs = gen_requests(4, 5);
+        assert_eq!(session.queue_free(), 2);
+        assert!(session.try_submit(reqs.remove(0)).unwrap().is_none());
+        assert!(session.try_submit(reqs.remove(0)).unwrap().is_none());
+        // third submission bounces back instead of buffering
+        let bounced = session.try_submit(reqs.remove(0)).unwrap();
+        assert!(bounced.is_some(), "full queue hands the request back");
+        assert_eq!(bounced.as_ref().unwrap().id, 2);
+        assert!(session.submit(bounced.unwrap()).is_err(), "submit() surfaces it as an Err");
+        // a step admits one into the slot, freeing queue room
+        session.step().unwrap();
+        assert!(session.try_submit(reqs.remove(0)).unwrap().is_none());
+        session.drive().unwrap();
+        let (finished, _) = session.finish();
+        assert_eq!(finished.len(), 3, "the bounced request was dropped by this driver");
+    }
+
+    #[test]
+    fn invalid_and_duplicate_submissions_are_rejected() {
+        let m = model(71);
+        let core = EngineCore::new(&m, gen_config(2));
+        let mut session = core.session();
+        assert!(session.try_submit(InferenceRequest::generate(0, Vec::new(), None)).is_err());
+        assert!(session
+            .try_submit(InferenceRequest::generate(0, vec![1; 40], None))
+            .is_err(), "prompt + max_new > capacity");
+        assert!(session.try_submit(InferenceRequest::score(0, Vec::new())).is_err());
+        session.submit(InferenceRequest::generate(0, vec![1, 2], None)).unwrap();
+        assert!(session.submit(InferenceRequest::generate(0, vec![3], None)).is_err(), "dup id");
+    }
+
+    #[test]
+    fn mixed_score_and_generate_requests_share_one_session() {
+        let m = model(73);
+        let core = EngineCore::new(&m, gen_config(2));
+        let prompts = crate::engine::synth_token_streams(&demo_config(), 4, 6, 19);
+        let reqs: Vec<InferenceRequest> = prompts
+            .iter()
+            .enumerate()
+            .map(|(id, p)| {
+                if id % 2 == 0 {
+                    InferenceRequest::score(id, p.clone())
+                } else {
+                    InferenceRequest::generate(id, p.clone(), Some(3))
+                }
+            })
+            .collect();
+        let (finished, stats) = core.run(reqs).unwrap();
+        assert_eq!(finished.len(), 4);
+        let vocab = demo_config().vocab;
+        for f in &finished {
+            if f.id % 2 == 0 {
+                assert_eq!(f.reason, FinishReason::Scored);
+                assert!(!f.is_generate);
+                assert_eq!(f.logits.len(), 6 * vocab);
+                assert!(f.tokens.is_empty());
+                let (want, want_macs) = m.forward_logits(&prompts[f.id]).unwrap();
+                assert_eq!(f.logits, want, "scored logits == plain forward");
+                assert_eq!(f.macs, want_macs);
+            } else {
+                assert_eq!(f.reason, FinishReason::MaxTokens);
+                assert!(f.is_generate);
+                assert_eq!(f.tokens.len(), 3);
+                assert!(f.logits.is_empty());
+            }
+        }
+        assert_eq!(stats.scored_tokens, 2 * 6);
+        assert_eq!(stats.generated_tokens, 2 * 3);
+        assert_eq!(stats.requests, 4);
+        assert!(stats.request_stats().tokens == stats.scored_tokens + stats.generated_tokens);
+    }
+}

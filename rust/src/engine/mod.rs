@@ -1,0 +1,110 @@
+//! Unified request lifecycle — one streaming inference core behind both
+//! front-ends.
+//!
+//! Before this module the repo had two disjoint batch-in/batch-out
+//! request paths: the serve engine's worker queue and the decode
+//! scheduler's continuous-batching loop, each reimplementing admission,
+//! completion, and stats. They are now thin adapters over one core:
+//!
+//! - [`InferenceRequest`] — the unified request (`Score` for full-forward
+//!   logits, `Generate` for KV-cached generation), with an optional
+//!   per-request deadline. [`crate::serve::ServeRequest`] and
+//!   [`crate::decode::GenRequest`] convert into it losslessly.
+//! - [`EngineCore`] / [`Session`] — the event-driven lifecycle: `submit`
+//!   into a **bounded admission queue** (backpressure hands the request
+//!   back), `step` the deterministic scheduling loop (FIFO admission into
+//!   free slots, parallel prefill/score, one-token decode rounds on the
+//!   [`crate::exec::ExecPool`]), drain the per-request [`Event`] stream
+//!   (`Admitted` / `Prefilled{ttft}` / `Token{id, text}` /
+//!   `Finished{reason}`), and `cancel` mid-flight. Event order and
+//!   payloads are bitwise invariant to `--threads` and slot timing;
+//!   TTFT/inter-token stats derive from the event timestamps.
+//! - [`FinishReason`] — why a request retired: `Eos`, `MaxTokens`,
+//!   `Scored`, plus the mid-flight evictions `Cancelled` and `Deadline`
+//!   (both keep the partial stream and free the slot for the queue).
+//! - [`CoreStats`] — the aggregate superset both adapters project into
+//!   [`crate::serve::ServeStats`] / [`crate::decode::DecodeStats`] via the
+//!   shared [`crate::util::RequestStats`] core.
+//!
+//! `repro generate --stream` prints the token events as they are
+//! produced, `examples/streaming_generation.rs` drives the session API
+//! directly, and `repro generate --stream --self-check` asserts the
+//! streamed events reproduce the batch `run()` results exactly.
+
+pub mod core;
+pub mod request;
+
+use crate::model::ModelConfig;
+use crate::util::Rng;
+
+pub use self::core::{CoreStats, EngineConfig, EngineCore, Session};
+pub(crate) use self::core::request_rng;
+pub use self::request::{
+    Event, EventKind, FinishReason, FinishedRequest, InferenceRequest, RequestKind, StreamControl,
+};
+
+/// The one synthetic-workload generator behind every front-end:
+/// `n` streams of `seq` seeded random in-vocab tokens. The serve
+/// ([`crate::serve::synth_requests`]) and decode
+/// ([`crate::decode::synth_gen_requests`]) helpers, the benches, and the
+/// self-checks all wrap this, so identical `(n, seq, seed)` always means
+/// identical token streams across the whole repo.
+pub fn synth_token_streams(cfg: &ModelConfig, n: usize, seq: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed ^ 0x5E4E);
+    (0..n)
+        .map(|_| (0..seq.max(1)).map(|_| rng.below(cfg.vocab) as i32).collect())
+        .collect()
+}
+
+/// Synthetic [`InferenceRequest::generate`] workload over
+/// [`synth_token_streams`] (ids are 0-based stream order).
+pub fn synth_generate_requests(
+    cfg: &ModelConfig,
+    n: usize,
+    prompt_len: usize,
+    seed: u64,
+) -> Vec<InferenceRequest> {
+    synth_token_streams(cfg, n, prompt_len, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(id, prompt)| InferenceRequest::generate(id, prompt, None))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::demo_config;
+
+    #[test]
+    fn synth_streams_are_deterministic_and_in_vocab() {
+        let cfg = demo_config();
+        let a = synth_token_streams(&cfg, 4, 16, 9);
+        let b = synth_token_streams(&cfg, 4, 16, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        for s in &a {
+            assert_eq!(s.len(), 16);
+            assert!(s.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+        // zero-length requests still carry one token (the old contract)
+        assert_eq!(synth_token_streams(&cfg, 1, 0, 9)[0].len(), 1);
+    }
+
+    #[test]
+    fn synth_generate_requests_wrap_the_streams() {
+        let cfg = demo_config();
+        let reqs = synth_generate_requests(&cfg, 3, 8, 5);
+        let streams = synth_token_streams(&cfg, 3, 8, 5);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i);
+            match &r.kind {
+                RequestKind::Generate { prompt, max_new } => {
+                    assert_eq!(prompt, &streams[i]);
+                    assert!(max_new.is_none());
+                }
+                _ => panic!("wrong kind"),
+            }
+        }
+    }
+}

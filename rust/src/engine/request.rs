@@ -1,0 +1,250 @@
+//! The unified request vocabulary of the streaming inference core: what a
+//! request asks ([`InferenceRequest`]), what the engine tells the caller
+//! while it runs ([`Event`]), and what comes back when it is done
+//! ([`FinishedRequest`], [`FinishReason`]).
+//!
+//! Both legacy front-end request types convert losslessly into
+//! [`InferenceRequest`] (`From<ServeRequest>` / `From<GenRequest>`), which
+//! is how the serve and decode adapters feed the shared core without
+//! changing their public `run()` signatures.
+
+use crate::data::Tokenizer;
+use crate::decode::GenRequest;
+use crate::serve::ServeRequest;
+
+/// What a request asks of the model.
+#[derive(Debug, Clone)]
+pub enum RequestKind {
+    /// Forward the tokens once and return per-position logits — the serve
+    /// path ([`crate::serve::ServeEngine`]).
+    Score {
+        /// Prompt token ids (non-empty, in-vocab).
+        tokens: Vec<i32>,
+    },
+    /// KV-cached autoregressive generation from the prompt — the decode
+    /// path ([`crate::decode::DecodeScheduler`]).
+    Generate {
+        /// Prompt token ids (non-empty, in-vocab).
+        prompt: Vec<i32>,
+        /// Per-request generation cap; `None` uses
+        /// [`super::EngineConfig::max_new`].
+        max_new: Option<usize>,
+    },
+}
+
+/// One request submitted to the engine core.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: usize,
+    pub kind: RequestKind,
+    /// Wall-clock budget in seconds, relative to session start. A request
+    /// still unfinished when it expires is evicted with
+    /// [`FinishReason::Deadline`], keeping whatever tokens it produced.
+    /// Deadlines bind at token boundaries: an admitted request always
+    /// completes its prefill, so even an already-expired request yields
+    /// deterministically exactly one token.
+    pub deadline_s: Option<f64>,
+}
+
+impl InferenceRequest {
+    /// A scoring (full-forward) request.
+    pub fn score(id: usize, tokens: Vec<i32>) -> InferenceRequest {
+        InferenceRequest { id, kind: RequestKind::Score { tokens }, deadline_s: None }
+    }
+
+    /// A generation request.
+    pub fn generate(id: usize, prompt: Vec<i32>, max_new: Option<usize>) -> InferenceRequest {
+        InferenceRequest { id, kind: RequestKind::Generate { prompt, max_new }, deadline_s: None }
+    }
+
+    /// Attach a deadline (seconds from session start).
+    pub fn with_deadline(mut self, deadline_s: f64) -> InferenceRequest {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Prompt length in tokens, for either kind.
+    pub fn prompt_len(&self) -> usize {
+        match &self.kind {
+            RequestKind::Score { tokens } => tokens.len(),
+            RequestKind::Generate { prompt, .. } => prompt.len(),
+        }
+    }
+}
+
+impl From<ServeRequest> for InferenceRequest {
+    fn from(r: ServeRequest) -> InferenceRequest {
+        InferenceRequest::score(r.id, r.tokens)
+    }
+}
+
+impl From<GenRequest> for InferenceRequest {
+    fn from(r: GenRequest) -> InferenceRequest {
+        InferenceRequest {
+            id: r.id,
+            kind: RequestKind::Generate { prompt: r.prompt, max_new: r.max_new },
+            deadline_s: r.deadline_s,
+        }
+    }
+}
+
+/// Why a request left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The configured end-of-sequence token was sampled (it is included as
+    /// the last generated token).
+    Eos,
+    /// The request's token budget was reached.
+    MaxTokens,
+    /// A scoring request completed its forward.
+    Scored,
+    /// The caller cancelled the request mid-flight; tokens produced so far
+    /// are kept and its slot was freed for the queue.
+    Cancelled,
+    /// The request's deadline expired before it finished; tokens produced
+    /// so far are kept and its slot was freed for the queue.
+    Deadline,
+}
+
+impl FinishReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max-tokens",
+            FinishReason::Scored => "scored",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
+        }
+    }
+}
+
+/// One entry of a request's event stream. Event *order and payloads* are
+/// deterministic (invariant to `--threads`, slot timing, and admission
+/// interleaving); only the timestamps carry wall-clock noise.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// The request this event belongs to.
+    pub id: usize,
+    /// Seconds since session start — TTFT/inter-token stats are derived
+    /// from exactly these timestamps.
+    pub t_s: f64,
+    pub kind: EventKind,
+}
+
+/// The lifecycle alphabet: `Admitted → (Prefilled → Token*)? → Finished`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// The request left the queue and took a slot; `seq` is the admission
+    /// order (FIFO: equals submission order).
+    Admitted { seq: usize },
+    /// Generation only: the prompt was prefilled and the first token
+    /// sampled. `ttft_s` equals this event's timestamp — queue wait plus
+    /// prefill, the time-to-first-token.
+    Prefilled { prompt_len: usize, ttft_s: f64 },
+    /// One generated token. `index` counts from 0 per request; `text` is
+    /// the token's decoded text ("" for special tokens).
+    Token { index: usize, token: i32, text: String },
+    /// The request is done; `tokens` is what it produced (generated
+    /// tokens, or scored prompt positions for [`FinishReason::Scored`]).
+    Finished { reason: FinishReason, tokens: usize },
+}
+
+/// A streaming callback's verdict after each event — returned from the
+/// `on_event` hook of [`crate::engine::EngineCore::run_streaming`] /
+/// [`crate::decode::DecodeScheduler::run_streaming`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamControl {
+    Continue,
+    /// Cancel the request this event belongs to. Applied at the next
+    /// scheduling-step boundary: the partial stream is kept (reason
+    /// `Cancelled`) and the slot freed. A request's first step yields two
+    /// tokens (prefill + first round), so cancelling on the very first
+    /// `Token` event still keeps two tokens.
+    Cancel,
+}
+
+/// The completed-request record the session hands back — the superset of
+/// [`crate::serve::ServeResult`] and [`crate::decode::GenResult`], which
+/// the adapters project out.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: usize,
+    /// Admission sequence number; `None` for a request cancelled straight
+    /// from the queue, before it ever took a slot (deadlines, by contrast,
+    /// bind only after admission — see [`InferenceRequest::deadline_s`]).
+    pub admitted: Option<usize>,
+    pub reason: FinishReason,
+    /// Whether this was a generation request (false = scoring).
+    pub is_generate: bool,
+    pub prompt_len: usize,
+    /// Generated tokens (empty for scoring requests).
+    pub tokens: Vec<i32>,
+    /// Decoded text of `tokens` (specials skipped).
+    pub text: String,
+    /// `(seq, vocab)` logits for scoring requests (empty for generation).
+    pub logits: Vec<f32>,
+    /// Run start → first token (0 when no token was produced).
+    pub ttft_s: f64,
+    /// Run start → finished.
+    pub latency_s: f64,
+    /// MACs executed for this request.
+    pub macs: u128,
+    /// Analytic MACs a cache-less recompute of the same stream would
+    /// execute (equals `macs` for scoring requests).
+    pub recompute_macs: u128,
+}
+
+impl FinishedRequest {
+    /// Decode a token stream with the byte-level tokenizer (the engine's
+    /// one text convention, shared by `Event::Token.text`).
+    pub(crate) fn decode_text(tokens: &[i32]) -> String {
+        Tokenizer::new().decode(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_preserve_payloads() {
+        let s = ServeRequest { id: 3, tokens: vec![1, 2, 3] };
+        let r = InferenceRequest::from(s);
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt_len(), 3);
+        assert!(matches!(r.kind, RequestKind::Score { .. }));
+        assert!(r.deadline_s.is_none());
+
+        let g = GenRequest { id: 7, prompt: vec![4, 5], max_new: Some(9), deadline_s: Some(0.5) };
+        let r = InferenceRequest::from(g);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt_len(), 2);
+        assert_eq!(r.deadline_s, Some(0.5));
+        match r.kind {
+            RequestKind::Generate { ref prompt, max_new } => {
+                assert_eq!(prompt, &vec![4, 5]);
+                assert_eq!(max_new, Some(9));
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn finish_reason_names_cover_all_variants() {
+        let all = [
+            FinishReason::Eos,
+            FinishReason::MaxTokens,
+            FinishReason::Scored,
+            FinishReason::Cancelled,
+            FinishReason::Deadline,
+        ];
+        let names: Vec<&str> = all.iter().map(|r| r.name()).collect();
+        assert_eq!(names, ["eos", "max-tokens", "scored", "cancelled", "deadline"]);
+    }
+
+    #[test]
+    fn deadline_builder_attaches() {
+        let r = InferenceRequest::generate(0, vec![1], None).with_deadline(2.5);
+        assert_eq!(r.deadline_s, Some(2.5));
+    }
+}

@@ -17,6 +17,12 @@
 //!   output for any thread count) and the global [`exec::ExecConfig`]
 //!   `--threads` knob shared by the matmul kernels, the ROM pipeline,
 //!   the serve engine, and the decode scheduler
+//! - [`engine`] — the unified request lifecycle: one streaming inference
+//!   core ([`engine::EngineCore`] / [`engine::Session`]) with a bounded
+//!   admission queue, FIFO slot scheduling, per-request event streams
+//!   (`Admitted`/`Prefilled`/`Token`/`Finished`), cancellation and
+//!   deadline eviction — the substrate both [`serve`] and [`decode`]
+//!   front-ends adapt, with event order bitwise invariant to `--threads`
 //! - [`linalg`] — dense matrix substrate + symmetric eigensolvers
 //! - [`tensor`] — named tensors and the `.rtz` interchange container
 //! - [`runtime`] — PJRT executable loading/caching/marshalling
@@ -32,13 +38,14 @@
 //!   tables harness, examples, and benches
 //! - [`serve`] — factored-form serving: batched forward engine executing
 //!   compressed layers as two skinny matmuls (`r(d1+d2)` MACs) with
-//!   per-layer dense/low-rank dispatch, a multi-request batching queue,
-//!   and latency/throughput/MAC accounting
+//!   per-layer dense/low-rank dispatch, adapting the [`engine`] core's
+//!   request lifecycle, and latency/throughput/MAC accounting
 //! - [`decode`] — autoregressive generation over the serve path: per-slot
 //!   KV cache pool, single-token dense/factored `forward_step`, a
-//!   continuous-batching scheduler (mid-run admission, EOS/max-token
-//!   eviction, round-robin fairness), seeded greedy/temperature/top-k
-//!   sampling, and TTFT/inter-token-latency/MAC-savings stats
+//!   continuous-batching scheduler over the [`engine`] core (mid-run
+//!   admission, EOS/max-token/cancel/deadline eviction, round-robin
+//!   fairness), seeded greedy/temperature/top-k sampling, and
+//!   TTFT/inter-token-latency/MAC-savings stats from the event timeline
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
@@ -47,6 +54,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod decode;
+pub mod engine;
 pub mod eval;
 pub mod exec;
 pub mod linalg;

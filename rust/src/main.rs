@@ -87,6 +87,19 @@ const SERVE_WORKERS: Flag = flag("workers", "N", "serving worker threads");
 const SERVE_BATCH: Flag = flag("batch", "N", "max requests per dispatch batch");
 const JSON_OUT: Flag = flag("json", "FILE", "also write the benchmark as machine-readable JSON");
 const MAX_NEW: Flag = flag("max-new", "N", "tokens to generate per request");
+const STREAM: Flag =
+    switch("stream", "print tokens as they are produced (event-stream path, flushed per token)");
+const DEADLINE_MS: Flag = flag(
+    "deadline-ms",
+    "MS",
+    "per-request deadline; overdue requests are evicted mid-flight (finish reason `deadline`)",
+);
+const CANCEL_AFTER: Flag = flag(
+    "cancel-after",
+    "N",
+    "cancel every request once its Nth streamed token arrives (applied at scheduling-step \
+     boundaries, so a request keeps at least 2 tokens; exercises mid-flight eviction)",
+);
 const TEMP: Flag = flag("temp", "T", "sampling temperature (0 = greedy)");
 const TOP_K: Flag = flag("top-k", "K", "restrict sampling to the K best logits (0 = off)");
 const SLOTS: Flag = flag("slots", "N", "concurrent KV cache slots (continuous batching)");
@@ -193,6 +206,9 @@ static COMMANDS: &[Cmd] = &[
             SLOTS,
             THREADS,
             KV_CAP,
+            STREAM,
+            DEADLINE_MS,
+            CANCEL_AFTER,
             switch(
                 "self-check",
                 "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC accounting",
@@ -619,17 +635,17 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     println!(
         "served {} requests ({} tokens) in {:.3}s — {:.0} tok/s, {:.1} µs/token, \
          {:.3} MMACs/token",
-        stats.requests,
-        stats.tokens,
-        stats.wall_s,
+        stats.core.requests,
+        stats.core.tokens,
+        stats.core.wall_s,
         stats.tokens_per_s(),
         stats.s_per_token() * 1e6,
         stats.macs_per_token() as f64 / 1e6,
     );
     println!(
         "latency mean {:.2}ms  p95 {:.2}ms  ({} dispatch batches)",
-        stats.latency.mean * 1e3,
-        stats.latency.p95 * 1e3,
+        stats.core.latency.mean * 1e3,
+        stats.core.latency.p95 * 1e3,
         stats.batches
     );
     if let Some(r) = results.first() {
@@ -690,7 +706,7 @@ fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
             ServeConfig { workers: 2, max_batch: 2, exec },
         );
         let (results, stats) = engine.run(requests.clone())?;
-        outputs.push((results.into_iter().map(|r| r.logits).collect(), stats.macs));
+        outputs.push((results.into_iter().map(|r| r.logits).collect(), stats.core.macs));
     }
     let mut max_diff = 0.0f64;
     for (a, b) in outputs[0].0.iter().zip(&outputs[1].0) {
@@ -818,12 +834,59 @@ fn load_artifact_or_ckpt(cfg: &ModelConfig, path: &str) -> Result<CompressedMode
     }
 }
 
+/// Drive `requests` through the scheduler — on the event-stream path when
+/// `--stream`/`--cancel-after` ask for it (printing `Token` events as they
+/// are produced, flushed per token), otherwise as one batch run. Token
+/// payloads and results are identical either way; streaming only changes
+/// *when* the caller sees them.
+fn run_generate(
+    scheduler: &DecodeScheduler,
+    requests: Vec<GenRequest>,
+    stream: bool,
+    cancel_after: Option<usize>,
+    inline_text: bool,
+) -> Result<(Vec<llm_rom::decode::GenResult>, llm_rom::decode::DecodeStats)> {
+    use llm_rom::decode::{EventKind, StreamControl};
+    use std::io::Write;
+    if !stream && cancel_after.is_none() {
+        return scheduler.run(requests);
+    }
+    let mut out = std::io::stdout();
+    let res = scheduler.run_streaming(requests, |ev| {
+        if let EventKind::Token { index, token, text } = &ev.kind {
+            if stream {
+                if inline_text {
+                    let _ = write!(out, "{text}");
+                } else {
+                    let _ = write!(out, "r{}:{token} ", ev.id);
+                }
+                let _ = out.flush(); // the whole point: per-token delivery
+            }
+            if cancel_after.is_some_and(|n| index + 1 >= n) {
+                return StreamControl::Cancel;
+            }
+        }
+        StreamControl::Continue
+    })?;
+    if stream {
+        println!();
+    }
+    Ok(res)
+}
+
+/// Printable admission seq (`-` for requests evicted straight from the
+/// queue, which never held a slot).
+fn admitted_label(admitted: Option<usize>) -> String {
+    admitted.map(|a| a.to_string()).unwrap_or_else(|| "-".into())
+}
+
 fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     use llm_rom::data::{Tokenizer, BOS};
     let seed: u64 = args.parse_num("seed", 0)?;
     let exec = exec_from(args)?;
+    let stream = args.get("stream").is_some();
     if args.get("self-check").is_some() {
-        return decode_self_check(seed, exec);
+        return if stream { stream_self_check(seed, exec) } else { decode_self_check(seed, exec) };
     }
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
@@ -840,6 +903,12 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     let cap_mb: usize = args.parse_num("kv-cap-mb", 0)?;
     let max_cache_bytes = if cap_mb > 0 { Some(cap_mb * 1_000_000) } else { None };
     let sampling = Sampling::parse(temp, top_k)?;
+    let deadline_s: Option<f64> = match args.get("deadline-ms") {
+        None => None,
+        Some(_) => Some(args.parse_num("deadline-ms", 0.0f64)? / 1e3),
+    };
+    let cancel_n: usize = args.parse_num("cancel-after", 0)?;
+    let cancel_after = if cancel_n > 0 { Some(cancel_n) } else { None };
 
     match args.get("prompt") {
         Some(prompt) => {
@@ -858,10 +927,17 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 ..DecodeConfig::default()
             };
             let scheduler = DecodeScheduler::new(&model, config);
-            let (results, stats) =
-                scheduler.run(vec![GenRequest { id: 0, prompt: ids, max_new: None }])?;
+            let reqs = vec![GenRequest { id: 0, prompt: ids, max_new: None, deadline_s }];
+            if stream {
+                use std::io::Write;
+                print!("{prompt}");
+                let _ = std::io::stdout().flush();
+            }
+            let (results, stats) = run_generate(&scheduler, reqs, stream, cancel_after, true)?;
             let r = &results[0];
-            println!("{}{}", prompt, tk.decode(&r.tokens));
+            if !stream {
+                println!("{}{}", prompt, r.text);
+            }
             eprintln!(
                 "\n[{} [{}], {} prompt + {} generated tokens, {} — ttft {:.1}ms, \
                  {:.1} tok/s, {:.3} MMACs/token, {:.2}x fewer MACs than recompute]",
@@ -897,24 +973,30 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 sampling.label(),
                 exec.resolve(),
             );
-            let reqs = decode::synth_gen_requests(&cfg, n, prompt_len, seed);
+            let mut reqs = decode::synth_gen_requests(&cfg, n, prompt_len, seed);
+            for r in &mut reqs {
+                r.deadline_s = deadline_s;
+            }
             let scheduler = DecodeScheduler::new(&model, config);
-            let (results, stats) = scheduler.run(reqs)?;
+            let (results, stats) = run_generate(&scheduler, reqs, stream, cancel_after, false)?;
             for r in &results {
+                let snippet: String = r.text.chars().take(24).collect();
                 println!(
-                    "  request {:>2}: admitted #{:<2} {} tokens ({}), ttft {:>7.2}ms",
+                    "  request {:>2}: admitted #{:<2} {} tokens ({}), ttft {:>7.2}ms, \
+                     text \"{}\"",
                     r.id,
-                    r.admitted,
+                    admitted_label(r.admitted),
                     r.tokens.len(),
                     r.finish.name(),
                     r.ttft_s * 1e3,
+                    snippet.escape_default(),
                 );
             }
             println!(
                 "generated {} tokens in {:.3}s — {:.0} tok/s, {:.3} MMACs/token \
                  ({:.2}x fewer than recompute)",
-                stats.generated_tokens,
-                stats.wall_s,
+                stats.generated_tokens(),
+                stats.core.wall_s,
                 stats.tokens_per_s(),
                 stats.macs_per_generated_token() as f64 / 1e6,
                 stats.mac_savings(),
@@ -1038,7 +1120,7 @@ fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
             kv_stats.mid_run_admissions,
             kv_stats.peak_active
         );
-        totals.push((kv_stats.macs, kv_stats.recompute_macs));
+        totals.push((kv_stats.core.macs, kv_stats.recompute_macs));
     }
     let (dense_recompute, fact_cached) = (totals[0].1, totals[1].0);
     anyhow::ensure!(
@@ -1055,6 +1137,146 @@ fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         dense_recompute as f64 / fact_cached as f64
     );
     println!("decode self-check: OK");
+    Ok(())
+}
+
+/// `repro generate --stream --self-check`: fully-offline verification of
+/// the streaming inference core on a synthetic factored artifact —
+///
+/// 1. streamed ≡ batch: for every request, the concatenated `Token` event
+///    payloads are byte-identical to the batch `run()` token stream, the
+///    finish reasons and executed MACs agree, each event stream follows
+///    the lifecycle grammar (`Admitted → Prefilled → Token* → Finished`),
+///    and TTFT/inter-token samples derive from the event timeline;
+/// 2. cancellation: cancelling every request after its 3rd streamed token
+///    evicts it mid-flight (`cancelled`, exactly 3 tokens kept) and the
+///    freed slots keep serving the queue (mid-run admissions);
+/// 3. deadline: an already-expired deadline deterministically yields
+///    exactly one token per request (`deadline`), and the evictions free
+///    slots for the queued requests.
+///
+/// Run by `scripts/verify.sh` at `--threads 1` and `--threads 4` with an
+/// output diff — everything printed (event order, token counts, reasons)
+/// is deterministic, so thread-count divergence fails the gate.
+fn stream_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
+    use llm_rom::decode::{EventKind, StreamControl};
+    let cfg = serve::demo_config();
+    let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0x57E0)?;
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored)?;
+    let config = DecodeConfig {
+        slots: 2,
+        capacity: 12 + 10,
+        max_new: 10,
+        sampling: Sampling::Greedy,
+        seed,
+        eos: None,
+        exec,
+        ..DecodeConfig::default()
+    };
+    let reqs = decode::synth_gen_requests(&cfg, 6, 12, seed);
+    let scheduler = DecodeScheduler::new(&model, config);
+
+    // 1. streamed events ≡ batch results
+    let (batch, batch_stats) = scheduler.run(reqs.clone())?;
+    let mut events: Vec<(usize, llm_rom::decode::EventKind)> = Vec::new();
+    let (streamed, stream_stats) = scheduler.run_streaming(reqs.clone(), |ev| {
+        events.push((ev.id, ev.kind.clone()));
+        StreamControl::Continue
+    })?;
+    anyhow::ensure!(batch.len() == streamed.len(), "result counts diverge");
+    for (a, b) in batch.iter().zip(&streamed) {
+        anyhow::ensure!(a.id == b.id, "result order diverges");
+        let from_events: Vec<i32> = events
+            .iter()
+            .filter(|(id, _)| *id == a.id)
+            .filter_map(|(_, k)| match k {
+                EventKind::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        anyhow::ensure!(
+            from_events == a.tokens && b.tokens == a.tokens,
+            "request {}: streamed Token events != batch token stream",
+            a.id
+        );
+        anyhow::ensure!(a.finish == b.finish && a.macs == b.macs, "request {}: bookkeeping", a.id);
+        let kinds: Vec<&llm_rom::decode::EventKind> =
+            events.iter().filter(|(id, _)| *id == a.id).map(|(_, k)| k).collect();
+        anyhow::ensure!(
+            matches!(kinds.first(), Some(EventKind::Admitted { .. }))
+                && matches!(kinds.get(1), Some(EventKind::Prefilled { .. }))
+                && matches!(kinds.last(), Some(EventKind::Finished { .. }))
+                && kinds.len() == 3 + a.tokens.len(),
+            "request {}: event stream violates Admitted→Prefilled→Token*→Finished",
+            a.id
+        );
+    }
+    anyhow::ensure!(
+        stream_stats.ttft.n == 6 && stream_stats.inter_token.n == 6 * 9,
+        "TTFT/inter-token samples must cover the event timeline"
+    );
+    anyhow::ensure!(
+        stream_stats.core.macs == batch_stats.core.macs,
+        "streamed MACs != batch MACs"
+    );
+    println!(
+        "[1/3] streamed ≡ batch: {} requests, {} events, {} tokens — identical streams, \
+         reasons, and MACs",
+        streamed.len(),
+        events.len(),
+        stream_stats.generated_tokens(),
+    );
+
+    // 2. cancellation mid-flight: every request stops after 3 tokens
+    let (cancelled, c_stats) = scheduler.run_streaming(reqs.clone(), |ev| {
+        match &ev.kind {
+            EventKind::Token { index, .. } if index + 1 >= 3 => StreamControl::Cancel,
+            _ => StreamControl::Continue,
+        }
+    })?;
+    for r in &cancelled {
+        anyhow::ensure!(
+            r.finish.name() == "cancelled" && r.tokens.len() == 3,
+            "request {}: expected cancellation after 3 tokens, got {} ({})",
+            r.id,
+            r.tokens.len(),
+            r.finish.name()
+        );
+    }
+    anyhow::ensure!(
+        c_stats.mid_run_admissions > 0,
+        "cancellations must free slots for the queue"
+    );
+    println!(
+        "[2/3] cancellation: 6/6 requests evicted after exactly 3 tokens, \
+         {} mid-run admissions into freed slots",
+        c_stats.mid_run_admissions
+    );
+
+    // 3. deadline eviction: already-expired deadlines yield exactly one
+    // token each (token-boundary enforcement is deterministic)
+    let mut dl_reqs = reqs;
+    for r in &mut dl_reqs {
+        r.deadline_s = Some(0.0);
+    }
+    let (expired, d_stats) = scheduler.run(dl_reqs)?;
+    for r in &expired {
+        anyhow::ensure!(
+            r.finish.name() == "deadline" && r.tokens.len() == 1 && r.admitted.is_some(),
+            "request {}: expected deadline eviction after its prefill token",
+            r.id
+        );
+    }
+    anyhow::ensure!(
+        d_stats.mid_run_admissions > 0,
+        "deadline evictions must free slots for the queue"
+    );
+    println!(
+        "[3/3] deadline: 6/6 requests evicted after exactly 1 token, \
+         {} mid-run admissions into freed slots",
+        d_stats.mid_run_admissions
+    );
+    println!("stream self-check: OK");
     Ok(())
 }
 

@@ -1,39 +1,36 @@
-//! Multi-request serving: a shared batching queue drained by the worker
-//! pool, with per-request latency and MAC accounting.
+//! Multi-request serving front-end — a thin adapter over the shared
+//! streaming core ([`crate::engine`]).
 //!
-//! Requests land in one FIFO; each worker repeatedly claims a batch of up
-//! to [`ServeConfig::max_batch`] requests and forwards them through the
-//! shared [`ServeModel`] (read-only, so workers need no locking on the
-//! weights). The workers are an [`ExecPool`] broadcast, and the engine
-//! splits the [`ExecConfig`] thread budget between request-level workers
+//! Requests land in the core's bounded FIFO; each scheduling step claims
+//! dispatch batches of up to [`ServeConfig::max_batch`] requests into
+//! free lanes and forwards them in parallel through the shared
+//! [`ServeModel`] (read-only, so lanes need no locking on the weights).
+//! The fan-out runs on the [`crate::exec::ExecPool`], and the engine
+//! splits the [`ExecConfig`] thread budget between request-level lanes
 //! and intra-op row sharding inside each forward — one knob, no
-//! oversubscription: `workers` request threads each drive a
-//! `threads/workers`-wide matmul pool. Per-request latency is measured
-//! from engine start — queue wait plus compute — which is what a caller of
-//! a loaded server observes; [`ServeStats`] aggregates latency
-//! percentiles, throughput, and the exact MACs executed, the empirical
-//! side of the paper's `r(d1+d2)` vs `d1·d2` argument.
-
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+//! oversubscription. Per-request latency is measured from engine start —
+//! queue wait plus compute — which is what a caller of a loaded server
+//! observes; [`ServeStats`] embeds the shared
+//! [`crate::util::RequestStats`] core (latency percentiles, throughput,
+//! and the exact MACs executed, the empirical side of the paper's
+//! `r(d1+d2)` vs `d1·d2` argument) plus the dispatch-batch count.
 
 use anyhow::{anyhow, Result};
 
-use crate::exec::{ExecConfig, ExecPool};
-use crate::util::LatencySummary;
+use crate::engine::{EngineConfig, EngineCore, InferenceRequest};
+use crate::exec::ExecConfig;
+use crate::util::RequestStats;
 
 use super::model::ServeModel;
 
 /// Engine knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Request-level worker threads (capped by the exec thread budget).
+    /// Request-level worker lanes (capped by the exec thread budget).
     pub workers: usize,
-    /// Max requests a worker claims from the queue per dispatch.
+    /// Max requests a dispatch batch claims from the queue.
     pub max_batch: usize,
-    /// Total thread budget shared by request workers and intra-op row
+    /// Total thread budget shared by request lanes and intra-op row
     /// sharding (the global `--threads` knob; results are invariant to it).
     pub exec: ExecConfig,
 }
@@ -68,42 +65,26 @@ pub struct ServeResult {
 /// Aggregate accounting for one [`ServeEngine::run`].
 #[derive(Debug, Clone)]
 pub struct ServeStats {
-    pub requests: usize,
+    /// The shared request-lifecycle core: requests completed, prompt
+    /// tokens scored, MACs executed, wall clock, and the per-request
+    /// completion-latency summary (small-sample safe).
+    pub core: RequestStats,
     /// Dispatch batches claimed from the queue.
     pub batches: usize,
-    pub tokens: usize,
-    pub macs: u128,
-    /// Wall clock of the whole run (all workers).
-    pub wall_s: f64,
-    /// Latency summary (small-sample safe: 0 or 1 completed requests
-    /// yield well-defined values, not degenerate indexing).
-    pub latency: LatencySummary,
 }
 
 impl ServeStats {
     pub fn tokens_per_s(&self) -> f64 {
-        if self.wall_s > 0.0 {
-            self.tokens as f64 / self.wall_s
-        } else {
-            0.0
-        }
+        self.core.tokens_per_s()
     }
 
     /// Wall clock amortized per served token.
     pub fn s_per_token(&self) -> f64 {
-        if self.tokens > 0 {
-            self.wall_s / self.tokens as f64
-        } else {
-            0.0
-        }
+        self.core.s_per_token()
     }
 
     pub fn macs_per_token(&self) -> u128 {
-        if self.tokens > 0 {
-            self.macs / self.tokens as u128
-        } else {
-            0
-        }
+        self.core.macs_per_token()
     }
 }
 
@@ -122,86 +103,59 @@ impl ServeEngine {
         &self.model
     }
 
+    /// This front-end's knobs as an [`EngineConfig`]: `workers × max_batch`
+    /// concurrent lanes, claimed in dispatch batches of `max_batch` and
+    /// forwarded at most `workers` at a time (the rest of the thread
+    /// budget row-shards inside each forward — the old engine's split).
+    fn engine_config(&self, queue_cap: usize) -> EngineConfig {
+        let threads = self.config.exec.resolve().max(1);
+        let workers = self.config.workers.max(1).min(threads);
+        let max_batch = self.config.max_batch.max(1);
+        EngineConfig {
+            slots: workers * max_batch,
+            queue_cap: queue_cap.max(1),
+            max_admit: max_batch,
+            exec: self.config.exec,
+            lane_parallelism: workers,
+            ..EngineConfig::default()
+        }
+    }
+
     /// Serve every request to completion; results are returned in request
     /// id order along with the run's aggregate stats.
     pub fn run(&self, requests: Vec<ServeRequest>) -> Result<(Vec<ServeResult>, ServeStats)> {
-        let n = requests.len();
-        let t0 = Instant::now();
-        let queue: Mutex<VecDeque<ServeRequest>> = Mutex::new(requests.into());
-        let results: Mutex<Vec<ServeResult>> = Mutex::new(Vec::with_capacity(n));
-        let batches: Mutex<usize> = Mutex::new(0);
-        // once any request fails, other workers stop claiming new batches
-        // instead of computing forwards whose results will be discarded
-        let failed = AtomicBool::new(false);
-        // one thread budget, two levels: `workers` request-claiming pool
-        // threads, each driving an intra-op pool over its share — total
-        // concurrency never exceeds the exec budget
-        let threads = self.config.exec.resolve().max(1);
-        let workers = self.config.workers.max(1).min(threads);
-        let intra = ExecPool::new(threads).split(workers);
-        let pool = ExecPool::new(workers);
-
-        let worker_loop = || -> Result<()> {
-            loop {
-                if failed.load(Ordering::Relaxed) {
-                    break;
-                }
-                let batch: Vec<ServeRequest> = {
-                    let mut q = queue.lock().unwrap();
-                    if q.is_empty() {
-                        break;
-                    }
-                    let take = self.config.max_batch.max(1).min(q.len());
-                    q.drain(..take).collect()
-                };
-                *batches.lock().unwrap() += 1;
-                for req in batch {
-                    let (logits, macs) =
-                        match self.model.forward_logits_pooled(&req.tokens, &intra) {
-                            Ok(out) => out,
-                            Err(e) => {
-                                failed.store(true, Ordering::Relaxed);
-                                return Err(e);
-                            }
-                        };
-                    let r = ServeResult {
-                        id: req.id,
-                        tokens: req.tokens.len(),
-                        logits,
-                        macs,
-                        latency_s: t0.elapsed().as_secs_f64(),
-                    };
-                    results.lock().unwrap().push(r);
-                }
-            }
-            Ok(())
-        };
-        let outcomes: Vec<Result<()>> = pool.broadcast(|_worker| -> Result<()> {
-            // panic containment, matching the engine's pre-pool behavior: a
-            // panicking worker surfaces as this run's Err, not a process
-            // abort of a long-lived server
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(&worker_loop))
-                .unwrap_or_else(|_| {
-                    failed.store(true, Ordering::Relaxed);
-                    Err(anyhow!("serve worker panicked"))
-                })
-        });
-        for outcome in outcomes {
-            outcome?;
-        }
-
-        let wall_s = t0.elapsed().as_secs_f64();
-        let mut results = results.into_inner().unwrap();
-        results.sort_by_key(|r| r.id);
+        let ecfg = self.engine_config(requests.len());
+        let reqs: Vec<_> = requests.into_iter().map(InferenceRequest::from).collect();
+        // fail a bad batch (invalid request, duplicate id) before any
+        // compute is spent — the session would reject the offender only
+        // after earlier requests already ran
+        ecfg.validate_batch(&reqs)?;
+        let core = EngineCore::new(&self.model, ecfg);
+        // panic containment, the engine's long-standing contract: a
+        // panicking forward surfaces as this run's Err, not a process
+        // abort of a long-lived server
+        let (finished, cs) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| core.run(reqs)))
+                .unwrap_or_else(|_| Err(anyhow!("serve worker panicked")))?;
+        let results = finished
+            .into_iter()
+            .map(|f| ServeResult {
+                id: f.id,
+                tokens: f.prompt_len,
+                logits: f.logits,
+                macs: f.macs,
+                latency_s: f.latency_s,
+            })
+            .collect();
         let stats = ServeStats {
-            requests: results.len(),
-            batches: batches.into_inner().unwrap(),
-            tokens: results.iter().map(|r| r.tokens).sum(),
-            macs: results.iter().map(|r| r.macs).sum(),
-            wall_s,
-            latency: LatencySummary::from_unsorted(
-                results.iter().map(|r| r.latency_s).collect(),
-            ),
+            core: RequestStats {
+                requests: cs.requests,
+                tokens: cs.scored_tokens,
+                macs: cs.macs,
+                wall_s: cs.wall_s,
+                latency: cs.latency,
+            },
+            batches: cs.batches,
         };
         Ok((results, stats))
     }
@@ -233,14 +187,16 @@ mod tests {
             assert_eq!(r.tokens, 12);
             assert_eq!(r.logits.len(), 12 * e.model().config().vocab);
             assert!(r.macs > 0);
-            assert!(r.latency_s >= 0.0 && r.latency_s <= stats.wall_s + 1e-6);
+            assert!(r.latency_s >= 0.0 && r.latency_s <= stats.core.wall_s + 1e-6);
         }
-        assert_eq!(stats.requests, 9);
-        assert_eq!(stats.tokens, 9 * 12);
-        assert_eq!(stats.macs, results.iter().map(|r| r.macs).sum::<u128>());
+        assert_eq!(stats.core.requests, 9);
+        assert_eq!(stats.core.tokens, 9 * 12);
+        assert_eq!(stats.core.macs, results.iter().map(|r| r.macs).sum::<u128>());
         // 9 requests at batch 2 need at least 5 dispatches
         assert!(stats.batches >= 5, "batches {}", stats.batches);
-        assert!(stats.wall_s > 0.0 && stats.latency.p95 >= stats.latency.mean * 0.5);
+        assert!(
+            stats.core.wall_s > 0.0 && stats.core.latency.p95 >= stats.core.latency.mean * 0.5
+        );
     }
 
     #[test]
@@ -291,12 +247,12 @@ mod tests {
         let e = engine(ExecMode::Dense, 2, 100);
         let (results, stats) = e.run(Vec::new()).unwrap();
         assert!(results.is_empty());
-        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.core.requests, 0);
         assert_eq!(stats.macs_per_token(), 0);
         let reqs = synth_requests(e.model().config(), 2, 8, 1);
         let (results, stats) = e.run(reqs).unwrap();
         assert_eq!(results.len(), 2);
-        assert_eq!(stats.batches, 1, "one worker claims both requests at once");
+        assert_eq!(stats.batches, 1, "one dispatch batch claims both requests at once");
     }
 
     #[test]
@@ -304,17 +260,17 @@ mod tests {
         // 0 completed requests: every latency figure is zero, not garbage
         let e = engine(ExecMode::Factored, 2, 2);
         let (_, s0) = e.run(Vec::new()).unwrap();
-        assert_eq!(s0.latency.n, 0);
-        assert_eq!((s0.latency.mean, s0.latency.p95), (0.0, 0.0));
-        assert_eq!((s0.latency.p50, s0.latency.max), (0.0, 0.0));
+        assert_eq!(s0.core.latency.n, 0);
+        assert_eq!((s0.core.latency.mean, s0.core.latency.p95), (0.0, 0.0));
+        assert_eq!((s0.core.latency.p50, s0.core.latency.max), (0.0, 0.0));
         // 1 completed request: the lone sample is every percentile
         let reqs = synth_requests(e.model().config(), 1, 6, 2);
         let (r1, s1) = e.run(reqs).unwrap();
-        assert_eq!(s1.latency.n, 1);
-        assert_eq!(s1.latency.mean, r1[0].latency_s);
-        assert_eq!(s1.latency.p95, r1[0].latency_s);
-        assert_eq!(s1.latency.p50, r1[0].latency_s);
-        assert_eq!(s1.latency.max, r1[0].latency_s);
+        assert_eq!(s1.core.latency.n, 1);
+        assert_eq!(s1.core.latency.mean, r1[0].latency_s);
+        assert_eq!(s1.core.latency.p95, r1[0].latency_s);
+        assert_eq!(s1.core.latency.p50, r1[0].latency_s);
+        assert_eq!(s1.core.latency.max, r1[0].latency_s);
     }
 
     #[test]

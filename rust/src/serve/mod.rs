@@ -13,10 +13,12 @@
 //! - [`ServeModel`] — a full MiniLLaMA forward built from a
 //!   [`CompressedModel`] artifact (factors restored from the `.rtz`
 //!   sidecars), counting the MACs it actually executes.
-//! - [`ServeEngine`] — multi-request batching queue with worker-thread
-//!   parallelism across requests, plus latency/throughput/MAC accounting
-//!   ([`ServeStats`]) that confirms the `r(d1+d2)` vs `d1·d2` speedup
-//!   empirically (`repro bench-serve`).
+//! - [`ServeEngine`] — the batch serving front-end, now a thin adapter
+//!   over the shared streaming core ([`crate::engine`]): requests flow
+//!   through the core's bounded queue and parallel lanes, with
+//!   latency/throughput/MAC accounting ([`ServeStats`], embedding the
+//!   shared [`crate::util::RequestStats`] core) that confirms the
+//!   `r(d1+d2)` vs `d1·d2` speedup empirically (`repro bench-serve`).
 //!
 //! The demo helpers at the bottom ([`demo_artifact`], [`synth_requests`])
 //! make the whole path self-contained: they synthesize a small compressed
@@ -101,14 +103,14 @@ pub fn demo_artifact(cfg: &ModelConfig, budget: f64, seed: u64) -> Result<Compre
     session.compress_at("rom-weight-svd", &params, budget, &mut calib)
 }
 
-/// Deterministic synthetic workload: `n` requests of `seq` random tokens.
+/// Deterministic synthetic workload: `n` requests of `seq` random tokens —
+/// a [`ServeRequest`] view over the one shared stream generator
+/// [`crate::engine::synth_token_streams`].
 pub fn synth_requests(cfg: &ModelConfig, n: usize, seq: usize, seed: u64) -> Vec<ServeRequest> {
-    let mut rng = Rng::new(seed ^ 0x5E4E);
-    (0..n)
-        .map(|id| {
-            let tokens = (0..seq.max(1)).map(|_| rng.below(cfg.vocab) as i32).collect();
-            ServeRequest { id, tokens }
-        })
+    crate::engine::synth_token_streams(cfg, n, seq, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(id, tokens)| ServeRequest { id, tokens })
         .collect()
 }
 

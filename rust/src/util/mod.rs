@@ -1,5 +1,5 @@
 //! Small shared utilities: deterministic PRNG, timing helpers, latency
-//! summaries.
+//! summaries and the shared request-lifecycle stats core.
 
 pub mod bench;
 pub mod json;
@@ -8,5 +8,5 @@ pub mod stats;
 pub mod timer;
 
 pub use rng::Rng;
-pub use stats::LatencySummary;
+pub use stats::{LatencySummary, RequestStats};
 pub use timer::Stopwatch;

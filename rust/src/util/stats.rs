@@ -1,6 +1,14 @@
-//! Small-sample-safe latency summaries, shared by the serving engine
-//! ([`crate::serve::ServeStats`]) and the decode scheduler
-//! ([`crate::decode::DecodeStats`]).
+//! Small-sample-safe latency summaries and the request-lifecycle
+//! accounting core shared by every inference front-end.
+//!
+//! [`RequestStats`] is the common denominator of one engine run —
+//! requests completed, tokens delivered, MACs executed, wall clock, and
+//! per-request completion latency. The serving engine's
+//! [`crate::serve::ServeStats`] and the decode scheduler's
+//! [`crate::decode::DecodeStats`] both embed one `RequestStats` core and
+//! add only their regime-specific columns (dispatch batches; TTFT /
+//! inter-token latency and KV-vs-recompute MACs), so the derived rates
+//! are computed in exactly one place.
 //!
 //! Percentiles use the nearest-rank method over a total order
 //! (`f64::total_cmp`), and the degenerate sample counts a light run
@@ -33,6 +41,54 @@ impl LatencySummary {
             p50: percentile(&samples, 0.50),
             p95: percentile(&samples, 0.95),
             max: samples[n - 1],
+        }
+    }
+}
+
+/// The accounting every request front-end shares: one completed engine
+/// run reduced to requests, tokens, MACs, wall clock, and the
+/// per-request completion-latency distribution.
+#[derive(Debug, Clone, Default)]
+pub struct RequestStats {
+    /// Requests completed (including cancelled/deadline-evicted ones).
+    pub requests: usize,
+    /// Tokens delivered to callers — prompt positions scored on the serve
+    /// path, tokens generated on the decode path.
+    pub tokens: usize,
+    /// MACs actually executed across all requests.
+    pub macs: u128,
+    /// Wall clock of the whole run.
+    pub wall_s: f64,
+    /// Per-request completion latency (run start → request finished:
+    /// queue wait plus compute, what a caller of a loaded server sees).
+    pub latency: LatencySummary,
+}
+
+impl RequestStats {
+    /// Delivered tokens per wall-clock second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Wall clock amortized per delivered token.
+    pub fn s_per_token(&self) -> f64 {
+        if self.tokens > 0 {
+            self.wall_s / self.tokens as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Executed MACs amortized per delivered token.
+    pub fn macs_per_token(&self) -> u128 {
+        if self.tokens > 0 {
+            self.macs / self.tokens as u128
+        } else {
+            0
         }
     }
 }
@@ -101,6 +157,25 @@ mod tests {
         let sorted = [1.0, 2.0, 3.0];
         assert_eq!(percentile(&sorted, -1.0), 1.0);
         assert_eq!(percentile(&sorted, 7.0), 3.0);
+    }
+
+    #[test]
+    fn request_stats_rates() {
+        let s = RequestStats {
+            requests: 4,
+            tokens: 40,
+            macs: 4_000,
+            wall_s: 2.0,
+            latency: LatencySummary::from_unsorted(vec![0.5, 1.0, 1.5, 2.0]),
+        };
+        assert_eq!(s.tokens_per_s(), 20.0);
+        assert_eq!(s.s_per_token(), 0.05);
+        assert_eq!(s.macs_per_token(), 100);
+        // the degenerate run: every rate is zero, not NaN or a panic
+        let z = RequestStats::default();
+        assert_eq!(z.tokens_per_s(), 0.0);
+        assert_eq!(z.s_per_token(), 0.0);
+        assert_eq!(z.macs_per_token(), 0);
     }
 
     #[test]

@@ -377,8 +377,8 @@ fn prop_serve_engine_schedule_invariant() {
             assert_eq!(x.logits, y.logits, "{w}/{b}: scheduling changed logits");
             assert_eq!(x.macs, y.macs, "{w}/{b}");
         }
-        assert_eq!(stats.macs, base_stats.macs, "{w}/{b}");
-        assert_eq!(stats.tokens, base_stats.tokens, "{w}/{b}");
+        assert_eq!(stats.core.macs, base_stats.core.macs, "{w}/{b}");
+        assert_eq!(stats.core.tokens, base_stats.core.tokens, "{w}/{b}");
     }
 }
 
@@ -445,9 +445,9 @@ fn prop_kv_decode_matches_recompute_decode() {
                 );
                 assert_eq!(b.macs, rep.recompute_macs, "case {case} {mode:?}");
             }
-            assert_eq!(kv_stats.recompute_macs, rc_stats.macs, "case {case} {mode:?}");
+            assert_eq!(kv_stats.recompute_macs, rc_stats.core.macs, "case {case} {mode:?}");
             assert!(
-                kv_stats.macs < rc_stats.macs,
+                kv_stats.core.macs < rc_stats.core.macs,
                 "case {case} {mode:?}: the cache must save MACs"
             );
         }
@@ -474,6 +474,7 @@ fn prop_scheduler_admission_fifo_never_starves() {
                 id,
                 prompt: (0..2 + rng.below(6)).map(|_| rng.below(cfg.vocab) as i32).collect(),
                 max_new: Some(1 + rng.below(7)),
+                deadline_s: None,
             })
             .collect();
         let budgets: Vec<usize> = reqs.iter().map(|r| r.max_new.unwrap()).collect();
@@ -492,7 +493,8 @@ fn prop_scheduler_admission_fifo_never_starves() {
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.id, i, "case {case}: results in id order");
             assert_eq!(
-                r.admitted, i,
+                r.admitted,
+                Some(i),
                 "case {case}: FIFO admission — request {i} was overtaken"
             );
             assert_eq!(
@@ -504,7 +506,7 @@ fn prop_scheduler_admission_fifo_never_starves() {
         }
         assert!(stats.peak_active <= slots, "case {case}: {} > {slots}", stats.peak_active);
         assert_eq!(
-            stats.generated_tokens,
+            stats.generated_tokens(),
             budgets.iter().sum::<usize>(),
             "case {case}"
         );
@@ -688,5 +690,174 @@ fn prop_lm_batches_shift_invariant() {
                 }
             }
         }
+    }
+}
+
+/// Property: the streaming event path is the batch path. For random
+/// configs, budgets, slot counts, and thread counts, the concatenated
+/// `Token` event payloads of every request equal the batch `run()` token
+/// stream, finish reasons and MAC accounting agree, and the event *order*
+/// (ids and payloads, timestamps aside) is bitwise invariant to the
+/// thread count.
+#[test]
+fn prop_streaming_events_equal_batch_run() {
+    use llm_rom::decode::{
+        synth_gen_requests, DecodeConfig, DecodeScheduler, EventKind, Sampling, StreamControl,
+    };
+    use llm_rom::exec::ExecConfig;
+    use llm_rom::serve::{demo_artifact, ExecMode, ServeModel};
+    for case in 0..5u64 {
+        let mut rng = Rng::new(case * 7121 + 31);
+        let cfg = ModelConfig {
+            vocab: 40 + rng.below(30),
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            ..ModelConfig::mini()
+        };
+        let cm = demo_artifact(&cfg, 0.4 + rng.f64() * 0.4, case * 5 + 3).unwrap();
+        let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let prompt_len = 3 + rng.below(6);
+        let max_new = 2 + rng.below(6);
+        let slots = 1 + rng.below(3);
+        let n = 2 + rng.below(4);
+        let reqs = synth_gen_requests(&cfg, n, prompt_len, case * 19 + 7);
+        let config = |threads: usize| DecodeConfig {
+            slots,
+            capacity: prompt_len + max_new,
+            max_new,
+            sampling: Sampling::Greedy,
+            seed: case,
+            eos: None,
+            exec: ExecConfig::with_threads(threads),
+            ..DecodeConfig::default()
+        };
+
+        let sched = DecodeScheduler::new(&model, config(2));
+        let (batch, batch_stats) = sched.run(reqs.clone()).unwrap();
+
+        let stream_run = |threads: usize| {
+            let sched = DecodeScheduler::new(&model, config(threads));
+            let mut events: Vec<(usize, EventKind)> = Vec::new();
+            let (results, stats) = sched
+                .run_streaming(reqs.clone(), |ev| {
+                    events.push((ev.id, strip_times(ev.kind.clone())));
+                    StreamControl::Continue
+                })
+                .unwrap();
+            (events, results, stats)
+        };
+
+        let (events, streamed, stream_stats) = stream_run(2);
+        assert_eq!(streamed.len(), batch.len(), "case {case}");
+        for (a, b) in batch.iter().zip(&streamed) {
+            assert_eq!(a.id, b.id, "case {case}");
+            assert_eq!(a.tokens, b.tokens, "case {case}: streamed result diverged");
+            assert_eq!(a.finish, b.finish, "case {case}");
+            assert_eq!(a.macs, b.macs, "case {case}");
+            let from_events: Vec<i32> = events
+                .iter()
+                .filter(|(id, _)| *id == a.id)
+                .filter_map(|(_, k)| match k {
+                    EventKind::Token { token, .. } => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(
+                from_events, a.tokens,
+                "case {case}: request {} Token events != batch stream",
+                a.id
+            );
+        }
+        assert_eq!(stream_stats.core.macs, batch_stats.core.macs, "case {case}");
+        assert_eq!(
+            stream_stats.generated_tokens(),
+            batch_stats.generated_tokens(),
+            "case {case}"
+        );
+        // TTFT/inter-token samples cover the event timeline exactly: one
+        // TTFT per request, one inter-token sample per non-first token
+        assert_eq!(stream_stats.ttft.n, n, "case {case}");
+        assert_eq!(
+            stream_stats.inter_token.n,
+            stream_stats.generated_tokens() - n,
+            "case {case}"
+        );
+
+        // event order is bitwise invariant to the thread count
+        let (serial_events, _, _) = stream_run(1);
+        for threads in [2usize, 8] {
+            let (ev_n, _, _) = stream_run(threads);
+            assert_eq!(ev_n, serial_events, "case {case} t{threads}: event order moved");
+        }
+    }
+}
+
+/// Event kinds with wall-clock fields zeroed (payload-only comparison).
+fn strip_times(kind: llm_rom::decode::EventKind) -> llm_rom::decode::EventKind {
+    use llm_rom::decode::EventKind;
+    match kind {
+        EventKind::Prefilled { prompt_len, .. } => EventKind::Prefilled { prompt_len, ttft_s: 0.0 },
+        other => other,
+    }
+}
+
+/// Property: mid-flight cancellation and deadline eviction keep the
+/// partial stream, free the slot for queued requests, and never corrupt
+/// the streams of the surviving requests.
+#[test]
+fn prop_cancellation_preserves_surviving_streams() {
+    use llm_rom::decode::{
+        synth_gen_requests, DecodeConfig, DecodeScheduler, EventKind, Sampling, StreamControl,
+    };
+    use llm_rom::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, 87).unwrap();
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+    for case in 0..6u64 {
+        let mut rng = Rng::new(case * 3931 + 53);
+        let n = 3 + rng.below(4);
+        // cancel one request after `cut` >= 2 tokens: events are delivered
+        // at step boundaries, and a request's first step yields two tokens
+        // (prefill + first round), so cut == 1 would still keep two
+        let cut = 2 + rng.below(2);
+        let victim = rng.below(n);
+        let config = DecodeConfig {
+            slots: 1 + rng.below(2),
+            capacity: 32,
+            max_new: 6,
+            sampling: Sampling::Greedy,
+            seed: case,
+            eos: None,
+            ..DecodeConfig::default()
+        };
+        let reqs = synth_gen_requests(&cfg, n, 5, case * 29 + 3);
+        let sched = DecodeScheduler::new(&model, config);
+        let (base, _) = sched.run(reqs.clone()).unwrap();
+        let (got, stats) = sched
+            .run_streaming(reqs, |ev| match &ev.kind {
+                EventKind::Token { index, .. } if ev.id == victim && index + 1 >= cut => {
+                    StreamControl::Cancel
+                }
+                _ => StreamControl::Continue,
+            })
+            .unwrap();
+        assert_eq!(got.len(), n, "case {case}: every request still completes");
+        for (b, g) in base.iter().zip(&got) {
+            if g.id == victim {
+                assert_eq!(g.finish.name(), "cancelled", "case {case}");
+                assert_eq!(g.tokens.len(), cut, "case {case}: partial stream kept");
+                assert_eq!(
+                    g.tokens[..],
+                    b.tokens[..cut],
+                    "case {case}: partial stream must be a prefix of the full one"
+                );
+            } else {
+                assert_eq!(g.tokens, b.tokens, "case {case}: survivor {} corrupted", g.id);
+                assert_eq!(g.finish, b.finish, "case {case}");
+            }
+        }
+        assert_eq!(stats.core.requests, n, "case {case}");
     }
 }

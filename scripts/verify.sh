@@ -16,28 +16,29 @@ cargo build --release --examples --benches
 echo "== cargo test -q =="
 cargo test -q
 
-# Serve + decode smoke tests, at --threads 1 AND --threads 4: each run
-# asserts its own invariants (factored ≡ dense logits ≤1e-4, KV ≡ recompute
-# streams, MACs == analytic accounting), and everything the self-checks
-# print is deterministic — so any divergence between the two thread counts
-# is a determinism regression in the exec core and fails the gate here.
-for check in "serve" "generate"; do
-  echo "== repro $check --self-check --threads 1 =="
-  if ! out_t1=$(./target/release/repro "$check" --self-check --threads 1); then
+# Serve + decode + streaming smoke tests, at --threads 1 AND --threads 4:
+# each run asserts its own invariants (factored ≡ dense logits ≤1e-4, KV ≡
+# recompute streams, streamed events ≡ batch results, MACs == analytic
+# accounting), and everything the self-checks print is deterministic — so
+# any divergence between the two thread counts is a determinism regression
+# in the exec/engine core and fails the gate here.
+for check in "serve --self-check" "generate --self-check" "generate --stream --self-check"; do
+  echo "== repro $check --threads 1 =="
+  if ! out_t1=$(./target/release/repro $check --threads 1); then
     echo "$out_t1"
-    echo "verify: FAILED — repro $check --self-check --threads 1" >&2
+    echo "verify: FAILED — repro $check --threads 1" >&2
     exit 1
   fi
   echo "$out_t1"
-  echo "== repro $check --self-check --threads 4 =="
-  if ! out_t4=$(./target/release/repro "$check" --self-check --threads 4); then
+  echo "== repro $check --threads 4 =="
+  if ! out_t4=$(./target/release/repro $check --threads 4); then
     echo "$out_t4"
-    echo "verify: FAILED — repro $check --self-check --threads 4" >&2
+    echo "verify: FAILED — repro $check --threads 4" >&2
     exit 1
   fi
   echo "$out_t4"
   if [ "$out_t1" != "$out_t4" ]; then
-    echo "verify: FAILED — repro $check --self-check diverges between --threads 1 and 4" >&2
+    echo "verify: FAILED — repro $check diverges between --threads 1 and 4" >&2
     diff <(echo "$out_t1") <(echo "$out_t4") >&2 || true
     exit 1
   fi
