@@ -1,0 +1,185 @@
+//! HTTP serving walkthrough — the `repro daemon` transport front-end,
+//! end to end and fully offline (client and server in one process over
+//! loopback; no AOT artifacts, no PJRT):
+//!
+//! 1. compress a mini model offline and load it in factored form,
+//! 2. bind a [`Daemon`] on an ephemeral loopback port and serve it from
+//!    a scoped thread,
+//! 3. talk to it over one keep-alive connection: `/healthz`, a score
+//!    request, a unary generate — typed JSON envelopes both ways,
+//! 4. stream a generation over SSE: `admitted → prefilled → token* →
+//!    finished`, printed frame by frame as they arrive off the socket,
+//! 5. overload it deterministically: with admission paused the bounded
+//!    queue fills to cap and the next request is shed with `429` +
+//!    `Retry-After` (the backpressure contract of a loaded server),
+//! 6. drive it open-loop with the wire-path load generator
+//!    (`repro loadgen` in-process) and read the latency report,
+//! 7. drain gracefully (`POST /admin/drain`): in-flight work finishes,
+//!    the daemon exits and hands back its [`DaemonReport`].
+//!
+//! ```bash
+//! cargo run --release --example http_serving
+//! ```
+
+use anyhow::{ensure, Result};
+use llm_rom::daemon::{
+    run_loadgen, Daemon, DaemonConfig, DaemonControl, DaemonReport, HttpClient, LoadgenConfig,
+};
+use llm_rom::daemon::wire;
+use llm_rom::engine::{synth_token_streams, EngineConfig};
+use llm_rom::model::ModelConfig;
+use llm_rom::serve::{self, ExecMode, ServeModel};
+use llm_rom::util::json::Json;
+
+fn gen_body(prompt: &[i32], max_new: usize, stream: bool) -> Json {
+    wire::obj(vec![
+        ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("max_new", Json::Num(max_new as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+}
+
+fn main() -> Result<()> {
+    let cfg = ModelConfig::mini();
+    println!(
+        "== stage 1: offline weight-space ROM @ 50% budget (MiniLLaMA d={} L={}) ==",
+        cfg.d_model, cfg.n_layers
+    );
+    let cm = serve::demo_artifact(&cfg, 0.5, 42)?;
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored)?;
+    println!("loaded factored: {} matrices execute as two skinny matmuls", model.n_factored());
+
+    println!("\n== stage 2: bind the daemon on an ephemeral loopback port ==");
+    let engine = EngineConfig {
+        slots: 2,
+        queue_cap: 3,
+        max_new: 8,
+        capacity: 8 + 32,
+        seed: 7,
+        eos: None,
+        ..EngineConfig::default()
+    };
+    let server = Daemon::bind(
+        &model,
+        DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 1 },
+    )?;
+    let ctl = server.control();
+    let addr = server.addr();
+    println!("daemon listening on http://{addr} — {} slots, queue {}", engine.slots, engine.queue_cap);
+
+    let report = std::thread::scope(|s| -> Result<DaemonReport> {
+        let srv = s.spawn(move || server.serve());
+        let walk = walkthrough(addr, &ctl, &cfg);
+        // drain unconditionally: on success this is stage 7, on failure it
+        // unblocks the daemon thread so the scope can join
+        ctl.drain();
+        let report = srv.join().expect("daemon thread panicked");
+        walk?;
+        report
+    })?;
+
+    println!("\n== stage 7: drained — the daemon's own account of the run ==");
+    println!(
+        "{} HTTP requests: {} inference retired ({} scored + {} generated tokens), \
+         {} SSE streams, {} shed with 429",
+        report.http_requests,
+        report.stats.requests,
+        report.stats.scored_tokens,
+        report.stats.generated_tokens,
+        report.sse_streams,
+        report.shed_429,
+    );
+    // stage 5 shed exactly one; the open-loop burst may shed more
+    ensure!(report.shed_429 >= 1, "stage 5 must shed at least one request");
+    Ok(())
+}
+
+fn walkthrough(addr: std::net::SocketAddr, ctl: &DaemonControl, cfg: &ModelConfig) -> Result<()> {
+    let prompts = synth_token_streams(cfg, 8, 8, 7);
+
+    println!("\n== stage 3: one keep-alive connection, typed envelopes ==");
+    let mut c = HttpClient::connect(addr)?;
+    let health = c.get("/healthz")?.json()?;
+    println!(
+        "GET /healthz      -> ok={} slots={} queue {}/{}",
+        health.get("ok")?,
+        health.get("slots")?,
+        health.get("queue_depth")?,
+        health.get("queue_cap")?,
+    );
+    let body = wire::obj(vec![(
+        "tokens",
+        Json::Arr(prompts[0].iter().map(|&t| Json::Num(t as f64)).collect()),
+    )]);
+    let env = c.post_json("/v1/score", &body)?.json()?;
+    println!(
+        "POST /v1/score    -> id={} reason={} prompt_len={}",
+        env.get("id")?,
+        env.get("reason")?,
+        env.get("prompt_len")?,
+    );
+    let env = c.post_json("/v1/generate", &gen_body(&prompts[1], 6, false))?.json()?;
+    println!(
+        "POST /v1/generate -> id={} tokens={} ({})",
+        env.get("id")?,
+        env.get("tokens")?,
+        env.get("reason")?,
+    );
+
+    println!("\n== stage 4: the same request as an SSE stream ==");
+    let mut sse = HttpClient::connect(addr)?;
+    let resp = sse.post_json("/v1/generate", &gen_body(&prompts[2], 6, true))?;
+    ensure!(resp.status == 200 && resp.is_sse(), "expected an SSE stream");
+    while let Some(f) = sse.next_sse_frame()? {
+        println!("  event: {:<9} data: {}", f.event, f.data);
+        if f.event == "finished" {
+            break;
+        }
+    }
+
+    println!("\n== stage 5: deterministic overload — bounded queue, 429 shedding ==");
+    ctl.pause(); // freeze admission so queue occupancy is exact
+    let mut parked = Vec::new();
+    for p in prompts.iter().skip(3).take(3) {
+        let mut qc = HttpClient::connect(addr)?;
+        let resp = qc.post_json("/v1/generate", &gen_body(p, 4, true))?;
+        ensure!(resp.status == 200, "queued stream: status {}", resp.status);
+        parked.push(qc);
+    }
+    while ctl.snapshot().queue_depth < 3 {
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let mut over = HttpClient::connect(addr)?;
+    let resp = over.post_json("/v1/generate", &gen_body(&prompts[6], 4, true))?;
+    println!(
+        "queue at 3/3 -> next request: {} (Retry-After: {})",
+        resp.status,
+        resp.header("retry-after").unwrap_or("-"),
+    );
+    ensure!(resp.status == 429, "over-capacity request must shed");
+    ctl.resume();
+    for mut qc in parked {
+        while let Some(f) = qc.next_sse_frame()? {
+            if f.event == "finished" {
+                break;
+            }
+        }
+    }
+    println!("resumed: all three parked streams ran to completion");
+
+    println!("\n== stage 6: open-loop load generation over the wire ==");
+    let load = run_loadgen(&LoadgenConfig {
+        addr: addr.to_string(),
+        connections: 2,
+        rps: 40.0,
+        duration_s: 0.5,
+        prompt_len: 8,
+        max_new: 4,
+        stream: true,
+        seed: 7,
+        vocab: cfg.vocab,
+    })?;
+    print!("{}", load.format());
+    ensure!(load.ok > 0, "the burst must complete some requests");
+    Ok(())
+}

@@ -21,12 +21,17 @@
 //!   factored, with MACs/token, tokens/sec, TTFT and inter-token latency
 //!   columns (`repro bench-decode`). Both benches also serialize to JSON
 //!   via `--json` ([`ServeBench::to_json`] / [`DecodeBench::to_json`]).
+//! - **Daemon bench** — self-hosted HTTP/SSE daemon driven open-loop by
+//!   the wire-path load generator over loopback, reporting achieved RPS
+//!   and TTFT / inter-token percentiles from both sides of the wire
+//!   (`repro bench-daemon`, [`DaemonBench::to_json`]).
 
 use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
 use crate::compress::CompressedModel;
+use crate::daemon::{DaemonReport, LoadReport};
 use crate::data::{CalibSource, TaskKind};
 use crate::decode::{
     run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler, DecodeStats,
@@ -668,6 +673,151 @@ pub fn parallel_bench(
         prompt_len,
         max_new,
         slots,
+        seed,
+    })
+}
+
+/// Wire-path benchmark of the HTTP/SSE daemon: a self-hosted
+/// [`crate::daemon::Daemon`] run driven open-loop by the `repro loadgen`
+/// client over loopback — achieved RPS, TTFT / inter-token / completion
+/// latency through the full transport, plus the server-side shed and
+/// error counters. The `repro bench-daemon` payload — `make bench`
+/// writes it as `BENCH_daemon.json`.
+pub struct DaemonBench {
+    /// Client-side view: what the load generator observed on the wire.
+    pub load: LoadReport,
+    /// Server-side view: the drained daemon's engine stats + counters.
+    pub daemon: DaemonReport,
+    pub connections: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub slots: usize,
+    pub queue_cap: usize,
+    /// Resolved worker-pool budget the engine executed under.
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl DaemonBench {
+    pub fn format(&self) -> String {
+        let mut out = format!(
+            "Daemon wire-path bench: {} conns over loopback, {} slots, queue {} \
+             ({} threads)\n",
+            self.connections, self.slots, self.queue_cap, self.threads,
+        );
+        out.push_str(&self.load.format());
+        let s = &self.daemon.stats;
+        out.push_str(&format!(
+            "server: {} retired, {} generated tokens, {} SSE streams, \
+             {} shed_429, {} shed_503, {} bad requests, {} disconnect cancels\n",
+            s.requests,
+            s.generated_tokens,
+            self.daemon.sse_streams,
+            self.daemon.shed_429,
+            self.daemon.shed_503,
+            self.daemon.bad_requests,
+            self.daemon.disconnect_cancels,
+        ));
+        out
+    }
+
+    /// Machine-readable form (the `BENCH_daemon.json` payload).
+    pub fn to_json(&self) -> Json {
+        let s = &self.daemon.stats;
+        json_obj(vec![
+            ("bench", Json::Str("daemon".to_string())),
+            ("connections", Json::Num(self.connections as f64)),
+            ("prompt_len", Json::Num(self.prompt_len as f64)),
+            ("max_new", Json::Num(self.max_new as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("queue_cap", Json::Num(self.queue_cap as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("load", self.load.to_json()),
+            (
+                "server",
+                json_obj(vec![
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("generated_tokens", Json::Num(s.generated_tokens as f64)),
+                    ("wall_s", Json::Num(s.wall_s)),
+                    ("http_requests", Json::Num(self.daemon.http_requests as f64)),
+                    ("sse_streams", Json::Num(self.daemon.sse_streams as f64)),
+                    ("shed_429", Json::Num(self.daemon.shed_429 as f64)),
+                    ("shed_503", Json::Num(self.daemon.shed_503 as f64)),
+                    ("bad_requests", Json::Num(self.daemon.bad_requests as f64)),
+                    (
+                        "disconnect_cancels",
+                        Json::Num(self.daemon.disconnect_cancels as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Self-hosted wire-path run: bind a daemon on an ephemeral loopback
+/// port, drive it with the open-loop load generator, then drain and
+/// join — both sides of the wire report into one [`DaemonBench`].
+#[allow(clippy::too_many_arguments)]
+pub fn daemon_bench(
+    cm: &CompressedModel,
+    connections: usize,
+    rps: f64,
+    duration_s: f64,
+    prompt_len: usize,
+    max_new: usize,
+    slots: usize,
+    queue_cap: usize,
+    exec: ExecConfig,
+    seed: u64,
+) -> Result<DaemonBench> {
+    use crate::daemon::{run_loadgen, Daemon, DaemonConfig, LoadgenConfig};
+    use crate::engine::EngineConfig;
+
+    let cfg = cm.params.config();
+    let model = ServeModel::from_artifact(cm, ExecMode::Factored)?;
+    let engine = EngineConfig {
+        slots,
+        queue_cap,
+        max_new,
+        capacity: prompt_len + max_new,
+        seed,
+        eos: None,
+        exec,
+        ..EngineConfig::default()
+    };
+    let server =
+        Daemon::bind(&model, DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 1 })?;
+    let ctl = server.control();
+    let lg = LoadgenConfig {
+        addr: server.addr().to_string(),
+        connections,
+        rps,
+        duration_s,
+        prompt_len,
+        max_new,
+        stream: true,
+        seed,
+        vocab: cfg.vocab,
+    };
+    let (load, daemon) = std::thread::scope(|s| -> Result<(LoadReport, DaemonReport)> {
+        let srv = s.spawn(move || server.serve());
+        let load = run_loadgen(&lg);
+        // drain unconditionally so the scope can join even if the load
+        // generator failed mid-run
+        ctl.drain();
+        let daemon = srv.join().map_err(|_| anyhow::anyhow!("daemon thread panicked"))?;
+        Ok((load?, daemon?))
+    })?;
+    Ok(DaemonBench {
+        load,
+        daemon,
+        connections,
+        prompt_len,
+        max_new,
+        slots,
+        queue_cap,
+        threads: exec.resolve(),
         seed,
     })
 }

@@ -1,0 +1,549 @@
+//! Hand-rolled HTTP/1.1 over `std::net` — the hermetic wire substrate of
+//! the daemon (server side) and the load generator / self-check (client
+//! side). No new crates: a blocking [`Conn`] with a short socket read
+//! timeout gives the accept/handler loops regular control-flow ticks
+//! (drain and shutdown flags are checked between requests), and the
+//! parser supports exactly the subset the daemon speaks — request line,
+//! headers, `Content-Length` bodies, keep-alive, and Server-Sent Events
+//! framed as `event:`/`data:` blocks terminated by a blank line.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Cap on the request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on a request body — prompts are token arrays, so this is generous.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+/// Socket read timeout: the tick at which blocked readers re-check
+/// control flags (drain/shutdown) between requests.
+const READ_TICK: Duration = Duration::from_millis(50);
+/// Total budget for receiving one request once its first byte arrived.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(5);
+/// Client-side budget for one response head / SSE frame.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One parsed HTTP/1.1 request. Header names are lowercased.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// HTTP/1.1 default is keep-alive unless the client opts out.
+    pub fn keep_alive(&self) -> bool {
+        !self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// What one attempt to read a request produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(HttpRequest),
+    /// No bytes arrived within one read tick — re-check flags and retry.
+    Idle,
+    /// Peer closed cleanly between requests.
+    Eof,
+    /// Unusable request; respond with `status` and close.
+    Malformed { status: u16, message: String },
+}
+
+/// A blocking TCP connection with a byte buffer and tick-granular reads —
+/// shared by the server handler and [`HttpClient`].
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Result<Conn> {
+        stream.set_read_timeout(Some(READ_TICK)).context("set_read_timeout")?;
+        stream.set_nodelay(true).ok();
+        Ok(Conn { stream, buf: Vec::new() })
+    }
+
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// One read tick: append whatever arrived. `Ok(0)` is EOF; a timeout
+    /// surfaces as `ErrorKind::WouldBlock`/`TimedOut`.
+    fn fill_once(&mut self) -> std::io::Result<usize> {
+        let mut tmp = [0u8; 4096];
+        let n = self.stream.read(&mut tmp)?;
+        self.buf.extend_from_slice(&tmp[..n]);
+        Ok(n)
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn malformed(status: u16, message: impl Into<String>) -> ReadOutcome {
+    ReadOutcome::Malformed { status, message: message.into() }
+}
+
+/// Read one request off the connection. Returns [`ReadOutcome::Idle`]
+/// after one quiet read tick so the caller can re-check its control
+/// flags; once a request's first byte arrives the whole request must
+/// land within [`REQUEST_TIMEOUT`].
+pub fn read_request(conn: &mut Conn) -> Result<ReadOutcome> {
+    let t0 = Instant::now();
+    let mut got_bytes = !conn.buf.is_empty();
+    // ---- head: everything up to the blank line ----
+    let head_end = loop {
+        if let Some(pos) = find_subslice(&conn.buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if conn.buf.len() > MAX_HEAD_BYTES {
+            return Ok(malformed(431, "request head too large"));
+        }
+        match conn.fill_once() {
+            Ok(0) => {
+                return Ok(if got_bytes {
+                    malformed(400, "connection closed mid-request")
+                } else {
+                    ReadOutcome::Eof
+                });
+            }
+            Ok(_) => got_bytes = true,
+            Err(e) if is_timeout(&e) => {
+                if !got_bytes {
+                    return Ok(ReadOutcome::Idle);
+                }
+                if t0.elapsed() > REQUEST_TIMEOUT {
+                    return Ok(malformed(408, "timed out reading request head"));
+                }
+            }
+            Err(e) => return Err(e).context("read request head"),
+        }
+    };
+    // ---- parse the head ----
+    let head = match std::str::from_utf8(&conn.buf[..head_end]) {
+        Ok(s) => s.to_string(),
+        Err(_) => return Ok(malformed(400, "request head is not UTF-8")),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, path, version) =
+        (parts.next().unwrap_or(""), parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Ok(malformed(400, format!("bad request line `{request_line}`")));
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        match line.split_once(':') {
+            Some((k, v)) => {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+            None => return Ok(malformed(400, format!("bad header line `{line}`"))),
+        }
+    }
+    // ---- body: exactly Content-Length bytes ----
+    let body_len = match headers.get("content-length") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return Ok(malformed(400, format!("bad content-length `{v}`"))),
+        },
+        None => 0,
+    };
+    if body_len > MAX_BODY_BYTES {
+        return Ok(malformed(413, format!("body of {body_len} bytes exceeds {MAX_BODY_BYTES}")));
+    }
+    let total = head_end + 4 + body_len;
+    while conn.buf.len() < total {
+        match conn.fill_once() {
+            Ok(0) => return Ok(malformed(400, "connection closed mid-body")),
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => {
+                if t0.elapsed() > REQUEST_TIMEOUT {
+                    return Ok(malformed(408, "timed out reading request body"));
+                }
+            }
+            Err(e) => return Err(e).context("read request body"),
+        }
+    }
+    let body = conn.buf[head_end + 4..total].to_vec();
+    conn.buf.drain(..total);
+    Ok(ReadOutcome::Request(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// Reason phrases for the statuses the daemon emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// A buffered response: status, extra headers, JSON body.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response { status, headers: Vec::new(), body: body.to_string().into_bytes() }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// Serialize and send in one write (head + body).
+    pub fn write(&self, stream: &mut TcpStream, keep_alive: bool) -> std::io::Result<()> {
+        let mut out = Vec::with_capacity(self.body.len() + 256);
+        out.extend_from_slice(
+            format!("HTTP/1.1 {} {}\r\n", self.status, status_text(self.status)).as_bytes(),
+        );
+        out.extend_from_slice(b"Content-Type: application/json\r\n");
+        out.extend_from_slice(format!("Content-Length: {}\r\n", self.body.len()).as_bytes());
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        out.extend_from_slice(format!("Connection: {conn}\r\n").as_bytes());
+        for (k, v) in &self.headers {
+            out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(&self.body);
+        stream.write_all(&out)?;
+        stream.flush()
+    }
+}
+
+/// Send the head of an SSE response. SSE responses are `Connection:
+/// close` — end-of-stream is the connection closing, which keeps the
+/// framing self-delimiting without chunked encoding.
+pub fn write_sse_head(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.flush()
+}
+
+/// One `event:`/`data:` block terminated by a blank line.
+pub fn write_sse_frame(stream: &mut TcpStream, event: &str, data: &str) -> std::io::Result<()> {
+    stream.write_all(format!("event: {event}\ndata: {data}\n\n").as_bytes())?;
+    stream.flush()
+}
+
+/// One parsed SSE frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SseFrame {
+    pub event: String,
+    pub data: String,
+}
+
+/// A parsed client-side response.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn is_sse(&self) -> bool {
+        self.header("content-type").is_some_and(|v| v.starts_with("text/event-stream"))
+    }
+
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("response body is not UTF-8")?;
+        Json::parse(text)
+    }
+}
+
+/// Minimal HTTP/1.1 client over the same [`Conn`] substrate — the wire
+/// path of `repro loadgen`, the daemon self-check, and the loopback
+/// integration tests. One client = one connection; keep-alive reuse is
+/// up to the caller issuing more requests on the same client.
+pub struct HttpClient {
+    conn: Conn,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(HttpClient { conn: Conn::new(stream)? })
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.send(&format!("GET {path} HTTP/1.1\r\nHost: daemon\r\n\r\n"))?;
+        self.read_response()
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &Json) -> Result<ClientResponse> {
+        self.post_raw(path, body.to_string().as_bytes())
+    }
+
+    /// POST arbitrary bytes — the malformed-body tests use this.
+    pub fn post_raw(&mut self, path: &str, body: &[u8]) -> Result<ClientResponse> {
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: daemon\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        let mut req = head.into_bytes();
+        req.extend_from_slice(body);
+        self.conn.stream.write_all(&req).context("send request")?;
+        self.conn.stream.flush().ok();
+        self.read_response()
+    }
+
+    fn send(&mut self, raw: &str) -> Result<()> {
+        self.conn.stream.write_all(raw.as_bytes()).context("send request")?;
+        self.conn.stream.flush().ok();
+        Ok(())
+    }
+
+    /// Block (up to [`CLIENT_TIMEOUT`]) until `pred` finds its marker in
+    /// the buffer or EOF; returns the marker position, or None at EOF.
+    fn fill_until(&mut self, pred: impl Fn(&[u8]) -> Option<usize>) -> Result<Option<usize>> {
+        let t0 = Instant::now();
+        loop {
+            if let Some(pos) = pred(&self.conn.buf) {
+                return Ok(Some(pos));
+            }
+            match self.conn.fill_once() {
+                Ok(0) => return Ok(None),
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => {
+                    if t0.elapsed() > CLIENT_TIMEOUT {
+                        bail!("client timed out waiting for response data");
+                    }
+                }
+                Err(e) => return Err(e).context("read response"),
+            }
+        }
+    }
+
+    fn read_response(&mut self) -> Result<ClientResponse> {
+        let head_end = self
+            .fill_until(|buf| find_subslice(buf, b"\r\n\r\n"))?
+            .context("connection closed before response head")?;
+        let head = std::str::from_utf8(&self.conn.buf[..head_end])
+            .context("response head is not UTF-8")?
+            .to_string();
+        self.conn.buf.drain(..head_end + 4);
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or_default();
+        let status: u16 = status_line
+            .split_ascii_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad status line `{status_line}`"))?;
+        let mut headers = BTreeMap::new();
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let mut resp = ClientResponse { status, headers, body: Vec::new() };
+        if resp.is_sse() {
+            // body is the event stream: leave it buffered for next_sse_frame
+            return Ok(resp);
+        }
+        if let Some(len) = resp.header("content-length").and_then(|v| v.parse::<usize>().ok()) {
+            self.fill_until(|buf| (buf.len() >= len).then_some(len))?
+                .context("connection closed mid response body")?;
+            resp.body = self.conn.buf[..len].to_vec();
+            self.conn.buf.drain(..len);
+        }
+        Ok(resp)
+    }
+
+    /// Next SSE frame off an event-stream response; `None` when the
+    /// server closed the stream (end of events).
+    pub fn next_sse_frame(&mut self) -> Result<Option<SseFrame>> {
+        let end = match self.fill_until(|buf| find_subslice(buf, b"\n\n"))? {
+            Some(end) => end,
+            None => {
+                ensure!(self.conn.buf.is_empty(), "connection closed mid SSE frame");
+                return Ok(None);
+            }
+        };
+        let block = std::str::from_utf8(&self.conn.buf[..end])
+            .context("SSE frame is not UTF-8")?
+            .to_string();
+        self.conn.buf.drain(..end + 2);
+        let mut frame = SseFrame { event: String::new(), data: String::new() };
+        for line in block.lines() {
+            if let Some(v) = line.strip_prefix("event:") {
+                frame.event = v.trim().to_string();
+            } else if let Some(v) = line.strip_prefix("data:") {
+                frame.data = v.trim().to_string();
+            }
+        }
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn parses_posted_then_pipelined_requests() {
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server).unwrap();
+        client
+            .write_all(
+                b"POST /v1/score HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n[1,2,3]GET /healthz HTTP/1.1\r\n\r\n",
+            )
+            .unwrap();
+        let ReadOutcome::Request(req) = read_request(&mut conn).unwrap() else {
+            panic!("expected a request");
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/score");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"[1,2,3]");
+        assert!(req.keep_alive());
+        // the pipelined second request is already buffered
+        let ReadOutcome::Request(req2) = read_request(&mut conn).unwrap() else {
+            panic!("expected the pipelined request");
+        };
+        assert_eq!((req2.method.as_str(), req2.path.as_str()), ("GET", "/healthz"));
+        assert!(req2.body.is_empty());
+    }
+
+    #[test]
+    fn idle_then_eof() {
+        let (client, server) = pair();
+        let mut conn = Conn::new(server).unwrap();
+        assert!(matches!(read_request(&mut conn).unwrap(), ReadOutcome::Idle));
+        drop(client);
+        assert!(matches!(read_request(&mut conn).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn malformed_head_is_a_400_not_a_panic() {
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server).unwrap();
+        client.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let ReadOutcome::Malformed { status, .. } = read_request(&mut conn).unwrap() else {
+            panic!("expected malformed");
+        };
+        assert_eq!(status, 400);
+        // oversized declared body is refused up-front
+        let (mut client2, server2) = pair();
+        let mut conn2 = Conn::new(server2).unwrap();
+        client2
+            .write_all(b"POST /v1/score HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n")
+            .unwrap();
+        let ReadOutcome::Malformed { status, .. } = read_request(&mut conn2).unwrap() else {
+            panic!("expected malformed");
+        };
+        assert_eq!(status, 413);
+    }
+
+    #[test]
+    fn response_roundtrip_through_the_client() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(stream).unwrap();
+            loop {
+                match read_request(&mut conn).unwrap() {
+                    ReadOutcome::Request(req) => {
+                        assert_eq!(req.path, "/healthz");
+                        let body = Json::parse(r#"{"ok":true}"#).unwrap();
+                        Response::json(429, &body)
+                            .with_header("Retry-After", "1")
+                            .write(conn.stream_mut(), false)
+                            .unwrap();
+                        return;
+                    }
+                    ReadOutcome::Idle => continue,
+                    other => panic!("unexpected outcome: {other:?}"),
+                }
+            }
+        });
+        let mut client = HttpClient::connect(addr).unwrap();
+        let resp = client.get("/healthz").unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.json().unwrap().get("ok").unwrap(), &Json::Bool(true));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn sse_frames_roundtrip_until_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Conn::new(stream).unwrap();
+            loop {
+                match read_request(&mut conn).unwrap() {
+                    ReadOutcome::Request(_) => break,
+                    ReadOutcome::Idle => continue,
+                    other => panic!("unexpected outcome: {other:?}"),
+                }
+            }
+            let stream = conn.stream_mut();
+            write_sse_head(stream).unwrap();
+            write_sse_frame(stream, "token", r#"{"index":0}"#).unwrap();
+            write_sse_frame(stream, "finished", r#"{"reason":"eos"}"#).unwrap();
+            // dropping the connection ends the stream
+        });
+        let mut client = HttpClient::connect(addr).unwrap();
+        let resp = client.post_json("/v1/generate", &Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp.is_sse());
+        let f1 = client.next_sse_frame().unwrap().unwrap();
+        assert_eq!(f1, SseFrame { event: "token".into(), data: r#"{"index":0}"#.into() });
+        let f2 = client.next_sse_frame().unwrap().unwrap();
+        assert_eq!(f2.event, "finished");
+        assert_eq!(client.next_sse_frame().unwrap(), None, "close ends the stream");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,391 @@
+//! Open-loop wire-path load generator for the daemon.
+//!
+//! `repro loadgen` drives a running daemon over real sockets through the
+//! same [`super::http::HttpClient`] the self-check uses, so the numbers
+//! include every wire cost: connect, serialize, parse, SSE framing.
+//!
+//! The arrival process is **open-loop**: request `i` of a
+//! `--rps R --duration S` run is *due* at `t0 + i/R`, independent of how
+//! fast earlier requests completed. `--connections N` workers pull due
+//! requests from a shared cursor, each holding one keep-alive connection
+//! (re-dialed after an SSE stream, which closes the socket). When all
+//! workers are stuck behind a slow server, arrivals fall behind their
+//! due times — latency is therefore measured **from the due time**, not
+//! from the send, so queueing delay the client itself suffered is
+//! charged to the server (no coordinated omission).
+//!
+//! Per-request the worker records completion latency, TTFT (due → first
+//! `token` SSE frame), and inter-token gaps; 429s and transport errors
+//! are counted, not retried — shed capacity is the signal, not a bug.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::{LatencySummary, Rng};
+
+use super::http::HttpClient;
+use super::wire;
+
+/// Knobs for one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Daemon address, e.g. `127.0.0.1:8700`.
+    pub addr: String,
+    /// Concurrent client connections (workers).
+    pub connections: usize,
+    /// Target open-loop arrival rate, requests per second.
+    pub rps: f64,
+    /// Arrival window in seconds; `ceil(rps * duration)` requests total.
+    pub duration_s: f64,
+    /// Synthetic prompt length in tokens.
+    pub prompt_len: usize,
+    /// `max_new` sent with each generate request.
+    pub max_new: usize,
+    /// `stream: true` (SSE) or unary completion envelopes.
+    pub stream: bool,
+    /// Seed for the synthetic prompts.
+    pub seed: u64,
+    /// Model vocab — prompts are sampled in `0..vocab`.
+    pub vocab: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            connections: 4,
+            rps: 20.0,
+            duration_s: 2.0,
+            prompt_len: 8,
+            max_new: 8,
+            stream: true,
+            seed: 0,
+            vocab: 0,
+        }
+    }
+}
+
+/// What one load-generation run observed from the client side.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub target_rps: f64,
+    /// Completed-request rate over the whole run's wall clock.
+    pub achieved_rps: f64,
+    /// Requests sent (connect attempted).
+    pub sent: usize,
+    /// Requests that completed with a 200 / full SSE stream.
+    pub ok: usize,
+    /// Requests shed by the daemon with 429.
+    pub shed_429: usize,
+    /// Transport failures and non-200/429 statuses.
+    pub errors: usize,
+    /// Generated tokens observed across all completed requests.
+    pub tokens: usize,
+    pub wall_s: f64,
+    /// Due-time → completion, per completed request.
+    pub latency: LatencySummary,
+    /// Due-time → first `token` SSE frame (streaming runs only).
+    pub ttft: LatencySummary,
+    /// Gaps between consecutive `token` frames (streaming runs only).
+    pub inter_token: LatencySummary,
+}
+
+impl LoadReport {
+    pub fn format(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "loadgen: target {:.1} rps -> achieved {:.1} rps over {:.2}s\n",
+            self.target_rps, self.achieved_rps, self.wall_s
+        ));
+        out.push_str(&format!(
+            "  sent {}  ok {}  shed_429 {}  errors {}  tokens {}\n",
+            self.sent, self.ok, self.shed_429, self.errors, self.tokens
+        ));
+        let line = |name: &str, l: &LatencySummary| {
+            format!(
+                "  {name:<12} n {:<5} mean {:.4}s  p50 {:.4}s  p95 {:.4}s  max {:.4}s\n",
+                l.n, l.mean, l.p50, l.p95, l.max
+            )
+        };
+        out.push_str(&line("latency", &self.latency));
+        out.push_str(&line("ttft", &self.ttft));
+        out.push_str(&line("inter_token", &self.inter_token));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        wire::obj(vec![
+            ("target_rps", Json::Num(self.target_rps)),
+            ("achieved_rps", Json::Num(self.achieved_rps)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed_429", Json::Num(self.shed_429 as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("latency", lat_json(&self.latency)),
+            ("ttft", lat_json(&self.ttft)),
+            ("inter_token", lat_json(&self.inter_token)),
+        ])
+    }
+}
+
+fn lat_json(l: &LatencySummary) -> Json {
+    wire::obj(vec![
+        ("n", Json::Num(l.n as f64)),
+        ("mean_s", Json::Num(l.mean)),
+        ("p50_s", Json::Num(l.p50)),
+        ("p95_s", Json::Num(l.p95)),
+        ("max_s", Json::Num(l.max)),
+    ])
+}
+
+/// Deterministic synthetic prompt for request `i`: `prompt_len` tokens
+/// in `0..vocab`, independent of worker scheduling.
+pub fn synth_prompt(seed: u64, i: usize, prompt_len: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..prompt_len.max(1)).map(|_| rng.below(vocab.max(1)) as i32).collect()
+}
+
+/// One worker's tallies, merged after the run.
+#[derive(Default)]
+struct Partial {
+    sent: usize,
+    ok: usize,
+    shed_429: usize,
+    errors: usize,
+    tokens: usize,
+    lat: Vec<f64>,
+    ttft: Vec<f64>,
+    itl: Vec<f64>,
+}
+
+/// What one request did, as observed on the wire.
+enum Outcome {
+    /// Completed: generated tokens, ttft, inter-token gaps.
+    Ok(usize, Option<f64>, Vec<f64>),
+    Shed429,
+    Error,
+}
+
+/// Drive one request on an existing connection. `Err` means the
+/// connection is unusable afterwards (the caller re-dials).
+fn drive(
+    client: &mut HttpClient,
+    cfg: &LoadgenConfig,
+    i: usize,
+    due: Instant,
+) -> Result<Outcome> {
+    let prompt = synth_prompt(cfg.seed, i, cfg.prompt_len, cfg.vocab);
+    let body = wire::obj(vec![
+        ("prompt", Json::Arr(prompt.into_iter().map(|t| Json::Num(t as f64)).collect())),
+        ("max_new", Json::Num(cfg.max_new as f64)),
+        ("stream", Json::Bool(cfg.stream)),
+    ]);
+    let resp = client.post_json("/v1/generate", &body)?;
+    if resp.status == 429 {
+        return Ok(Outcome::Shed429);
+    }
+    if resp.status != 200 {
+        return Ok(Outcome::Error);
+    }
+    if !resp.is_sse() {
+        let tokens = resp
+            .json()
+            .ok()
+            .and_then(|j| j.get("tokens").ok().and_then(|t| t.as_arr().ok().map(|a| a.len())))
+            .unwrap_or(0);
+        return Ok(Outcome::Ok(tokens, None, Vec::new()));
+    }
+    // SSE: walk the frames, timing the token events
+    let mut tokens = 0usize;
+    let mut ttft: Option<f64> = None;
+    let mut itl: Vec<f64> = Vec::new();
+    let mut last_token: Option<Instant> = None;
+    let mut finished = false;
+    while let Some(frame) = client.next_sse_frame()? {
+        match frame.event.as_str() {
+            "token" => {
+                let now = Instant::now();
+                if let Some(prev) = last_token {
+                    itl.push((now - prev).as_secs_f64());
+                } else {
+                    ttft = Some((now - due).as_secs_f64());
+                }
+                last_token = Some(now);
+                tokens += 1;
+            }
+            "finished" => {
+                finished = true;
+                break;
+            }
+            _ => {}
+        }
+    }
+    ensure!(finished, "SSE stream ended without a finished event");
+    Ok(Outcome::Ok(tokens, ttft, itl))
+}
+
+fn worker(
+    cfg: &LoadgenConfig,
+    addr: SocketAddr,
+    next: &AtomicUsize,
+    total: usize,
+    t0: Instant,
+) -> Partial {
+    let mut part = Partial::default();
+    let mut client: Option<HttpClient> = None;
+    loop {
+        let i = next.fetch_add(1, Ordering::SeqCst);
+        if i >= total {
+            return part;
+        }
+        let due = t0 + Duration::from_secs_f64(i as f64 / cfg.rps.max(1e-9));
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        if client.is_none() {
+            match HttpClient::connect(addr) {
+                Ok(c) => client = Some(c),
+                Err(_) => {
+                    part.sent += 1;
+                    part.errors += 1;
+                    continue;
+                }
+            }
+        }
+        part.sent += 1;
+        let outcome = drive(client.as_mut().expect("connected above"), cfg, i, due);
+        match outcome {
+            Ok(Outcome::Ok(tokens, ttft, itl)) => {
+                part.ok += 1;
+                part.tokens += tokens;
+                part.lat.push((Instant::now() - due).as_secs_f64());
+                if let Some(t) = ttft {
+                    part.ttft.push(t);
+                }
+                part.itl.extend(itl);
+                if cfg.stream {
+                    // SSE responses close the connection
+                    client = None;
+                }
+            }
+            Ok(Outcome::Shed429) => part.shed_429 += 1,
+            Ok(Outcome::Error) => part.errors += 1,
+            Err(_) => {
+                part.errors += 1;
+                client = None;
+            }
+        }
+    }
+}
+
+/// Run the load generator against a daemon at `cfg.addr` and summarize
+/// what the wire saw.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    ensure!(cfg.connections > 0, "loadgen needs at least one connection");
+    ensure!(cfg.rps > 0.0 && cfg.rps.is_finite(), "rps must be positive");
+    ensure!(cfg.duration_s > 0.0 && cfg.duration_s.is_finite(), "duration must be positive");
+    let addr = cfg
+        .addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve `{}`", cfg.addr))?
+        .next()
+        .with_context(|| format!("`{}` resolved to no address", cfg.addr))?;
+    let total = (cfg.rps * cfg.duration_s).ceil().max(1.0) as usize;
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let parts: Vec<Partial> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|_| s.spawn(|| worker(cfg, addr, &next, total, t0)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen worker panicked")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut merged = Partial::default();
+    for p in parts {
+        merged.sent += p.sent;
+        merged.ok += p.ok;
+        merged.shed_429 += p.shed_429;
+        merged.errors += p.errors;
+        merged.tokens += p.tokens;
+        merged.lat.extend(p.lat);
+        merged.ttft.extend(p.ttft);
+        merged.itl.extend(p.itl);
+    }
+    Ok(LoadReport {
+        target_rps: cfg.rps,
+        achieved_rps: if wall_s > 0.0 { merged.ok as f64 / wall_s } else { 0.0 },
+        sent: merged.sent,
+        ok: merged.ok,
+        shed_429: merged.shed_429,
+        errors: merged.errors,
+        tokens: merged.tokens,
+        wall_s,
+        latency: LatencySummary::from_unsorted(merged.lat),
+        ttft: LatencySummary::from_unsorted(merged.ttft),
+        inter_token: LatencySummary::from_unsorted(merged.itl),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_prompts_are_deterministic_and_in_vocab() {
+        let a = synth_prompt(7, 3, 16, 64);
+        let b = synth_prompt(7, 3, 16, 64);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&t| (0..64).contains(&t)));
+        assert_ne!(a, synth_prompt(7, 4, 16, 64), "per-request variation");
+        // degenerate knobs stay well-defined
+        assert_eq!(synth_prompt(7, 0, 0, 1).len(), 1);
+    }
+
+    #[test]
+    fn report_json_has_the_full_shape() {
+        let r = LoadReport {
+            target_rps: 10.0,
+            achieved_rps: 9.5,
+            sent: 20,
+            ok: 19,
+            shed_429: 1,
+            errors: 0,
+            tokens: 152,
+            wall_s: 2.0,
+            latency: LatencySummary::from_unsorted(vec![0.1, 0.2]),
+            ttft: LatencySummary::from_unsorted(vec![0.05]),
+            inter_token: LatencySummary::from_unsorted(vec![0.01, 0.02, 0.03]),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("sent").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(j.get("shed_429").unwrap().as_usize().unwrap(), 1);
+        let lat = j.get("latency").unwrap();
+        assert_eq!(lat.get("n").unwrap().as_usize().unwrap(), 2);
+        let text = r.format();
+        assert!(text.contains("shed_429 1"));
+        assert!(text.contains("ttft"));
+        // serialized form is deterministic (sorted keys)
+        assert_eq!(j.to_string(), r.to_json().to_string());
+    }
+
+    #[test]
+    fn loadgen_rejects_nonsense_knobs() {
+        let mut cfg = LoadgenConfig { addr: "127.0.0.1:1".into(), ..LoadgenConfig::default() };
+        cfg.connections = 0;
+        assert!(run_loadgen(&cfg).is_err());
+        cfg.connections = 1;
+        cfg.rps = 0.0;
+        assert!(run_loadgen(&cfg).is_err());
+        cfg.rps = 10.0;
+        cfg.duration_s = f64::NAN;
+        assert!(run_loadgen(&cfg).is_err());
+    }
+}

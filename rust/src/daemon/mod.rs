@@ -1,0 +1,61 @@
+//! HTTP/1.1 + SSE transport front-end for the inference engine: the
+//! `repro daemon`.
+//!
+//! PR 5 unified serve and decode behind one streaming engine core
+//! ([`crate::engine`]); this module puts that core on the wire without
+//! adding a single dependency — a hand-rolled, hermetic HTTP/1.1 server
+//! over `std::net`, good enough for a reproduction daemon and fully
+//! exercisable offline over loopback.
+//!
+//! # Endpoints
+//!
+//! | Endpoint            | Meaning                                               |
+//! |---------------------|-------------------------------------------------------|
+//! | `POST /v1/generate` | KV-cached generation; `"stream": true` for SSE        |
+//! | `POST /v1/score`    | Full-forward scoring of a token sequence              |
+//! | `GET /healthz`      | Live [`crate::engine::EngineSnapshot`] + wire counters|
+//! | `GET /readyz`       | `200` accepting / `503` draining                      |
+//! | `POST /admin/drain` | Stop accepting, finish in-flight, exit                |
+//!
+//! Request/response envelopes map losslessly onto
+//! [`crate::engine::InferenceRequest`] / `FinishedRequest`; the exact
+//! schema (and the SSE frame sequence `admitted` → `prefilled` →
+//! `token`* → `finished`) is documented in [`wire`]. Streaming frames
+//! mirror the engine's event stream, which is bitwise invariant to
+//! `--threads` — so SSE payloads diff clean across thread counts, which
+//! is exactly what `repro daemon --self-check` (and `scripts/verify.sh`)
+//! asserts.
+//!
+//! # Operational behavior
+//!
+//! - **Load shedding**: the engine's bounded admission queue is the
+//!   backpressure source of truth; a full queue surfaces as `429` with a
+//!   `Retry-After` header instead of unbounded buffering.
+//! - **Cancellation**: a client disconnecting mid-SSE-stream cancels its
+//!   request at the next token boundary and frees the slot for the
+//!   queue.
+//! - **Graceful drain**: `POST /admin/drain` (or
+//!   [`DaemonControl::drain`]) flips the daemon into draining — new
+//!   inference work gets `503`, everything already admitted runs to
+//!   completion, then [`Daemon::serve`] returns its [`DaemonReport`].
+//! - **Robustness**: malformed requests — bad JSON, unknown fields,
+//!   out-of-vocab tokens, oversized heads/bodies — are structured `4xx`
+//!   envelopes, never a panic and never a connection left hanging.
+//!
+//! [`loadgen`] closes the loop client-side: `repro loadgen` drives a
+//! running daemon open-loop through the same [`http::HttpClient`] and
+//! reports achieved RPS plus TTFT / inter-token / completion-latency
+//! percentiles ([`crate::coordinator::daemon_bench`] packages a
+//! self-hosted run of it as `BENCH_daemon.json`).
+//!
+//! `examples/http_serving.rs` walks the whole lifecycle end to end in
+//! one process.
+
+pub mod http;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use self::http::{HttpClient, SseFrame};
+pub use self::loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use self::server::{Daemon, DaemonConfig, DaemonControl, DaemonReport};

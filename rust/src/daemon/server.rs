@@ -1,0 +1,742 @@
+//! The daemon itself: one engine thread owning a [`Session`], an accept
+//! loop, and per-connection handler threads, glued by mpsc channels.
+//!
+//! Concurrency layout — the session is **not** shared:
+//!
+//! - The *engine thread* is the only owner of the [`Session`]. Handlers
+//!   talk to it through a command channel (`Submit` / `Cancel` / `Drain`)
+//!   and get per-request reply channels back. It steps the session,
+//!   routes events to per-request SSE senders, hands completed requests
+//!   to their waiters via [`Session::drain_finished`], and publishes an
+//!   [`EngineSnapshot`] into a lock-free cell after every round.
+//! - The *accept loop* (the thread calling [`Daemon::serve`]) accepts
+//!   connections non-blocking and spawns one scoped handler thread each.
+//! - *Handler threads* parse HTTP requests, submit to the engine, and
+//!   either wait for the completion envelope or forward SSE frames as
+//!   the engine emits them. A failed frame write (client gone) sends
+//!   `Cancel`, so the slot is reclaimed at the next token boundary; the
+//!   engine independently detects a dropped stream receiver the same
+//!   way.
+//!
+//! Load shedding is the engine's own bounded-queue backpressure
+//! surfaced over the wire: [`Session::try_submit`] handing the request
+//! back becomes `429` with `Retry-After`. Draining (via
+//! [`DaemonControl::drain`] or `POST /admin/drain`) refuses new
+//! inference work with `503`, finishes everything admitted, then stops
+//! the whole daemon.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{
+    CoreStats, EngineConfig, EngineCore, EngineSnapshot, FinishedRequest, InferenceRequest,
+    Session,
+};
+use crate::serve::ServeModel;
+use crate::util::json::Json;
+
+use super::http::{self, Conn, HttpRequest, ReadOutcome, Response};
+use super::wire;
+
+/// Daemon knobs on top of the engine's.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`Daemon::addr`]).
+    pub addr: String,
+    pub engine: EngineConfig,
+    /// `Retry-After` seconds advertised on 429 responses.
+    pub retry_after_s: u32,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            addr: "127.0.0.1:0".to_string(),
+            engine: EngineConfig::default(),
+            retry_after_s: 1,
+        }
+    }
+}
+
+/// An SSE frame in flight from the engine thread to a handler:
+/// `(event name, data payload)`.
+type SseMsg = (&'static str, String);
+
+/// Handler → engine commands.
+enum Cmd {
+    Submit {
+        req: InferenceRequest,
+        /// `Some` for `stream: true` requests: the per-request SSE sink.
+        stream: Option<Sender<SseMsg>>,
+        reply: Sender<SubmitReply>,
+    },
+    /// Client went away (or explicitly hung up): reclaim the slot.
+    Cancel(usize),
+    Drain,
+}
+
+/// Engine → handler replies on the per-request channel.
+enum SubmitReply {
+    /// In the bounded queue; `id` is the daemon-assigned request id.
+    Accepted { id: usize },
+    /// Bounded queue full — shed (429).
+    QueueFull,
+    /// Request failed engine validation (400).
+    Invalid(String),
+    /// Daemon is draining (503).
+    Draining,
+    /// The completion envelope for non-streaming waiters.
+    Finished(Box<FinishedRequest>),
+}
+
+/// Lock-free published copy of the latest [`EngineSnapshot`] — written
+/// by the engine thread after every round, read by `/healthz`,
+/// `/readyz`, and [`DaemonControl::snapshot`].
+#[derive(Default)]
+struct SnapCell {
+    queue_depth: AtomicUsize,
+    queue_cap: AtomicUsize,
+    active: AtomicUsize,
+    slots: AtomicUsize,
+    free_slots: AtomicUsize,
+    admitted: AtomicUsize,
+    finished: AtomicUsize,
+    scored_tokens: AtomicUsize,
+    generated_tokens: AtomicUsize,
+    macs: AtomicU64,
+    cancelled: AtomicUsize,
+    deadline_evictions: AtomicUsize,
+    mid_run_admissions: AtomicUsize,
+    decode_rounds: AtomicUsize,
+}
+
+impl SnapCell {
+    fn store(&self, s: &EngineSnapshot) {
+        self.queue_depth.store(s.queue_depth, Ordering::SeqCst);
+        self.queue_cap.store(s.queue_cap, Ordering::SeqCst);
+        self.active.store(s.active, Ordering::SeqCst);
+        self.slots.store(s.slots, Ordering::SeqCst);
+        self.free_slots.store(s.free_slots, Ordering::SeqCst);
+        self.admitted.store(s.admitted, Ordering::SeqCst);
+        self.finished.store(s.finished, Ordering::SeqCst);
+        self.scored_tokens.store(s.scored_tokens, Ordering::SeqCst);
+        self.generated_tokens.store(s.generated_tokens, Ordering::SeqCst);
+        self.macs.store(s.macs as u64, Ordering::SeqCst);
+        self.cancelled.store(s.cancelled, Ordering::SeqCst);
+        self.deadline_evictions.store(s.deadline_evictions, Ordering::SeqCst);
+        self.mid_run_admissions.store(s.mid_run_admissions, Ordering::SeqCst);
+        self.decode_rounds.store(s.decode_rounds, Ordering::SeqCst);
+    }
+
+    fn load(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            queue_depth: self.queue_depth.load(Ordering::SeqCst),
+            queue_cap: self.queue_cap.load(Ordering::SeqCst),
+            active: self.active.load(Ordering::SeqCst),
+            slots: self.slots.load(Ordering::SeqCst),
+            free_slots: self.free_slots.load(Ordering::SeqCst),
+            admitted: self.admitted.load(Ordering::SeqCst),
+            finished: self.finished.load(Ordering::SeqCst),
+            scored_tokens: self.scored_tokens.load(Ordering::SeqCst),
+            generated_tokens: self.generated_tokens.load(Ordering::SeqCst),
+            macs: self.macs.load(Ordering::SeqCst) as u128,
+            cancelled: self.cancelled.load(Ordering::SeqCst),
+            deadline_evictions: self.deadline_evictions.load(Ordering::SeqCst),
+            mid_run_admissions: self.mid_run_admissions.load(Ordering::SeqCst),
+            decode_rounds: self.decode_rounds.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// State shared by the engine thread, accept loop, handlers, and
+/// control handles.
+struct Shared {
+    /// Refuse new inference work; finish what was admitted.
+    draining: AtomicBool,
+    /// Engine exited — accept loop and handlers wind down.
+    stopped: AtomicBool,
+    /// Determinism hook for tests and the self-check: a paused engine
+    /// keeps answering commands (submissions queue, snapshots publish)
+    /// but runs no scheduling rounds, making queue saturation and
+    /// shedding exactly reproducible. Ignored once draining.
+    paused: AtomicBool,
+    snap: SnapCell,
+    // wire-level counters (the engine counts engine-level ones)
+    http_requests: AtomicUsize,
+    shed_429: AtomicUsize,
+    shed_503: AtomicUsize,
+    bad_requests: AtomicUsize,
+    disconnect_cancels: AtomicUsize,
+    sse_streams: AtomicUsize,
+    retry_after_s: u32,
+    vocab: usize,
+}
+
+/// Wire-level accounting of one daemon run, alongside the engine's
+/// [`CoreStats`].
+#[derive(Debug, Clone, Default)]
+pub struct DaemonReport {
+    pub stats: CoreStats,
+    /// HTTP requests answered (any status, any endpoint).
+    pub http_requests: usize,
+    /// Inference submissions shed with 429 (queue full).
+    pub shed_429: usize,
+    /// Inference submissions refused with 503 (draining).
+    pub shed_503: usize,
+    /// Malformed requests answered with 4xx envelopes.
+    pub bad_requests: usize,
+    /// Mid-stream client disconnects that cancelled a request.
+    pub disconnect_cancels: usize,
+    /// SSE streams opened.
+    pub sse_streams: usize,
+}
+
+/// A cloneable handle for steering a running daemon from another thread:
+/// drain it, pause/resume the engine (test hook), read the live
+/// snapshot.
+#[derive(Clone)]
+pub struct DaemonControl {
+    shared: Arc<Shared>,
+    cmd: Sender<Cmd>,
+    addr: SocketAddr,
+}
+
+impl DaemonControl {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Latest published [`EngineSnapshot`].
+    pub fn snapshot(&self) -> EngineSnapshot {
+        self.shared.snap.load()
+    }
+
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// True once the engine exited and [`Daemon::serve`] is returning.
+    pub fn stopped(&self) -> bool {
+        self.shared.stopped.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting inference work, finish everything admitted, then
+    /// shut the daemon down (same as `POST /admin/drain`).
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        let _ = self.cmd.send(Cmd::Drain);
+    }
+
+    /// Suspend scheduling rounds (submissions still queue, snapshots
+    /// still publish). Determinism hook: lets tests fill the bounded
+    /// queue to a known depth before any admission happens.
+    pub fn pause(&self) {
+        self.shared.paused.store(true, Ordering::SeqCst);
+    }
+
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+    }
+}
+
+/// A bound-but-not-yet-serving daemon: the listener exists (so the
+/// ephemeral port is known and clients can already connect) but
+/// requests are only processed once [`Daemon::serve`] runs.
+pub struct Daemon<'m> {
+    model: &'m ServeModel,
+    engine: EngineConfig,
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    cmd_tx: Sender<Cmd>,
+    cmd_rx: Receiver<Cmd>,
+}
+
+impl<'m> Daemon<'m> {
+    pub fn bind(model: &'m ServeModel, config: DaemonConfig) -> Result<Daemon<'m>> {
+        let listener = TcpListener::bind(config.addr.as_str())
+            .with_context(|| format!("bind {}", config.addr))?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let shared = Arc::new(Shared {
+            draining: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            paused: AtomicBool::new(false),
+            snap: SnapCell::default(),
+            http_requests: AtomicUsize::new(0),
+            shed_429: AtomicUsize::new(0),
+            shed_503: AtomicUsize::new(0),
+            bad_requests: AtomicUsize::new(0),
+            disconnect_cancels: AtomicUsize::new(0),
+            sse_streams: AtomicUsize::new(0),
+            retry_after_s: config.retry_after_s,
+            vocab: model.config().vocab,
+        });
+        let slots = config.engine.slots.max(1);
+        shared.snap.store(&EngineSnapshot {
+            queue_cap: config.engine.queue_cap.max(1),
+            slots,
+            free_slots: slots,
+            ..EngineSnapshot::default()
+        });
+        let (cmd_tx, cmd_rx) = channel();
+        Ok(Daemon { model, engine: config.engine, listener, addr, shared, cmd_tx, cmd_rx })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn control(&self) -> DaemonControl {
+        DaemonControl {
+            shared: Arc::clone(&self.shared),
+            cmd: self.cmd_tx.clone(),
+            addr: self.addr,
+        }
+    }
+
+    /// Run until drained: engine thread + accept loop + one scoped
+    /// handler thread per connection. Returns the run's accounting once
+    /// every admitted request finished and every handler exited.
+    pub fn serve(self) -> Result<DaemonReport> {
+        let Daemon { model, engine, listener, addr: _, shared, cmd_tx, cmd_rx } = self;
+        let core = EngineCore::new(model, engine);
+        let stats = std::thread::scope(|s| -> Result<CoreStats> {
+            let eng = s.spawn(|| engine_loop(core, &shared, cmd_rx));
+            let mut accept_err: Option<std::io::Error> = None;
+            loop {
+                if shared.stopped.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let shared = Arc::clone(&shared);
+                        let cmd_tx = cmd_tx.clone();
+                        s.spawn(move || handle_connection(stream, &shared, &cmd_tx));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(e) => {
+                        // fatal accept error: drain what's in flight, then
+                        // surface the error
+                        accept_err = Some(e);
+                        shared.draining.store(true, Ordering::SeqCst);
+                        let _ = cmd_tx.send(Cmd::Drain);
+                        while !shared.stopped.load(Ordering::SeqCst) {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        break;
+                    }
+                }
+            }
+            let out = eng.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?;
+            match accept_err {
+                Some(e) => Err(e).context("accept"),
+                None => out,
+            }
+        })?;
+        Ok(DaemonReport {
+            stats,
+            http_requests: shared.http_requests.load(Ordering::SeqCst),
+            shed_429: shared.shed_429.load(Ordering::SeqCst),
+            shed_503: shared.shed_503.load(Ordering::SeqCst),
+            bad_requests: shared.bad_requests.load(Ordering::SeqCst),
+            disconnect_cancels: shared.disconnect_cancels.load(Ordering::SeqCst),
+            sse_streams: shared.sse_streams.load(Ordering::SeqCst),
+        })
+    }
+}
+
+// ---- engine thread -------------------------------------------------------
+
+/// The engine thread's mutable state: the session plus the per-request
+/// delivery channels.
+struct EngineLoop<'m> {
+    session: Session<'m>,
+    /// SSE sinks by request id (streaming requests only).
+    streams: HashMap<usize, Sender<SseMsg>>,
+    /// Completion waiters by request id (non-streaming requests).
+    waiters: HashMap<usize, Sender<SubmitReply>>,
+    /// Monotonic daemon-assigned request ids.
+    next_id: usize,
+    drain: bool,
+}
+
+impl<'m> EngineLoop<'m> {
+    fn handle(&mut self, cmd: Cmd, shared: &Shared) {
+        match cmd {
+            Cmd::Drain => self.drain = true,
+            Cmd::Cancel(id) => {
+                self.streams.remove(&id);
+                self.waiters.remove(&id);
+                if self.session.cancel(id) {
+                    shared.disconnect_cancels.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            Cmd::Submit { mut req, stream, reply } => {
+                if self.drain {
+                    let _ = reply.send(SubmitReply::Draining);
+                    return;
+                }
+                req.id = self.next_id;
+                // deadlines arrive client-relative; rebase onto the
+                // session clock at admission-queue entry
+                if let Some(rel) = req.deadline_s {
+                    req.deadline_s = Some(self.session.elapsed_s() + rel);
+                }
+                match self.session.try_submit(req) {
+                    Err(e) => {
+                        let _ = reply.send(SubmitReply::Invalid(format!("{e:#}")));
+                    }
+                    Ok(Some(_back)) => {
+                        let _ = reply.send(SubmitReply::QueueFull);
+                    }
+                    Ok(None) => {
+                        let id = self.next_id;
+                        self.next_id += 1;
+                        let is_stream = stream.is_some();
+                        if let Some(tx) = stream {
+                            self.streams.insert(id, tx);
+                        }
+                        if reply.send(SubmitReply::Accepted { id }).is_err() {
+                            // handler died before hearing the accept:
+                            // don't let the request hold a slot
+                            self.streams.remove(&id);
+                            self.session.cancel(id);
+                        } else if !is_stream {
+                            self.waiters.insert(id, reply);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Forward this round's events to their SSE sinks; a dead sink
+    /// (handler gone — client disconnected) cancels its request.
+    fn route_events(&mut self, shared: &Shared) {
+        let events = self.session.take_events();
+        let mut dead: Vec<usize> = Vec::new();
+        for ev in &events {
+            if let Some(tx) = self.streams.get(&ev.id) {
+                if tx.send(wire::event_sse(ev)).is_err() && !dead.contains(&ev.id) {
+                    dead.push(ev.id);
+                }
+            }
+        }
+        for id in dead {
+            self.streams.remove(&id);
+            if self.session.cancel(id) {
+                shared.disconnect_cancels.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Hand completed requests to their waiters and drop their SSE
+    /// sinks (closing the event stream ends the SSE response).
+    fn deliver_finished(&mut self) {
+        for f in self.session.drain_finished() {
+            self.streams.remove(&f.id);
+            if let Some(w) = self.waiters.remove(&f.id) {
+                let _ = w.send(SubmitReply::Finished(Box::new(f)));
+            }
+        }
+    }
+}
+
+fn engine_loop(
+    core: EngineCore<'_>,
+    shared: &Shared,
+    rx: Receiver<Cmd>,
+) -> Result<CoreStats> {
+    let mut lp = EngineLoop {
+        session: core.session(),
+        streams: HashMap::new(),
+        waiters: HashMap::new(),
+        next_id: 0,
+        drain: false,
+    };
+    let mut senders_gone = false;
+    loop {
+        // absorb every queued command without blocking
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => lp.handle(cmd, shared),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    senders_gone = true;
+                    break;
+                }
+            }
+        }
+        // one scheduling round (unless paused; draining overrides pause
+        // so a drain can never hang behind the test hook)
+        let paused = shared.paused.load(Ordering::SeqCst) && !lp.drain;
+        let mut worked = false;
+        if !paused && lp.session.has_work() {
+            match lp.session.step() {
+                Ok(w) => worked = w,
+                Err(e) => {
+                    shared.draining.store(true, Ordering::SeqCst);
+                    shared.stopped.store(true, Ordering::SeqCst);
+                    return Err(e);
+                }
+            }
+        }
+        lp.route_events(shared);
+        lp.deliver_finished();
+        shared.snap.store(&lp.session.snapshot());
+        if (lp.drain || senders_gone) && !lp.session.has_work() {
+            break;
+        }
+        if !worked {
+            // idle (or paused): park on the command channel for a tick
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(cmd) => lp.handle(cmd, shared),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => senders_gone = true,
+            }
+        }
+    }
+    shared.draining.store(true, Ordering::SeqCst);
+    let (_leftover, stats) = lp.session.finish();
+    shared.snap.finished.store(stats.requests, Ordering::SeqCst);
+    shared.stopped.store(true, Ordering::SeqCst);
+    Ok(stats)
+}
+
+// ---- connection handlers -------------------------------------------------
+
+/// Whether the connection survives the response.
+enum Flow {
+    KeepAlive,
+    Close,
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared, cmd_tx: &Sender<Cmd>) {
+    let Ok(mut conn) = Conn::new(stream) else {
+        return;
+    };
+    loop {
+        match http::read_request(&mut conn) {
+            Ok(ReadOutcome::Idle) => {
+                if shared.stopped.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Ok(ReadOutcome::Eof) => return,
+            Ok(ReadOutcome::Malformed { status, message }) => {
+                shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+                shared.http_requests.fetch_add(1, Ordering::SeqCst);
+                let resp = Response::json(status, &wire::error_json(status, &message));
+                let _ = resp.write(conn.stream_mut(), false);
+                return;
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                shared.http_requests.fetch_add(1, Ordering::SeqCst);
+                let keep = req.keep_alive();
+                match dispatch(&req, &mut conn, shared, cmd_tx) {
+                    Flow::KeepAlive if keep => {}
+                    _ => return,
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn respond(conn: &mut Conn, status: u16, body: &Json) -> Flow {
+    match Response::json(status, body).write(conn.stream_mut(), true) {
+        Ok(()) => Flow::KeepAlive,
+        Err(_) => Flow::Close,
+    }
+}
+
+fn dispatch(req: &HttpRequest, conn: &mut Conn, shared: &Shared, cmd_tx: &Sender<Cmd>) -> Flow {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond(conn, 200, &health_json(shared)),
+        ("GET", "/readyz") => {
+            let draining = shared.draining.load(Ordering::SeqCst);
+            let body = wire::obj(vec![
+                ("ready", Json::Bool(!draining)),
+                ("draining", Json::Bool(draining)),
+            ]);
+            respond(conn, if draining { 503 } else { 200 }, &body)
+        }
+        ("POST", "/admin/drain") => {
+            shared.draining.store(true, Ordering::SeqCst);
+            let _ = cmd_tx.send(Cmd::Drain);
+            respond(conn, 200, &wire::obj(vec![("draining", Json::Bool(true))]))
+        }
+        ("POST", "/v1/generate") => handle_inference(req, conn, shared, cmd_tx, true),
+        ("POST", "/v1/score") => handle_inference(req, conn, shared, cmd_tx, false),
+        (_, "/healthz" | "/readyz" | "/admin/drain" | "/v1/generate" | "/v1/score") => {
+            respond(conn, 405, &wire::error_json(405, &format!("{} not allowed here", req.method)))
+        }
+        (_, path) => respond(conn, 404, &wire::error_json(404, &format!("no endpoint `{path}`"))),
+    }
+}
+
+fn health_json(shared: &Shared) -> Json {
+    let s = shared.snap.load();
+    let n = |x: usize| Json::Num(x as f64);
+    wire::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("draining", Json::Bool(shared.draining.load(Ordering::SeqCst))),
+        ("queue_depth", n(s.queue_depth)),
+        ("queue_cap", n(s.queue_cap)),
+        ("active", n(s.active)),
+        ("slots", n(s.slots)),
+        ("free_slots", n(s.free_slots)),
+        ("admitted", n(s.admitted)),
+        ("finished", n(s.finished)),
+        ("scored_tokens", n(s.scored_tokens)),
+        ("generated_tokens", n(s.generated_tokens)),
+        ("macs", Json::Num(s.macs as f64)),
+        ("cancelled", n(s.cancelled)),
+        ("deadline_evictions", n(s.deadline_evictions)),
+        ("mid_run_admissions", n(s.mid_run_admissions)),
+        ("decode_rounds", n(s.decode_rounds)),
+        ("http_requests", n(shared.http_requests.load(Ordering::SeqCst))),
+        ("shed_429", n(shared.shed_429.load(Ordering::SeqCst))),
+        ("shed_503", n(shared.shed_503.load(Ordering::SeqCst))),
+        ("bad_requests", n(shared.bad_requests.load(Ordering::SeqCst))),
+        ("disconnect_cancels", n(shared.disconnect_cancels.load(Ordering::SeqCst))),
+        ("sse_streams", n(shared.sse_streams.load(Ordering::SeqCst))),
+    ])
+}
+
+fn handle_inference(
+    req: &HttpRequest,
+    conn: &mut Conn,
+    shared: &Shared,
+    cmd_tx: &Sender<Cmd>,
+    generate: bool,
+) -> Flow {
+    if shared.draining.load(Ordering::SeqCst) {
+        shared.shed_503.fetch_add(1, Ordering::SeqCst);
+        return respond(conn, 503, &wire::error_json(503, "draining: not accepting new requests"));
+    }
+    let parsed = if generate {
+        wire::parse_generate(&req.body, shared.vocab)
+    } else {
+        wire::parse_score(&req.body, shared.vocab)
+    };
+    let w = match parsed {
+        Ok(w) => w,
+        Err(e) => {
+            shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+            return respond(conn, 400, &wire::error_json(400, &format!("{e:#}")));
+        }
+    };
+    let (reply_tx, reply_rx) = channel();
+    let (ev_tx, ev_rx) = if w.stream {
+        let (tx, rx) = channel();
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+    if cmd_tx.send(Cmd::Submit { req: w.req, stream: ev_tx, reply: reply_tx }).is_err() {
+        return respond(conn, 503, &wire::error_json(503, "engine stopped"));
+    }
+    match reply_rx.recv() {
+        Ok(SubmitReply::Accepted { id }) => match ev_rx {
+            Some(rx) => stream_events(conn, shared, cmd_tx, id, rx),
+            None => match reply_rx.recv() {
+                Ok(SubmitReply::Finished(f)) => {
+                    respond(conn, 200, &wire::finished_json(&f, w.want_logits))
+                }
+                _ => respond(conn, 503, &wire::error_json(503, "engine stopped mid-request")),
+            },
+        },
+        Ok(SubmitReply::QueueFull) => {
+            shared.shed_429.fetch_add(1, Ordering::SeqCst);
+            let body = wire::error_json(429, "admission queue full, retry later");
+            let resp = Response::json(429, &body)
+                .with_header("Retry-After", &shared.retry_after_s.to_string());
+            match resp.write(conn.stream_mut(), true) {
+                Ok(()) => Flow::KeepAlive,
+                Err(_) => Flow::Close,
+            }
+        }
+        Ok(SubmitReply::Invalid(msg)) => {
+            shared.bad_requests.fetch_add(1, Ordering::SeqCst);
+            respond(conn, 400, &wire::error_json(400, &msg))
+        }
+        Ok(SubmitReply::Draining) => {
+            shared.shed_503.fetch_add(1, Ordering::SeqCst);
+            respond(conn, 503, &wire::error_json(503, "draining: not accepting new requests"))
+        }
+        Ok(SubmitReply::Finished(f)) => {
+            // defensive: a result with no preceding accept still answers
+            respond(conn, 200, &wire::finished_json(&f, w.want_logits))
+        }
+        Err(_) => respond(conn, 503, &wire::error_json(503, "engine stopped")),
+    }
+}
+
+/// Forward SSE frames until the request finishes or the client goes
+/// away; a failed write cancels the request so its slot is reclaimed.
+fn stream_events(
+    conn: &mut Conn,
+    shared: &Shared,
+    cmd_tx: &Sender<Cmd>,
+    id: usize,
+    ev_rx: Receiver<SseMsg>,
+) -> Flow {
+    shared.sse_streams.fetch_add(1, Ordering::SeqCst);
+    if http::write_sse_head(conn.stream_mut()).is_err() {
+        let _ = cmd_tx.send(Cmd::Cancel(id));
+        return Flow::Close;
+    }
+    loop {
+        match ev_rx.recv() {
+            Ok((event, data)) => {
+                if http::write_sse_frame(conn.stream_mut(), event, &data).is_err() {
+                    let _ = cmd_tx.send(Cmd::Cancel(id));
+                    return Flow::Close;
+                }
+                if event == "finished" {
+                    return Flow::Close;
+                }
+            }
+            // engine dropped the sink: the stream is complete (or the
+            // engine exited) — either way close out
+            Err(_) => return Flow::Close,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{demo_artifact, demo_config, ExecMode};
+
+    #[test]
+    fn bind_assigns_a_port_and_drain_stops_an_idle_daemon() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 5).unwrap();
+        let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let daemon = Daemon::bind(&model, DaemonConfig::default()).unwrap();
+        let addr = daemon.addr();
+        assert_ne!(addr.port(), 0, "ephemeral port resolved");
+        let ctl = daemon.control();
+        let snap = ctl.snapshot();
+        assert_eq!((snap.active, snap.finished), (0, 0));
+        assert_eq!(snap.slots, 4, "engine defaults published before serve");
+        ctl.drain();
+        let report = daemon.serve().unwrap();
+        assert!(ctl.stopped());
+        assert_eq!(report.stats.requests, 0);
+        assert_eq!(report.http_requests, 0);
+    }
+}

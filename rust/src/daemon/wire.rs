@@ -1,0 +1,306 @@
+//! Typed JSON envelopes and SSE encoding: the lossless map between the
+//! wire and the engine's [`InferenceRequest`] / [`Event`] /
+//! [`FinishedRequest`] types.
+//!
+//! ## Request envelopes
+//!
+//! `POST /v1/generate` — `{"prompt": [int], "max_new"?: int,
+//! "deadline_ms"?: num, "stream"?: bool}` or `{"text": "…", …}` (the
+//! byte-level tokenizer encodes it, BOS-prefixed; requires the model
+//! vocab to cover the byte range). `POST /v1/score` — `{"tokens":
+//! [int], "logits"?: bool}` or `{"text": "…", …}`. Unknown keys are
+//! rejected — the envelope is typed, not free-form. Token ids are
+//! validated against the model vocab here, before the engine's own
+//! admissibility checks ([`crate::engine::EngineConfig::validate`]).
+//!
+//! ## Response envelopes
+//!
+//! Non-streaming completions return [`finished_json`]: `{"id", "kind",
+//! "reason", "prompt_len", "tokens", "text", "ttft_s", "latency_s",
+//! "macs"}` (+ `"logits"` for score requests that asked). Errors are
+//! always `{"error": {"status": int, "message": "…"}}` ([`error_json`]),
+//! never a bare string and never a panic.
+//!
+//! ## SSE frames
+//!
+//! `stream: true` mirrors the engine's event stream, one frame per
+//! [`Event`] in engine order: `event: admitted` `{"id","seq"}` →
+//! `event: prefilled` `{"id","prompt_len","ttft_s"}` → `event: token`
+//! `{"id","index","token","text"}`* → `event: finished`
+//! `{"id","reason","tokens"}`. Wall-clock timestamps (`t_s`) are
+//! deliberately not on the wire — everything else is bitwise
+//! deterministic, and the self-check diffs it across thread counts.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::data::{Tokenizer, VOCAB_USED};
+use crate::engine::{Event, EventKind, FinishedRequest, InferenceRequest};
+use crate::util::json::Json;
+
+/// Build a JSON object from (key, value) pairs.
+pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// A parsed inbound request: the engine request (id 0 — the server
+/// assigns ids; `deadline_s` still *relative*, the engine thread rebases
+/// it onto the session clock) plus the wire-only flags.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub req: InferenceRequest,
+    pub stream: bool,
+    pub want_logits: bool,
+}
+
+fn parse_body(body: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow::anyhow!("body is not UTF-8"))?;
+    Json::parse(text)
+}
+
+fn check_keys(v: &Json, allowed: &[&str]) -> Result<()> {
+    for key in v.as_obj()?.keys() {
+        ensure!(allowed.contains(&key.as_str()), "unknown key `{key}`");
+    }
+    Ok(())
+}
+
+/// The `"prompt"`/`"tokens"`-or-`"text"` prompt field, validated against
+/// the model vocab.
+fn parse_prompt(v: &Json, ids_key: &str, vocab: usize) -> Result<Vec<i32>> {
+    match (v.opt(ids_key), v.opt("text")) {
+        (Some(_), Some(_)) => bail!("give `{ids_key}` or `text`, not both"),
+        (Some(arr), None) => {
+            let mut out = Vec::new();
+            for (i, t) in arr.as_arr()?.iter().enumerate() {
+                let t = t.as_i32().map_err(|e| anyhow::anyhow!("`{ids_key}[{i}]`: {e}"))?;
+                ensure!(
+                    (0..vocab as i32).contains(&t),
+                    "`{ids_key}[{i}]` = {t} outside vocab 0..{vocab}"
+                );
+                out.push(t);
+            }
+            Ok(out)
+        }
+        (None, Some(text)) => {
+            ensure!(
+                vocab >= VOCAB_USED,
+                "`text` prompts need the byte-level vocab ({VOCAB_USED}); this model has {vocab}"
+            );
+            let tk = Tokenizer::new();
+            let mut out = vec![crate::data::BOS];
+            out.extend(tk.encode(text.as_str()?));
+            Ok(out)
+        }
+        (None, None) => bail!("missing `{ids_key}` (or `text`)"),
+    }
+}
+
+/// Parse a `POST /v1/generate` body.
+pub fn parse_generate(body: &[u8], vocab: usize) -> Result<WireRequest> {
+    let v = parse_body(body)?;
+    check_keys(&v, &["prompt", "text", "max_new", "deadline_ms", "stream"])?;
+    let prompt = parse_prompt(&v, "prompt", vocab)?;
+    let max_new = match v.opt("max_new") {
+        Some(n) => {
+            let n = n.as_usize().map_err(|e| anyhow::anyhow!("`max_new`: {e}"))?;
+            ensure!(n > 0, "`max_new` must be positive");
+            Some(n)
+        }
+        None => None,
+    };
+    let stream = match v.opt("stream") {
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("`stream` must be a boolean"),
+        None => false,
+    };
+    let mut req = InferenceRequest::generate(0, prompt, max_new);
+    if let Some(ms) = v.opt("deadline_ms") {
+        let ms = ms.as_f64().map_err(|e| anyhow::anyhow!("`deadline_ms`: {e}"))?;
+        ensure!(ms > 0.0 && ms.is_finite(), "`deadline_ms` must be positive and finite");
+        req = req.with_deadline(ms / 1000.0);
+    }
+    Ok(WireRequest { req, stream, want_logits: false })
+}
+
+/// Parse a `POST /v1/score` body.
+pub fn parse_score(body: &[u8], vocab: usize) -> Result<WireRequest> {
+    let v = parse_body(body)?;
+    check_keys(&v, &["tokens", "text", "logits"])?;
+    let tokens = parse_prompt(&v, "tokens", vocab)?;
+    let want_logits = match v.opt("logits") {
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("`logits` must be a boolean"),
+        None => false,
+    };
+    Ok(WireRequest { req: InferenceRequest::score(0, tokens), stream: false, want_logits })
+}
+
+/// The non-streaming completion envelope.
+pub fn finished_json(f: &FinishedRequest, want_logits: bool) -> Json {
+    let mut entries = vec![
+        ("id", num(f.id as f64)),
+        ("kind", Json::Str(if f.is_generate { "generate" } else { "score" }.to_string())),
+        ("reason", Json::Str(f.reason.name().to_string())),
+        ("prompt_len", num(f.prompt_len as f64)),
+        ("tokens", Json::Arr(f.tokens.iter().map(|&t| num(t as f64)).collect())),
+        ("text", Json::Str(f.text.clone())),
+        ("ttft_s", num(f.ttft_s)),
+        ("latency_s", num(f.latency_s)),
+        ("macs", num(f.macs as f64)),
+    ];
+    if want_logits && !f.is_generate {
+        entries.push(("logits", Json::Arr(f.logits.iter().map(|&x| num(x as f64)).collect())));
+    }
+    obj(entries)
+}
+
+/// The structured error envelope every non-2xx response carries.
+pub fn error_json(status: u16, message: &str) -> Json {
+    obj(vec![(
+        "error",
+        obj(vec![("status", num(status as f64)), ("message", Json::Str(message.to_string()))]),
+    )])
+}
+
+/// One engine event as an SSE frame: `(event name, data payload)`.
+/// Everything on the wire is deterministic — the wall-clock `t_s` stays
+/// server-side (TTFT is reported in the completion envelope instead).
+pub fn event_sse(ev: &Event) -> (&'static str, String) {
+    let id = num(ev.id as f64);
+    match &ev.kind {
+        EventKind::Admitted { seq } => {
+            ("admitted", obj(vec![("id", id), ("seq", num(*seq as f64))]).to_string())
+        }
+        EventKind::Prefilled { prompt_len, .. } => (
+            "prefilled",
+            obj(vec![("id", id), ("prompt_len", num(*prompt_len as f64))]).to_string(),
+        ),
+        EventKind::Token { index, token, text } => (
+            "token",
+            obj(vec![
+                ("id", id),
+                ("index", num(*index as f64)),
+                ("token", num(*token as f64)),
+                ("text", Json::Str(text.clone())),
+            ])
+            .to_string(),
+        ),
+        EventKind::Finished { reason, tokens } => (
+            "finished",
+            obj(vec![
+                ("id", id),
+                ("reason", Json::Str(reason.name().to_string())),
+                ("tokens", num(*tokens as f64)),
+            ])
+            .to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::FinishReason;
+
+    #[test]
+    fn generate_envelope_roundtrips() {
+        let w = parse_generate(
+            br#"{"prompt": [1, 2, 3], "max_new": 4, "stream": true, "deadline_ms": 250}"#,
+            64,
+        )
+        .unwrap();
+        assert!(w.stream);
+        assert_eq!(w.req.prompt_len(), 3);
+        assert_eq!(w.req.deadline_s, Some(0.25));
+        let crate::engine::RequestKind::Generate { ref prompt, max_new } = w.req.kind else {
+            panic!("expected generate");
+        };
+        assert_eq!(prompt, &vec![1, 2, 3]);
+        assert_eq!(max_new, Some(4));
+    }
+
+    #[test]
+    fn score_envelope_roundtrips() {
+        let w = parse_score(br#"{"tokens": [5, 6], "logits": true}"#, 64).unwrap();
+        assert!(!w.stream);
+        assert!(w.want_logits);
+        assert!(matches!(w.req.kind, crate::engine::RequestKind::Score { .. }));
+    }
+
+    #[test]
+    fn text_prompts_need_the_byte_vocab() {
+        assert!(parse_generate(br#"{"text": "hi"}"#, 64).is_err(), "demo vocab is too small");
+        let w = parse_generate(br#"{"text": "hi"}"#, VOCAB_USED).unwrap();
+        assert_eq!(w.req.prompt_len(), 3, "BOS + 2 bytes");
+    }
+
+    #[test]
+    fn bad_bodies_are_errors_not_panics() {
+        for body in [
+            &b"not json"[..],
+            br#"{"prompt": [1], "bogus": 1}"#,
+            br#"{"prompt": "not-an-array"}"#,
+            br#"{"prompt": [99]}"#,             // out of vocab (64)
+            br#"{"prompt": [-1]}"#,            // negative id
+            br#"{"prompt": [1], "text": "x"}"#, // both prompt forms
+            br#"{"max_new": 4}"#,              // no prompt at all
+            br#"{"prompt": [1], "max_new": 0}"#,
+            br#"{"prompt": [1], "stream": 1}"#,
+            br#"{"prompt": [1], "deadline_ms": -5}"#,
+        ] {
+            assert!(parse_generate(body, 64).is_err(), "{}", String::from_utf8_lossy(body));
+        }
+        assert!(parse_score(br#"{"tokens": [1], "stream": true}"#, 64).is_err(), "not a score key");
+    }
+
+    #[test]
+    fn error_envelope_is_structured() {
+        let e = error_json(429, "queue full");
+        assert_eq!(e.to_string(), r#"{"error":{"message":"queue full","status":429}}"#);
+    }
+
+    #[test]
+    fn sse_frames_are_deterministic_payloads() {
+        let ev = |kind| Event { id: 3, t_s: 0.123, kind };
+        let (name, data) = event_sse(&ev(EventKind::Admitted { seq: 1 }));
+        assert_eq!((name, data.as_str()), ("admitted", r#"{"id":3,"seq":1}"#));
+        let (name, data) = event_sse(&ev(EventKind::Prefilled { prompt_len: 5, ttft_s: 0.9 }));
+        assert_eq!((name, data.as_str()), ("prefilled", r#"{"id":3,"prompt_len":5}"#));
+        let (name, data) =
+            event_sse(&ev(EventKind::Token { index: 2, token: 17, text: "q".into() }));
+        assert_eq!((name, data.as_str()), ("token", r#"{"id":3,"index":2,"text":"q","token":17}"#));
+        let (name, data) =
+            event_sse(&ev(EventKind::Finished { reason: FinishReason::MaxTokens, tokens: 6 }));
+        assert_eq!((name, data.as_str()), ("finished", r#"{"id":3,"reason":"max-tokens","tokens":6}"#));
+        // no wall-clock field leaks onto the wire
+        assert!(!data.contains("t_s"));
+    }
+
+    #[test]
+    fn finished_envelope_carries_the_result() {
+        let f = FinishedRequest {
+            id: 2,
+            admitted: Some(0),
+            reason: FinishReason::MaxTokens,
+            is_generate: true,
+            prompt_len: 3,
+            tokens: vec![7, 8],
+            text: String::new(),
+            logits: Vec::new(),
+            ttft_s: 0.5,
+            latency_s: 1.0,
+            macs: 100,
+            recompute_macs: 200,
+        };
+        let j = finished_json(&f, false);
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("reason").unwrap().as_str().unwrap(), "max-tokens");
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "generate");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.opt("logits").is_none(), "logits only on request");
+    }
+}

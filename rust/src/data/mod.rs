@@ -20,5 +20,5 @@ pub use batch::{
 };
 pub use corpus::render_corpus;
 pub use tasks::{McInstance, Split, Task, TaskKind, ALL_TASKS};
-pub use tokenizer::{Tokenizer, BOS, EOS, PAD, SEP};
+pub use tokenizer::{Tokenizer, BOS, EOS, PAD, SEP, VOCAB_USED};
 pub use world::World;

@@ -193,6 +193,74 @@ impl CoreStats {
     }
 }
 
+/// A cheap point-in-time view of a live [`Session`] — what a transport
+/// front-end needs for health endpoints and load-shedding decisions
+/// without touching the event stream: bounded-queue occupancy, slot
+/// occupancy, and the cumulative totals of everything retired so far.
+/// Produced by [`Session::snapshot`] from plain counter reads (no
+/// allocation, no locking, no interaction with event delivery).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineSnapshot {
+    /// Requests waiting in the bounded admission queue.
+    pub queue_depth: usize,
+    /// The queue bound ([`EngineConfig::queue_cap`], min-clamped to 1) —
+    /// `queue_depth == queue_cap` is the 429 shedding condition.
+    pub queue_cap: usize,
+    /// Lanes currently occupied.
+    pub active: usize,
+    /// Total lanes ([`EngineConfig::slots`], min-clamped to 1).
+    pub slots: usize,
+    /// `slots - active`.
+    pub free_slots: usize,
+    /// Requests admitted into a slot so far.
+    pub admitted: usize,
+    /// Requests retired so far (including drained ones).
+    pub finished: usize,
+    /// Prompt positions scored so far (Score requests).
+    pub scored_tokens: usize,
+    /// Tokens generated so far (Generate requests).
+    pub generated_tokens: usize,
+    /// MACs executed by retired requests.
+    pub macs: u128,
+    pub cancelled: usize,
+    pub deadline_evictions: usize,
+    pub mid_run_admissions: usize,
+    pub decode_rounds: usize,
+}
+
+/// Running totals over every retired request, recorded at retire time so
+/// they survive [`Session::drain_finished`] handing the per-request
+/// results out incrementally. [`Session::finish`] projects [`CoreStats`]
+/// from this tally; for drain-free sessions (the batch adapters) the
+/// numbers are identical to folding over the finished list.
+#[derive(Debug, Clone, Copy, Default)]
+struct FinishTally {
+    requests: usize,
+    scored_tokens: usize,
+    prompt_tokens: usize,
+    generated_tokens: usize,
+    macs: u128,
+    recompute_macs: u128,
+}
+
+impl FinishTally {
+    fn record(&mut self, f: &FinishedRequest) {
+        self.requests += 1;
+        self.macs += f.macs;
+        self.recompute_macs += f.recompute_macs;
+        if f.is_generate {
+            // a request cancelled straight from the queue never
+            // prefilled, so its prompt was not consumed
+            if f.admitted.is_some() {
+                self.prompt_tokens += f.prompt_len;
+            }
+            self.generated_tokens += f.tokens.len();
+        } else if f.reason == FinishReason::Scored {
+            self.scored_tokens += f.prompt_len;
+        }
+    }
+}
+
 /// A request occupying a lane (slot) for the duration of its life.
 struct Lane {
     id: usize,
@@ -256,6 +324,8 @@ impl<'m> EngineCore<'m> {
             seen_ids: BTreeSet::new(),
             active: Vec::new(),
             finished: Vec::new(),
+            tally: FinishTally::default(),
+            lats: Vec::new(),
             events: VecDeque::new(),
             ttfts: Vec::new(),
             itls: Vec::new(),
@@ -352,7 +422,13 @@ pub struct Session<'m> {
     /// Every id ever accepted, for O(1) duplicate rejection.
     seen_ids: BTreeSet<usize>,
     active: Vec<Lane>,
+    /// Retired requests not yet handed out ([`Session::drain_finished`]
+    /// empties this; [`Session::finish`] returns the remainder).
     finished: Vec<FinishedRequest>,
+    /// Totals over *every* retired request, drained or not.
+    tally: FinishTally,
+    /// Per-request completion-latency samples, recorded at retire time.
+    lats: Vec<f64>,
     events: VecDeque<Event>,
     ttfts: Vec<f64>,
     itls: Vec<f64>,
@@ -387,6 +463,47 @@ impl<'m> Session<'m> {
 
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty() || !self.active.is_empty()
+    }
+
+    /// Seconds since this session opened — the clock every event
+    /// timestamp and [`InferenceRequest::deadline_s`] is measured
+    /// against. A transport front-end converts a client-relative
+    /// deadline to this clock with `elapsed_s() + relative`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.now()
+    }
+
+    /// Point-in-time view of the session: queue/slot occupancy plus the
+    /// cumulative totals of everything retired so far. Plain counter
+    /// reads — cheap enough for a health endpoint to call per request.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        let slots = self.core.config.slots.max(1);
+        EngineSnapshot {
+            queue_depth: self.pending.len(),
+            queue_cap: self.core.config.queue_cap.max(1),
+            active: self.active.len(),
+            slots,
+            free_slots: slots.saturating_sub(self.active.len()),
+            admitted: self.admitted_count,
+            finished: self.tally.requests,
+            scored_tokens: self.tally.scored_tokens,
+            generated_tokens: self.tally.generated_tokens,
+            macs: self.tally.macs,
+            cancelled: self.cancelled,
+            deadline_evictions: self.deadline_evictions,
+            mid_run_admissions: self.mid_run,
+            decode_rounds: self.rounds,
+        }
+    }
+
+    /// Hand out every request retired since the last drain, in
+    /// retirement order. Long-lived drivers (the HTTP daemon) consume
+    /// results as they complete instead of holding them until
+    /// [`Session::finish`]; the aggregate totals keep accumulating
+    /// either way, so `finish()` reports the whole session regardless
+    /// of how many results were drained early.
+    pub fn drain_finished(&mut self) -> Vec<FinishedRequest> {
+        std::mem::take(&mut self.finished)
     }
 
     /// Submit, treating a full queue as an error that drops the request.
@@ -579,17 +696,23 @@ impl<'m> Session<'m> {
         Ok(())
     }
 
-    /// Close the session: order results by request id and aggregate stats.
+    /// Close the session: order undrained results by request id and
+    /// aggregate stats. The stats cover the *whole* session — the tally
+    /// and latency samples are recorded at retire time, so results
+    /// already handed out via [`Session::drain_finished`] stay counted.
     pub fn finish(mut self) -> (Vec<FinishedRequest>, CoreStats) {
         let wall_s = self.now();
         self.finished.sort_by_key(|f| f.id);
-        let mut stats = CoreStats {
-            requests: self.finished.len(),
+        let stats = CoreStats {
+            requests: self.tally.requests,
             batches: self.batches,
+            scored_tokens: self.tally.scored_tokens,
+            prompt_tokens: self.tally.prompt_tokens,
+            generated_tokens: self.tally.generated_tokens,
+            macs: self.tally.macs,
+            recompute_macs: self.tally.recompute_macs,
             wall_s,
-            latency: LatencySummary::from_unsorted(
-                self.finished.iter().map(|f| f.latency_s).collect(),
-            ),
+            latency: LatencySummary::from_unsorted(std::mem::take(&mut self.lats)),
             ttft: LatencySummary::from_unsorted(std::mem::take(&mut self.ttfts)),
             inter_token: LatencySummary::from_unsorted(std::mem::take(&mut self.itls)),
             peak_active: self.peak_active,
@@ -597,22 +720,7 @@ impl<'m> Session<'m> {
             decode_rounds: self.rounds,
             cancelled: self.cancelled,
             deadline_evictions: self.deadline_evictions,
-            ..CoreStats::default()
         };
-        for f in &self.finished {
-            stats.macs += f.macs;
-            stats.recompute_macs += f.recompute_macs;
-            if f.is_generate {
-                // a request cancelled straight from the queue never
-                // prefilled, so its prompt was not consumed
-                if f.admitted.is_some() {
-                    stats.prompt_tokens += f.prompt_len;
-                }
-                stats.generated_tokens += f.tokens.len();
-            } else if f.reason == FinishReason::Scored {
-                stats.scored_tokens += f.prompt_len;
-            }
-        }
         (self.finished, stats)
     }
 
@@ -789,7 +897,7 @@ impl<'m> Session<'m> {
                 kind: EventKind::Finished { reason, tokens: 0 },
             });
         }
-        self.finished.push(FinishedRequest {
+        self.record_finished(FinishedRequest {
             id: req.id,
             admitted: None,
             reason,
@@ -803,6 +911,15 @@ impl<'m> Session<'m> {
             macs: 0,
             recompute_macs: 0,
         });
+    }
+
+    /// The one retirement sink: fold the request into the running tally
+    /// (so drains can't lose it from the aggregate stats), sample its
+    /// completion latency, and park it for the caller.
+    fn record_finished(&mut self, f: FinishedRequest) {
+        self.tally.record(&f);
+        self.lats.push(f.latency_s);
+        self.finished.push(f);
     }
 
     /// Move finished lanes out of the active set, releasing their caches
@@ -845,7 +962,7 @@ impl<'m> Session<'m> {
             });
         }
         let text = FinishedRequest::decode_text(&tokens);
-        self.finished.push(FinishedRequest {
+        self.record_finished(FinishedRequest {
             id: lane.id,
             admitted: Some(lane.admitted),
             reason,
@@ -1157,5 +1274,84 @@ mod tests {
         assert_eq!(stats.generated_tokens, 2 * 3);
         assert_eq!(stats.requests, 4);
         assert!(stats.request_stats().tokens == stats.scored_tokens + stats.generated_tokens);
+    }
+
+    #[test]
+    fn snapshot_tracks_a_running_session() {
+        // 1 slot, queue_cap 2, 3 requests: the snapshot must show the
+        // occupancy at every stage of the run, and the totals at the end
+        let m = model(79);
+        let config = EngineConfig { queue_cap: 2, ..gen_config(1) };
+        let core = EngineCore::new(&m, config);
+        let mut session = core.session();
+        let fresh = session.snapshot();
+        assert_eq!(fresh, EngineSnapshot { queue_cap: 2, slots: 1, free_slots: 1, ..fresh });
+        assert_eq!((fresh.queue_depth, fresh.active, fresh.finished), (0, 0, 0));
+
+        let mut reqs = gen_requests(3, 5);
+        session.submit(reqs.remove(0)).unwrap();
+        session.submit(reqs.remove(0)).unwrap();
+        let queued = session.snapshot();
+        assert_eq!((queued.queue_depth, queued.active, queued.free_slots), (2, 0, 1));
+        assert_eq!(queued.queue_depth, queued.queue_cap, "shedding condition reached");
+
+        session.step().unwrap(); // admit one into the lone slot
+        let running = session.snapshot();
+        assert_eq!((running.queue_depth, running.active, running.free_slots), (1, 1, 0));
+        assert_eq!(running.admitted, 1);
+        assert!(session.try_submit(reqs.remove(0)).unwrap().is_none(), "queue has room again");
+
+        session.drive().unwrap();
+        let done = session.snapshot();
+        assert_eq!((done.queue_depth, done.active, done.free_slots), (0, 0, 1));
+        let (finished, stats) = session.finish();
+        assert_eq!(done.finished, finished.len());
+        assert_eq!(done.admitted, 3);
+        assert_eq!(done.generated_tokens, stats.generated_tokens);
+        assert_eq!(done.macs, stats.macs);
+        assert_eq!(done.decode_rounds, stats.decode_rounds);
+        assert_eq!(done.mid_run_admissions, stats.mid_run_admissions);
+    }
+
+    #[test]
+    fn drain_finished_hands_out_results_without_losing_stats() {
+        // drain after every step: the incremental results must equal the
+        // undriven batch run, and finish() must still report the whole
+        // session's stats even though its finished list is empty
+        let m = model(83);
+        let core = EngineCore::new(&m, gen_config(2));
+        let (batch, batch_stats) = core.run(gen_requests(4, 5)).unwrap();
+
+        let mut session = core.session();
+        let mut queue: VecDeque<InferenceRequest> = gen_requests(4, 5).into();
+        let mut drained: Vec<FinishedRequest> = Vec::new();
+        loop {
+            while let Some(req) = queue.pop_front() {
+                if let Some(back) = session.try_submit(req).unwrap() {
+                    queue.push_front(back);
+                    break;
+                }
+            }
+            let worked = session.step().unwrap();
+            drained.extend(session.drain_finished());
+            assert_eq!(session.snapshot().finished, drained.len(), "tally survives drains");
+            if !worked && queue.is_empty() {
+                break;
+            }
+        }
+        let (leftover, stats) = session.finish();
+        assert!(leftover.is_empty(), "every result was drained early");
+        drained.sort_by_key(|f| f.id);
+        assert_eq!(drained.len(), batch.len());
+        for (a, b) in drained.iter().zip(&batch) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+            assert_eq!(a.reason, b.reason);
+        }
+        assert_eq!(stats.requests, batch_stats.requests);
+        assert_eq!(stats.generated_tokens, batch_stats.generated_tokens);
+        assert_eq!(stats.prompt_tokens, batch_stats.prompt_tokens);
+        assert_eq!(stats.macs, batch_stats.macs);
+        assert_eq!(stats.latency.n, batch_stats.latency.n, "latency samples survive drains");
     }
 }

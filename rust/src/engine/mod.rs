@@ -25,6 +25,10 @@
 //! - [`CoreStats`] — the aggregate superset both adapters project into
 //!   [`crate::serve::ServeStats`] / [`crate::decode::DecodeStats`] via the
 //!   shared [`crate::util::RequestStats`] core.
+//! - [`EngineSnapshot`] — a cheap live view of a running session (queue
+//!   depth, slot occupancy, retired totals) for health endpoints and
+//!   load-shedding decisions; [`Session::drain_finished`] hands results
+//!   out incrementally for long-lived drivers like [`crate::daemon`].
 //!
 //! `repro generate --stream` prints the token events as they are
 //! produced, `examples/streaming_generation.rs` drives the session API
@@ -37,7 +41,7 @@ pub mod request;
 use crate::model::ModelConfig;
 use crate::util::Rng;
 
-pub use self::core::{CoreStats, EngineConfig, EngineCore, Session};
+pub use self::core::{CoreStats, EngineConfig, EngineCore, EngineSnapshot, Session};
 pub(crate) use self::core::request_rng;
 pub use self::request::{
     Event, EventKind, FinishReason, FinishedRequest, InferenceRequest, RequestKind, StreamControl,

@@ -46,12 +46,19 @@
 //!   admission, EOS/max-token/cancel/deadline eviction, round-robin
 //!   fairness), seeded greedy/temperature/top-k sampling, and
 //!   TTFT/inter-token-latency/MAC-savings stats from the event timeline
+//! - [`daemon`] — HTTP/1.1 + SSE transport front-end: a dependency-free
+//!   `std::net` server binding the [`engine`] session API to the wire
+//!   (`/v1/generate`, `/v1/score`, health/readiness, admin drain) with
+//!   bounded-queue load shedding (`429` + `Retry-After`), mid-stream
+//!   disconnect cancellation, and graceful drain — plus the open-loop
+//!   `repro loadgen` wire-path load generator
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
 
 pub mod compress;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod decode;
 pub mod engine;

@@ -15,6 +15,9 @@
 //! repro generate --ckpt artifact.rtz [--prompt TEXT | --requests N] | --self-check
 //! repro bench-decode [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
 //! repro bench-parallel [--ckpt artifact.rtz] [--threads N] [--json FILE]
+//! repro daemon   --ckpt artifact.rtz [--addr HOST:PORT] [--slots N] | --self-check
+//! repro loadgen  --addr HOST:PORT [--connections N] [--rps R] [--duration S]
+//! repro bench-daemon [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
 //! repro tables   --ckpt ckpt.rtz [--table 1|2|3|4|all]
 //! repro cost     --ckpt ckpt.rtz
 //! ```
@@ -33,8 +36,10 @@ use anyhow::{bail, Context, Result};
 
 use llm_rom::compress::{self, CompressedModel, Provenance};
 use llm_rom::coordinator::{Experiment, ExperimentConfig};
+use llm_rom::daemon::{self, Daemon, DaemonConfig, HttpClient, LoadgenConfig};
 use llm_rom::data::CalibSource;
 use llm_rom::decode::{self, DecodeConfig, DecodeScheduler, GenRequest, KvCache, Sampling};
+use llm_rom::engine::{self, EngineConfig, EngineCore, InferenceRequest};
 use llm_rom::exec::ExecConfig;
 use llm_rom::model::macs::{self, CompressionAccounting};
 use llm_rom::model::{ModelConfig, ParamStore};
@@ -104,6 +109,12 @@ const TEMP: Flag = flag("temp", "T", "sampling temperature (0 = greedy)");
 const TOP_K: Flag = flag("top-k", "K", "restrict sampling to the K best logits (0 = off)");
 const SLOTS: Flag = flag("slots", "N", "concurrent KV cache slots (continuous batching)");
 const PROMPT_LEN: Flag = flag("prompt-len", "N", "tokens per synthetic prompt");
+const ADDR: Flag = flag("addr", "HOST:PORT", "daemon address");
+const QUEUE_CAP: Flag =
+    flag("queue-cap", "N", "bounded admission queue depth (a full queue sheds new work with 429)");
+const CONNECTIONS: Flag = flag("connections", "N", "concurrent load-generator connections");
+const RPS: Flag = flag("rps", "R", "open-loop target arrival rate, requests per second");
+const DURATION: Flag = flag("duration", "S", "arrival window in seconds");
 const CKPT: Flag = flag("ckpt", "FILE", "checkpoint to load (.rtz)");
 const BUDGET: Flag = flag("budget", "B", "global parameter budget in (0, 1]");
 const ROWS: Flag = flag("rows", "N", "calibration rows");
@@ -232,6 +243,60 @@ static COMMANDS: &[Cmd] = &[
             PROMPT_LEN,
             MAX_NEW,
             SLOTS,
+            THREADS,
+            SEED,
+            JSON_OUT,
+        ],
+    },
+    Cmd {
+        name: "daemon",
+        summary: "HTTP/1.1 + SSE front-end over the streaming engine core",
+        flags: &[
+            CKPT,
+            ADDR,
+            flag("mode", "dense|factored", "execution mode (default factored)"),
+            SLOTS,
+            QUEUE_CAP,
+            MAX_NEW,
+            flag("retry-after", "S", "Retry-After seconds advertised on 429 responses"),
+            THREADS,
+            switch(
+                "self-check",
+                "offline: client+server in one process over loopback — SSE ≡ in-process \
+                 events, queue saturation → 429, disconnect cancels, drain exits",
+            ),
+            SEED,
+        ],
+    },
+    Cmd {
+        name: "loadgen",
+        summary: "open-loop wire-path load generator against a running daemon",
+        flags: &[
+            ADDR,
+            CONNECTIONS,
+            RPS,
+            DURATION,
+            PROMPT_LEN,
+            MAX_NEW,
+            switch("unary", "use unary completion envelopes instead of SSE streams"),
+            flag("vocab", "N", "prompt token range (default: the artifacts manifest vocab)"),
+            SEED,
+            JSON_OUT,
+        ],
+    },
+    Cmd {
+        name: "bench-daemon",
+        summary: "self-hosted daemon + loadgen wire-path benchmark",
+        flags: &[
+            CKPT,
+            BUDGET,
+            CONNECTIONS,
+            RPS,
+            DURATION,
+            PROMPT_LEN,
+            MAX_NEW,
+            SLOTS,
+            QUEUE_CAP,
             THREADS,
             SEED,
             JSON_OUT,
@@ -384,6 +449,9 @@ fn run() -> Result<()> {
         "generate" => cmd_generate(&artifacts, &args),
         "bench-decode" => cmd_bench_decode(&artifacts, &args),
         "bench-parallel" => cmd_bench_parallel(&artifacts, &args),
+        "daemon" => cmd_daemon(&artifacts, &args),
+        "loadgen" => cmd_loadgen(&artifacts, &args),
+        "bench-daemon" => cmd_bench_daemon(&artifacts, &args),
         "tables" => cmd_tables(&artifacts, &args),
         "cost" => cmd_cost(&artifacts, &args),
         "spectrum" => cmd_spectrum(&artifacts, &args),
@@ -1333,6 +1401,401 @@ fn cmd_bench_parallel(artifacts: &str, args: &Args) -> Result<()> {
         bench.decode_streams_match
     );
     write_bench_json(args, &bench.to_json())?;
+    Ok(())
+}
+
+fn cmd_daemon(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let exec = exec_from(args)?;
+    if args.get("self-check").is_some() {
+        return daemon_self_check(seed, exec);
+    }
+    let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
+    let cfg = serve_cfg(artifacts);
+    let cm = load_artifact_or_ckpt(&cfg, path)?;
+    let mode = match args.get("mode") {
+        None => ExecMode::Factored,
+        Some(s) => ExecMode::parse(s)?,
+    };
+    let model = ServeModel::from_artifact(&cm, mode)?;
+    let engine = EngineConfig {
+        slots: args.parse_num("slots", 4)?,
+        queue_cap: args.parse_num("queue-cap", 64)?,
+        max_new: args.parse_num("max-new", 32)?,
+        seed,
+        exec,
+        ..EngineConfig::default()
+    };
+    let config = DaemonConfig {
+        addr: args.get_or("addr", "127.0.0.1:8700"),
+        engine,
+        retry_after_s: args.parse_num("retry-after", 1u32)?,
+    };
+    let server = Daemon::bind(&model, config)?;
+    println!(
+        "daemon [{}] listening on http://{} — {} slots, queue {} ({} threads; \
+         stop with POST /admin/drain)",
+        mode.name(),
+        server.addr(),
+        engine.slots,
+        engine.queue_cap,
+        exec.resolve(),
+    );
+    let report = server.serve()?;
+    println!(
+        "daemon drained: {} requests ({} scored + {} generated tokens), {} SSE streams, \
+         shed {} (429) + {} (503), {} bad requests, {} disconnect cancels",
+        report.stats.requests,
+        report.stats.scored_tokens,
+        report.stats.generated_tokens,
+        report.sse_streams,
+        report.shed_429,
+        report.shed_503,
+        report.bad_requests,
+        report.disconnect_cancels,
+    );
+    Ok(())
+}
+
+fn cmd_loadgen(artifacts: &str, args: &Args) -> Result<()> {
+    let cfg = serve_cfg(artifacts);
+    let lg = LoadgenConfig {
+        addr: args.get("addr").context("--addr required (a running `repro daemon`)")?.to_string(),
+        connections: args.parse_num("connections", 4)?,
+        rps: args.parse_num("rps", 20.0)?,
+        duration_s: args.parse_num("duration", 2.0)?,
+        prompt_len: args.parse_num("prompt-len", 8)?,
+        max_new: args.parse_num("max-new", 8)?,
+        stream: args.get("unary").is_none(),
+        seed: args.parse_num("seed", 0)?,
+        vocab: args.parse_num("vocab", cfg.vocab)?,
+    };
+    println!(
+        "loadgen -> http://{}: {} connections, {} rps for {}s ({})",
+        lg.addr,
+        lg.connections,
+        lg.rps,
+        lg.duration_s,
+        if lg.stream { "SSE" } else { "unary" },
+    );
+    let report = daemon::run_loadgen(&lg)?;
+    print!("{}", report.format());
+    write_bench_json(args, &report.to_json())?;
+    Ok(())
+}
+
+fn cmd_bench_daemon(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let (cm, label) = bench_artifact(artifacts, args, 0xDA30)?;
+    let connections: usize = args.parse_num("connections", 4)?;
+    let rps: f64 = args.parse_num("rps", 40.0)?;
+    let duration_s: f64 = args.parse_num("duration", 2.0)?;
+    let prompt_len: usize = args.parse_num("prompt-len", 8)?;
+    let max_new: usize = args.parse_num("max-new", 8)?;
+    let slots: usize = args.parse_num("slots", 4)?;
+    let queue_cap: usize = args.parse_num("queue-cap", 8)?;
+    let exec = exec_from(args)?;
+    println!(
+        "bench-daemon {label}: {connections} connections at {rps} rps for {duration_s}s \
+         (prompt {prompt_len} + {max_new} new, {slots} slots, queue {queue_cap}, {} threads)",
+        exec.resolve()
+    );
+    let bench = llm_rom::coordinator::daemon_bench(
+        &cm, connections, rps, duration_s, prompt_len, max_new, slots, queue_cap, exec, seed,
+    )?;
+    println!("{}", bench.format());
+    write_bench_json(args, &bench.to_json())?;
+    Ok(())
+}
+
+/// Collect one full SSE transcript for a request body.
+fn sse_collect(
+    addr: std::net::SocketAddr,
+    body: &llm_rom::util::json::Json,
+) -> Result<Vec<(String, String)>> {
+    let mut client = HttpClient::connect(addr)?;
+    let resp = client.post_json("/v1/generate", body)?;
+    anyhow::ensure!(resp.status == 200, "expected 200 SSE stream, got {}", resp.status);
+    anyhow::ensure!(resp.is_sse(), "expected an SSE response");
+    drain_sse(&mut client)
+}
+
+/// Read SSE frames off an already-streaming client until `finished`.
+fn drain_sse(client: &mut HttpClient) -> Result<Vec<(String, String)>> {
+    let mut frames = Vec::new();
+    while let Some(f) = client.next_sse_frame()? {
+        let done = f.event == "finished";
+        frames.push((f.event, f.data));
+        if done {
+            break;
+        }
+    }
+    Ok(frames)
+}
+
+/// Generate-request envelope for the self-check clients.
+fn gen_body(prompt: &[i32], max_new: usize, stream: bool) -> llm_rom::util::json::Json {
+    use llm_rom::util::json::Json;
+    daemon::wire::obj(vec![
+        ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("max_new", Json::Num(max_new as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+}
+
+/// `repro daemon --self-check`: fully-offline verification of the
+/// HTTP/SSE transport against the in-process engine — client and server
+/// in one process over loopback, on a synthetic factored artifact:
+///
+/// 1. wire ≡ engine: score and unary generate envelopes carry the batch
+///    results, SSE transcripts are byte-identical to the in-process
+///    event frames, and a malformed body gets a structured 400 envelope;
+/// 2. load shedding: with the engine paused (determinism hook), the
+///    bounded queue fills to cap and the next request is shed with `429`
+///    + `Retry-After`; the resumed streams complete byte-identical;
+/// 3. disconnect: dropping a client mid-stream cancels its request at a
+///    token boundary and frees the slot (observed via `/healthz`), and a
+///    follow-up stream completes byte-identical on the reused slot;
+/// 4. drain: `POST /admin/drain` flips `/readyz` to 503, refuses new
+///    work with 503, finishes the in-flight streams, and exits.
+///
+/// Run by `scripts/verify.sh` at `--threads 1` and `--threads 4` with an
+/// output diff — SSE frames mirror the engine's thread-invariant event
+/// stream and carry no wall-clock fields, so everything printed is
+/// deterministic.
+fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
+    use std::collections::{BTreeMap, VecDeque};
+
+    let cfg = serve::demo_config();
+    let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0xDA30)?;
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored)?;
+    let engine_cfg = EngineConfig {
+        slots: 2,
+        queue_cap: 3,
+        max_new: 6,
+        capacity: 8 + 32,
+        sampling: Sampling::Greedy,
+        seed,
+        eos: None,
+        exec,
+        ..EngineConfig::default()
+    };
+    // 13 requests, one script for both runs: id 0 scores, id 9 is the
+    // stream the client will abandon (long max_new so plenty of frames
+    // outlive the hang-up), everything else generates 6 greedy tokens
+    let prompts = engine::synth_token_streams(&cfg, 13, 8, seed);
+    let script: Vec<InferenceRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, p)| match id {
+            0 => InferenceRequest::score(0, p.clone()),
+            9 => InferenceRequest::generate(9, p.clone(), Some(32)),
+            _ => InferenceRequest::generate(id, p.clone(), Some(6)),
+        })
+        .collect();
+
+    // in-process reference: the same requests through one session,
+    // collecting the exact frames every SSE response must mirror
+    let core = EngineCore::new(&model, engine_cfg);
+    let mut session = core.session();
+    let mut expected: BTreeMap<usize, Vec<(String, String)>> = BTreeMap::new();
+    let mut queue: VecDeque<InferenceRequest> = script.into();
+    while let Some(r) = queue.pop_front() {
+        if let Some(back) = session.try_submit(r)? {
+            queue.push_front(back);
+            session.step()?;
+            for ev in session.take_events() {
+                let (e, d) = daemon::wire::event_sse(&ev);
+                expected.entry(ev.id).or_default().push((e.to_string(), d));
+            }
+        }
+    }
+    while session.has_work() {
+        session.step()?;
+        for ev in session.take_events() {
+            let (e, d) = daemon::wire::event_sse(&ev);
+            expected.entry(ev.id).or_default().push((e.to_string(), d));
+        }
+    }
+    let (reference, _) = session.finish();
+    anyhow::ensure!(reference.len() == 13, "reference run retired {} of 13", reference.len());
+
+    let server = Daemon::bind(
+        &model,
+        DaemonConfig { addr: "127.0.0.1:0".into(), engine: engine_cfg, retry_after_s: 1 },
+    )?;
+    let ctl = server.control();
+    let addr = server.addr();
+    let report = std::thread::scope(|s| -> Result<llm_rom::daemon::DaemonReport> {
+        let srv = s.spawn(move || server.serve());
+        let phases = self_check_phases(addr, &ctl, &prompts, &expected, &reference);
+        if phases.is_err() {
+            // unblock the daemon so the scope can join even when a phase
+            // assertion fails mid-run
+            ctl.drain();
+        }
+        let outcome = srv.join().map_err(|_| anyhow::anyhow!("daemon thread panicked"))?;
+        phases?;
+        let report = outcome?;
+        println!(
+            "[4/4] drain: readyz → 503, new work shed with 503, in-flight streams ran to \
+             completion, daemon exited"
+        );
+        Ok(report)
+    })?;
+    anyhow::ensure!(report.stats.requests == 13, "retired {} of 13", report.stats.requests);
+    anyhow::ensure!(report.stats.scored_tokens == 8, "scored {} of 8", report.stats.scored_tokens);
+    anyhow::ensure!(
+        report.stats.cancelled == 1
+            && report.disconnect_cancels == 1
+            && report.shed_429 == 1
+            && report.shed_503 == 1
+            && report.bad_requests == 1,
+        "daemon report counters off: {report:?}"
+    );
+    anyhow::ensure!(report.sse_streams == 11, "opened {} of 11 streams", report.sse_streams);
+    println!(
+        "daemon self-check: OK ({} requests, {} SSE streams, 1 shed_429, 1 shed_503, \
+         1 disconnect cancel)",
+        report.stats.requests,
+        report.sse_streams
+    );
+    Ok(())
+}
+
+/// The client-side script of [`daemon_self_check`]: phases 1–3 plus the
+/// drain sequence of phase 4 (its completion line prints after the
+/// daemon thread joins).
+fn self_check_phases(
+    addr: std::net::SocketAddr,
+    ctl: &llm_rom::daemon::DaemonControl,
+    prompts: &[Vec<i32>],
+    expected: &std::collections::BTreeMap<usize, Vec<(String, String)>>,
+    reference: &[llm_rom::engine::FinishedRequest],
+) -> Result<()> {
+    use anyhow::ensure;
+    use llm_rom::util::json::Json;
+    use std::time::{Duration, Instant};
+
+    // [1/4] wire ≡ engine on every request shape
+    let mut c = HttpClient::connect(addr)?;
+    let score_body = daemon::wire::obj(vec![(
+        "tokens",
+        Json::Arr(prompts[0].iter().map(|&t| Json::Num(t as f64)).collect()),
+    )]);
+    let resp = c.post_json("/v1/score", &score_body)?;
+    ensure!(resp.status == 200, "score request: status {}", resp.status);
+    let env = resp.json()?;
+    ensure!(env.get("id")?.as_usize()? == 0, "score envelope id");
+    ensure!(env.get("reason")?.as_str()? == reference[0].reason.name(), "score reason");
+    ensure!(env.get("prompt_len")?.as_usize()? == 8, "score prompt_len");
+    let resp = c.post_json("/v1/generate", &gen_body(&prompts[1], 6, false))?;
+    ensure!(resp.status == 200, "unary generate: status {}", resp.status);
+    let env = resp.json()?;
+    let got: Vec<i32> =
+        env.get("tokens")?.as_arr()?.iter().map(|t| t.as_i32()).collect::<Result<_>>()?;
+    ensure!(got == reference[1].tokens, "unary generate tokens diverge from in-process run");
+    ensure!(env.get("reason")?.as_str()? == reference[1].reason.name(), "unary reason");
+    for id in 2usize..=5 {
+        let frames = sse_collect(addr, &gen_body(&prompts[id], 6, true))?;
+        ensure!(
+            frames == expected[&id],
+            "request {id}: SSE transcript diverges from the in-process event stream"
+        );
+    }
+    let resp = c.post_raw("/v1/generate", b"{not json")?;
+    ensure!(resp.status == 400, "malformed body: status {}", resp.status);
+    ensure!(
+        resp.json()?.get("error")?.get("status")?.as_usize()? == 400,
+        "malformed body must return the structured error envelope"
+    );
+    println!(
+        "[1/4] wire ≡ engine: score + unary envelopes and 4 SSE streams byte-identical \
+         to the in-process run; malformed body → 400 envelope"
+    );
+
+    // [2/4] deterministic load shedding: pause, fill the queue to cap,
+    // overflow sheds 429, resume completes everything
+    ctl.pause();
+    let mut queued: Vec<HttpClient> = Vec::new();
+    for id in 6usize..=8 {
+        let mut qc = HttpClient::connect(addr)?;
+        let resp = qc.post_json("/v1/generate", &gen_body(&prompts[id], 6, true))?;
+        ensure!(resp.status == 200 && resp.is_sse(), "queued stream {id}: {}", resp.status);
+        queued.push(qc);
+    }
+    let t0 = Instant::now();
+    while ctl.snapshot().queue_depth < 3 {
+        ensure!(t0.elapsed() < Duration::from_secs(10), "queue never reached cap");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut shed = HttpClient::connect(addr)?;
+    let resp = shed.post_json("/v1/generate", &gen_body(&prompts[8], 6, true))?;
+    ensure!(resp.status == 429, "over-capacity request: status {}", resp.status);
+    ensure!(resp.header("retry-after") == Some("1"), "429 must advertise Retry-After");
+    ctl.resume();
+    for (id, qc) in (6usize..=8).zip(queued.iter_mut()) {
+        let frames = drain_sse(qc)?;
+        ensure!(frames == expected[&id], "resumed stream {id} diverges");
+    }
+    println!(
+        "[2/4] load shedding: queue filled to 3/3 while paused, next request shed with \
+         429 Retry-After 1; resumed streams byte-identical"
+    );
+
+    // [3/4] mid-stream disconnect cancels and frees the slot
+    let mut doomed = HttpClient::connect(addr)?;
+    let resp = doomed.post_json("/v1/generate", &gen_body(&prompts[9], 32, true))?;
+    ensure!(resp.status == 200 && resp.is_sse(), "doomed stream: status {}", resp.status);
+    let mut seen = 0usize;
+    while let Some(f) = doomed.next_sse_frame()? {
+        if f.event == "token" {
+            seen += 1;
+            if seen == 2 {
+                break;
+            }
+        }
+    }
+    ensure!(seen == 2, "doomed stream ended before 2 tokens");
+    drop(doomed); // hang up mid-stream
+    let mut health = HttpClient::connect(addr)?;
+    let t0 = Instant::now();
+    loop {
+        let h = health.get("/healthz")?.json()?;
+        if h.get("cancelled")?.as_usize()? == 1 && h.get("active")?.as_usize()? == 0 {
+            break;
+        }
+        ensure!(
+            t0.elapsed() < Duration::from_secs(10),
+            "daemon never cancelled the dropped stream"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let frames = sse_collect(addr, &gen_body(&prompts[10], 6, true))?;
+    ensure!(frames == expected[&10], "post-cancel stream diverges");
+    println!(
+        "[3/4] disconnect: mid-stream hang-up cancelled the request and freed its slot; \
+         follow-up stream byte-identical"
+    );
+
+    // [4/4] graceful drain with streams in flight
+    let mut in_a = HttpClient::connect(addr)?;
+    let ra = in_a.post_json("/v1/generate", &gen_body(&prompts[11], 6, true))?;
+    ensure!(ra.status == 200 && ra.is_sse(), "in-flight stream A: {}", ra.status);
+    let mut in_b = HttpClient::connect(addr)?;
+    let rb = in_b.post_json("/v1/generate", &gen_body(&prompts[12], 6, true))?;
+    ensure!(rb.status == 200 && rb.is_sse(), "in-flight stream B: {}", rb.status);
+    let mut admin = HttpClient::connect(addr)?;
+    let resp = admin.post_json("/admin/drain", &daemon::wire::obj(vec![]))?;
+    ensure!(resp.status == 200, "drain: status {}", resp.status);
+    let resp = admin.get("/readyz")?;
+    ensure!(resp.status == 503, "readyz while draining: status {}", resp.status);
+    let resp = admin.post_json("/v1/generate", &gen_body(&prompts[12], 6, true))?;
+    ensure!(resp.status == 503, "post-drain submission: status {}", resp.status);
+    for (id, qc) in [(11usize, &mut in_a), (12usize, &mut in_b)] {
+        let frames = drain_sse(qc)?;
+        ensure!(frames == expected[&id], "draining stream {id} diverges");
+    }
     Ok(())
 }
 

@@ -1,0 +1,293 @@
+//! Loopback integration tests for the HTTP/SSE daemon — fully offline,
+//! client and server in one process on a synthetic factored artifact
+//! (no `artifacts/` and no PJRT needed).
+//!
+//! Each test drives a bound [`Daemon`] through real sockets and asserts
+//! the wire-level contracts: SSE streams mirror the in-process event
+//! stream byte for byte, a saturated queue sheds `429` instead of
+//! hanging, a mid-stream disconnect cancels the request and frees its
+//! slot, `POST /admin/drain` finishes in-flight work before exiting, and
+//! malformed bodies get structured `4xx` envelopes — never a panic.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use llm_rom::daemon::{wire, Daemon, DaemonConfig, DaemonControl, DaemonReport, HttpClient};
+use llm_rom::engine::{self, EngineConfig, EngineCore, InferenceRequest};
+use llm_rom::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+use llm_rom::util::json::Json;
+
+const SEED: u64 = 11;
+
+/// Bind a daemon on an ephemeral loopback port, run the client script
+/// against it, then drain and join. Draining unconditionally (drain is
+/// idempotent and overrides the pause hook) keeps the scope joinable
+/// even when the script fails mid-run — the failure surfaces as a test
+/// panic, not a hang.
+fn run_daemon(
+    engine: EngineConfig,
+    script: impl FnOnce(SocketAddr, &DaemonControl) -> Result<()>,
+) -> DaemonReport {
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, SEED).unwrap();
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+    let daemon = Daemon::bind(
+        &model,
+        DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 2 },
+    )
+    .unwrap();
+    let ctl = daemon.control();
+    let addr = daemon.addr();
+    std::thread::scope(|s| {
+        let srv = s.spawn(move || daemon.serve());
+        let out = script(addr, &ctl);
+        ctl.drain();
+        let report = srv.join().expect("daemon thread panicked");
+        out.expect("client script failed");
+        report.expect("daemon serve failed")
+    })
+}
+
+fn small_engine() -> EngineConfig {
+    EngineConfig {
+        slots: 2,
+        queue_cap: 4,
+        max_new: 5,
+        capacity: 6 + 64,
+        seed: SEED,
+        eos: None,
+        ..EngineConfig::default()
+    }
+}
+
+fn gen_body(prompt: &[i32], max_new: usize, stream: bool) -> Json {
+    wire::obj(vec![
+        ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("max_new", Json::Num(max_new as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+}
+
+/// Read SSE frames off a streaming client until the `finished` frame.
+fn drain_sse(client: &mut HttpClient) -> Result<Vec<(String, String)>> {
+    let mut frames = Vec::new();
+    while let Some(f) = client.next_sse_frame()? {
+        let done = f.event == "finished";
+        frames.push((f.event, f.data));
+        if done {
+            break;
+        }
+    }
+    ensure!(
+        frames.last().is_some_and(|(e, _)| e == "finished"),
+        "stream ended without a finished frame"
+    );
+    Ok(frames)
+}
+
+/// Poll `/healthz` until `pred` accepts the payload (or 10s pass).
+fn poll_healthz(addr: SocketAddr, what: &str, pred: impl Fn(&Json) -> bool) -> Result<()> {
+    let mut c = HttpClient::connect(addr)?;
+    let t0 = Instant::now();
+    loop {
+        let h = c.get("/healthz")?.json()?;
+        if pred(&h) {
+            return Ok(());
+        }
+        ensure!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}: {h}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn sse_streams_mirror_the_in_process_event_stream() {
+    let engine_cfg = small_engine();
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, SEED).unwrap();
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+    let prompts = engine::synth_token_streams(&cfg, 3, 6, SEED);
+
+    // in-process reference: same requests, same config, one session
+    let mut session = EngineCore::new(&model, engine_cfg).session();
+    let mut expected: BTreeMap<usize, Vec<(String, String)>> = BTreeMap::new();
+    for (id, p) in prompts.iter().enumerate() {
+        let back = session.try_submit(InferenceRequest::generate(id, p.clone(), Some(5))).unwrap();
+        assert!(back.is_none(), "queue cap 4 fits 3 requests");
+    }
+    while session.has_work() {
+        session.step().unwrap();
+        for ev in session.take_events() {
+            let (e, d) = wire::event_sse(&ev);
+            expected.entry(ev.id).or_default().push((e.to_string(), d));
+        }
+    }
+    let (reference, _) = session.finish();
+    assert_eq!(reference.len(), 3);
+
+    let report = run_daemon(engine_cfg, |addr, _ctl| {
+        for (id, p) in prompts.iter().enumerate() {
+            let mut c = HttpClient::connect(addr)?;
+            let resp = c.post_json("/v1/generate", &gen_body(p, 5, true))?;
+            ensure!(resp.status == 200 && resp.is_sse(), "stream {id}: status {}", resp.status);
+            let frames = drain_sse(&mut c)?;
+            ensure!(
+                frames == expected[&id],
+                "stream {id}: SSE transcript diverges from the in-process events"
+            );
+        }
+        Ok(())
+    });
+    assert_eq!(report.stats.requests, 3);
+    assert_eq!(report.sse_streams, 3);
+    assert_eq!(report.stats.generated_tokens, 15);
+}
+
+#[test]
+fn saturated_queue_sheds_429_instead_of_hanging() {
+    let engine_cfg = EngineConfig { slots: 1, queue_cap: 2, ..small_engine() };
+    let cfg = demo_config();
+    let prompts = engine::synth_token_streams(&cfg, 3, 6, SEED);
+
+    let report = run_daemon(engine_cfg, |addr, ctl| {
+        // freeze admission so queue occupancy is deterministic
+        ctl.pause();
+        let mut queued = Vec::new();
+        for (id, p) in prompts.iter().take(2).enumerate() {
+            let mut c = HttpClient::connect(addr)?;
+            let resp = c.post_json("/v1/generate", &gen_body(p, 3, true))?;
+            ensure!(resp.status == 200, "queued stream {id}: status {}", resp.status);
+            queued.push(c);
+        }
+        let t0 = Instant::now();
+        while ctl.snapshot().queue_depth < 2 {
+            ensure!(t0.elapsed() < Duration::from_secs(10), "queue never filled");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut c = HttpClient::connect(addr)?;
+        let resp = c.post_json("/v1/generate", &gen_body(&prompts[2], 3, true))?;
+        ensure!(resp.status == 429, "over-capacity: status {}", resp.status);
+        ensure!(resp.header("retry-after") == Some("2"), "429 must carry Retry-After");
+        let env = resp.json()?;
+        ensure!(env.get("error")?.get("status")?.as_usize()? == 429, "structured envelope");
+        ctl.resume();
+        for mut c in queued {
+            drain_sse(&mut c)?;
+        }
+        Ok(())
+    });
+    assert_eq!(report.shed_429, 1);
+    assert_eq!(report.stats.requests, 2, "shed request never reached the engine");
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_and_frees_the_slot() {
+    let engine_cfg = EngineConfig { slots: 1, ..small_engine() };
+    let cfg = demo_config();
+    let prompts = engine::synth_token_streams(&cfg, 2, 6, SEED);
+
+    let report = run_daemon(engine_cfg, |addr, _ctl| {
+        let mut doomed = HttpClient::connect(addr)?;
+        let resp = doomed.post_json("/v1/generate", &gen_body(&prompts[0], 64, true))?;
+        ensure!(resp.status == 200 && resp.is_sse(), "doomed stream: status {}", resp.status);
+        let mut seen = 0usize;
+        while let Some(f) = doomed.next_sse_frame()? {
+            if f.event == "token" {
+                seen += 1;
+                if seen == 2 {
+                    break;
+                }
+            }
+        }
+        ensure!(seen == 2, "doomed stream ended before 2 tokens");
+        drop(doomed); // hang up mid-stream
+        poll_healthz(addr, "disconnect cancellation", |h| {
+            let cancelled = h.get("cancelled").and_then(|v| v.as_usize()).unwrap_or(0);
+            let active = h.get("active").and_then(|v| v.as_usize()).unwrap_or(1);
+            cancelled == 1 && active == 0
+        })?;
+        // the freed slot takes new work to completion
+        let mut c = HttpClient::connect(addr)?;
+        let resp = c.post_json("/v1/generate", &gen_body(&prompts[1], 3, true))?;
+        ensure!(resp.status == 200, "post-cancel stream: status {}", resp.status);
+        drain_sse(&mut c)?;
+        Ok(())
+    });
+    assert_eq!(report.stats.cancelled, 1);
+    assert_eq!(report.disconnect_cancels, 1);
+    assert_eq!(report.stats.requests, 2, "cancelled + completed both retired");
+}
+
+#[test]
+fn drain_finishes_in_flight_work_and_refuses_new_work() {
+    let engine_cfg = EngineConfig { slots: 1, ..small_engine() };
+    let cfg = demo_config();
+    let prompts = engine::synth_token_streams(&cfg, 2, 6, SEED);
+
+    let report = run_daemon(engine_cfg, |addr, ctl| {
+        // park one stream in the queue so it is in flight when drain lands
+        ctl.pause();
+        let mut inflight = HttpClient::connect(addr)?;
+        let resp = inflight.post_json("/v1/generate", &gen_body(&prompts[0], 4, true))?;
+        ensure!(resp.status == 200, "in-flight stream: status {}", resp.status);
+
+        let mut admin = HttpClient::connect(addr)?;
+        let resp = admin.get("/readyz")?;
+        ensure!(resp.status == 200, "readyz before drain: status {}", resp.status);
+        let resp = admin.post_json("/admin/drain", &wire::obj(vec![]))?;
+        ensure!(resp.status == 200, "drain: status {}", resp.status);
+        ensure!(ctl.draining(), "control must observe draining");
+        let resp = admin.get("/readyz")?;
+        ensure!(resp.status == 503, "readyz while draining: status {}", resp.status);
+        let resp = admin.post_json("/v1/generate", &gen_body(&prompts[1], 4, true))?;
+        ensure!(resp.status == 503, "post-drain submission: status {}", resp.status);
+        let env = resp.json()?;
+        ensure!(env.get("error")?.get("status")?.as_usize()? == 503, "structured envelope");
+
+        // drain overrides the pause hook: the parked stream still finishes
+        let frames = drain_sse(&mut inflight)?;
+        ensure!(frames.iter().filter(|(e, _)| e == "token").count() == 4, "4 tokens");
+        Ok(())
+    });
+    assert_eq!(report.stats.requests, 1, "in-flight work retired");
+    assert_eq!(report.shed_503, 1, "post-drain submission refused");
+}
+
+#[test]
+fn malformed_requests_get_structured_envelopes_never_a_panic() {
+    let engine_cfg = small_engine();
+    let cfg = demo_config();
+    let prompts = engine::synth_token_streams(&cfg, 1, 6, SEED);
+
+    let report = run_daemon(engine_cfg, |addr, _ctl| {
+        let mut c = HttpClient::connect(addr)?;
+        let bad: &[&[u8]] = &[
+            b"{not json",
+            br#"{"prompt": [1], "bogus": true}"#,
+            br#"{"prompt": [99999]}"#,
+            br#"{"max_new": 4}"#,
+        ];
+        for body in bad {
+            let resp = c.post_raw("/v1/generate", body)?;
+            ensure!(resp.status == 400, "{:?}: status {}", String::from_utf8_lossy(body), resp.status);
+            let env = resp.json()?;
+            ensure!(env.get("error")?.get("status")?.as_usize()? == 400, "structured envelope");
+        }
+        // routing errors are envelopes too
+        let resp = c.get("/v1/generate")?;
+        ensure!(resp.status == 405, "GET on a POST endpoint: status {}", resp.status);
+        let resp = c.post_json("/v1/nope", &wire::obj(vec![]))?;
+        ensure!(resp.status == 404, "unknown endpoint: status {}", resp.status);
+        // and the daemon is still healthy afterwards
+        let resp = c.get("/healthz")?;
+        ensure!(resp.status == 200, "healthz after abuse: status {}", resp.status);
+        let resp = c.post_json("/v1/generate", &gen_body(&prompts[0], 3, false))?;
+        ensure!(resp.status == 200, "valid request after abuse: status {}", resp.status);
+        ensure!(resp.json()?.get("tokens")?.as_arr()?.len() == 3, "unary envelope");
+        Ok(())
+    });
+    assert_eq!(report.bad_requests, 4, "each malformed body counted once");
+    assert_eq!(report.stats.requests, 1, "only the valid request reached the engine");
+}

@@ -16,13 +16,14 @@ cargo build --release --examples --benches
 echo "== cargo test -q =="
 cargo test -q
 
-# Serve + decode + streaming smoke tests, at --threads 1 AND --threads 4:
-# each run asserts its own invariants (factored ≡ dense logits ≤1e-4, KV ≡
-# recompute streams, streamed events ≡ batch results, MACs == analytic
-# accounting), and everything the self-checks print is deterministic — so
-# any divergence between the two thread counts is a determinism regression
-# in the exec/engine core and fails the gate here.
-for check in "serve --self-check" "generate --self-check" "generate --stream --self-check"; do
+# Serve + decode + streaming + daemon smoke tests, at --threads 1 AND
+# --threads 4: each run asserts its own invariants (factored ≡ dense logits
+# ≤1e-4, KV ≡ recompute streams, streamed events ≡ batch results, MACs ==
+# analytic accounting, SSE transcripts ≡ in-process event frames over real
+# loopback sockets), and everything the self-checks print is deterministic
+# — so any divergence between the two thread counts is a determinism
+# regression in the exec/engine core and fails the gate here.
+for check in "serve --self-check" "generate --self-check" "generate --stream --self-check" "daemon --self-check"; do
   echo "== repro $check --threads 1 =="
   if ! out_t1=$(./target/release/repro $check --threads 1); then
     echo "$out_t1"
