@@ -696,14 +696,16 @@ pub struct DaemonBench {
     /// Resolved worker-pool budget the engine executed under.
     pub threads: usize,
     pub seed: u64,
+    /// `interactive:batch` request mix the load generator drove.
+    pub mix: (u32, u32),
 }
 
 impl DaemonBench {
     pub fn format(&self) -> String {
         let mut out = format!(
             "Daemon wire-path bench: {} conns over loopback, {} slots, queue {} \
-             ({} threads)\n",
-            self.connections, self.slots, self.queue_cap, self.threads,
+             ({} threads, mix {}:{})\n",
+            self.connections, self.slots, self.queue_cap, self.threads, self.mix.0, self.mix.1,
         );
         out.push_str(&self.load.format());
         let s = &self.daemon.stats;
@@ -733,6 +735,7 @@ impl DaemonBench {
             ("queue_cap", Json::Num(self.queue_cap as f64)),
             ("threads", Json::Num(self.threads as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("mix", Json::Str(format!("{}:{}", self.mix.0, self.mix.1))),
             ("load", self.load.to_json()),
             (
                 "server",
@@ -770,6 +773,7 @@ pub fn daemon_bench(
     queue_cap: usize,
     exec: ExecConfig,
     seed: u64,
+    mix: (u32, u32),
 ) -> Result<DaemonBench> {
     use crate::daemon::{run_loadgen, Daemon, DaemonConfig, LoadgenConfig};
     use crate::engine::EngineConfig;
@@ -799,6 +803,8 @@ pub fn daemon_bench(
         stream: true,
         seed,
         vocab: cfg.vocab,
+        mix,
+        deadline_ms: 250.0,
     };
     let (load, daemon) = std::thread::scope(|s| -> Result<(LoadReport, DaemonReport)> {
         let srv = s.spawn(move || server.serve());
@@ -819,6 +825,7 @@ pub fn daemon_bench(
         queue_cap,
         threads: exec.resolve(),
         seed,
+        mix,
     })
 }
 

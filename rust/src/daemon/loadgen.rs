@@ -17,6 +17,14 @@
 //! Per-request the worker records completion latency, TTFT (due → first
 //! `token` SSE frame), and inter-token gaps; 429s and transport errors
 //! are counted, not retried — shed capacity is the signal, not a bug.
+//!
+//! `--mix interactive:batch` shapes an adversarial tiered trace: request
+//! `i` is interactive when `i mod (a+b) < a`, carrying `tier:
+//! "interactive"` and a `deadline_ms` on the wire (the default `0:1` mix
+//! sends bodies byte-identical to the pre-tier ones). The report then
+//! splits completion latency per tier and scores the deadline hit-rate —
+//! the fraction of deadline-carrying requests that finished without a
+//! server-side `deadline` eviction.
 
 use std::net::{SocketAddr, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -51,6 +59,12 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Model vocab — prompts are sampled in `0..vocab`.
     pub vocab: usize,
+    /// `interactive:batch` request ratio; `(0, 1)` (the default) sends
+    /// an all-batch trace with bodies byte-identical to pre-tier runs.
+    pub mix: (u32, u32),
+    /// `deadline_ms` attached to interactive-tier requests (`0` sends
+    /// none). Only the `mix` decides which requests carry it.
+    pub deadline_ms: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -65,7 +79,36 @@ impl Default for LoadgenConfig {
             stream: true,
             seed: 0,
             vocab: 0,
+            mix: (0, 1),
+            deadline_ms: 250.0,
         }
+    }
+}
+
+/// Parse an `interactive:batch` mix like `1:4` (both non-negative, not
+/// both zero).
+pub fn parse_mix(s: &str) -> Result<(u32, u32)> {
+    let (a, b) = s.split_once(':').context("mix must look like `interactive:batch`, e.g. 1:4")?;
+    let a: u32 = a.trim().parse().with_context(|| format!("bad interactive share `{a}`"))?;
+    let b: u32 = b.trim().parse().with_context(|| format!("bad batch share `{b}`"))?;
+    ensure!(a + b > 0, "mix must have at least one positive share");
+    Ok((a, b))
+}
+
+/// The tier of request `i` under a mix: the first `a` of every `a + b`
+/// requests are interactive — deterministic in the request index alone.
+pub fn tier_of(mix: (u32, u32), i: usize) -> crate::engine::Tier {
+    let (a, b) = mix;
+    if a == 0 {
+        return crate::engine::Tier::Batch;
+    }
+    if b == 0 {
+        return crate::engine::Tier::Interactive;
+    }
+    if (i as u64) % u64::from(a + b) < u64::from(a) {
+        crate::engine::Tier::Interactive
+    } else {
+        crate::engine::Tier::Batch
     }
 }
 
@@ -92,6 +135,25 @@ pub struct LoadReport {
     pub ttft: LatencySummary,
     /// Gaps between consecutive `token` frames (streaming runs only).
     pub inter_token: LatencySummary,
+    /// Completion latency of interactive-tier requests only.
+    pub interactive_latency: LatencySummary,
+    /// Completion latency of batch-tier requests only.
+    pub batch_latency: LatencySummary,
+    /// Requests sent carrying a deadline.
+    pub deadline_total: usize,
+    /// Of those, completed without a server-side `deadline` eviction.
+    pub deadline_hits: usize,
+}
+
+impl LoadReport {
+    /// Deadline hit-rate in `[0, 1]`; `1.0` when no request carried one.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        if self.deadline_total == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.deadline_total as f64
+        }
+    }
 }
 
 impl LoadReport {
@@ -114,6 +176,18 @@ impl LoadReport {
         out.push_str(&line("latency", &self.latency));
         out.push_str(&line("ttft", &self.ttft));
         out.push_str(&line("inter_token", &self.inter_token));
+        if self.interactive_latency.n > 0 {
+            out.push_str(&line("interactive", &self.interactive_latency));
+            out.push_str(&line("batch", &self.batch_latency));
+        }
+        if self.deadline_total > 0 {
+            out.push_str(&format!(
+                "  deadline hit-rate {}/{} ({:.1}%)\n",
+                self.deadline_hits,
+                self.deadline_total,
+                100.0 * self.deadline_hit_rate()
+            ));
+        }
         out
     }
 
@@ -130,6 +204,11 @@ impl LoadReport {
             ("latency", lat_json(&self.latency)),
             ("ttft", lat_json(&self.ttft)),
             ("inter_token", lat_json(&self.inter_token)),
+            ("interactive_latency", lat_json(&self.interactive_latency)),
+            ("batch_latency", lat_json(&self.batch_latency)),
+            ("deadline_total", Json::Num(self.deadline_total as f64)),
+            ("deadline_hits", Json::Num(self.deadline_hits as f64)),
+            ("deadline_hit_rate", Json::Num(self.deadline_hit_rate())),
         ])
     }
 }
@@ -162,12 +241,17 @@ struct Partial {
     lat: Vec<f64>,
     ttft: Vec<f64>,
     itl: Vec<f64>,
+    lat_interactive: Vec<f64>,
+    lat_batch: Vec<f64>,
+    deadline_total: usize,
+    deadline_hits: usize,
 }
 
 /// What one request did, as observed on the wire.
 enum Outcome {
-    /// Completed: generated tokens, ttft, inter-token gaps.
-    Ok(usize, Option<f64>, Vec<f64>),
+    /// Completed: generated tokens, ttft, inter-token gaps, finish
+    /// reason (from the completion envelope / `finished` SSE frame).
+    Ok(usize, Option<f64>, Vec<f64>, String),
     Shed429,
     Error,
 }
@@ -181,11 +265,18 @@ fn drive(
     due: Instant,
 ) -> Result<Outcome> {
     let prompt = synth_prompt(cfg.seed, i, cfg.prompt_len, cfg.vocab);
-    let body = wire::obj(vec![
+    let mut entries = vec![
         ("prompt", Json::Arr(prompt.into_iter().map(|t| Json::Num(t as f64)).collect())),
         ("max_new", Json::Num(cfg.max_new as f64)),
         ("stream", Json::Bool(cfg.stream)),
-    ]);
+    ];
+    if tier_of(cfg.mix, i) == crate::engine::Tier::Interactive {
+        entries.push(("tier", Json::Str("interactive".to_string())));
+        if cfg.deadline_ms > 0.0 {
+            entries.push(("deadline_ms", Json::Num(cfg.deadline_ms)));
+        }
+    }
+    let body = wire::obj(entries);
     let resp = client.post_json("/v1/generate", &body)?;
     if resp.status == 429 {
         return Ok(Outcome::Shed429);
@@ -194,19 +285,23 @@ fn drive(
         return Ok(Outcome::Error);
     }
     if !resp.is_sse() {
-        let tokens = resp
-            .json()
-            .ok()
+        let envelope = resp.json().ok();
+        let tokens = envelope
+            .as_ref()
             .and_then(|j| j.get("tokens").ok().and_then(|t| t.as_arr().ok().map(|a| a.len())))
             .unwrap_or(0);
-        return Ok(Outcome::Ok(tokens, None, Vec::new()));
+        let reason = envelope
+            .as_ref()
+            .and_then(|j| j.get("reason").ok().and_then(|r| r.as_str().ok().map(String::from)))
+            .unwrap_or_default();
+        return Ok(Outcome::Ok(tokens, None, Vec::new(), reason));
     }
     // SSE: walk the frames, timing the token events
     let mut tokens = 0usize;
     let mut ttft: Option<f64> = None;
     let mut itl: Vec<f64> = Vec::new();
     let mut last_token: Option<Instant> = None;
-    let mut finished = false;
+    let mut finished: Option<String> = None;
     while let Some(frame) = client.next_sse_frame()? {
         match frame.event.as_str() {
             "token" => {
@@ -220,14 +315,20 @@ fn drive(
                 tokens += 1;
             }
             "finished" => {
-                finished = true;
+                let reason = Json::parse(&frame.data)
+                    .ok()
+                    .and_then(|j| {
+                        j.get("reason").ok().and_then(|r| r.as_str().ok().map(String::from))
+                    })
+                    .unwrap_or_default();
+                finished = Some(reason);
                 break;
             }
             _ => {}
         }
     }
-    ensure!(finished, "SSE stream ended without a finished event");
-    Ok(Outcome::Ok(tokens, ttft, itl))
+    let reason = finished.context("SSE stream ended without a finished event")?;
+    Ok(Outcome::Ok(tokens, ttft, itl, reason))
 }
 
 fn worker(
@@ -260,12 +361,25 @@ fn worker(
             }
         }
         part.sent += 1;
+        let tier = tier_of(cfg.mix, i);
+        let has_deadline = tier == crate::engine::Tier::Interactive && cfg.deadline_ms > 0.0;
+        if has_deadline {
+            part.deadline_total += 1;
+        }
         let outcome = drive(client.as_mut().expect("connected above"), cfg, i, due);
         match outcome {
-            Ok(Outcome::Ok(tokens, ttft, itl)) => {
+            Ok(Outcome::Ok(tokens, ttft, itl, reason)) => {
                 part.ok += 1;
                 part.tokens += tokens;
-                part.lat.push((Instant::now() - due).as_secs_f64());
+                let lat = (Instant::now() - due).as_secs_f64();
+                part.lat.push(lat);
+                match tier {
+                    crate::engine::Tier::Interactive => part.lat_interactive.push(lat),
+                    crate::engine::Tier::Batch => part.lat_batch.push(lat),
+                }
+                if has_deadline && reason != "deadline" {
+                    part.deadline_hits += 1;
+                }
                 if let Some(t) = ttft {
                     part.ttft.push(t);
                 }
@@ -317,6 +431,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         merged.lat.extend(p.lat);
         merged.ttft.extend(p.ttft);
         merged.itl.extend(p.itl);
+        merged.lat_interactive.extend(p.lat_interactive);
+        merged.lat_batch.extend(p.lat_batch);
+        merged.deadline_total += p.deadline_total;
+        merged.deadline_hits += p.deadline_hits;
     }
     Ok(LoadReport {
         target_rps: cfg.rps,
@@ -330,6 +448,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         latency: LatencySummary::from_unsorted(merged.lat),
         ttft: LatencySummary::from_unsorted(merged.ttft),
         inter_token: LatencySummary::from_unsorted(merged.itl),
+        interactive_latency: LatencySummary::from_unsorted(merged.lat_interactive),
+        batch_latency: LatencySummary::from_unsorted(merged.lat_batch),
+        deadline_total: merged.deadline_total,
+        deadline_hits: merged.deadline_hits,
     })
 }
 
@@ -363,17 +485,53 @@ mod tests {
             latency: LatencySummary::from_unsorted(vec![0.1, 0.2]),
             ttft: LatencySummary::from_unsorted(vec![0.05]),
             inter_token: LatencySummary::from_unsorted(vec![0.01, 0.02, 0.03]),
+            interactive_latency: LatencySummary::from_unsorted(vec![0.1]),
+            batch_latency: LatencySummary::from_unsorted(vec![0.2]),
+            deadline_total: 4,
+            deadline_hits: 3,
         };
         let j = r.to_json();
         assert_eq!(j.get("sent").unwrap().as_usize().unwrap(), 20);
         assert_eq!(j.get("shed_429").unwrap().as_usize().unwrap(), 1);
         let lat = j.get("latency").unwrap();
         assert_eq!(lat.get("n").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("deadline_hits").unwrap().as_usize().unwrap(), 3);
+        assert!((j.get("deadline_hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(j.get("interactive_latency").unwrap().get("n").unwrap().as_usize().unwrap(), 1);
         let text = r.format();
         assert!(text.contains("shed_429 1"));
         assert!(text.contains("ttft"));
+        assert!(text.contains("interactive"));
+        assert!(text.contains("deadline hit-rate 3/4"));
         // serialized form is deterministic (sorted keys)
         assert_eq!(j.to_string(), r.to_json().to_string());
+    }
+
+    #[test]
+    fn mix_parses_and_assigns_tiers_deterministically() {
+        use crate::engine::Tier;
+        assert_eq!(parse_mix("1:4").unwrap(), (1, 4));
+        assert_eq!(parse_mix(" 2 : 3 ").unwrap(), (2, 3));
+        assert_eq!(parse_mix("0:1").unwrap(), (0, 1));
+        for bad in ["", "1", "1:", ":2", "a:b", "0:0", "-1:2"] {
+            assert!(parse_mix(bad).is_err(), "`{bad}` should not parse");
+        }
+        // 1:4 — exactly the first of every 5 requests is interactive
+        let tiers: Vec<Tier> = (0..10).map(|i| tier_of((1, 4), i)).collect();
+        for (i, t) in tiers.iter().enumerate() {
+            let want = if i % 5 == 0 { Tier::Interactive } else { Tier::Batch };
+            assert_eq!(*t, want, "request {i}");
+        }
+        // degenerate mixes collapse to one tier
+        assert!((0..10).all(|i| tier_of((0, 1), i) == Tier::Batch));
+        assert!((0..10).all(|i| tier_of((3, 0), i) == Tier::Interactive));
+    }
+
+    #[test]
+    fn empty_report_has_a_perfect_hit_rate() {
+        let r = LoadReport::default();
+        assert_eq!(r.deadline_hit_rate(), 1.0, "no deadlines, nothing missed");
+        assert!(!r.format().contains("deadline hit-rate"));
     }
 
     #[test]

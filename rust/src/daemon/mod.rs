@@ -20,7 +20,12 @@
 //! Request/response envelopes map losslessly onto
 //! [`crate::engine::InferenceRequest`] / `FinishedRequest`; the exact
 //! schema (and the SSE frame sequence `admitted` → `prefilled` →
-//! `token`* → `finished`) is documented in [`wire`]. Streaming frames
+//! `token`* → `finished`) is documented in [`wire`]. Both envelopes
+//! accept the optional scheduling fields `tier` (`"interactive"` /
+//! `"batch"`, default batch — pre-PR-7 clients are unchanged), `tenant`
+//! (labels the per-tenant fairness-ledger row in the engine stats), and
+//! `deadline_ms` (relative; orders admission earliest-deadline-first and
+//! bounds execution); unknown keys are still rejected. Streaming frames
 //! mirror the engine's event stream, which is bitwise invariant to
 //! `--threads` — so SSE payloads diff clean across thread counts, which
 //! is exactly what `repro daemon --self-check` (and `scripts/verify.sh`)
@@ -29,8 +34,14 @@
 //! # Operational behavior
 //!
 //! - **Load shedding**: the engine's bounded admission queue is the
-//!   backpressure source of truth; a full queue surfaces as `429` with a
-//!   `Retry-After` header instead of unbounded buffering.
+//!   backpressure source of truth; a full queue surfaces as `429`
+//!   instead of unbounded buffering. Caps are denominated both in
+//!   request count and in *metered MACs* (the analytic per-request price
+//!   from [`crate::model::macs::CostModel`]), and the `Retry-After`
+//!   header is the meter's estimated drain time of the queued MAC
+//!   backlog (`queued_macs`, surfaced on `/healthz`) at the observed
+//!   execution rate — falling back to the configured constant before any
+//!   work has run.
 //! - **Cancellation**: a client disconnecting mid-SSE-stream cancels its
 //!   request at the next token boundary and frees the slot for the
 //!   queue.
@@ -57,5 +68,5 @@ pub mod server;
 pub mod wire;
 
 pub use self::http::{HttpClient, SseFrame};
-pub use self::loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use self::loadgen::{parse_mix, run_loadgen, LoadReport, LoadgenConfig};
 pub use self::server::{Daemon, DaemonConfig, DaemonControl, DaemonReport};

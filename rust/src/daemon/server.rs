@@ -20,7 +20,11 @@
 //!
 //! Load shedding is the engine's own bounded-queue backpressure
 //! surfaced over the wire: [`Session::try_submit`] handing the request
-//! back becomes `429` with `Retry-After`. Draining (via
+//! back — whether the cap it hit was request-count or metered-MAC
+//! denominated ([`EngineConfig::max_queued_macs`]) — becomes `429` with
+//! a `Retry-After` computed as the estimated drain time of the queued
+//! MAC backlog at the observed execution rate (the configured constant
+//! until any work has run). Draining (via
 //! [`DaemonControl::drain`] or `POST /admin/drain`) refuses new
 //! inference work with `503`, finishes everything admitted, then stops
 //! the whole daemon.
@@ -51,7 +55,9 @@ pub struct DaemonConfig {
     /// [`Daemon::addr`]).
     pub addr: String,
     pub engine: EngineConfig,
-    /// `Retry-After` seconds advertised on 429 responses.
+    /// Fallback `Retry-After` seconds advertised on 429 responses until
+    /// the engine has observed an execution rate; after that the header
+    /// carries the estimated drain time of the queued MAC backlog.
     pub retry_after_s: u32,
 }
 
@@ -111,6 +117,7 @@ struct SnapCell {
     scored_tokens: AtomicUsize,
     generated_tokens: AtomicUsize,
     macs: AtomicU64,
+    queued_macs: AtomicU64,
     cancelled: AtomicUsize,
     deadline_evictions: AtomicUsize,
     mid_run_admissions: AtomicUsize,
@@ -129,6 +136,7 @@ impl SnapCell {
         self.scored_tokens.store(s.scored_tokens, Ordering::SeqCst);
         self.generated_tokens.store(s.generated_tokens, Ordering::SeqCst);
         self.macs.store(s.macs as u64, Ordering::SeqCst);
+        self.queued_macs.store(s.queued_macs as u64, Ordering::SeqCst);
         self.cancelled.store(s.cancelled, Ordering::SeqCst);
         self.deadline_evictions.store(s.deadline_evictions, Ordering::SeqCst);
         self.mid_run_admissions.store(s.mid_run_admissions, Ordering::SeqCst);
@@ -147,6 +155,7 @@ impl SnapCell {
             scored_tokens: self.scored_tokens.load(Ordering::SeqCst),
             generated_tokens: self.generated_tokens.load(Ordering::SeqCst),
             macs: self.macs.load(Ordering::SeqCst) as u128,
+            queued_macs: self.queued_macs.load(Ordering::SeqCst) as u128,
             cancelled: self.cancelled.load(Ordering::SeqCst),
             deadline_evictions: self.deadline_evictions.load(Ordering::SeqCst),
             mid_run_admissions: self.mid_run_admissions.load(Ordering::SeqCst),
@@ -175,8 +184,25 @@ struct Shared {
     bad_requests: AtomicUsize,
     disconnect_cancels: AtomicUsize,
     sse_streams: AtomicUsize,
+    /// Observed execution rate (MACs per second, `f64` bits), written by
+    /// the engine thread once any work has run; `0` until then. Feeds
+    /// the drain-time `Retry-After` estimate.
+    macs_rate_bits: AtomicU64,
     retry_after_s: u32,
     vocab: usize,
+}
+
+/// `Retry-After` for a shed request: the estimated drain time of the
+/// queued MAC backlog at the observed execution rate, at least 1 s —
+/// the configured constant until the engine has executed anything.
+fn retry_after_secs(shared: &Shared) -> u64 {
+    let rate = f64::from_bits(shared.macs_rate_bits.load(Ordering::SeqCst));
+    if rate > 0.0 {
+        let backlog = shared.snap.queued_macs.load(Ordering::SeqCst) as f64;
+        (backlog / rate).ceil().max(1.0) as u64
+    } else {
+        shared.retry_after_s as u64
+    }
 }
 
 /// Wire-level accounting of one daemon run, alongside the engine's
@@ -276,6 +302,7 @@ impl<'m> Daemon<'m> {
             bad_requests: AtomicUsize::new(0),
             disconnect_cancels: AtomicUsize::new(0),
             sse_streams: AtomicUsize::new(0),
+            macs_rate_bits: AtomicU64::new(0),
             retry_after_s: config.retry_after_s,
             vocab: model.config().vocab,
         });
@@ -494,7 +521,13 @@ fn engine_loop(
         }
         lp.route_events(shared);
         lp.deliver_finished();
-        shared.snap.store(&lp.session.snapshot());
+        let snap = lp.session.snapshot();
+        let elapsed = lp.session.elapsed_s();
+        if elapsed > 0.0 && snap.macs > 0 {
+            let rate = (snap.macs as f64) / elapsed;
+            shared.macs_rate_bits.store(rate.to_bits(), Ordering::SeqCst);
+        }
+        shared.snap.store(&snap);
         if (lp.drain || senders_gone) && !lp.session.has_work() {
             break;
         }
@@ -602,6 +635,7 @@ fn health_json(shared: &Shared) -> Json {
         ("scored_tokens", n(s.scored_tokens)),
         ("generated_tokens", n(s.generated_tokens)),
         ("macs", Json::Num(s.macs as f64)),
+        ("queued_macs", Json::Num(s.queued_macs as f64)),
         ("cancelled", n(s.cancelled)),
         ("deadline_evictions", n(s.deadline_evictions)),
         ("mid_run_admissions", n(s.mid_run_admissions)),
@@ -662,7 +696,7 @@ fn handle_inference(
             shared.shed_429.fetch_add(1, Ordering::SeqCst);
             let body = wire::error_json(429, "admission queue full, retry later");
             let resp = Response::json(429, &body)
-                .with_header("Retry-After", &shared.retry_after_s.to_string());
+                .with_header("Retry-After", &retry_after_secs(shared).to_string());
             match resp.write(conn.stream_mut(), true) {
                 Ok(()) => Flow::KeepAlive,
                 Err(_) => Flow::Close,

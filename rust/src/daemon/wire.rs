@@ -5,13 +5,19 @@
 //! ## Request envelopes
 //!
 //! `POST /v1/generate` — `{"prompt": [int], "max_new"?: int,
-//! "deadline_ms"?: num, "stream"?: bool}` or `{"text": "…", …}` (the
-//! byte-level tokenizer encodes it, BOS-prefixed; requires the model
-//! vocab to cover the byte range). `POST /v1/score` — `{"tokens":
-//! [int], "logits"?: bool}` or `{"text": "…", …}`. Unknown keys are
-//! rejected — the envelope is typed, not free-form. Token ids are
-//! validated against the model vocab here, before the engine's own
-//! admissibility checks ([`crate::engine::EngineConfig::validate`]).
+//! "deadline_ms"?: num, "tier"?: "interactive"|"batch", "tenant"?: "…",
+//! "stream"?: bool}` or `{"text": "…", …}` (the byte-level tokenizer
+//! encodes it, BOS-prefixed; requires the model vocab to cover the byte
+//! range). `POST /v1/score` — `{"tokens": [int], "logits"?: bool,
+//! "deadline_ms"?, "tier"?, "tenant"?}` or `{"text": "…", …}`. The
+//! scheduling fields feed the engine's priced admission policy
+//! ([`crate::engine::Scheduler`]): `tier` defaults to `"batch"` (so
+//! pre-PR-7 clients are unchanged), `tenant` labels the fairness ledger
+//! row, and `deadline_ms` both orders admission (earliest first) and
+//! bounds execution. Unknown keys are rejected — the envelope is typed,
+//! not free-form. Token ids are validated against the model vocab here,
+//! before the engine's own admissibility checks
+//! ([`crate::engine::EngineConfig::validate`]).
 //!
 //! ## Response envelopes
 //!
@@ -34,7 +40,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::data::{Tokenizer, VOCAB_USED};
-use crate::engine::{Event, EventKind, FinishedRequest, InferenceRequest};
+use crate::engine::{Event, EventKind, FinishedRequest, InferenceRequest, Tier};
 use crate::util::json::Json;
 
 /// Build a JSON object from (key, value) pairs.
@@ -99,10 +105,35 @@ fn parse_prompt(v: &Json, ids_key: &str, vocab: usize) -> Result<Vec<i32>> {
     }
 }
 
+/// The scheduling fields shared by both envelopes: `deadline_ms`
+/// (relative, positive), `tier` (`"interactive"` / `"batch"`, default
+/// batch), `tenant` (fairness-ledger label, non-empty).
+fn apply_policy(v: &Json, mut req: InferenceRequest) -> Result<InferenceRequest> {
+    if let Some(ms) = v.opt("deadline_ms") {
+        let ms = ms.as_f64().map_err(|e| anyhow::anyhow!("`deadline_ms`: {e}"))?;
+        ensure!(ms > 0.0 && ms.is_finite(), "`deadline_ms` must be positive and finite");
+        req = req.with_deadline(ms / 1000.0);
+    }
+    if let Some(t) = v.opt("tier") {
+        let t = t.as_str().map_err(|e| anyhow::anyhow!("`tier`: {e}"))?;
+        req = req.with_tier(match t {
+            "interactive" => Tier::Interactive,
+            "batch" => Tier::Batch,
+            other => bail!("`tier` must be \"interactive\" or \"batch\", got \"{other}\""),
+        });
+    }
+    if let Some(t) = v.opt("tenant") {
+        let t = t.as_str().map_err(|e| anyhow::anyhow!("`tenant`: {e}"))?;
+        ensure!(!t.is_empty(), "`tenant` must be non-empty");
+        req = req.with_tenant(t);
+    }
+    Ok(req)
+}
+
 /// Parse a `POST /v1/generate` body.
 pub fn parse_generate(body: &[u8], vocab: usize) -> Result<WireRequest> {
     let v = parse_body(body)?;
-    check_keys(&v, &["prompt", "text", "max_new", "deadline_ms", "stream"])?;
+    check_keys(&v, &["prompt", "text", "max_new", "deadline_ms", "tier", "tenant", "stream"])?;
     let prompt = parse_prompt(&v, "prompt", vocab)?;
     let max_new = match v.opt("max_new") {
         Some(n) => {
@@ -117,26 +148,22 @@ pub fn parse_generate(body: &[u8], vocab: usize) -> Result<WireRequest> {
         Some(_) => bail!("`stream` must be a boolean"),
         None => false,
     };
-    let mut req = InferenceRequest::generate(0, prompt, max_new);
-    if let Some(ms) = v.opt("deadline_ms") {
-        let ms = ms.as_f64().map_err(|e| anyhow::anyhow!("`deadline_ms`: {e}"))?;
-        ensure!(ms > 0.0 && ms.is_finite(), "`deadline_ms` must be positive and finite");
-        req = req.with_deadline(ms / 1000.0);
-    }
+    let req = apply_policy(&v, InferenceRequest::generate(0, prompt, max_new))?;
     Ok(WireRequest { req, stream, want_logits: false })
 }
 
 /// Parse a `POST /v1/score` body.
 pub fn parse_score(body: &[u8], vocab: usize) -> Result<WireRequest> {
     let v = parse_body(body)?;
-    check_keys(&v, &["tokens", "text", "logits"])?;
+    check_keys(&v, &["tokens", "text", "logits", "deadline_ms", "tier", "tenant"])?;
     let tokens = parse_prompt(&v, "tokens", vocab)?;
     let want_logits = match v.opt("logits") {
         Some(Json::Bool(b)) => *b,
         Some(_) => bail!("`logits` must be a boolean"),
         None => false,
     };
-    Ok(WireRequest { req: InferenceRequest::score(0, tokens), stream: false, want_logits })
+    let req = apply_policy(&v, InferenceRequest::score(0, tokens))?;
+    Ok(WireRequest { req, stream: false, want_logits })
 }
 
 /// The non-streaming completion envelope.
@@ -232,6 +259,26 @@ mod tests {
     }
 
     #[test]
+    fn scheduling_fields_roundtrip_on_both_envelopes() {
+        let w = parse_generate(
+            br#"{"prompt": [1], "tier": "interactive", "tenant": "acme", "deadline_ms": 40}"#,
+            64,
+        )
+        .unwrap();
+        assert_eq!(w.req.tier, Tier::Interactive);
+        assert_eq!(w.req.tenant.as_deref(), Some("acme"));
+        assert_eq!(w.req.deadline_s, Some(0.04));
+        let w = parse_score(br#"{"tokens": [2], "tier": "batch", "deadline_ms": 500}"#, 64).unwrap();
+        assert_eq!(w.req.tier, Tier::Batch);
+        assert!(w.req.tenant.is_none());
+        assert_eq!(w.req.deadline_s, Some(0.5));
+        // omitted fields keep the pre-PR-7 defaults
+        let w = parse_generate(br#"{"prompt": [1]}"#, 64).unwrap();
+        assert_eq!(w.req.tier, Tier::Batch);
+        assert!(w.req.tenant.is_none() && w.req.deadline_s.is_none());
+    }
+
+    #[test]
     fn text_prompts_need_the_byte_vocab() {
         assert!(parse_generate(br#"{"text": "hi"}"#, 64).is_err(), "demo vocab is too small");
         let w = parse_generate(br#"{"text": "hi"}"#, VOCAB_USED).unwrap();
@@ -251,6 +298,9 @@ mod tests {
             br#"{"prompt": [1], "max_new": 0}"#,
             br#"{"prompt": [1], "stream": 1}"#,
             br#"{"prompt": [1], "deadline_ms": -5}"#,
+            br#"{"prompt": [1], "tier": "premium"}"#, // not a tier name
+            br#"{"prompt": [1], "tier": 3}"#,
+            br#"{"prompt": [1], "tenant": ""}"#,
         ] {
             assert!(parse_generate(body, 64).is_err(), "{}", String::from_utf8_lossy(body));
         }

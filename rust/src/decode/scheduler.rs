@@ -3,8 +3,10 @@
 //!
 //! The scheduling semantics are unchanged from the original
 //! implementation (they are the engine core's contract): requests wait in
-//! a FIFO, free KV slots admit the queue head, prompts prefill with a
-//! last-position LM head and sample their first token
+//! a priced admission queue that reduces exactly to a FIFO for this
+//! front door (no tiers, unlimited meter — deadlines, when declared,
+//! admit earliest-deadline-first), free KV slots admit the queue head,
+//! prompts prefill with a last-position LM head and sample their first token
 //! (time-to-first-token), and active sequences advance one token per
 //! *decode round* in admission order so no request starves. Sequences
 //! finishing (EOS, token budget — or now a [`Session::cancel`] or a
@@ -156,6 +158,11 @@ impl DecodeConfig {
             // the thread budget
             lane_parallelism: 0,
             max_cache_bytes: self.max_cache_bytes,
+            // unlimited meter: the batch front door keeps exact-FIFO
+            // admission unless a caller opts into tiers via the session
+            interactive_macs_per_round: 0,
+            batch_macs_per_round: 0,
+            max_queued_macs: 0,
         }
     }
 }

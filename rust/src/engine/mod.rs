@@ -11,17 +11,26 @@
 //!   per-request deadline. [`crate::serve::ServeRequest`] and
 //!   [`crate::decode::GenRequest`] convert into it losslessly.
 //! - [`EngineCore`] / [`Session`] — the event-driven lifecycle: `submit`
-//!   into a **bounded admission queue** (backpressure hands the request
-//!   back), `step` the deterministic scheduling loop (FIFO admission into
-//!   free slots, parallel prefill/score, one-token decode rounds on the
-//!   [`crate::exec::ExecPool`]), drain the per-request [`Event`] stream
-//!   (`Admitted` / `Prefilled{ttft}` / `Token{id, text}` /
-//!   `Finished{reason}`), and `cancel` mid-flight. Event order and
+//!   into a **bounded, priced admission queue** (backpressure hands the
+//!   request back; caps can be denominated in queued MACs as well as
+//!   request count), `step` the deterministic scheduling loop (admission
+//!   from the [`Scheduler`] in (deadline, tier, arrival) order under
+//!   per-tier MAC budgets, parallel prefill/score, one-token decode
+//!   rounds on the [`crate::exec::ExecPool`]), drain the per-request
+//!   [`Event`] stream (`Admitted` / `Prefilled{ttft}` / `Token{id, text}`
+//!   / `Finished{reason}`), and `cancel` mid-flight. Event order and
 //!   payloads are bitwise invariant to `--threads` and slot timing;
 //!   TTFT/inter-token stats derive from the event timestamps.
+//! - [`Scheduler`] — the admission policy behind `step`: every queued
+//!   [`InferenceRequest`] is priced analytically up-front
+//!   ([`crate::model::macs::CostModel`]), ordered earliest-deadline-first
+//!   (then [`Tier`], then arrival), and metered against per-tier MAC
+//!   token buckets. With one tier, no deadlines, and unlimited buckets —
+//!   the default — the policy reduces *exactly* to the old FIFO.
 //! - [`FinishReason`] — why a request retired: `Eos`, `MaxTokens`,
-//!   `Scored`, plus the mid-flight evictions `Cancelled` and `Deadline`
-//!   (both keep the partial stream and free the slot for the queue).
+//!   `Scored`, plus the mid-flight evictions `Cancelled`, `Deadline`, and
+//!   `Preempted` (all keep the partial stream and free the slot for the
+//!   queue).
 //! - [`CoreStats`] — the aggregate superset both adapters project into
 //!   [`crate::serve::ServeStats`] / [`crate::decode::DecodeStats`] via the
 //!   shared [`crate::util::RequestStats`] core.
@@ -37,15 +46,18 @@
 
 pub mod core;
 pub mod request;
+pub mod scheduler;
 
 use crate::model::ModelConfig;
 use crate::util::Rng;
 
-pub use self::core::{CoreStats, EngineConfig, EngineCore, EngineSnapshot, Session};
+pub use self::core::{CoreStats, EngineConfig, EngineCore, EngineSnapshot, Session, TenantUsage};
 pub(crate) use self::core::request_rng;
 pub use self::request::{
     Event, EventKind, FinishReason, FinishedRequest, InferenceRequest, RequestKind, StreamControl,
+    Tier,
 };
+pub use self::scheduler::Scheduler;
 
 /// The one synthetic-workload generator behind every front-end:
 /// `n` streams of `seq` seeded random in-vocab tokens. The serve

@@ -32,6 +32,43 @@ pub enum RequestKind {
     },
 }
 
+/// Scheduling tier of a request — which token bucket meters it and how it
+/// ranks against equal-deadline peers in the priced scheduler
+/// ([`crate::engine::Scheduler`]). The default is [`Tier::Batch`], so every
+/// caller that predates the scheduler is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// Latency-sensitive work: ranks ahead of Batch at equal deadline and
+    /// can trigger token-boundary preemption of over-budget batch lanes.
+    Interactive,
+    /// Throughput work (the default): metered first, preemptible when its
+    /// bucket runs dry while interactive work waits.
+    Batch,
+}
+
+impl Default for Tier {
+    fn default() -> Self {
+        Tier::Batch
+    }
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Batch => "batch",
+        }
+    }
+
+    /// Deterministic ordering rank: Interactive before Batch.
+    pub(crate) fn rank(self) -> u8 {
+        match self {
+            Tier::Interactive => 0,
+            Tier::Batch => 1,
+        }
+    }
+}
+
 /// One request submitted to the engine core.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
@@ -42,24 +79,56 @@ pub struct InferenceRequest {
     /// [`FinishReason::Deadline`], keeping whatever tokens it produced.
     /// Deadlines bind at token boundaries: an admitted request always
     /// completes its prefill, so even an already-expired request yields
-    /// deterministically exactly one token.
+    /// deterministically exactly one token. Deadlines also drive queue
+    /// *order*: the scheduler admits earliest-deadline-first.
     pub deadline_s: Option<f64>,
+    /// Scheduling tier ([`Tier::Batch`] unless set) — selects the token
+    /// bucket that meters this request's declared MAC cost.
+    pub tier: Tier,
+    /// Fairness-ledger key: admissions and declared MACs are tallied per
+    /// tenant in [`crate::engine::CoreStats::tenants`]. `None` bills the
+    /// anonymous ledger row `"-"`.
+    pub tenant: Option<String>,
 }
 
 impl InferenceRequest {
     /// A scoring (full-forward) request.
     pub fn score(id: usize, tokens: Vec<i32>) -> InferenceRequest {
-        InferenceRequest { id, kind: RequestKind::Score { tokens }, deadline_s: None }
+        InferenceRequest {
+            id,
+            kind: RequestKind::Score { tokens },
+            deadline_s: None,
+            tier: Tier::Batch,
+            tenant: None,
+        }
     }
 
     /// A generation request.
     pub fn generate(id: usize, prompt: Vec<i32>, max_new: Option<usize>) -> InferenceRequest {
-        InferenceRequest { id, kind: RequestKind::Generate { prompt, max_new }, deadline_s: None }
+        InferenceRequest {
+            id,
+            kind: RequestKind::Generate { prompt, max_new },
+            deadline_s: None,
+            tier: Tier::Batch,
+            tenant: None,
+        }
     }
 
     /// Attach a deadline (seconds from session start).
     pub fn with_deadline(mut self, deadline_s: f64) -> InferenceRequest {
         self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Set the scheduling tier (default [`Tier::Batch`]).
+    pub fn with_tier(mut self, tier: Tier) -> InferenceRequest {
+        self.tier = tier;
+        self
+    }
+
+    /// Set the tenant the fairness ledger bills this request to.
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> InferenceRequest {
+        self.tenant = Some(tenant.into());
         self
     }
 
@@ -84,6 +153,8 @@ impl From<GenRequest> for InferenceRequest {
             id: r.id,
             kind: RequestKind::Generate { prompt: r.prompt, max_new: r.max_new },
             deadline_s: r.deadline_s,
+            tier: Tier::Batch,
+            tenant: None,
         }
     }
 }
@@ -104,6 +175,10 @@ pub enum FinishReason {
     /// The request's deadline expired before it finished; tokens produced
     /// so far are kept and its slot was freed for the queue.
     Deadline,
+    /// The scheduler preempted an over-budget batch lane at a token
+    /// boundary to free its slot for waiting interactive work; tokens
+    /// produced so far are kept.
+    Preempted,
 }
 
 impl FinishReason {
@@ -114,6 +189,7 @@ impl FinishReason {
             FinishReason::Scored => "scored",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Deadline => "deadline",
+            FinishReason::Preempted => "preempted",
         }
     }
 }
@@ -135,7 +211,8 @@ pub struct Event {
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
     /// The request left the queue and took a slot; `seq` is the admission
-    /// order (FIFO: equals submission order).
+    /// order — the scheduler's (deadline, tier, arrival) pick order, which
+    /// reduces to submission order under a single tier with no deadlines.
     Admitted { seq: usize },
     /// Generation only: the prompt was prefilled and the first token
     /// sampled. `ttft_s` equals this event's timestamp — queue wait plus
@@ -214,12 +291,16 @@ mod tests {
         assert_eq!(r.prompt_len(), 3);
         assert!(matches!(r.kind, RequestKind::Score { .. }));
         assert!(r.deadline_s.is_none());
+        assert_eq!(r.tier, Tier::Batch);
+        assert!(r.tenant.is_none());
 
         let g = GenRequest { id: 7, prompt: vec![4, 5], max_new: Some(9), deadline_s: Some(0.5) };
         let r = InferenceRequest::from(g);
         assert_eq!(r.id, 7);
         assert_eq!(r.prompt_len(), 2);
         assert_eq!(r.deadline_s, Some(0.5));
+        assert_eq!(r.tier, Tier::Batch);
+        assert!(r.tenant.is_none());
         match r.kind {
             RequestKind::Generate { ref prompt, max_new } => {
                 assert_eq!(prompt, &vec![4, 5]);
@@ -237,14 +318,31 @@ mod tests {
             FinishReason::Scored,
             FinishReason::Cancelled,
             FinishReason::Deadline,
+            FinishReason::Preempted,
         ];
         let names: Vec<&str> = all.iter().map(|r| r.name()).collect();
-        assert_eq!(names, ["eos", "max-tokens", "scored", "cancelled", "deadline"]);
+        assert_eq!(
+            names,
+            ["eos", "max-tokens", "scored", "cancelled", "deadline", "preempted"]
+        );
     }
 
     #[test]
     fn deadline_builder_attaches() {
         let r = InferenceRequest::generate(0, vec![1], None).with_deadline(2.5);
         assert_eq!(r.deadline_s, Some(2.5));
+    }
+
+    #[test]
+    fn tier_and_tenant_builders_attach() {
+        let r = InferenceRequest::generate(0, vec![1], None)
+            .with_tier(Tier::Interactive)
+            .with_tenant("acme");
+        assert_eq!(r.tier, Tier::Interactive);
+        assert_eq!(r.tenant.as_deref(), Some("acme"));
+        assert_eq!(Tier::default(), Tier::Batch);
+        assert_eq!(Tier::Interactive.name(), "interactive");
+        assert_eq!(Tier::Batch.name(), "batch");
+        assert!(Tier::Interactive.rank() < Tier::Batch.rank());
     }
 }

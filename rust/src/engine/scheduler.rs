@@ -1,0 +1,319 @@
+//! The priced, tiered admission scheduler — weight-metered scheduling in
+//! the analytic-cost currency of [`crate::model::macs`].
+//!
+//! Every queued request carries a [`RequestCost`] declared *before* it
+//! runs (prefill + worst-case decode MACs, peak KV bytes — the paper's §2
+//! accounting applied per request). [`Scheduler`] replaces the engine
+//! core's FIFO `VecDeque` with:
+//!
+//! - **Earliest-deadline-first ordering**: the queue is kept sorted by
+//!   `(deadline, tier, arrival)` — deadline-less requests sort last
+//!   (+∞), [`Tier::Interactive`] ranks before [`Tier::Batch`] at equal
+//!   deadline, and arrival order breaks the remaining ties. A single
+//!   tier with no deadlines therefore reduces *exactly* to FIFO.
+//! - **Per-tier token buckets**: each tier holds a MAC budget refilled
+//!   once per scheduling round ([`Scheduler::begin_round`]); a request is
+//!   admissible only while its tier's bucket has credit, and admission
+//!   charges the declared cost (deficit-style: credit may go negative,
+//!   which throttles the tier for the following rounds instead of
+//!   rejecting work — deterministic and starvation-free). A refill of 0
+//!   means unlimited, the default, under which admission is unmetered
+//!   and order-identical to FIFO.
+//!
+//! Everything here is a pure function of (arrival order, declared cost,
+//! tier, deadline) — no wall clock — so scheduling decisions are bitwise
+//! invariant to `--threads` and to timing.
+
+use std::cmp::Ordering;
+
+use crate::model::macs::RequestCost;
+
+use super::request::{InferenceRequest, Tier};
+
+/// One MAC-denominated token bucket.
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    /// Credit added per scheduling round; 0 = unlimited (never metered).
+    refill: u128,
+    /// Remaining credit; negative = in deficit (tier throttled until the
+    /// round refills pay it back).
+    credit: i128,
+}
+
+impl Bucket {
+    fn new(refill: u128) -> Bucket {
+        let refill_i = i128::try_from(refill).unwrap_or(i128::MAX);
+        Bucket { refill, credit: refill_i }
+    }
+
+    fn admissible(&self) -> bool {
+        self.refill == 0 || self.credit > 0
+    }
+
+    fn charge(&mut self, macs: u128) {
+        if self.refill != 0 {
+            let macs_i = i128::try_from(macs).unwrap_or(i128::MAX);
+            self.credit = self.credit.saturating_sub(macs_i);
+        }
+    }
+
+    fn begin_round(&mut self) {
+        if self.refill != 0 {
+            let refill_i = i128::try_from(self.refill).unwrap_or(i128::MAX);
+            // deficit carry-over: credit climbs back by one refill per
+            // round, capped at one full bucket (no unbounded hoarding)
+            self.credit = self.credit.saturating_add(refill_i).min(refill_i);
+        }
+    }
+
+    fn over_budget(&self) -> bool {
+        self.refill != 0 && self.credit < 0
+    }
+}
+
+/// A queued request with its declared price and arrival stamp.
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Arrival order within this session (the FIFO tie-breaker).
+    seq: u64,
+    cost: RequestCost,
+    req: InferenceRequest,
+}
+
+impl Entry {
+    /// The deterministic scheduling key: `(deadline, tier, arrival)`.
+    fn key(&self) -> (f64, u8, u64) {
+        (self.req.deadline_s.unwrap_or(f64::INFINITY), self.req.tier.rank(), self.seq)
+    }
+
+    fn cmp_key(&self, other: &Entry) -> Ordering {
+        let (da, ta, sa) = self.key();
+        let (db, tb, sb) = other.key();
+        da.total_cmp(&db).then(ta.cmp(&tb)).then(sa.cmp(&sb))
+    }
+}
+
+/// The priced admission queue of one [`crate::engine::Session`].
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    /// Kept sorted ascending by [`Entry::key`] (EDF → tier → arrival).
+    queue: Vec<Entry>,
+    next_seq: u64,
+    /// Sum of `total_macs()` over every queued entry — the backlog the
+    /// daemon's `Retry-After` drain estimate is computed from.
+    queued_macs: u128,
+    interactive: Bucket,
+    batch: Bucket,
+}
+
+impl Scheduler {
+    /// `interactive_refill` / `batch_refill` are MACs credited to each
+    /// tier's bucket per scheduling round; 0 = unlimited (the default
+    /// config — exact FIFO).
+    pub fn new(interactive_refill: u128, batch_refill: u128) -> Scheduler {
+        Scheduler {
+            queue: Vec::new(),
+            next_seq: 0,
+            queued_macs: 0,
+            interactive: Bucket::new(interactive_refill),
+            batch: Bucket::new(batch_refill),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Declared-MAC backlog of the queue (prefill + worst-case decode of
+    /// every waiting request).
+    pub fn queued_macs(&self) -> u128 {
+        self.queued_macs
+    }
+
+    /// Enqueue a priced request at its deterministic position.
+    pub fn push(&mut self, req: InferenceRequest, cost: RequestCost) {
+        let entry = Entry { seq: self.next_seq, cost, req };
+        self.next_seq += 1;
+        self.queued_macs += cost.total_macs();
+        // stable: equal keys cannot occur (seq is unique), so this is a
+        // plain ordered insert
+        let pos = self.queue.partition_point(|e| e.cmp_key(&entry) == Ordering::Less);
+        self.queue.insert(pos, entry);
+    }
+
+    /// Start a scheduling round: refill both tier buckets.
+    pub fn begin_round(&mut self) {
+        self.interactive.begin_round();
+        self.batch.begin_round();
+    }
+
+    /// Pop the best admissible request — the first entry in key order
+    /// whose tier bucket has credit — charging its declared cost to the
+    /// bucket. `None` when the queue is empty or every queued tier is out
+    /// of credit this round.
+    pub fn pop_admissible(&mut self) -> Option<(InferenceRequest, RequestCost)> {
+        let pos = self.queue.iter().position(|e| self.bucket(e.req.tier).admissible())?;
+        let entry = self.queue.remove(pos);
+        self.queued_macs -= entry.cost.total_macs();
+        match entry.req.tier {
+            Tier::Interactive => self.interactive.charge(entry.cost.total_macs()),
+            Tier::Batch => self.batch.charge(entry.cost.total_macs()),
+        }
+        Some((entry.req, entry.cost))
+    }
+
+    /// Pop the best entry regardless of bucket credit (still charging its
+    /// tier) — the work-conserving escape hatch: an otherwise idle engine
+    /// never waits on a dry bucket, so metering can delay work but never
+    /// deadlock it.
+    pub fn pop_front_forced(&mut self) -> Option<(InferenceRequest, RequestCost)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let entry = self.queue.remove(0);
+        self.queued_macs -= entry.cost.total_macs();
+        match entry.req.tier {
+            Tier::Interactive => self.interactive.charge(entry.cost.total_macs()),
+            Tier::Batch => self.batch.charge(entry.cost.total_macs()),
+        }
+        Some((entry.req, entry.cost))
+    }
+
+    /// Remove a queued request by id (cancellation), handing it back.
+    pub fn remove(&mut self, id: usize) -> Option<InferenceRequest> {
+        let pos = self.queue.iter().position(|e| e.req.id == id)?;
+        let entry = self.queue.remove(pos);
+        self.queued_macs -= entry.cost.total_macs();
+        Some(entry.req)
+    }
+
+    /// Queued interactive requests that could be admitted this round
+    /// (0 while the interactive bucket is in deficit) — the preemption
+    /// trigger's demand side.
+    pub fn admissible_interactive(&self) -> usize {
+        if !self.interactive.admissible() {
+            return 0;
+        }
+        self.queue.iter().filter(|e| e.req.tier == Tier::Interactive).count()
+    }
+
+    /// Whether the batch tier has spent past its budget (credit < 0) —
+    /// the preemption trigger's supply side. Always false for an
+    /// unlimited bucket, so preemption cannot fire in the default config.
+    pub fn batch_over_budget(&self) -> bool {
+        self.batch.over_budget()
+    }
+
+    fn bucket(&self, tier: Tier) -> &Bucket {
+        match tier {
+            Tier::Interactive => &self.interactive,
+            Tier::Batch => &self.batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(macs: u128) -> RequestCost {
+        RequestCost { prefill_macs: macs, decode_macs: 0, kv_bytes: 0 }
+    }
+
+    fn gen(id: usize) -> InferenceRequest {
+        InferenceRequest::generate(id, vec![1, 2], None)
+    }
+
+    #[test]
+    fn single_tier_no_deadlines_is_exact_fifo() {
+        let mut s = Scheduler::new(0, 0);
+        for id in 0..16 {
+            s.push(gen(id), cost(100 + id as u128));
+        }
+        s.begin_round();
+        for want in 0..16 {
+            let (req, _) = s.pop_admissible().expect("unlimited bucket admits all");
+            assert_eq!(req.id, want, "default config must reduce to FIFO");
+        }
+        assert!(s.is_empty());
+        assert_eq!(s.queued_macs(), 0);
+    }
+
+    #[test]
+    fn ordering_is_deadline_then_tier_then_arrival() {
+        let mut s = Scheduler::new(0, 0);
+        s.push(gen(0), cost(1)); // batch, no deadline
+        s.push(gen(1).with_deadline(5.0), cost(1));
+        s.push(gen(2).with_tier(Tier::Interactive), cost(1)); // no deadline
+        s.push(gen(3).with_deadline(2.0), cost(1));
+        s.push(gen(4).with_deadline(5.0).with_tier(Tier::Interactive), cost(1));
+        s.begin_round();
+        let order: Vec<usize> = std::iter::from_fn(|| s.pop_admissible())
+            .map(|(r, _)| r.id)
+            .collect();
+        // deadline 2.0 first; at deadline 5.0 interactive (4) outranks
+        // batch (1); the deadline-less pair sorts at +inf where tier
+        // ranks interactive (2) before batch (0)
+        assert_eq!(order, [3, 4, 1, 2, 0]);
+    }
+
+    #[test]
+    fn buckets_meter_and_carry_deficit() {
+        // batch budget 100/round; interactive unlimited
+        let mut s = Scheduler::new(0, 100);
+        s.push(gen(0), cost(250)); // batch, over one round's budget
+        s.push(gen(1), cost(10));
+        s.push(gen(2).with_tier(Tier::Interactive), cost(1000));
+        s.begin_round();
+        // interactive is unmetered; batch admits 0 first (EDF arrival
+        // order among the admissible) and goes into deficit
+        let (a, _) = s.pop_admissible().unwrap();
+        assert_eq!(a.id, 2, "interactive sorts ahead at equal (none) deadline");
+        let (b, _) = s.pop_admissible().unwrap();
+        assert_eq!(b.id, 0);
+        assert!(s.batch_over_budget(), "250 against a 100 budget is a deficit");
+        assert!(s.pop_admissible().is_none(), "batch throttled, id 1 must wait");
+        assert_eq!(s.len(), 1);
+        // deficit -150; +100 → -50: still throttled
+        s.begin_round();
+        assert!(s.pop_admissible().is_none());
+        // -50 + 100 → 50: credit again
+        s.begin_round();
+        assert!(!s.batch_over_budget());
+        let (c, _) = s.pop_admissible().unwrap();
+        assert_eq!(c.id, 1, "deficit repaid after two refills");
+    }
+
+    #[test]
+    fn remove_and_backlog_accounting() {
+        let mut s = Scheduler::new(0, 0);
+        s.push(gen(0), cost(40));
+        s.push(gen(1), cost(2));
+        assert_eq!(s.queued_macs(), 42);
+        assert!(s.remove(7).is_none());
+        let r = s.remove(0).expect("queued id is removable");
+        assert_eq!(r.id, 0);
+        assert_eq!(s.queued_macs(), 2);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn admissible_interactive_respects_the_bucket() {
+        let mut s = Scheduler::new(50, 0);
+        s.push(gen(0).with_tier(Tier::Interactive), cost(200));
+        s.push(gen(1).with_tier(Tier::Interactive), cost(10));
+        s.push(gen(2), cost(1));
+        s.begin_round();
+        assert_eq!(s.admissible_interactive(), 2);
+        let (first, _) = s.pop_admissible().unwrap();
+        assert_eq!(first.id, 0);
+        // interactive now in deficit: its queued request no longer counts
+        assert_eq!(s.admissible_interactive(), 0);
+        let (next, _) = s.pop_admissible().unwrap();
+        assert_eq!(next.id, 2, "batch keeps flowing while interactive repays");
+    }
+}

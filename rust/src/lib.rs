@@ -18,15 +18,21 @@
 //!   `--threads` knob shared by the matmul kernels, the ROM pipeline,
 //!   the serve engine, and the decode scheduler
 //! - [`engine`] — the unified request lifecycle: one streaming inference
-//!   core ([`engine::EngineCore`] / [`engine::Session`]) with a bounded
-//!   admission queue, FIFO slot scheduling, per-request event streams
+//!   core ([`engine::EngineCore`] / [`engine::Session`]) with a priced,
+//!   bounded admission queue ([`engine::Scheduler`]: per-tier MAC token
+//!   buckets, earliest-deadline-first ordering, batch preemption at
+//!   token boundaries, per-tenant fairness ledger — reducing exactly to
+//!   FIFO for single-tier/no-deadline/unlimited-meter configs),
+//!   per-request event streams
 //!   (`Admitted`/`Prefilled`/`Token`/`Finished`), cancellation and
 //!   deadline eviction — the substrate both [`serve`] and [`decode`]
 //!   front-ends adapt, with event order bitwise invariant to `--threads`
 //! - [`linalg`] — dense matrix substrate + symmetric eigensolvers
 //! - [`tensor`] — named tensors and the `.rtz` interchange container
 //! - [`runtime`] — PJRT executable loading/caching/marshalling
-//! - [`model`] — MiniLLaMA schema, parameter store, MACs accounting
+//! - [`model`] — MiniLLaMA schema, parameter store, MACs accounting and
+//!   the [`model::macs::CostModel`] request pricer (analytic
+//!   prefill/decode MACs + KV bytes, quoted before a request runs)
 //! - [`data`] — synthetic world, corpus, SynthSense tasks, tokenizer
 //! - [`rom`] — the paper's engine: layerwise ROM decomposition
 //! - [`prune`] — structured-pruning engine (channels + heads, ± masks)
@@ -49,9 +55,12 @@
 //! - [`daemon`] — HTTP/1.1 + SSE transport front-end: a dependency-free
 //!   `std::net` server binding the [`engine`] session API to the wire
 //!   (`/v1/generate`, `/v1/score`, health/readiness, admin drain) with
-//!   bounded-queue load shedding (`429` + `Retry-After`), mid-stream
-//!   disconnect cancellation, and graceful drain — plus the open-loop
-//!   `repro loadgen` wire-path load generator
+//!   scheduling fields (`tier`/`tenant`/`deadline_ms`) on both request
+//!   envelopes, load shedding priced in metered MACs (`429` with a
+//!   drain-time `Retry-After` estimate), mid-stream disconnect
+//!   cancellation, and graceful drain — plus the open-loop
+//!   `repro loadgen` wire-path load generator with per-tier latency
+//!   percentiles, deadline hit-rate, and `--mix interactive:batch`
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics

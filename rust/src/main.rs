@@ -115,6 +115,12 @@ const QUEUE_CAP: Flag =
 const CONNECTIONS: Flag = flag("connections", "N", "concurrent load-generator connections");
 const RPS: Flag = flag("rps", "R", "open-loop target arrival rate, requests per second");
 const DURATION: Flag = flag("duration", "S", "arrival window in seconds");
+const MIX: Flag = flag(
+    "mix",
+    "I:B",
+    "interactive:batch request ratio (default 0:1 = all batch; interactive requests carry \
+     tier + deadline_ms on the wire)",
+);
 const CKPT: Flag = flag("ckpt", "FILE", "checkpoint to load (.rtz)");
 const BUDGET: Flag = flag("budget", "B", "global parameter budget in (0, 1]");
 const ROWS: Flag = flag("rows", "N", "calibration rows");
@@ -182,7 +188,8 @@ static COMMANDS: &[Cmd] = &[
             THREADS,
             switch(
                 "self-check",
-                "build a mini artifact offline, serve it both ways, verify logits + MACs",
+                "build a mini artifact offline, serve it both ways, verify logits + MACs \
+                 + tiered scheduler vs FIFO",
             ),
             SEED,
         ],
@@ -222,7 +229,8 @@ static COMMANDS: &[Cmd] = &[
             CANCEL_AFTER,
             switch(
                 "self-check",
-                "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC accounting",
+                "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC \
+                 accounting + tiered scheduler vs FIFO",
             ),
             SEED,
         ],
@@ -278,6 +286,7 @@ static COMMANDS: &[Cmd] = &[
             DURATION,
             PROMPT_LEN,
             MAX_NEW,
+            MIX,
             switch("unary", "use unary completion envelopes instead of SSE streams"),
             flag("vocab", "N", "prompt token range (default: the artifacts manifest vocab)"),
             SEED,
@@ -295,6 +304,7 @@ static COMMANDS: &[Cmd] = &[
             DURATION,
             PROMPT_LEN,
             MAX_NEW,
+            MIX,
             SLOTS,
             QUEUE_CAP,
             THREADS,
@@ -734,7 +744,9 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// weight-space ROM at budget 0.5), round-trip it through `.rtz`, and
 /// serve it in both modes — asserting the factored path matches dense
 /// logits to ≤1e-4 and executes exactly the analytically-accounted (and
-/// strictly fewer) MACs. The CI smoke test behind `scripts/verify.sh`,
+/// strictly fewer) MACs, then exercising the priced, tiered admission
+/// scheduler ([`scheduler_self_check_phase`]) on an adversarial
+/// flood-plus-trickle trace. The CI smoke test behind `scripts/verify.sh`,
 /// which runs it at `--threads 1` and `--threads 4` and diffs the output
 /// (everything printed is deterministic, so any thread-count divergence
 /// fails the gate).
@@ -761,7 +773,7 @@ fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         );
     }
     println!(
-        "[1/3] .rtz factor round-trip: lossless ({} factored matrices)",
+        "[1/4] .rtz factor round-trip: lossless ({} factored matrices)",
         loaded.factors.len()
     );
 
@@ -786,7 +798,7 @@ fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         max_diff <= 1e-4,
         "dense vs factored logits diverge: max |Δ| = {max_diff:.3e}"
     );
-    println!("[2/3] dense vs factored logits: max |Δ| = {max_diff:.2e} (bound 1e-4)");
+    println!("[2/4] dense vs factored logits: max |Δ| = {max_diff:.2e} (bound 1e-4)");
 
     // 3. MAC accounting: factored strictly fewer, both exactly analytic
     let (dense_macs, fact_macs) = (outputs[0].1, outputs[1].1);
@@ -803,12 +815,185 @@ fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
     );
     anyhow::ensure!(fact_macs < dense_macs, "factored path must execute fewer MACs");
     println!(
-        "[3/3] MACs: factored {fact_macs} vs dense {dense_macs} ({:.2}x fewer), \
+        "[3/4] MACs: factored {fact_macs} vs dense {dense_macs} ({:.2}x fewer), \
          both equal the analytic accounting",
         dense_macs as f64 / fact_macs as f64
     );
+    // 4. the priced, tiered admission scheduler on an adversarial trace
+    let model = ServeModel::from_artifact(&loaded, ExecMode::Factored)?;
+    scheduler_self_check_phase(&model, &loaded.accounting, seed, exec)?;
+
     std::fs::remove_dir_all(&dir).ok();
     println!("serve self-check: OK");
+    Ok(())
+}
+
+/// The shared `[4/4]` phase of `repro serve --self-check` and
+/// `repro generate --self-check`: the priced, tiered admission scheduler
+/// under an adversarial trace — an up-front batch flood plus an
+/// interactive trickle contending for one slot. Everything is measured
+/// in scheduling rounds, never wall clock, so the printed line is
+/// bitwise identical across `--threads` (diffed by `scripts/verify.sh`).
+///
+/// Asserts:
+/// - no tier starves: every request in both runs finishes, and
+///   interactive queue waits stay within the round budget;
+/// - deadline hit-rate (admission within the round budget) strictly
+///   beats the identical trace replayed FIFO (tiers/deadlines stripped);
+/// - the admission meter and per-tenant ledger equal the analytic
+///   [`macs::decode_report`] sums;
+/// - the stripped single-tier / no-deadline / unlimited-meter config
+///   reduces exactly to FIFO admission order.
+fn scheduler_self_check_phase(
+    model: &ServeModel,
+    acc: &CompressionAccounting,
+    seed: u64,
+    exec: ExecConfig,
+) -> Result<()> {
+    use llm_rom::engine::{EventKind, TenantUsage, Tier};
+
+    const BATCH_N: usize = 8;
+    const INTERACTIVE_N: usize = 3;
+    const PROMPT: usize = 6;
+    const MAX_NEW: usize = 4;
+    /// An interactive request is a deadline hit when admitted within
+    /// this many scheduling rounds of its submission.
+    const ROUND_BUDGET: usize = 10;
+
+    let cfg = model.config().clone();
+    let ecfg = EngineConfig {
+        slots: 1,
+        queue_cap: BATCH_N + INTERACTIVE_N,
+        max_new: MAX_NEW,
+        capacity: PROMPT + MAX_NEW,
+        sampling: Sampling::Greedy,
+        seed,
+        eos: None,
+        exec,
+        ..EngineConfig::default()
+    };
+    let total = BATCH_N + INTERACTIVE_N;
+    let prompts = engine::synth_token_streams(&cfg, total, PROMPT, seed ^ 0x5C4D);
+
+    // One run of the trace: the batch flood queues before the first
+    // round; interactive request `k` arrives before round `1 + 2k`.
+    // `tiered: false` strips tiers, tenants, and deadlines — the exact
+    // FIFO-reduction config.
+    type Trace = (BTreeMap<usize, usize>, Vec<usize>, llm_rom::engine::CoreStats);
+    let run_trace = |tiered: bool| -> Result<Trace> {
+        let mut session = EngineCore::new(model, ecfg).session();
+        let mut submit_round: BTreeMap<usize, usize> = BTreeMap::new();
+        for id in 0..BATCH_N {
+            let mut req = InferenceRequest::generate(id, prompts[id].clone(), None);
+            if tiered {
+                req = req.with_tenant("flood");
+            }
+            anyhow::ensure!(session.try_submit(req)?.is_none(), "flood request {id} bounced");
+            submit_round.insert(id, 0);
+        }
+        let mut admit_round: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut admit_order: Vec<usize> = Vec::new();
+        let mut round = 0usize;
+        let mut next_interactive = 0usize;
+        loop {
+            while next_interactive < INTERACTIVE_N
+                && (round >= 1 + 2 * next_interactive || !session.has_work())
+            {
+                let id = BATCH_N + next_interactive;
+                let mut req = InferenceRequest::generate(id, prompts[id].clone(), None);
+                if tiered {
+                    // far-future deadlines: they order admission (EDF)
+                    // but can never expire mid-run
+                    req = req
+                        .with_tier(Tier::Interactive)
+                        .with_tenant("trickle")
+                        .with_deadline(1e6 + id as f64);
+                }
+                anyhow::ensure!(
+                    session.try_submit(req)?.is_none(),
+                    "interactive request {id} bounced"
+                );
+                submit_round.insert(id, round);
+                next_interactive += 1;
+            }
+            if !session.has_work() {
+                break;
+            }
+            session.step()?;
+            round += 1;
+            for ev in session.take_events() {
+                if matches!(ev.kind, EventKind::Admitted { .. }) {
+                    admit_round.insert(ev.id, round);
+                    admit_order.push(ev.id);
+                }
+            }
+        }
+        let (_finished, stats) = session.finish();
+        let waits: BTreeMap<usize, usize> = admit_round
+            .iter()
+            .map(|(id, &r)| (*id, r - submit_round[id]))
+            .collect();
+        Ok((waits, admit_order, stats))
+    };
+
+    let (waits, _order, stats) = run_trace(true)?;
+    let (fifo_waits, fifo_order, fifo_stats) = run_trace(false)?;
+
+    // stripped config reduces exactly to FIFO: admission == arrival
+    anyhow::ensure!(
+        fifo_order == (0..total).collect::<Vec<_>>(),
+        "single-tier / no-deadline / unlimited-meter run must reduce to FIFO admission"
+    );
+
+    // no tier starves: every request in both runs was admitted and ran
+    // to completion
+    anyhow::ensure!(
+        waits.len() == total && fifo_waits.len() == total,
+        "every request must be admitted under both policies"
+    );
+    anyhow::ensure!(
+        stats.requests == total && fifo_stats.requests == total,
+        "every request must finish under both policies"
+    );
+
+    // bounded interactive wait + deadline hit-rate strictly beating FIFO
+    let int_ids = BATCH_N..total;
+    let max_wait = |w: &BTreeMap<usize, usize>| int_ids.clone().map(|id| w[&id]).max().unwrap_or(0);
+    let hits =
+        |w: &BTreeMap<usize, usize>| int_ids.clone().filter(|id| w[id] <= ROUND_BUDGET).count();
+    let (int_wait, fifo_int_wait) = (max_wait(&waits), max_wait(&fifo_waits));
+    let (tiered_hits, fifo_hits) = (hits(&waits), hits(&fifo_waits));
+    anyhow::ensure!(
+        int_wait <= ROUND_BUDGET,
+        "interactive tier starved: waited {int_wait} rounds (budget {ROUND_BUDGET})"
+    );
+    anyhow::ensure!(
+        tiered_hits > fifo_hits,
+        "tiered deadline hit-rate ({tiered_hits}/{INTERACTIVE_N}) must strictly beat FIFO \
+         ({fifo_hits}/{INTERACTIVE_N}) on the same trace"
+    );
+
+    // admission meter and tenant ledger == analytic decode_report sums
+    let per_req = macs::decode_report(&cfg, acc, PROMPT, MAX_NEW).cached_macs();
+    let expected = per_req * total as u128;
+    anyhow::ensure!(
+        stats.admitted_macs == expected && fifo_stats.admitted_macs == expected,
+        "admitted-MAC meter {} != analytic decode_report sum {expected}",
+        stats.admitted_macs
+    );
+    let row = |n: usize| TenantUsage { requests: n, declared_macs: per_req * n as u128 };
+    anyhow::ensure!(
+        stats.tenants.get("flood") == Some(&row(BATCH_N))
+            && stats.tenants.get("trickle") == Some(&row(INTERACTIVE_N)),
+        "per-tenant fairness ledger != analytic per-tenant sums"
+    );
+
+    println!(
+        "[4/4] scheduler: interactive admitted within {int_wait} rounds under an \
+         {BATCH_N}-deep batch flood (FIFO: {fifo_int_wait}); deadline hit-rate \
+         {tiered_hits}/{INTERACTIVE_N} vs FIFO {fifo_hits}/{INTERACTIVE_N}; admitted meter \
+         {expected} MACs == analytic decode_report sum; stripped config reduces to FIFO"
+    );
     Ok(())
 }
 
@@ -1095,7 +1280,9 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
 ///    continuous batching (more requests than slots, mid-run admission);
 /// 3. executed MACs equal `macs::decode_report`'s analytic accounting per
 ///    request, and factored-KV executes strictly fewer MACs than
-///    dense-recompute.
+///    dense-recompute;
+/// 4. the priced, tiered admission scheduler beats FIFO on an adversarial
+///    flood-plus-trickle trace ([`scheduler_self_check_phase`]).
 ///
 /// Run by `scripts/verify.sh` next to `repro serve --self-check`, at
 /// `--threads 1` and `--threads 4` with an output diff (everything printed
@@ -1132,7 +1319,7 @@ fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         let inc = incremental(model)?;
         let d = max_diff(&inc, reference);
         anyhow::ensure!(d <= 1e-4, "{label}: max |Δlogits| = {d:.3e} > 1e-4");
-        println!("[1/3] {label}: max |Δlogits| = {d:.2e} (bound 1e-4)");
+        println!("[1/4] {label}: max |Δlogits| = {d:.2e} (bound 1e-4)");
     }
 
     // 2. + 3. greedy streams and MAC accounting under continuous batching
@@ -1182,7 +1369,7 @@ fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
             "{label}: 6 requests through 2 slots must admit mid-run"
         );
         println!(
-            "[2/3] {label}: {} greedy streams identical KV vs recompute \
+            "[2/4] {label}: {} greedy streams identical KV vs recompute \
              ({} mid-run admissions, peak {} active)",
             kv_results.len(),
             kv_stats.mid_run_admissions,
@@ -1200,10 +1387,14 @@ fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         "factored-KV must execute fewer MACs than dense-recompute"
     );
     println!(
-        "[3/3] MACs: factored-KV {fact_cached} vs dense-recompute {dense_recompute} \
+        "[3/4] MACs: factored-KV {fact_cached} vs dense-recompute {dense_recompute} \
          ({:.2}x fewer), all equal the analytic decode accounting",
         dense_recompute as f64 / fact_cached as f64
     );
+
+    // 4. the priced, tiered admission scheduler on an adversarial trace
+    scheduler_self_check_phase(&fact, &cm.accounting, seed, exec)?;
+
     println!("decode self-check: OK");
     Ok(())
 }
@@ -1469,14 +1660,18 @@ fn cmd_loadgen(artifacts: &str, args: &Args) -> Result<()> {
         stream: args.get("unary").is_none(),
         seed: args.parse_num("seed", 0)?,
         vocab: args.parse_num("vocab", cfg.vocab)?,
+        mix: daemon::parse_mix(args.get("mix").unwrap_or("0:1"))?,
+        deadline_ms: 250.0,
     };
     println!(
-        "loadgen -> http://{}: {} connections, {} rps for {}s ({})",
+        "loadgen -> http://{}: {} connections, {} rps for {}s ({}, mix {}:{})",
         lg.addr,
         lg.connections,
         lg.rps,
         lg.duration_s,
         if lg.stream { "SSE" } else { "unary" },
+        lg.mix.0,
+        lg.mix.1,
     );
     let report = daemon::run_loadgen(&lg)?;
     print!("{}", report.format());
@@ -1494,14 +1689,18 @@ fn cmd_bench_daemon(artifacts: &str, args: &Args) -> Result<()> {
     let max_new: usize = args.parse_num("max-new", 8)?;
     let slots: usize = args.parse_num("slots", 4)?;
     let queue_cap: usize = args.parse_num("queue-cap", 8)?;
+    let mix = daemon::parse_mix(args.get("mix").unwrap_or("0:1"))?;
     let exec = exec_from(args)?;
     println!(
         "bench-daemon {label}: {connections} connections at {rps} rps for {duration_s}s \
-         (prompt {prompt_len} + {max_new} new, {slots} slots, queue {queue_cap}, {} threads)",
-        exec.resolve()
+         (prompt {prompt_len} + {max_new} new, {slots} slots, queue {queue_cap}, {} threads, \
+         mix {}:{})",
+        exec.resolve(),
+        mix.0,
+        mix.1,
     );
     let bench = llm_rom::coordinator::daemon_bench(
-        &cm, connections, rps, duration_s, prompt_len, max_new, slots, queue_cap, exec, seed,
+        &cm, connections, rps, duration_s, prompt_len, max_new, slots, queue_cap, exec, seed, mix,
     )?;
     println!("{}", bench.format());
     write_bench_json(args, &bench.to_json())?;
@@ -1732,7 +1931,12 @@ fn self_check_phases(
     let mut shed = HttpClient::connect(addr)?;
     let resp = shed.post_json("/v1/generate", &gen_body(&prompts[8], 6, true))?;
     ensure!(resp.status == 429, "over-capacity request: status {}", resp.status);
-    ensure!(resp.header("retry-after") == Some("1"), "429 must advertise Retry-After");
+    // phase [1/4] already ran traffic, so the header carries the meter's
+    // drain-time estimate — wall-clock dependent, so assert presence only
+    ensure!(
+        matches!(resp.header("retry-after").map(|v| v.parse::<u64>()), Some(Ok(s)) if s >= 1),
+        "429 must advertise a positive integer Retry-After"
+    );
     ctl.resume();
     for (id, qc) in (6usize..=8).zip(queued.iter_mut()) {
         let frames = drain_sse(qc)?;
@@ -1740,7 +1944,7 @@ fn self_check_phases(
     }
     println!(
         "[2/4] load shedding: queue filled to 3/3 while paused, next request shed with \
-         429 Retry-After 1; resumed streams byte-identical"
+         429 + Retry-After; resumed streams byte-identical"
     );
 
     // [3/4] mid-stream disconnect cancels and frees the slot

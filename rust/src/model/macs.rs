@@ -195,6 +195,129 @@ pub fn decode_report(
     DecodeMacsReport { prompt, generated, prefill_macs, decode_macs, recompute_macs }
 }
 
+/// Declared cost of one inference request, priced *before* it runs — the
+/// currency of the engine's weight-metered admission (ROADMAP item 3:
+/// Substrate's benchmarked-weights design transplanted to inference).
+/// MAC totals are exact under the same conventions as [`decode_report`]:
+/// a Generate request's `total_macs()` equals
+/// `decode_report(cfg, acc, prompt, worst_new).cached_macs()` and a Score
+/// request's equals `report(cfg, acc, tokens).macs`, bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestCost {
+    /// MACs to consume the prompt (Score: the full forward).
+    pub prefill_macs: u128,
+    /// Worst-case decode MACs — every allowed token is generated, none of
+    /// them EOS (0 for Score).
+    pub decode_macs: u128,
+    /// Peak KV-cache footprint at full length: `(prompt + worst_new)`
+    /// positions × `n_layers` × K,V × `d_model` f32 (0 for Score).
+    pub kv_bytes: u128,
+}
+
+impl RequestCost {
+    /// The scheduler's metering unit: prefill plus worst-case decode.
+    pub fn total_macs(&self) -> u128 {
+        self.prefill_macs + self.decode_macs
+    }
+}
+
+/// Closed-form request pricer: four integers distilled from a model config
+/// and its per-token MAC unit, enough to price any request exactly.
+///
+/// Two construction paths produce the identical pricer: the engine builds
+/// it from the unit its serve model already counts
+/// (`ServeModel::macs_for(1)`), the self-checks from the compression
+/// accounting table ([`CostModel::from_accounting`]) — agreement between
+/// the two is exactly the "metered totals == analytic sums" bar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// MACs of one single-token forward: `report(cfg, acc, 1).macs`.
+    unit: u128,
+    /// LM-head share of the unit: `vocab · d_model`.
+    head: u128,
+    /// Per cached position attended: `2 · d_model · n_layers`.
+    attn: u128,
+    /// KV bytes one position occupies: `n_layers · 2 · d_model · 4`.
+    kv_token_bytes: u128,
+}
+
+/// Exact triangular number `0 + 1 + … + (n-1)` in u128.
+fn tri(n: u128) -> u128 {
+    n * n.saturating_sub(1) / 2
+}
+
+impl CostModel {
+    /// Build from a config and the model's measured single-token MAC unit
+    /// (must equal `report(cfg, acc, 1).macs` for the model's compression
+    /// state — `ServeModel::macs_for(1)` is asserted to).
+    pub fn new(cfg: &ModelConfig, unit_macs: u128) -> CostModel {
+        let d = cfg.d_model as u128;
+        let l = cfg.n_layers as u128;
+        CostModel {
+            unit: unit_macs,
+            head: (cfg.vocab as u128) * d,
+            attn: 2 * d * l,
+            kv_token_bytes: l * 2 * d * 4,
+        }
+    }
+
+    /// Build from an accounting table (the self-check / analytic path).
+    pub fn from_accounting(cfg: &ModelConfig, acc: &CompressionAccounting) -> CostModel {
+        CostModel::new(cfg, report(cfg, acc, 1).macs)
+    }
+
+    /// Price a scoring request over `tokens` prompt positions: the full
+    /// forward, `report(cfg, acc, tokens).macs` exactly; no KV footprint.
+    pub fn score(&self, tokens: usize) -> RequestCost {
+        let t = tokens as u128;
+        RequestCost {
+            prefill_macs: t * self.unit + self.attn * t * t.saturating_sub(1),
+            decode_macs: 0,
+            kv_bytes: 0,
+        }
+    }
+
+    /// Price a generation request at its worst case: prefill over `prompt`
+    /// positions plus `worst_new` generated tokens (the first rides on the
+    /// prefill logits), `decode_report(…).cached_macs()` exactly.
+    pub fn generate(&self, prompt: usize, worst_new: usize) -> RequestCost {
+        let p = prompt as u128;
+        let g = (worst_new as u128).max(1);
+        // per-position cached step minus its head, plus one head for the
+        // sampled last row — the decode_report prefill convention
+        let prefill_macs = if prompt == 0 {
+            0
+        } else {
+            p * (self.unit - self.head) + self.attn * tri(p) + self.head
+        };
+        // steps g-1 single-token decodes at positions prompt .. prompt+g-2
+        let decode_macs = (g - 1) * self.unit + self.attn * ((g - 1) * p + tri(g - 1));
+        RequestCost {
+            prefill_macs,
+            decode_macs,
+            kv_bytes: (p + g) * self.kv_token_bytes,
+        }
+    }
+
+    /// Price an [`crate::engine::InferenceRequest`] before it runs.
+    /// `default_max_new` is the engine's per-request cap fallback
+    /// (`EngineConfig::max_new`), so the worst case matches what the
+    /// engine would actually allow the request to spend.
+    pub fn price(
+        &self,
+        req: &crate::engine::InferenceRequest,
+        default_max_new: usize,
+    ) -> RequestCost {
+        use crate::engine::RequestKind;
+        match &req.kind {
+            RequestKind::Score { tokens } => self.score(tokens.len()),
+            RequestKind::Generate { prompt, max_new } => {
+                self.generate(prompt.len(), max_new.unwrap_or(default_max_new).max(1))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -336,6 +459,63 @@ mod tests {
         let d = decode_report(&cfg, &dense, 12, 6);
         assert!(f.cached_macs() < d.cached_macs());
         assert!(f.cached_macs() < d.recompute_macs, "factored-KV beats dense-recompute");
+    }
+
+    #[test]
+    fn request_cost_matches_analytic_reports_exactly() {
+        let cfg = ModelConfig::mini();
+        let mut acc = CompressionAccounting::dense();
+        for b in 0..cfg.n_layers {
+            for (name, o, i) in block_matrices(&cfg, b) {
+                let r = (0.5 * (o * i) as f64 / (o + i) as f64) as usize;
+                acc.set(&name, LayerCompression::LowRank { rank: r.max(1) });
+            }
+        }
+        for acc in [CompressionAccounting::dense(), acc] {
+            let cm = CostModel::from_accounting(&cfg, &acc);
+            // Score ≡ report(T).macs for every T
+            for t in [1usize, 2, 8, 64] {
+                assert_eq!(cm.score(t).prefill_macs, report(&cfg, &acc, t).macs, "score {t}");
+                assert_eq!(cm.score(t).total_macs(), report(&cfg, &acc, t).macs);
+            }
+            // Generate ≡ decode_report(P, G).cached_macs(), term by term
+            for (p, g) in [(1usize, 1usize), (8, 1), (16, 8), (5, 32), (12, 6)] {
+                let rep = decode_report(&cfg, &acc, p, g);
+                let cost = cm.generate(p, g);
+                assert_eq!(cost.prefill_macs, rep.prefill_macs, "prefill P={p} G={g}");
+                assert_eq!(cost.decode_macs, rep.decode_macs, "decode P={p} G={g}");
+                assert_eq!(cost.total_macs(), rep.cached_macs(), "total P={p} G={g}");
+            }
+            // both construction paths agree
+            assert_eq!(cm, CostModel::new(&cfg, report(&cfg, &acc, 1).macs));
+        }
+    }
+
+    #[test]
+    fn request_cost_prices_inference_requests() {
+        use crate::engine::InferenceRequest;
+        let cfg = ModelConfig::mini();
+        let acc = CompressionAccounting::dense();
+        let cm = CostModel::from_accounting(&cfg, &acc);
+        // Score request → the full-forward price, zero KV
+        let s = cm.price(&InferenceRequest::score(0, vec![1; 8]), 32);
+        assert_eq!(s, cm.score(8));
+        assert_eq!(s.kv_bytes, 0);
+        // Generate with an explicit cap prices that cap…
+        let g = cm.price(&InferenceRequest::generate(1, vec![1; 8], Some(4)), 32);
+        assert_eq!(g, cm.generate(8, 4));
+        // …without one, the engine default applies
+        let g = cm.price(&InferenceRequest::generate(2, vec![1; 8], None), 32);
+        assert_eq!(g, cm.generate(8, 32));
+        // KV footprint: (prompt + worst_new) positions × L × K,V × d × f32
+        let want = (8 + 32) as u128
+            * (cfg.n_layers as u128)
+            * 2
+            * (cfg.d_model as u128)
+            * 4;
+        assert_eq!(g.kv_bytes, want);
+        // worst_new clamps to ≥ 1 (a generate always yields one token)
+        assert_eq!(cm.generate(4, 0), cm.generate(4, 1));
     }
 
     #[test]

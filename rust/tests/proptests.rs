@@ -861,3 +861,152 @@ fn prop_cancellation_preserves_surviving_streams() {
         assert_eq!(stats.core.requests, n, "case {case}");
     }
 }
+
+/// Property: a batch flood never starves the interactive tier. For random
+/// flood sizes, slot counts, and generation budgets, interactive requests
+/// landing mid-flood are the very next admissions (in their own arrival
+/// order), their queue wait is bounded in scheduling rounds — independent
+/// of the flood size — and every request in both tiers still completes.
+#[test]
+fn prop_batch_flood_never_starves_interactive() {
+    use llm_rom::decode::Sampling;
+    use llm_rom::engine::{
+        synth_token_streams, EngineConfig, EngineCore, EventKind, InferenceRequest, Tier,
+    };
+    use llm_rom::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, 91).unwrap();
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+    for case in 0..8u64 {
+        let mut rng = Rng::new(case * 5087 + 59);
+        let n_batch = 4 + rng.below(8);
+        let n_int = 1 + rng.below(3);
+        let slots = 1 + rng.below(2);
+        let prompt_len = 3 + rng.below(4);
+        let max_new = 2 + rng.below(4);
+        let total = n_batch + n_int;
+        let ecfg = EngineConfig {
+            slots,
+            queue_cap: total,
+            capacity: prompt_len + max_new,
+            max_new,
+            sampling: Sampling::Greedy,
+            seed: case,
+            eos: None,
+            ..EngineConfig::default()
+        };
+        let prompts = synth_token_streams(&cfg, total, prompt_len, case * 23 + 9);
+        let mut session = EngineCore::new(&model, ecfg).session();
+        // the flood queues first and takes every slot
+        for id in 0..n_batch {
+            let req = InferenceRequest::generate(id, prompts[id].clone(), None);
+            assert!(session.try_submit(req).unwrap().is_none(), "case {case}: flood bounced");
+        }
+        let warm = 1 + rng.below(max_new);
+        let mut round = 0usize;
+        for _ in 0..warm {
+            session.step().unwrap();
+            round += 1;
+        }
+        session.take_events();
+        // ...then the interactive trickle lands mid-flood
+        let submit_round = round;
+        for k in 0..n_int {
+            let id = n_batch + k;
+            let req = InferenceRequest::generate(id, prompts[id].clone(), None)
+                .with_tier(Tier::Interactive);
+            assert!(session.try_submit(req).unwrap().is_none(), "case {case}: trickle bounced");
+        }
+        let mut admitted_after: Vec<(usize, usize)> = Vec::new(); // (id, round)
+        while session.has_work() {
+            session.step().unwrap();
+            round += 1;
+            for ev in session.take_events() {
+                if matches!(ev.kind, EventKind::Admitted { .. }) {
+                    admitted_after.push((ev.id, round));
+                }
+            }
+        }
+        // interactive requests are the very next admissions, in arrival
+        // order — the queued remainder of the flood never overtakes them
+        let next: Vec<usize> = admitted_after.iter().take(n_int).map(|(id, _)| *id).collect();
+        let want: Vec<usize> = (n_batch..total).collect();
+        assert_eq!(next, want, "case {case}: flood overtook the interactive tier");
+        // bounded wait, independent of the flood size: at worst every slot
+        // must drain one full generation, plus the interactive requests
+        // admitted ahead of this one
+        let bound = max_new * (n_int + 1);
+        for &(id, r) in admitted_after.iter().take(n_int) {
+            let wait = r - submit_round;
+            assert!(
+                wait <= bound,
+                "case {case}: interactive {id} waited {wait} rounds (bound {bound})"
+            );
+        }
+        // and nothing starves in either tier
+        let (_, stats) = session.finish();
+        assert_eq!(stats.requests, total, "case {case}: a request starved");
+        assert_eq!(stats.preemptions, 0, "case {case}: unlimited meter must never preempt");
+    }
+}
+
+/// Property: the FIFO-reduction bar. With a single tier, no deadlines, and
+/// an unlimited meter, the priced scheduler is bitwise FIFO — admission
+/// order equals submission order — and the whole outcome (admission seqs,
+/// token streams, MACs, finish reasons) is invariant to `--threads`,
+/// across random configs, slot counts, and workload shapes.
+#[test]
+fn prop_engine_single_tier_reduces_to_fifo_across_threads() {
+    use llm_rom::decode::Sampling;
+    use llm_rom::engine::{synth_generate_requests, EngineConfig, EngineCore};
+    use llm_rom::exec::ExecConfig;
+    use llm_rom::serve::{demo_artifact, ExecMode, ServeModel};
+    for case in 0..5u64 {
+        let mut rng = Rng::new(case * 8209 + 61);
+        let cfg = ModelConfig {
+            vocab: 40 + rng.below(30),
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            ..ModelConfig::mini()
+        };
+        let cm = demo_artifact(&cfg, 0.4 + rng.f64() * 0.4, case * 11 + 5).unwrap();
+        let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let prompt_len = 3 + rng.below(5);
+        let max_new = 2 + rng.below(5);
+        let slots = 1 + rng.below(3);
+        let n = 2 + rng.below(6);
+        let reqs = synth_generate_requests(&cfg, n, prompt_len, case * 41 + 3);
+        let run = |threads: usize| {
+            let ecfg = EngineConfig {
+                slots,
+                queue_cap: n,
+                capacity: prompt_len + max_new,
+                max_new,
+                sampling: Sampling::Greedy,
+                seed: case,
+                eos: None,
+                exec: ExecConfig::with_threads(threads),
+                ..EngineConfig::default()
+            };
+            let (finished, stats) = EngineCore::new(&model, ecfg).run(reqs.clone()).unwrap();
+            assert_eq!(stats.preemptions, 0, "case {case} t{threads}: FIFO config preempted");
+            finished
+                .into_iter()
+                .map(|f| (f.id, f.admitted, f.tokens, f.macs, f.reason.name()))
+                .collect::<Vec<_>>()
+        };
+        let base = run(1);
+        for (i, f) in base.iter().enumerate() {
+            assert_eq!(
+                f.1,
+                Some(i),
+                "case {case}: request {i} overtaken — single tier must reduce to FIFO"
+            );
+        }
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads), base, "case {case} t{threads}: scheduling moved");
+        }
+    }
+}

@@ -45,6 +45,73 @@ for check in "serve --self-check" "generate --self-check" "generate --stream --s
   fi
 done
 
+# Perf regression gate: for every BENCH_*.json committed at the repo
+# root, re-run the matching benchmark with the same flags `make bench`
+# uses and fail on a >15% throughput drop against the committed numbers
+# (BENCH_daemon.json compares wire tokens/sec = load tokens / wall_s;
+# the others compare their tokens_per_s samples position by position).
+# Skips cleanly for any bench file not committed yet.
+echo "== bench regression gate (>15% tokens/sec drop fails) =="
+bench_tmp=$(mktemp -d)
+trap 'rm -rf "$bench_tmp"' EXIT
+
+# Every numeric sample named `key` in `file`, one per line, in order.
+bench_metric() { # file key
+  grep -o "\"$2\":[0-9.eE+-]*" "$1" | cut -d: -f2
+}
+
+# Compare committed vs fresh samples of one key, position by position.
+bench_compare() { # name key committed fresh
+  paste -d' ' <(bench_metric "$3" "$2") <(bench_metric "$4" "$2") |
+    awk -v name="$1" -v key="$2" '
+      $1 > 0 && $2 < 0.85 * $1 {
+        printf "bench-%s %s dropped >15%%: committed %s, now %s\n", name, key, $1, $2
+        bad = 1
+      }
+      END { exit bad }'
+}
+
+check_bench() { # name keys... -- command...
+  local name=$1 committed fresh keys=() key
+  shift
+  while [ "$1" != "--" ]; do keys+=("$1"); shift; done
+  shift
+  committed="../BENCH_${name}.json"
+  if [ ! -f "$committed" ]; then
+    echo "-- BENCH_${name}.json not committed; skipping"
+    return 0
+  fi
+  fresh="$bench_tmp/${name}.json"
+  echo "-- re-running bench-${name} against committed BENCH_${name}.json"
+  "$@" --json "$fresh" >/dev/null
+  for key in "${keys[@]}"; do
+    if ! bench_compare "$name" "$key" "$committed" "$fresh"; then
+      echo "verify: FAILED — bench-${name} throughput regression" >&2
+      exit 1
+    fi
+  done
+  if [ "$name" = daemon ]; then
+    # wire-path tokens/sec from the load generator's client-side view
+    local old_tps new_tps
+    old_tps=$(awk -v t="$(bench_metric "$committed" tokens | head -1)" \
+                  -v w="$(bench_metric "$committed" wall_s | head -1)" \
+                  'BEGIN { if (w > 0) print t / w; else print 0 }')
+    new_tps=$(awk -v t="$(bench_metric "$fresh" tokens | head -1)" \
+                  -v w="$(bench_metric "$fresh" wall_s | head -1)" \
+                  'BEGIN { if (w > 0) print t / w; else print 0 }')
+    if ! awk -v a="$old_tps" -v b="$new_tps" 'BEGIN { exit !(a <= 0 || b >= 0.85 * a) }'; then
+      echo "verify: FAILED — bench-daemon tokens/sec dropped >15%: committed $old_tps, now $new_tps" >&2
+      exit 1
+    fi
+  fi
+}
+
+check_bench serve tokens_per_s -- ./target/release/repro bench-serve
+check_bench decode tokens_per_s -- ./target/release/repro bench-decode
+check_bench parallel serve_tokens_per_s decode_tokens_per_s -- \
+  ./target/release/repro bench-parallel --threads 4
+check_bench daemon achieved_rps -- ./target/release/repro bench-daemon --threads 4
+
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
   if ! cargo fmt --check; then
