@@ -25,6 +25,9 @@
 //!   the wire-path load generator over loopback, reporting achieved RPS
 //!   and TTFT / inter-token percentiles from both sides of the wire
 //!   (`repro bench-daemon`, [`DaemonBench::to_json`]).
+//! - **Obs table** — the flight-recorder transcript of an adversarial
+//!   tiered trace tabulated against the engine's analytic accounting,
+//!   asserting exact agreement along the way (`repro tables --table obs`).
 
 use std::collections::BTreeMap;
 
@@ -790,8 +793,10 @@ pub fn daemon_bench(
         exec,
         ..EngineConfig::default()
     };
-    let server =
-        Daemon::bind(&model, DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 1 })?;
+    let server = Daemon::bind(
+        &model,
+        DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 1, obs: true },
+    )?;
     let ctl = server.control();
     let lg = LoadgenConfig {
         addr: server.addr().to_string(),
@@ -833,6 +838,126 @@ fn json_obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
+/// Obs table: run the adversarial flood-plus-trickle trace once with both
+/// observability planes attached and tabulate the causal transcript
+/// against the engine's own accounting (`repro tables --table obs`). The
+/// table *is* an exactness check — any divergence between the replayed
+/// flight recorder, the metrics registry, and
+/// [`crate::engine::CoreStats`] errors instead of printing a row. Every
+/// value shown is round/MAC-denominated, so the output is deterministic
+/// across thread counts.
+pub fn obs_table(exp: &Experiment, base: &ParamStore, budget: f64) -> Result<String> {
+    use crate::engine::{EngineConfig, EngineCore, InferenceRequest, Tier};
+    use crate::obs::{self, MetricsRegistry, TraceEvent};
+    use std::sync::Arc;
+
+    const BATCH_N: usize = 6;
+    const INTERACTIVE_N: usize = 2;
+    const PROMPT: usize = 6;
+    const MAX_NEW: usize = 4;
+
+    let rom = exp.compress_method(base, "rom-feature", budget)?;
+    let model = ServeModel::from_artifact(&rom, ExecMode::Factored)?;
+    let cfg = model.config().clone();
+    let total = BATCH_N + INTERACTIVE_N;
+    let ecfg = EngineConfig {
+        slots: 1,
+        queue_cap: total,
+        max_new: MAX_NEW,
+        capacity: PROMPT + MAX_NEW,
+        seed: 0,
+        eos: None,
+        ..EngineConfig::default()
+    };
+    let prompts = crate::engine::synth_token_streams(&cfg, total, PROMPT, 0x0B5);
+    let mut session = EngineCore::new(&model, ecfg).session();
+    let registry = Arc::new(MetricsRegistry::new());
+    session.enable_tracing(obs::DEFAULT_TRACE_CAP);
+    session.attach_metrics(Arc::clone(&registry));
+    for (id, prompt) in prompts.iter().enumerate() {
+        let mut req = InferenceRequest::generate(id, prompt.clone(), None);
+        req = if id < BATCH_N {
+            req.with_tenant("flood")
+        } else {
+            req.with_tier(Tier::Interactive).with_tenant("trickle")
+        };
+        ensure!(session.try_submit(req)?.is_none(), "obs-table request {id} bounced");
+    }
+    while session.has_work() {
+        session.step()?;
+        session.take_events();
+    }
+    let trace = session.take_trace();
+    let (_finished, stats) = session.finish();
+
+    let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for ev in &trace {
+        let key = match ev {
+            TraceEvent::Enqueued { .. } => "enqueued",
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::Deferred { .. } => "deferred",
+            TraceEvent::Preempted { .. } => "preempted",
+            TraceEvent::PrefillDone { .. } => "prefill_done",
+            TraceEvent::DecodeRound { .. } => "decode_round",
+            TraceEvent::Finished { .. } => "finished",
+        };
+        *counts.entry(key).or_insert(0) += 1;
+    }
+    let at = |k: &str| counts.get(k).copied().unwrap_or(0);
+
+    let replay = obs::reconstruct(&trace);
+    ensure!(
+        replay.admitted == total
+            && replay.finished == total
+            && replay.finished == stats.requests
+            && replay.preemptions == stats.preemptions
+            && replay.decode_rounds == stats.decode_rounds
+            && replay.admitted_macs == stats.admitted_macs
+            && replay.executed_macs == stats.macs,
+        "obs table: flight-recorder replay diverges from CoreStats: {replay:?}"
+    );
+    ensure!(
+        registry.requests.get() == stats.requests as u64
+            && registry.admitted_macs.get() == obs::sat_u64(stats.admitted_macs)
+            && registry.executed_macs.get() == obs::sat_u64(stats.macs),
+        "obs table: metrics registry diverges from CoreStats"
+    );
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Obs table — flight recorder vs engine accounting (LLM-ROM@{:.0}%; {total} requests: \
+         {BATCH_N} batch flood + {INTERACTIVE_N} interactive through 1 slot)\n",
+        budget * 100.0,
+    ));
+    out.push_str(&format!(
+        "  causal plane : {} events — {} enqueued, {} admitted ({} deferrals, {} preemptions), \
+         {} prefills, {} decode rounds, {} finished\n",
+        trace.len(),
+        at("enqueued"),
+        at("admitted"),
+        at("deferred"),
+        at("preempted"),
+        at("prefill_done"),
+        at("decode_round"),
+        at("finished"),
+    ));
+    out.push_str(&format!(
+        "  replay       : admitted {} MACs, executed {} MACs — equal to CoreStats exactly\n",
+        replay.admitted_macs, replay.executed_macs,
+    ));
+    out.push_str(&format!(
+        "  timing plane : {} requests, {} generated tokens; tier batch/interactive {}/{}; \
+         tenant flood/trickle {}/{} — equal to the fairness ledger\n",
+        registry.requests.get(),
+        registry.generated_tokens.get(),
+        registry.tier_admissions.get("batch"),
+        registry.tier_admissions.get("interactive"),
+        registry.tenant_requests.get("flood"),
+        registry.tenant_requests.get("trickle"),
+    ));
+    Ok(out)
+}
+
 /// CLI entry: run the requested table(s) and print.
 ///
 /// `budget` applies to the ablation tables 2-4 (the paper runs them at its
@@ -850,13 +975,14 @@ pub fn run_tables(
         "2" => println!("{}", table2(exp, base, budget)?),
         "3" => println!("{}", table3(exp, base, budget)?),
         "4" => println!("{}", table4(exp, base, budget)?),
+        "obs" => println!("{}", obs_table(exp, base, budget)?),
         "all" => {
             println!("{}", table1(exp, base, ft_steps)?);
             println!("{}", table2(exp, base, budget)?);
             println!("{}", table3(exp, base, budget)?);
             println!("{}", table4(exp, base, budget)?);
         }
-        other => anyhow::bail!("unknown table `{other}` (1|2|3|4|all)"),
+        other => anyhow::bail!("unknown table `{other}` (1|2|3|4|obs|all)"),
     }
     Ok(())
 }

@@ -208,17 +208,30 @@ pub fn status_text(status: u16) -> &'static str {
     }
 }
 
-/// A buffered response: status, extra headers, JSON body.
+/// A buffered response: status, extra headers, body with its media type
+/// (JSON everywhere except the plain-text observability endpoints).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    pub content_type: &'static str,
 }
 
 impl Response {
     pub fn json(status: u16, body: &Json) -> Response {
-        Response { status, headers: Vec::new(), body: body.to_string().into_bytes() }
+        Response {
+            status,
+            headers: Vec::new(),
+            body: body.to_string().into_bytes(),
+            content_type: "application/json",
+        }
+    }
+
+    /// A non-JSON body — Prometheus exposition (`text/plain;
+    /// version=0.0.4`) and JSONL trace dumps (`application/x-ndjson`).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response { status, headers: Vec::new(), body: body.into_bytes(), content_type }
     }
 
     pub fn with_header(mut self, name: &str, value: &str) -> Response {
@@ -232,7 +245,7 @@ impl Response {
         out.extend_from_slice(
             format!("HTTP/1.1 {} {}\r\n", self.status, status_text(self.status)).as_bytes(),
         );
-        out.extend_from_slice(b"Content-Type: application/json\r\n");
+        out.extend_from_slice(format!("Content-Type: {}\r\n", self.content_type).as_bytes());
         out.extend_from_slice(format!("Content-Length: {}\r\n", self.body.len()).as_bytes());
         let conn = if keep_alive { "keep-alive" } else { "close" };
         out.extend_from_slice(format!("Connection: {conn}\r\n").as_bytes());

@@ -25,7 +25,15 @@
 //! splits completion latency per tier and scores the deadline hit-rate —
 //! the fraction of deadline-carrying requests that finished without a
 //! server-side `deadline` eviction.
+//!
+//! When the daemon serves `GET /metrics`, the run also scrapes it before
+//! and after and folds the *delta* into [`LoadReport::server`] — the
+//! server's own TTFT / inter-token / queue-wait histograms over exactly
+//! the scraped window, next to the client-side view (`make bench` lands
+//! both in `BENCH_daemon.json`). A daemon without the obs plane (or an
+//! older one without the endpoint) degrades to `server: None`.
 
+use std::collections::BTreeMap;
 use std::net::{SocketAddr, ToSocketAddrs};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
@@ -143,6 +151,29 @@ pub struct LoadReport {
     pub deadline_total: usize,
     /// Of those, completed without a server-side `deadline` eviction.
     pub deadline_hits: usize,
+    /// Server-side view over the run: the `/metrics` delta between a
+    /// scrape right before the first arrival and one after the last
+    /// completion. `None` when the daemon has no obs plane (or no
+    /// `/metrics` endpoint at all).
+    pub server: Option<ServerMetrics>,
+}
+
+/// The daemon's own accounting of a load-generation window, recovered
+/// from two `/metrics` scrapes ([`crate::obs::exposition_delta`] +
+/// [`crate::obs::histogram_from_samples`]). Histogram percentiles
+/// quantize to the registry's fixed bucket bounds; counters are exact.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServerMetrics {
+    /// Requests the engine retired during the window.
+    pub requests: u64,
+    pub generated_tokens: u64,
+    /// MACs executed during the window (u64-saturated counter).
+    pub executed_macs: u64,
+    /// Server-measured time to first token (queue wait + prefill).
+    pub ttft: LatencySummary,
+    pub inter_token: LatencySummary,
+    /// Submission → admission wait inside the engine queue.
+    pub queue_wait: LatencySummary,
 }
 
 impl LoadReport {
@@ -188,11 +219,21 @@ impl LoadReport {
                 100.0 * self.deadline_hit_rate()
             ));
         }
+        if let Some(srv) = &self.server {
+            out.push_str(&format!(
+                "  server side (/metrics delta): {} requests, {} generated tokens, \
+                 {} MACs executed\n",
+                srv.requests, srv.generated_tokens, srv.executed_macs
+            ));
+            out.push_str(&line("srv ttft", &srv.ttft));
+            out.push_str(&line("srv itl", &srv.inter_token));
+            out.push_str(&line("srv queue", &srv.queue_wait));
+        }
         out
     }
 
     pub fn to_json(&self) -> Json {
-        wire::obj(vec![
+        let mut entries = vec![
             ("target_rps", Json::Num(self.target_rps)),
             ("achieved_rps", Json::Num(self.achieved_rps)),
             ("sent", Json::Num(self.sent as f64)),
@@ -209,7 +250,21 @@ impl LoadReport {
             ("deadline_total", Json::Num(self.deadline_total as f64)),
             ("deadline_hits", Json::Num(self.deadline_hits as f64)),
             ("deadline_hit_rate", Json::Num(self.deadline_hit_rate())),
-        ])
+        ];
+        if let Some(srv) = &self.server {
+            entries.push((
+                "server_metrics",
+                wire::obj(vec![
+                    ("requests", Json::Num(srv.requests as f64)),
+                    ("generated_tokens", Json::Num(srv.generated_tokens as f64)),
+                    ("executed_macs", Json::Num(srv.executed_macs as f64)),
+                    ("ttft", lat_json(&srv.ttft)),
+                    ("inter_token", lat_json(&srv.inter_token)),
+                    ("queue_wait", lat_json(&srv.queue_wait)),
+                ]),
+            ));
+        }
+        wire::obj(entries)
     }
 }
 
@@ -399,6 +454,49 @@ fn worker(
     }
 }
 
+/// One `/metrics` scrape, parsed. `None` on any failure — a daemon
+/// without the endpoint (or with the obs plane detached: engine counters
+/// all zero still parse, so that case is caught by the zero-delta check
+/// in [`server_metrics`]) must not fail the load run.
+fn scrape_metrics(addr: SocketAddr) -> Option<BTreeMap<String, f64>> {
+    let mut client = HttpClient::connect(addr).ok()?;
+    let resp = client.get("/metrics").ok()?;
+    if resp.status != 200 {
+        return None;
+    }
+    let text = std::str::from_utf8(&resp.body).ok()?;
+    crate::obs::parse_exposition(text).ok()
+}
+
+/// Fold two scrapes into the server's view of the window. `None` when
+/// the delta carries no retired requests — an obs-less daemon exposes
+/// only wire counters, which would render as an all-zero (misleading)
+/// server block.
+fn server_metrics(
+    before: &BTreeMap<String, f64>,
+    after: &BTreeMap<String, f64>,
+) -> Option<ServerMetrics> {
+    use crate::obs::{exposition_delta, histogram_from_samples};
+    let delta = exposition_delta(after, before);
+    let counter = |key: &str| delta.get(key).copied().unwrap_or(0.0).max(0.0).round() as u64;
+    if counter("repro_requests_total") == 0 {
+        return None;
+    }
+    let hist = |name: &str| {
+        histogram_from_samples(&delta, name)
+            .map(|(bounds, counts, sum)| LatencySummary::from_histogram(&bounds, &counts, sum))
+            .unwrap_or_default()
+    };
+    Some(ServerMetrics {
+        requests: counter("repro_requests_total"),
+        generated_tokens: counter("repro_generated_tokens_total"),
+        executed_macs: counter("repro_executed_macs_total"),
+        ttft: hist("repro_ttft_seconds"),
+        inter_token: hist("repro_inter_token_seconds"),
+        queue_wait: hist("repro_queue_wait_seconds"),
+    })
+}
+
 /// Run the load generator against a daemon at `cfg.addr` and summarize
 /// what the wire saw.
 pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
@@ -413,6 +511,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         .with_context(|| format!("`{}` resolved to no address", cfg.addr))?;
     let total = (cfg.rps * cfg.duration_s).ceil().max(1.0) as usize;
     let next = AtomicUsize::new(0);
+    let before = scrape_metrics(addr);
     let t0 = Instant::now();
     let parts: Vec<Partial> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..cfg.connections)
@@ -421,6 +520,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         handles.into_iter().map(|h| h.join().expect("loadgen worker panicked")).collect()
     });
     let wall_s = t0.elapsed().as_secs_f64();
+    let server = match (&before, scrape_metrics(addr)) {
+        (Some(b), Some(a)) => server_metrics(b, &a),
+        _ => None,
+    };
     let mut merged = Partial::default();
     for p in parts {
         merged.sent += p.sent;
@@ -452,6 +555,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadReport> {
         batch_latency: LatencySummary::from_unsorted(merged.lat_batch),
         deadline_total: merged.deadline_total,
         deadline_hits: merged.deadline_hits,
+        server,
     })
 }
 
@@ -489,6 +593,14 @@ mod tests {
             batch_latency: LatencySummary::from_unsorted(vec![0.2]),
             deadline_total: 4,
             deadline_hits: 3,
+            server: Some(ServerMetrics {
+                requests: 19,
+                generated_tokens: 152,
+                executed_macs: 1_000_000,
+                ttft: LatencySummary::from_unsorted(vec![0.05]),
+                inter_token: LatencySummary::from_unsorted(vec![0.01]),
+                queue_wait: LatencySummary::from_unsorted(vec![0.001]),
+            }),
         };
         let j = r.to_json();
         assert_eq!(j.get("sent").unwrap().as_usize().unwrap(), 20);
@@ -498,13 +610,45 @@ mod tests {
         assert_eq!(j.get("deadline_hits").unwrap().as_usize().unwrap(), 3);
         assert!((j.get("deadline_hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
         assert_eq!(j.get("interactive_latency").unwrap().get("n").unwrap().as_usize().unwrap(), 1);
+        let srv = j.get("server_metrics").unwrap();
+        assert_eq!(srv.get("requests").unwrap().as_usize().unwrap(), 19);
+        assert_eq!(srv.get("ttft").unwrap().get("n").unwrap().as_usize().unwrap(), 1);
         let text = r.format();
         assert!(text.contains("shed_429 1"));
         assert!(text.contains("ttft"));
         assert!(text.contains("interactive"));
         assert!(text.contains("deadline hit-rate 3/4"));
+        assert!(text.contains("server side (/metrics delta)"));
         // serialized form is deterministic (sorted keys)
         assert_eq!(j.to_string(), r.to_json().to_string());
+        // without a scrape the block is absent, not zeroed
+        let bare = LoadReport::default();
+        assert!(bare.to_json().get("server_metrics").is_err());
+        assert!(!bare.format().contains("server side"));
+    }
+
+    #[test]
+    fn server_metrics_delta_recovers_counters_and_histograms() {
+        use crate::obs::{parse_exposition, MetricsRegistry};
+        let m = MetricsRegistry::new();
+        let before = parse_exposition(&m.render()).unwrap();
+        m.requests.add(3);
+        m.generated_tokens.add(24);
+        m.executed_macs.add(5_000);
+        m.ttft.observe(0.004);
+        m.ttft.observe(0.004);
+        m.queue_wait.observe(0.0001);
+        let after = parse_exposition(&m.render()).unwrap();
+        let srv = server_metrics(&before, &after).unwrap();
+        assert_eq!(srv.requests, 3);
+        assert_eq!(srv.generated_tokens, 24);
+        assert_eq!(srv.executed_macs, 5_000);
+        assert_eq!(srv.ttft.n, 2);
+        assert!(srv.ttft.p50 >= 0.004, "percentile quantizes to a bucket upper bound");
+        assert_eq!(srv.queue_wait.n, 1);
+        assert_eq!(srv.inter_token.n, 0);
+        // an idle window (obs-less daemon or no traffic) yields None
+        assert_eq!(server_metrics(&after, &after), None);
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! | `POST /v1/score`    | Full-forward scoring of a token sequence              |
 //! | `GET /healthz`      | Live [`crate::engine::EngineSnapshot`] + wire counters|
 //! | `GET /readyz`       | `200` accepting / `503` draining                      |
+//! | `GET /metrics`      | Timing plane: Prometheus text exposition              |
+//! | `GET /admin/trace`  | Causal plane: flight-recorder transcript as JSONL     |
 //! | `POST /admin/drain` | Stop accepting, finish in-flight, exit                |
 //!
 //! Request/response envelopes map losslessly onto
@@ -40,8 +42,9 @@
 //!   from [`crate::model::macs::CostModel`]), and the `Retry-After`
 //!   header is the meter's estimated drain time of the queued MAC
 //!   backlog (`queued_macs`, surfaced on `/healthz`) at the observed
-//!   execution rate — falling back to the configured constant before any
-//!   work has run.
+//!   execution rate. The rate comes from the metrics registry (or the
+//!   lifetime snapshot when metrics are off); the configured constant is
+//!   used only for a truly cold engine that has executed no work yet.
 //! - **Cancellation**: a client disconnecting mid-SSE-stream cancels its
 //!   request at the next token boundary and frees the slot for the
 //!   queue.
@@ -52,6 +55,29 @@
 //! - **Robustness**: malformed requests — bad JSON, unknown fields,
 //!   out-of-vocab tokens, oversized heads/bodies — are structured `4xx`
 //!   envelopes, never a panic and never a connection left hanging.
+//!
+//! # Observability
+//!
+//! The daemon serves both planes of [`crate::obs`] (attached to the
+//! engine session unless `--no-obs` / [`DaemonConfig::obs`]` = false`):
+//!
+//! - **`GET /metrics`** renders the timing plane as Prometheus text
+//!   exposition format (version 0.0.4, `Content-Type: text/plain;
+//!   version=0.0.4`): `repro_`-prefixed counter/gauge families mirroring
+//!   the engine's analytic accounting *exactly* (requests, tokens,
+//!   admitted/executed MACs — asserted equal to
+//!   [`crate::engine::CoreStats`] by the `[5/5]` self-check phase),
+//!   per-tier/per-tenant label families from the fairness ledger,
+//!   fixed-bound histograms (TTFT, inter-token, queue wait, per-phase
+//!   kernel time) with cumulative `le` buckets, and `repro_daemon_*`
+//!   wire-level counters. Families render in a fixed order, so scrapes
+//!   diff cleanly.
+//! - **`GET /admin/trace`** serves the causal plane: the engine flight
+//!   recorder's transcript as JSONL (`application/x-ndjson`, one
+//!   sorted-key object per event, ring-bounded). Events carry only
+//!   rounds, arrival seqs, tiers, and MACs — no wall clock — so the
+//!   export is byte-identical across `--threads`; `repro daemon
+//!   --trace-out FILE` writes the same lines to disk at drain.
 //!
 //! [`loadgen`] closes the loop client-side: `repro loadgen` drives a
 //! running daemon open-loop through the same [`http::HttpClient`] and

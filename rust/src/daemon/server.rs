@@ -29,12 +29,12 @@
 //! inference work with `503`, finishes everything admitted, then stops
 //! the whole daemon.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -42,6 +42,7 @@ use crate::engine::{
     CoreStats, EngineConfig, EngineCore, EngineSnapshot, FinishedRequest, InferenceRequest,
     Session,
 };
+use crate::obs::{MetricsRegistry, METRICS_NS, DEFAULT_TRACE_CAP};
 use crate::serve::ServeModel;
 use crate::util::json::Json;
 
@@ -59,6 +60,13 @@ pub struct DaemonConfig {
     /// the engine has observed an execution rate; after that the header
     /// carries the estimated drain time of the queued MAC backlog.
     pub retry_after_s: u32,
+    /// Attach the observability plane to the engine session: the timing
+    /// plane's metrics registry (served on `GET /metrics`) and the causal
+    /// plane's flight recorder (served on `GET /admin/trace`, exported by
+    /// `--trace-out`). Observability is strictly non-perturbing — output
+    /// is bitwise identical either way — so this exists to prove that,
+    /// not to save cost.
+    pub obs: bool,
 }
 
 impl Default for DaemonConfig {
@@ -67,6 +75,7 @@ impl Default for DaemonConfig {
             addr: "127.0.0.1:0".to_string(),
             engine: EngineConfig::default(),
             retry_after_s: 1,
+            obs: true,
         }
     }
 }
@@ -184,24 +193,41 @@ struct Shared {
     bad_requests: AtomicUsize,
     disconnect_cancels: AtomicUsize,
     sse_streams: AtomicUsize,
-    /// Observed execution rate (MACs per second, `f64` bits), written by
-    /// the engine thread once any work has run; `0` until then. Feeds
-    /// the drain-time `Retry-After` estimate.
-    macs_rate_bits: AtomicU64,
+    /// The timing plane. Always constructed (so `GET /metrics` always
+    /// answers); fed by the engine session only when [`DaemonConfig::obs`]
+    /// is on.
+    metrics: Arc<MetricsRegistry>,
+    /// Causal-plane JSONL lines drained from the engine session's flight
+    /// recorder, ring-bounded at [`DEFAULT_TRACE_CAP`]. Served by
+    /// `GET /admin/trace` and returned in [`DaemonReport::trace`].
+    trace: Mutex<VecDeque<String>>,
+    /// Daemon start time — the denominator of the snapshot-derived
+    /// execution-rate fallback in [`retry_after_secs`].
+    started: Instant,
+    obs: bool,
     retry_after_s: u32,
     vocab: usize,
 }
 
 /// `Retry-After` for a shed request: the estimated drain time of the
-/// queued MAC backlog at the observed execution rate, at least 1 s —
-/// the configured constant until the engine has executed anything.
+/// queued MAC backlog at the observed execution rate, at least 1 s. The
+/// rate comes from the metrics registry when the obs plane is attached,
+/// and otherwise from the published snapshot's executed-MAC total over
+/// the daemon's lifetime — so a snapshot that already carries
+/// finished-request stats yields a rate estimate, and the configured
+/// constant is used only for a truly cold engine (no work executed yet).
 fn retry_after_secs(shared: &Shared) -> u64 {
-    let rate = f64::from_bits(shared.macs_rate_bits.load(Ordering::SeqCst));
-    if rate > 0.0 {
-        let backlog = shared.snap.queued_macs.load(Ordering::SeqCst) as f64;
-        (backlog / rate).ceil().max(1.0) as u64
-    } else {
-        shared.retry_after_s as u64
+    let snap_rate = || {
+        let macs = shared.snap.macs.load(Ordering::SeqCst) as f64;
+        let elapsed = shared.started.elapsed().as_secs_f64();
+        (macs > 0.0 && elapsed > 0.0).then(|| macs / elapsed)
+    };
+    match shared.metrics.macs_rate().or_else(snap_rate) {
+        Some(rate) => {
+            let backlog = shared.snap.queued_macs.load(Ordering::SeqCst) as f64;
+            (backlog / rate).ceil().max(1.0) as u64
+        }
+        None => shared.retry_after_s.max(1) as u64,
     }
 }
 
@@ -222,6 +248,10 @@ pub struct DaemonReport {
     pub disconnect_cancels: usize,
     /// SSE streams opened.
     pub sse_streams: usize,
+    /// Causal-plane flight-recorder transcript (JSONL lines, oldest
+    /// first) — empty unless [`DaemonConfig::obs`] was on. What
+    /// `repro daemon --trace-out` writes to disk.
+    pub trace: Vec<String>,
 }
 
 /// A cloneable handle for steering a running daemon from another thread:
@@ -242,6 +272,19 @@ impl DaemonControl {
     /// Latest published [`EngineSnapshot`].
     pub fn snapshot(&self) -> EngineSnapshot {
         self.shared.snap.load()
+    }
+
+    /// The daemon's timing-plane registry (what `GET /metrics` renders).
+    /// Always present; its counters stay zero unless
+    /// [`DaemonConfig::obs`] attached it to the engine session.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Causal-plane JSONL lines buffered so far (what `GET /admin/trace`
+    /// serves), oldest first.
+    pub fn trace_lines(&self) -> Vec<String> {
+        self.shared.trace.lock().expect("trace buffer poisoned").iter().cloned().collect()
     }
 
     pub fn draining(&self) -> bool {
@@ -302,7 +345,10 @@ impl<'m> Daemon<'m> {
             bad_requests: AtomicUsize::new(0),
             disconnect_cancels: AtomicUsize::new(0),
             sse_streams: AtomicUsize::new(0),
-            macs_rate_bits: AtomicU64::new(0),
+            metrics: Arc::new(MetricsRegistry::new()),
+            trace: Mutex::new(VecDeque::new()),
+            started: Instant::now(),
+            obs: config.obs,
             retry_after_s: config.retry_after_s,
             vocab: model.config().vocab,
         });
@@ -371,6 +417,8 @@ impl<'m> Daemon<'m> {
                 None => out,
             }
         })?;
+        let trace: Vec<String> =
+            shared.trace.lock().expect("trace buffer poisoned").iter().cloned().collect();
         Ok(DaemonReport {
             stats,
             http_requests: shared.http_requests.load(Ordering::SeqCst),
@@ -379,6 +427,7 @@ impl<'m> Daemon<'m> {
             bad_requests: shared.bad_requests.load(Ordering::SeqCst),
             disconnect_cancels: shared.disconnect_cancels.load(Ordering::SeqCst),
             sse_streams: shared.sse_streams.load(Ordering::SeqCst),
+            trace,
         })
     }
 }
@@ -480,13 +529,34 @@ impl<'m> EngineLoop<'m> {
     }
 }
 
+/// Drain the session's flight recorder into the shared JSONL ring (a
+/// no-op when tracing is off — `take_trace` returns nothing).
+fn drain_trace(session: &mut Session<'_>, shared: &Shared) {
+    let events = session.take_trace();
+    if events.is_empty() {
+        return;
+    }
+    let mut buf = shared.trace.lock().expect("trace buffer poisoned");
+    for ev in events {
+        if buf.len() == DEFAULT_TRACE_CAP {
+            buf.pop_front();
+        }
+        buf.push_back(ev.to_json().to_string());
+    }
+}
+
 fn engine_loop(
     core: EngineCore<'_>,
     shared: &Shared,
     rx: Receiver<Cmd>,
 ) -> Result<CoreStats> {
+    let mut session = core.session();
+    if shared.obs {
+        session.attach_metrics(Arc::clone(&shared.metrics));
+        session.enable_tracing(DEFAULT_TRACE_CAP);
+    }
     let mut lp = EngineLoop {
-        session: core.session(),
+        session,
         streams: HashMap::new(),
         waiters: HashMap::new(),
         next_id: 0,
@@ -521,11 +591,12 @@ fn engine_loop(
         }
         lp.route_events(shared);
         lp.deliver_finished();
+        drain_trace(&mut lp.session, shared);
         let snap = lp.session.snapshot();
-        let elapsed = lp.session.elapsed_s();
-        if elapsed > 0.0 && snap.macs > 0 {
-            let rate = (snap.macs as f64) / elapsed;
-            shared.macs_rate_bits.store(rate.to_bits(), Ordering::SeqCst);
+        if shared.obs {
+            shared.metrics.queue_depth.set(snap.queue_depth as u64);
+            shared.metrics.active_lanes.set(snap.active as u64);
+            shared.metrics.queued_macs.set(snap.queued_macs.min(u64::MAX as u128) as u64);
         }
         shared.snap.store(&snap);
         if (lp.drain || senders_gone) && !lp.session.has_work() {
@@ -541,6 +612,7 @@ fn engine_loop(
         }
     }
     shared.draining.store(true, Ordering::SeqCst);
+    drain_trace(&mut lp.session, shared);
     let (_leftover, stats) = lp.session.finish();
     shared.snap.finished.store(stats.requests, Ordering::SeqCst);
     shared.stopped.store(true, Ordering::SeqCst);
@@ -610,13 +682,57 @@ fn dispatch(req: &HttpRequest, conn: &mut Conn, shared: &Shared, cmd_tx: &Sender
             let _ = cmd_tx.send(Cmd::Drain);
             respond(conn, 200, &wire::obj(vec![("draining", Json::Bool(true))]))
         }
+        ("GET", "/metrics") => {
+            let resp =
+                Response::text(200, "text/plain; version=0.0.4", metrics_exposition(shared));
+            match resp.write(conn.stream_mut(), true) {
+                Ok(()) => Flow::KeepAlive,
+                Err(_) => Flow::Close,
+            }
+        }
+        ("GET", "/admin/trace") => {
+            let mut body = String::new();
+            for line in shared.trace.lock().expect("trace buffer poisoned").iter() {
+                body.push_str(line);
+                body.push('\n');
+            }
+            let resp = Response::text(200, "application/x-ndjson", body);
+            match resp.write(conn.stream_mut(), true) {
+                Ok(()) => Flow::KeepAlive,
+                Err(_) => Flow::Close,
+            }
+        }
         ("POST", "/v1/generate") => handle_inference(req, conn, shared, cmd_tx, true),
         ("POST", "/v1/score") => handle_inference(req, conn, shared, cmd_tx, false),
-        (_, "/healthz" | "/readyz" | "/admin/drain" | "/v1/generate" | "/v1/score") => {
+        (
+            _,
+            "/healthz" | "/readyz" | "/admin/drain" | "/v1/generate" | "/v1/score" | "/metrics"
+            | "/admin/trace",
+        ) => {
             respond(conn, 405, &wire::error_json(405, &format!("{} not allowed here", req.method)))
         }
         (_, path) => respond(conn, 404, &wire::error_json(404, &format!("no endpoint `{path}`"))),
     }
+}
+
+/// The full `GET /metrics` body: the engine registry's exposition plus
+/// the daemon's wire-level counters under a `daemon_` infix. Same
+/// deterministic family order on every scrape.
+fn metrics_exposition(shared: &Shared) -> String {
+    let mut out = shared.metrics.render();
+    for (name, help, v) in [
+        ("daemon_http_requests_total", "HTTP requests answered (any status).", &shared.http_requests),
+        ("daemon_shed_429_total", "Inference submissions shed with 429.", &shared.shed_429),
+        ("daemon_shed_503_total", "Inference submissions refused with 503.", &shared.shed_503),
+        ("daemon_bad_requests_total", "Malformed requests answered with 4xx.", &shared.bad_requests),
+        ("daemon_disconnect_cancels_total", "Mid-stream disconnects that cancelled a request.", &shared.disconnect_cancels),
+        ("daemon_sse_streams_total", "SSE streams opened.", &shared.sse_streams),
+    ] {
+        out.push_str(&format!("# HELP {METRICS_NS}_{name} {help}\n"));
+        out.push_str(&format!("# TYPE {METRICS_NS}_{name} counter\n"));
+        out.push_str(&format!("{METRICS_NS}_{name} {}\n", v.load(Ordering::SeqCst)));
+    }
+    out
 }
 
 fn health_json(shared: &Shared) -> Json {

@@ -40,14 +40,16 @@
 //! ordered [`FinishedRequest`]s plus the aggregate [`CoreStats`].
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::data::Tokenizer;
 use crate::decode::{KvCache, KvCachePool, Sampling};
-use crate::exec::{ExecConfig, ExecPool};
+use crate::exec::{ExecConfig, ExecPool, SpanObserver};
 use crate::model::macs::{CostModel, RequestCost};
+use crate::obs::{sat_u64, FlightRecorder, MetricsRegistry, TraceEvent};
 use crate::serve::ServeModel;
 use crate::util::{LatencySummary, RequestStats, Rng};
 
@@ -400,6 +402,10 @@ impl<'m> EngineCore<'m> {
             preemptions: 0,
             admitted_macs: 0,
             tenant_ledger: BTreeMap::new(),
+            recorder: None,
+            metrics: None,
+            submit_t: BTreeMap::new(),
+            sched_rounds: 0,
         }
     }
 
@@ -513,6 +519,20 @@ pub struct Session<'m> {
     admitted_macs: u128,
     /// Per-tenant admissions + declared MACs.
     tenant_ledger: BTreeMap<String, TenantUsage>,
+    /// Causal-plane flight recorder ([`Session::enable_tracing`]) —
+    /// records deterministic scheduler/lifecycle events; never consulted
+    /// by any scheduling decision.
+    recorder: Option<FlightRecorder>,
+    /// Timing-plane sink ([`Session::attach_metrics`]) — counters mirror
+    /// the tally exactly; histograms carry wall clock. Never read back.
+    metrics: Option<Arc<MetricsRegistry>>,
+    /// Submission timestamps for the queue-wait histogram; only populated
+    /// while a metrics registry is attached.
+    submit_t: BTreeMap<usize, f64>,
+    /// Scheduling rounds started — the causal plane's round denomination
+    /// (counts every [`Session::step`] with work, unlike `rounds` which
+    /// counts decode rounds only).
+    sched_rounds: u64,
 }
 
 impl<'m> Session<'m> {
@@ -579,6 +599,35 @@ impl<'m> Session<'m> {
         std::mem::take(&mut self.finished)
     }
 
+    /// Arm the causal-plane flight recorder: from now on every
+    /// scheduler/lifecycle decision lands in a ring buffer of `capacity`
+    /// [`TraceEvent`]s (oldest evicted first). Purely observational — the
+    /// recorded run is bitwise identical to an unrecorded one.
+    pub fn enable_tracing(&mut self, capacity: usize) {
+        self.recorder = Some(FlightRecorder::new(capacity));
+    }
+
+    /// Drain the flight recorder's buffered events (empty when tracing
+    /// was never enabled). Recording continues afterwards.
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.recorder.as_mut().map(|r| r.drain()).unwrap_or_default()
+    }
+
+    /// Attach the timing-plane metrics registry: lifecycle counters and
+    /// latency histograms stream into it from now on. The registry is
+    /// write-only for the session — nothing in it feeds back into
+    /// scheduling, so output is identical with or without one attached.
+    pub fn attach_metrics(&mut self, metrics: Arc<MetricsRegistry>) {
+        self.metrics = Some(metrics);
+    }
+
+    /// Record a causal-plane event (no-op unless tracing is enabled).
+    fn trace(&mut self, ev: TraceEvent) {
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.record(ev);
+        }
+    }
+
     /// Submit, treating a full queue as an error that drops the request.
     /// Prefer [`Session::try_submit`] when driving the loop yourself — it
     /// hands a refused request back so it can be resubmitted after a
@@ -617,7 +666,24 @@ impl<'m> Session<'m> {
             return Ok(Some(req)); // backpressure (declared-MAC bound)
         }
         self.seen_ids.insert(req.id);
-        self.pending.push(req, cost);
+        if self.metrics.is_some() {
+            self.submit_t.insert(req.id, self.now());
+        }
+        let traced = self
+            .recorder
+            .is_some()
+            .then(|| (req.id, req.tier.name(), req.deadline_s, req.tenant.clone()));
+        let seq = self.pending.push(req, cost);
+        if let Some((id, tier, deadline_s, tenant)) = traced {
+            self.trace(TraceEvent::Enqueued {
+                id,
+                seq,
+                tier,
+                cost_macs: cost.total_macs(),
+                deadline_s,
+                tenant,
+            });
+        }
         Ok(None)
     }
 
@@ -660,6 +726,8 @@ impl<'m> Session<'m> {
         if !self.has_work() {
             return Ok(false);
         }
+        self.sched_rounds += 1;
+        let round = self.sched_rounds;
         self.enforce_deadlines();
         // refill the per-tier MAC buckets, then let over-budget batch
         // lanes yield their slots to admissible interactive work
@@ -687,14 +755,36 @@ impl<'m> Session<'m> {
                 let Some((req, cost)) = self.pending.pop_admissible() else {
                     break; // queued work exists but no tier has credit
                 };
+                let (id, tier) = (req.id, req.tier);
                 let lane = self.admit(req, cost)?;
+                self.trace(TraceEvent::Admitted {
+                    id,
+                    round,
+                    seq: lane.admitted,
+                    tier: tier.name(),
+                    bucket_credit: self.pending.tier_credit(tier),
+                    forced: false,
+                });
                 fresh.push(lane);
                 took += 1;
             }
             if took == 0 {
+                // the front-of-queue request is what the dry bucket is
+                // holding back this round
+                if let Some((id, tier)) = self.pending.peek_front() {
+                    self.trace(TraceEvent::Deferred {
+                        id,
+                        round,
+                        tier: tier.name(),
+                        reason: "bucket-exhausted",
+                    });
+                }
                 break;
             }
             self.batches += 1;
+            if let Some(m) = &self.metrics {
+                m.dispatch_batches.inc();
+            }
         }
         // work-conserving guarantee: an idle engine never waits on a dry
         // bucket — with every slot free and no tier in credit, the best
@@ -702,9 +792,21 @@ impl<'m> Session<'m> {
         // can delay work but never deadlock it
         if fresh.is_empty() && self.active.is_empty() {
             if let Some((req, cost)) = self.pending.pop_front_forced() {
+                let (id, tier) = (req.id, req.tier);
                 let lane = self.admit(req, cost)?;
+                self.trace(TraceEvent::Admitted {
+                    id,
+                    round,
+                    seq: lane.admitted,
+                    tier: tier.name(),
+                    bucket_credit: self.pending.tier_credit(tier),
+                    forced: true,
+                });
                 fresh.push(lane);
                 self.batches += 1;
+                if let Some(m) = &self.metrics {
+                    m.dispatch_batches.inc();
+                }
             }
         }
 
@@ -713,6 +815,7 @@ impl<'m> Session<'m> {
         if !fresh.is_empty() {
             self.forward_fresh(&mut fresh)?;
             for mut lane in fresh {
+                self.trace(TraceEvent::PrefillDone { id: lane.id, round, macs: lane.macs });
                 match &lane.kind {
                     LaneKind::Score { .. } => {
                         lane.ttft_s = lane.step_t_s;
@@ -739,6 +842,9 @@ impl<'m> Session<'m> {
                         }
                         // TTFT is the Prefilled event's timestamp
                         self.ttfts.push(t);
+                        if let Some(m) = &self.metrics {
+                            m.ttft.observe(t);
+                        }
                         lane.ttft_s = t;
                         lane.last_s = t;
                     }
@@ -756,7 +862,23 @@ impl<'m> Session<'m> {
         // ---- one decode round: each active sequence advances a token,
         // all sequences stepping concurrently on the pool ----
         self.rounds += 1;
+        if let Some(m) = &self.metrics {
+            m.decode_rounds.inc();
+        }
+        let macs_before: u128 = if self.recorder.is_some() {
+            self.active.iter().map(|l| l.macs).sum()
+        } else {
+            0
+        };
         self.decode_round()?;
+        if self.recorder.is_some() {
+            let macs_after: u128 = self.active.iter().map(|l| l.macs).sum();
+            self.trace(TraceEvent::DecodeRound {
+                round,
+                batch: self.active.len(),
+                macs: macs_after - macs_before,
+            });
+        }
         // gather this round's (id, timestamp, token) in admission order…
         let mut produced: Vec<(usize, f64, usize, i32, f64)> =
             Vec::with_capacity(self.active.len());
@@ -781,6 +903,9 @@ impl<'m> Session<'m> {
                 self.events.push_back(Event { id, t_s: t, kind });
             }
             self.itls.push(t - prev_last);
+            if let Some(m) = &self.metrics {
+                m.inter_token.observe(t - prev_last);
+            }
         }
         // …then advance the lanes' clocks and apply deadlines
         for lane in &mut self.active {
@@ -845,13 +970,23 @@ impl<'m> Session<'m> {
             self.mid_run += 1;
         }
         self.admitted_macs += cost.total_macs();
-        let ledger = self
-            .tenant_ledger
-            .entry(req.tenant.clone().unwrap_or_else(|| "-".to_string()))
-            .or_default();
+        let tenant = req.tenant.clone().unwrap_or_else(|| "-".to_string());
+        let ledger = self.tenant_ledger.entry(tenant.clone()).or_default();
         ledger.requests += 1;
         ledger.declared_macs += cost.total_macs();
         let now = self.now();
+        if let Some(m) = &self.metrics {
+            m.admitted_macs.add(sat_u64(cost.total_macs()));
+            m.tier_admissions.add(req.tier.name(), 1);
+            m.tenant_requests.add(&tenant, 1);
+            m.tenant_declared_macs.add(&tenant, sat_u64(cost.total_macs()));
+            if self.slot_retirements > 0 {
+                m.mid_run_admissions.inc();
+            }
+            if let Some(t) = self.submit_t.remove(&req.id) {
+                m.queue_wait.observe(now - t);
+            }
+        }
         if self.collect_events {
             self.events.push_back(Event {
                 id: req.id,
@@ -929,8 +1064,16 @@ impl<'m> Session<'m> {
         if victims.is_empty() {
             return;
         }
+        // the interactive request the yielded slots admit this round —
+        // guaranteed queued by the admissible_interactive() > free check
+        let beneficiary = self
+            .pending
+            .first_admissible_interactive()
+            .expect("preemption fires only with admissible interactive work queued");
         for i in victims {
+            let victim = self.active[i].id;
             self.active[i].done = Some(FinishReason::Preempted);
+            self.trace(TraceEvent::Preempted { victim, beneficiary, round: self.sched_rounds });
         }
         self.evict_done();
     }
@@ -946,27 +1089,31 @@ impl<'m> Session<'m> {
         let outer = ExecPool::new(n_par);
         let intra = ExecPool::new(threads).split(n_par);
         let t0 = &self.t0;
-        outer.try_parallel_for(fresh, |_, lane| -> Result<()> {
-            let Lane { kind, macs, step_t_s, done, .. } = lane;
-            match kind {
-                LaneKind::Score { tokens, logits } => {
-                    let (l, m) = model.forward_logits_pooled(tokens, &intra)?;
-                    *logits = l;
-                    *macs = m;
-                    *step_t_s = t0.elapsed().as_secs_f64();
-                    *done = Some(FinishReason::Scored);
+        let sink = self.metrics.clone();
+        let items = fresh.len();
+        outer.observe(sink.as_deref().map(|m| m as &dyn SpanObserver), "prefill", items, || {
+            outer.try_parallel_for(fresh, |_, lane| -> Result<()> {
+                let Lane { kind, macs, step_t_s, done, .. } = lane;
+                match kind {
+                    LaneKind::Score { tokens, logits } => {
+                        let (l, m) = model.forward_logits_pooled(tokens, &intra)?;
+                        *logits = l;
+                        *macs = m;
+                        *step_t_s = t0.elapsed().as_secs_f64();
+                        *done = Some(FinishReason::Scored);
+                    }
+                    LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } => {
+                        let (logits, m) = model.forward_prefill(prompt, cache, &intra)?;
+                        let first = sampling.sample(&logits, rng);
+                        *macs = m;
+                        *recompute_macs = model.macs_for(prompt.len());
+                        *step_t_s = t0.elapsed().as_secs_f64();
+                        tokens.push(first);
+                        *done = stop_reason(eos, first, tokens.len(), *max_new);
+                    }
                 }
-                LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } => {
-                    let (logits, m) = model.forward_prefill(prompt, cache, &intra)?;
-                    let first = sampling.sample(&logits, rng);
-                    *macs = m;
-                    *recompute_macs = model.macs_for(prompt.len());
-                    *step_t_s = t0.elapsed().as_secs_f64();
-                    tokens.push(first);
-                    *done = stop_reason(eos, first, tokens.len(), *max_new);
-                }
-            }
-            Ok(())
+                Ok(())
+            })
         })
     }
 
@@ -979,21 +1126,27 @@ impl<'m> Session<'m> {
         let outer = ExecPool::new(n_par);
         let intra = ExecPool::new(threads).split(n_par);
         let t0 = &self.t0;
-        outer.try_parallel_for(&mut self.active, |_, lane| -> Result<()> {
-            let Lane { kind, macs, step_t_s, done, .. } = lane;
-            let LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } = kind
-            else {
-                unreachable!("score lanes retire at admission")
-            };
-            let last_tok = *tokens.last().expect("active sequences hold >= 1 token");
-            let (logits, m) = model.forward_step_pooled(last_tok, cache, &intra)?;
-            *macs += m;
-            *recompute_macs += model.macs_for(prompt.len() + tokens.len());
-            let next = sampling.sample(&logits, rng);
-            *step_t_s = t0.elapsed().as_secs_f64();
-            tokens.push(next);
-            *done = stop_reason(eos, next, tokens.len(), *max_new);
-            Ok(())
+        let sink = self.metrics.clone();
+        let items = self.active.len();
+        let active = &mut self.active;
+        outer.observe(sink.as_deref().map(|m| m as &dyn SpanObserver), "decode", items, || {
+            outer.try_parallel_for(active, |_, lane| -> Result<()> {
+                let Lane { kind, macs, step_t_s, done, .. } = lane;
+                let LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } =
+                    kind
+                else {
+                    unreachable!("score lanes retire at admission")
+                };
+                let last_tok = *tokens.last().expect("active sequences hold >= 1 token");
+                let (logits, m) = model.forward_step_pooled(last_tok, cache, &intra)?;
+                *macs += m;
+                *recompute_macs += model.macs_for(prompt.len() + tokens.len());
+                let next = sampling.sample(&logits, rng);
+                *step_t_s = t0.elapsed().as_secs_f64();
+                tokens.push(next);
+                *done = stop_reason(eos, next, tokens.len(), *max_new);
+                Ok(())
+            })
         })
     }
 
@@ -1040,6 +1193,20 @@ impl<'m> Session<'m> {
             FinishReason::Deadline => self.deadline_evictions += 1,
             _ => {}
         }
+        if let Some(m) = &self.metrics {
+            match reason {
+                FinishReason::Cancelled => m.cancelled.inc(),
+                FinishReason::Deadline => m.deadline_evictions.inc(),
+                _ => {}
+            }
+        }
+        self.submit_t.remove(&req.id);
+        self.trace(TraceEvent::Finished {
+            id: req.id,
+            round: self.sched_rounds,
+            reason: reason.name(),
+            tokens: 0,
+        });
         if self.collect_events {
             self.events.push_back(Event {
                 id: req.id,
@@ -1067,6 +1234,20 @@ impl<'m> Session<'m> {
     /// (so drains can't lose it from the aggregate stats), sample its
     /// completion latency, and park it for the caller.
     fn record_finished(&mut self, f: FinishedRequest) {
+        if let Some(m) = &self.metrics {
+            // exact mirror of FinishTally::record — the self-check asserts
+            // these counters equal the analytic accounting, not approximate
+            m.requests.inc();
+            m.executed_macs.add(sat_u64(f.macs));
+            if f.is_generate {
+                if f.admitted.is_some() {
+                    m.prompt_tokens.add(f.prompt_len as u64);
+                }
+                m.generated_tokens.add(f.tokens.len() as u64);
+            } else if f.reason == FinishReason::Scored {
+                m.scored_tokens.add(f.prompt_len as u64);
+            }
+        }
         self.tally.record(&f);
         self.lats.push(f.latency_s);
         self.finished.push(f);
@@ -1094,6 +1275,14 @@ impl<'m> Session<'m> {
             FinishReason::Preempted => self.preemptions += 1,
             _ => {}
         }
+        if let Some(m) = &self.metrics {
+            match reason {
+                FinishReason::Cancelled => m.cancelled.inc(),
+                FinishReason::Deadline => m.deadline_evictions.inc(),
+                FinishReason::Preempted => m.preemptions.inc(),
+                _ => {}
+            }
+        }
         self.slot_retirements += 1;
         let (is_generate, prompt_len, tokens, logits, recompute_macs) = match lane.kind {
             LaneKind::Score { tokens, logits } => {
@@ -1105,6 +1294,12 @@ impl<'m> Session<'m> {
             }
         };
         let produced = if is_generate { tokens.len() } else { prompt_len };
+        self.trace(TraceEvent::Finished {
+            id: lane.id,
+            round: self.sched_rounds,
+            reason: reason.name(),
+            tokens: produced,
+        });
         if self.collect_events {
             self.events.push_back(Event {
                 id: lane.id,

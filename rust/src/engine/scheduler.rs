@@ -134,15 +134,19 @@ impl Scheduler {
         self.queued_macs
     }
 
-    /// Enqueue a priced request at its deterministic position.
-    pub fn push(&mut self, req: InferenceRequest, cost: RequestCost) {
+    /// Enqueue a priced request at its deterministic position, returning
+    /// the arrival sequence number it was stamped with (the flight
+    /// recorder's arrival denomination).
+    pub fn push(&mut self, req: InferenceRequest, cost: RequestCost) -> u64 {
         let entry = Entry { seq: self.next_seq, cost, req };
         self.next_seq += 1;
         self.queued_macs += cost.total_macs();
         // stable: equal keys cannot occur (seq is unique), so this is a
         // plain ordered insert
         let pos = self.queue.partition_point(|e| e.cmp_key(&entry) == Ordering::Less);
+        let seq = entry.seq;
         self.queue.insert(pos, entry);
+        seq
     }
 
     /// Start a scheduling round: refill both tier buckets.
@@ -206,6 +210,36 @@ impl Scheduler {
     /// unlimited bucket, so preemption cannot fire in the default config.
     pub fn batch_over_budget(&self) -> bool {
         self.batch.over_budget()
+    }
+
+    /// Remaining bucket credit for `tier` — the flight recorder's
+    /// `bucket_credit` field. An unlimited bucket reports 0 (it has no
+    /// meaningful balance), keeping the value deterministic across
+    /// configs.
+    pub fn tier_credit(&self, tier: Tier) -> i128 {
+        let b = self.bucket(tier);
+        if b.refill == 0 {
+            0
+        } else {
+            b.credit
+        }
+    }
+
+    /// Id and tier of the front-of-queue entry (the one a dry-bucket
+    /// deferral is holding back), without popping it.
+    pub fn peek_front(&self) -> Option<(usize, Tier)> {
+        self.queue.first().map(|e| (e.req.id, e.req.tier))
+    }
+
+    /// Id of the first queued interactive request that could be admitted
+    /// this round — the beneficiary a preemption is making room for.
+    /// `None` while the interactive bucket is in deficit or no
+    /// interactive request is queued.
+    pub fn first_admissible_interactive(&self) -> Option<usize> {
+        if !self.interactive.admissible() {
+            return None;
+        }
+        self.queue.iter().find(|e| e.req.tier == Tier::Interactive).map(|e| e.req.id)
     }
 
     fn bucket(&self, tier: Tier) -> &Bucket {
@@ -299,6 +333,30 @@ mod tests {
         assert_eq!(r.id, 0);
         assert_eq!(s.queued_macs(), 2);
         assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn observability_accessors_are_deterministic() {
+        let mut s = Scheduler::new(50, 100);
+        assert_eq!(s.push(gen(0), cost(30)), 0, "arrival seq starts at 0");
+        assert_eq!(s.push(gen(1).with_tier(Tier::Interactive), cost(40)), 1);
+        s.begin_round();
+        // interactive (no deadline) sorts ahead of batch at the front
+        assert_eq!(s.peek_front(), Some((1, Tier::Interactive)));
+        assert_eq!(s.first_admissible_interactive(), Some(1));
+        assert_eq!(s.tier_credit(Tier::Interactive), 50);
+        assert_eq!(s.tier_credit(Tier::Batch), 100);
+        let (req, _) = s.pop_admissible().unwrap();
+        assert_eq!(req.id, 1);
+        assert_eq!(s.tier_credit(Tier::Interactive), 10, "charge is visible");
+        // unlimited buckets always report credit 0
+        let mut u = Scheduler::new(0, 0);
+        u.push(gen(5), cost(1_000_000));
+        u.begin_round();
+        assert_eq!(u.tier_credit(Tier::Batch), 0);
+        assert_eq!(u.peek_front(), Some((5, Tier::Batch)));
+        assert_eq!(u.first_admissible_interactive(), None, "no interactive queued");
+        assert_eq!(Scheduler::new(0, 0).peek_front(), None);
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //! `scripts/verify.sh` running the serve/decode self-checks at both
 //! `--threads 1` and `--threads 4`.
 
+/// Span hook for the observability timing plane: receives the label, item
+/// count, and wall-clock duration of a pool fan-out. Implementations must
+/// be purely observational — [`ExecPool::observe`] guarantees the wrapped
+/// closure's behaviour is unchanged whether a sink is attached or not.
+pub trait SpanObserver: Sync {
+    fn span(&self, label: &'static str, items: usize, seconds: f64);
+}
+
 /// Worker threads to use when the knob is `0` (auto).
 pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -245,6 +253,28 @@ impl ExecPool {
         });
     }
 
+    /// Run `f` and report its wall-clock duration to `sink` under `label`.
+    /// With no sink attached this is a plain call — no clock is read, so
+    /// the un-observed path is byte-for-byte the old one. The timing never
+    /// feeds back into scheduling; it only lands in the metrics plane.
+    pub fn observe<R>(
+        &self,
+        sink: Option<&dyn SpanObserver>,
+        label: &'static str,
+        items: usize,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        match sink {
+            None => f(),
+            Some(obs) => {
+                let start = std::time::Instant::now();
+                let out = f();
+                obs.span(label, items, start.elapsed().as_secs_f64());
+                out
+            }
+        }
+    }
+
     /// Run `f(worker_index)` once per worker concurrently, collecting the
     /// results in worker order — the shape of a shared-queue worker loop
     /// (the serve engine's request workers).
@@ -391,6 +421,26 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2, 3]);
         assert_eq!(hits.load(Ordering::Relaxed), 4);
         assert_eq!(ExecPool::serial().broadcast(|w| w), vec![0]);
+    }
+
+    #[test]
+    fn observe_runs_closure_and_reports_span() {
+        use std::sync::Mutex;
+        struct Rec(Mutex<Vec<(&'static str, usize)>>);
+        impl SpanObserver for Rec {
+            fn span(&self, label: &'static str, items: usize, seconds: f64) {
+                assert!(seconds >= 0.0);
+                self.0.lock().unwrap().push((label, items));
+            }
+        }
+        let pool = ExecPool::new(2);
+        // no sink: plain call
+        assert_eq!(pool.observe(None, "prefill", 3, || 41 + 1), 42);
+        // sink attached: same result, one span recorded
+        let rec = Rec(Mutex::new(Vec::new()));
+        let got = pool.observe(Some(&rec), "decode", 5, || "ok");
+        assert_eq!(got, "ok");
+        assert_eq!(*rec.0.lock().unwrap(), vec![("decode", 5)]);
     }
 
     #[test]

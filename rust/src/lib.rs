@@ -61,6 +61,14 @@
 //!   cancellation, and graceful drain — plus the open-loop
 //!   `repro loadgen` wire-path load generator with per-tier latency
 //!   percentiles, deadline hit-rate, and `--mix interactive:batch`
+//! - [`obs`] — the observability plane: a deterministic, wall-clock-free
+//!   flight recorder of scheduler/lifecycle events ([`obs::FlightRecorder`],
+//!   JSONL export, byte-diffable across `--threads`) plus a lock-light
+//!   metrics registry ([`obs::MetricsRegistry`]: counters, gauges,
+//!   fixed-bound latency histograms, per-tier/per-tenant labels) rendered
+//!   as Prometheus text for the daemon's `GET /metrics` — attaching either
+//!   plane never perturbs scheduling or output (asserted bitwise by the
+//!   self-checks)
 //! - [`train`] — Rust-owned AdamW training loop over the AOT train step
 //! - [`eval`] — perplexity + zero-shot multiple-choice evaluation
 //! - [`coordinator`] — memory-bounded pipeline orchestration, metrics
@@ -75,6 +83,7 @@ pub mod eval;
 pub mod exec;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod prune;
 pub mod rom;
 pub mod runtime;

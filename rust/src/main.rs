@@ -129,6 +129,18 @@ const SOURCE: Flag = flag("source", "SRC", "calibration source: combination|arc-
 const FINETUNE: Flag = flag("finetune", "N", "recovery fine-tune steps");
 const PER_TASK: Flag = flag("per-task", "N", "eval instances per task");
 const OUT: Flag = flag("out", "FILE", "output checkpoint path (.rtz)");
+const NO_OBS: Flag = switch(
+    "no-obs",
+    "detach the observability plane (flight recorder + metrics registry); printed output \
+     is bitwise identical either way — the non-perturbation bar scripts/verify.sh diffs",
+);
+const TRACE_OUT: Flag = flag(
+    "trace-out",
+    "FILE",
+    "write the causal-plane flight-recorder transcript as JSONL (with --self-check: the \
+     scheduler phase's trace, byte-identical across --threads; daemon serving mode: the \
+     full transcript at drain)",
+);
 
 static COMMANDS: &[Cmd] = &[
     Cmd { name: "info", summary: "manifest / model / platform summary", flags: &[] },
@@ -191,6 +203,8 @@ static COMMANDS: &[Cmd] = &[
                 "build a mini artifact offline, serve it both ways, verify logits + MACs \
                  + tiered scheduler vs FIFO",
             ),
+            NO_OBS,
+            TRACE_OUT,
             SEED,
         ],
     },
@@ -232,6 +246,8 @@ static COMMANDS: &[Cmd] = &[
                 "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC \
                  accounting + tiered scheduler vs FIFO",
             ),
+            NO_OBS,
+            TRACE_OUT,
             SEED,
         ],
     },
@@ -271,8 +287,11 @@ static COMMANDS: &[Cmd] = &[
             switch(
                 "self-check",
                 "offline: client+server in one process over loopback — SSE ≡ in-process \
-                 events, queue saturation → 429, disconnect cancels, drain exits",
+                 events, queue saturation → 429, disconnect cancels, drain exits, \
+                 observability plane non-perturbing",
             ),
+            NO_OBS,
+            TRACE_OUT,
             SEED,
         ],
     },
@@ -472,6 +491,20 @@ fn run() -> Result<()> {
 /// The `--threads` knob as an [`ExecConfig`] (absent or 0 = all cores).
 fn exec_from(args: &Args) -> Result<ExecConfig> {
     Ok(ExecConfig::with_threads(args.parse_num("threads", 0usize)?))
+}
+
+/// The `--no-obs` / `--trace-out` knobs: whether the observability plane
+/// attaches, and where (if anywhere) the causal-plane transcript goes.
+/// A trace export without the plane that records it is a contradiction,
+/// so that combination is rejected up front.
+fn obs_from(args: &Args) -> Result<(bool, Option<std::path::PathBuf>)> {
+    let obs = args.get("no-obs").is_none();
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    anyhow::ensure!(
+        obs || trace_out.is_none(),
+        "--trace-out needs the observability plane (drop --no-obs)"
+    );
+    Ok((obs, trace_out))
 }
 
 fn xcfg_from(args: &Args) -> Result<ExperimentConfig> {
@@ -685,9 +718,11 @@ fn serve_cfg(artifacts: &str) -> ModelConfig {
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let exec = exec_from(args)?;
+    let (obs, trace_out) = obs_from(args)?;
     if args.get("self-check").is_some() {
-        return serve_self_check(seed, exec);
+        return serve_self_check(seed, exec, obs, trace_out.as_deref());
     }
+    anyhow::ensure!(trace_out.is_none(), "--trace-out requires --self-check for `serve`");
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
     let cm = CompressedModel::load(&cfg, path)?;
@@ -749,8 +784,17 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// flood-plus-trickle trace. The CI smoke test behind `scripts/verify.sh`,
 /// which runs it at `--threads 1` and `--threads 4` and diffs the output
 /// (everything printed is deterministic, so any thread-count divergence
-/// fails the gate).
-fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
+/// fails the gate). With the observability plane attached (`obs`, the
+/// default) the scheduler phase additionally asserts the flight recorder
+/// and metrics registry agree with [`llm_rom::engine::CoreStats`]
+/// exactly — printing nothing, so output stays bitwise identical to a
+/// `--no-obs` run.
+fn serve_self_check(
+    seed: u64,
+    exec: ExecConfig,
+    obs: bool,
+    trace_out: Option<&std::path::Path>,
+) -> Result<()> {
     let cfg = serve::demo_config();
     let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0x5EED)?;
     anyhow::ensure!(!cm.factors.is_empty(), "demo artifact carries no factors");
@@ -821,7 +865,7 @@ fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
     );
     // 4. the priced, tiered admission scheduler on an adversarial trace
     let model = ServeModel::from_artifact(&loaded, ExecMode::Factored)?;
-    scheduler_self_check_phase(&model, &loaded.accounting, seed, exec)?;
+    scheduler_self_check_phase(&model, &loaded.accounting, seed, exec, obs, trace_out)?;
 
     std::fs::remove_dir_all(&dir).ok();
     println!("serve self-check: OK");
@@ -844,13 +888,26 @@ fn serve_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
 ///   [`macs::decode_report`] sums;
 /// - the stripped single-tier / no-deadline / unlimited-meter config
 ///   reduces exactly to FIFO admission order.
+///
+/// With `obs`, the tiered run also carries the flight recorder and the
+/// metrics registry, and this phase silently asserts both against the
+/// run's [`llm_rom::engine::CoreStats`]: the replayed transcript
+/// ([`llm_rom::obs::reconstruct`]) and the registry counters must equal
+/// the engine accounting *exactly*. Nothing extra is printed — output is
+/// bitwise identical with and without `obs`, which `scripts/verify.sh`
+/// diffs. `trace_out` additionally exports the transcript as JSONL
+/// (round/seq/MAC-denominated, byte-identical across `--threads`).
 fn scheduler_self_check_phase(
     model: &ServeModel,
     acc: &CompressionAccounting,
     seed: u64,
     exec: ExecConfig,
+    obs: bool,
+    trace_out: Option<&std::path::Path>,
 ) -> Result<()> {
     use llm_rom::engine::{EventKind, TenantUsage, Tier};
+    use llm_rom::obs::{self, MetricsRegistry, TraceEvent};
+    use std::sync::Arc;
 
     const BATCH_N: usize = 8;
     const INTERACTIVE_N: usize = 3;
@@ -879,9 +936,19 @@ fn scheduler_self_check_phase(
     // round; interactive request `k` arrives before round `1 + 2k`.
     // `tiered: false` strips tiers, tenants, and deadlines — the exact
     // FIFO-reduction config.
-    type Trace = (BTreeMap<usize, usize>, Vec<usize>, llm_rom::engine::CoreStats);
+    type ObsCapture = Option<(Vec<TraceEvent>, Arc<MetricsRegistry>)>;
+    type Trace = (BTreeMap<usize, usize>, Vec<usize>, llm_rom::engine::CoreStats, ObsCapture);
     let run_trace = |tiered: bool| -> Result<Trace> {
         let mut session = EngineCore::new(model, ecfg).session();
+        // the tiered run carries the observability plane (when enabled);
+        // the FIFO baseline never does, proving by construction that the
+        // two planes don't feed back into scheduling
+        let observe = tiered && obs;
+        let registry = Arc::new(MetricsRegistry::new());
+        if observe {
+            session.enable_tracing(obs::DEFAULT_TRACE_CAP);
+            session.attach_metrics(Arc::clone(&registry));
+        }
         let mut submit_round: BTreeMap<usize, usize> = BTreeMap::new();
         for id in 0..BATCH_N {
             let mut req = InferenceRequest::generate(id, prompts[id].clone(), None);
@@ -928,16 +995,17 @@ fn scheduler_self_check_phase(
                 }
             }
         }
+        let trace = session.take_trace();
         let (_finished, stats) = session.finish();
         let waits: BTreeMap<usize, usize> = admit_round
             .iter()
             .map(|(id, &r)| (*id, r - submit_round[id]))
             .collect();
-        Ok((waits, admit_order, stats))
+        Ok((waits, admit_order, stats, observe.then_some((trace, registry))))
     };
 
-    let (waits, _order, stats) = run_trace(true)?;
-    let (fifo_waits, fifo_order, fifo_stats) = run_trace(false)?;
+    let (waits, _order, stats, obs_capture) = run_trace(true)?;
+    let (fifo_waits, fifo_order, fifo_stats, _) = run_trace(false)?;
 
     // stripped config reduces exactly to FIFO: admission == arrival
     anyhow::ensure!(
@@ -987,6 +1055,58 @@ fn scheduler_self_check_phase(
             && stats.tenants.get("trickle") == Some(&row(INTERACTIVE_N)),
         "per-tenant fairness ledger != analytic per-tenant sums"
     );
+
+    // observability plane (when attached): the flight recorder's replay
+    // and the metrics registry must equal the engine accounting exactly.
+    // Deliberately silent — printed output is bitwise identical with and
+    // without the plane, which scripts/verify.sh diffs.
+    if let Some((trace, registry)) = obs_capture {
+        let replay = obs::reconstruct(&trace);
+        anyhow::ensure!(
+            replay.enqueued == total
+                && replay.admitted == total
+                && replay.finished == total
+                && replay.preemptions == stats.preemptions
+                && replay.decode_rounds == stats.decode_rounds
+                && replay.admitted_macs == stats.admitted_macs
+                && replay.executed_macs == stats.macs,
+            "flight-recorder replay diverges from CoreStats: {replay:?}"
+        );
+        let ledger: BTreeMap<String, (usize, u128)> = stats
+            .tenants
+            .iter()
+            .map(|(k, v)| (k.clone(), (v.requests, v.declared_macs)))
+            .collect();
+        anyhow::ensure!(
+            replay.tenants == ledger,
+            "replayed tenant ledger diverges from the fairness ledger"
+        );
+        anyhow::ensure!(
+            registry.requests.get() == stats.requests as u64
+                && registry.generated_tokens.get() == stats.generated_tokens as u64
+                && registry.decode_rounds.get() == stats.decode_rounds as u64,
+            "metrics registry counters diverge from CoreStats"
+        );
+        anyhow::ensure!(
+            registry.admitted_macs.get() == obs::sat_u64(stats.admitted_macs)
+                && registry.executed_macs.get() == obs::sat_u64(stats.macs),
+            "metrics registry MAC meters diverge from CoreStats"
+        );
+        anyhow::ensure!(
+            registry.tier_admissions.get("interactive") == INTERACTIVE_N as u64
+                && registry.tier_admissions.get("batch") == BATCH_N as u64
+                && registry.tenant_requests.get("flood") == BATCH_N as u64
+                && registry.tenant_requests.get("trickle") == INTERACTIVE_N as u64,
+            "per-tier/per-tenant label families diverge from the trace"
+        );
+        if let Some(path) = trace_out {
+            if let Some(p) = path.to_str() {
+                ensure_parent(p)?;
+            }
+            std::fs::write(path, obs::render_jsonl(&trace))
+                .with_context(|| format!("write trace to {}", path.display()))?;
+        }
+    }
 
     println!(
         "[4/4] scheduler: interactive admitted within {int_wait} rounds under an \
@@ -1138,9 +1258,18 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let exec = exec_from(args)?;
     let stream = args.get("stream").is_some();
+    let (obs, trace_out) = obs_from(args)?;
     if args.get("self-check").is_some() {
-        return if stream { stream_self_check(seed, exec) } else { decode_self_check(seed, exec) };
+        if stream {
+            anyhow::ensure!(
+                trace_out.is_none(),
+                "--trace-out applies to the non-stream self-check (drop --stream)"
+            );
+            return stream_self_check(seed, exec);
+        }
+        return decode_self_check(seed, exec, obs, trace_out.as_deref());
     }
+    anyhow::ensure!(trace_out.is_none(), "--trace-out requires --self-check for `generate`");
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
     let cm = load_artifact_or_ckpt(&cfg, path)?;
@@ -1287,7 +1416,12 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
 /// Run by `scripts/verify.sh` next to `repro serve --self-check`, at
 /// `--threads 1` and `--threads 4` with an output diff (everything printed
 /// is deterministic, so thread-count divergence fails the gate).
-fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
+fn decode_self_check(
+    seed: u64,
+    exec: ExecConfig,
+    obs: bool,
+    trace_out: Option<&std::path::Path>,
+) -> Result<()> {
     let cfg = serve::demo_config();
     let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0xDECD)?;
     anyhow::ensure!(!cm.factors.is_empty(), "demo artifact carries no factors");
@@ -1393,7 +1527,7 @@ fn decode_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
     );
 
     // 4. the priced, tiered admission scheduler on an adversarial trace
-    scheduler_self_check_phase(&fact, &cm.accounting, seed, exec)?;
+    scheduler_self_check_phase(&fact, &cm.accounting, seed, exec, obs, trace_out)?;
 
     println!("decode self-check: OK");
     Ok(())
@@ -1598,8 +1732,9 @@ fn cmd_bench_parallel(artifacts: &str, args: &Args) -> Result<()> {
 fn cmd_daemon(artifacts: &str, args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let exec = exec_from(args)?;
+    let (obs, trace_out) = obs_from(args)?;
     if args.get("self-check").is_some() {
-        return daemon_self_check(seed, exec);
+        return daemon_self_check(seed, exec, obs, trace_out.as_deref());
     }
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
@@ -1621,6 +1756,7 @@ fn cmd_daemon(artifacts: &str, args: &Args) -> Result<()> {
         addr: args.get_or("addr", "127.0.0.1:8700"),
         engine,
         retry_after_s: args.parse_num("retry-after", 1u32)?,
+        obs,
     };
     let server = Daemon::bind(&model, config)?;
     println!(
@@ -1645,7 +1781,25 @@ fn cmd_daemon(artifacts: &str, args: &Args) -> Result<()> {
         report.bad_requests,
         report.disconnect_cancels,
     );
+    if let Some(path) = &trace_out {
+        write_trace_lines(path, &report.trace)?;
+        println!("wrote {} causal-plane events to {}", report.trace.len(), path.display());
+    }
     Ok(())
+}
+
+/// Write buffered causal-plane JSONL lines (already rendered, no trailing
+/// newlines) to `path` as an NDJSON file.
+fn write_trace_lines(path: &std::path::Path, lines: &[String]) -> Result<()> {
+    if let Some(p) = path.to_str() {
+        ensure_parent(p)?;
+    }
+    let mut out = String::with_capacity(lines.iter().map(|l| l.len() + 1).sum());
+    for line in lines {
+        out.push_str(line);
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("write trace to {}", path.display()))
 }
 
 fn cmd_loadgen(artifacts: &str, args: &Args) -> Result<()> {
@@ -1756,14 +1910,30 @@ fn gen_body(prompt: &[i32], max_new: usize, stream: bool) -> llm_rom::util::json
 ///    token boundary and frees the slot (observed via `/healthz`), and a
 ///    follow-up stream completes byte-identical on the reused slot;
 /// 4. drain: `POST /admin/drain` flips `/readyz` to 503, refuses new
-///    work with 503, finishes the in-flight streams, and exits.
+///    work with 503, finishes the in-flight streams, and exits;
+/// 5. observability: `GET /metrics` parses as Prometheus text at a
+///    deterministic quiesce point with counters equal to the analytic
+///    accounting exactly (when [`DaemonConfig::obs`] is on; zero engine
+///    counters when off), the post-drain registry mirrors the engine's
+///    `CoreStats`, and the causal-plane trace parses as JSONL with one
+///    `finished` record per request. The in-process reference run always
+///    carries the obs plane, so `--no-obs` still proves non-perturbation:
+///    phase 1 diffs its SSE frames against the daemon's either way.
 ///
 /// Run by `scripts/verify.sh` at `--threads 1` and `--threads 4` with an
 /// output diff — SSE frames mirror the engine's thread-invariant event
 /// stream and carry no wall-clock fields, so everything printed is
-/// deterministic.
-fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
+/// deterministic (and identical with `--no-obs`, the non-perturbation
+/// bar).
+fn daemon_self_check(
+    seed: u64,
+    exec: ExecConfig,
+    obs: bool,
+    trace_out: Option<&std::path::Path>,
+) -> Result<()> {
+    use llm_rom::obs::{self, MetricsRegistry};
     use std::collections::{BTreeMap, VecDeque};
+    use std::sync::Arc;
 
     let cfg = serve::demo_config();
     let cm = serve::demo_artifact(&cfg, 0.5, seed ^ 0xDA30)?;
@@ -1794,9 +1964,15 @@ fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         .collect();
 
     // in-process reference: the same requests through one session,
-    // collecting the exact frames every SSE response must mirror
+    // collecting the exact frames every SSE response must mirror. The
+    // obs plane rides along unconditionally here — phase 1 then diffs
+    // these frames against a daemon running with or without it, which is
+    // the non-perturbation proof in both directions.
     let core = EngineCore::new(&model, engine_cfg);
     let mut session = core.session();
+    let ref_registry = Arc::new(MetricsRegistry::new());
+    session.enable_tracing(obs::DEFAULT_TRACE_CAP);
+    session.attach_metrics(Arc::clone(&ref_registry));
     let mut expected: BTreeMap<usize, Vec<(String, String)>> = BTreeMap::new();
     let mut queue: VecDeque<InferenceRequest> = script.into();
     while let Some(r) = queue.pop_front() {
@@ -1816,18 +1992,57 @@ fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
             expected.entry(ev.id).or_default().push((e.to_string(), d));
         }
     }
-    let (reference, _) = session.finish();
+    let ref_trace = session.take_trace();
+    let (reference, ref_stats) = session.finish();
     anyhow::ensure!(reference.len() == 13, "reference run retired {} of 13", reference.len());
+
+    // the reference run drained cleanly, so its flight recorder must
+    // replay into the session's accounting *exactly* — and the timing
+    // registry must agree counter for counter (silent: printed output is
+    // identical with --no-obs)
+    let replay = obs::reconstruct(&ref_trace);
+    anyhow::ensure!(
+        replay.enqueued == 13 && replay.admitted == 13 && replay.finished == 13,
+        "reference trace lifecycle counts off: {replay:?}"
+    );
+    anyhow::ensure!(
+        replay.admitted_macs == ref_stats.admitted_macs && replay.executed_macs == ref_stats.macs,
+        "reference trace MACs diverge from CoreStats: replay {replay:?} vs {ref_stats:?}"
+    );
+    anyhow::ensure!(
+        replay.decode_rounds == ref_stats.decode_rounds,
+        "reference trace decode rounds {} != stats {}",
+        replay.decode_rounds,
+        ref_stats.decode_rounds
+    );
+    anyhow::ensure!(
+        ref_registry.requests.get() == 13
+            && ref_registry.scored_tokens.get() == ref_stats.scored_tokens as u64
+            && ref_registry.generated_tokens.get() == ref_stats.generated_tokens as u64
+            && ref_registry.executed_macs.get() == obs::sat_u64(ref_stats.macs)
+            && ref_registry.admitted_macs.get() == obs::sat_u64(ref_stats.admitted_macs)
+            && ref_registry.cancelled.get() == 0,
+        "reference registry diverges from CoreStats"
+    );
 
     let server = Daemon::bind(
         &model,
-        DaemonConfig { addr: "127.0.0.1:0".into(), engine: engine_cfg, retry_after_s: 1 },
+        DaemonConfig { addr: "127.0.0.1:0".into(), engine: engine_cfg, retry_after_s: 1, obs },
     )?;
     let ctl = server.control();
     let addr = server.addr();
+    // what admission has charged by the deterministic quiesce point after
+    // phase 3: ids 0..=10 (score 8 tokens, nine 6-token generates, the
+    // abandoned 32-token stream) — the /metrics scrape asserts the
+    // counter equals this analytic total exactly
+    let price = macs::CostModel::new(model.config(), model.macs_for(1));
+    let quiesce_admitted = price.score(8).total_macs()
+        + 9 * price.generate(8, 6).total_macs()
+        + price.generate(8, 32).total_macs();
     let report = std::thread::scope(|s| -> Result<llm_rom::daemon::DaemonReport> {
         let srv = s.spawn(move || server.serve());
-        let phases = self_check_phases(addr, &ctl, &prompts, &expected, &reference);
+        let phases =
+            self_check_phases(addr, &ctl, &prompts, &expected, &reference, obs, quiesce_admitted);
         if phases.is_err() {
             // unblock the daemon so the scope can join even when a phase
             // assertion fails mid-run
@@ -1837,7 +2052,7 @@ fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         phases?;
         let report = outcome?;
         println!(
-            "[4/4] drain: readyz → 503, new work shed with 503, in-flight streams ran to \
+            "[4/5] drain: readyz → 503, new work shed with 503, in-flight streams ran to \
              completion, daemon exited"
         );
         Ok(report)
@@ -1853,6 +2068,51 @@ fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
         "daemon report counters off: {report:?}"
     );
     anyhow::ensure!(report.sse_streams == 11, "opened {} of 11 streams", report.sse_streams);
+
+    // [5/5] the daemon's own obs plane, post-drain. With obs on, the
+    // timing registry must mirror the drained engine's CoreStats counter
+    // for counter and the causal trace must parse as JSONL with one
+    // `finished` record per request; with --no-obs both stay empty. The
+    // printed line is identical either way — verify.sh diffs the two.
+    let registry = ctl.metrics();
+    if obs {
+        anyhow::ensure!(
+            registry.requests.get() == report.stats.requests as u64
+                && registry.scored_tokens.get() == report.stats.scored_tokens as u64
+                && registry.generated_tokens.get() == report.stats.generated_tokens as u64
+                && registry.executed_macs.get() == obs::sat_u64(report.stats.macs)
+                && registry.admitted_macs.get() == obs::sat_u64(report.stats.admitted_macs)
+                && registry.cancelled.get() == report.stats.cancelled as u64
+                && registry.decode_rounds.get() == report.stats.decode_rounds as u64,
+            "daemon registry diverges from the drained CoreStats"
+        );
+        let finished = report
+            .trace
+            .iter()
+            .filter(|line| line.contains("\"ev\":\"finished\""))
+            .count();
+        anyhow::ensure!(
+            finished == 13,
+            "daemon trace carries {finished} finished records, want 13"
+        );
+        for line in &report.trace {
+            llm_rom::util::json::Json::parse(line)
+                .with_context(|| format!("trace line is not valid JSON: {line}"))?;
+        }
+    } else {
+        anyhow::ensure!(
+            registry.requests.get() == 0 && report.trace.is_empty(),
+            "--no-obs must leave the engine registry and trace empty"
+        );
+    }
+    if let Some(path) = trace_out {
+        write_trace_lines(path, &report.trace)?;
+    }
+    println!(
+        "[5/5] observability: /metrics counters equal the analytic accounting, registry \
+         mirrors the drained CoreStats, causal trace replays the lifecycle (bitwise \
+         identical output with --no-obs)"
+    );
     println!(
         "daemon self-check: OK ({} requests, {} SSE streams, 1 shed_429, 1 shed_503, \
          1 disconnect cancel)",
@@ -1864,19 +2124,25 @@ fn daemon_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
 
 /// The client-side script of [`daemon_self_check`]: phases 1–3 plus the
 /// drain sequence of phase 4 (its completion line prints after the
-/// daemon thread joins).
+/// daemon thread joins) and the `/metrics` scrape half of phase 5 —
+/// taken at the deterministic quiesce point after phase 3, where exactly
+/// ids 0..=10 have retired (`expected_admitted` is their analytic
+/// admission charge).
 fn self_check_phases(
     addr: std::net::SocketAddr,
     ctl: &llm_rom::daemon::DaemonControl,
     prompts: &[Vec<i32>],
     expected: &std::collections::BTreeMap<usize, Vec<(String, String)>>,
     reference: &[llm_rom::engine::FinishedRequest],
+    obs: bool,
+    expected_admitted: u128,
 ) -> Result<()> {
     use anyhow::ensure;
+    use llm_rom::obs;
     use llm_rom::util::json::Json;
     use std::time::{Duration, Instant};
 
-    // [1/4] wire ≡ engine on every request shape
+    // [1/5] wire ≡ engine on every request shape
     let mut c = HttpClient::connect(addr)?;
     let score_body = daemon::wire::obj(vec![(
         "tokens",
@@ -1909,11 +2175,11 @@ fn self_check_phases(
         "malformed body must return the structured error envelope"
     );
     println!(
-        "[1/4] wire ≡ engine: score + unary envelopes and 4 SSE streams byte-identical \
+        "[1/5] wire ≡ engine: score + unary envelopes and 4 SSE streams byte-identical \
          to the in-process run; malformed body → 400 envelope"
     );
 
-    // [2/4] deterministic load shedding: pause, fill the queue to cap,
+    // [2/5] deterministic load shedding: pause, fill the queue to cap,
     // overflow sheds 429, resume completes everything
     ctl.pause();
     let mut queued: Vec<HttpClient> = Vec::new();
@@ -1931,7 +2197,7 @@ fn self_check_phases(
     let mut shed = HttpClient::connect(addr)?;
     let resp = shed.post_json("/v1/generate", &gen_body(&prompts[8], 6, true))?;
     ensure!(resp.status == 429, "over-capacity request: status {}", resp.status);
-    // phase [1/4] already ran traffic, so the header carries the meter's
+    // phase [1/5] already ran traffic, so the header carries the meter's
     // drain-time estimate — wall-clock dependent, so assert presence only
     ensure!(
         matches!(resp.header("retry-after").map(|v| v.parse::<u64>()), Some(Ok(s)) if s >= 1),
@@ -1943,11 +2209,11 @@ fn self_check_phases(
         ensure!(frames == expected[&id], "resumed stream {id} diverges");
     }
     println!(
-        "[2/4] load shedding: queue filled to 3/3 while paused, next request shed with \
+        "[2/5] load shedding: queue filled to 3/3 while paused, next request shed with \
          429 + Retry-After; resumed streams byte-identical"
     );
 
-    // [3/4] mid-stream disconnect cancels and frees the slot
+    // [3/5] mid-stream disconnect cancels and frees the slot
     let mut doomed = HttpClient::connect(addr)?;
     let resp = doomed.post_json("/v1/generate", &gen_body(&prompts[9], 32, true))?;
     ensure!(resp.status == 200 && resp.is_sse(), "doomed stream: status {}", resp.status);
@@ -1978,11 +2244,63 @@ fn self_check_phases(
     let frames = sse_collect(addr, &gen_body(&prompts[10], 6, true))?;
     ensure!(frames == expected[&10], "post-cancel stream diverges");
     println!(
-        "[3/4] disconnect: mid-stream hang-up cancelled the request and freed its slot; \
+        "[3/5] disconnect: mid-stream hang-up cancelled the request and freed its slot; \
          follow-up stream byte-identical"
     );
 
-    // [4/4] graceful drain with streams in flight
+    // [5/5] groundwork, asserted silently so stdout stays identical with
+    // --no-obs: scrape /metrics at this quiesce point — ids 0..=10 have
+    // retired, nothing is in flight, so every asserted counter is
+    // deterministic (executed MACs are not: the disconnect lands at a
+    // wall-clock-dependent token boundary — deliberately not asserted)
+    let resp = health.get("/metrics")?;
+    ensure!(resp.status == 200, "metrics: status {}", resp.status);
+    ensure!(
+        resp.header("content-type").is_some_and(|ct| ct.starts_with("text/plain")),
+        "metrics content type"
+    );
+    let text = std::str::from_utf8(&resp.body).context("metrics body is not UTF-8")?;
+    let samples = obs::parse_exposition(text).context("GET /metrics must parse as Prometheus text")?;
+    let sample = |key: &str| samples.get(key).copied().unwrap_or(f64::NAN);
+    // wire-level counters live on the daemon, not the engine session, so
+    // they are exact in both obs modes
+    ensure!(
+        sample("repro_daemon_sse_streams_total") == 9.0
+            && sample("repro_daemon_shed_429_total") == 1.0
+            && sample("repro_daemon_bad_requests_total") == 1.0
+            && sample("repro_daemon_disconnect_cancels_total") == 1.0,
+        "daemon wire counters off at the quiesce point"
+    );
+    if obs {
+        ensure!(
+            sample("repro_requests_total") == 11.0
+                && sample("repro_scored_tokens_total") == 8.0
+                && sample("repro_cancelled_total") == 1.0,
+            "engine lifecycle counters off at the quiesce point"
+        );
+        ensure!(
+            sample("repro_admitted_macs_total") == obs::sat_u64(expected_admitted) as f64,
+            "admitted-MAC counter {} != analytic charge {}",
+            sample("repro_admitted_macs_total"),
+            expected_admitted
+        );
+        ensure!(
+            sample("repro_tier_admissions_total{tier=\"batch\"}") == 11.0,
+            "tier label family off at the quiesce point"
+        );
+        ensure!(
+            samples.contains_key("repro_ttft_seconds_bucket{le=\"+Inf\"}")
+                && samples.contains_key("repro_phase_seconds_bucket{phase=\"decode\",le=\"+Inf\"}"),
+            "latency histogram families missing from the exposition"
+        );
+    } else {
+        ensure!(
+            sample("repro_requests_total") == 0.0,
+            "--no-obs must leave the engine registry detached"
+        );
+    }
+
+    // [4/5] graceful drain with streams in flight
     let mut in_a = HttpClient::connect(addr)?;
     let ra = in_a.post_json("/v1/generate", &gen_body(&prompts[11], 6, true))?;
     ensure!(ra.status == 200 && ra.is_sse(), "in-flight stream A: {}", ra.status);

@@ -1,0 +1,618 @@
+//! The timing plane: a lock-light metrics registry with Prometheus text
+//! exposition.
+//!
+//! Counters, gauges, and fixed-bound histograms are plain atomics (no
+//! locks on the token hot path); the per-tier/per-tenant label families
+//! take a small mutex only at admission time (a few times per request,
+//! never per token). [`MetricsRegistry::render`] emits the Prometheus
+//! text format (`# HELP`/`# TYPE` + samples, histogram buckets
+//! cumulative under `le`) with a fully deterministic family and label
+//! order, and [`parse_exposition`] parses it back — the self-checks use
+//! the pair to assert that `GET /metrics` is well-formed and that its
+//! request/token/MAC counters equal the engine's analytic accounting
+//! exactly.
+//!
+//! This plane carries wall-clock data by design, which is why it is kept
+//! strictly apart from the causal plane ([`super::trace`]): nothing here
+//! is ever printed by a self-check or written to the wire event stream.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exec::SpanObserver;
+use crate::util::LatencySummary;
+
+/// Metric name prefix (the binary's namespace).
+pub const METRICS_NS: &str = "repro";
+
+/// Fixed histogram bounds (seconds) shared by every latency histogram —
+/// fine-grained at the low end because the demo models step in tens of
+/// microseconds.
+pub const LATENCY_BOUNDS_S: [f64; 12] =
+    [0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.5, 2.5];
+
+/// Saturating `u128 -> u64` for MAC counters (the exposition format is
+/// f64 anyway; every workload this stack prices fits far below 2^64).
+pub fn sat_u64(x: u128) -> u64 {
+    u64::try_from(x).unwrap_or(u64::MAX)
+}
+
+fn fadd(bits: &AtomicU64, v: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+fn fmax(bits: &AtomicU64, v: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    while v > f64::from_bits(cur) {
+        match bits.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Monotonic counter (atomic, relaxed — totals only, no ordering).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bound histogram: one overflow bucket past the last bound, an
+/// exact sum/count, and the exact observed max (bit-packed f64, safe for
+/// the non-negative durations this plane records).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `bounds.len() + 1` entries,
+    /// the last one the overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        fadd(&self.sum_bits, v);
+        fmax(&self.max_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Bucket-resolution summary, with the exact tracked max patched in
+    /// (the bounds only quantize the percentiles).
+    pub fn summary(&self) -> LatencySummary {
+        let mut s = LatencySummary::from_histogram(&self.bounds, &self.bucket_counts(), self.sum());
+        if s.n > 0 {
+            s.max = self.max();
+        }
+        s
+    }
+}
+
+/// A counter family keyed by one label value (tier, tenant). Mutex-backed
+/// — written a few times per *request* at admission, never per token.
+#[derive(Debug, Default)]
+pub struct LabeledCounter {
+    rows: Mutex<BTreeMap<String, u64>>,
+}
+
+impl LabeledCounter {
+    pub fn add(&self, label: &str, v: u64) {
+        let mut rows = self.rows.lock().expect("labeled counter poisoned");
+        *rows.entry(label.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, label: &str) -> u64 {
+        self.rows.lock().expect("labeled counter poisoned").get(label).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.rows.lock().expect("labeled counter poisoned").clone()
+    }
+}
+
+/// The registry: every engine-plane metric, shared as one `Arc` between
+/// the engine session (writer) and the daemon's `/metrics` handler
+/// (reader). Counter totals are exact mirrors of the `CoreStats`
+/// accounting — the observability self-check asserts equality, not
+/// approximation.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    started: Instant,
+    // -- counters (engine lifecycle totals) --
+    pub requests: Counter,
+    pub scored_tokens: Counter,
+    pub prompt_tokens: Counter,
+    pub generated_tokens: Counter,
+    pub executed_macs: Counter,
+    pub admitted_macs: Counter,
+    pub preemptions: Counter,
+    pub deadline_evictions: Counter,
+    pub cancelled: Counter,
+    pub decode_rounds: Counter,
+    pub dispatch_batches: Counter,
+    pub mid_run_admissions: Counter,
+    // -- gauges (point-in-time occupancy) --
+    pub queue_depth: Gauge,
+    pub active_lanes: Gauge,
+    pub queued_macs: Gauge,
+    // -- histograms (timing distributions) --
+    pub ttft: Histogram,
+    pub inter_token: Histogram,
+    pub queue_wait: Histogram,
+    pub prefill_phase: Histogram,
+    pub decode_phase: Histogram,
+    // -- label families (PR-7 scheduling vocabulary) --
+    pub tier_admissions: LabeledCounter,
+    pub tenant_requests: LabeledCounter,
+    pub tenant_declared_macs: LabeledCounter,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            started: Instant::now(),
+            requests: Counter::default(),
+            scored_tokens: Counter::default(),
+            prompt_tokens: Counter::default(),
+            generated_tokens: Counter::default(),
+            executed_macs: Counter::default(),
+            admitted_macs: Counter::default(),
+            preemptions: Counter::default(),
+            deadline_evictions: Counter::default(),
+            cancelled: Counter::default(),
+            decode_rounds: Counter::default(),
+            dispatch_batches: Counter::default(),
+            mid_run_admissions: Counter::default(),
+            queue_depth: Gauge::default(),
+            active_lanes: Gauge::default(),
+            queued_macs: Gauge::default(),
+            ttft: Histogram::new(&LATENCY_BOUNDS_S),
+            inter_token: Histogram::new(&LATENCY_BOUNDS_S),
+            queue_wait: Histogram::new(&LATENCY_BOUNDS_S),
+            prefill_phase: Histogram::new(&LATENCY_BOUNDS_S),
+            decode_phase: Histogram::new(&LATENCY_BOUNDS_S),
+            tier_admissions: LabeledCounter::default(),
+            tenant_requests: LabeledCounter::default(),
+            tenant_declared_macs: LabeledCounter::default(),
+        }
+    }
+
+    /// Observed execution rate in MACs/second since the registry was
+    /// created — `None` for a truly cold engine (no work executed yet).
+    /// The daemon's `Retry-After` drain estimate divides the queued-MAC
+    /// backlog by this.
+    pub fn macs_rate(&self) -> Option<f64> {
+        let macs = self.executed_macs.get();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if macs > 0 && elapsed > 0.0 {
+            Some(macs as f64 / elapsed)
+        } else {
+            None
+        }
+    }
+
+    /// Render the registry as Prometheus text exposition format
+    /// (version 0.0.4): fixed family order, sorted label rows, cumulative
+    /// `le` buckets with a closing `+Inf`.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(8192);
+        for (name, help, c) in [
+            ("requests_total", "Requests retired by the engine session.", &self.requests),
+            ("scored_tokens_total", "Prompt positions scored (Score requests).", &self.scored_tokens),
+            ("prompt_tokens_total", "Prompt tokens prefilled (Generate requests).", &self.prompt_tokens),
+            ("generated_tokens_total", "Tokens generated (Generate requests).", &self.generated_tokens),
+            ("executed_macs_total", "MACs executed by retired requests.", &self.executed_macs),
+            ("admitted_macs_total", "Declared MACs charged at admission.", &self.admitted_macs),
+            ("preemptions_total", "Batch lanes preempted at a token boundary.", &self.preemptions),
+            ("deadline_evictions_total", "Requests evicted by deadline expiry.", &self.deadline_evictions),
+            ("cancelled_total", "Requests cancelled mid-flight.", &self.cancelled),
+            ("decode_rounds_total", "Decode rounds executed.", &self.decode_rounds),
+            ("dispatch_batches_total", "Dispatch batches claimed from the queue.", &self.dispatch_batches),
+            ("mid_run_admissions_total", "Admissions into a mid-run freed slot.", &self.mid_run_admissions),
+        ] {
+            push_counter(&mut out, name, help, c.get());
+        }
+        for (name, help, g) in [
+            ("queue_depth", "Requests waiting in the admission queue.", &self.queue_depth),
+            ("active_lanes", "Lanes currently occupied.", &self.active_lanes),
+            ("queued_macs", "Declared-MAC backlog of the admission queue.", &self.queued_macs),
+        ] {
+            push_gauge(&mut out, name, help, g.get());
+        }
+        push_labeled(
+            &mut out,
+            "tier_admissions_total",
+            "Admissions per scheduling tier.",
+            "tier",
+            &self.tier_admissions,
+        );
+        push_labeled(
+            &mut out,
+            "tenant_requests_total",
+            "Admissions per fairness-ledger tenant.",
+            "tenant",
+            &self.tenant_requests,
+        );
+        push_labeled(
+            &mut out,
+            "tenant_declared_macs_total",
+            "Declared MACs charged per tenant at admission.",
+            "tenant",
+            &self.tenant_declared_macs,
+        );
+        for (name, help, h) in [
+            ("ttft_seconds", "Time to first token (queue wait + prefill).", &self.ttft),
+            ("inter_token_seconds", "Latency between consecutive tokens.", &self.inter_token),
+            ("queue_wait_seconds", "Submission to admission wait.", &self.queue_wait),
+        ] {
+            push_histogram(&mut out, name, help, &[], h);
+        }
+        // the two kernel phases share one family, split by the `phase` label
+        let name = "phase_seconds";
+        push_help_type(&mut out, name, "Wall-clock per engine kernel phase fan-out.", "histogram");
+        push_histogram_rows(&mut out, name, &[("phase", "decode")], &self.decode_phase);
+        push_histogram_rows(&mut out, name, &[("phase", "prefill")], &self.prefill_phase);
+        out
+    }
+}
+
+/// The exec pool's span hook routes phase timings into the registry's
+/// phase histograms — the timing plane's view of kernel fan-outs.
+impl SpanObserver for MetricsRegistry {
+    fn span(&self, label: &'static str, _items: usize, seconds: f64) {
+        match label {
+            "prefill" => self.prefill_phase.observe(seconds),
+            "decode" => self.decode_phase.observe(seconds),
+            _ => {}
+        }
+    }
+}
+
+fn fmt_f64(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+fn push_help_type(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {METRICS_NS}_{name} {help}\n"));
+    out.push_str(&format!("# TYPE {METRICS_NS}_{name} {kind}\n"));
+}
+
+fn push_counter(out: &mut String, name: &str, help: &str, value: u64) {
+    push_help_type(out, name, help, "counter");
+    out.push_str(&format!("{METRICS_NS}_{name} {value}\n"));
+}
+
+fn push_gauge(out: &mut String, name: &str, help: &str, value: u64) {
+    push_help_type(out, name, help, "gauge");
+    out.push_str(&format!("{METRICS_NS}_{name} {value}\n"));
+}
+
+fn push_labeled(out: &mut String, name: &str, help: &str, label: &str, family: &LabeledCounter) {
+    push_help_type(out, name, help, "counter");
+    for (value, count) in family.snapshot() {
+        let block = label_block(&[(label, &value)]);
+        out.push_str(&format!("{METRICS_NS}_{name}{block} {count}\n"));
+    }
+}
+
+fn push_histogram_rows(out: &mut String, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, bound) in h.bounds().iter().enumerate() {
+        cum += counts[i];
+        let mut all = labels.to_vec();
+        let le = fmt_f64(*bound);
+        all.push(("le", &le));
+        out.push_str(&format!("{METRICS_NS}_{name}_bucket{} {cum}\n", label_block(&all)));
+    }
+    let mut all = labels.to_vec();
+    all.push(("le", "+Inf"));
+    out.push_str(&format!("{METRICS_NS}_{name}_bucket{} {}\n", label_block(&all), h.count()));
+    let block = label_block(labels);
+    out.push_str(&format!("{METRICS_NS}_{name}_sum{block} {}\n", fmt_f64(h.sum())));
+    out.push_str(&format!("{METRICS_NS}_{name}_count{block} {}\n", h.count()));
+}
+
+fn push_histogram(out: &mut String, name: &str, help: &str, labels: &[(&str, &str)], h: &Histogram) {
+    push_help_type(out, name, help, "histogram");
+    push_histogram_rows(out, name, labels, h);
+}
+
+/// Parse Prometheus text exposition into `sample-key -> value`, where the
+/// key is the metric name with its verbatim label block (e.g.
+/// `repro_ttft_seconds_bucket{le="0.001"}`). Strict enough to be the
+/// self-check's "parses as Prometheus text format" assertion: every
+/// non-comment line must be `name[{labels}] value` with a finite value.
+pub fn parse_exposition(text: &str) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, value) = line
+            .rsplit_once(' ')
+            .with_context(|| format!("line {}: no sample value in `{line}`", lineno + 1))?;
+        let name_end = key.find('{').unwrap_or(key.len());
+        let name = &key[..name_end];
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            bail!("line {}: bad metric name `{name}`", lineno + 1);
+        }
+        if name_end < key.len() && !key.ends_with('}') {
+            bail!("line {}: unterminated label block in `{key}`", lineno + 1);
+        }
+        let v: f64 = value
+            .parse()
+            .with_context(|| format!("line {}: bad sample value `{value}`", lineno + 1))?;
+        if !v.is_finite() {
+            bail!("line {}: non-finite sample value `{value}`", lineno + 1);
+        }
+        out.insert(key.to_string(), v);
+    }
+    Ok(out)
+}
+
+/// Pointwise `after - before` over two exposition scrapes (missing keys
+/// read as 0) — how the load generator turns two `/metrics` snapshots
+/// into the deltas attributable to its run.
+pub fn exposition_delta(
+    after: &BTreeMap<String, f64>,
+    before: &BTreeMap<String, f64>,
+) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for (k, v) in after {
+        out.insert(k.clone(), v - before.get(k).copied().unwrap_or(0.0));
+    }
+    out
+}
+
+/// Recover `(bounds, per-bucket counts, sum)` for the named histogram
+/// from parsed exposition samples, de-cumulating the `le` buckets.
+/// `None` when the histogram is absent. Works on raw scrapes and on
+/// [`exposition_delta`] outputs alike (cumulative counts subtract
+/// cleanly).
+pub fn histogram_from_samples(
+    samples: &BTreeMap<String, f64>,
+    name: &str,
+) -> Option<(Vec<f64>, Vec<u64>, f64)> {
+    let prefix = format!("{name}_bucket{{le=\"");
+    let mut rows: Vec<(f64, u64)> = Vec::new();
+    let mut overflow = None;
+    for (key, value) in samples {
+        let Some(rest) = key.strip_prefix(&prefix) else { continue };
+        let Some(le) = rest.strip_suffix("\"}") else { continue };
+        let cum = value.round().max(0.0) as u64;
+        if le == "+Inf" {
+            overflow = Some(cum);
+        } else {
+            rows.push((le.parse().ok()?, cum));
+        }
+    }
+    let total = overflow?;
+    if rows.is_empty() {
+        return None;
+    }
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let bounds: Vec<f64> = rows.iter().map(|r| r.0).collect();
+    let mut counts: Vec<u64> = Vec::with_capacity(rows.len() + 1);
+    let mut prev = 0u64;
+    for &(_, cum) in &rows {
+        counts.push(cum.saturating_sub(prev));
+        prev = cum;
+    }
+    counts.push(total.saturating_sub(prev));
+    let sum = samples.get(&format!("{name}_sum")).copied().unwrap_or(0.0);
+    Some((bounds, counts, sum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_histograms_accumulate() {
+        let m = MetricsRegistry::new();
+        m.requests.inc();
+        m.requests.add(2);
+        assert_eq!(m.requests.get(), 3);
+        m.queue_depth.set(7);
+        assert_eq!(m.queue_depth.get(), 7);
+        m.ttft.observe(0.0002);
+        m.ttft.observe(0.3);
+        assert_eq!(m.ttft.count(), 2);
+        assert!((m.ttft.sum() - 0.3002).abs() < 1e-12);
+        assert_eq!(m.ttft.max(), 0.3);
+        let counts = m.ttft.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 2);
+        m.tenant_requests.add("acme", 1);
+        m.tenant_requests.add("acme", 1);
+        assert_eq!(m.tenant_requests.get("acme"), 2);
+        assert_eq!(m.tenant_requests.get("other"), 0);
+    }
+
+    #[test]
+    fn macs_rate_is_none_until_work_ran() {
+        let m = MetricsRegistry::new();
+        assert!(m.macs_rate().is_none(), "cold engine has no observed rate");
+        m.executed_macs.add(1_000_000);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let rate = m.macs_rate().expect("work ran; rate is observable");
+        assert!(rate > 0.0);
+    }
+
+    #[test]
+    fn render_parses_and_roundtrips_the_counters() {
+        let m = MetricsRegistry::new();
+        m.requests.add(13);
+        m.admitted_macs.add(987_654);
+        m.tier_admissions.add("interactive", 3);
+        m.tier_admissions.add("batch", 10);
+        m.tenant_declared_macs.add("flood", 42);
+        m.ttft.observe(0.0004);
+        m.ttft.observe(9.9); // overflow bucket
+        let text = m.render();
+        let samples = parse_exposition(&text).unwrap();
+        assert_eq!(samples["repro_requests_total"], 13.0);
+        assert_eq!(samples["repro_admitted_macs_total"], 987_654.0);
+        assert_eq!(samples["repro_tier_admissions_total{tier=\"interactive\"}"], 3.0);
+        assert_eq!(samples["repro_tenant_declared_macs_total{tenant=\"flood\"}"], 42.0);
+        assert_eq!(samples["repro_ttft_seconds_count"], 2.0);
+        assert_eq!(samples["repro_ttft_seconds_bucket{le=\"+Inf\"}"], 2.0);
+        assert_eq!(samples["repro_ttft_seconds_bucket{le=\"0.0005\"}"], 1.0);
+        // phase family renders with both labels
+        assert!(text.contains("repro_phase_seconds_bucket{phase=\"prefill\",le=\"0.0001\"}"));
+    }
+
+    #[test]
+    fn histogram_recovers_from_exposition_and_deltas() {
+        let m = MetricsRegistry::new();
+        for v in [0.0002, 0.0002, 0.004, 9.0] {
+            m.inter_token.observe(v);
+        }
+        let samples = parse_exposition(&m.render()).unwrap();
+        let (bounds, counts, sum) =
+            histogram_from_samples(&samples, "repro_inter_token_seconds").unwrap();
+        assert_eq!(bounds, LATENCY_BOUNDS_S.to_vec());
+        assert_eq!(counts.iter().sum::<u64>(), 4);
+        assert_eq!(*counts.last().unwrap(), 1, "9.0 lands in the overflow bucket");
+        assert!((sum - 9.0044).abs() < 1e-9);
+        // a delta against a later scrape isolates the new observations
+        let before = samples;
+        m.inter_token.observe(0.0002);
+        let after = parse_exposition(&m.render()).unwrap();
+        let delta = exposition_delta(&after, &before);
+        let (_, dcounts, _) = histogram_from_samples(&delta, "repro_inter_token_seconds").unwrap();
+        assert_eq!(dcounts.iter().sum::<u64>(), 1);
+        assert_eq!(dcounts[1], 1, "only the new 0.0002 sample remains in the delta");
+    }
+
+    #[test]
+    fn parse_exposition_rejects_malformed_lines() {
+        assert!(parse_exposition("repro_x_total 1\n# comment\n\nrepro_y 2.5\n").is_ok());
+        assert!(parse_exposition("no-value-here\n").is_err());
+        assert!(parse_exposition("bad name 1\n").is_err());
+        assert!(parse_exposition("repro_x_total nan\n").is_err());
+        assert!(parse_exposition("repro_x{le=\"1\" 3\n").is_err());
+    }
+
+    #[test]
+    fn span_observer_routes_phase_labels() {
+        let m = MetricsRegistry::new();
+        m.span("prefill", 4, 0.001);
+        m.span("decode", 4, 0.002);
+        m.span("decode", 4, 0.003);
+        m.span("unknown", 1, 1.0);
+        assert_eq!(m.prefill_phase.count(), 1);
+        assert_eq!(m.decode_phase.count(), 2);
+    }
+}

@@ -1,0 +1,33 @@
+//! Observability plane: deterministic flight recording + wall-clock metrics.
+//!
+//! Two strictly separated planes, one invariant:
+//!
+//! * **Causal plane** ([`trace`]) — a ring-buffer flight recorder of
+//!   structured scheduler/lifecycle events. Every field is denominated in
+//!   rounds, arrival sequence numbers, and priced MACs — never wall
+//!   clock — so a recorded transcript is byte-diffable across
+//!   `--threads` counts and machine speeds. Exported as JSONL via
+//!   `repro daemon --trace-out` and `GET /admin/trace`.
+//! * **Timing plane** ([`metrics`]) — a lock-light registry of counters,
+//!   gauges, and fixed-bound histograms (TTFT, inter-token, queue wait,
+//!   per-phase kernel time) exposed as Prometheus text on
+//!   `GET /metrics`, with per-tier/per-tenant labels from the fairness
+//!   ledger. Wall clock lives here and only here.
+//!
+//! The invariant that makes this a correctness feature rather than
+//! logging: attaching either plane never changes scheduling decisions,
+//! token output, or printed self-check text (asserted bitwise by
+//! `scripts/verify.sh`), and the timing plane's counter totals equal the
+//! engine's analytic `CostModel`/`CoreStats` accounting exactly (asserted
+//! by the `repro daemon --self-check` observability phase).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    exposition_delta, histogram_from_samples, parse_exposition, sat_u64, Counter, Gauge,
+    Histogram, LabeledCounter, MetricsRegistry, LATENCY_BOUNDS_S, METRICS_NS,
+};
+pub use trace::{
+    reconstruct, render_jsonl, FlightRecorder, TraceEvent, TraceReplay, DEFAULT_TRACE_CAP,
+};

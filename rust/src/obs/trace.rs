@@ -1,0 +1,366 @@
+//! The causal plane: a wall-clock-free flight recorder of scheduler and
+//! lifecycle decisions.
+//!
+//! Every [`TraceEvent`] is denominated in *rounds* (the engine's
+//! scheduling-step counter) and *arrival sequence numbers* — never
+//! timestamps — so a recorded transcript is a pure function of (arrival
+//! order, declared cost, tier, deadline) and byte-diffs identically
+//! across `--threads`. The recorder is strictly observational: it is an
+//! optional ring buffer the engine writes into *after* each decision, so
+//! enabling it cannot perturb scheduling, event streams, or printed
+//! output (the non-perturbation bar the self-checks assert bitwise).
+//!
+//! [`reconstruct`] replays a transcript back into the aggregate
+//! accounting ([`TraceReplay`]) — admitted MACs, preemption count, the
+//! per-tenant ledger — which the self-checks and property tests compare
+//! against [`crate::engine::CoreStats`] for exact equality: the trace is
+//! complete enough to *be* the scheduler's audit log, not a sample of it.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::util::json::Json;
+
+/// Default flight-recorder ring capacity, in events.
+pub const DEFAULT_TRACE_CAP: usize = 65_536;
+
+/// One causal-plane record. All fields are deterministic: ids, arrival
+/// seqs, rounds, declared/executed MACs, tier names, bucket credit —
+/// no wall clock anywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request entered the admission queue with its declared price.
+    Enqueued {
+        id: usize,
+        /// Arrival sequence number (the scheduler's FIFO tie-breaker).
+        seq: u64,
+        tier: &'static str,
+        /// Declared cost: prefill + worst-case decode MACs.
+        cost_macs: u128,
+        /// Deadline on the session clock, as declared (None = unbounded).
+        deadline_s: Option<f64>,
+        /// Fairness-ledger key (None bills the anonymous `"-"` row).
+        tenant: Option<String>,
+    },
+    /// A request left the queue and took a slot.
+    Admitted {
+        id: usize,
+        /// Scheduling round of the admission.
+        round: u64,
+        /// Admission order (the `Admitted` event's `seq`).
+        seq: usize,
+        tier: &'static str,
+        /// The tier bucket's remaining credit *after* the charge
+        /// (0 for an unlimited bucket, which is never debited).
+        bucket_credit: i128,
+        /// True for the work-conserving escape hatch: an idle engine
+        /// admitted past a dry bucket rather than stalling.
+        forced: bool,
+    },
+    /// Queued work was held back this round: free slots existed but no
+    /// queued tier had bucket credit. `id`/`tier` identify the head of
+    /// the queue in scheduling-key order.
+    Deferred { id: usize, round: u64, tier: &'static str, reason: &'static str },
+    /// A batch lane yielded its slot at a token boundary so waiting
+    /// interactive work could admit.
+    Preempted { victim: usize, beneficiary: usize, round: u64 },
+    /// A lane's prefill (or scoring forward) completed, with the MACs it
+    /// executed.
+    PrefillDone { id: usize, round: u64, macs: u128 },
+    /// One decode round advanced `batch` lanes by one token each,
+    /// executing `macs` in total.
+    DecodeRound { round: u64, batch: usize, macs: u128 },
+    /// A request retired (from a slot or straight from the queue).
+    Finished { id: usize, round: u64, reason: &'static str, tokens: usize },
+}
+
+fn obj(entries: Vec<(&'static str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+impl TraceEvent {
+    /// The event as a JSON object with sorted keys — the deterministic
+    /// JSONL line format of `--trace-out` and `GET /admin/trace`. MACs
+    /// are emitted as JSON numbers (f64), which is lossless for every
+    /// workload this stack prices and deterministic regardless.
+    pub fn to_json(&self) -> Json {
+        match self {
+            TraceEvent::Enqueued { id, seq, tier, cost_macs, deadline_s, tenant } => {
+                let mut entries = vec![
+                    ("ev", Json::Str("enqueued".to_string())),
+                    ("id", Json::Num(*id as f64)),
+                    ("seq", Json::Num(*seq as f64)),
+                    ("tier", Json::Str(tier.to_string())),
+                    ("cost_macs", Json::Num(*cost_macs as f64)),
+                ];
+                if let Some(d) = deadline_s {
+                    entries.push(("deadline_s", Json::Num(*d)));
+                }
+                if let Some(t) = tenant {
+                    entries.push(("tenant", Json::Str(t.clone())));
+                }
+                obj(entries)
+            }
+            TraceEvent::Admitted { id, round, seq, tier, bucket_credit, forced } => obj(vec![
+                ("ev", Json::Str("admitted".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("seq", Json::Num(*seq as f64)),
+                ("tier", Json::Str(tier.to_string())),
+                ("bucket_credit", Json::Num(*bucket_credit as f64)),
+                ("forced", Json::Bool(*forced)),
+            ]),
+            TraceEvent::Deferred { id, round, tier, reason } => obj(vec![
+                ("ev", Json::Str("deferred".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("tier", Json::Str(tier.to_string())),
+                ("reason", Json::Str(reason.to_string())),
+            ]),
+            TraceEvent::Preempted { victim, beneficiary, round } => obj(vec![
+                ("ev", Json::Str("preempted".to_string())),
+                ("victim", Json::Num(*victim as f64)),
+                ("beneficiary", Json::Num(*beneficiary as f64)),
+                ("round", Json::Num(*round as f64)),
+            ]),
+            TraceEvent::PrefillDone { id, round, macs } => obj(vec![
+                ("ev", Json::Str("prefill_done".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("macs", Json::Num(*macs as f64)),
+            ]),
+            TraceEvent::DecodeRound { round, batch, macs } => obj(vec![
+                ("ev", Json::Str("decode_round".to_string())),
+                ("round", Json::Num(*round as f64)),
+                ("batch", Json::Num(*batch as f64)),
+                ("macs", Json::Num(*macs as f64)),
+            ]),
+            TraceEvent::Finished { id, round, reason, tokens } => obj(vec![
+                ("ev", Json::Str("finished".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("reason", Json::Str(reason.to_string())),
+                ("tokens", Json::Num(*tokens as f64)),
+            ]),
+        }
+    }
+}
+
+/// Render a transcript as JSONL (one sorted-key JSON object per line,
+/// trailing newline) — deterministic bytes for a deterministic event
+/// sequence, which is what `scripts/verify.sh` byte-diffs across thread
+/// counts.
+pub fn render_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Bounded ring buffer of causal-plane events. Owned by the engine
+/// session (single writer, no locking); when full, the oldest events are
+/// evicted and counted in [`FlightRecorder::dropped`].
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder { cap: cap.max(1), events: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted by the ring bound (0 = the transcript is complete).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain every buffered event, oldest first.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        self.events.drain(..).collect()
+    }
+}
+
+/// Aggregate accounting replayed from a transcript — the fields the
+/// self-checks and property tests compare against
+/// [`crate::engine::CoreStats`] for exact equality.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceReplay {
+    pub enqueued: usize,
+    pub admitted: usize,
+    /// Requests retired (== `CoreStats::requests` for a drained session).
+    pub finished: usize,
+    pub preemptions: usize,
+    pub deferrals: usize,
+    pub decode_rounds: usize,
+    /// Sum of declared costs over admissions (== `CoreStats::admitted_macs`).
+    pub admitted_macs: u128,
+    /// Sum of `PrefillDone` + `DecodeRound` MACs (== `CoreStats::macs`
+    /// once every admitted lane has retired).
+    pub executed_macs: u128,
+    /// Per-tenant `(requests, declared_macs)` ledger replayed from the
+    /// `Enqueued` costs of admitted ids (== `CoreStats::tenants`).
+    pub tenants: BTreeMap<String, (usize, u128)>,
+}
+
+/// Replay a transcript into its aggregate accounting. Joins `Admitted`
+/// events with the declared cost and tenant carried by the matching
+/// `Enqueued` event, so the returned ledger is exactly what admission
+/// charged.
+pub fn reconstruct(events: &[TraceEvent]) -> TraceReplay {
+    let mut replay = TraceReplay::default();
+    let mut declared: BTreeMap<usize, (u128, String)> = BTreeMap::new();
+    for ev in events {
+        match ev {
+            TraceEvent::Enqueued { id, cost_macs, tenant, .. } => {
+                replay.enqueued += 1;
+                let tenant = tenant.clone().unwrap_or_else(|| "-".to_string());
+                declared.insert(*id, (*cost_macs, tenant));
+            }
+            TraceEvent::Admitted { id, .. } => {
+                replay.admitted += 1;
+                if let Some((cost, tenant)) = declared.get(id) {
+                    replay.admitted_macs += cost;
+                    let row = replay.tenants.entry(tenant.clone()).or_default();
+                    row.0 += 1;
+                    row.1 += cost;
+                }
+            }
+            TraceEvent::Deferred { .. } => replay.deferrals += 1,
+            TraceEvent::Preempted { .. } => replay.preemptions += 1,
+            TraceEvent::PrefillDone { macs, .. } => replay.executed_macs += macs,
+            TraceEvent::DecodeRound { macs, .. } => {
+                replay.decode_rounds += 1;
+                replay.executed_macs += macs;
+            }
+            TraceEvent::Finished { .. } => replay.finished += 1,
+        }
+    }
+    replay
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let mut rec = FlightRecorder::new(2);
+        for id in 0..4 {
+            rec.record(TraceEvent::Finished { id, round: 1, reason: "eos", tokens: 1 });
+        }
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped(), 2);
+        let kept = rec.drain();
+        assert!(rec.is_empty());
+        let ids: Vec<usize> = kept
+            .iter()
+            .map(|e| match e {
+                TraceEvent::Finished { id, .. } => *id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, [2, 3], "oldest events are evicted first");
+    }
+
+    #[test]
+    fn jsonl_lines_are_sorted_key_objects() {
+        let events = vec![
+            TraceEvent::Enqueued {
+                id: 7,
+                seq: 0,
+                tier: "batch",
+                cost_macs: 1234,
+                deadline_s: Some(2.5),
+                tenant: Some("acme".to_string()),
+            },
+            TraceEvent::DecodeRound { round: 3, batch: 2, macs: 99 },
+        ];
+        let text = render_jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            r#"{"cost_macs":1234,"deadline_s":2.5,"ev":"enqueued","id":7,"seq":0,"tenant":"acme","tier":"batch"}"#
+        );
+        assert_eq!(lines[1], r#"{"batch":2,"ev":"decode_round","macs":99,"round":3}"#);
+        // every line parses back
+        for line in lines {
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn reconstruct_joins_admissions_with_declared_costs() {
+        let events = vec![
+            TraceEvent::Enqueued {
+                id: 0,
+                seq: 0,
+                tier: "batch",
+                cost_macs: 100,
+                deadline_s: None,
+                tenant: Some("a".to_string()),
+            },
+            TraceEvent::Enqueued {
+                id: 1,
+                seq: 1,
+                tier: "interactive",
+                cost_macs: 40,
+                deadline_s: None,
+                tenant: None,
+            },
+            TraceEvent::Admitted {
+                id: 1,
+                round: 1,
+                seq: 0,
+                tier: "interactive",
+                bucket_credit: 0,
+                forced: false,
+            },
+            TraceEvent::Deferred { id: 0, round: 1, tier: "batch", reason: "bucket-exhausted" },
+            TraceEvent::Admitted {
+                id: 0,
+                round: 2,
+                seq: 1,
+                tier: "batch",
+                bucket_credit: -60,
+                forced: false,
+            },
+            TraceEvent::PrefillDone { id: 1, round: 1, macs: 30 },
+            TraceEvent::DecodeRound { round: 1, batch: 1, macs: 10 },
+            TraceEvent::Preempted { victim: 0, beneficiary: 1, round: 3 },
+            TraceEvent::Finished { id: 0, round: 3, reason: "preempted", tokens: 1 },
+            TraceEvent::Finished { id: 1, round: 4, reason: "eos", tokens: 2 },
+        ];
+        let replay = reconstruct(&events);
+        assert_eq!(replay.enqueued, 2);
+        assert_eq!(replay.admitted, 2);
+        assert_eq!(replay.finished, 2);
+        assert_eq!(replay.preemptions, 1);
+        assert_eq!(replay.deferrals, 1);
+        assert_eq!(replay.decode_rounds, 1);
+        assert_eq!(replay.admitted_macs, 140);
+        assert_eq!(replay.executed_macs, 40);
+        assert_eq!(replay.tenants.get("a"), Some(&(1, 100)));
+        assert_eq!(replay.tenants.get("-"), Some(&(1, 40)));
+    }
+}

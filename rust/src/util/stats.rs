@@ -43,6 +43,49 @@ impl LatencySummary {
             max: samples[n - 1],
         }
     }
+
+    /// Summarize a fixed-bound histogram: `counts` holds one per-bucket
+    /// (non-cumulative) count per bound plus a final overflow bucket, and
+    /// `sum` is the exact sum of all observations (so `mean` stays exact
+    /// even though the percentiles quantize to bucket upper bounds).
+    ///
+    /// Same nearest-rank rule as [`LatencySummary::from_unsorted`], applied
+    /// to the histogram's implied sorted order: rank `r` resolves to the
+    /// upper bound of the bucket containing the `r`-th observation.
+    /// Overflow observations clamp to the last finite bound (the bucket
+    /// has no upper edge), which also bounds `max` — callers that track
+    /// the exact max separately can patch it in afterwards. Empty
+    /// histograms return the all-zero summary.
+    pub fn from_histogram(bounds: &[f64], counts: &[u64], sum: f64) -> LatencySummary {
+        assert_eq!(
+            counts.len(),
+            bounds.len() + 1,
+            "per-bucket counts must include the overflow bucket"
+        );
+        let n_u64: u64 = counts.iter().sum();
+        if n_u64 == 0 {
+            return LatencySummary::default();
+        }
+        let value_at = |rank: u64| -> f64 {
+            let mut seen = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                seen += c;
+                if rank <= seen {
+                    // overflow bucket clamps to the last finite bound
+                    return bounds[i.min(bounds.len() - 1)];
+                }
+            }
+            bounds[bounds.len() - 1]
+        };
+        let rank_of = |q: f64| -> u64 { ((q * n_u64 as f64).ceil() as u64).clamp(1, n_u64) };
+        LatencySummary {
+            n: n_u64 as usize,
+            mean: sum / n_u64 as f64,
+            p50: value_at(rank_of(0.50)),
+            p95: value_at(rank_of(0.95)),
+            max: value_at(n_u64),
+        }
+    }
 }
 
 /// The accounting every request front-end shares: one completed engine
@@ -176,6 +219,55 @@ mod tests {
         assert_eq!(z.tokens_per_s(), 0.0);
         assert_eq!(z.s_per_token(), 0.0);
         assert_eq!(z.macs_per_token(), 0);
+    }
+
+    #[test]
+    fn histogram_summary_boundary_cases() {
+        let bounds = [0.001, 0.01, 0.1];
+        // 0 samples: all-zero summary, same as from_unsorted(vec![])
+        let s = LatencySummary::from_histogram(&bounds, &[0, 0, 0, 0], 0.0);
+        assert_eq!(s, LatencySummary::default());
+        // 1 sample: every percentile is its bucket's upper bound
+        let s = LatencySummary::from_histogram(&bounds, &[0, 1, 0, 0], 0.004);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 0.004);
+        assert_eq!((s.p50, s.p95, s.max), (0.01, 0.01, 0.01));
+        // 2 samples in distinct buckets: nearest-rank p50 is the lower one
+        let s = LatencySummary::from_histogram(&bounds, &[1, 0, 1, 0], 0.05);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean, 0.025);
+        assert_eq!((s.p50, s.p95, s.max), (0.001, 0.1, 0.1));
+    }
+
+    #[test]
+    fn histogram_summary_single_bucket_and_overflow() {
+        // single-bound histogram, all mass in the one finite bucket
+        let s = LatencySummary::from_histogram(&[0.5], &[10, 0], 2.0);
+        assert_eq!(s.n, 10);
+        assert_eq!(s.mean, 0.2);
+        assert_eq!((s.p50, s.p95, s.max), (0.5, 0.5, 0.5));
+        // overflow observations clamp to the last finite bound
+        let s = LatencySummary::from_histogram(&[0.5], &[0, 3], 30.0);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean, 10.0);
+        assert_eq!((s.p50, s.p95, s.max), (0.5, 0.5, 0.5));
+    }
+
+    #[test]
+    fn histogram_summary_matches_raw_percentiles_at_bucket_edges() {
+        // samples placed exactly on bucket bounds: histogram and raw
+        // nearest-rank agree
+        let bounds = [1.0, 2.0, 3.0, 4.0];
+        let samples = vec![1.0, 2.0, 2.0, 3.0, 4.0];
+        let mut counts = [0u64; 5];
+        for s in &samples {
+            let i = bounds.iter().position(|b| s <= b).unwrap();
+            counts[i] += 1;
+        }
+        let from_hist =
+            LatencySummary::from_histogram(&bounds, &counts, samples.iter().sum());
+        let from_raw = LatencySummary::from_unsorted(samples);
+        assert_eq!(from_hist, from_raw);
     }
 
     #[test]

@@ -36,7 +36,7 @@ fn run_daemon(
     let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
     let daemon = Daemon::bind(
         &model,
-        DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 2 },
+        DaemonConfig { addr: "127.0.0.1:0".into(), engine, retry_after_s: 2, obs: true },
     )
     .unwrap();
     let ctl = daemon.control();

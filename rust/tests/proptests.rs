@@ -950,6 +950,127 @@ fn prop_batch_flood_never_starves_interactive() {
     }
 }
 
+/// Property: the causal-plane flight recorder is a faithful transcript.
+/// For random tiered multi-tenant workloads, the recorded event stream is
+/// bitwise identical at `--threads 1/2/8`, and replaying it through
+/// `obs::reconstruct` recovers the session's `CoreStats` accounting
+/// exactly — requests, preemptions, decode rounds, admitted and executed
+/// MACs, and the per-tenant fairness ledger — while the timing-plane
+/// registry's counters agree with the same totals.
+#[test]
+fn prop_flight_recorder_reconstructs_core_stats_across_threads() {
+    use llm_rom::decode::Sampling;
+    use llm_rom::engine::{
+        synth_token_streams, EngineConfig, EngineCore, InferenceRequest, Tier,
+    };
+    use llm_rom::exec::ExecConfig;
+    use llm_rom::obs::{self, MetricsRegistry};
+    use llm_rom::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+    use std::sync::Arc;
+
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, 97).unwrap();
+    let model = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+    for case in 0..6u64 {
+        let mut rng = Rng::new(case * 9631 + 67);
+        let n = 3 + rng.below(8);
+        let prompt_len = 3 + rng.below(5);
+        let max_new = 2 + rng.below(4);
+        let slots = 1 + rng.below(2);
+        let prompts = synth_token_streams(&cfg, n, prompt_len, case * 37 + 5);
+        // per-request shape: (score?, interactive?, tenant, token budget).
+        // Deadlines stay None — deadline eviction is wall-clock driven and
+        // would make the transcript timing-dependent.
+        let shapes: Vec<(bool, bool, Option<&str>, Option<usize>)> = (0..n)
+            .map(|_| {
+                (
+                    rng.chance(0.25),
+                    rng.chance(0.35),
+                    *rng.choose(&[None, Some("alpha"), Some("beta")]),
+                    if rng.chance(0.5) { Some(1 + rng.below(max_new)) } else { None },
+                )
+            })
+            .collect();
+        let run = |threads: usize| {
+            let ecfg = EngineConfig {
+                slots,
+                queue_cap: n,
+                capacity: prompt_len + max_new,
+                max_new,
+                sampling: Sampling::Greedy,
+                seed: case,
+                eos: None,
+                exec: ExecConfig::with_threads(threads),
+                ..EngineConfig::default()
+            };
+            let registry = Arc::new(MetricsRegistry::new());
+            let mut session = EngineCore::new(&model, ecfg).session();
+            session.enable_tracing(obs::DEFAULT_TRACE_CAP);
+            session.attach_metrics(Arc::clone(&registry));
+            for (id, &(score, interactive, tenant, budget)) in shapes.iter().enumerate() {
+                let mut req = if score {
+                    InferenceRequest::score(id, prompts[id].clone())
+                } else {
+                    InferenceRequest::generate(id, prompts[id].clone(), budget)
+                };
+                if interactive {
+                    req = req.with_tier(Tier::Interactive);
+                }
+                if let Some(t) = tenant {
+                    req = req.with_tenant(t);
+                }
+                assert!(
+                    session.try_submit(req).unwrap().is_none(),
+                    "case {case} t{threads}: request {id} bounced"
+                );
+            }
+            while session.has_work() {
+                session.step().unwrap();
+            }
+            let trace = session.take_trace();
+            let (_, stats) = session.finish();
+            (trace, stats, registry)
+        };
+
+        let (trace, stats, registry) = run(1);
+        // the transcript replays into the engine's own accounting
+        let replay = obs::reconstruct(&trace);
+        assert_eq!(replay.enqueued, n, "case {case}");
+        assert_eq!(replay.admitted, n, "case {case}: an admission went unrecorded");
+        assert_eq!(replay.finished, stats.requests, "case {case}");
+        assert_eq!(replay.preemptions, stats.preemptions, "case {case}");
+        assert_eq!(replay.decode_rounds, stats.decode_rounds, "case {case}");
+        assert_eq!(replay.admitted_macs, stats.admitted_macs, "case {case}");
+        assert_eq!(replay.executed_macs, stats.macs, "case {case}");
+        let ledger: std::collections::BTreeMap<String, (usize, u128)> = stats
+            .tenants
+            .iter()
+            .map(|(k, u)| (k.clone(), (u.requests, u.declared_macs)))
+            .collect();
+        assert_eq!(replay.tenants, ledger, "case {case}: tenant ledger diverged");
+        // the timing plane counts the same totals
+        assert_eq!(registry.requests.get(), stats.requests as u64, "case {case}");
+        assert_eq!(registry.preemptions.get(), stats.preemptions as u64, "case {case}");
+        assert_eq!(registry.decode_rounds.get(), stats.decode_rounds as u64, "case {case}");
+        assert_eq!(registry.executed_macs.get(), obs::sat_u64(stats.macs), "case {case}");
+        assert_eq!(
+            registry.admitted_macs.get(),
+            obs::sat_u64(stats.admitted_macs),
+            "case {case}"
+        );
+        // and the whole transcript is invariant to the thread count
+        for threads in [2usize, 8] {
+            let (trace_n, stats_n, _) = run(threads);
+            assert_eq!(
+                trace_n, trace,
+                "case {case} t{threads}: causal-plane transcript moved"
+            );
+            assert_eq!(stats_n.macs, stats.macs, "case {case} t{threads}");
+            assert_eq!(stats_n.requests, stats.requests, "case {case} t{threads}");
+        }
+    }
+}
+
 /// Property: the FIFO-reduction bar. With a single tier, no deadlines, and
 /// an unlimited meter, the priced scheduler is bitwise FIFO — admission
 /// order equals submission order — and the whole outcome (admission seqs,

@@ -16,13 +16,19 @@ cargo build --release --examples --benches
 echo "== cargo test -q =="
 cargo test -q
 
+scratch=$(mktemp -d)
+trap 'rm -rf "$scratch"' EXIT
+
 # Serve + decode + streaming + daemon smoke tests, at --threads 1 AND
 # --threads 4: each run asserts its own invariants (factored ≡ dense logits
 # ≤1e-4, KV ≡ recompute streams, streamed events ≡ batch results, MACs ==
 # analytic accounting, SSE transcripts ≡ in-process event frames over real
 # loopback sockets), and everything the self-checks print is deterministic
 # — so any divergence between the two thread counts is a determinism
-# regression in the exec/engine core and fails the gate here.
+# regression in the exec/engine core and fails the gate here. Each check
+# then re-runs with the observability plane detached (--no-obs): the
+# printed output must be bitwise identical, which is the non-perturbation
+# contract — attaching tracing/metrics never changes behaviour.
 for check in "serve --self-check" "generate --self-check" "generate --stream --self-check" "daemon --self-check"; do
   echo "== repro $check --threads 1 =="
   if ! out_t1=$(./target/release/repro $check --threads 1); then
@@ -43,7 +49,34 @@ for check in "serve --self-check" "generate --self-check" "generate --stream --s
     diff <(echo "$out_t1") <(echo "$out_t4") >&2 || true
     exit 1
   fi
+  echo "== repro $check --threads 4 --no-obs =="
+  if ! out_noobs=$(./target/release/repro $check --threads 4 --no-obs); then
+    echo "$out_noobs"
+    echo "verify: FAILED — repro $check --threads 4 --no-obs" >&2
+    exit 1
+  fi
+  if [ "$out_noobs" != "$out_t4" ]; then
+    echo "verify: FAILED — repro $check output changes under --no-obs (observer perturbation)" >&2
+    diff <(echo "$out_t4") <(echo "$out_noobs") >&2 || true
+    exit 1
+  fi
+  echo "-- identical with and without observability"
 done
+
+# Causal-plane determinism gate: the scheduler self-check's adversarial
+# tiered trace, exported as JSONL, must be byte-identical across thread
+# counts — every event is denominated in rounds/sequence numbers/MACs,
+# never wall clock, so any byte of difference is a determinism regression
+# in the flight recorder or the scheduler it records.
+echo "== flight-recorder trace: byte-identical across --threads 1 and 4 =="
+./target/release/repro generate --self-check --threads 1 --trace-out "$scratch/trace_t1.jsonl" >/dev/null
+./target/release/repro generate --self-check --threads 4 --trace-out "$scratch/trace_t4.jsonl" >/dev/null
+if ! cmp -s "$scratch/trace_t1.jsonl" "$scratch/trace_t4.jsonl"; then
+  echo "verify: FAILED — flight-recorder trace differs between --threads 1 and 4" >&2
+  diff "$scratch/trace_t1.jsonl" "$scratch/trace_t4.jsonl" >&2 || true
+  exit 1
+fi
+echo "-- trace identical ($(wc -l < "$scratch/trace_t1.jsonl") events)"
 
 # Perf regression gate: for every BENCH_*.json committed at the repo
 # root, re-run the matching benchmark with the same flags `make bench`
@@ -52,8 +85,7 @@ done
 # the others compare their tokens_per_s samples position by position).
 # Skips cleanly for any bench file not committed yet.
 echo "== bench regression gate (>15% tokens/sec drop fails) =="
-bench_tmp=$(mktemp -d)
-trap 'rm -rf "$bench_tmp"' EXIT
+bench_tmp="$scratch"
 
 # Every numeric sample named `key` in `file`, one per line, in order.
 bench_metric() { # file key
