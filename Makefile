@@ -12,19 +12,23 @@ build:
 test:
 	cd rust && cargo test -q
 
-# Machine-readable serving/decoding/scaling/wire-path benchmarks, tracked
-# across PRs (BENCH_serve.json / BENCH_decode.json / BENCH_parallel.json /
-# BENCH_daemon.json at the repo root). Offline: all fall back to a
-# synthetic mini artifact when no --ckpt is given. BENCH_decode.json
-# records TTFT/inter-token percentiles derived from the engine core's
-# per-token event timeline (latency_source: "event-timeline");
-# BENCH_parallel.json captures 1-vs-4-thread tokens/sec and compress
-# wall-clock so the perf trajectory records scaling; BENCH_daemon.json
-# measures the full HTTP/SSE transport — a self-hosted daemon driven
-# open-loop by `repro loadgen` over loopback.
+# Machine-readable serving/decoding/kernel/scaling/wire-path benchmarks,
+# tracked across PRs (BENCH_serve.json / BENCH_decode.json /
+# BENCH_kernels.json / BENCH_parallel.json / BENCH_daemon.json at the repo
+# root). Offline: all fall back to a synthetic mini artifact when no
+# --ckpt is given. BENCH_decode.json records TTFT/inter-token percentiles
+# derived from the engine core's per-token event timeline
+# (latency_source: "event-timeline"); BENCH_kernels.json captures the hot
+# path's matmul variants (scalar/SIMD/packed/int8) as GFLOP/s plus
+# factored vs factored-quant tokens/sec; BENCH_parallel.json captures
+# 1-vs-4-thread tokens/sec and compress wall-clock so the perf trajectory
+# records scaling; BENCH_daemon.json measures the full HTTP/SSE transport
+# — a self-hosted daemon driven open-loop by `repro loadgen` over
+# loopback.
 bench: build
 	cd rust && ./target/release/repro bench-serve --json ../BENCH_serve.json
 	cd rust && ./target/release/repro bench-decode --json ../BENCH_decode.json
+	cd rust && ./target/release/repro bench-kernels --json ../BENCH_kernels.json
 	cd rust && ./target/release/repro bench-parallel --threads 4 --json ../BENCH_parallel.json
 	cd rust && ./target/release/repro bench-daemon --threads 4 --json ../BENCH_daemon.json
 

@@ -21,6 +21,10 @@
 //!   factored, with MACs/token, tokens/sec, TTFT and inter-token latency
 //!   columns (`repro bench-decode`). Both benches also serialize to JSON
 //!   via `--json` ([`ServeBench::to_json`] / [`DecodeBench::to_json`]).
+//! - **Kernels bench** — the serving hot path's matmul variants (scalar /
+//!   SIMD / packed / int8-quantized) on one microbenchmark shape, plus an
+//!   end-to-end factored vs factored-quant serve of the same artifact
+//!   (`repro bench-kernels`, [`KernelsBench::to_json`]).
 //! - **Daemon bench** — self-hosted HTTP/SSE daemon driven open-loop by
 //!   the wire-path load generator over loopback, reporting achieved RPS
 //!   and TTFT / inter-token percentiles from both sides of the wire
@@ -340,6 +344,200 @@ pub fn serve_table(
     seed: u64,
 ) -> Result<String> {
     Ok(serve_bench(cm, requests, seq, config, seed)?.format())
+}
+
+/// One kernel's row of the microbenchmark: `reps` repetitions of an
+/// `m×k×n` `A·Bᵀ` matmul through one code path.
+pub struct KernelsBenchRow {
+    pub kernel: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub reps: usize,
+    pub wall_s: f64,
+}
+
+impl KernelsBenchRow {
+    pub fn gflops(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            2.0 * (self.m * self.k * self.n * self.reps) as f64 / self.wall_s / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One execution mode's end-to-end row (the factored vs factored-quant
+/// tokens/sec comparison behind the kernel rows).
+pub struct KernelsModeRow {
+    pub mode: ExecMode,
+    pub stats: ServeStats,
+}
+
+/// `repro bench-kernels`: the serving hot path's matmul variants head to
+/// head — naive scalar, the SIMD-dotted blocked kernel, the packed-panel
+/// kernel, and the int8-quantized kernel — on one shared `m×k×n`
+/// microbenchmark, plus an end-to-end factored vs factored-quant serve of
+/// the same artifact. Renders as a table ([`KernelsBench::format`]) or as
+/// the `BENCH_kernels.json` payload ([`KernelsBench::to_json`], `--json`;
+/// `scripts/verify.sh` gates the `gflops` and `tokens_per_s` samples
+/// against the committed numbers).
+pub struct KernelsBench {
+    pub rows: Vec<KernelsBenchRow>,
+    pub modes: Vec<KernelsModeRow>,
+    /// Max absolute logits disagreement, factored vs factored-quant.
+    pub max_quant_diff: f64,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl KernelsBench {
+    pub fn format(&self) -> String {
+        let mut out = String::from(
+            "Kernels: scalar vs SIMD vs packed vs quantized\n\
+             kernel        m     k     n   reps    wall_s   GFLOP/s\n",
+        );
+        for row in &self.rows {
+            out.push_str(&format!(
+                "{:<11} {:>3} {:>5} {:>5} {:>6} {:>9.4} {:>9.2}\n",
+                row.kernel, row.m, row.k, row.n, row.reps, row.wall_s,
+                row.gflops()
+            ));
+        }
+        out.push_str("mode            MMACs/tok   µs/tok     tok/s\n");
+        for row in &self.modes {
+            let s = &row.stats;
+            out.push_str(&format!(
+                "{:<15} {:>9.3} {:>8.1} {:>9.0}\n",
+                row.mode.name(),
+                s.macs_per_token() as f64 / 1e6,
+                s.s_per_token() * 1e6,
+                s.tokens_per_s(),
+            ));
+        }
+        out.push_str(&format!(
+            "max |Δlogits| factored vs factored-quant: {:.2e} ({} threads)\n",
+            self.max_quant_diff, self.threads
+        ));
+        out
+    }
+
+    /// Machine-readable form (the `BENCH_kernels.json` payload).
+    pub fn to_json(&self) -> Json {
+        let kernels = self
+            .rows
+            .iter()
+            .map(|row| {
+                json_obj(vec![
+                    ("kernel", Json::Str(row.kernel.to_string())),
+                    ("m", Json::Num(row.m as f64)),
+                    ("k", Json::Num(row.k as f64)),
+                    ("n", Json::Num(row.n as f64)),
+                    ("reps", Json::Num(row.reps as f64)),
+                    ("wall_s", Json::Num(row.wall_s)),
+                    ("gflops", Json::Num(row.gflops())),
+                ])
+            })
+            .collect();
+        let modes = self
+            .modes
+            .iter()
+            .map(|row| {
+                let s = &row.stats;
+                json_obj(vec![
+                    ("mode", Json::Str(row.mode.name().to_string())),
+                    ("macs_per_token", Json::Num(s.macs_per_token() as f64)),
+                    ("tokens_per_s", Json::Num(s.tokens_per_s())),
+                    ("us_per_token", Json::Num(s.s_per_token() * 1e6)),
+                ])
+            })
+            .collect();
+        json_obj(vec![
+            ("bench", Json::Str("kernels".to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("max_abs_quant_logit_diff", Json::Num(self.max_quant_diff)),
+            ("kernels", Json::Arr(kernels)),
+            ("modes", Json::Arr(modes)),
+        ])
+    }
+}
+
+/// Run the kernel microbenchmark + end-to-end mode comparison on one
+/// artifact. The microbenchmark shape is fixed (not taken from the
+/// artifact) so committed `BENCH_kernels.json` numbers stay comparable
+/// across model configs; the mode rows serve the artifact itself.
+pub fn kernels_bench(cm: &CompressedModel, exec: ExecConfig, seed: u64) -> Result<KernelsBench> {
+    use crate::linalg::simd::{
+        matmul_transb_packed_into, matmul_transb_quant_into, PackedWeight, QuantizedWeight,
+    };
+    use crate::linalg::{matmul_transb_blocked_into, matmul_transb_f32};
+    use crate::util::Rng;
+
+    const M: usize = 64;
+    const K: usize = 256;
+    const N: usize = 256;
+    const REPS: usize = 40;
+
+    fn time_reps(reps: usize, mut f: impl FnMut()) -> f64 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    let mut rng = Rng::new(seed ^ 0x4E75);
+    let a: Vec<f32> = (0..M * K).map(|_| rng.normal() as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..N * K).map(|_| rng.normal() as f32 * 0.1).collect();
+    let packed = PackedWeight::pack(&b, N, K);
+    let quant = QuantizedWeight::quantize(&b, N, K);
+    let mut out = vec![0.0f32; M * N];
+
+    // `sink` keeps every timed result observable so the optimizer cannot
+    // discard the kernel calls.
+    let mut sink = 0.0f32;
+    let mut rows = Vec::new();
+    let wall = time_reps(REPS, || {
+        let o = matmul_transb_f32(&a, &b, M, K, N);
+        sink += o[0];
+    });
+    rows.push(KernelsBenchRow { kernel: "scalar", m: M, k: K, n: N, reps: REPS, wall_s: wall });
+    let wall = time_reps(REPS, || {
+        matmul_transb_blocked_into(&a, &b, M, K, N, &mut out);
+        sink += out[0];
+    });
+    rows.push(KernelsBenchRow { kernel: "simd", m: M, k: K, n: N, reps: REPS, wall_s: wall });
+    let wall = time_reps(REPS, || {
+        matmul_transb_packed_into(&a, &packed, M, &mut out);
+        sink += out[0];
+    });
+    rows.push(KernelsBenchRow { kernel: "packed", m: M, k: K, n: N, reps: REPS, wall_s: wall });
+    let wall = time_reps(REPS, || {
+        matmul_transb_quant_into(&a, &quant, M, &mut out);
+        sink += out[0];
+    });
+    rows.push(KernelsBenchRow { kernel: "quantized", m: M, k: K, n: N, reps: REPS, wall_s: wall });
+    ensure!(sink.is_finite(), "kernel microbenchmark produced non-finite output");
+
+    let cfg = cm.params.config();
+    let config = ServeConfig { workers: 2, max_batch: 4, exec };
+    let mut modes = Vec::new();
+    let mut logits: Vec<Vec<f32>> = Vec::new();
+    for mode in [ExecMode::Factored, ExecMode::FactoredQuant] {
+        let model = ServeModel::from_artifact(cm, mode)?;
+        let engine = ServeEngine::new(model, config);
+        let (results, stats) = engine.run(synth_requests(cfg, 8, 32, seed))?;
+        logits.push(results.into_iter().flat_map(|r| r.logits).collect());
+        modes.push(KernelsModeRow { mode, stats });
+    }
+    ensure!(logits[0].len() == logits[1].len(), "mode outputs diverge in shape");
+    let max_quant_diff = logits[0]
+        .iter()
+        .zip(&logits[1])
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    Ok(KernelsBench { rows, modes, max_quant_diff, threads: exec.resolve(), seed })
 }
 
 /// One method's row of the decode benchmark.
@@ -1048,6 +1246,31 @@ mod tests {
         assert_eq!(j.get("threads").unwrap().as_f64().unwrap(), 1.0);
         let text = b.format();
         assert!(text.contains("factored-kv") && text.contains("dense-recompute"));
+    }
+
+    #[test]
+    fn kernels_bench_reports_all_variants_with_json() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 17).unwrap();
+        let b = kernels_bench(&cm, ExecConfig::with_threads(2), 19).unwrap();
+        let kernels: Vec<&str> = b.rows.iter().map(|r| r.kernel).collect();
+        assert_eq!(kernels, ["scalar", "simd", "packed", "quantized"]);
+        assert!(b.rows.iter().all(|r| r.gflops() > 0.0));
+        assert_eq!(b.modes.len(), 2);
+        assert_eq!(b.modes[0].mode, ExecMode::Factored);
+        assert_eq!(b.modes[1].mode, ExecMode::FactoredQuant);
+        // quantization changes bytes, not MACs
+        assert_eq!(
+            b.modes[0].stats.macs_per_token(),
+            b.modes[1].stats.macs_per_token(),
+        );
+        assert!(b.max_quant_diff.is_finite());
+        let j = Json::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "kernels");
+        assert_eq!(j.get("kernels").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("modes").unwrap().as_arr().unwrap().len(), 2);
+        let text = b.format();
+        assert!(text.contains("quantized") && text.contains("GFLOP/s"), "{text}");
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! over `std::net`, good enough for a reproduction daemon and fully
 //! exercisable offline over loopback.
 //!
+//! The daemon is execution-mode agnostic: the [`crate::serve::ServeModel`]
+//! it binds is built once at startup from the `--mode` flag (`dense`,
+//! `factored`, or `factored-quant` — the int8 quantized factored path,
+//! selected explicitly and never substituted silently), and nothing on
+//! the wire changes with the mode; only the kernels behind the logits do.
+//!
 //! # Endpoints
 //!
 //! | Endpoint            | Meaning                                               |

@@ -36,6 +36,13 @@
 //! `{"id","reason","tokens"}`. Wall-clock timestamps (`t_s`) are
 //! deliberately not on the wire — everything else is bitwise
 //! deterministic, and the self-check diffs it across thread counts.
+//!
+//! The schema carries no execution-mode field: the daemon's `--mode`
+//! (`dense` / `factored` / `factored-quant`) is fixed at startup and
+//! never negotiated per request, so a quantized deployment is an explicit
+//! operator decision — clients see identical envelopes in every mode
+//! (`factored-quant` logits differ only within its stated tolerance of
+//! the f32 factored path).
 
 use anyhow::{bail, ensure, Result};
 

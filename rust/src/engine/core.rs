@@ -50,7 +50,7 @@ use crate::decode::{KvCache, KvCachePool, Sampling};
 use crate::exec::{ExecConfig, ExecPool, SpanObserver};
 use crate::model::macs::{CostModel, RequestCost};
 use crate::obs::{sat_u64, FlightRecorder, MetricsRegistry, TraceEvent};
-use crate::serve::ServeModel;
+use crate::serve::{ServeModel, ServeScratch};
 use crate::util::{LatencySummary, RequestStats, Rng};
 
 use super::request::{
@@ -344,6 +344,10 @@ enum LaneKind {
         cache: KvCache,
         rng: Rng,
         recompute_macs: u128,
+        /// Per-lane scratch arena: steady-state decode rounds run the
+        /// `*_scratch` forwards with zero hot-path allocation. Lanes are
+        /// forwarded by independent workers, so each needs its own.
+        scratch: ServeScratch,
     },
 }
 
@@ -1015,6 +1019,7 @@ impl<'m> Session<'m> {
                 LaneKind::Generate {
                     max_new: max_new.unwrap_or(cfg.max_new).max(1),
                     rng: request_rng(cfg.seed, req.id),
+                    scratch: self.core.model.scratch(cfg.capacity.max(1)),
                     prompt,
                     tokens: Vec::new(),
                     cache,
@@ -1102,9 +1107,17 @@ impl<'m> Session<'m> {
                         *step_t_s = t0.elapsed().as_secs_f64();
                         *done = Some(FinishReason::Scored);
                     }
-                    LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } => {
-                        let (logits, m) = model.forward_prefill(prompt, cache, &intra)?;
-                        let first = sampling.sample(&logits, rng);
+                    LaneKind::Generate {
+                        prompt,
+                        max_new,
+                        tokens,
+                        cache,
+                        rng,
+                        recompute_macs,
+                        scratch,
+                    } => {
+                        let m = model.forward_prefill_scratch(prompt, cache, &intra, scratch)?;
+                        let first = sampling.sample(&scratch.logits, rng);
                         *macs = m;
                         *recompute_macs = model.macs_for(prompt.len());
                         *step_t_s = t0.elapsed().as_secs_f64();
@@ -1132,16 +1145,23 @@ impl<'m> Session<'m> {
         outer.observe(sink.as_deref().map(|m| m as &dyn SpanObserver), "decode", items, || {
             outer.try_parallel_for(active, |_, lane| -> Result<()> {
                 let Lane { kind, macs, step_t_s, done, .. } = lane;
-                let LaneKind::Generate { prompt, max_new, tokens, cache, rng, recompute_macs } =
-                    kind
+                let LaneKind::Generate {
+                    prompt,
+                    max_new,
+                    tokens,
+                    cache,
+                    rng,
+                    recompute_macs,
+                    scratch,
+                } = kind
                 else {
                     unreachable!("score lanes retire at admission")
                 };
                 let last_tok = *tokens.last().expect("active sequences hold >= 1 token");
-                let (logits, m) = model.forward_step_pooled(last_tok, cache, &intra)?;
+                let m = model.forward_step_scratch(last_tok, cache, &intra, scratch)?;
                 *macs += m;
                 *recompute_macs += model.macs_for(prompt.len() + tokens.len());
-                let next = sampling.sample(&logits, rng);
+                let next = sampling.sample(&scratch.logits, rng);
                 *step_t_s = t0.elapsed().as_secs_f64();
                 tokens.push(next);
                 *done = stop_reason(eos, next, tokens.len(), *max_new);

@@ -27,7 +27,14 @@
 //!   (`Admitted`/`Prefilled`/`Token`/`Finished`), cancellation and
 //!   deadline eviction — the substrate both [`serve`] and [`decode`]
 //!   front-ends adapt, with event order bitwise invariant to `--threads`
-//! - [`linalg`] — dense matrix substrate + symmetric eigensolvers
+//! - [`linalg`] — dense matrix substrate + symmetric eigensolvers, plus
+//!   [`linalg::simd`]: the serving hot path's portable SIMD microkernels
+//!   (fixed-lane-order dot/axpy, cache-aware packed weight panels
+//!   ([`linalg::simd::PackedWeight`]), per-row int8 quantized factors
+//!   ([`linalg::simd::QuantizedWeight`]), vectorized rmsnorm, and the
+//!   shared [`linalg::simd::RopeTable`] sin/cos cache) — every f32 kernel
+//!   bitwise identical to its scalar oracle and to itself at any
+//!   `--threads`
 //! - [`tensor`] — named tensors and the `.rtz` interchange container
 //! - [`runtime`] — PJRT executable loading/caching/marshalling
 //! - [`model`] — MiniLLaMA schema, parameter store, MACs accounting and
@@ -44,8 +51,12 @@
 //!   tables harness, examples, and benches
 //! - [`serve`] — factored-form serving: batched forward engine executing
 //!   compressed layers as two skinny matmuls (`r(d1+d2)` MACs) with
-//!   per-layer dense/low-rank dispatch, adapting the [`engine`] core's
-//!   request lifecycle, and latency/throughput/MAC accounting
+//!   per-layer dense/low-rank/int8-quantized dispatch
+//!   ([`serve::ExecMode::FactoredQuant`] — explicit, never a silent
+//!   substitute), packed-panel kernels, a per-request scratch arena
+//!   ([`serve::ServeScratch`]: zero hot-path allocation at steady state),
+//!   adapting the [`engine`] core's request lifecycle, and
+//!   latency/throughput/MAC accounting
 //! - [`decode`] — autoregressive generation over the serve path: per-slot
 //!   KV cache pool, single-token dense/factored `forward_step`, a
 //!   continuous-batching scheduler over the [`engine`] core (mid-run

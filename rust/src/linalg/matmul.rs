@@ -17,15 +17,17 @@ use crate::exec::ExecPool;
 use super::matrix::Matrix;
 
 /// Block edge tuned for ~32 KiB L1 (3 × 64×64 f64 panels ≈ 96 KiB L2-ish,
-/// inner panels L1-resident).
-const BLOCK: usize = 64;
+/// inner panels L1-resident). Shared with the packed kernels in
+/// [`super::simd`], which must keep the same k-block partial-sum
+/// boundaries to stay bitwise equal to the blocked kernel here.
+pub(crate) const BLOCK: usize = 64;
 
 /// Minimum multiply-accumulates (`m·k·n`) before a `par_*` kernel fans
 /// out: below this, scoped-thread spawn overhead (~tens of µs) rivals the
 /// matmul itself — the skinny factored matmuls stay serial and the outer
 /// request/sequence-level fan-out carries the parallelism. Purely a
 /// performance cutoff; results are identical either way.
-const PAR_MIN_MACS: usize = 1 << 18;
+pub(crate) const PAR_MIN_MACS: usize = 1 << 18;
 
 /// The blocked f64 kernel over row-major slices: `out += a @ b` with
 /// `out` pre-zeroed. Row `i` of the output depends only on row `i` of `a`
@@ -168,8 +170,20 @@ pub fn matmul_transb_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> 
 
 /// The blocked transposed-B f32 kernel over row-major slices (`out`
 /// pre-zeroed). Output row `i` depends only on input row `i` — the basis
-/// of the row-sharded serving kernel.
-fn matmul_transb_blocked_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+/// of the row-sharded serving kernel. The inner dot is the vectorized
+/// fixed-lane-order [`super::simd::dot_f32`]; because `BLOCK` is a
+/// multiple of [`super::simd::LANES`], every k-block starts lane
+/// assignment at lane 0, which is what lets the packed kernel
+/// ([`super::simd::matmul_transb_packed_into`]) reproduce this kernel's
+/// results bit for bit.
+pub fn matmul_transb_blocked_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
@@ -182,11 +196,7 @@ fn matmul_transb_blocked_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize
                 let orow = &mut out[i * n + j0..i * n + j1];
                 for (j, o) in (j0..j1).zip(orow.iter_mut()) {
                     let brow = &b[j * k + k0..j * k + k1];
-                    let mut acc = 0.0f32;
-                    for (x, y) in arow.iter().zip(brow) {
-                        acc += x * y;
-                    }
-                    *o += acc;
+                    *o += super::simd::dot_f32(arow, brow);
                 }
             }
         }
@@ -227,11 +237,32 @@ pub fn par_matmul_transb_blocked_f32(
         return matmul_transb_blocked_f32(a, b, m, k, n);
     }
     let mut out = vec![0.0f32; m * n];
-    pool.parallel_chunks(&mut out, n, |row0, chunk| {
+    par_matmul_transb_blocked_into(a, b, m, k, n, pool, &mut out);
+    out
+}
+
+/// Row-sharded [`matmul_transb_blocked_into`] over a caller-provided
+/// pre-zeroed `out` — the allocation-free form the serving scratch arena
+/// uses. Bitwise identical to the serial kernel for any thread count.
+pub fn par_matmul_transb_blocked_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &ExecPool,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    if pool.threads() <= 1 || m <= 1 || n == 0 || m * k * n < PAR_MIN_MACS {
+        return matmul_transb_blocked_into(a, b, m, k, n, out);
+    }
+    pool.parallel_chunks(out, n, |row0, chunk| {
         let rows = chunk.len() / n;
         matmul_transb_blocked_into(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, chunk);
     });
-    out
 }
 
 #[cfg(test)]

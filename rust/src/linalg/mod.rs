@@ -4,19 +4,30 @@
 //! no GPU and no deep-learning framework; this module is that substrate:
 //! a row-major `f64` matrix type, cache-blocked matmul, and two symmetric
 //! eigensolvers (Householder tridiagonalization + implicit-shift QL as the
-//! production path, cyclic Jacobi as the cross-check oracle).
+//! production path, cyclic Jacobi as the cross-check oracle). The [`simd`]
+//! submodule adds the serving-path microkernel layer: fixed-lane-order
+//! vectorized dot/axpy/rmsnorm, cache-aware packed weights, per-row int8
+//! quantized weights, and the shared rope table — all deterministic and
+//! thread-invariant by construction.
 
 pub mod eigen;
 pub mod jacobi;
 pub mod matrix;
 pub mod matmul;
+pub mod simd;
 pub mod svd;
 
 pub use eigen::{eigh, EigenDecomposition};
 pub use jacobi::eigh_jacobi;
 pub use matrix::Matrix;
 pub use matmul::{
-    matmul, matmul_f32, matmul_transb_blocked_f32, matmul_transb_f32, par_matmul, par_matmul_f32,
-    par_matmul_transb_blocked_f32,
+    matmul, matmul_f32, matmul_transb_blocked_f32, matmul_transb_blocked_into, matmul_transb_f32,
+    par_matmul, par_matmul_f32, par_matmul_transb_blocked_f32, par_matmul_transb_blocked_into,
+};
+pub use simd::{
+    axpy_f32, dot_f32, dot_f32_ref, matmul_transb_packed_into, matmul_transb_quant_into,
+    mean_square, par_matmul_transb_packed, par_matmul_transb_packed_into,
+    par_matmul_transb_quant_into, rmsnorm as rmsnorm_rows, PackedWeight, QuantizedWeight,
+    RopeTable, LANES, PANEL_ROWS,
 };
 pub use svd::{svd, Svd};

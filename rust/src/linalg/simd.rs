@@ -1,0 +1,737 @@
+//! Portable SIMD-style microkernels, cache-aware weight packing, an int8
+//! quantized weight form, and the shared rope table — the compute layer of
+//! the serving hot path (PR 9).
+//!
+//! Nothing here uses `std::simd` or intrinsics: every kernel is written as
+//! fixed-width lane loops ([`LANES`]-wide f32, [`MS_LANES`]-wide f64) over
+//! `chunks_exact`, which the compiler autovectorizes into packed mul/adds
+//! while the crate stays portable and dependency-free.
+//!
+//! # Determinism contract (the PR-4 bar)
+//!
+//! Every kernel reduces in one **fixed lane order**: element `i` of a
+//! reduction accumulates into lane `i % LANES`, tail elements fold into
+//! their lane positions, and the lane accumulators collapse through one
+//! fixed reduction tree ([`reduce_lanes`]). Consequences, each asserted by
+//! tests here and in `tests/proptests.rs`:
+//!
+//! - results are bit-for-bit reproducible and — because the `par_*` twins
+//!   row-shard over the same serial kernels — identical for any
+//!   `--threads`;
+//! - [`dot_f32`] is bitwise equal to its scalar lane-order emulation
+//!   [`dot_f32_ref`] on every input, so "vectorized" is a pure layout
+//!   transform, not a numerics change;
+//! - the packed kernel is bitwise equal to the unpacked blocked kernel:
+//!   [`PackedWeight`] panels pad with zeros, and a lane accumulator can
+//!   never be `-0.0` (it starts at `+0.0` and IEEE-754 round-to-nearest
+//!   addition of `±0.0` or of cancelling values yields `+0.0`), so
+//!   `acc + x·0.0 == acc` bitwise and padding is a no-op.
+//!
+//! The int8 kernels ([`QuantizedWeight`]) share the lane discipline — they
+//! are just as deterministic and thread-invariant — but approximate the
+//! f32 weights by construction: consumers hold them to a **stated
+//! tolerance** of the f32 factored path (`repro serve --self-check`),
+//! never to bitwise equality, and the mode that uses them
+//! (`serve::ExecMode::FactoredQuant`) is only ever selected explicitly.
+
+use std::sync::RwLock;
+
+use crate::exec::ExecPool;
+
+use super::matmul::{BLOCK, PAR_MIN_MACS};
+
+/// f32 lane width of the dot/axpy/matmul kernels (8 × f32 = one 256-bit
+/// register; narrower ISAs split the lane array into two 128-bit halves
+/// without changing results — the lane *order* is what's fixed).
+pub const LANES: usize = 8;
+
+/// f64 lane width of the mean-square reduction in [`rmsnorm`].
+pub const MS_LANES: usize = 4;
+
+/// Rows per [`PackedWeight`] panel (one output-register strip).
+pub const PANEL_ROWS: usize = 4;
+
+/// Collapse the 8 f32 lane accumulators through the fixed reduction tree.
+#[inline(always)]
+fn reduce_lanes(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// 8-lane dot product in the fixed lane-reduction order. Bitwise equal to
+/// [`dot_f32_ref`] on every input (the tail of a `chunks_exact` main loop
+/// starts at a multiple of `LANES`, so tail element `l` lands in lane `l`
+/// exactly as `i % LANES` assigns it).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ac = a.chunks_exact(LANES);
+    let bc = b.chunks_exact(LANES);
+    let (ar, br) = (ac.remainder(), bc.remainder());
+    for (ax, bx) in ac.zip(bc) {
+        for l in 0..LANES {
+            acc[l] += ax[l] * bx[l];
+        }
+    }
+    for (l, (x, y)) in ar.iter().zip(br).enumerate() {
+        acc[l] += x * y;
+    }
+    reduce_lanes(acc)
+}
+
+/// Scalar emulation of [`dot_f32`]'s exact lane order — the oracle the
+/// bitwise proptests pin the vectorized kernel against.
+pub fn dot_f32_ref(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        acc[i % LANES] += x * y;
+    }
+    reduce_lanes(acc)
+}
+
+/// `y += alpha·x`, 8-wide unrolled. Purely elementwise — no cross-element
+/// reduction — so unrolling cannot reorder anything: bitwise equal to the
+/// naive loop by construction.
+#[inline]
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let split = x.len() - x.len() % LANES;
+    let (xm, xr) = x.split_at(split);
+    let (ym, yr) = y.split_at_mut(split);
+    for (yx, xx) in ym.chunks_exact_mut(LANES).zip(xm.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yx[l] += alpha * xx[l];
+        }
+    }
+    for (yv, &xv) in yr.iter_mut().zip(xr) {
+        *yv += alpha * xv;
+    }
+}
+
+/// 4-lane f64 mean of squares with the fixed reduction
+/// `((l0+l1)+(l2+l3)) / n`.
+#[inline]
+pub fn mean_square(row: &[f32]) -> f64 {
+    let mut acc = [0.0f64; MS_LANES];
+    let rc = row.chunks_exact(MS_LANES);
+    let rem = rc.remainder();
+    for chunk in rc {
+        for l in 0..MS_LANES {
+            let v = chunk[l] as f64;
+            acc[l] += v * v;
+        }
+    }
+    for (l, &v) in rem.iter().enumerate() {
+        let v = v as f64;
+        acc[l] += v * v;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) / row.len() as f64
+}
+
+/// RMSNorm over the last axis: the [`mean_square`] lane reduction in f64,
+/// then the exact pre-vectorization normalize expression per element —
+/// `out[j] = (x[j] as f64 · inv_rms) as f32 · gain[j]`. Deterministic and
+/// row-independent (safe to row-shard).
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
+    let d = gain.len();
+    debug_assert_eq!(x.len() % d, 0);
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let inv = 1.0 / (mean_square(row) + eps).sqrt();
+        for j in 0..d {
+            orow[j] = (row[j] as f64 * inv) as f32 * gain[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rope table: precomputed inverse frequencies + per-position sin/cos band.
+
+/// Cached rotary-embedding table for one `(head_dim, theta)` band.
+///
+/// The closed-form rope (`model::reference::apply_rope`) recomputes
+/// `theta.powf(…)` and `sin_cos` for every `(position, pair)` on every
+/// call; this table computes the `hd/2` inverse frequencies once at
+/// construction and grows a per-position sin/cos band on demand
+/// ([`RopeTable::ensure`]), shared by every forward through one
+/// `ServeModel` (and by the reference model). Applying the table is
+/// **bitwise identical** to the closed-form path: the cached values are
+/// produced by the *same* f64 expressions, and the rotation itself is
+/// elementwise per `(t, head, pair)`, so neither caching nor the changed
+/// loop order can perturb a bit.
+#[derive(Debug)]
+pub struct RopeTable {
+    hd: usize,
+    /// Rotated pairs per head row (`hd / 2`).
+    pairs: usize,
+    /// `1 / theta^(2i/hd)` per pair — the exact `apply_rope` expression.
+    inv_freq: Vec<f64>,
+    /// Interleaved `(sin, cos)` per `(pos, pair)`: stride `2·pairs` per
+    /// position. Grown under a write lock; steady-state forwards only
+    /// take the read lock (prewarm via [`RopeTable::ensure`] to keep the
+    /// hot path allocation- and contention-free).
+    band: RwLock<Vec<f64>>,
+}
+
+impl RopeTable {
+    pub fn new(hd: usize, theta: f64) -> RopeTable {
+        let pairs = hd / 2;
+        let inv_freq = (0..pairs).map(|i| 1.0 / theta.powf(2.0 * i as f64 / hd as f64)).collect();
+        RopeTable { hd, pairs, inv_freq, band: RwLock::new(Vec::new()) }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hd
+    }
+
+    /// Grow the cached band to cover absolute positions `< pos_end`.
+    /// Idempotent and monotone; call once with the KV-cache capacity to
+    /// prewarm, after which [`RopeTable::apply_qk`] never writes.
+    pub fn ensure(&self, pos_end: usize) {
+        let stride = 2 * self.pairs;
+        let need = pos_end * stride;
+        if need == 0 || self.band.read().expect("rope table poisoned").len() >= need {
+            return;
+        }
+        let mut band = self.band.write().expect("rope table poisoned");
+        let mut pos = band.len() / stride;
+        band.reserve(need.saturating_sub(band.len()));
+        while pos < pos_end {
+            for &f in &self.inv_freq {
+                let (sin, cos) = (pos as f64 * f).sin_cos();
+                band.push(sin);
+                band.push(cos);
+            }
+            pos += 1;
+        }
+    }
+
+    /// Rotate full-width `(seq, d)` q/k buffers in place, head by head,
+    /// at absolute positions `pos0..pos0+seq` — the strided,
+    /// allocation-free replacement for the per-head copy loops the old
+    /// `rope_qk` ran. Bitwise identical to `apply_rope` over each head
+    /// slice.
+    pub fn apply_qk(&self, q: &mut [f32], k: &mut [f32], seq: usize, d: usize, nh: usize, pos0: usize) {
+        let hd = d / nh;
+        debug_assert_eq!(hd, self.hd, "rope table built for head_dim {}, applied at {hd}", self.hd);
+        let stride = 2 * self.pairs;
+        if stride == 0 || seq == 0 {
+            return;
+        }
+        self.ensure(pos0 + seq);
+        let band = self.band.read().expect("rope table poisoned");
+        for t in 0..seq {
+            let pb = &band[(pos0 + t) * stride..(pos0 + t + 1) * stride];
+            for h in 0..nh {
+                let at = t * d + h * hd;
+                rotate_pairs(&mut q[at..at + hd], pb);
+                rotate_pairs(&mut k[at..at + hd], pb);
+            }
+        }
+    }
+}
+
+/// Rotate one head row by its position's `(sin, cos)` band — f64
+/// arithmetic, the exact `apply_rope` rotation expression.
+#[inline]
+fn rotate_pairs(row: &mut [f32], band: &[f64]) {
+    for i in 0..row.len() / 2 {
+        let (sin, cos) = (band[2 * i], band[2 * i + 1]);
+        let a = row[2 * i] as f64;
+        let b = row[2 * i + 1] as f64;
+        row[2 * i] = (a * cos - b * sin) as f32;
+        row[2 * i + 1] = (a * sin + b * cos) as f32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache-aware weight packing.
+
+/// Cache-aware packed `Wᵀ` layout for the blocked transposed matmul.
+///
+/// The unpacked kernel reads `b` rows at stride `k` — each output column
+/// touches a new cache line per k-block. Packing rewrites the weight once
+/// (at `ServeModel::from_artifact`) into panel-major form: panels of
+/// [`PANEL_ROWS`] weight rows, each padded to a [`LANES`] multiple,
+/// interleaved by lane chunk — so the packed kernel streams one
+/// contiguous panel front to back per `(input row, k-block)` pass.
+///
+/// Padding is all zeros, which the fixed-order lane accumulators ignore
+/// bitwise (see the module doc), so [`matmul_transb_packed_into`] is
+/// bit-for-bit equal to the unpacked blocked kernel — asserted by tests
+/// here and in `tests/proptests.rs`.
+#[derive(Debug, Clone)]
+pub struct PackedWeight {
+    /// `ceil(n/PANEL_ROWS)` panels × `PANEL_ROWS·k_pad` values. Within a
+    /// panel, chunk `c` holds lanes `c·LANES..(c+1)·LANES` of rows
+    /// `0..PANEL_ROWS` back to back; panel rows past `n` are zero.
+    data: Vec<f32>,
+    n: usize,
+    k: usize,
+    k_pad: usize,
+}
+
+impl PackedWeight {
+    /// Pack a row-major `(n, k)` weight (the `b` operand of `y = x·Wᵀ`).
+    pub fn pack(w: &[f32], n: usize, k: usize) -> PackedWeight {
+        assert_eq!(w.len(), n * k, "packed weight shape mismatch");
+        let k_pad = k.div_ceil(LANES) * LANES;
+        let mut data = vec![0.0f32; n.div_ceil(PANEL_ROWS) * PANEL_ROWS * k_pad];
+        for j in 0..n {
+            let (p, r) = (j / PANEL_ROWS, j % PANEL_ROWS);
+            let row = &w[j * k..(j + 1) * k];
+            let panel = &mut data[p * PANEL_ROWS * k_pad..(p + 1) * PANEL_ROWS * k_pad];
+            for (c, chunk) in row.chunks(LANES).enumerate() {
+                let at = (c * PANEL_ROWS + r) * LANES;
+                panel[at..at + chunk.len()].copy_from_slice(chunk);
+            }
+        }
+        PackedWeight { data, n, k, k_pad }
+    }
+
+    /// Output dim (`n` of `y = x·Wᵀ`).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Reduction dim.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Resident bytes of the packed mirror, padding included —
+    /// observability only; *logical* weight bytes are accounted in
+    /// `model::macs::weight_bytes`.
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Packed-panel `out += a @ wᵀ` with `out` pre-zeroed by the caller.
+///
+/// Same k-block partial-sum boundaries as the unpacked blocked kernel
+/// (`BLOCK` is a multiple of `LANES`, so element `t`'s lane `t % LANES`
+/// is preserved across block starts) and the same per-`(i, j)` left-fold
+/// of k-block partials — hence bitwise identical output. Output row `i`
+/// depends only on input row `i`, which keeps row sharding exact.
+pub fn matmul_transb_packed_into(a: &[f32], w: &PackedWeight, m: usize, out: &mut [f32]) {
+    let (k, n, k_pad) = (w.k, w.n, w.k_pad);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(BLOCK % LANES, 0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, panel) in w.data.chunks_exact(PANEL_ROWS * k_pad).enumerate() {
+            let j0 = p * PANEL_ROWS;
+            let live = PANEL_ROWS.min(n - j0);
+            let mut tot = [0.0f32; PANEL_ROWS];
+            for k0 in (0..k).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(k);
+                let full = (k1 - k0) / LANES;
+                let rem = (k1 - k0) % LANES;
+                let c0 = k0 / LANES;
+                let mut acc = [[0.0f32; LANES]; PANEL_ROWS];
+                for c in 0..full {
+                    let ax = &arow[k0 + c * LANES..k0 + (c + 1) * LANES];
+                    let px = &panel[(c0 + c) * PANEL_ROWS * LANES..];
+                    for r in 0..PANEL_ROWS {
+                        for l in 0..LANES {
+                            acc[r][l] += ax[l] * px[r * LANES + l];
+                        }
+                    }
+                }
+                if rem > 0 {
+                    // Masked a-side tail (the input row really ends at k;
+                    // the panel's zero padding would be a bitwise no-op,
+                    // but reading `a` past its end would not be).
+                    let ax = &arow[k0 + full * LANES..k1];
+                    let px = &panel[(c0 + full) * PANEL_ROWS * LANES..];
+                    for r in 0..PANEL_ROWS {
+                        for (l, &x) in ax.iter().enumerate() {
+                            acc[r][l] += x * px[r * LANES + l];
+                        }
+                    }
+                }
+                for r in 0..PANEL_ROWS {
+                    tot[r] += reduce_lanes(acc[r]);
+                }
+            }
+            for r in 0..live {
+                orow[j0 + r] += tot[r];
+            }
+        }
+    }
+}
+
+/// Row-sharded [`matmul_transb_packed_into`] over a pre-zeroed `out` —
+/// bitwise identical to the serial kernel for any thread count (same
+/// fan-out guard as the other `par_*` kernels).
+pub fn par_matmul_transb_packed_into(
+    a: &[f32],
+    w: &PackedWeight,
+    m: usize,
+    pool: &ExecPool,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    if pool.threads() <= 1 || m <= 1 || n == 0 || m * k * n < PAR_MIN_MACS {
+        return matmul_transb_packed_into(a, w, m, out);
+    }
+    pool.parallel_chunks(out, n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_transb_packed_into(&a[row0 * k..(row0 + rows) * k], w, rows, chunk);
+    });
+}
+
+/// Allocating convenience wrapper over [`par_matmul_transb_packed_into`].
+pub fn par_matmul_transb_packed(a: &[f32], w: &PackedWeight, m: usize, pool: &ExecPool) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * w.n];
+    par_matmul_transb_packed_into(a, w, m, pool, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Int8 per-row symmetric quantization.
+
+/// Per-row symmetric int8 quantization of a row-major `(n, k)` weight.
+///
+/// Row `j` stores `q = round(w / scale_j)` clamped to `[-127, 127]` with
+/// `scale_j = max|row_j| / 127` in f32 (an all-zero row gets scale `1.0`
+/// and all-zero codes). Rows are padded to a [`LANES`] multiple with zero
+/// codes. 4× smaller than f32 and sequentially streamed — the byte side
+/// of the accounting lives in `model::macs::weight_bytes`.
+#[derive(Debug, Clone)]
+pub struct QuantizedWeight {
+    q: Vec<i8>,
+    /// One f32 dequantization scale per output row.
+    scales: Vec<f32>,
+    n: usize,
+    k: usize,
+    k_pad: usize,
+}
+
+impl QuantizedWeight {
+    pub fn quantize(w: &[f32], n: usize, k: usize) -> QuantizedWeight {
+        assert_eq!(w.len(), n * k, "quantized weight shape mismatch");
+        let k_pad = k.div_ceil(LANES) * LANES;
+        let mut q = vec![0i8; n * k_pad];
+        let mut scales = Vec::with_capacity(n);
+        for j in 0..n {
+            let row = &w[j * k..(j + 1) * k];
+            let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+            for (t, &v) in row.iter().enumerate() {
+                q[j * k_pad + t] = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+            scales.push(scale);
+        }
+        QuantizedWeight { q, scales, n, k, k_pad }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical payload bytes: one int8 code per weight plus one f32 scale
+    /// per row (lane padding excluded — a layout artifact, not payload).
+    pub fn logical_bytes(&self) -> u128 {
+        (self.n * self.k) as u128 + 4 * self.n as u128
+    }
+
+    /// Worst-case absolute quantization error of row `j` per unit of
+    /// input magnitude: half a code, i.e. `scale_j / 2`.
+    pub fn row_scale(&self, j: usize) -> f32 {
+        self.scales[j]
+    }
+}
+
+/// `out += (a @ qᵀ)·diag(scales)` over a quantized weight (`out`
+/// pre-zeroed): per output, one full-k 8-lane f32 pass over the int8
+/// codes (`x · (q as f32)`, fixed lane order, single [`reduce_lanes`] —
+/// the quantized path is tolerance-checked against f32, never
+/// bitwise-matched, so it skips the k-blocked partial sums), then one
+/// multiply by the row scale. Row `i` of `out` depends only on row `i`
+/// of `a`, so row sharding stays exact.
+pub fn matmul_transb_quant_into(a: &[f32], w: &QuantizedWeight, m: usize, out: &mut [f32]) {
+    let (k, n, k_pad) = (w.k, w.n, w.k_pad);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let qrow = &w.q[j * k_pad..j * k_pad + k];
+            let mut acc = [0.0f32; LANES];
+            let ac = arow.chunks_exact(LANES);
+            let qc = qrow.chunks_exact(LANES);
+            let (ar, qr) = (ac.remainder(), qc.remainder());
+            for (ax, qx) in ac.zip(qc) {
+                for l in 0..LANES {
+                    acc[l] += ax[l] * qx[l] as f32;
+                }
+            }
+            for (l, (&x, &qv)) in ar.iter().zip(qr).enumerate() {
+                acc[l] += x * qv as f32;
+            }
+            *o += w.scales[j] * reduce_lanes(acc);
+        }
+    }
+}
+
+/// Row-sharded [`matmul_transb_quant_into`] over a pre-zeroed `out` —
+/// bitwise identical to the serial quant kernel for any thread count.
+pub fn par_matmul_transb_quant_into(
+    a: &[f32],
+    w: &QuantizedWeight,
+    m: usize,
+    pool: &ExecPool,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    if pool.threads() <= 1 || m <= 1 || n == 0 || m * k * n < PAR_MIN_MACS {
+        return matmul_transb_quant_into(a, w, m, out);
+    }
+    pool.parallel_chunks(out, n, |row0, chunk| {
+        let rows = chunk.len() / n;
+        matmul_transb_quant_into(&a[row0 * k..(row0 + rows) * k], w, rows, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_transb_blocked_f32, matmul_transb_f32};
+    use crate::model::reference::apply_rope;
+    use crate::util::Rng;
+
+    /// Shapes straddling the lane width and the block edge.
+    const DIMS: &[usize] = &[1, 2, 3, 4, 5, 6, 7, 8, 9, 63, 64, 65, 129];
+
+    fn randv(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn dot_is_bitwise_equal_to_lane_order_reference() {
+        let mut rng = Rng::new(0x51);
+        for &len in DIMS {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            let got = dot_f32(&a, &b);
+            let want = dot_f32_ref(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {len}: {got} vs {want}");
+        }
+        assert_eq!(dot_f32(&[], &[]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn axpy_is_bitwise_equal_to_naive() {
+        let mut rng = Rng::new(0x52);
+        for &len in DIMS {
+            let x = randv(&mut rng, len);
+            let mut y = randv(&mut rng, len);
+            let mut want = y.clone();
+            let alpha = rng.normal() as f32;
+            axpy_f32(alpha, &x, &mut y);
+            for (w, xv) in want.iter_mut().zip(&x) {
+                *w += alpha * xv;
+            }
+            assert_eq!(y, want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_matches_sequential_reference_closely() {
+        // The lane reduction legitimately reassociates the f64 mean of
+        // squares, so this is a tolerance check (the *bitwise* bar applies
+        // to same-kernel comparisons, e.g. across thread counts).
+        let mut rng = Rng::new(0x53);
+        for &d in DIMS {
+            let rows = 3;
+            let x = randv(&mut rng, rows * d);
+            let gain = randv(&mut rng, d);
+            let mut got = vec![0.0f32; rows * d];
+            rmsnorm(&x, &gain, 1e-5, &mut got);
+            for (row, orow) in x.chunks_exact(d).zip(got.chunks_exact(d)) {
+                let ms: f64 =
+                    row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+                let inv = 1.0 / (ms + 1e-5).sqrt();
+                for j in 0..d {
+                    let want = (row[j] as f64 * inv) as f32 * gain[j];
+                    assert!((orow[j] - want).abs() <= 1e-6, "d {d}: {} vs {want}", orow[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mean_square_matches_lane_order_emulation_bitwise() {
+        let mut rng = Rng::new(0x54);
+        for &len in DIMS {
+            let row = randv(&mut rng, len);
+            let mut acc = [0.0f64; MS_LANES];
+            for (i, &v) in row.iter().enumerate() {
+                let v = v as f64;
+                acc[i % MS_LANES] += v * v;
+            }
+            let want = ((acc[0] + acc[1]) + (acc[2] + acc[3])) / len as f64;
+            assert_eq!(mean_square(&row).to_bits(), want.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn rope_table_is_bitwise_equal_to_apply_rope() {
+        let mut rng = Rng::new(0x55);
+        for &(seq, hd, nh, pos0) in
+            &[(1usize, 4usize, 2usize, 0usize), (5, 8, 1, 0), (7, 6, 3, 11), (4, 2, 4, 63)]
+        {
+            let d = hd * nh;
+            let theta = 10000.0;
+            let table = RopeTable::new(hd, theta);
+            let mut q = randv(&mut rng, seq * d);
+            let mut k = randv(&mut rng, seq * d);
+            // closed-form oracle over explicit per-head copies
+            let (mut q_want, mut k_want) = (q.clone(), k.clone());
+            for h in 0..nh {
+                for buf in [&mut q_want, &mut k_want] {
+                    let mut head = vec![0.0f32; seq * hd];
+                    for t in 0..seq {
+                        head[t * hd..(t + 1) * hd]
+                            .copy_from_slice(&buf[t * d + h * hd..t * d + (h + 1) * hd]);
+                    }
+                    apply_rope(&mut head, seq, hd, pos0, theta);
+                    for t in 0..seq {
+                        buf[t * d + h * hd..t * d + (h + 1) * hd]
+                            .copy_from_slice(&head[t * hd..(t + 1) * hd]);
+                    }
+                }
+            }
+            table.apply_qk(&mut q, &mut k, seq, d, nh, pos0);
+            assert_eq!(q, q_want, "q: seq {seq} hd {hd} nh {nh} pos0 {pos0}");
+            assert_eq!(k, k_want, "k: seq {seq} hd {hd} nh {nh} pos0 {pos0}");
+        }
+    }
+
+    #[test]
+    fn rope_table_grows_incrementally_and_identically() {
+        let table = RopeTable::new(8, 10000.0);
+        let mut rng = Rng::new(0x56);
+        let (seq, d, nh) = (3usize, 8usize, 1usize);
+        let mut a_q = randv(&mut rng, seq * d);
+        let mut a_k = randv(&mut rng, seq * d);
+        let (mut b_q, mut b_k) = (a_q.clone(), a_k.clone());
+        // one table grown step by step, a fresh one prewarmed whole
+        table.ensure(1);
+        table.apply_qk(&mut a_q, &mut a_k, seq, d, nh, 40);
+        let fresh = RopeTable::new(8, 10000.0);
+        fresh.ensure(64);
+        fresh.apply_qk(&mut b_q, &mut b_k, seq, d, nh, 40);
+        assert_eq!(a_q, b_q);
+        assert_eq!(a_k, b_k);
+    }
+
+    #[test]
+    fn packed_matmul_is_bitwise_equal_to_blocked() {
+        let mut rng = Rng::new(0x57);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (2, 3, 5),
+            (1, 8, 4),
+            (3, 9, 2),
+            (5, 63, 3),
+            (4, 64, 7),
+            (2, 65, 9),
+            (3, 129, 6),
+            (9, 70, 63),
+            (2, 40, 129),
+        ] {
+            let a = randv(&mut rng, m * k);
+            let w = randv(&mut rng, n * k);
+            let packed = PackedWeight::pack(&w, n, k);
+            let mut got = vec![0.0f32; m * n];
+            matmul_transb_packed_into(&a, &packed, m, &mut got);
+            let want = matmul_transb_blocked_f32(&a, &w, m, k, n);
+            assert_eq!(got, want, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn par_packed_and_quant_match_serial_bitwise_for_any_thread_count() {
+        let mut rng = Rng::new(0x58);
+        for &(m, k, n) in &[(1usize, 3usize, 4usize), (33, 17, 65), (96, 64, 64), (129, 70, 40)] {
+            let a = randv(&mut rng, m * k);
+            let w = randv(&mut rng, n * k);
+            let packed = PackedWeight::pack(&w, n, k);
+            let quant = QuantizedWeight::quantize(&w, n, k);
+            let mut want_p = vec![0.0f32; m * n];
+            matmul_transb_packed_into(&a, &packed, m, &mut want_p);
+            let mut want_q = vec![0.0f32; m * n];
+            matmul_transb_quant_into(&a, &quant, m, &mut want_q);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = ExecPool::new(threads);
+                let mut got_p = vec![0.0f32; m * n];
+                par_matmul_transb_packed_into(&a, &packed, m, &pool, &mut got_p);
+                assert_eq!(got_p, want_p, "packed {m}x{k}x{n} t{threads}");
+                let mut got_q = vec![0.0f32; m * n];
+                par_matmul_transb_quant_into(&a, &quant, m, &pool, &mut got_q);
+                assert_eq!(got_q, want_q, "quant {m}x{k}x{n} t{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_stays_within_the_stated_tolerance() {
+        let mut rng = Rng::new(0x59);
+        for &(m, k, n) in &[(2usize, 16usize, 8usize), (3, 65, 9), (4, 129, 31)] {
+            let a = randv(&mut rng, m * k);
+            let w = randv(&mut rng, n * k);
+            let quant = QuantizedWeight::quantize(&w, n, k);
+            let mut got = vec![0.0f32; m * n];
+            matmul_transb_quant_into(&a, &quant, m, &mut got);
+            let want = matmul_transb_f32(&a, &w, m, k, n);
+            // per-row error bound: k · (scale/2) · max|x| plus f32 slack
+            for i in 0..m {
+                let xmax = a[i * k..(i + 1) * k].iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
+                for j in 0..n {
+                    let bound = (k as f32) * (quant.row_scale(j) * 0.5) * xmax + 1e-4;
+                    let err = (got[i * n + j] - want[i * n + j]).abs();
+                    assert!(err <= bound, "{m}x{k}x{n} ({i},{j}): err {err} bound {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_handles_zero_rows_and_clamps() {
+        let w = vec![0.0f32; 2 * 4];
+        let q = QuantizedWeight::quantize(&w, 2, 4);
+        let a = vec![1.0f32, -2.0, 3.0, -4.0];
+        let mut out = vec![0.0f32; 2];
+        matmul_transb_quant_into(&a, &q, 1, &mut out);
+        assert_eq!(out, vec![0.0, 0.0], "all-zero rows quantize to exact zero output");
+        assert_eq!(q.logical_bytes(), (2 * 4 + 4 * 2) as u128);
+        // a row whose max is huge still round-trips codes within ±127
+        let w = vec![1e30f32, -1e30, 0.5e30, 1.0];
+        let q = QuantizedWeight::quantize(&w, 1, 4);
+        let mut out = vec![0.0f32; 1];
+        matmul_transb_quant_into(&[1.0, 1.0, 1.0, 0.0], &q, 1, &mut out);
+        assert!(out[0].is_finite());
+    }
+
+    #[test]
+    fn packed_resident_bytes_cover_padding() {
+        let w = vec![1.0f32; 5 * 9]; // n=5 → 2 panels of 4, k=9 → k_pad=16
+        let p = PackedWeight::pack(&w, 5, 9);
+        assert_eq!(p.n(), 5);
+        assert_eq!(p.k(), 9);
+        assert_eq!(p.resident_bytes(), 2 * PANEL_ROWS * 16 * 4);
+    }
+}

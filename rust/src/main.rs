@@ -10,8 +10,9 @@
 //! repro compress --ckpt ckpt.rtz [--method NAME] [--budget B]
 //! repro sweep    --ckpt ckpt.rtz [--methods a,b,c] [--budget B]
 //! repro eval     --ckpt ckpt.rtz [--ppl]
-//! repro serve    --ckpt artifact.rtz [--mode dense|factored] [--threads N] | --self-check
+//! repro serve    --ckpt artifact.rtz [--mode dense|factored|factored-quant] | --self-check
 //! repro bench-serve [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
+//! repro bench-kernels [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
 //! repro generate --ckpt artifact.rtz [--prompt TEXT | --requests N] | --self-check
 //! repro bench-decode [--ckpt artifact.rtz] [--budget B] [--threads N] [--json FILE]
 //! repro bench-parallel [--ckpt artifact.rtz] [--threads N] [--json FILE]
@@ -192,7 +193,7 @@ static COMMANDS: &[Cmd] = &[
         summary: "serve a compressed artifact with the factored-form engine",
         flags: &[
             CKPT,
-            flag("mode", "dense|factored", "execution mode (default factored)"),
+            flag("mode", "dense|factored|factored-quant", "execution mode (default factored)"),
             SERVE_REQUESTS,
             SERVE_SEQ,
             SERVE_WORKERS,
@@ -200,8 +201,8 @@ static COMMANDS: &[Cmd] = &[
             THREADS,
             switch(
                 "self-check",
-                "build a mini artifact offline, serve it both ways, verify logits + MACs \
-                 + tiered scheduler vs FIFO",
+                "build a mini artifact offline, serve it in every mode, verify logits + \
+                 quantized tolerance + MACs + weight bytes + tiered scheduler vs FIFO",
             ),
             NO_OBS,
             TRACE_OUT,
@@ -228,7 +229,7 @@ static COMMANDS: &[Cmd] = &[
         summary: "KV-cached autoregressive generation (continuous batching)",
         flags: &[
             CKPT,
-            flag("mode", "dense|factored", "execution mode (default factored)"),
+            flag("mode", "dense|factored|factored-quant", "execution mode (default factored)"),
             flag("prompt", "TEXT", "prompt text (omit for a synthetic workload)"),
             SERVE_REQUESTS,
             PROMPT_LEN,
@@ -257,6 +258,11 @@ static COMMANDS: &[Cmd] = &[
         flags: &[CKPT, BUDGET, SERVE_REQUESTS, PROMPT_LEN, MAX_NEW, SLOTS, THREADS, SEED, JSON_OUT],
     },
     Cmd {
+        name: "bench-kernels",
+        summary: "scalar vs SIMD vs packed vs quantized kernel microbenchmark",
+        flags: &[CKPT, BUDGET, THREADS, SEED, JSON_OUT],
+    },
+    Cmd {
         name: "bench-parallel",
         summary: "1 vs N-thread scaling on the factored path (serve/decode/compress)",
         flags: &[
@@ -278,7 +284,7 @@ static COMMANDS: &[Cmd] = &[
         flags: &[
             CKPT,
             ADDR,
-            flag("mode", "dense|factored", "execution mode (default factored)"),
+            flag("mode", "dense|factored|factored-quant", "execution mode (default factored)"),
             SLOTS,
             QUEUE_CAP,
             MAX_NEW,
@@ -477,6 +483,7 @@ fn run() -> Result<()> {
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
         "generate" => cmd_generate(&artifacts, &args),
         "bench-decode" => cmd_bench_decode(&artifacts, &args),
+        "bench-kernels" => cmd_bench_kernels(&artifacts, &args),
         "bench-parallel" => cmd_bench_parallel(&artifacts, &args),
         "daemon" => cmd_daemon(&artifacts, &args),
         "loadgen" => cmd_loadgen(&artifacts, &args),
@@ -719,17 +726,17 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let seed: u64 = args.parse_num("seed", 0)?;
     let exec = exec_from(args)?;
     let (obs, trace_out) = obs_from(args)?;
+    let mode = match args.get("mode") {
+        None => ExecMode::Factored,
+        Some(s) => ExecMode::parse(s)?,
+    };
     if args.get("self-check").is_some() {
-        return serve_self_check(seed, exec, obs, trace_out.as_deref());
+        return serve_self_check(mode, seed, exec, obs, trace_out.as_deref());
     }
     anyhow::ensure!(trace_out.is_none(), "--trace-out requires --self-check for `serve`");
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
     let cm = CompressedModel::load(&cfg, path)?;
-    let mode = match args.get("mode") {
-        None => ExecMode::Factored,
-        Some(s) => ExecMode::parse(s)?,
-    };
     let requests: usize = args.parse_num("requests", 8)?;
     let seq: usize = args.parse_num("seq", cfg.eval_seq.min(64))?;
     let workers: usize = args.parse_num("workers", 2)?;
@@ -777,19 +784,25 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 
 /// `repro serve --self-check`: build a mini artifact offline (data-free
 /// weight-space ROM at budget 0.5), round-trip it through `.rtz`, and
-/// serve it in both modes — asserting the factored path matches dense
-/// logits to ≤1e-4 and executes exactly the analytically-accounted (and
-/// strictly fewer) MACs, then exercising the priced, tiered admission
-/// scheduler ([`scheduler_self_check_phase`]) on an adversarial
-/// flood-plus-trickle trace. The CI smoke test behind `scripts/verify.sh`,
-/// which runs it at `--threads 1` and `--threads 4` and diffs the output
-/// (everything printed is deterministic, so any thread-count divergence
-/// fails the gate). With the observability plane attached (`obs`, the
-/// default) the scheduler phase additionally asserts the flight recorder
-/// and metrics registry agree with [`llm_rom::engine::CoreStats`]
-/// exactly — printing nothing, so output stays bitwise identical to a
-/// `--no-obs` run.
+/// serve it in every mode — asserting the factored path matches dense
+/// logits to ≤1e-4, the quantized factored path tracks the f32 factored
+/// path within its stated tolerance (same MACs, strictly fewer weight
+/// bytes, both byte counts equal to the analytic
+/// [`macs::weight_bytes`]), and every path executes exactly the
+/// analytically-accounted MACs — then exercising the priced, tiered
+/// admission scheduler ([`scheduler_self_check_phase`]) on an adversarial
+/// flood-plus-trickle trace, on a model built in `mode` (so
+/// `--mode factored-quant` runs the int8 kernels under the scheduler).
+/// The CI smoke test behind `scripts/verify.sh`, which runs it at
+/// `--threads 1` and `--threads 4` and diffs the output (everything
+/// printed is deterministic, so any thread-count divergence fails the
+/// gate — including the quantized kernels). With the observability plane
+/// attached (`obs`, the default) the scheduler phase additionally asserts
+/// the flight recorder and metrics registry agree with
+/// [`llm_rom::engine::CoreStats`] exactly — printing nothing, so output
+/// stays bitwise identical to a `--no-obs` run.
 fn serve_self_check(
+    mode: ExecMode,
     seed: u64,
     exec: ExecConfig,
     obs: bool,
@@ -817,34 +830,76 @@ fn serve_self_check(
         );
     }
     println!(
-        "[1/4] .rtz factor round-trip: lossless ({} factored matrices)",
+        "[1/5] .rtz factor round-trip: lossless ({} factored matrices)",
         loaded.factors.len()
     );
 
     // 2. factored serving matches dense serving on the same batch
     let requests = serve::synth_requests(&cfg, 6, 24, seed);
     let mut outputs: Vec<(Vec<Vec<f32>>, u128)> = Vec::new();
-    for mode in [ExecMode::Dense, ExecMode::Factored] {
+    for m in [ExecMode::Dense, ExecMode::Factored, ExecMode::FactoredQuant] {
         let engine = ServeEngine::new(
-            ServeModel::from_artifact(&loaded, mode)?,
+            ServeModel::from_artifact(&loaded, m)?,
             ServeConfig { workers: 2, max_batch: 2, exec },
         );
         let (results, stats) = engine.run(requests.clone())?;
         outputs.push((results.into_iter().map(|r| r.logits).collect(), stats.core.macs));
     }
-    let mut max_diff = 0.0f64;
-    for (a, b) in outputs[0].0.iter().zip(&outputs[1].0) {
-        for (x, y) in a.iter().zip(b) {
-            max_diff = max_diff.max((x - y).abs() as f64);
+    let pairwise_max = |a: &[Vec<f32>], b: &[Vec<f32>]| -> (f64, f64) {
+        let (mut diff, mut mag) = (0.0f64, 0.0f64);
+        for (ra, rb) in a.iter().zip(b) {
+            for (x, y) in ra.iter().zip(rb) {
+                diff = diff.max((x - y).abs() as f64);
+                mag = mag.max(y.abs() as f64);
+            }
         }
-    }
+        (diff, mag)
+    };
+    let (max_diff, _) = pairwise_max(&outputs[0].0, &outputs[1].0);
     anyhow::ensure!(
         max_diff <= 1e-4,
         "dense vs factored logits diverge: max |Δ| = {max_diff:.3e}"
     );
-    println!("[2/4] dense vs factored logits: max |Δ| = {max_diff:.2e} (bound 1e-4)");
+    println!("[2/5] dense vs factored logits: max |Δ| = {max_diff:.2e} (bound 1e-4)");
 
-    // 3. MAC accounting: factored strictly fewer, both exactly analytic
+    // 3. the quantized factored path: logits within the stated tolerance
+    //    of the f32 factored path, identical MACs (quantization changes
+    //    bytes, not arithmetic shape), and the weight-byte win — with the
+    //    measured bytes of every mode equal to the analytic accounting
+    let (quant_diff, fact_mag) = pairwise_max(&outputs[2].0, &outputs[1].0);
+    let quant_bound = 0.05 * fact_mag.max(1.0);
+    anyhow::ensure!(
+        quant_diff <= quant_bound,
+        "factored-quant logits off the f32 factored path: \
+         max |Δ| = {quant_diff:.3e} (bound {quant_bound:.3e})"
+    );
+    anyhow::ensure!(
+        outputs[2].1 == outputs[1].1,
+        "factored-quant must execute exactly the factored MACs"
+    );
+    let mut mode_bytes = Vec::new();
+    for m in [ExecMode::Dense, ExecMode::Factored, ExecMode::FactoredQuant] {
+        let measured = ServeModel::from_artifact(&loaded, m)?.weight_bytes();
+        let analytic = macs::weight_bytes(&cfg, &loaded.accounting, m.weight_store());
+        anyhow::ensure!(
+            measured == analytic,
+            "{} weight bytes: measured {measured} != analytic {analytic}",
+            m.name()
+        );
+        mode_bytes.push(measured);
+    }
+    anyhow::ensure!(
+        mode_bytes[2] < mode_bytes[1] && mode_bytes[1] < mode_bytes[0],
+        "weight bytes must shrink dense → factored → factored-quant: {mode_bytes:?}"
+    );
+    println!(
+        "[3/5] factored-quant logits: max |Δ| = {quant_diff:.2e} (bound {quant_bound:.2e}), \
+         MACs identical to factored; weight bytes {} → {} → {} all equal the analytic \
+         accounting",
+        mode_bytes[0], mode_bytes[1], mode_bytes[2]
+    );
+
+    // 4. MAC accounting: factored strictly fewer, both exactly analytic
     let (dense_macs, fact_macs) = (outputs[0].1, outputs[1].1);
     let analytic = |acc: &CompressionAccounting| -> u128 {
         requests.iter().map(|r| macs::report(&cfg, acc, r.tokens.len()).macs).sum()
@@ -859,21 +914,24 @@ fn serve_self_check(
     );
     anyhow::ensure!(fact_macs < dense_macs, "factored path must execute fewer MACs");
     println!(
-        "[3/4] MACs: factored {fact_macs} vs dense {dense_macs} ({:.2}x fewer), \
+        "[4/5] MACs: factored {fact_macs} vs dense {dense_macs} ({:.2}x fewer), \
          both equal the analytic accounting",
         dense_macs as f64 / fact_macs as f64
     );
-    // 4. the priced, tiered admission scheduler on an adversarial trace
-    let model = ServeModel::from_artifact(&loaded, ExecMode::Factored)?;
-    scheduler_self_check_phase(&model, &loaded.accounting, seed, exec, obs, trace_out)?;
+    // 5. the priced, tiered admission scheduler on an adversarial trace,
+    //    executing in the requested mode (factored-quant runs the int8
+    //    kernels under the scheduler — still bitwise thread-invariant)
+    let model = ServeModel::from_artifact(&loaded, mode)?;
+    scheduler_self_check_phase("[5/5]", &model, &loaded.accounting, seed, exec, obs, trace_out)?;
 
     std::fs::remove_dir_all(&dir).ok();
     println!("serve self-check: OK");
     Ok(())
 }
 
-/// The shared `[4/4]` phase of `repro serve --self-check` and
-/// `repro generate --self-check`: the priced, tiered admission scheduler
+/// The shared final phase of `repro serve --self-check` (`[5/5]`) and
+/// `repro generate --self-check` (`[4/4]`; the printed line carries the
+/// caller's `phase_label`): the priced, tiered admission scheduler
 /// under an adversarial trace — an up-front batch flood plus an
 /// interactive trickle contending for one slot. Everything is measured
 /// in scheduling rounds, never wall clock, so the printed line is
@@ -898,6 +956,7 @@ fn serve_self_check(
 /// diffs. `trace_out` additionally exports the transcript as JSONL
 /// (round/seq/MAC-denominated, byte-identical across `--threads`).
 fn scheduler_self_check_phase(
+    phase_label: &str,
     model: &ServeModel,
     acc: &CompressionAccounting,
     seed: u64,
@@ -1109,7 +1168,7 @@ fn scheduler_self_check_phase(
     }
 
     println!(
-        "[4/4] scheduler: interactive admitted within {int_wait} rounds under an \
+        "{phase_label} scheduler: interactive admitted within {int_wait} rounds under an \
          {BATCH_N}-deep batch flood (FIFO: {fifo_int_wait}); deadline hit-rate \
          {tiered_hits}/{INTERACTIVE_N} vs FIFO {fifo_hits}/{INTERACTIVE_N}; admitted meter \
          {expected} MACs == analytic decode_report sum; stripped config reduces to FIFO"
@@ -1161,6 +1220,26 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
         ServeConfig { workers, max_batch: batch, exec },
         seed,
     )?;
+    println!("{}", bench.format());
+    write_bench_json(args, &bench.to_json())?;
+    Ok(())
+}
+
+/// `repro bench-kernels`: the serving hot path's matmul variants head to
+/// head — scalar, SIMD-dotted blocked, packed-panel, int8-quantized — on
+/// one microbenchmark shape, plus factored vs factored-quant tokens/sec
+/// on the artifact itself. `make bench` writes this as
+/// `BENCH_kernels.json`; `scripts/verify.sh` gates the committed `gflops`
+/// and `tokens_per_s` samples against a fresh run.
+fn cmd_bench_kernels(artifacts: &str, args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_num("seed", 0)?;
+    let (cm, label) = bench_artifact(artifacts, args, 0x4E75)?;
+    let exec = exec_from(args)?;
+    println!(
+        "bench-kernels {label}: scalar vs SIMD vs packed vs quantized ({} threads)",
+        exec.resolve()
+    );
+    let bench = llm_rom::coordinator::kernels_bench(&cm, exec, seed)?;
     println!("{}", bench.format());
     write_bench_json(args, &bench.to_json())?;
     Ok(())
@@ -1527,7 +1606,7 @@ fn decode_self_check(
     );
 
     // 4. the priced, tiered admission scheduler on an adversarial trace
-    scheduler_self_check_phase(&fact, &cm.accounting, seed, exec, obs, trace_out)?;
+    scheduler_self_check_phase("[4/4]", &fact, &cm.accounting, seed, exec, obs, trace_out)?;
 
     println!("decode self-check: OK");
     Ok(())

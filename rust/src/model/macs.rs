@@ -318,6 +318,51 @@ impl CostModel {
     }
 }
 
+/// How the serving engine stores weights in memory — the byte side of the
+/// cost ledger, mirroring [`crate::serve::ExecMode`] (each mode maps to
+/// exactly one store via `ExecMode::weight_store`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightStore {
+    /// Everything re-densified f32: `4·d_out·d_in` bytes per matrix.
+    Dense,
+    /// Low-rank matrices as f32 factor pairs: `4·r·(d_out+d_in)` bytes.
+    Factored,
+    /// Low-rank matrices as per-row int8 factor pairs with f32 scales:
+    /// `r·(d_out+d_in)` code bytes + `4·(d_out+r)` scale bytes.
+    FactoredQuant,
+}
+
+/// Analytic weight-payload bytes of a served model under a compression
+/// state and storage form — the accounting twin of
+/// `crate::serve::ServeModel::weight_bytes` (asserted equal in the serve
+/// tests and `repro serve --self-check`). Embed (tied head) and norm
+/// gains are always f32; matrices without [`LayerCompression::LowRank`]
+/// factors are stored dense by the serving engine regardless of store
+/// (pruning artifacts ship re-densified parameters), so only factored
+/// matrices change bytes across stores.
+pub fn weight_bytes(cfg: &ModelConfig, acc: &CompressionAccounting, store: WeightStore) -> u128 {
+    let d = cfg.d_model as u128;
+    let mut bytes = 4 * (cfg.vocab as u128) * d + 4 * d; // embed + final_norm
+    for b in 0..cfg.n_layers {
+        bytes += 2 * 4 * d; // norm gains
+        for (name, o, i) in block_matrices(cfg, b) {
+            let (o, i) = (o as u128, i as u128);
+            bytes += match (store, acc.layers.get(&name).copied()) {
+                (WeightStore::Factored, Some(LayerCompression::LowRank { rank })) => {
+                    4 * rank as u128 * (o + i)
+                }
+                (WeightStore::FactoredQuant, Some(LayerCompression::LowRank { rank })) => {
+                    let r = rank as u128;
+                    // w1: o×r codes + o scales; w2: r×i codes + r scales
+                    r * (o + i) + 4 * (o + r)
+                }
+                _ => 4 * o * i,
+            };
+        }
+    }
+    bytes
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -516,6 +561,44 @@ mod tests {
         assert_eq!(g.kv_bytes, want);
         // worst_new clamps to ≥ 1 (a generate always yields one token)
         assert_eq!(cm.generate(4, 0), cm.generate(4, 1));
+    }
+
+    #[test]
+    fn weight_bytes_follow_the_store() {
+        let cfg = ModelConfig::mini();
+        let dense_acc = CompressionAccounting::dense();
+        // with nothing factored, every store coincides
+        for store in [WeightStore::Dense, WeightStore::Factored, WeightStore::FactoredQuant] {
+            assert_eq!(
+                weight_bytes(&cfg, &dense_acc, store),
+                4 * report(&cfg, &dense_acc, 1).n_params as u128,
+                "{store:?}"
+            );
+        }
+        let mut acc = CompressionAccounting::dense();
+        for b in 0..cfg.n_layers {
+            for (name, o, i) in block_matrices(&cfg, b) {
+                let r = (0.5 * (o * i) as f64 / (o + i) as f64) as usize;
+                acc.set(&name, LayerCompression::LowRank { rank: r.max(1) });
+            }
+        }
+        let d = weight_bytes(&cfg, &acc, WeightStore::Dense);
+        let f = weight_bytes(&cfg, &acc, WeightStore::Factored);
+        let q = weight_bytes(&cfg, &acc, WeightStore::FactoredQuant);
+        // dense store ignores factors entirely
+        assert_eq!(d, weight_bytes(&cfg, &dense_acc, WeightStore::Dense));
+        // f32 factors beat dense at budget 0.5; int8 codes beat f32 factors
+        assert!(f < d, "factored {f} vs dense {d}");
+        assert!(q < f, "quantized {q} vs factored {f}");
+        // the factored store prices exactly 4 bytes per factored param
+        assert_eq!(f, 4 * report(&cfg, &acc, 1).n_params as u128);
+        // pruned matrices are stored dense under every store
+        let mut pruned = CompressionAccounting::dense();
+        pruned.set("blocks.0.w_gate", LayerCompression::PrunedOut { kept_out: 10 });
+        assert_eq!(
+            weight_bytes(&cfg, &pruned, WeightStore::Factored),
+            weight_bytes(&cfg, &dense_acc, WeightStore::Dense)
+        );
     }
 
     #[test]

@@ -16,22 +16,16 @@
 use anyhow::Result;
 
 use crate::linalg::matmul_transb_f32;
+use crate::linalg::simd::{axpy_f32, RopeTable};
 
 use super::config::ModelConfig;
 use super::params::ParamStore;
 
 /// RMSNorm over the last axis (matches `kernels/rmsnorm.py`). Shared with
-/// the factored-form serving engine ([`crate::serve`]).
+/// the factored-form serving engine ([`crate::serve`]); the implementation
+/// is the vectorized lane-reduction kernel in [`crate::linalg::simd`].
 pub(crate) fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
-    let d = gain.len();
-    debug_assert_eq!(x.len() % d, 0);
-    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
-        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
-        let inv = 1.0 / (ms + eps).sqrt();
-        for j in 0..d {
-            orow[j] = (row[j] as f64 * inv) as f32 * gain[j];
-        }
-    }
+    crate::linalg::simd::rmsnorm(x, gain, eps, out);
 }
 
 /// Rotary embedding for one (seq, hd) head slice at absolute positions
@@ -58,6 +52,9 @@ pub(crate) fn silu(x: f32) -> f32 {
 /// Apply rotary embeddings head-by-head to full-width `(seq, d)` q/k
 /// buffers at absolute positions `pos0..pos0+seq`. Shared by the
 /// reference forward and the serving engine so the two cannot diverge.
+/// The work happens in the cached [`RopeTable`] (no per-head temporaries,
+/// frequencies computed once) — bitwise identical to the [`apply_rope`]
+/// closed form it replaced.
 pub(crate) fn rope_qk(
     q: &mut [f32],
     k: &mut [f32],
@@ -65,27 +62,9 @@ pub(crate) fn rope_qk(
     d: usize,
     nh: usize,
     pos0: usize,
-    theta: f64,
+    table: &RopeTable,
 ) {
-    let hd = d / nh;
-    for head in 0..nh {
-        let mut qh = vec![0.0f32; seq * hd];
-        let mut kh = vec![0.0f32; seq * hd];
-        for t in 0..seq {
-            qh[t * hd..(t + 1) * hd]
-                .copy_from_slice(&q[t * d + head * hd..t * d + (head + 1) * hd]);
-            kh[t * hd..(t + 1) * hd]
-                .copy_from_slice(&k[t * d + head * hd..t * d + (head + 1) * hd]);
-        }
-        apply_rope(&mut qh, seq, hd, pos0, theta);
-        apply_rope(&mut kh, seq, hd, pos0, theta);
-        for t in 0..seq {
-            q[t * d + head * hd..t * d + (head + 1) * hd]
-                .copy_from_slice(&qh[t * hd..(t + 1) * hd]);
-            k[t * d + head * hd..t * d + (head + 1) * hd]
-                .copy_from_slice(&kh[t * hd..(t + 1) * hd]);
-        }
-    }
+    table.apply_qk(q, k, seq, d, nh, pos0);
 }
 
 /// Causal softmax attention (f64 score accumulation): `(seq, d)` queries
@@ -101,11 +80,34 @@ pub(crate) fn causal_attention(
     d: usize,
     nh: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; seq * d];
+    let mut scores = vec![0.0f64; pos0 + seq];
+    causal_attention_into(q, kc, vc, seq, pos0, d, nh, &mut scores, &mut out);
+    out
+}
+
+/// [`causal_attention`] over caller-provided buffers — the scratch-arena
+/// form: `scores` must hold `pos0 + seq` f64s, `out` arrives pre-zeroed
+/// with `seq * d` f32s. The probability-weighted V accumulation runs
+/// through the unrolled [`axpy_f32`] (elementwise, so bitwise identical
+/// to the naive loop).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn causal_attention_into(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    seq: usize,
+    pos0: usize,
+    d: usize,
+    nh: usize,
+    scores: &mut [f64],
+    out: &mut [f32],
+) {
     let hd = d / nh;
     let total = pos0 + seq;
     let scale = 1.0 / (hd as f64).sqrt();
-    let mut out = vec![0.0f32; seq * d];
-    let mut scores = vec![0.0f64; total];
+    debug_assert_eq!(out.len(), seq * d);
+    debug_assert!(scores.len() >= total);
     for t in 0..seq {
         let t_abs = pos0 + t;
         for head in 0..nh {
@@ -127,13 +129,10 @@ pub(crate) fn causal_attention(
             for s in 0..=t_abs {
                 let p = (scores[s] / z) as f32;
                 let vrow = &vc[s * d + head * hd..s * d + (head + 1) * hd];
-                for j in 0..hd {
-                    orow[j] += p * vrow[j];
-                }
+                axpy_f32(p, vrow, orow);
             }
         }
     }
-    out
 }
 
 /// Incremental decoder state: per-block K/V caches, row-major (t, d).
@@ -158,11 +157,15 @@ impl DecoderState {
 pub struct ReferenceModel<'p> {
     cfg: ModelConfig,
     params: &'p ParamStore,
+    /// Cached rope frequencies/sin-cos band shared by every forward.
+    rope: RopeTable,
 }
 
 impl<'p> ReferenceModel<'p> {
     pub fn new(params: &'p ParamStore) -> ReferenceModel<'p> {
-        ReferenceModel { cfg: params.config().clone(), params }
+        let cfg = params.config().clone();
+        let rope = RopeTable::new(cfg.head_dim(), cfg.rope_theta);
+        ReferenceModel { cfg, params, rope }
     }
 
     fn weight(&self, name: &str) -> Result<&[f32]> {
@@ -201,7 +204,7 @@ impl<'p> ReferenceModel<'p> {
             let mut q = matmul_transb_f32(&buf, self.weight(&name("wq"))?, seq, d, d);
             let mut k = matmul_transb_f32(&buf, self.weight(&name("wk"))?, seq, d, d);
             let v = matmul_transb_f32(&buf, self.weight(&name("wv"))?, seq, d, d);
-            rope_qk(&mut q, &mut k, seq, d, nh, pos0, cfg.rope_theta);
+            rope_qk(&mut q, &mut k, seq, d, nh, pos0, &self.rope);
             // extend caches, then attend over them
             state.k_cache[block].extend_from_slice(&k);
             state.v_cache[block].extend_from_slice(&v);

@@ -1,40 +1,68 @@
-//! Per-matrix dense/low-rank dispatch: the unit of factored-form serving.
+//! Per-matrix dense/low-rank/quantized dispatch: the unit of
+//! factored-form serving.
 //!
 //! A dense layer applies as `y = x·Wᵀ` (one `d_out×d_in` matmul); a
 //! factored layer as `y = (x·W2ᵀ)·W1ᵀ` (two skinny matmuls through the
 //! rank-r bottleneck), costing `r(d_in+d_out)` MACs per row instead of
-//! `d_in·d_out`. Both run on the cache-blocked f32 kernel
-//! ([`crate::linalg::matmul_transb_blocked_f32`]).
+//! `d_in·d_out`. Both store their weights packed into the cache-aware
+//! panel layout ([`PackedWeight`], built once at construction) and run on
+//! the fixed-lane-order packed kernel — bitwise identical to the unpacked
+//! blocked kernel for any thread count. The quantized variant executes the
+//! same factored dataflow over per-row int8 codes with f32 accumulation
+//! ([`QuantizedWeight`]): same MAC count, ~4× fewer weight bytes, output
+//! within a stated tolerance of (not bitwise equal to) the f32 factors.
 
 use crate::exec::ExecPool;
-use crate::linalg::{par_matmul_transb_blocked_f32, Matrix};
+use crate::linalg::simd::{
+    par_matmul_transb_packed_into, par_matmul_transb_quant_into, PackedWeight, QuantizedWeight,
+};
+use crate::linalg::Matrix;
 use crate::rom::decompose::RomFactors;
+
+/// Clear and zero-fill `v` to `len` — allocation-free once `v`'s capacity
+/// covers `len`, which is what keeps steady-state decode off the
+/// allocator.
+pub(crate) fn resize_zeroed(v: &mut Vec<f32>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
+}
 
 /// One weight matrix, in whichever form it executes.
 #[derive(Debug, Clone)]
 pub enum ServeLayer {
-    /// Row-major `(d_out, d_in)` weight, applied as `x·Wᵀ`.
-    Dense { w: Vec<f32>, d_out: usize, d_in: usize },
-    /// Factored pair: `w1` row-major `(d_out, r)`, `w2` row-major
+    /// Packed `(d_out, d_in)` weight, applied as `x·Wᵀ`.
+    Dense { w: PackedWeight, d_out: usize, d_in: usize },
+    /// Factored pair: `w1` packed from row-major `(d_out, r)`, `w2` from
     /// `(r, d_in)`, applied as `(x·W2ᵀ)·W1ᵀ`.
-    Factored { w1: Vec<f32>, w2: Vec<f32>, rank: usize, d_out: usize, d_in: usize },
+    Factored { w1: PackedWeight, w2: PackedWeight, rank: usize, d_out: usize, d_in: usize },
+    /// The factored pair under per-row symmetric int8 quantization —
+    /// never a silent substitute: only `ExecMode::FactoredQuant` builds
+    /// these.
+    FactoredQuant {
+        w1: QuantizedWeight,
+        w2: QuantizedWeight,
+        rank: usize,
+        d_out: usize,
+        d_in: usize,
+    },
 }
 
 impl ServeLayer {
     pub fn dense(w: Vec<f32>, d_out: usize, d_in: usize) -> ServeLayer {
         assert_eq!(w.len(), d_out * d_in, "dense layer shape mismatch");
-        ServeLayer::Dense { w, d_out, d_in }
+        ServeLayer::Dense { w: PackedWeight::pack(&w, d_out, d_in), d_out, d_in }
     }
 
     /// Factored layer from ROM factors (f64 → f32 for the serving path,
     /// mirroring how the dense path stores `W_eff` as f32).
     pub fn factored(f: &RomFactors) -> ServeLayer {
+        let (rank, d_out, d_in) = (f.rank, f.d_out(), f.d_in());
         ServeLayer::Factored {
-            w1: f.w1.to_f32(),
-            w2: f.w2.to_f32(),
-            rank: f.rank,
-            d_out: f.d_out(),
-            d_in: f.d_in(),
+            w1: PackedWeight::pack(&f.w1.to_f32(), d_out, rank),
+            w2: PackedWeight::pack(&f.w2.to_f32(), rank, d_in),
+            rank,
+            d_out,
+            d_in,
         }
     }
 
@@ -42,44 +70,87 @@ impl ServeLayer {
     /// (bench/test convenience).
     pub fn factored_from_matrices(w1: &Matrix, w2: &Matrix) -> ServeLayer {
         assert_eq!(w1.cols(), w2.rows(), "factor inner dims disagree");
+        let (rank, d_out, d_in) = (w1.cols(), w1.rows(), w2.cols());
         ServeLayer::Factored {
-            rank: w1.cols(),
-            d_out: w1.rows(),
-            d_in: w2.cols(),
-            w1: w1.to_f32(),
-            w2: w2.to_f32(),
+            w1: PackedWeight::pack(&w1.to_f32(), d_out, rank),
+            w2: PackedWeight::pack(&w2.to_f32(), rank, d_in),
+            rank,
+            d_out,
+            d_in,
+        }
+    }
+
+    /// Int8-quantized factored layer from ROM factors: quantize the same
+    /// f32 factor matrices the [`ServeLayer::factored`] path packs.
+    pub fn factored_quant(f: &RomFactors) -> ServeLayer {
+        let (rank, d_out, d_in) = (f.rank, f.d_out(), f.d_in());
+        ServeLayer::FactoredQuant {
+            w1: QuantizedWeight::quantize(&f.w1.to_f32(), d_out, rank),
+            w2: QuantizedWeight::quantize(&f.w2.to_f32(), rank, d_in),
+            rank,
+            d_out,
+            d_in,
         }
     }
 
     pub fn d_out(&self) -> usize {
         match self {
-            ServeLayer::Dense { d_out, .. } | ServeLayer::Factored { d_out, .. } => *d_out,
+            ServeLayer::Dense { d_out, .. }
+            | ServeLayer::Factored { d_out, .. }
+            | ServeLayer::FactoredQuant { d_out, .. } => *d_out,
         }
     }
 
     pub fn d_in(&self) -> usize {
         match self {
-            ServeLayer::Dense { d_in, .. } | ServeLayer::Factored { d_in, .. } => *d_in,
+            ServeLayer::Dense { d_in, .. }
+            | ServeLayer::Factored { d_in, .. }
+            | ServeLayer::FactoredQuant { d_in, .. } => *d_in,
         }
     }
 
+    /// True for both the f32 and the int8 factored forms (they execute
+    /// the same two-matmul dataflow).
     pub fn is_factored(&self) -> bool {
-        matches!(self, ServeLayer::Factored { .. })
+        matches!(self, ServeLayer::Factored { .. } | ServeLayer::FactoredQuant { .. })
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, ServeLayer::FactoredQuant { .. })
     }
 
     pub fn rank(&self) -> Option<usize> {
         match self {
             ServeLayer::Dense { .. } => None,
-            ServeLayer::Factored { rank, .. } => Some(*rank),
+            ServeLayer::Factored { rank, .. } | ServeLayer::FactoredQuant { rank, .. } => {
+                Some(*rank)
+            }
         }
     }
 
     /// Multiply-accumulates to apply this layer to one input row — the
-    /// paper's `d1·d2` vs `r(d1+d2)` comparison, per layer.
+    /// paper's `d1·d2` vs `r(d1+d2)` comparison, per layer. Quantization
+    /// changes bytes, not MACs, so the factored forms agree.
     pub fn macs_per_row(&self) -> u128 {
         match self {
             ServeLayer::Dense { d_out, d_in, .. } => (*d_out * *d_in) as u128,
-            ServeLayer::Factored { rank, d_out, d_in, .. } => (*rank * (*d_out + *d_in)) as u128,
+            ServeLayer::Factored { rank, d_out, d_in, .. }
+            | ServeLayer::FactoredQuant { rank, d_out, d_in, .. } => {
+                (*rank * (*d_out + *d_in)) as u128
+            }
+        }
+    }
+
+    /// Logical weight-payload bytes of this layer as stored for execution
+    /// (f32 values, or int8 codes + per-row f32 scales; packing padding
+    /// excluded — it is a layout artifact, not payload).
+    pub fn weight_bytes(&self) -> u128 {
+        match self {
+            ServeLayer::Dense { d_out, d_in, .. } => 4 * (*d_out * *d_in) as u128,
+            ServeLayer::Factored { rank, d_out, d_in, .. } => {
+                4 * (*rank * (*d_out + *d_in)) as u128
+            }
+            ServeLayer::FactoredQuant { w1, w2, .. } => w1.logical_bytes() + w2.logical_bytes(),
         }
     }
 
@@ -92,14 +163,39 @@ impl ServeLayer {
     /// workers — bitwise identical to the serial apply for any thread
     /// count (single-row inputs degenerate to the serial kernel).
     pub fn apply_pooled(&self, x: &[f32], rows: usize, pool: &ExecPool) -> Vec<f32> {
+        let mut mid = Vec::new();
+        let mut out = Vec::new();
+        self.apply_into(x, rows, pool, &mut mid, &mut out);
+        out
+    }
+
+    /// [`ServeLayer::apply_pooled`] over caller-provided scratch: `mid`
+    /// holds the rank-r bottleneck activations of the factored forms,
+    /// `out` the result. Both are cleared and zero-resized here, so once
+    /// their capacities cover the layer the call allocates nothing.
+    pub fn apply_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        pool: &ExecPool,
+        mid: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
         debug_assert_eq!(x.len(), rows * self.d_in());
+        resize_zeroed(out, rows * self.d_out());
         match self {
-            ServeLayer::Dense { w, d_out, d_in } => {
-                par_matmul_transb_blocked_f32(x, w, rows, *d_in, *d_out, pool)
+            ServeLayer::Dense { w, .. } => {
+                par_matmul_transb_packed_into(x, w, rows, pool, out);
             }
-            ServeLayer::Factored { w1, w2, rank, d_out, d_in } => {
-                let t = par_matmul_transb_blocked_f32(x, w2, rows, *d_in, *rank, pool);
-                par_matmul_transb_blocked_f32(&t, w1, rows, *rank, *d_out, pool)
+            ServeLayer::Factored { w1, w2, rank, .. } => {
+                resize_zeroed(mid, rows * rank);
+                par_matmul_transb_packed_into(x, w2, rows, pool, mid);
+                par_matmul_transb_packed_into(mid, w1, rows, pool, out);
+            }
+            ServeLayer::FactoredQuant { w1, w2, rank, .. } => {
+                resize_zeroed(mid, rows * rank);
+                par_matmul_transb_quant_into(x, w2, rows, pool, mid);
+                par_matmul_transb_quant_into(mid, w1, rows, pool, out);
             }
         }
     }
@@ -153,9 +249,25 @@ mod tests {
         let f = random_factors(20, 12, 80, 4, 0);
         let dense = ServeLayer::dense(f.effective_weight().to_f32(), 20, 12);
         let fact = ServeLayer::factored(&f);
+        let quant = ServeLayer::factored_quant(&f);
         assert_eq!(dense.macs_per_row(), 20 * 12);
         assert_eq!(fact.macs_per_row(), 4 * (20 + 12));
+        assert_eq!(quant.macs_per_row(), fact.macs_per_row());
         assert!(fact.macs_per_row() < dense.macs_per_row());
+    }
+
+    #[test]
+    fn weight_byte_accounting_counts_codes_and_scales() {
+        let f = random_factors(20, 12, 80, 4, 1);
+        let dense = ServeLayer::dense(f.effective_weight().to_f32(), 20, 12);
+        let fact = ServeLayer::factored(&f);
+        let quant = ServeLayer::factored_quant(&f);
+        assert_eq!(dense.weight_bytes(), 4 * 20 * 12);
+        assert_eq!(fact.weight_bytes(), 4 * 4 * (20 + 12));
+        // w1: 20×4 codes + 20 scales; w2: 4×12 codes + 4 scales
+        assert_eq!(quant.weight_bytes(), (20 * 4 + 4 * 20) as u128 + (4 * 12 + 4 * 4) as u128);
+        assert!(quant.weight_bytes() < fact.weight_bytes());
+        assert!(quant.is_quantized() && !fact.is_quantized());
     }
 
     #[test]
@@ -167,5 +279,43 @@ mod tests {
         for (a, b) in dense.apply(&x, 1).iter().zip(fact.apply(&x, 1)) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn quantized_apply_tracks_f32_factored_apply() {
+        let f = random_factors(24, 18, 90, 6, 7);
+        let fact = ServeLayer::factored(&f);
+        let quant = ServeLayer::factored_quant(&f);
+        assert_eq!(quant.rank(), Some(6));
+        let mut rng = Rng::new(11);
+        let rows = 5;
+        let x: Vec<f32> = (0..rows * 18).map(|_| rng.normal() as f32).collect();
+        let yf = fact.apply(&x, rows);
+        let yq = quant.apply(&x, rows);
+        let scale = yf.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+        let max_abs =
+            yf.iter().zip(&yq).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_abs <= 0.05 * scale, "max |Δ| = {max_abs} vs scale {scale}");
+    }
+
+    #[test]
+    fn apply_into_reuses_scratch_without_reallocating() {
+        let f = random_factors(16, 12, 60, 4, 5);
+        let fact = ServeLayer::factored(&f);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..12).map(|_| rng.normal() as f32).collect();
+        let pool = ExecPool::serial();
+        let (mut mid, mut out) = (Vec::new(), Vec::new());
+        fact.apply_into(&x, 1, &pool, &mut mid, &mut out);
+        let want = fact.apply(&x, 1);
+        assert_eq!(out, want);
+        let (mid_cap, out_cap) = (mid.capacity(), out.capacity());
+        let (mid_ptr, out_ptr) = (mid.as_ptr(), out.as_ptr());
+        for _ in 0..3 {
+            fact.apply_into(&x, 1, &pool, &mut mid, &mut out);
+        }
+        assert_eq!(out, want, "repeated in-place applies stay bitwise identical");
+        assert_eq!((mid.capacity(), out.capacity()), (mid_cap, out_cap));
+        assert_eq!((mid.as_ptr(), out.as_ptr()), (mid_ptr, out_ptr), "no reallocation");
     }
 }

@@ -7,12 +7,19 @@
 //! *re-densified* (`W_eff = W1·W2` through the unmodified dense graphs);
 //! this module is the serving path that runs the factors directly:
 //!
-//! - [`ServeLayer`] — per-matrix dense/low-rank dispatch: a compressed
-//!   layer applies as two skinny matmuls `y = (x·W2ᵀ)·W1ᵀ`, a dense layer
-//!   as one, both on the cache-blocked f32 kernel.
+//! - [`ServeLayer`] — per-matrix dense/low-rank/quantized dispatch: a
+//!   compressed layer applies as two skinny matmuls `y = (x·W2ᵀ)·W1ᵀ`, a
+//!   dense layer as one, both over cache-aware packed panels on the
+//!   fixed-lane-order SIMD kernels ([`crate::linalg::simd`]); under
+//!   [`ExecMode::FactoredQuant`] the factors execute as per-row int8
+//!   codes with f32 accumulation (same MACs, ~4× fewer weight bytes,
+//!   logits within a stated tolerance of the f32 factored path — and
+//!   only when selected explicitly).
 //! - [`ServeModel`] — a full MiniLLaMA forward built from a
 //!   [`CompressedModel`] artifact (factors restored from the `.rtz`
-//!   sidecars), counting the MACs it actually executes.
+//!   sidecars), counting the MACs it actually executes, with a shared
+//!   rope table and a per-request scratch arena ([`model::ServeScratch`])
+//!   so steady-state decode does no hot-path allocation.
 //! - [`ServeEngine`] — the batch serving front-end, now a thin adapter
 //!   over the shared streaming core ([`crate::engine`]): requests flow
 //!   through the core's bounded queue and parallel lanes, with
@@ -38,9 +45,11 @@ use crate::util::Rng;
 
 pub use engine::{ServeConfig, ServeEngine, ServeRequest, ServeResult, ServeStats};
 pub use layer::ServeLayer;
-pub use model::ServeModel;
+pub use model::{ServeModel, ServeScratch};
 
-/// Which form compressed layers execute in.
+/// Which form compressed layers execute in. Always chosen explicitly
+/// (CLI `--mode`, daemon startup flag) — in particular the quantized
+/// mode is never a silent substitute for the f32 factored path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
     /// Re-densified `W_eff = W1·W2`: one `d2×d1` matmul per layer — the
@@ -48,6 +57,11 @@ pub enum ExecMode {
     Dense,
     /// The paper's factored form: two skinny matmuls, `r(d1+d2)` MACs.
     Factored,
+    /// The factored form over per-row symmetric int8 factors with f32
+    /// accumulation: same `r(d1+d2)` MACs, ~4× fewer weight bytes,
+    /// logits within a stated tolerance of [`ExecMode::Factored`]
+    /// (asserted by `repro serve --self-check --mode factored-quant`).
+    FactoredQuant,
 }
 
 impl ExecMode {
@@ -55,7 +69,8 @@ impl ExecMode {
         Ok(match s {
             "dense" => ExecMode::Dense,
             "factored" => ExecMode::Factored,
-            other => bail!("unknown serve mode `{other}` (dense|factored)"),
+            "factored-quant" => ExecMode::FactoredQuant,
+            other => bail!("unknown serve mode `{other}` (dense|factored|factored-quant)"),
         })
     }
 
@@ -63,6 +78,17 @@ impl ExecMode {
         match self {
             ExecMode::Dense => "dense",
             ExecMode::Factored => "factored",
+            ExecMode::FactoredQuant => "factored-quant",
+        }
+    }
+
+    /// The storage form this mode implies for the analytic byte
+    /// accounting in [`crate::model::macs::weight_bytes`].
+    pub fn weight_store(self) -> crate::model::macs::WeightStore {
+        match self {
+            ExecMode::Dense => crate::model::macs::WeightStore::Dense,
+            ExecMode::Factored => crate::model::macs::WeightStore::Factored,
+            ExecMode::FactoredQuant => crate::model::macs::WeightStore::FactoredQuant,
         }
     }
 }
@@ -122,8 +148,10 @@ mod tests {
     fn exec_mode_parses() {
         assert_eq!(ExecMode::parse("dense").unwrap(), ExecMode::Dense);
         assert_eq!(ExecMode::parse("factored").unwrap(), ExecMode::Factored);
+        assert_eq!(ExecMode::parse("factored-quant").unwrap(), ExecMode::FactoredQuant);
         assert!(ExecMode::parse("fast").is_err());
         assert_eq!(ExecMode::Factored.name(), "factored");
+        assert_eq!(ExecMode::FactoredQuant.name(), "factored-quant");
     }
 
     #[test]

@@ -1,27 +1,40 @@
 //! Batched forward pass over a [`CompressedModel`] artifact with
-//! per-layer dense/low-rank dispatch.
+//! per-layer dense/low-rank/quantized dispatch.
 //!
 //! Mirrors [`crate::model::ReferenceModel`]'s MiniLLaMA math exactly (same
 //! rmsnorm / rope / attention helpers), but every one of the 7
 //! decomposable matrices per block goes through a [`ServeLayer`]: factored
 //! when the artifact carries [`crate::rom::RomFactors`] for it and the
-//! engine runs in [`ExecMode::Factored`], dense otherwise. The forward
-//! counts the MACs it actually executes, in the same convention as
+//! engine runs in [`ExecMode::Factored`] (int8-quantized factors under
+//! [`ExecMode::FactoredQuant`]), dense otherwise. The forward counts the
+//! MACs it actually executes, in the same convention as
 //! [`crate::model::macs::report`] (weight matmuls exact, attention
 //! `2·T·d_model` per token per block, tied LM head `vocab·d_model`), so
 //! served MACs are directly comparable to the artifact's analytic
 //! accounting.
+//!
+//! PR 9 moves the hot path onto the kernel layer in
+//! [`crate::linalg::simd`]: weights (including the tied head) are packed
+//! once at construction into the cache-aware panel layout, rope runs off a
+//! shared precomputed [`RopeTable`], and every per-forward buffer lives in
+//! a reusable [`ServeScratch`] arena — the `*_scratch` entry points do no
+//! allocation in steady-state decode (asserted by
+//! `tests/alloc_steady_state.rs`). All of it preserves the determinism
+//! bar: packed/vectorized kernels are bitwise identical to the scalar
+//! blocked kernels, for any thread count.
 
 use anyhow::{bail, ensure, Result};
 
 use crate::compress::CompressedModel;
 use crate::decode::KvCache;
 use crate::exec::ExecPool;
-use crate::linalg::{matmul_transb_blocked_f32, par_matmul_transb_blocked_f32};
-use crate::model::reference::{causal_attention, rmsnorm, rope_qk, silu};
+use crate::linalg::simd::{
+    matmul_transb_packed_into, par_matmul_transb_packed_into, PackedWeight, RopeTable,
+};
+use crate::model::reference::{causal_attention_into, rmsnorm, rope_qk, silu};
 use crate::model::ModelConfig;
 
-use super::layer::ServeLayer;
+use super::layer::{resize_zeroed, ServeLayer};
 use super::ExecMode;
 
 struct ServeBlock {
@@ -36,21 +49,58 @@ struct ServeBlock {
     w_down: ServeLayer,
 }
 
+impl ServeBlock {
+    fn layers(&self) -> [&ServeLayer; 7] {
+        [&self.wq, &self.wk, &self.wv, &self.wo, &self.w_gate, &self.w_up, &self.w_down]
+    }
+}
+
+/// Reusable per-request scratch arena for the `*_scratch` forwards: every
+/// per-forward buffer of the hot path, hoisted out of the loop. Buffers
+/// are cleared and zero-resized per call, which never reallocates once
+/// capacity covers the shapes — so a steady-state decode round does no
+/// hot-path allocation. One arena per engine lane (the model itself stays
+/// shared and immutable).
+pub struct ServeScratch {
+    h: Vec<f32>,
+    norm: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    mid: Vec<f32>,
+    scores: Vec<f64>,
+    /// Logits of the last `*_scratch` forward: `(seq, vocab)` rows from
+    /// [`ServeModel::forward_cached_scratch`], a single `(vocab,)` row
+    /// from the prefill/step variants.
+    pub logits: Vec<f32>,
+}
+
 /// A compressed model in executable form.
 pub struct ServeModel {
     cfg: ModelConfig,
     mode: ExecMode,
     embed: Vec<f32>,
+    /// The tied LM head: `embed` packed once into panel layout.
+    head: PackedWeight,
     final_norm: Vec<f32>,
     blocks: Vec<ServeBlock>,
+    /// Shared rope frequencies/sin-cos band (prewarmed by
+    /// [`ServeModel::scratch`] to keep decode reads lock-cheap and
+    /// allocation-free).
+    rope: RopeTable,
 }
 
 impl ServeModel {
-    /// Build from an artifact. In [`ExecMode::Factored`], every matrix the
-    /// artifact carries factors for executes in factored form; matrices
-    /// without factors (dense layers of the schedule, pruning artifacts,
-    /// budget-1.0 identities) stay dense, so the two modes coincide
-    /// exactly when there is nothing to factor.
+    /// Build from an artifact. In [`ExecMode::Factored`] and
+    /// [`ExecMode::FactoredQuant`], every matrix the artifact carries
+    /// factors for executes in factored form (f32 or per-row int8
+    /// respectively); matrices without factors (dense layers of the
+    /// schedule, pruning artifacts, budget-1.0 identities) stay dense, so
+    /// the modes coincide exactly when there is nothing to factor.
     pub fn from_artifact(cm: &CompressedModel, mode: ExecMode) -> Result<ServeModel> {
         let cfg = cm.params.config().clone();
         let layer = |block: usize, field: &str| -> Result<ServeLayer> {
@@ -59,7 +109,7 @@ impl ServeModel {
             let shape = t.shape();
             ensure!(shape.len() == 2, "`{name}`: rank-{} tensor", shape.len());
             let (d_out, d_in) = (shape[0], shape[1]);
-            if mode == ExecMode::Factored {
+            if mode != ExecMode::Dense {
                 if let Some(f) = cm.factors.get(&name) {
                     ensure!(
                         f.d_out() == d_out && f.d_in() == d_in,
@@ -67,7 +117,10 @@ impl ServeModel {
                         f.d_out(),
                         f.d_in()
                     );
-                    return Ok(ServeLayer::factored(f));
+                    return Ok(match mode {
+                        ExecMode::FactoredQuant => ServeLayer::factored_quant(f),
+                        _ => ServeLayer::factored(f),
+                    });
                 }
             }
             Ok(ServeLayer::dense(t.as_f32()?.to_vec(), d_out, d_in))
@@ -86,9 +139,14 @@ impl ServeModel {
                 w_down: layer(b, "w_down")?,
             });
         }
+        let embed = cm.params.get("embed")?.as_f32()?.to_vec();
+        let head = PackedWeight::pack(&embed, cfg.vocab, cfg.d_model);
+        let rope = RopeTable::new(cfg.head_dim(), cfg.rope_theta);
         Ok(ServeModel {
-            embed: cm.params.get("embed")?.as_f32()?.to_vec(),
             final_norm: cm.params.get("final_norm")?.as_f32()?.to_vec(),
+            embed,
+            head,
+            rope,
             cfg,
             mode,
             blocks,
@@ -103,13 +161,58 @@ impl ServeModel {
         self.mode
     }
 
-    /// How many of the decomposable matrices execute in factored form.
+    /// How many of the decomposable matrices execute in factored form
+    /// (f32 or int8).
     pub fn n_factored(&self) -> usize {
-        self.blocks
+        self.blocks.iter().flat_map(|b| b.layers()).filter(|l| l.is_factored()).count()
+    }
+
+    /// Logical weight-payload bytes this model holds for execution:
+    /// embed + norms as f32, plus each [`ServeLayer`]'s stored form
+    /// (f32 values, or int8 codes + per-row scales). Packing padding and
+    /// the packed head mirror are excluded — they are layout artifacts.
+    /// Matches the analytic [`crate::model::macs::weight_bytes`].
+    pub fn weight_bytes(&self) -> u128 {
+        let d = self.cfg.d_model as u128;
+        let mut bytes = 4 * (self.cfg.vocab as u128) * d + 4 * d; // embed + final_norm
+        for b in &self.blocks {
+            bytes += 2 * 4 * d; // attn_norm + ffn_norm gains
+            for l in b.layers() {
+                bytes += l.weight_bytes();
+            }
+        }
+        bytes
+    }
+
+    /// Build a scratch arena sized for this model and a KV window of
+    /// `capacity` positions, prewarming the rope band so steady-state
+    /// decode never takes the grow path.
+    pub fn scratch(&self, capacity: usize) -> ServeScratch {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let wide = d.max(cfg.d_ff);
+        let max_rank = self
+            .blocks
             .iter()
-            .flat_map(|b| [&b.wq, &b.wk, &b.wv, &b.wo, &b.w_gate, &b.w_up, &b.w_down])
-            .filter(|l| l.is_factored())
-            .count()
+            .flat_map(|b| b.layers())
+            .filter_map(|l| l.rank())
+            .max()
+            .unwrap_or(0);
+        self.rope.ensure(capacity);
+        ServeScratch {
+            h: Vec::with_capacity(d),
+            norm: Vec::with_capacity(d),
+            q: Vec::with_capacity(d),
+            k: Vec::with_capacity(d),
+            v: Vec::with_capacity(d),
+            attn: Vec::with_capacity(d),
+            proj: Vec::with_capacity(wide),
+            gate: Vec::with_capacity(wide),
+            up: Vec::with_capacity(wide),
+            mid: Vec::with_capacity(max_rank),
+            scores: Vec::with_capacity(capacity.max(1)),
+            logits: Vec::with_capacity(cfg.vocab),
+        }
     }
 
     /// Analytic MACs for a `tokens`-long forward under this model's
@@ -119,7 +222,7 @@ impl ServeModel {
         let d = self.cfg.d_model as u128;
         let mut per_token: u128 = (self.cfg.vocab as u128) * d; // tied head
         for b in &self.blocks {
-            for l in [&b.wq, &b.wk, &b.wv, &b.wo, &b.w_gate, &b.w_up, &b.w_down] {
+            for l in b.layers() {
                 per_token += l.macs_per_row();
             }
             per_token += 2 * t * d; // attention scores + weighted values
@@ -161,6 +264,8 @@ impl ServeModel {
         }
 
         let mut buf = vec![0.0f32; seq * d];
+        let mut scores = vec![0.0f64; seq];
+        let mut attn_out = Vec::new();
         for block in &self.blocks {
             // ---- attention ----
             rmsnorm(&h, &block.attn_norm, cfg.norm_eps, &mut buf);
@@ -172,8 +277,9 @@ impl ServeModel {
             // same rope + causal-softmax math as ReferenceModel (shared
             // helpers; whole request at once, so pos0 = 0 and K/V are the
             // full projections)
-            rope_qk(&mut q, &mut k, seq, d, nh, 0, cfg.rope_theta);
-            let attn_out = causal_attention(&q, &k, &v, seq, 0, d, nh);
+            rope_qk(&mut q, &mut k, seq, d, nh, 0, &self.rope);
+            resize_zeroed(&mut attn_out, seq * d);
+            causal_attention_into(&q, &k, &v, seq, 0, d, nh, &mut scores, &mut attn_out);
             // accounting convention: 2·T·d per token per block (QKᵀ + PV),
             // matching `model::macs::report`
             macs += 2 * (seq as u128) * (seq as u128) * (d as u128);
@@ -197,9 +303,10 @@ impl ServeModel {
             }
         }
 
-        // tied head
+        // tied head (packed — bitwise identical to the blocked kernel)
         rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut buf);
-        let logits = par_matmul_transb_blocked_f32(&buf, &self.embed, seq, d, cfg.vocab, pool);
+        let mut logits = vec![0.0f32; seq * cfg.vocab];
+        par_matmul_transb_packed_into(&buf, &self.head, seq, pool, &mut logits);
         macs += (seq * cfg.vocab * d) as u128;
         Ok((logits, macs))
     }
@@ -229,14 +336,30 @@ impl ServeModel {
         cache: &mut KvCache,
         pool: &ExecPool,
     ) -> Result<(Vec<f32>, u128)> {
+        let mut s = self.scratch(cache.pos() + tokens.len());
+        let macs = self.forward_cached_scratch(tokens, cache, pool, &mut s)?;
+        Ok((std::mem::take(&mut s.logits), macs))
+    }
+
+    /// [`ServeModel::forward_cached_pooled`] over a caller-held
+    /// [`ServeScratch`]: logits land in `scratch.logits` (`seq` rows).
+    /// Allocation-free once the scratch capacities cover the shapes.
+    pub fn forward_cached_scratch(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        pool: &ExecPool,
+        s: &mut ServeScratch,
+    ) -> Result<u128> {
         let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
         let seq = tokens.len();
-        let (buf, mut macs) = self.cached_hidden(tokens, cache, pool)?;
+        let mut macs = self.cached_hidden_scratch(tokens, cache, pool, s)?;
         // tied head over every consumed position
-        let logits = par_matmul_transb_blocked_f32(&buf, &self.embed, seq, d, vocab, pool);
+        resize_zeroed(&mut s.logits, seq * vocab);
+        par_matmul_transb_packed_into(&s.norm, &self.head, seq, pool, &mut s.logits);
         macs += (seq * vocab * d) as u128;
         cache.advance(seq);
-        Ok((logits, macs))
+        Ok(macs)
     }
 
     /// Prefill variant of [`ServeModel::forward_cached_pooled`] computing
@@ -255,28 +378,44 @@ impl ServeModel {
         cache: &mut KvCache,
         pool: &ExecPool,
     ) -> Result<(Vec<f32>, u128)> {
-        let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
-        let seq = tokens.len();
-        let (buf, mut macs) = self.cached_hidden(tokens, cache, pool)?;
-        // tied head, last position only
-        let last = &buf[(seq - 1) * d..seq * d];
-        let logits = matmul_transb_blocked_f32(last, &self.embed, 1, d, vocab);
-        macs += (vocab * d) as u128;
-        cache.advance(seq);
-        Ok((logits, macs))
+        let mut s = self.scratch(cache.pos() + tokens.len());
+        let macs = self.forward_prefill_scratch(tokens, cache, pool, &mut s)?;
+        Ok((std::mem::take(&mut s.logits), macs))
     }
 
-    /// The shared cached-forward body: consume `tokens` through every
-    /// block over `cache` (K/V written at `cache.pos()`, cursor **not**
-    /// advanced — the head variants advance after reading), returning the
-    /// final-norm hidden states `(seq, d)` and the MACs executed so far
-    /// (weights + exact causal attention, no head).
-    fn cached_hidden(
+    /// [`ServeModel::forward_prefill`] over a caller-held scratch arena:
+    /// the last-position `(vocab,)` logits land in `scratch.logits`.
+    pub fn forward_prefill_scratch(
         &self,
         tokens: &[i32],
         cache: &mut KvCache,
         pool: &ExecPool,
-    ) -> Result<(Vec<f32>, u128)> {
+        s: &mut ServeScratch,
+    ) -> Result<u128> {
+        let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
+        let seq = tokens.len();
+        let mut macs = self.cached_hidden_scratch(tokens, cache, pool, s)?;
+        // tied head, last position only (m = 1 runs the serial kernel)
+        resize_zeroed(&mut s.logits, vocab);
+        let last = &s.norm[(seq - 1) * d..seq * d];
+        matmul_transb_packed_into(last, &self.head, 1, &mut s.logits);
+        macs += (vocab * d) as u128;
+        cache.advance(seq);
+        Ok(macs)
+    }
+
+    /// The shared cached-forward body: consume `tokens` through every
+    /// block over `cache` (K/V written at `cache.pos()`, cursor **not**
+    /// advanced — the head variants advance after reading), leaving the
+    /// final-norm hidden states `(seq, d)` in `s.norm` and returning the
+    /// MACs executed so far (weights + exact causal attention, no head).
+    fn cached_hidden_scratch(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        pool: &ExecPool,
+        s: &mut ServeScratch,
+    ) -> Result<u128> {
         let cfg = &self.cfg;
         let (d, nh) = (cfg.d_model, cfg.n_heads);
         let seq = tokens.len();
@@ -300,53 +439,59 @@ impl ServeModel {
         let mut macs: u128 = 0;
 
         // embed
-        let mut h = vec![0.0f32; seq * d];
+        resize_zeroed(&mut s.h, seq * d);
         for (t, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
             ensure!(tok < cfg.vocab, "token {tok} out of vocab");
-            h[t * d..(t + 1) * d].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+            s.h[t * d..(t + 1) * d].copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
         }
 
-        let mut buf = vec![0.0f32; seq * d];
+        resize_zeroed(&mut s.norm, seq * d);
         for (b, block) in self.blocks.iter().enumerate() {
             // ---- attention (over the cache) ----
-            rmsnorm(&h, &block.attn_norm, cfg.norm_eps, &mut buf);
-            let mut q = block.wq.apply_pooled(&buf, seq, pool);
-            let mut k = block.wk.apply_pooled(&buf, seq, pool);
-            let v = block.wv.apply_pooled(&buf, seq, pool);
+            rmsnorm(&s.h, &block.attn_norm, cfg.norm_eps, &mut s.norm);
+            block.wq.apply_into(&s.norm, seq, pool, &mut s.mid, &mut s.q);
+            block.wk.apply_into(&s.norm, seq, pool, &mut s.mid, &mut s.k);
+            block.wv.apply_into(&s.norm, seq, pool, &mut s.mid, &mut s.v);
             macs += seq as u128
                 * (block.wq.macs_per_row() + block.wk.macs_per_row() + block.wv.macs_per_row());
-            rope_qk(&mut q, &mut k, seq, d, nh, pos0, cfg.rope_theta);
-            cache.write(b, pos0, &k, &v);
+            rope_qk(&mut s.q, &mut s.k, seq, d, nh, pos0, &self.rope);
+            cache.write(b, pos0, &s.k, &s.v);
             let (kc, vc) = cache.view(b, pos0 + seq);
-            let attn_out = causal_attention(&q, kc, vc, seq, pos0, d, nh);
+            s.scores.clear();
+            s.scores.resize(pos0 + seq, 0.0);
+            resize_zeroed(&mut s.attn, seq * d);
+            causal_attention_into(&s.q, kc, vc, seq, pos0, d, nh, &mut s.scores, &mut s.attn);
             // exact causal cost: token t attends over pos0+t+1 cached keys
             for t in 0..seq {
                 macs += 2 * (pos0 + t + 1) as u128 * d as u128;
             }
 
-            let o = block.wo.apply_pooled(&attn_out, seq, pool);
+            block.wo.apply_into(&s.attn, seq, pool, &mut s.mid, &mut s.proj);
             macs += seq as u128 * block.wo.macs_per_row();
-            for (hv, ov) in h.iter_mut().zip(&o) {
+            for (hv, ov) in s.h.iter_mut().zip(&s.proj) {
                 *hv += ov;
             }
 
             // ---- ffn ----
-            rmsnorm(&h, &block.ffn_norm, cfg.norm_eps, &mut buf);
-            let gate = block.w_gate.apply_pooled(&buf, seq, pool);
-            let up = block.w_up.apply_pooled(&buf, seq, pool);
+            rmsnorm(&s.h, &block.ffn_norm, cfg.norm_eps, &mut s.norm);
+            block.w_gate.apply_into(&s.norm, seq, pool, &mut s.mid, &mut s.gate);
+            block.w_up.apply_into(&s.norm, seq, pool, &mut s.mid, &mut s.up);
             macs += seq as u128 * (block.w_gate.macs_per_row() + block.w_up.macs_per_row());
-            let act: Vec<f32> = gate.iter().zip(&up).map(|(g, u)| silu(*g) * u).collect();
-            let down = block.w_down.apply_pooled(&act, seq, pool);
+            // silu·gate in place — same values the collecting loop produced
+            for (g, u) in s.gate.iter_mut().zip(&s.up) {
+                *g = silu(*g) * u;
+            }
+            block.w_down.apply_into(&s.gate, seq, pool, &mut s.mid, &mut s.proj);
             macs += seq as u128 * block.w_down.macs_per_row();
-            for (hv, dv) in h.iter_mut().zip(&down) {
+            for (hv, dv) in s.h.iter_mut().zip(&s.proj) {
                 *hv += dv;
             }
         }
 
-        // final norm (the head variants consume `buf`)
-        rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut buf);
-        Ok((buf, macs))
+        // final norm (the head variants consume `s.norm`)
+        rmsnorm(&s.h, &self.final_norm, cfg.norm_eps, &mut s.norm);
+        Ok(macs)
     }
 
     /// One decode step: consume a single token through the cache and
@@ -367,12 +512,26 @@ impl ServeModel {
     ) -> Result<(Vec<f32>, u128)> {
         self.forward_cached_pooled(&[token], cache, pool)
     }
+
+    /// [`ServeModel::forward_step_pooled`] over a caller-held scratch
+    /// arena: the `(vocab,)` logits land in `scratch.logits`, and a
+    /// steady-state round (warm scratch + prewarmed rope band) performs
+    /// no heap allocation.
+    pub fn forward_step_scratch(
+        &self,
+        token: i32,
+        cache: &mut KvCache,
+        pool: &ExecPool,
+        s: &mut ServeScratch,
+    ) -> Result<u128> {
+        self.forward_cached_scratch(&[token], cache, pool, s)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::macs::{self, CompressionAccounting};
+    use crate::model::macs::{self, CompressionAccounting, WeightStore};
     use crate::model::ReferenceModel;
     use crate::serve::{demo_artifact, demo_config, synth_requests};
 
@@ -395,6 +554,49 @@ mod tests {
             let diff = max_abs_diff(&ld, &lf);
             assert!(diff <= 1e-4, "request {}: max |Δlogits| = {diff}", req.id);
         }
+    }
+
+    #[test]
+    fn quantized_forward_tracks_factored_forward() {
+        // the FactoredQuant contract: same dispatch/MACs as Factored,
+        // logits within the stated tolerance (5% of the logit scale)
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 47).unwrap();
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let quant = ServeModel::from_artifact(&cm, ExecMode::FactoredQuant).unwrap();
+        assert_eq!(quant.n_factored(), fact.n_factored());
+        assert_eq!(quant.mode(), ExecMode::FactoredQuant);
+        for req in synth_requests(&cfg, 3, 16, 7) {
+            let (lf, mf) = fact.forward_logits(&req.tokens).unwrap();
+            let (lq, mq) = quant.forward_logits(&req.tokens).unwrap();
+            assert_eq!(mf, mq, "quantization changes bytes, not MACs");
+            let scale = lf.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+            let diff = max_abs_diff(&lf, &lq);
+            assert!(diff <= 0.05 * scale, "request {}: |Δ| {diff} vs scale {scale}", req.id);
+        }
+    }
+
+    #[test]
+    fn weight_bytes_match_analytic_accounting() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 53).unwrap();
+        for (mode, store) in [
+            (ExecMode::Dense, WeightStore::Dense),
+            (ExecMode::Factored, WeightStore::Factored),
+            (ExecMode::FactoredQuant, WeightStore::FactoredQuant),
+        ] {
+            let m = ServeModel::from_artifact(&cm, mode).unwrap();
+            assert_eq!(mode.weight_store(), store);
+            assert_eq!(
+                m.weight_bytes(),
+                macs::weight_bytes(&cfg, &cm.accounting, store),
+                "{}",
+                mode.name()
+            );
+        }
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let quant = ServeModel::from_artifact(&cm, ExecMode::FactoredQuant).unwrap();
+        assert!(quant.weight_bytes() < fact.weight_bytes());
     }
 
     #[test]
@@ -431,17 +633,22 @@ mod tests {
     }
 
     #[test]
-    fn budget_one_artifact_serves_identically_in_both_modes() {
+    fn budget_one_artifact_serves_identically_in_all_modes() {
         let cfg = demo_config();
         let cm = demo_artifact(&cfg, 1.0, 19).unwrap();
         let dense = ServeModel::from_artifact(&cm, ExecMode::Dense).unwrap();
         let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let quant = ServeModel::from_artifact(&cm, ExecMode::FactoredQuant).unwrap();
         assert_eq!(fact.n_factored(), 0, "identity artifact has nothing to factor");
+        assert_eq!(quant.n_factored(), 0, "nothing to quantize either");
         let tokens: Vec<i32> = (0..12).map(|i| i % cfg.vocab as i32).collect();
         let (ld, md) = dense.forward_logits(&tokens).unwrap();
         let (lf, mf) = fact.forward_logits(&tokens).unwrap();
+        let (lq, mq) = quant.forward_logits(&tokens).unwrap();
         assert_eq!(ld, lf, "identical dispatch must produce identical logits");
+        assert_eq!(ld, lq, "quant mode with nothing to quantize is the dense dispatch");
         assert_eq!(md, mf);
+        assert_eq!(md, mq);
     }
 
     #[test]
@@ -456,11 +663,11 @@ mod tests {
     #[test]
     fn kv_cached_forward_matches_full_forward() {
         // chunked prefill + token-at-a-time through the cache must agree
-        // with the from-scratch forward, in both execution modes
+        // with the from-scratch forward, in every execution mode
         let cfg = demo_config();
         let cm = demo_artifact(&cfg, 0.5, 29).unwrap();
         let tokens = synth_requests(&cfg, 1, 18, 3)[0].tokens.clone();
-        for mode in [ExecMode::Dense, ExecMode::Factored] {
+        for mode in [ExecMode::Dense, ExecMode::Factored, ExecMode::FactoredQuant] {
             let m = ServeModel::from_artifact(&cm, mode).unwrap();
             let (full, _) = m.forward_logits(&tokens).unwrap();
             let mut cache = KvCache::new(&cfg, tokens.len());
@@ -480,6 +687,37 @@ mod tests {
     }
 
     #[test]
+    fn scratch_forwards_are_bitwise_identical_to_allocating_forwards() {
+        let cfg = demo_config();
+        let cm = demo_artifact(&cfg, 0.5, 59).unwrap();
+        let tokens = synth_requests(&cfg, 1, 14, 21)[0].tokens.clone();
+        for mode in [ExecMode::Dense, ExecMode::Factored, ExecMode::FactoredQuant] {
+            let m = ServeModel::from_artifact(&cm, mode).unwrap();
+            let pool = ExecPool::serial();
+            // allocating path
+            let mut cache_a = KvCache::new(&cfg, tokens.len() + 4);
+            let (want_pre, want_pre_macs) =
+                m.forward_prefill(&tokens, &mut cache_a, &pool).unwrap();
+            let mut want_steps = Vec::new();
+            for t in 0..4 {
+                want_steps.push(m.forward_step_pooled(t, &mut cache_a, &pool).unwrap());
+            }
+            // one reused scratch arena
+            let mut s = m.scratch(tokens.len() + 4);
+            let mut cache_b = KvCache::new(&cfg, tokens.len() + 4);
+            let pre_macs = m.forward_prefill_scratch(&tokens, &mut cache_b, &pool, &mut s).unwrap();
+            assert_eq!(s.logits, want_pre, "{}: prefill logits", mode.name());
+            assert_eq!(pre_macs, want_pre_macs);
+            for (t, (want_l, want_m)) in want_steps.iter().enumerate() {
+                let macs =
+                    m.forward_step_scratch(t as i32, &mut cache_b, &pool, &mut s).unwrap();
+                assert_eq!(&s.logits, want_l, "{}: step {t}", mode.name());
+                assert_eq!(macs, *want_m);
+            }
+        }
+    }
+
+    #[test]
     fn cached_macs_match_decode_accounting() {
         use crate::model::macs::decode_step_macs;
         let cfg = demo_config();
@@ -488,6 +726,7 @@ mod tests {
         for (mode, acc) in [
             (ExecMode::Dense, CompressionAccounting::dense()),
             (ExecMode::Factored, cm.accounting.clone()),
+            (ExecMode::FactoredQuant, cm.accounting.clone()),
         ] {
             let m = ServeModel::from_artifact(&cm, mode).unwrap();
             let mut cache = KvCache::new(&cfg, tokens.len());
@@ -509,7 +748,7 @@ mod tests {
         let cfg = demo_config();
         let cm = demo_artifact(&cfg, 0.5, 41).unwrap();
         let tokens = synth_requests(&cfg, 1, 21, 13)[0].tokens.clone();
-        for mode in [ExecMode::Dense, ExecMode::Factored] {
+        for mode in [ExecMode::Dense, ExecMode::Factored, ExecMode::FactoredQuant] {
             let m = ServeModel::from_artifact(&cm, mode).unwrap();
             let (serial, macs_serial) = m.forward_logits(&tokens).unwrap();
             let mut cache_s = KvCache::new(&cfg, tokens.len());

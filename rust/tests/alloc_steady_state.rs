@@ -1,0 +1,87 @@
+//! Steady-state decode does no hot-path allocation.
+//!
+//! The serving hot path runs through a per-request scratch arena
+//! ([`llm_rom::serve::ServeScratch`]): every buffer a forward needs is
+//! sized once at admission and reused for every subsequent decode step.
+//! This test pins that contract with a counting global allocator — after
+//! a short warm-up (the rope table band and any Vec growth settle), a
+//! run of `forward_step_scratch` calls must perform exactly zero
+//! allocations.
+//!
+//! Lives alone in this file: a counting `#[global_allocator]` is
+//! process-wide, and sharing the binary with unrelated concurrent tests
+//! would make the delta meaningless.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use llm_rom::decode::KvCache;
+use llm_rom::exec::ExecPool;
+use llm_rom::serve::{demo_artifact, demo_config, ExecMode, ServeModel};
+
+#[test]
+fn steady_state_decode_allocates_nothing() {
+    const WARMUP: usize = 4;
+    const STEPS: usize = 20;
+    let prompt = [1i32, 2, 3, 5, 8];
+    let capacity = prompt.len() + WARMUP + STEPS + 1;
+
+    let cfg = demo_config();
+    let cm = demo_artifact(&cfg, 0.5, 0xA110C).unwrap();
+    // serial pool: worker threads park on channels whose wakeups must not
+    // count against the hot path's allocation budget
+    let pool = ExecPool::new(1);
+
+    for mode in [ExecMode::Dense, ExecMode::Factored, ExecMode::FactoredQuant] {
+        let model = ServeModel::from_artifact(&cm, mode).unwrap();
+        let mut cache = KvCache::new(&cfg, capacity);
+        let mut scratch = model.scratch(capacity);
+        model.forward_prefill_scratch(&prompt, &mut cache, &pool, &mut scratch).unwrap();
+        let mut tok = 0i32;
+        // warm up: first steps may still grow buffers toward capacity
+        for _ in 0..WARMUP {
+            model.forward_step_scratch(tok, &mut cache, &pool, &mut scratch).unwrap();
+            tok = (tok + 1) % cfg.vocab as i32;
+        }
+
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..STEPS {
+            model.forward_step_scratch(tok, &mut cache, &pool, &mut scratch).unwrap();
+            tok = (tok + 1) % cfg.vocab as i32;
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "[{}] steady-state decode allocated {delta} times over {STEPS} steps",
+            mode.name()
+        );
+    }
+}

@@ -1071,6 +1071,108 @@ fn prop_flight_recorder_reconstructs_core_stats_across_threads() {
     }
 }
 
+/// Property: the SIMD microkernels are bitwise equal to their scalar
+/// oracles on shapes straddling the lane widths. `dot_f32` must equal the
+/// scalar lane-emulation oracle `dot_f32_ref` exactly; the packed-panel
+/// kernel must equal the blocked kernel exactly (zero-padded panels are a
+/// bitwise no-op); and the row-sharded packed/quantized kernels must be
+/// bitwise invariant to the thread count.
+#[test]
+fn prop_simd_kernels_bitwise_equal_scalar() {
+    use llm_rom::exec::ExecPool;
+    use llm_rom::linalg::{
+        dot_f32, dot_f32_ref, matmul_transb_blocked_into, matmul_transb_packed_into,
+        matmul_transb_quant_into, par_matmul_transb_packed_into, par_matmul_transb_quant_into,
+        PackedWeight, QuantizedWeight,
+    };
+    // straddles both the 8-lane dot width and the 4-row panel height
+    const DIMS: &[usize] = &[1, 2, 3, 4, 5, 6, 7, 8, 9, 63, 64, 65, 129];
+    for case in 0..CASES {
+        let mut rng = Rng::new(case * 12713 + 71);
+        let m = *rng.choose(DIMS);
+        let k = *rng.choose(DIMS);
+        let n = *rng.choose(DIMS);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+
+        // vectorized dot == its scalar lane-emulation oracle, bitwise
+        for j in 0..n.min(4) {
+            let row = &bt[j * k..(j + 1) * k];
+            let x = &a[..k];
+            assert_eq!(
+                dot_f32(x, row).to_bits(),
+                dot_f32_ref(x, row).to_bits(),
+                "case {case}: dot k={k} row {j}"
+            );
+        }
+
+        // packed panels == the blocked kernel, bitwise
+        let mut blocked = vec![0.0f32; m * n];
+        matmul_transb_blocked_into(&a, &bt, m, k, n, &mut blocked);
+        let packed = PackedWeight::pack(&bt, n, k);
+        let mut from_packed = vec![0.0f32; m * n];
+        matmul_transb_packed_into(&a, &packed, m, &mut from_packed);
+        assert_eq!(blocked, from_packed, "case {case}: packed != blocked {m}x{k}x{n}");
+
+        // row-sharding never moves a bit, packed and quantized alike
+        let quant = QuantizedWeight::quantize(&bt, n, k);
+        let mut qserial = vec![0.0f32; m * n];
+        matmul_transb_quant_into(&a, &quant, m, &mut qserial);
+        let threads = 2 + rng.below(7);
+        let pool = ExecPool::new(threads);
+        let mut par = vec![0.0f32; m * n];
+        par_matmul_transb_packed_into(&a, &packed, m, &pool, &mut par);
+        assert_eq!(par, from_packed, "case {case}: packed moved under t{threads}");
+        let mut qpar = vec![0.0f32; m * n];
+        par_matmul_transb_quant_into(&a, &quant, m, &pool, &mut qpar);
+        assert_eq!(qpar, qserial, "case {case}: quant moved under t{threads}");
+    }
+}
+
+/// Property: across random budgets and seeds, the int8 quantized factored
+/// path stays within its stated tolerance of the f32 factored path on
+/// logits and executes exactly the same MACs (quantization changes bytes,
+/// not arithmetic shape).
+#[test]
+fn prop_factored_quant_tracks_f32_factored() {
+    use llm_rom::serve::{demo_artifact, demo_config, synth_requests, ExecMode, ServeModel};
+    let cfg = demo_config();
+    for case in 0..8u64 {
+        let mut rng = Rng::new(case * 10627 + 73);
+        let budget = 0.4 + rng.f64() * 0.6;
+        let cm = demo_artifact(&cfg, budget, case * 3 + 2).unwrap();
+        let fact = ServeModel::from_artifact(&cm, ExecMode::Factored).unwrap();
+        let quant = ServeModel::from_artifact(&cm, ExecMode::FactoredQuant).unwrap();
+        for req in synth_requests(&cfg, 2, 6 + rng.below(12), case * 17 + 5) {
+            let (lf, mf) = fact.forward_logits(&req.tokens).unwrap();
+            let (lq, mq) = quant.forward_logits(&req.tokens).unwrap();
+            assert_eq!(mq, mf, "case {case} b={budget:.2}: quant MACs != factored MACs");
+            let mag = lf.iter().fold(0.0f64, |x, v| x.max(v.abs() as f64));
+            let bound = 0.1 * mag.max(1.0);
+            let diff = lf
+                .iter()
+                .zip(&lq)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0f64, f64::max);
+            assert!(
+                diff <= bound,
+                "case {case} b={budget:.2}: max |Δlogits| = {diff:.3e} (bound {bound:.3e})"
+            );
+        }
+        // budget 1.0 carries no factors: every mode is the dense graph,
+        // so the quantized path is bitwise dense
+        let id = demo_artifact(&cfg, 1.0, case).unwrap();
+        let dense = ServeModel::from_artifact(&id, ExecMode::Dense).unwrap();
+        let dq = ServeModel::from_artifact(&id, ExecMode::FactoredQuant).unwrap();
+        let toks = &synth_requests(&cfg, 1, 8, case)[0].tokens;
+        assert_eq!(
+            dense.forward_logits(toks).unwrap(),
+            dq.forward_logits(toks).unwrap(),
+            "case {case}: factor-free artifact must serve bitwise dense in quant mode"
+        );
+    }
+}
+
 /// Property: the FIFO-reduction bar. With a single tier, no deadlines, and
 /// an unlimited meter, the priced scheduler is bitwise FIFO — admission
 /// order equals submission order — and the whole outcome (admission seqs,

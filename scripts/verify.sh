@@ -21,15 +21,18 @@ trap 'rm -rf "$scratch"' EXIT
 
 # Serve + decode + streaming + daemon smoke tests, at --threads 1 AND
 # --threads 4: each run asserts its own invariants (factored ≡ dense logits
-# ≤1e-4, KV ≡ recompute streams, streamed events ≡ batch results, MACs ==
-# analytic accounting, SSE transcripts ≡ in-process event frames over real
-# loopback sockets), and everything the self-checks print is deterministic
+# ≤1e-4, factored-quant within its stated tolerance of factored — and its
+# scheduler phase runs the int8 kernels, so the t1-vs-t4 diff covers their
+# determinism too — KV ≡ recompute streams, streamed events ≡ batch
+# results, MACs == analytic accounting, SSE transcripts ≡ in-process event
+# frames over real loopback sockets), and everything the self-checks print
+# is deterministic
 # — so any divergence between the two thread counts is a determinism
 # regression in the exec/engine core and fails the gate here. Each check
 # then re-runs with the observability plane detached (--no-obs): the
 # printed output must be bitwise identical, which is the non-perturbation
 # contract — attaching tracing/metrics never changes behaviour.
-for check in "serve --self-check" "generate --self-check" "generate --stream --self-check" "daemon --self-check"; do
+for check in "serve --self-check" "serve --self-check --mode factored-quant" "generate --self-check" "generate --stream --self-check" "daemon --self-check"; do
   echo "== repro $check --threads 1 =="
   if ! out_t1=$(./target/release/repro $check --threads 1); then
     echo "$out_t1"
@@ -140,6 +143,7 @@ check_bench() { # name keys... -- command...
 
 check_bench serve tokens_per_s -- ./target/release/repro bench-serve
 check_bench decode tokens_per_s -- ./target/release/repro bench-decode
+check_bench kernels gflops tokens_per_s -- ./target/release/repro bench-kernels
 check_bench parallel serve_tokens_per_s decode_tokens_per_s -- \
   ./target/release/repro bench-parallel --threads 4
 check_bench daemon achieved_rps -- ./target/release/repro bench-daemon --threads 4
