@@ -171,6 +171,48 @@ impl CompressedModel {
         macs::report(cfg, &self.accounting, tokens)
     }
 
+    /// Speculative-decoding compatibility: can `draft` serve as the cheap
+    /// draft model for this (verifier) artifact? Both must come from the
+    /// same checkpoint geometry and tokenizer — an identical
+    /// [`ModelConfig`] (vocab, d_model, heads, layers, d_ff, rope/norm
+    /// constants), which is exactly what two points on the same rank
+    /// ladder share; the *ranks* are what may (and should) differ. The
+    /// draft must not cost more MACs per token than the verifier —
+    /// otherwise the pair is swapped and speculation is a strict loss.
+    pub fn check_spec_draft(&self, draft: &CompressedModel) -> Result<()> {
+        let (vc, dc) = (self.params.config(), draft.params.config());
+        anyhow::ensure!(
+            vc == dc,
+            "speculative draft artifact is from a different checkpoint family: verifier \
+             config (vocab {}, d {}, heads {}, L {}, ff {}) != draft config (vocab {}, d {}, \
+             heads {}, L {}, ff {}) — draft and verifier must be two budgets of the same \
+             checkpoint",
+            vc.vocab,
+            vc.d_model,
+            vc.n_heads,
+            vc.n_layers,
+            vc.d_ff,
+            dc.vocab,
+            dc.d_model,
+            dc.n_heads,
+            dc.n_layers,
+            dc.d_ff
+        );
+        let unit = |cm: &CompressedModel| cm.macs_report(vc, 1).macs;
+        let (v_unit, d_unit) = (unit(self), unit(draft));
+        anyhow::ensure!(
+            d_unit <= v_unit,
+            "speculative draft artifact (method {}, budget {:.2}, {d_unit} MACs/token) costs \
+             more than the verifier (method {}, budget {:.2}, {v_unit} MACs/token) — swap \
+             --ckpt and --draft",
+            draft.provenance.method,
+            draft.provenance.global_budget,
+            self.provenance.method,
+            self.provenance.global_budget
+        );
+        Ok(())
+    }
+
     /// Serialize params + accounting + factors + timings + provenance to
     /// `.rtz`. Factors are written as f64 sidecar tensors, so the
     /// round-trip back to [`RomFactors`] is bit-exact.

@@ -16,7 +16,7 @@ pub use cost::{CostReport, CostRow};
 pub use experiment::{Experiment, ExperimentConfig, TrainedArtifacts};
 pub use tables::{
     daemon_bench, decode_bench, kernels_bench, obs_table, parallel_bench, run_tables, serve_bench,
-    serve_table, sweep_table, table1, table2, table3, table4, DaemonBench, DecodeBench,
-    DecodeBenchRow, KernelsBench, KernelsBenchRow, KernelsModeRow, ParallelBench, ParallelBenchRow,
-    ServeBench, ServeBenchRow,
+    serve_table, sweep_table, sweep_table_with, table1, table2, table3, table4, DaemonBench,
+    DecodeBench, DecodeBenchRow, KernelsBench, KernelsBenchRow, KernelsModeRow, ParallelBench,
+    ParallelBenchRow, ServeBench, ServeBenchRow, SpecDecodeBench,
 };

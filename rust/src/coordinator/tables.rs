@@ -19,8 +19,11 @@
 //!   logits agreement bound (`repro bench-serve`).
 //! - **Decode table** — recompute vs KV-cached generation, dense vs
 //!   factored, with MACs/token, tokens/sec, TTFT and inter-token latency
-//!   columns (`repro bench-decode`). Both benches also serialize to JSON
-//!   via `--json` ([`ServeBench::to_json`] / [`DecodeBench::to_json`]).
+//!   columns, plus a speculative row pairing the factored verifier with a
+//!   same-checkpoint lower-budget draft (acceptance rate, exact draft /
+//!   verify MAC split, throughput vs verifier-only decode)
+//!   (`repro bench-decode`). Both benches also serialize to JSON via
+//!   `--json` ([`ServeBench::to_json`] / [`DecodeBench::to_json`]).
 //! - **Kernels bench** — the serving hot path's matmul variants (scalar /
 //!   SIMD / packed / int8-quantized) on one microbenchmark shape, plus an
 //!   end-to-end factored vs factored-quant serve of the same artifact
@@ -37,11 +40,11 @@ use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
-use crate::compress::CompressedModel;
+use crate::compress::{CompressedModel, CompressionSession, EmptyStream};
 use crate::daemon::{DaemonReport, LoadReport};
 use crate::data::{CalibSource, TaskKind};
 use crate::decode::{
-    run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler, DecodeStats,
+    run_recompute, synth_gen_requests, DecodeConfig, DecodeScheduler, DecodeStats, SpecDecoder,
 };
 use crate::eval::{format_table, EvalReport};
 use crate::exec::ExecConfig;
@@ -156,6 +159,21 @@ pub fn sweep_table(
     budget: f64,
     ft_steps: usize,
 ) -> Result<String> {
+    sweep_table_with(exp, base, methods, budget, ft_steps, |_, _| Ok(()))
+}
+
+/// [`sweep_table`] that also hands every finished artifact to `visit`
+/// before it is dropped — the hook `repro sweep --budgets` uses to save
+/// the rank ladder and write its `ladder.json` manifest without running
+/// compression twice.
+pub fn sweep_table_with(
+    exp: &Experiment,
+    base: &ParamStore,
+    methods: &[String],
+    budget: f64,
+    ft_steps: usize,
+    mut visit: impl FnMut(&str, &CompressedModel) -> Result<()>,
+) -> Result<String> {
     let pct = (budget * 100.0).round() as u32;
     let mut rows: Vec<(String, EvalReport)> = Vec::new();
     rows.push((
@@ -176,7 +194,7 @@ pub fn sweep_table(
                 rep,
             ));
         }
-        Ok(())
+        visit(method, &cm)
     })?;
     Ok(format_table(
         &format!("Method sweep @ {pct}% global budget"),
@@ -547,11 +565,63 @@ pub struct DecodeBenchRow {
     pub stats: DecodeStats,
 }
 
+/// Speculative row of the decode benchmark: the factored verifier paired
+/// with a lower-budget draft of the *same* checkpoint, driven over the
+/// identical greedy workload. The draft is produced by re-compressing the
+/// benched artifact's own (dense-schema) parameters with `rom-weight-svd`
+/// at [`SPEC_DRAFT_BUDGET`] scaled by the verifier's own budget, so the
+/// pair passes `check_spec_draft` by construction and no second artifact
+/// file is needed.
+pub struct SpecDecodeBench {
+    /// Draft tokens proposed per speculative round.
+    pub spec_k: usize,
+    /// Budget the draft was re-compressed at.
+    pub draft_budget: f64,
+    /// Engine stats of the speculative scheduler run (executed MACs in
+    /// `stats.core.macs` include draft + verify + rollback waste).
+    pub stats: DecodeStats,
+    /// Run-wide drafted / accepted totals (engine counters).
+    pub drafted: usize,
+    pub accepted: usize,
+    /// Exact analytic MAC split of the speculative machinery, summed over
+    /// the per-request round traces via [`macs::spec_report`].
+    pub draft_prefill_macs: u128,
+    pub draft_macs: u128,
+    pub verify_macs: u128,
+    /// Subset of `verify_macs` spent past each round's accepted prefix and
+    /// rolled back.
+    pub wasted_macs: u128,
+    /// Speculative vs verifier-only factored-KV throughput.
+    pub speedup_vs_verifier: f64,
+    /// Speculative greedy streams bitwise identical to the verifier-only
+    /// factored-KV streams — the correctness contract of the whole path.
+    pub streams_match: bool,
+}
+
+impl SpecDecodeBench {
+    /// Fraction of drafted tokens the verifier confirmed.
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Total MACs the speculative machinery executed beyond the
+    /// verifier's prompt prefill.
+    pub fn spec_macs(&self) -> u128 {
+        self.draft_prefill_macs + self.draft_macs + self.verify_macs
+    }
+}
+
 /// Recompute-vs-KV-cached, dense-vs-factored decode comparison on one
 /// artifact: the same synthetic generation workload driven three ways —
 /// the `repro bench-decode` payload, renderable as a table or JSON.
 pub struct DecodeBench {
     pub rows: Vec<DecodeBenchRow>,
+    /// Speculative companion row (verifier + same-checkpoint draft).
+    pub spec: SpecDecodeBench,
     /// Whether KV-cached decode produced token streams identical to the
     /// cache-less recompute baseline on the same (dense) model — the cache
     /// correctness invariant. (Dense and factored streams may legitimately
@@ -604,6 +674,25 @@ impl DecodeBench {
             self.mac_reduction(),
             self.streams_match
         ));
+        let sp = &self.spec;
+        let total = sp.spec_macs().max(1) as f64;
+        out.push_str(&format!(
+            "speculative (k={}, draft rom-weight-svd@{:.0}%): {:.0} tok/s \
+             ({:.2}x vs factored-kv), acceptance {}/{} ({:.0}%), MAC split \
+             draft {:.0}% / verify {:.0}% (rollback waste {:.0}% of verify); \
+             spec streams ≡ verifier streams: {}\n",
+            sp.spec_k,
+            sp.draft_budget * 100.0,
+            sp.stats.tokens_per_s(),
+            sp.speedup_vs_verifier,
+            sp.accepted,
+            sp.drafted,
+            sp.accept_rate() * 100.0,
+            (sp.draft_prefill_macs + sp.draft_macs) as f64 / total * 100.0,
+            sp.verify_macs as f64 / total * 100.0,
+            sp.wasted_macs as f64 / sp.verify_macs.max(1) as f64 * 100.0,
+            sp.streams_match,
+        ));
         out
     }
 
@@ -648,13 +737,44 @@ impl DecodeBench {
             ("mac_reduction", Json::Num(self.mac_reduction())),
             ("streams_match", Json::Bool(self.streams_match)),
             ("rows", Json::Arr(rows)),
+            ("speculative", {
+                let sp = &self.spec;
+                json_obj(vec![
+                    ("spec_k", Json::Num(sp.spec_k as f64)),
+                    ("draft_budget", Json::Num(sp.draft_budget)),
+                    ("generated_tokens", Json::Num(sp.stats.generated_tokens() as f64)),
+                    (
+                        "macs_per_token",
+                        Json::Num(sp.stats.macs_per_generated_token() as f64),
+                    ),
+                    ("tokens_per_s", Json::Num(sp.stats.tokens_per_s())),
+                    ("speedup_vs_verifier", Json::Num(sp.speedup_vs_verifier)),
+                    ("drafted", Json::Num(sp.drafted as f64)),
+                    ("accepted", Json::Num(sp.accepted as f64)),
+                    ("accept_rate", Json::Num(sp.accept_rate())),
+                    ("draft_prefill_macs", Json::Num(sp.draft_prefill_macs as f64)),
+                    ("draft_macs", Json::Num(sp.draft_macs as f64)),
+                    ("verify_macs", Json::Num(sp.verify_macs as f64)),
+                    ("wasted_macs", Json::Num(sp.wasted_macs as f64)),
+                    ("streams_match", Json::Bool(sp.streams_match)),
+                ])
+            }),
         ])
     }
 }
 
+/// Base budget the speculative decode bench re-compresses the artifact at
+/// (scaled by the verifier's own global budget) to obtain its
+/// same-checkpoint draft model.
+pub const SPEC_DRAFT_BUDGET: f64 = 0.35;
+
+/// Draft tokens per round the speculative decode bench proposes.
+pub const SPEC_BENCH_K: usize = 3;
+
 /// Run the three-way decode comparison on one artifact: dense-recompute
 /// (cache-less baseline), dense-KV, and factored-KV, on the same greedy
-/// synthetic workload.
+/// synthetic workload — plus a speculative row pairing the factored
+/// verifier with a lower-budget draft of the same checkpoint.
 pub fn decode_bench(
     cm: &CompressedModel,
     requests: usize,
@@ -679,10 +799,65 @@ pub fn decode_bench(
 
     let (rc_results, rc_stats) = run_recompute(&dense, &reqs, &config)?;
     let (dk_results, dk_stats) = DecodeScheduler::new(&dense, config).run(reqs.clone())?;
-    let (_, fk_stats) = DecodeScheduler::new(&fact, config).run(reqs)?;
+    let (fk_results, fk_stats) = DecodeScheduler::new(&fact, config).run(reqs.clone())?;
 
     let streams_match = rc_results.len() == dk_results.len()
         && rc_results.iter().zip(&dk_results).all(|(x, y)| x.tokens == y.tokens);
+
+    // Speculative row: the draft is the benched artifact itself compressed
+    // harder (rom-weight-svd over its own dense-schema params), so the pair
+    // is the same checkpoint by construction. The draft budget is scaled by
+    // the verifier's own budget so the draft's unit MACs stay strictly below
+    // the verifier's even for aggressively-compressed input artifacts.
+    let draft_budget =
+        (SPEC_DRAFT_BUDGET * cm.provenance.global_budget.clamp(0.0, 1.0)).max(0.05);
+    let draft_cm = CompressionSession::offline(cfg.clone()).compress_at(
+        "rom-weight-svd",
+        &cm.params,
+        draft_budget,
+        &mut EmptyStream,
+    )?;
+    let draft_fact = ServeModel::from_artifact(&draft_cm, ExecMode::Factored)?;
+    let spec_config = DecodeConfig { spec_k: SPEC_BENCH_K, ..config };
+    let (sp_results, sp_stats) =
+        DecodeScheduler::with_draft(&fact, &draft_fact, spec_config)?.run(reqs.clone())?;
+    let spec_streams_match = sp_results.len() == fk_results.len()
+        && sp_results.iter().zip(&fk_results).all(|(x, y)| x.tokens == y.tokens);
+
+    // Exact draft/verify MAC split: replay each request through the
+    // per-request SpecDecoder (its round schedule is scheduling-independent,
+    // so it matches what the engine lanes executed) and bill the round
+    // traces analytically.
+    let spec_dec = SpecDecoder::from_artifacts(cm, &draft_cm, ExecMode::Factored, SPEC_BENCH_K)?;
+    let (mut dp, mut dm, mut vm, mut wm) = (0u128, 0u128, 0u128, 0u128);
+    for req in &reqs {
+        let stream = spec_dec.generate(&req.prompt, max_new, None, exec)?;
+        let rep = macs::spec_report(
+            cfg,
+            &draft_cm.accounting,
+            &cm.accounting,
+            req.prompt.len(),
+            &stream.rounds,
+        );
+        dp += rep.draft_prefill_macs;
+        dm += rep.draft_macs;
+        vm += rep.verify_macs;
+        wm += rep.wasted_macs;
+    }
+    let fk_tps = fk_stats.tokens_per_s();
+    let spec = SpecDecodeBench {
+        spec_k: SPEC_BENCH_K,
+        draft_budget,
+        drafted: sp_stats.spec_drafted,
+        accepted: sp_stats.spec_accepted,
+        draft_prefill_macs: dp,
+        draft_macs: dm,
+        verify_macs: vm,
+        wasted_macs: wm,
+        speedup_vs_verifier: if fk_tps > 0.0 { sp_stats.tokens_per_s() / fk_tps } else { 1.0 },
+        streams_match: spec_streams_match,
+        stats: sp_stats,
+    };
 
     Ok(DecodeBench {
         rows: vec![
@@ -690,6 +865,7 @@ pub fn decode_bench(
             DecodeBenchRow { method: "dense-kv", stats: dk_stats },
             DecodeBenchRow { method: "factored-kv", stats: fk_stats },
         ],
+        spec,
         streams_match,
         requests,
         prompt_len,
@@ -1239,13 +1415,33 @@ mod tests {
         assert!(b.mac_reduction() > 1.0);
         assert!(b.streams_match, "dense KV streams must equal dense recompute streams");
         assert!(b.rows[1].stats.mid_run_admissions > 0, "4 requests / 2 slots admit mid-run");
+        // speculative companion row: bitwise identical to the verifier-only
+        // factored-kv streams, with an exact analytic MAC accounting
+        let sp = &b.spec;
+        assert!(sp.streams_match, "speculative streams must equal verifier-only streams");
+        assert!(sp.drafted > 0, "the speculative row must actually draft");
+        assert!(sp.accepted <= sp.drafted);
+        assert!((0.0..=1.0).contains(&sp.accept_rate()));
+        assert!(sp.draft_prefill_macs > 0 && sp.draft_macs > 0 && sp.verify_macs > 0);
+        assert!(sp.wasted_macs <= sp.verify_macs);
+        let prefill = macs::decode_report(&cfg, &cm.accounting, 8, 1).prefill_macs * 4;
+        assert_eq!(
+            sp.stats.core.macs,
+            prefill + sp.spec_macs(),
+            "executed speculative MACs must equal the analytic accounting"
+        );
         let j = Json::parse(&b.to_json().to_string()).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "decode");
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(j.get("streams_match").unwrap(), &Json::Bool(true));
         assert_eq!(j.get("threads").unwrap().as_f64().unwrap(), 1.0);
+        let sp_j = j.get("speculative").unwrap();
+        assert_eq!(sp_j.get("streams_match").unwrap(), &Json::Bool(true));
+        assert_eq!(sp_j.get("spec_k").unwrap().as_f64().unwrap(), SPEC_BENCH_K as f64);
+        assert!(sp_j.get("accept_rate").unwrap().as_f64().unwrap() <= 1.0);
         let text = b.format();
         assert!(text.contains("factored-kv") && text.contains("dense-recompute"));
+        assert!(text.contains("speculative (k="));
     }
 
     #[test]

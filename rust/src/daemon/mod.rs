@@ -12,6 +12,11 @@
 //! `factored`, or `factored-quant` — the int8 quantized factored path,
 //! selected explicitly and never substituted silently), and nothing on
 //! the wire changes with the mode; only the kernels behind the logits do.
+//! The same holds for speculative decoding: `--draft draft.rtz`
+//! (+ `--spec-k`) pairs a low-budget artifact of the same checkpoint with
+//! the serving model at bind time ([`Daemon::bind_with_draft`]), greedy
+//! generate requests then draft+verify internally with bitwise-identical
+//! output — a deployment decision, never negotiated on the wire.
 //!
 //! # Endpoints
 //!

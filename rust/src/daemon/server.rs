@@ -320,6 +320,9 @@ impl DaemonControl {
 /// requests are only processed once [`Daemon::serve`] runs.
 pub struct Daemon<'m> {
     model: &'m ServeModel,
+    /// Speculative draft model, fixed at bind time — the decode mode is a
+    /// daemon-side deployment decision, never negotiated on the wire.
+    draft: Option<&'m ServeModel>,
     engine: EngineConfig,
     listener: TcpListener,
     addr: SocketAddr,
@@ -360,7 +363,25 @@ impl<'m> Daemon<'m> {
             ..EngineSnapshot::default()
         });
         let (cmd_tx, cmd_rx) = channel();
-        Ok(Daemon { model, engine: config.engine, listener, addr, shared, cmd_tx, cmd_rx })
+        Ok(Daemon { model, draft: None, engine: config.engine, listener, addr, shared, cmd_tx, cmd_rx })
+    }
+
+    /// [`Daemon::bind`] with a speculative draft model bound for the whole
+    /// run. The pair is validated here, before the listener serves a
+    /// single request — greedy streams stay bitwise identical to a
+    /// draft-less daemon, only throughput (and the `repro_spec_*` metrics
+    /// counters) change.
+    pub fn bind_with_draft(
+        model: &'m ServeModel,
+        draft: &'m ServeModel,
+        config: DaemonConfig,
+    ) -> Result<Daemon<'m>> {
+        // fail fast on a mismatched pair or spec_k 0 — the same checks the
+        // engine applies, surfaced at startup instead of mid-serve
+        EngineCore::with_draft(model, draft, config.engine)?;
+        let mut daemon = Daemon::bind(model, config)?;
+        daemon.draft = Some(draft);
+        Ok(daemon)
     }
 
     /// The bound address (resolves `:0` to the actual ephemeral port).
@@ -380,8 +401,11 @@ impl<'m> Daemon<'m> {
     /// handler thread per connection. Returns the run's accounting once
     /// every admitted request finished and every handler exited.
     pub fn serve(self) -> Result<DaemonReport> {
-        let Daemon { model, engine, listener, addr: _, shared, cmd_tx, cmd_rx } = self;
-        let core = EngineCore::new(model, engine);
+        let Daemon { model, draft, engine, listener, addr: _, shared, cmd_tx, cmd_rx } = self;
+        let core = match draft {
+            Some(d) => EngineCore::with_draft(model, d, engine)?,
+            None => EngineCore::new(model, engine),
+        };
         let stats = std::thread::scope(|s| -> Result<CoreStats> {
             let eng = s.spawn(|| engine_loop(core, &shared, cmd_rx));
             let mut accept_err: Option<std::io::Error> = None;

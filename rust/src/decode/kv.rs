@@ -76,6 +76,21 @@ impl KvCache {
         self.pos = 0;
     }
 
+    /// Roll the cursor back to `pos` — the speculative-decoding rejection
+    /// path. Rows past `pos` become stale and are overwritten by the next
+    /// write; truncating to the current position is a no-op, truncating
+    /// *past* the position (a rewind to tokens never consumed) is a
+    /// proper `Err`.
+    pub fn truncate_to(&mut self, pos: usize) -> Result<()> {
+        ensure!(
+            pos <= self.pos,
+            "KV truncate_to({pos}) past the cursor (pos {}): cannot roll forward",
+            self.pos
+        );
+        self.pos = pos;
+        Ok(())
+    }
+
     /// Copy `rows·d` K and V values into `layer`'s blocks at row `at`.
     pub(crate) fn write(&mut self, layer: usize, at: usize, k_rows: &[f32], v_rows: &[f32]) {
         debug_assert_eq!(k_rows.len(), v_rows.len());
@@ -128,20 +143,40 @@ impl KvCachePool {
         capacity: usize,
         max_bytes: Option<usize>,
     ) -> Result<KvCachePool> {
+        Ok(Self::with_cap_dual(cfg, slots, capacity, false, max_bytes)?.0)
+    }
+
+    /// [`KvCachePool::with_cap`] for speculative decoding: when
+    /// `speculative`, a second (draft-model) cache family of identical
+    /// geometry is allocated alongside the verifier's, and the footprint
+    /// guard bills *both* families against `max_bytes` before either is
+    /// allocated — the draft cache is real memory, so `--kv-cap-mb` must
+    /// see it.
+    pub fn with_cap_dual(
+        cfg: &ModelConfig,
+        slots: usize,
+        capacity: usize,
+        speculative: bool,
+        max_bytes: Option<usize>,
+    ) -> Result<(KvCachePool, Option<KvCachePool>)> {
         let per_slot_bytes = kv_slot_bytes(cfg, capacity);
+        let families = if speculative { 2 } else { 1 };
         if let Some(cap) = max_bytes {
-            let need = slots * per_slot_bytes;
+            let need = families * slots * per_slot_bytes;
             ensure!(
                 need <= cap,
-                "KV cache pool over budget: {slots} slots × {per_slot_bytes} bytes/slot = \
-                 {need} bytes > cap {cap} (lower --slots, shorten the capacity, or raise the cap)"
+                "KV cache pool over budget: {families} cache famil{} × {slots} slots × \
+                 {per_slot_bytes} bytes/slot = {need} bytes > cap {cap} (lower --slots, \
+                 shorten the capacity, or raise the cap)",
+                if families == 1 { "y" } else { "ies (verifier + speculative draft)" }
             );
         }
-        Ok(KvCachePool {
+        let build = || KvCachePool {
             free: (0..slots).map(|_| KvCache::new(cfg, capacity)).collect(),
             slots,
             per_slot_bytes,
-        })
+        };
+        Ok((build(), speculative.then(build)))
     }
 
     pub fn n_slots(&self) -> usize {
@@ -238,6 +273,55 @@ mod tests {
         assert_eq!(p.footprint_bytes(), 2 * (2 * 3 * 6 * 8 * 4));
         assert_eq!(p.bytes(), p.footprint_bytes(), "footprint counts caches out on loan too");
         assert_eq!(kv_slot_bytes(&cfg(), 6), 2 * 3 * 6 * 8 * 4);
+    }
+
+    #[test]
+    fn truncate_to_rolls_back_but_never_forward() {
+        let mut c = KvCache::new(&cfg(), 6);
+        let rows: Vec<f32> = (0..24).map(|i| i as f32).collect(); // 3 rows of 8
+        c.write(0, 0, &rows, &rows);
+        c.advance(3);
+        assert_eq!(c.pos(), 3);
+        // to the current position: a no-op
+        c.truncate_to(3).unwrap();
+        assert_eq!(c.pos(), 3);
+        // mid-sequence rollback (the speculative rejection path); the
+        // surviving rows are untouched
+        c.truncate_to(1).unwrap();
+        assert_eq!(c.pos(), 1);
+        assert_eq!(c.remaining(), 5);
+        let (k, _) = c.view(0, 1);
+        assert_eq!(k, &rows[..8]);
+        // to zero: equivalent to reset
+        c.truncate_to(0).unwrap();
+        assert_eq!(c.pos(), 0);
+        // past the cursor: rejected, cursor unchanged
+        let e = c.truncate_to(1).unwrap_err();
+        assert!(e.to_string().contains("past the cursor"), "{e}");
+        assert_eq!(c.pos(), 0);
+    }
+
+    #[test]
+    fn dual_family_cap_bills_draft_caches_too() {
+        let cfg = cfg();
+        let per_slot = kv_slot_bytes(&cfg, 6);
+        // one family fits under the cap…
+        let (pool, none) = KvCachePool::with_cap_dual(&cfg, 2, 6, false, Some(2 * per_slot))
+            .unwrap();
+        assert!(none.is_none());
+        assert_eq!(pool.footprint_bytes(), 2 * per_slot);
+        // …but the same cap must reject verifier + draft before allocating
+        let e = KvCachePool::with_cap_dual(&cfg, 2, 6, true, Some(2 * per_slot)).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("over budget"), "{msg}");
+        assert!(msg.contains("verifier + speculative draft"), "{msg}");
+        assert!(msg.contains(&format!("{}", 4 * per_slot)), "{msg}");
+        // doubling the cap admits both families, each fully provisioned
+        let (ver, draft) =
+            KvCachePool::with_cap_dual(&cfg, 2, 6, true, Some(4 * per_slot)).unwrap();
+        let draft = draft.expect("speculative mode carries a draft family");
+        assert_eq!(ver.footprint_bytes() + draft.footprint_bytes(), 4 * per_slot);
+        assert_eq!(draft.n_slots(), 2);
     }
 
     #[test]

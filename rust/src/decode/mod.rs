@@ -20,6 +20,13 @@
 //!   [`DecodeScheduler::session`] and drain per-token events instead.
 //! - [`Sampling`] — greedy / temperature / top-k next-token selection,
 //!   seeded through [`crate::util::Rng`] per request for reproducibility.
+//! - [`SpecDecoder`] / [`spec_round`] — speculative decoding over a
+//!   draft/verifier artifact pair of the same checkpoint: the low-budget
+//!   draft proposes `k` greedy tokens, the verifier scores all of them in
+//!   one chunked forward, and both KV caches roll back on rejection via
+//!   [`KvCache::truncate_to`]. The speculative greedy stream is *bitwise
+//!   identical* to the verifier-only stream; only the wall-clock (and the
+//!   acceptance counters) change.
 //! - [`DecodeStats`] — the shared [`crate::util::RequestStats`] core plus
 //!   time-to-first-token and inter-token latency summaries (derived from
 //!   the event timeline) and executed-vs-recompute MAC accounting that
@@ -33,6 +40,7 @@
 pub mod kv;
 pub mod sampler;
 pub mod scheduler;
+pub mod spec;
 pub mod stats;
 
 use std::time::Instant;
@@ -50,6 +58,7 @@ pub use scheduler::{
     DecodeConfig, DecodeScheduler, Event, EventKind, FinishReason, GenRequest, GenResult,
     StreamControl,
 };
+pub use spec::{spec_round, SpecDecoder, SpecRoundOutcome, SpecState, SpecStream};
 pub use stats::DecodeStats;
 
 /// Deterministic synthetic generation workload: `n` requests of

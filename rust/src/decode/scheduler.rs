@@ -120,8 +120,14 @@ pub struct DecodeConfig {
     /// row sharding (token streams are invariant to it).
     pub exec: ExecConfig,
     /// Cap on the KV cache pool's preallocated footprint; construction
-    /// fails cleanly when `slots × per-slot bytes` exceeds it.
+    /// fails cleanly when `slots × per-slot bytes` exceeds it. In
+    /// speculative mode the cap covers *both* cache families (verifier +
+    /// draft).
     pub max_cache_bytes: Option<usize>,
+    /// Draft tokens proposed per speculative round (0 disables
+    /// speculation; effective only via [`DecodeScheduler::with_draft`]
+    /// under greedy sampling).
+    pub spec_k: usize,
 }
 
 impl Default for DecodeConfig {
@@ -135,6 +141,7 @@ impl Default for DecodeConfig {
             eos: Some(crate::data::EOS),
             exec: ExecConfig::default(),
             max_cache_bytes: None,
+            spec_k: 0,
         }
     }
 }
@@ -163,6 +170,7 @@ impl DecodeConfig {
             interactive_macs_per_round: 0,
             batch_macs_per_round: 0,
             max_queued_macs: 0,
+            spec_k: self.spec_k,
         }
     }
 }
@@ -184,18 +192,41 @@ pub(crate) fn decode_stats(cs: CoreStats) -> DecodeStats {
         peak_active: cs.peak_active,
         mid_run_admissions: cs.mid_run_admissions,
         decode_rounds: cs.decode_rounds,
+        spec_drafted: cs.spec_drafted,
+        spec_accepted: cs.spec_accepted,
     }
 }
 
-/// KV-cached autoregressive generation over one loaded [`ServeModel`].
+/// KV-cached autoregressive generation over one loaded [`ServeModel`],
+/// optionally speculating with a low-budget draft model of the same
+/// checkpoint ([`DecodeScheduler::with_draft`]).
 pub struct DecodeScheduler<'m> {
     model: &'m ServeModel,
+    draft: Option<&'m ServeModel>,
     config: DecodeConfig,
 }
 
 impl<'m> DecodeScheduler<'m> {
     pub fn new(model: &'m ServeModel, config: DecodeConfig) -> DecodeScheduler<'m> {
-        DecodeScheduler { model, config }
+        DecodeScheduler { model, draft: None, config }
+    }
+
+    /// A scheduler that drafts `config.spec_k` candidate tokens per round
+    /// on `draft` and verifies them in one chunked forward on `model`.
+    /// Greedy streams are bitwise identical to [`DecodeScheduler::new`];
+    /// non-greedy sampling falls back to plain decode deterministically.
+    /// Fails when the pair is inconsistent (different checkpoint family,
+    /// or `spec_k == 0` with a draft bound) — the same validation
+    /// [`EngineCore::with_draft`] applies, surfaced before any compute.
+    pub fn with_draft(
+        model: &'m ServeModel,
+        draft: &'m ServeModel,
+        config: DecodeConfig,
+    ) -> Result<DecodeScheduler<'m>> {
+        // validate the pair eagerly with a throwaway core so misuse fails
+        // at construction, not at the first run
+        EngineCore::with_draft(model, draft, config.engine_config(1))?;
+        Ok(DecodeScheduler { model, draft: Some(draft), config })
     }
 
     pub fn model(&self) -> &ServeModel {
@@ -206,10 +237,21 @@ impl<'m> DecodeScheduler<'m> {
         &self.config
     }
 
+    /// The engine core this front door drives: draft-bound when
+    /// speculative, plain otherwise.
+    fn core(&self, ecfg: EngineConfig) -> Result<EngineCore<'m>> {
+        match self.draft {
+            Some(draft) => EngineCore::with_draft(self.model, draft, ecfg),
+            None => Ok(EngineCore::new(self.model, ecfg)),
+        }
+    }
+
     /// An event-driven session over this scheduler's model and knobs —
     /// the streaming face of the same lifecycle `run` drives in batch.
     pub fn session(&self, queue_cap: usize) -> Session<'m> {
-        EngineCore::new(self.model, self.config.engine_config(queue_cap)).session()
+        self.core(self.config.engine_config(queue_cap))
+            .expect("pair validated at construction")
+            .session()
     }
 
     /// Validate a batch up-front with the core's own rules (so a bad
@@ -231,7 +273,7 @@ impl<'m> DecodeScheduler<'m> {
     /// path: no per-token event or text is materialized.
     pub fn run(&self, requests: Vec<GenRequest>) -> Result<(Vec<GenResult>, DecodeStats)> {
         let (ecfg, reqs) = self.prepare(requests)?;
-        let (finished, cs) = EngineCore::new(self.model, ecfg).run(reqs)?;
+        let (finished, cs) = self.core(ecfg)?.run(reqs)?;
         let results = finished.into_iter().map(GenResult::from_finished).collect();
         Ok((results, decode_stats(cs)))
     }
@@ -255,7 +297,7 @@ impl<'m> DecodeScheduler<'m> {
         F: FnMut(&Event) -> StreamControl,
     {
         let (ecfg, reqs) = self.prepare(requests)?;
-        let (finished, cs) = EngineCore::new(self.model, ecfg).run_streaming(reqs, on_event)?;
+        let (finished, cs) = self.core(ecfg)?.run_streaming(reqs, on_event)?;
         let results = finished.into_iter().map(GenResult::from_finished).collect();
         Ok((results, decode_stats(cs)))
     }
@@ -412,6 +454,44 @@ mod tests {
         assert_eq!(results[1].tokens.len(), 1);
         assert_eq!(results[2].finish, FinishReason::MaxTokens);
         assert_eq!(results[2].tokens.len(), 6);
+    }
+
+    #[test]
+    fn speculative_run_is_bitwise_identical_and_counts_acceptance() {
+        let cfg = demo_config();
+        let verifier_cm = demo_artifact(&cfg, 0.8, 0x51EC).unwrap();
+        let draft_cm = demo_artifact(&cfg, 0.35, 0x51EC).unwrap();
+        let verifier = ServeModel::from_artifact(&verifier_cm, ExecMode::Factored).unwrap();
+        let draft = ServeModel::from_artifact(&draft_cm, ExecMode::Factored).unwrap();
+        let (base, base_stats) =
+            DecodeScheduler::new(&verifier, config()).run(requests(4, 6)).unwrap();
+        let spec_cfg = DecodeConfig { spec_k: 3, ..config() };
+        let sched = DecodeScheduler::with_draft(&verifier, &draft, spec_cfg).unwrap();
+        let (results, stats) = sched.run(requests(4, 6)).unwrap();
+        for (a, b) in base.iter().zip(&results) {
+            assert_eq!(a.tokens, b.tokens, "speculative stream diverged on request {}", a.id);
+            assert_eq!(a.finish, b.finish);
+            assert_eq!(a.text, b.text);
+        }
+        assert_eq!(base_stats.spec_drafted, 0);
+        assert!(stats.spec_drafted > 0, "draft model never ran");
+        assert!(stats.spec_accepted <= stats.spec_drafted);
+        assert!(stats.spec_accept_rate() > 0.0, "same-checkpoint pair should agree sometimes");
+        // non-greedy sampling must deterministically fall back to plain
+        // decode: same streams as a draft-less scheduler, nothing drafted
+        let sampled = DecodeConfig {
+            sampling: Sampling::TopK { k: 8, temperature: 0.9 },
+            spec_k: 3,
+            ..config()
+        };
+        let spec = DecodeScheduler::with_draft(&verifier, &draft, sampled).unwrap();
+        let (a, a_stats) = spec.run(requests(3, 6)).unwrap();
+        let plain = DecodeScheduler::new(&verifier, DecodeConfig { spec_k: 0, ..sampled });
+        let (b, _) = plain.run(requests(3, 6)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens, "sampled fallback diverged");
+        }
+        assert_eq!(a_stats.spec_drafted, 0, "non-greedy runs must not draft");
     }
 
     #[test]

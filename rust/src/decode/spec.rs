@@ -1,0 +1,542 @@
+//! Speculative decoding on the rank ladder: draft with a cheap artifact,
+//! verify with the full one.
+//!
+//! The compression sweep produces a *family* of artifacts of the same
+//! checkpoint at different §2 energy budgets. A low-budget artifact costs
+//! only `r_draft(d1+d2)` MACs/token, which makes it a free draft model
+//! for paper-native speculative decoding — no second network, exactly
+//! the deployment-accelerator framing of LORD (arXiv:2309.14021) and the
+//! small-drafts-large pairing of Lillama (arXiv:2412.16719). Decode is
+//! sequential; speculative verification turns K sequential verifier
+//! steps into **one** chunked-prefill batched forward
+//! ([`ServeModel::forward_cached_scratch`] over K+1 positions), so the
+//! verifier's per-position head and attention work amortizes across the
+//! chunk while the cheap model absorbs the sequential dependency.
+//!
+//! ## The round ([`spec_round`])
+//!
+//! With `g` tokens generated, canonical verifier position
+//! `C = prompt + g - 1`, and `last` the newest token:
+//!
+//! 1. **Draft**: catch the draft KV cache up to the canonical stream
+//!    (it lags by the bonus token after a fully accepted round), then
+//!    greedily draft `k_eff = min(spec_k, max_new - g - 1)` candidates
+//!    `d1..dk` one step at a time on the cheap model. The clamp keeps
+//!    every transient cache position `<= prompt + max_new - 1`, so the
+//!    speculative path needs **no capacity headroom** over plain decode.
+//! 2. **Verify**: one chunked forward of `[last, d1, .., dk]` on the
+//!    verifier scores all `k_eff + 1` positions at once; row `j` is the
+//!    verifier's greedy choice after consuming the chunk prefix
+//!    `..=j` — exactly the token verifier-only decode would emit at
+//!    stream index `g + j`.
+//! 3. **Commit**: accept the longest prefix with `d_{j+1} == v_j`, then
+//!    append the verifier's own next token (the *bonus*) — always
+//!    `accepted + 1 ∈ 1..=k_eff+1` tokens, so a round never stalls.
+//! 4. **Rollback**: both caches roll back to the new canonical position
+//!    via [`KvCache::truncate_to`]; rejected positions stay billed
+//!    (that waste is the price of speculation and is accounted
+//!    explicitly by [`crate::model::macs::spec_report`]).
+//!
+//! ## Contracts
+//!
+//! - **Bitwise identity**: every emitted token is a verifier argmax over
+//!   a prefix identical to what verifier-only greedy decode would have
+//!   consumed, and the chunked forward computes per-position arithmetic
+//!   identical to single-step decode — so the speculative stream equals
+//!   the verifier-only greedy stream *bitwise*, for any `spec_k` and any
+//!   `--threads` (asserted by `prop_speculative_equals_verifier_greedy`
+//!   and `repro generate --self-check --speculative`).
+//! - **Exact MAC accounting**: executed MACs (draft prefill + draft
+//!   steps + verify chunks, rollback waste included) equal the analytic
+//!   [`crate::model::macs::spec_report`] over the `(drafted, accepted)`
+//!   round trace, exactly — not approximately.
+//! - **Greedy only**: non-greedy sampling depends on a per-request RNG
+//!   stream that a draft model cannot reproduce, so those requests
+//!   deterministically fall back to the plain decode path (the engine
+//!   never builds spec state for them).
+
+use anyhow::{ensure, Result};
+
+use crate::compress::CompressedModel;
+use crate::exec::{ExecConfig, ExecPool};
+use crate::model::macs::SpecRound;
+use crate::serve::{ExecMode, ServeModel, ServeScratch};
+use crate::util::Rng;
+
+use super::kv::KvCache;
+use super::sampler::Sampling;
+
+/// Greedy argmax over row `row` of the `(rows, vocab)` logits a chunked
+/// forward leaves in scratch. Routed through [`Sampling::Greedy`] (which
+/// ignores the rng) so the tie-break — highest id wins — is *the same
+/// code path* as plain decode: that identity is what makes the
+/// speculative stream bitwise equal to the verifier-only one.
+fn argmax_row(logits: &[f32], row: usize, vocab: usize) -> i32 {
+    Sampling::Greedy.sample(&logits[row * vocab..(row + 1) * vocab], &mut Rng::new(0))
+}
+
+/// Per-lane speculative state: the draft model's KV cache and scratch
+/// arena plus a reusable chunk buffer. Preallocated at admission so
+/// steady-state speculative rounds allocate nothing.
+pub struct SpecState {
+    draft_cache: KvCache,
+    draft_scratch: ServeScratch,
+    /// Reusable token buffer for the catch-up and verify chunks
+    /// (capacity `spec_k + 2` covers both).
+    chunk: Vec<i32>,
+    round_drafted: usize,
+    round_accepted: usize,
+    round_emitted: usize,
+}
+
+impl SpecState {
+    pub fn new(draft_cache: KvCache, draft_scratch: ServeScratch, spec_k: usize) -> SpecState {
+        SpecState {
+            draft_cache,
+            draft_scratch,
+            chunk: Vec::with_capacity(spec_k + 2),
+            round_drafted: 0,
+            round_accepted: 0,
+            round_emitted: 0,
+        }
+    }
+
+    /// Prefill the draft cache with the prompt (the draft model's share
+    /// of lane prefill). Returns the MACs executed.
+    pub fn prefill(&mut self, draft: &ServeModel, prompt: &[i32], pool: &ExecPool) -> Result<u128> {
+        draft.forward_prefill_scratch(prompt, &mut self.draft_cache, pool, &mut self.draft_scratch)
+    }
+
+    /// Candidates drafted in the most recent round (0 for a degenerate
+    /// verify-only round at the token-budget boundary).
+    pub fn round_drafted(&self) -> usize {
+        self.round_drafted
+    }
+
+    /// Candidates the verifier accepted in the most recent round.
+    pub fn round_accepted(&self) -> usize {
+        self.round_accepted
+    }
+
+    /// Tokens appended to the stream in the most recent round (after EOS
+    /// truncation) — always >= 1.
+    pub fn round_emitted(&self) -> usize {
+        self.round_emitted
+    }
+
+    /// Release the draft cache back to its pool at lane retirement.
+    pub fn into_cache(self) -> KvCache {
+        self.draft_cache
+    }
+}
+
+/// What one speculative round executed and emitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecRoundOutcome {
+    /// Candidates drafted (`k_eff`, the clamped `spec_k`).
+    pub drafted: usize,
+    /// Longest drafted prefix matching the verifier's greedy choices.
+    pub accepted: usize,
+    /// Tokens appended to the stream (accepted + bonus, truncated at the
+    /// first EOS) — always >= 1.
+    pub emitted: usize,
+    /// The emitted tokens ended at an EOS.
+    pub hit_eos: bool,
+    /// MACs executed this round (draft catch-up + draft steps + the
+    /// verify chunk, rejected positions included).
+    pub macs: u128,
+}
+
+/// One speculative round: draft `k_eff` tokens on the cheap model,
+/// verify them all in one chunked verifier forward, commit the accepted
+/// prefix plus the verifier's bonus token, and roll both caches back.
+/// Appends the emitted tokens to `tokens`. The caller owns the stop
+/// decision (`hit_eos` / token budget), mirroring the plain decode path.
+#[allow(clippy::too_many_arguments)]
+pub fn spec_round(
+    verifier: &ServeModel,
+    draft: &ServeModel,
+    prompt_len: usize,
+    max_new: usize,
+    spec_k: usize,
+    eos: Option<i32>,
+    tokens: &mut Vec<i32>,
+    cache: &mut KvCache,
+    state: &mut SpecState,
+    scratch: &mut ServeScratch,
+    pool: &ExecPool,
+) -> Result<SpecRoundOutcome> {
+    let g = tokens.len();
+    debug_assert!(g >= 1 && g < max_new, "spec rounds run on live lanes only");
+    let vocab = verifier.config().vocab;
+    // clamp so the verify chunk never scores past the verifier-only
+    // stream length: no capacity headroom needed over plain decode
+    let k_eff = spec_k.min(max_new - g - 1);
+    let last = tokens[g - 1];
+    let mut macs = 0u128;
+
+    // ---- draft phase ----
+    state.chunk.clear();
+    if k_eff > 0 {
+        // catch-up: feed the canonical tokens the draft cache has not
+        // consumed yet (one token in steady state, two after a fully
+        // accepted round — the bonus token plus the new last)
+        debug_assert!(state.draft_cache.pos() >= prompt_len, "draft cache is prefilled");
+        let start = state.draft_cache.pos() - prompt_len;
+        state.chunk.extend_from_slice(&tokens[start..g]);
+        let rows = state.chunk.len();
+        macs += draft.forward_cached_scratch(
+            &state.chunk,
+            &mut state.draft_cache,
+            pool,
+            &mut state.draft_scratch,
+        )?;
+        let d1 = argmax_row(&state.draft_scratch.logits, rows - 1, vocab);
+        // the verify chunk doubles as the candidate list: [last, d1..dk]
+        state.chunk.clear();
+        state.chunk.push(last);
+        state.chunk.push(d1);
+        for _ in 1..k_eff {
+            let prev = *state.chunk.last().expect("chunk holds the previous candidate");
+            macs += draft.forward_step_scratch(
+                prev,
+                &mut state.draft_cache,
+                pool,
+                &mut state.draft_scratch,
+            )?;
+            state.chunk.push(argmax_row(&state.draft_scratch.logits, 0, vocab));
+        }
+    } else {
+        // degenerate round at the token-budget boundary: verify-only
+        state.chunk.push(last);
+    }
+
+    // ---- verify phase: one chunked-prefill batched forward scores all
+    // k_eff candidates plus the bonus position on the verifier ----
+    let drafted = k_eff;
+    macs += verifier.forward_cached_scratch(&state.chunk, cache, pool, scratch)?;
+    let mut accepted = 0;
+    while accepted < drafted {
+        if argmax_row(&scratch.logits, accepted, vocab) != state.chunk[accepted + 1] {
+            break;
+        }
+        accepted += 1;
+    }
+    let bonus = argmax_row(&scratch.logits, accepted, vocab);
+
+    // ---- rollback: both caches back to the new canonical position;
+    // the rejected verifier positions stay billed (speculation waste) ----
+    let c = cache.pos() - (drafted + 1);
+    cache.truncate_to(c + accepted + 1)?;
+    if drafted > 0 && accepted < drafted {
+        // on a full accept the draft cache is already exactly one token
+        // behind the new canonical stream; the next catch-up absorbs it
+        state.draft_cache.truncate_to(c + accepted + 1)?;
+    }
+
+    // ---- commit: accepted prefix + bonus, truncated at the first EOS
+    // (the emitted tokens are verifier-greedy by construction, so this
+    // stops exactly where verifier-only decode would) ----
+    let mut emitted = 0;
+    let mut hit_eos = false;
+    for j in 0..=accepted {
+        let tok = if j < accepted { state.chunk[j + 1] } else { bonus };
+        tokens.push(tok);
+        emitted += 1;
+        if Some(tok) == eos {
+            hit_eos = true;
+            break;
+        }
+    }
+    state.round_drafted = drafted;
+    state.round_accepted = accepted;
+    state.round_emitted = emitted;
+    Ok(SpecRoundOutcome { drafted, accepted, emitted, hit_eos, macs })
+}
+
+/// One finished speculative generation with its full round trace — the
+/// reference implementation the engine path is asserted against, and the
+/// input [`crate::model::macs::spec_report`] replays analytically.
+#[derive(Debug, Clone)]
+pub struct SpecStream {
+    /// Generated tokens (terminating EOS included when present) —
+    /// bitwise identical to the verifier-only greedy stream.
+    pub tokens: Vec<i32>,
+    /// Per-round `(drafted, accepted)` trace, in execution order.
+    pub rounds: Vec<SpecRound>,
+    /// MACs executed: both prefills + every draft step + every verify
+    /// chunk, rollback waste included. Equals
+    /// `decode_report(verifier).prefill_macs + spec_report(..).spec_macs()`
+    /// exactly.
+    pub macs: u128,
+}
+
+impl SpecStream {
+    /// Total candidates drafted across rounds.
+    pub fn drafted(&self) -> usize {
+        self.rounds.iter().map(|r| r.drafted).sum()
+    }
+
+    /// Total drafted candidates the verifier accepted.
+    pub fn accepted(&self) -> usize {
+        self.rounds.iter().map(|r| r.accepted).sum()
+    }
+
+    /// `accepted / drafted` (0 when nothing was drafted).
+    pub fn accept_rate(&self) -> f64 {
+        let drafted = self.drafted();
+        if drafted == 0 {
+            0.0
+        } else {
+            self.accepted() as f64 / drafted as f64
+        }
+    }
+}
+
+/// Single-sequence speculative greedy decoder over a (draft, verifier)
+/// artifact pair of the same checkpoint — the standalone face of the
+/// engine's speculative lane path, used by the self-checks, the decode
+/// bench, and the property tests as the per-request reference.
+pub struct SpecDecoder {
+    verifier: ServeModel,
+    draft: ServeModel,
+    spec_k: usize,
+}
+
+impl SpecDecoder {
+    /// Pair two loaded models. The models must share a [`ModelConfig`]
+    /// (two budgets of the same checkpoint, not two checkpoints) — the
+    /// artifact-level compatibility check is
+    /// [`CompressedModel::check_spec_draft`].
+    ///
+    /// [`ModelConfig`]: crate::model::ModelConfig
+    pub fn new(verifier: ServeModel, draft: ServeModel, spec_k: usize) -> Result<SpecDecoder> {
+        ensure!(spec_k > 0, "speculative decoding needs --spec-k >= 1 (got {spec_k})");
+        ensure!(
+            verifier.config() == draft.config(),
+            "draft and verifier models are from different checkpoint families \
+             (configs differ); speculative decoding pairs two budgets of one checkpoint"
+        );
+        Ok(SpecDecoder { verifier, draft, spec_k })
+    }
+
+    /// Load a (verifier, draft) artifact pair, enforcing the
+    /// compatibility contract (same config/tokenizer, draft no more
+    /// expensive than the verifier) before any weights are packed.
+    pub fn from_artifacts(
+        verifier: &CompressedModel,
+        draft: &CompressedModel,
+        mode: ExecMode,
+        spec_k: usize,
+    ) -> Result<SpecDecoder> {
+        verifier.check_spec_draft(draft)?;
+        let v = ServeModel::from_artifact(verifier, mode)?;
+        let d = ServeModel::from_artifact(draft, mode)?;
+        SpecDecoder::new(v, d, spec_k)
+    }
+
+    pub fn verifier(&self) -> &ServeModel {
+        &self.verifier
+    }
+
+    pub fn draft(&self) -> &ServeModel {
+        &self.draft
+    }
+
+    pub fn spec_k(&self) -> usize {
+        self.spec_k
+    }
+
+    /// Generate up to `max_new` tokens greedily, drafting on the cheap
+    /// model and verifying in chunked verifier forwards. The returned
+    /// stream is bitwise identical to verifier-only greedy decode.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        eos: Option<i32>,
+        exec: ExecConfig,
+    ) -> Result<SpecStream> {
+        ensure!(!prompt.is_empty(), "speculative generate: empty prompt");
+        let max_new = max_new.max(1);
+        let capacity = prompt.len() + max_new;
+        let vocab = self.verifier.config().vocab;
+        let pool = ExecPool::new(exec.resolve().max(1));
+        let mut cache = KvCache::new(self.verifier.config(), capacity);
+        let mut scratch = self.verifier.scratch(capacity);
+        let mut state = SpecState::new(
+            KvCache::new(self.draft.config(), capacity),
+            self.draft.scratch(capacity),
+            self.spec_k,
+        );
+        let mut tokens: Vec<i32> = Vec::with_capacity(max_new);
+        let mut macs =
+            self.verifier.forward_prefill_scratch(prompt, &mut cache, &pool, &mut scratch)?;
+        macs += state.prefill(&self.draft, prompt, &pool)?;
+        let first = argmax_row(&scratch.logits, 0, vocab);
+        tokens.push(first);
+        let mut rounds = Vec::new();
+        if Some(first) != eos {
+            while tokens.len() < max_new {
+                let out = spec_round(
+                    &self.verifier,
+                    &self.draft,
+                    prompt.len(),
+                    max_new,
+                    self.spec_k,
+                    eos,
+                    &mut tokens,
+                    &mut cache,
+                    &mut state,
+                    &mut scratch,
+                    &pool,
+                )?;
+                rounds.push(SpecRound { drafted: out.drafted, accepted: out.accepted });
+                macs += out.macs;
+                if out.hit_eos {
+                    break;
+                }
+            }
+        }
+        Ok(SpecStream { tokens, rounds, macs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::{DecodeConfig, DecodeScheduler, GenRequest};
+    use crate::model::macs::{decode_report, spec_report};
+    use crate::serve::{demo_artifact, demo_config};
+
+    fn pair(spec_k: usize) -> (CompressedModel, CompressedModel, SpecDecoder) {
+        let cfg = demo_config();
+        let verifier = demo_artifact(&cfg, 0.8, 0x51EC).unwrap();
+        let draft = demo_artifact(&cfg, 0.35, 0x51EC).unwrap();
+        let dec = SpecDecoder::from_artifacts(&verifier, &draft, ExecMode::Factored, spec_k).unwrap();
+        (verifier, draft, dec)
+    }
+
+    fn verifier_only(verifier: &CompressedModel, prompt: &[i32], max_new: usize) -> Vec<i32> {
+        let model = ServeModel::from_artifact(verifier, ExecMode::Factored).unwrap();
+        let config = DecodeConfig {
+            slots: 1,
+            capacity: prompt.len() + max_new,
+            max_new,
+            eos: None,
+            ..DecodeConfig::default()
+        };
+        let reqs =
+            vec![GenRequest { id: 0, prompt: prompt.to_vec(), max_new: None, deadline_s: None }];
+        let (results, _) = DecodeScheduler::new(&model, config).run(reqs).unwrap();
+        results.into_iter().next().unwrap().tokens
+    }
+
+    #[test]
+    fn speculative_stream_is_bitwise_verifier_greedy() {
+        let cfg = demo_config();
+        let prompt = crate::engine::synth_token_streams(&cfg, 1, 9, 0xB00).remove(0);
+        let max_new = 14;
+        let (verifier_cm, draft_cm, _) = pair(3);
+        let reference = verifier_only(&verifier_cm, &prompt, max_new);
+        assert_eq!(reference.len(), max_new);
+        for spec_k in [1usize, 2, 3, 4, 9] {
+            let dec =
+                SpecDecoder::from_artifacts(&verifier_cm, &draft_cm, ExecMode::Factored, spec_k)
+                    .unwrap();
+            let stream = dec.generate(&prompt, max_new, None, ExecConfig::default()).unwrap();
+            assert_eq!(
+                stream.tokens, reference,
+                "spec_k {spec_k}: speculative stream diverged from verifier-only greedy"
+            );
+            // every round emits accepted + 1 tokens (no EOS here)
+            let emitted: usize = 1 + stream.rounds.iter().map(|r| r.accepted + 1).sum::<usize>();
+            assert_eq!(emitted, max_new);
+        }
+    }
+
+    #[test]
+    fn executed_macs_equal_the_analytic_spec_accounting() {
+        let cfg = demo_config();
+        let prompt = crate::engine::synth_token_streams(&cfg, 1, 7, 0xACC).remove(0);
+        let max_new = 11;
+        for spec_k in [1usize, 3, 6] {
+            let (verifier_cm, draft_cm, dec) = {
+                let (v, d, _) = pair(spec_k);
+                let dec =
+                    SpecDecoder::from_artifacts(&v, &d, ExecMode::Factored, spec_k).unwrap();
+                (v, d, dec)
+            };
+            let stream = dec.generate(&prompt, max_new, None, ExecConfig::default()).unwrap();
+            let analytic = spec_report(
+                &cfg,
+                &draft_cm.accounting,
+                &verifier_cm.accounting,
+                prompt.len(),
+                &stream.rounds,
+            );
+            let verifier_prefill =
+                decode_report(&cfg, &verifier_cm.accounting, prompt.len(), 1).prefill_macs;
+            assert_eq!(
+                stream.macs,
+                verifier_prefill + analytic.spec_macs(),
+                "spec_k {spec_k}: executed MACs != analytic draft+verify accounting"
+            );
+            assert_eq!(analytic.generated, stream.tokens.len());
+            assert!(
+                analytic.spec_macs() > analytic.draft_prefill_macs,
+                "rounds executed work beyond the draft prefill"
+            );
+        }
+    }
+
+    #[test]
+    fn eos_stops_the_stream_exactly_where_verifier_only_does() {
+        let cfg = demo_config();
+        let prompt = crate::engine::synth_token_streams(&cfg, 1, 8, 0xE05).remove(0);
+        let max_new = 12;
+        let (verifier_cm, _, dec) = pair(4);
+        let reference = verifier_only(&verifier_cm, &prompt, max_new);
+        // declare a mid-stream token EOS and re-run both paths with it
+        let eos = reference[5];
+        let cut = reference.iter().position(|&t| t == eos).unwrap();
+        let stream = dec.generate(&prompt, max_new, Some(eos), ExecConfig::default()).unwrap();
+        assert_eq!(stream.tokens, reference[..=cut], "EOS truncation diverged");
+        assert_eq!(*stream.tokens.last().unwrap(), eos, "the EOS token itself is kept");
+    }
+
+    #[test]
+    fn mismatched_pairs_are_rejected_up_front() {
+        let cfg = demo_config();
+        let verifier = demo_artifact(&cfg, 0.8, 0x51EC).unwrap();
+        let draft = demo_artifact(&cfg, 0.35, 0x51EC).unwrap();
+        // swapped: the "draft" costs more than the "verifier"
+        let err = SpecDecoder::from_artifacts(&draft, &verifier, ExecMode::Factored, 2).unwrap_err();
+        assert!(err.to_string().contains("swap"), "{err}");
+        // different checkpoint family: different config
+        let other_cfg = crate::model::ModelConfig { d_ff: cfg.d_ff + 16, ..cfg.clone() };
+        let other = demo_artifact(&other_cfg, 0.35, 0x51EC).unwrap();
+        let err =
+            SpecDecoder::from_artifacts(&verifier, &other, ExecMode::Factored, 2).unwrap_err();
+        assert!(err.to_string().contains("different checkpoint"), "{err}");
+        // spec_k 0 is not a speculative decoder
+        let v = ServeModel::from_artifact(&verifier, ExecMode::Factored).unwrap();
+        let d = ServeModel::from_artifact(&draft, ExecMode::Factored).unwrap();
+        assert!(SpecDecoder::new(v, d, 0).is_err());
+    }
+
+    #[test]
+    fn streams_are_thread_count_invariant() {
+        let cfg = demo_config();
+        let prompt = crate::engine::synth_token_streams(&cfg, 1, 6, 0x7123).remove(0);
+        let (_, _, dec) = pair(3);
+        let run = |threads: usize| {
+            let s = dec.generate(&prompt, 10, None, ExecConfig::with_threads(threads)).unwrap();
+            (s.tokens, s.rounds, s.macs)
+        };
+        let serial = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(run(threads), serial, "--threads {threads} moved the speculative stream");
+        }
+    }
+}

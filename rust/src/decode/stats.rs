@@ -38,8 +38,13 @@ pub struct DecodeStats {
     /// slot another sequence freed, the continuous-batching behavior.
     pub mid_run_admissions: usize,
     /// Decode rounds executed (each advances every active sequence by one
-    /// token — the fairness unit).
+    /// token — or, speculatively, by one draft/verify round — the
+    /// fairness unit).
     pub decode_rounds: usize,
+    /// Candidate tokens proposed by the draft model (0 on plain runs).
+    pub spec_drafted: usize,
+    /// Drafted candidates the verifier accepted.
+    pub spec_accepted: usize,
 }
 
 impl DecodeStats {
@@ -64,6 +69,16 @@ impl DecodeStats {
             self.recompute_macs / self.core.tokens as u128
         } else {
             0
+        }
+    }
+
+    /// Fraction of drafted candidates the verifier accepted (0.0 when
+    /// nothing was drafted — i.e. on non-speculative runs).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
         }
     }
 
@@ -101,6 +116,8 @@ mod tests {
             peak_active: 1,
             mid_run_admissions: 0,
             decode_rounds: generated,
+            spec_drafted: 0,
+            spec_accepted: 0,
         }
     }
 
@@ -112,6 +129,11 @@ mod tests {
         assert_eq!(s.macs_per_generated_token(), 100);
         assert_eq!(s.recompute_macs_per_generated_token(), 400);
         assert_eq!(s.mac_savings(), 4.0);
+        assert_eq!(s.spec_accept_rate(), 0.0, "no drafting, rate is defined as 0");
+        let mut spec = stats(10, 1_000, 4_000, 2.0);
+        spec.spec_drafted = 8;
+        spec.spec_accepted = 6;
+        assert_eq!(spec.spec_accept_rate(), 0.75);
     }
 
     #[test]

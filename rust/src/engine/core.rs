@@ -46,6 +46,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Result};
 
 use crate::data::Tokenizer;
+use crate::decode::spec::{spec_round, SpecState};
 use crate::decode::{KvCache, KvCachePool, Sampling};
 use crate::exec::{ExecConfig, ExecPool, SpanObserver};
 use crate::model::macs::{CostModel, RequestCost};
@@ -109,6 +110,11 @@ pub struct EngineConfig {
     /// backpressure, exactly like the count bound `queue_cap`;
     /// 0 = unlimited (count bound only, the default).
     pub max_queued_macs: u128,
+    /// Tokens drafted per speculative round (0 = speculative decoding
+    /// off). Takes effect only when a draft model is bound
+    /// ([`EngineCore::with_draft`]) *and* sampling is greedy — non-greedy
+    /// sampling deterministically falls back to the plain decode path.
+    pub spec_k: usize,
 }
 
 impl Default for EngineConfig {
@@ -128,6 +134,7 @@ impl Default for EngineConfig {
             interactive_macs_per_round: 0,
             batch_macs_per_round: 0,
             max_queued_macs: 0,
+            spec_k: 0,
         }
     }
 }
@@ -217,6 +224,15 @@ pub struct CoreStats {
     /// Per-tenant fairness ledger, recorded at admission with the
     /// declared cost; requests without a tenant bill the `"-"` row.
     pub tenants: BTreeMap<String, TenantUsage>,
+    /// Candidate tokens drafted by speculative lanes (0 without a draft
+    /// model bound).
+    pub spec_drafted: usize,
+    /// Drafted candidates the verifier accepted — the acceptance rate is
+    /// `spec_accepted / spec_drafted`.
+    pub spec_accepted: usize,
+    /// Drafted candidates rolled back after verification (their MACs
+    /// stay in [`CoreStats::macs`]: speculation waste is billed).
+    pub spec_rejected: usize,
 }
 
 /// One row of the per-tenant fairness ledger in [`CoreStats::tenants`].
@@ -348,19 +364,48 @@ enum LaneKind {
         /// `*_scratch` forwards with zero hot-path allocation. Lanes are
         /// forwarded by independent workers, so each needs its own.
         scratch: ServeScratch,
+        /// Speculative lane state (draft cache + draft scratch + chunk
+        /// buffer), present only when the session runs speculatively —
+        /// per-lane, preallocated at admission like `scratch`.
+        spec: Option<Box<SpecState>>,
     },
 }
 
-/// The streaming inference core over one loaded model.
+/// The streaming inference core over one loaded model (plus, in
+/// speculative mode, a cheap draft model of the same checkpoint).
 #[derive(Clone, Copy)]
 pub struct EngineCore<'m> {
     model: &'m ServeModel,
+    /// Draft model for speculative decoding (same checkpoint family at a
+    /// lower budget); `None` runs the plain decode path.
+    draft: Option<&'m ServeModel>,
     config: EngineConfig,
 }
 
 impl<'m> EngineCore<'m> {
     pub fn new(model: &'m ServeModel, config: EngineConfig) -> EngineCore<'m> {
-        EngineCore { model, config }
+        EngineCore { model, draft: None, config }
+    }
+
+    /// Bind a draft model for speculative decoding. The pair must share
+    /// one [`crate::model::ModelConfig`] (two budgets of the same
+    /// checkpoint — the artifact-level contract is
+    /// [`crate::compress::CompressedModel::check_spec_draft`]).
+    pub fn with_draft(
+        model: &'m ServeModel,
+        draft: &'m ServeModel,
+        config: EngineConfig,
+    ) -> Result<EngineCore<'m>> {
+        ensure!(
+            draft.config() == model.config(),
+            "draft and verifier models are from different checkpoint families \
+             (configs differ); speculative decoding pairs two budgets of one checkpoint"
+        );
+        ensure!(
+            config.spec_k > 0,
+            "a draft model is bound but spec_k is 0: set EngineConfig::spec_k >= 1"
+        );
+        Ok(EngineCore { model, draft: Some(draft), config })
     }
 
     pub fn model(&self) -> &'m ServeModel {
@@ -371,6 +416,15 @@ impl<'m> EngineCore<'m> {
         &self.config
     }
 
+    /// True when generation lanes will run speculatively: a draft model
+    /// is bound, `spec_k >= 1`, and sampling is greedy (non-greedy
+    /// sampling falls back to the plain decode path deterministically).
+    pub fn speculative(&self) -> bool {
+        self.draft.is_some()
+            && self.config.spec_k > 0
+            && matches!(self.config.sampling, Sampling::Greedy)
+    }
+
     /// Open a fresh session (its own clock, queue, slots, and events).
     pub fn session(&self) -> Session<'m> {
         Session {
@@ -378,6 +432,7 @@ impl<'m> EngineCore<'m> {
             t0: Instant::now(),
             tokenizer: Tokenizer::new(),
             pool: None,
+            draft_pool: None,
             // the pricer: the model's measured single-token MAC unit
             // closed over its config — the same unit the serve path
             // asserts equals the analytic accounting
@@ -410,6 +465,9 @@ impl<'m> EngineCore<'m> {
             metrics: None,
             submit_t: BTreeMap::new(),
             sched_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_rejected: 0,
         }
     }
 
@@ -487,6 +545,10 @@ pub struct Session<'m> {
     /// Lazily built at the first generation admission (scoring-only
     /// sessions never allocate KV).
     pool: Option<KvCachePool>,
+    /// The draft model's cache pool, built alongside `pool` in
+    /// speculative mode — both families are billed against
+    /// [`EngineConfig::max_cache_bytes`] before either allocates.
+    draft_pool: Option<KvCachePool>,
     /// The request pricer (per-token MAC unit of this session's model).
     cost_model: CostModel,
     /// The priced admission queue: EDF + tier ordering, per-tier MAC
@@ -537,6 +599,11 @@ pub struct Session<'m> {
     /// (counts every [`Session::step`] with work, unlike `rounds` which
     /// counts decode rounds only).
     sched_rounds: u64,
+    /// Speculative totals (candidates drafted / accepted / rejected),
+    /// mirrored into [`CoreStats`], the metrics registry, and the trace.
+    spec_drafted: usize,
+    spec_accepted: usize,
+    spec_rejected: usize,
 }
 
 impl<'m> Session<'m> {
@@ -883,20 +950,50 @@ impl<'m> Session<'m> {
                 macs: macs_after - macs_before,
             });
         }
-        // gather this round's (id, timestamp, token) in admission order…
+        // gather this round's (id, timestamp, token) in admission order —
+        // a speculative lane may have emitted several tokens this round,
+        // all sharing the round's timestamp (the first carries the
+        // inter-token gap, the rest land at zero gap)
         let mut produced: Vec<(usize, f64, usize, i32, f64)> =
             Vec::with_capacity(self.active.len());
+        let mut spec_rounds: Vec<(usize, usize, usize)> = Vec::new();
         for lane in &self.active {
-            let LaneKind::Generate { tokens, .. } = &lane.kind else {
+            let LaneKind::Generate { tokens, spec, .. } = &lane.kind else {
                 unreachable!("score lanes retire at admission")
             };
-            produced.push((
-                lane.id,
-                lane.step_t_s,
-                tokens.len() - 1,
-                *tokens.last().expect("round appended a token"),
-                lane.last_s,
-            ));
+            let emitted = spec.as_ref().map_or(1, |s| s.round_emitted());
+            let first = tokens.len() - emitted;
+            for (j, &tok) in tokens[first..].iter().enumerate() {
+                produced.push((
+                    lane.id,
+                    lane.step_t_s,
+                    first + j,
+                    tok,
+                    if j == 0 { lane.last_s } else { lane.step_t_s },
+                ));
+            }
+            if let Some(s) = spec {
+                spec_rounds.push((lane.id, s.round_drafted(), s.round_accepted()));
+            }
+        }
+        // causal-plane accounting for the speculative rounds: counts only
+        // (the MACs are already inside this round's DecodeRound delta)
+        for &(id, drafted, accepted) in &spec_rounds {
+            self.spec_drafted += drafted;
+            self.spec_accepted += accepted;
+            self.spec_rejected += drafted - accepted;
+            if let Some(m) = &self.metrics {
+                m.spec_drafted.add(drafted as u64);
+                m.spec_accepted.add(accepted as u64);
+                m.spec_rejected.add((drafted - accepted) as u64);
+            }
+            self.trace(TraceEvent::SpecDrafted { id, round, k: drafted });
+            self.trace(TraceEvent::SpecVerified {
+                id,
+                round,
+                accepted,
+                rejected: drafted - accepted,
+            });
         }
         // …emit the Token events serially (deterministic order), deriving
         // inter-token latency from the event timestamps themselves…
@@ -954,6 +1051,9 @@ impl<'m> Session<'m> {
             deadline_evictions: self.deadline_evictions,
             preemptions: self.preemptions,
             admitted_macs: self.admitted_macs,
+            spec_drafted: self.spec_drafted,
+            spec_accepted: self.spec_accepted,
+            spec_rejected: self.spec_rejected,
             tenants: std::mem::take(&mut self.tenant_ledger),
         };
         (self.finished, stats)
@@ -1002,13 +1102,19 @@ impl<'m> Session<'m> {
             RequestKind::Score { tokens } => LaneKind::Score { tokens, logits: Vec::new() },
             RequestKind::Generate { prompt, max_new } => {
                 let cfg = self.core.config;
+                let speculative = self.core.speculative();
                 if self.pool.is_none() {
-                    self.pool = Some(KvCachePool::with_cap(
+                    // both cache families (verifier + draft) are billed
+                    // against the footprint cap before either allocates
+                    let (pool, draft_pool) = KvCachePool::with_cap_dual(
                         self.core.model.config(),
                         cfg.slots.max(1),
                         cfg.capacity,
+                        speculative,
                         cfg.max_cache_bytes,
-                    )?);
+                    )?;
+                    self.pool = Some(pool);
+                    self.draft_pool = draft_pool;
                 }
                 let cache = self
                     .pool
@@ -1016,6 +1122,22 @@ impl<'m> Session<'m> {
                     .expect("pool just built")
                     .acquire()
                     .expect("free cache under the active-count bound");
+                let spec = if speculative {
+                    let draft = self.core.draft.expect("speculative() implies a draft model");
+                    let draft_cache = self
+                        .draft_pool
+                        .as_mut()
+                        .expect("dual pool built in speculative mode")
+                        .acquire()
+                        .expect("free draft cache under the active-count bound");
+                    Some(Box::new(SpecState::new(
+                        draft_cache,
+                        draft.scratch(cfg.capacity.max(1)),
+                        cfg.spec_k,
+                    )))
+                } else {
+                    None
+                };
                 LaneKind::Generate {
                     max_new: max_new.unwrap_or(cfg.max_new).max(1),
                     rng: request_rng(cfg.seed, req.id),
@@ -1024,6 +1146,7 @@ impl<'m> Session<'m> {
                     tokens: Vec::new(),
                     cache,
                     recompute_macs: 0,
+                    spec,
                 }
             }
         };
@@ -1088,6 +1211,7 @@ impl<'m> Session<'m> {
     /// only its own lanes and emission happens serially afterwards.
     fn forward_fresh(&mut self, fresh: &mut [Lane]) -> Result<()> {
         let model = self.core.model;
+        let draft = self.core.draft;
         let (sampling, eos) = (self.core.config.sampling, self.core.config.eos);
         let threads = self.core.config.exec.resolve().max(1);
         let n_par = threads.min(fresh.len()).min(self.lane_cap()).max(1);
@@ -1115,10 +1239,17 @@ impl<'m> Session<'m> {
                         rng,
                         recompute_macs,
                         scratch,
+                        spec,
                     } => {
                         let m = model.forward_prefill_scratch(prompt, cache, &intra, scratch)?;
                         let first = sampling.sample(&scratch.logits, rng);
                         *macs = m;
+                        // the draft prefill is billed into the same lane MACs
+                        // the PrefillDone trace reports, so the executed total
+                        // stays reconstructable from the trace alone
+                        if let (Some(draft), Some(spec)) = (draft, spec.as_mut()) {
+                            *macs += spec.prefill(draft, prompt, &intra)?;
+                        }
                         *recompute_macs = model.macs_for(prompt.len());
                         *step_t_s = t0.elapsed().as_secs_f64();
                         tokens.push(first);
@@ -1130,9 +1261,12 @@ impl<'m> Session<'m> {
         })
     }
 
-    /// Advance every active generation lane by one token.
+    /// Advance every active generation lane by one token (or, on
+    /// speculative lanes, one draft/verify round of one or more tokens).
     fn decode_round(&mut self) -> Result<()> {
         let model = self.core.model;
+        let draft = self.core.draft;
+        let spec_k = self.core.config.spec_k;
         let (sampling, eos) = (self.core.config.sampling, self.core.config.eos);
         let threads = self.core.config.exec.resolve().max(1);
         let n_par = threads.min(self.active.len()).min(self.lane_cap()).max(1);
@@ -1153,10 +1287,39 @@ impl<'m> Session<'m> {
                     rng,
                     recompute_macs,
                     scratch,
+                    spec,
                 } = kind
                 else {
                     unreachable!("score lanes retire at admission")
                 };
+                if let (Some(draft), Some(spec)) = (draft, spec.as_mut()) {
+                    let out = spec_round(
+                        model,
+                        draft,
+                        prompt.len(),
+                        *max_new,
+                        spec_k,
+                        eos,
+                        tokens,
+                        cache,
+                        spec,
+                        scratch,
+                        &intra,
+                    )?;
+                    *macs += out.macs;
+                    for i in tokens.len() - out.emitted..tokens.len() {
+                        *recompute_macs += model.macs_for(prompt.len() + i);
+                    }
+                    *step_t_s = t0.elapsed().as_secs_f64();
+                    *done = if out.hit_eos {
+                        Some(FinishReason::Eos)
+                    } else if tokens.len() >= *max_new {
+                        Some(FinishReason::MaxTokens)
+                    } else {
+                        None
+                    };
+                    return Ok(());
+                }
                 let last_tok = *tokens.last().expect("active sequences hold >= 1 token");
                 let m = model.forward_step_scratch(last_tok, cache, &intra, scratch)?;
                 *macs += m;
@@ -1308,8 +1471,14 @@ impl<'m> Session<'m> {
             LaneKind::Score { tokens, logits } => {
                 (false, tokens.len(), Vec::new(), logits, lane.macs)
             }
-            LaneKind::Generate { prompt, tokens, cache, recompute_macs, .. } => {
+            LaneKind::Generate { prompt, tokens, cache, recompute_macs, spec, .. } => {
                 self.pool.as_mut().expect("pool exists for generate lanes").release(cache);
+                if let Some(s) = spec {
+                    self.draft_pool
+                        .as_mut()
+                        .expect("draft pool exists for speculative lanes")
+                        .release((*s).into_cache());
+                }
                 (true, prompt.len(), tokens, Vec::new(), recompute_macs)
             }
         };
@@ -1462,6 +1631,67 @@ mod tests {
         for threads in [2usize, 8] {
             assert_eq!(order(threads), serial, "--threads {threads} moved the event stream");
         }
+    }
+
+    #[test]
+    fn speculative_session_matches_plain_greedy_and_counts_acceptance() {
+        // the speculative engine path must be invisible in the output:
+        // same requests, same greedy streams, same finish reasons — only
+        // the acceptance counters betray that a draft model ran
+        let cfg = demo_config();
+        let verifier_cm = demo_artifact(&cfg, 0.8, 0x51EC).unwrap();
+        let draft_cm = demo_artifact(&cfg, 0.35, 0x51EC).unwrap();
+        let verifier = ServeModel::from_artifact(&verifier_cm, ExecMode::Factored).unwrap();
+        let draft = ServeModel::from_artifact(&draft_cm, ExecMode::Factored).unwrap();
+        let config = EngineConfig { max_new: 10, ..gen_config(2) };
+        let plain = EngineCore::new(&verifier, config);
+        let (_, baseline, base_stats) = drive_collect(&plain, gen_requests(4, 6));
+        let spec_config = EngineConfig { spec_k: 3, ..config };
+        let core = EngineCore::with_draft(&verifier, &draft, spec_config).unwrap();
+        let (events, finished, stats) = drive_collect(&core, gen_requests(4, 6));
+        assert_eq!(finished.len(), baseline.len());
+        for (a, b) in baseline.iter().zip(&finished) {
+            assert_eq!(a.tokens, b.tokens, "speculative stream diverged on request {}", a.id);
+            assert_eq!(a.reason, b.reason);
+        }
+        // Token events still reconstruct each stream exactly
+        for f in &finished {
+            let from_events: Vec<i32> = events
+                .iter()
+                .filter(|e| e.id == f.id)
+                .filter_map(|e| match &e.kind {
+                    EventKind::Token { token, .. } => Some(*token),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(from_events, f.tokens, "request {}", f.id);
+        }
+        assert!(stats.spec_drafted > 0, "draft model never ran");
+        assert_eq!(stats.spec_accepted + stats.spec_rejected, stats.spec_drafted);
+        assert_eq!(stats.generated_tokens, base_stats.generated_tokens);
+        assert_eq!(base_stats.spec_drafted, 0, "plain sessions draft nothing");
+    }
+
+    #[test]
+    fn with_draft_rejects_inconsistent_configurations() {
+        let cfg = demo_config();
+        let verifier_cm = demo_artifact(&cfg, 0.8, 0x51EC).unwrap();
+        let draft_cm = demo_artifact(&cfg, 0.35, 0x51EC).unwrap();
+        let verifier = ServeModel::from_artifact(&verifier_cm, ExecMode::Factored).unwrap();
+        let draft = ServeModel::from_artifact(&draft_cm, ExecMode::Factored).unwrap();
+        let err = EngineCore::with_draft(&verifier, &draft, gen_config(1))
+            .err()
+            .expect("spec_k 0 with a draft bound must be rejected");
+        assert!(err.to_string().contains("spec_k"), "{err}");
+        let mut other = demo_config();
+        other.d_ff += 8;
+        let other_cm = demo_artifact(&other, 0.35, 0x51EC).unwrap();
+        let other_draft = ServeModel::from_artifact(&other_cm, ExecMode::Factored).unwrap();
+        let config = EngineConfig { spec_k: 2, ..gen_config(1) };
+        let err = EngineCore::with_draft(&verifier, &other_draft, config)
+            .err()
+            .expect("mismatched checkpoint families must be rejected");
+        assert!(err.to_string().contains("checkpoint"), "{err}");
     }
 
     /// Event kinds with the wall-clock field zeroed (payload comparison).

@@ -39,6 +39,16 @@
 //!   load-shedding decisions; [`Session::drain_finished`] hands results
 //!   out incrementally for long-lived drivers like [`crate::daemon`].
 //!
+//! A core built with [`EngineCore::with_draft`] additionally runs
+//! rank-ladder **speculative decoding** on its generate lanes: a
+//! low-budget draft artifact of the same checkpoint proposes `spec_k`
+//! tokens per round and the serving model verifies them in one chunked
+//! batched forward ([`crate::decode::spec`]). Greedy streams stay bitwise
+//! identical to plain decode, executed MACs equal the analytic
+//! [`crate::model::macs::spec_report`] accounting, non-greedy sampling
+//! falls back to plain decode, and acceptance counts surface in
+//! [`CoreStats`] and the obs planes.
+//!
 //! `repro generate --stream` prints the token events as they are
 //! produced, `examples/streaming_generation.rs` drives the session API
 //! directly, and `repro generate --stream --self-check` asserts the

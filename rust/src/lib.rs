@@ -61,8 +61,14 @@
 //!   KV cache pool, single-token dense/factored `forward_step`, a
 //!   continuous-batching scheduler over the [`engine`] core (mid-run
 //!   admission, EOS/max-token/cancel/deadline eviction, round-robin
-//!   fairness), seeded greedy/temperature/top-k sampling, and
-//!   TTFT/inter-token-latency/MAC-savings stats from the event timeline
+//!   fairness), seeded greedy/temperature/top-k sampling,
+//!   TTFT/inter-token-latency/MAC-savings stats from the event timeline,
+//!   and [`decode::SpecDecoder`] — rank-ladder speculative decoding
+//!   (a low-budget artifact of the same checkpoint drafts K tokens, the
+//!   high-budget verifier checks them in one chunked batched forward,
+//!   caches roll back via `KvCache::truncate_to`) with greedy streams
+//!   bitwise identical to verifier-only decode and exact
+//!   [`model::macs::spec_report`] accounting
 //! - [`daemon`] — HTTP/1.1 + SSE transport front-end: a dependency-free
 //!   `std::net` server binding the [`engine`] session API to the wire
 //!   (`/v1/generate`, `/v1/score`, health/readiness, admin drain) with

@@ -124,6 +124,17 @@ const MIX: Flag = flag(
 );
 const CKPT: Flag = flag("ckpt", "FILE", "checkpoint to load (.rtz)");
 const BUDGET: Flag = flag("budget", "B", "global parameter budget in (0, 1]");
+const DRAFT: Flag = flag(
+    "draft",
+    "FILE",
+    "low-budget draft artifact (.rtz) of the same checkpoint; enables speculative decoding \
+     (greedy streams stay bitwise identical to verifier-only decode)",
+);
+const SPEC_K: Flag = flag(
+    "spec-k",
+    "K",
+    "draft tokens proposed per speculative round (requires --draft; default 4)",
+);
 const ROWS: Flag = flag("rows", "N", "calibration rows");
 const SEQ: Flag = flag("seq", "N", "calibration sequence length");
 const SOURCE: Flag = flag("source", "SRC", "calibration source: combination|arc-c|corpus");
@@ -169,11 +180,17 @@ static COMMANDS: &[Cmd] = &[
     },
     Cmd {
         name: "sweep",
-        summary: "run several methods at one budget; one comparison table",
+        summary: "run several methods across one or more budgets; comparison table + rank ladder",
         flags: &[
             CKPT,
             flag("methods", "A,B,C", "comma-separated registry names (default: all registered)"),
             BUDGET,
+            flag(
+                "budgets",
+                "B1,B2,..",
+                "comma-separated budget ladder in (0, 1] (supersedes --budget; one table per \
+                 budget plus a ladder.json manifest of every artifact produced)",
+            ),
             FINETUNE,
             ROWS,
             SEQ,
@@ -242,6 +259,13 @@ static COMMANDS: &[Cmd] = &[
             STREAM,
             DEADLINE_MS,
             CANCEL_AFTER,
+            DRAFT,
+            SPEC_K,
+            switch(
+                "speculative",
+                "with --self-check: also assert the speculative path (draft+verify) is \
+                 bitwise identical to verifier-only greedy decode with exact MAC accounting",
+            ),
             switch(
                 "self-check",
                 "offline: assert KV-cached decode ≡ full-recompute logits/streams + MAC \
@@ -285,6 +309,8 @@ static COMMANDS: &[Cmd] = &[
             CKPT,
             ADDR,
             flag("mode", "dense|factored|factored-quant", "execution mode (default factored)"),
+            DRAFT,
+            SPEC_K,
             SLOTS,
             QUEUE_CAP,
             MAX_NEW,
@@ -680,6 +706,7 @@ fn cmd_compress(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(artifacts: &str, args: &Args) -> Result<()> {
+    use llm_rom::util::json::Json;
     let rt = Runtime::new(artifacts)?;
     let exp = Experiment::new(&rt, xcfg_from(args)?);
     let params = load_ckpt(&exp, args)?;
@@ -694,11 +721,68 @@ fn cmd_sweep(artifacts: &str, args: &Args) -> Result<()> {
     for m in &methods {
         compress::resolve(m)?; // fail fast on unknown names
     }
-    let budget: f64 = args.parse_num("budget", 0.8)?;
+    // --budgets B1,B2,.. runs the whole rank ladder in one invocation;
+    // --budget stays as the single-point alias
+    let budgets: Vec<f64> = match args.get("budgets") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().with_context(|| format!("--budgets: bad number {s:?}")))
+            .collect::<Result<_>>()?,
+        None => vec![args.parse_num("budget", 0.8)?],
+    };
+    anyhow::ensure!(!budgets.is_empty(), "--budgets needs at least one value");
+    for &b in &budgets {
+        anyhow::ensure!(b > 0.0 && b <= 1.0, "budget {b} outside (0, 1]");
+    }
+    let ladder_run = args.get("budgets").is_some();
     let ft_steps: usize = args.parse_num("finetune", 0)?;
-    println!("sweeping {} methods at {:.0}% budget…", methods.len(), budget * 100.0);
-    let table = llm_rom::coordinator::sweep_table(&exp, &params, &methods, budget, ft_steps)?;
-    println!("{table}");
+    let mut ladder: Vec<Json> = Vec::new();
+    for &budget in &budgets {
+        println!("sweeping {} methods at {:.0}% budget…", methods.len(), budget * 100.0);
+        let table = llm_rom::coordinator::sweep_table_with(
+            &exp,
+            &params,
+            &methods,
+            budget,
+            ft_steps,
+            |method, cm| {
+                if !ladder_run {
+                    return Ok(());
+                }
+                let pct = (budget * 100.0).round() as u32;
+                let path = format!("runs/sweep/{method}_b{pct}.rtz");
+                ensure_parent(&path)?;
+                cm.save(&path)?;
+                let ranks: std::collections::BTreeMap<String, Json> = cm
+                    .factors
+                    .iter()
+                    .map(|(name, f)| (name.clone(), Json::Num(f.rank as f64)))
+                    .collect();
+                let rep = macs::report(&exp.cfg, &cm.accounting, 1);
+                ladder.push(Json::Obj(
+                    [
+                        ("artifact".to_string(), Json::Str(path)),
+                        ("method".to_string(), Json::Str(method.to_string())),
+                        ("budget".to_string(), Json::Num(budget)),
+                        ("ranks".to_string(), Json::Obj(ranks)),
+                        ("macs_per_token".to_string(), Json::Num(rep.macs as f64)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ));
+                Ok(())
+            },
+        )?;
+        println!("{table}");
+    }
+    if ladder_run {
+        let out = "runs/sweep/ladder.json";
+        ensure_parent(out)?;
+        std::fs::write(out, Json::Arr(ladder).to_string())?;
+        println!("wrote {out} ({} artifacts across {} budgets)", methods.len() * budgets.len(), budgets.len());
+    }
     Ok(())
 }
 
@@ -1339,6 +1423,14 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     let stream = args.get("stream").is_some();
     let (obs, trace_out) = obs_from(args)?;
     if args.get("self-check").is_some() {
+        if args.get("speculative").is_some() {
+            anyhow::ensure!(!stream, "--speculative self-check does not take --stream");
+            anyhow::ensure!(
+                trace_out.is_none(),
+                "--trace-out applies to the non-speculative self-check"
+            );
+            return speculative_self_check(seed, exec);
+        }
         if stream {
             anyhow::ensure!(
                 trace_out.is_none(),
@@ -1348,6 +1440,10 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
         }
         return decode_self_check(seed, exec, obs, trace_out.as_deref());
     }
+    anyhow::ensure!(
+        args.get("speculative").is_none(),
+        "--speculative requires --self-check (use --draft for real workloads)"
+    );
     anyhow::ensure!(trace_out.is_none(), "--trace-out requires --self-check for `generate`");
     let path = args.get("ckpt").context("--ckpt required (or --self-check)")?;
     let cfg = serve_cfg(artifacts);
@@ -1357,6 +1453,19 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
         Some(s) => ExecMode::parse(s)?,
     };
     let model = ServeModel::from_artifact(&cm, mode)?;
+    anyhow::ensure!(
+        args.get("spec-k").is_none() || args.get("draft").is_some(),
+        "--spec-k requires --draft"
+    );
+    let spec_k: usize = args.parse_num("spec-k", 4)?;
+    let draft_model: Option<ServeModel> = match args.get("draft") {
+        None => None,
+        Some(draft_path) => {
+            let draft_cm = load_artifact_or_ckpt(&cfg, draft_path)?;
+            cm.check_spec_draft(&draft_cm)?;
+            Some(ServeModel::from_artifact(&draft_cm, mode)?)
+        }
+    };
     let max_new: usize = args.parse_num("max-new", 48)?;
     let temp: f32 = args.parse_num("temp", 0.0)?;
     let top_k: usize = args.parse_num("top-k", 0)?;
@@ -1370,6 +1479,7 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
     };
     let cancel_n: usize = args.parse_num("cancel-after", 0)?;
     let cancel_after = if cancel_n > 0 { Some(cancel_n) } else { None };
+    let spec_k_eff = if draft_model.is_some() { spec_k.max(1) } else { 0 };
 
     match args.get("prompt") {
         Some(prompt) => {
@@ -1385,9 +1495,13 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 seed,
                 exec,
                 max_cache_bytes,
+                spec_k: spec_k_eff,
                 ..DecodeConfig::default()
             };
-            let scheduler = DecodeScheduler::new(&model, config);
+            let scheduler = match &draft_model {
+                Some(d) => DecodeScheduler::with_draft(&model, d, config)?,
+                None => DecodeScheduler::new(&model, config),
+            };
             let reqs = vec![GenRequest { id: 0, prompt: ids, max_new: None, deadline_s }];
             if stream {
                 use std::io::Write;
@@ -1412,6 +1526,15 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 stats.macs_per_generated_token() as f64 / 1e6,
                 stats.mac_savings(),
             );
+            if stats.spec_drafted > 0 {
+                eprintln!(
+                    "[speculative: {}/{} drafted tokens accepted ({:.0}%) over {} rounds]",
+                    stats.spec_accepted,
+                    stats.spec_drafted,
+                    stats.spec_accept_rate() * 100.0,
+                    stats.decode_rounds,
+                );
+            }
         }
         None => {
             // synthetic multi-request workload: the continuous-batching demo
@@ -1425,6 +1548,7 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 seed,
                 exec,
                 max_cache_bytes,
+                spec_k: spec_k_eff,
                 ..DecodeConfig::default()
             };
             println!(
@@ -1438,7 +1562,10 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
             for r in &mut reqs {
                 r.deadline_s = deadline_s;
             }
-            let scheduler = DecodeScheduler::new(&model, config);
+            let scheduler = match &draft_model {
+                Some(d) => DecodeScheduler::with_draft(&model, d, config)?,
+                None => DecodeScheduler::new(&model, config),
+            };
             let (results, stats) = run_generate(&scheduler, reqs, stream, cancel_after, false)?;
             for r in &results {
                 let snippet: String = r.text.chars().take(24).collect();
@@ -1473,6 +1600,15 @@ fn cmd_generate(artifacts: &str, args: &Args) -> Result<()> {
                 stats.mid_run_admissions,
                 stats.decode_rounds,
             );
+            if stats.spec_drafted > 0 {
+                println!(
+                    "speculative: {}/{} drafted tokens accepted ({:.0}%) over {} rounds",
+                    stats.spec_accepted,
+                    stats.spec_drafted,
+                    stats.spec_accept_rate() * 100.0,
+                    stats.decode_rounds,
+                );
+            }
         }
     }
     Ok(())
@@ -1609,6 +1745,115 @@ fn decode_self_check(
     scheduler_self_check_phase("[4/4]", &fact, &cm.accounting, seed, exec, obs, trace_out)?;
 
     println!("decode self-check: OK");
+    Ok(())
+}
+
+/// `repro generate --self-check --speculative`: fully-offline verification
+/// of the speculative decoding path on a draft/verifier artifact pair of
+/// the same synthetic checkpoint —
+///
+/// 1. bitwise identity: for every `--spec-k` in {1, 2, 3, 4}, the
+///    speculative greedy stream equals the verifier-only greedy stream
+///    exactly (the draft model changes wall-clock, never output);
+/// 2. exact MAC accounting: the executed MACs of every speculative run
+///    equal `macs::spec_report`'s analytic schedule (draft prefill +
+///    catch-up + steps, chunked verify, rejected-tail waste all billed);
+/// 3. the engine path agrees: a draft-bound [`DecodeScheduler`] produces
+///    the same streams as a plain one and reports the same acceptance
+///    counters the per-request [`SpecDecoder`] measured.
+///
+/// Run by `scripts/verify.sh` at `--threads 1` and `--threads 4` with an
+/// output diff — the printed acceptance rates are round/MAC-denominated
+/// (never wall-clock), so thread-count divergence fails the gate.
+fn speculative_self_check(seed: u64, exec: ExecConfig) -> Result<()> {
+    use llm_rom::decode::SpecDecoder;
+    let cfg = serve::demo_config();
+    let verifier_cm = serve::demo_artifact(&cfg, 0.8, seed ^ 0x5BEC)?;
+    let draft_cm = serve::demo_artifact(&cfg, 0.35, seed ^ 0x5BEC)?;
+    verifier_cm.check_spec_draft(&draft_cm)?;
+    let verifier = ServeModel::from_artifact(&verifier_cm, ExecMode::Factored)?;
+    let draft = ServeModel::from_artifact(&draft_cm, ExecMode::Factored)?;
+
+    let (n, prompt_len, max_new) = (4usize, 12usize, 16usize);
+    let reqs = decode::synth_gen_requests(&cfg, n, prompt_len, seed);
+    let config = DecodeConfig {
+        slots: 2,
+        capacity: prompt_len + max_new,
+        max_new,
+        sampling: Sampling::Greedy,
+        seed,
+        eos: None,
+        exec,
+        ..DecodeConfig::default()
+    };
+    let (reference, _) = DecodeScheduler::new(&verifier, config).run(reqs.clone())?;
+
+    // 1. + 2. per spec-k: bitwise identity and exact MAC accounting
+    for spec_k in [1usize, 2, 3, 4] {
+        let spec = SpecDecoder::from_artifacts(&verifier_cm, &draft_cm, ExecMode::Factored, spec_k)?;
+        let (mut drafted, mut accepted, mut rounds) = (0usize, 0usize, 0usize);
+        for (req, base) in reqs.iter().zip(&reference) {
+            let stream = spec.generate(&req.prompt, max_new, None, exec)?;
+            anyhow::ensure!(
+                stream.tokens == base.tokens,
+                "spec-k {spec_k}: request {} speculative stream != verifier-only stream",
+                req.id
+            );
+            let analytic = macs::spec_report(
+                &cfg,
+                &draft_cm.accounting,
+                &verifier_cm.accounting,
+                req.prompt.len(),
+                &stream.rounds,
+            );
+            let expected = macs::decode_report(
+                &cfg,
+                &verifier_cm.accounting,
+                req.prompt.len(),
+                1,
+            )
+            .prefill_macs
+                + analytic.spec_macs();
+            anyhow::ensure!(
+                stream.macs == expected,
+                "spec-k {spec_k}: request {} executed {} MACs, analytic schedule says {}",
+                req.id,
+                stream.macs,
+                expected
+            );
+            drafted += stream.drafted();
+            accepted += stream.accepted();
+            rounds += stream.rounds.len();
+        }
+        println!(
+            "[1/3] spec-k {spec_k}: {n} streams bitwise ≡ verifier-only greedy, \
+             MACs ≡ analytic — {accepted}/{drafted} drafted accepted over {rounds} rounds",
+        );
+    }
+    println!("[2/3] executed MACs equal the analytic speculative accounting for every spec-k");
+
+    // 3. the engine path: a draft-bound scheduler is output-invisible
+    let spec_config = DecodeConfig { spec_k: 3, ..config };
+    let sched = DecodeScheduler::with_draft(&verifier, &draft, spec_config)?;
+    let (engine_results, engine_stats) = sched.run(reqs.clone())?;
+    for (a, b) in reference.iter().zip(&engine_results) {
+        anyhow::ensure!(
+            a.tokens == b.tokens && a.finish == b.finish,
+            "engine speculative stream diverged on request {}",
+            a.id
+        );
+    }
+    anyhow::ensure!(engine_stats.spec_drafted > 0, "engine drafted nothing at spec-k 3");
+    println!(
+        "[3/3] engine path: {} streams bitwise ≡ verifier-only — acceptance {}/{} \
+         ({:.0}%) over {} rounds",
+        engine_results.len(),
+        engine_stats.spec_accepted,
+        engine_stats.spec_drafted,
+        engine_stats.spec_accept_rate() * 100.0,
+        engine_stats.decode_rounds,
+    );
+    println!("speculative self-check: OK");
     Ok(())
 }
 
@@ -1823,12 +2068,27 @@ fn cmd_daemon(artifacts: &str, args: &Args) -> Result<()> {
         Some(s) => ExecMode::parse(s)?,
     };
     let model = ServeModel::from_artifact(&cm, mode)?;
+    anyhow::ensure!(
+        args.get("spec-k").is_none() || args.get("draft").is_some(),
+        "--spec-k requires --draft"
+    );
+    // speculative decoding is a deployment decision, fixed at startup —
+    // nothing about it is negotiated on the wire
+    let draft_model: Option<ServeModel> = match args.get("draft") {
+        None => None,
+        Some(draft_path) => {
+            let draft_cm = load_artifact_or_ckpt(&cfg, draft_path)?;
+            cm.check_spec_draft(&draft_cm)?;
+            Some(ServeModel::from_artifact(&draft_cm, mode)?)
+        }
+    };
     let engine = EngineConfig {
         slots: args.parse_num("slots", 4)?,
         queue_cap: args.parse_num("queue-cap", 64)?,
         max_new: args.parse_num("max-new", 32)?,
         seed,
         exec,
+        spec_k: if draft_model.is_some() { args.parse_num("spec-k", 4usize)?.max(1) } else { 0 },
         ..EngineConfig::default()
     };
     let config = DaemonConfig {
@@ -1837,11 +2097,19 @@ fn cmd_daemon(artifacts: &str, args: &Args) -> Result<()> {
         retry_after_s: args.parse_num("retry-after", 1u32)?,
         obs,
     };
-    let server = Daemon::bind(&model, config)?;
+    let server = match &draft_model {
+        Some(d) => Daemon::bind_with_draft(&model, d, config)?,
+        None => Daemon::bind(&model, config)?,
+    };
     println!(
-        "daemon [{}] listening on http://{} — {} slots, queue {} ({} threads; \
+        "daemon [{}{}] listening on http://{} — {} slots, queue {} ({} threads; \
          stop with POST /admin/drain)",
         mode.name(),
+        if draft_model.is_some() {
+            format!(", speculative k={}", engine.spec_k)
+        } else {
+            String::new()
+        },
         server.addr(),
         engine.slots,
         engine.queue_cap,
@@ -2519,5 +2787,31 @@ mod tests {
     fn missing_value_is_an_error() {
         assert!(Args::parse_from(argv(&["compress", "--budget"])).is_err());
         assert!(Args::parse_from(argv(&["eval", "stray"])).is_err());
+    }
+
+    #[test]
+    fn speculative_and_ladder_flags_parse_where_declared() {
+        let a = Args::parse_from(argv(&[
+            "generate", "--ckpt", "c.rtz", "--draft", "d.rtz", "--spec-k", "3",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("draft"), Some("d.rtz"));
+        assert_eq!(a.get("spec-k"), Some("3"));
+        let a = Args::parse_from(argv(&[
+            "generate", "--self-check", "--speculative", "--threads", "4",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("speculative"), Some("true"));
+        let a = Args::parse_from(argv(&[
+            "daemon", "--ckpt", "c.rtz", "--draft", "d.rtz", "--spec-k", "2",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("draft"), Some("d.rtz"));
+        let a = Args::parse_from(argv(&["sweep", "--ckpt", "c.rtz", "--budgets", "0.4,0.6,0.8"]))
+            .unwrap();
+        assert_eq!(a.get("budgets"), Some("0.4,0.6,0.8"));
+        // neither flag leaks into subcommands that don't declare it
+        assert!(Args::parse_from(argv(&["serve", "--draft", "d.rtz"])).is_err());
+        assert!(Args::parse_from(argv(&["compress", "--budgets", "0.5"])).is_err());
     }
 }

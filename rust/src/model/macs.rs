@@ -195,6 +195,135 @@ pub fn decode_report(
     DecodeMacsReport { prompt, generated, prefill_macs, decode_macs, recompute_macs }
 }
 
+/// One engine round of speculative decoding, as recorded by the decoder:
+/// the draft model proposed `drafted` tokens (0 on a degenerate
+/// verifier-only round, e.g. the last token before `max_new`), of which
+/// the verifier confirmed the first `accepted` (`accepted <= drafted`);
+/// the round always also yields the verifier's own bonus token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecRound {
+    pub drafted: usize,
+    pub accepted: usize,
+}
+
+/// Analytic accounting for one speculative generation — the spec-decoding
+/// companion of [`decode_report`], and what the speculative self-check /
+/// proptests assert the engine actually executed, bit for bit.
+///
+/// Everything the speculative machinery runs is billed: the draft model's
+/// prompt prefill, every draft step (including catch-up positions after a
+/// fully-accepted round, where the draft cache lags the verifier by one
+/// token), every verifier chunk position (the `drafted + 1` rows of the
+/// one batched verify forward), and in particular the *rollback waste* —
+/// verifier positions computed past the accepted prefix and then rolled
+/// back via `KvCache::truncate_to`. The verifier's own prompt prefill is
+/// billed by the ordinary [`decode_report`] prefill convention and is not
+/// repeated here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecMacsReport {
+    pub prompt: usize,
+    /// Tokens the rounds produced (first prefill-sampled token included).
+    pub generated: usize,
+    pub rounds: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Draft-model prompt prefill (last-position head, like any prefill).
+    pub draft_prefill_macs: u128,
+    /// Draft-model decode positions: catch-up chunks + draft steps.
+    pub draft_macs: u128,
+    /// Verifier chunk positions — every row of every verify forward.
+    pub verify_macs: u128,
+    /// The subset of `verify_macs` spent on positions past the accepted
+    /// prefix and rolled back (`drafted - accepted` rows per round).
+    pub wasted_macs: u128,
+}
+
+impl SpecMacsReport {
+    /// Total MACs the speculative machinery executes beyond the
+    /// verifier's own prompt prefill.
+    pub fn spec_macs(&self) -> u128 {
+        self.draft_prefill_macs + self.draft_macs + self.verify_macs
+    }
+
+    /// Fraction of drafted tokens the verifier confirmed.
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Analytic MACs of a speculative generation over `prompt` prefill tokens
+/// and the per-round accept trace, under the draft and verifier
+/// compression states. Mirrors the executed schedule exactly:
+///
+/// - round state: `g` tokens produced so far (1 after prefill), canonical
+///   position `C = prompt + g - 1`, draft cursor `Cd` (starts at `prompt`
+///   after the draft prefill);
+/// - draft phase (when `drafted > 0`): one chunk over positions
+///   `Cd..=C` (catch-up + the first proposal) then single steps through
+///   position `C + drafted - 1` — every position billed at
+///   [`decode_step_macs`] under the *draft* accounting;
+/// - verify phase: one chunked forward over positions `C..=C + drafted`
+///   (`drafted + 1` rows, the last yielding the bonus token) billed at
+///   [`decode_step_macs`] under the *verifier* accounting;
+/// - acceptance: `g += accepted + 1`; positions past `C + accepted`
+///   were wasted; the draft cursor rolls back to `C + accepted + 1`
+///   unless the round was fully accepted (then it lags by one and the
+///   next round's chunk catches up).
+pub fn spec_report(
+    cfg: &ModelConfig,
+    draft: &CompressionAccounting,
+    verifier: &CompressionAccounting,
+    prompt: usize,
+    rounds: &[SpecRound],
+) -> SpecMacsReport {
+    let head = (cfg.vocab * cfg.d_model) as u128;
+    let draft_prefill_macs = (0..prompt)
+        .map(|p| decode_step_macs(cfg, draft, p) - head)
+        .sum::<u128>()
+        + if prompt > 0 { head } else { 0 };
+    let (mut draft_macs, mut verify_macs, mut wasted_macs) = (0u128, 0u128, 0u128);
+    let (mut drafted_total, mut accepted_total) = (0usize, 0usize);
+    let mut g = 1usize; // the prefill-sampled token
+    let mut cd = prompt;
+    for r in rounds {
+        debug_assert!(r.accepted <= r.drafted, "accepted {} > drafted {}", r.accepted, r.drafted);
+        let c = prompt + g - 1;
+        if r.drafted > 0 {
+            draft_macs +=
+                (cd..c + r.drafted).map(|p| decode_step_macs(cfg, draft, p)).sum::<u128>();
+            cd = c + r.drafted;
+        }
+        verify_macs +=
+            (c..=c + r.drafted).map(|p| decode_step_macs(cfg, verifier, p)).sum::<u128>();
+        wasted_macs += (c + r.accepted + 1..=c + r.drafted)
+            .map(|p| decode_step_macs(cfg, verifier, p))
+            .sum::<u128>();
+        if r.drafted > 0 && r.accepted < r.drafted {
+            cd = c + r.accepted + 1;
+        }
+        drafted_total += r.drafted;
+        accepted_total += r.accepted;
+        g += r.accepted + 1;
+    }
+    SpecMacsReport {
+        prompt,
+        generated: g,
+        rounds: rounds.len(),
+        drafted: drafted_total,
+        accepted: accepted_total,
+        rejected: drafted_total - accepted_total,
+        draft_prefill_macs,
+        draft_macs,
+        verify_macs,
+        wasted_macs,
+    }
+}
+
 /// Declared cost of one inference request, priced *before* it runs — the
 /// currency of the engine's weight-metered admission (ROADMAP item 3:
 /// Substrate's benchmarked-weights design transplanted to inference).
@@ -504,6 +633,62 @@ mod tests {
         let d = decode_report(&cfg, &dense, 12, 6);
         assert!(f.cached_macs() < d.cached_macs());
         assert!(f.cached_macs() < d.recompute_macs, "factored-KV beats dense-recompute");
+    }
+
+    #[test]
+    fn spec_report_bills_draft_verify_and_waste_by_hand() {
+        let cfg = ModelConfig::mini();
+        let verifier = CompressionAccounting::dense();
+        let mut draft = CompressionAccounting::dense();
+        for b in 0..cfg.n_layers {
+            for (name, o, i) in block_matrices(&cfg, b) {
+                let r = (0.3 * (o * i) as f64 / (o + i) as f64) as usize;
+                draft.set(&name, LayerCompression::LowRank { rank: r.max(1) });
+            }
+        }
+        let p = 6usize;
+        let dstep = |pos: usize| decode_step_macs(&cfg, &draft, pos);
+        let vstep = |pos: usize| decode_step_macs(&cfg, &verifier, pos);
+        // round 1: k=3 drafted, 1 accepted (g 1→3); round 2: k=3, all 3
+        // accepted (g 3→7, draft now lags by one); round 3: degenerate
+        // k=0 verifier-only round (g 7→8).
+        let trace = [
+            SpecRound { drafted: 3, accepted: 1 },
+            SpecRound { drafted: 3, accepted: 3 },
+            SpecRound { drafted: 0, accepted: 0 },
+        ];
+        let rep = spec_report(&cfg, &draft, &verifier, p, &trace);
+        assert_eq!((rep.rounds, rep.drafted, rep.accepted, rep.rejected), (3, 6, 4, 2));
+        assert_eq!(rep.generated, 8);
+        assert!((rep.accept_rate() - 4.0 / 6.0).abs() < 1e-12);
+        // draft prefill: decode_report's prefill convention
+        assert_eq!(
+            rep.draft_prefill_macs,
+            decode_report(&cfg, &draft, p, 1).prefill_macs
+        );
+        // round 1: C=6, chunk Cd=6..=6 + steps 7,8 → draft positions 6..9;
+        //          verify positions 6..=9; waste = positions 8,9
+        // round 2: g=3 ⇒ C=8; draft rolled back to 8, chunk 8..=8 + steps
+        //          9,10 → positions 8..11; verify 8..=11; full accept ⇒
+        //          no waste, draft lags at 11
+        // round 3: g=7 ⇒ C=12; no draft; verify position 12 only
+        let want_draft: u128 = (6..9).map(dstep).sum::<u128>() + (8..11).map(dstep).sum::<u128>();
+        let want_verify: u128 = (6..=9).map(vstep).sum::<u128>()
+            + (8..=11).map(vstep).sum::<u128>()
+            + vstep(12);
+        let want_waste: u128 = (8..=9).map(vstep).sum();
+        assert_eq!(rep.draft_macs, want_draft);
+        assert_eq!(rep.verify_macs, want_verify);
+        assert_eq!(rep.wasted_macs, want_waste);
+        assert_eq!(
+            rep.spec_macs(),
+            rep.draft_prefill_macs + want_draft + want_verify
+        );
+        // an empty trace is just the draft prefill
+        let none = spec_report(&cfg, &draft, &verifier, p, &[]);
+        assert_eq!(none.generated, 1);
+        assert_eq!(none.spec_macs(), none.draft_prefill_macs);
+        assert_eq!(none.wasted_macs + none.verify_macs + none.draft_macs, 0);
     }
 
     #[test]

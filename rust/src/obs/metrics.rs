@@ -207,6 +207,13 @@ pub struct MetricsRegistry {
     pub decode_rounds: Counter,
     pub dispatch_batches: Counter,
     pub mid_run_admissions: Counter,
+    /// Candidate tokens drafted by the speculative draft model.
+    pub spec_drafted: Counter,
+    /// Drafted candidates the verifier accepted (the acceptance ratio is
+    /// `spec_accepted / spec_drafted`, derivable from the exposition).
+    pub spec_accepted: Counter,
+    /// Drafted candidates rolled back after verification.
+    pub spec_rejected: Counter,
     // -- gauges (point-in-time occupancy) --
     pub queue_depth: Gauge,
     pub active_lanes: Gauge,
@@ -245,6 +252,9 @@ impl MetricsRegistry {
             decode_rounds: Counter::default(),
             dispatch_batches: Counter::default(),
             mid_run_admissions: Counter::default(),
+            spec_drafted: Counter::default(),
+            spec_accepted: Counter::default(),
+            spec_rejected: Counter::default(),
             queue_depth: Gauge::default(),
             active_lanes: Gauge::default(),
             queued_macs: Gauge::default(),
@@ -291,6 +301,9 @@ impl MetricsRegistry {
             ("decode_rounds_total", "Decode rounds executed.", &self.decode_rounds),
             ("dispatch_batches_total", "Dispatch batches claimed from the queue.", &self.dispatch_batches),
             ("mid_run_admissions_total", "Admissions into a mid-run freed slot.", &self.mid_run_admissions),
+            ("spec_drafted_total", "Candidate tokens drafted by the speculative draft model.", &self.spec_drafted),
+            ("spec_accepted_total", "Drafted candidates accepted by the verifier (accept ratio = accepted / drafted).", &self.spec_accepted),
+            ("spec_rejected_total", "Drafted candidates rolled back after verification.", &self.spec_rejected),
         ] {
             push_counter(&mut out, name, help, c.get());
         }

@@ -66,9 +66,19 @@ pub enum TraceEvent {
     /// A lane's prefill (or scoring forward) completed, with the MACs it
     /// executed.
     PrefillDone { id: usize, round: u64, macs: u128 },
-    /// One decode round advanced `batch` lanes by one token each,
-    /// executing `macs` in total.
+    /// One decode round advanced `batch` lanes, executing `macs` in
+    /// total. Speculative lanes may emit several tokens per round; the
+    /// extra work is inside `macs` (the spec events below carry token
+    /// counts only, so replay never double-bills).
     DecodeRound { round: u64, batch: usize, macs: u128 },
+    /// A speculative lane drafted `k` candidate tokens on the cheap
+    /// artifact this round (round/seq-denominated; MACs live in the
+    /// enclosing `DecodeRound`).
+    SpecDrafted { id: usize, round: u64, k: usize },
+    /// The verifier scored a drafted chunk: `accepted` candidates
+    /// matched the verifier's greedy choice, `rejected` were rolled
+    /// back (`accepted + rejected` == the round's drafted `k`).
+    SpecVerified { id: usize, round: u64, accepted: usize, rejected: usize },
     /// A request retired (from a slot or straight from the queue).
     Finished { id: usize, round: u64, reason: &'static str, tokens: usize },
 }
@@ -133,6 +143,19 @@ impl TraceEvent {
                 ("round", Json::Num(*round as f64)),
                 ("batch", Json::Num(*batch as f64)),
                 ("macs", Json::Num(*macs as f64)),
+            ]),
+            TraceEvent::SpecDrafted { id, round, k } => obj(vec![
+                ("ev", Json::Str("spec_drafted".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("k", Json::Num(*k as f64)),
+            ]),
+            TraceEvent::SpecVerified { id, round, accepted, rejected } => obj(vec![
+                ("ev", Json::Str("spec_verified".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("round", Json::Num(*round as f64)),
+                ("accepted", Json::Num(*accepted as f64)),
+                ("rejected", Json::Num(*rejected as f64)),
             ]),
             TraceEvent::Finished { id, round, reason, tokens } => obj(vec![
                 ("ev", Json::Str("finished".to_string())),
@@ -212,6 +235,14 @@ pub struct TraceReplay {
     pub preemptions: usize,
     pub deferrals: usize,
     pub decode_rounds: usize,
+    /// Candidate tokens drafted by speculative lanes
+    /// (== `CoreStats::spec_drafted`).
+    pub spec_drafted: usize,
+    /// Drafted candidates the verifier accepted
+    /// (== `CoreStats::spec_accepted`).
+    pub spec_accepted: usize,
+    /// Drafted candidates rolled back (== `CoreStats::spec_rejected`).
+    pub spec_rejected: usize,
     /// Sum of declared costs over admissions (== `CoreStats::admitted_macs`).
     pub admitted_macs: u128,
     /// Sum of `PrefillDone` + `DecodeRound` MACs (== `CoreStats::macs`
@@ -251,6 +282,11 @@ pub fn reconstruct(events: &[TraceEvent]) -> TraceReplay {
             TraceEvent::DecodeRound { macs, .. } => {
                 replay.decode_rounds += 1;
                 replay.executed_macs += macs;
+            }
+            TraceEvent::SpecDrafted { k, .. } => replay.spec_drafted += k,
+            TraceEvent::SpecVerified { accepted, rejected, .. } => {
+                replay.spec_accepted += accepted;
+                replay.spec_rejected += rejected;
             }
             TraceEvent::Finished { .. } => replay.finished += 1,
         }
@@ -346,6 +382,8 @@ mod tests {
                 forced: false,
             },
             TraceEvent::PrefillDone { id: 1, round: 1, macs: 30 },
+            TraceEvent::SpecDrafted { id: 1, round: 1, k: 3 },
+            TraceEvent::SpecVerified { id: 1, round: 1, accepted: 2, rejected: 1 },
             TraceEvent::DecodeRound { round: 1, batch: 1, macs: 10 },
             TraceEvent::Preempted { victim: 0, beneficiary: 1, round: 3 },
             TraceEvent::Finished { id: 0, round: 3, reason: "preempted", tokens: 1 },
@@ -358,8 +396,11 @@ mod tests {
         assert_eq!(replay.preemptions, 1);
         assert_eq!(replay.deferrals, 1);
         assert_eq!(replay.decode_rounds, 1);
+        assert_eq!(replay.spec_drafted, 3);
+        assert_eq!(replay.spec_accepted, 2);
+        assert_eq!(replay.spec_rejected, 1);
         assert_eq!(replay.admitted_macs, 140);
-        assert_eq!(replay.executed_macs, 40);
+        assert_eq!(replay.executed_macs, 40, "spec events carry counts, not MACs");
         assert_eq!(replay.tenants.get("a"), Some(&(1, 100)));
         assert_eq!(replay.tenants.get("-"), Some(&(1, 40)));
     }

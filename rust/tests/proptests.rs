@@ -1173,6 +1173,126 @@ fn prop_factored_quant_tracks_f32_factored() {
     }
 }
 
+/// Property: speculative greedy decode is bitwise identical to
+/// verifier-only greedy decode for random configs, draft/verifier budget
+/// pairs of the same checkpoint, spec-k values, and thread counts; the
+/// MACs it executes equal the analytic speculative accounting
+/// (`decode_report` prefill + `spec_report` spec MACs) exactly, rollback
+/// waste included; and the acceptance counters are invariant to
+/// `--threads`.
+#[test]
+fn prop_speculative_equals_verifier_greedy() {
+    use llm_rom::decode::{
+        synth_gen_requests, DecodeConfig, DecodeScheduler, Sampling, SpecDecoder,
+    };
+    use llm_rom::exec::ExecConfig;
+    use llm_rom::model::macs::{decode_report, spec_report};
+    use llm_rom::serve::{demo_artifact, ExecMode, ServeModel};
+    for case in 0..5u64 {
+        let mut rng = Rng::new(case * 11717 + 79);
+        let cfg = ModelConfig {
+            vocab: 40 + rng.below(30),
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 24,
+            ..ModelConfig::mini()
+        };
+        // same seed => same synthetic checkpoint; the draft is just a
+        // harder compression of it, so `check_spec_draft` holds
+        let ckpt_seed = case * 3 + 7;
+        let vcm = demo_artifact(&cfg, 0.6 + rng.f64() * 0.35, ckpt_seed).unwrap();
+        let dcm = demo_artifact(&cfg, 0.25 + rng.f64() * 0.2, ckpt_seed).unwrap();
+        let verifier = ServeModel::from_artifact(&vcm, ExecMode::Factored).unwrap();
+        let draft = ServeModel::from_artifact(&dcm, ExecMode::Factored).unwrap();
+        let prompt_len = 3 + rng.below(6);
+        let max_new = 3 + rng.below(7);
+        let slots = 1 + rng.below(3);
+        let spec_k = 1 + rng.below(5);
+        let reqs = synth_gen_requests(&cfg, 2 + rng.below(4), prompt_len, case * 13 + 11);
+        let config = |threads: usize, spec_k: usize| DecodeConfig {
+            slots,
+            capacity: prompt_len + max_new,
+            max_new,
+            sampling: Sampling::Greedy,
+            seed: case,
+            eos: None,
+            spec_k,
+            exec: ExecConfig::with_threads(threads),
+            ..DecodeConfig::default()
+        };
+        // verifier-only greedy reference
+        let (base, _) =
+            DecodeScheduler::new(&verifier, config(1, 0)).run(reqs.clone()).unwrap();
+
+        // per-request reference decoder: bitwise streams + exact MACs
+        let spec = SpecDecoder::from_artifacts(&vcm, &dcm, ExecMode::Factored, spec_k).unwrap();
+        let mut ref_macs: Vec<u128> = Vec::new();
+        for (req, b) in reqs.iter().zip(&base) {
+            let stream =
+                spec.generate(&req.prompt, max_new, None, ExecConfig::serial()).unwrap();
+            assert_eq!(
+                stream.tokens, b.tokens,
+                "case {case} k={spec_k}: spec stream diverged (request {})",
+                req.id
+            );
+            let want = decode_report(&cfg, &vcm.accounting, req.prompt.len(), 1).prefill_macs
+                + spec_report(
+                    &cfg,
+                    &dcm.accounting,
+                    &vcm.accounting,
+                    req.prompt.len(),
+                    &stream.rounds,
+                )
+                .spec_macs();
+            assert_eq!(
+                stream.macs, want,
+                "case {case} k={spec_k}: executed != analytic (request {})",
+                req.id
+            );
+            ref_macs.push(stream.macs);
+        }
+
+        // engine path: streams bitwise equal to the verifier-only run, lane
+        // MACs equal the reference decoder's, acceptance thread-invariant
+        let run = |threads: usize| {
+            let (results, stats) =
+                DecodeScheduler::with_draft(&verifier, &draft, config(threads, spec_k))
+                    .unwrap()
+                    .run(reqs.clone())
+                    .unwrap();
+            let rows = results
+                .into_iter()
+                .map(|r| (r.id, r.tokens, r.macs, r.finish.name()))
+                .collect::<Vec<_>>();
+            (rows, stats.spec_drafted, stats.spec_accepted)
+        };
+        let (sp1, drafted1, accepted1) = run(1);
+        for (i, ((id, tokens, macs, _), b)) in sp1.iter().zip(&base).enumerate() {
+            assert_eq!(*id, b.id, "case {case}");
+            assert_eq!(
+                tokens, &b.tokens,
+                "case {case} k={spec_k}: engine spec stream diverged (request {id})"
+            );
+            assert_eq!(
+                *macs, ref_macs[i],
+                "case {case} k={spec_k}: engine lane MACs != reference (request {id})"
+            );
+        }
+        assert!(drafted1 > 0, "case {case} k={spec_k}: nothing was drafted");
+        assert!(accepted1 <= drafted1, "case {case}");
+        for threads in [2usize, 8] {
+            let (spn, dn, an) = run(threads);
+            assert_eq!(spn, sp1, "case {case} t{threads}: speculative outcome moved");
+            assert_eq!(
+                (dn, an),
+                (drafted1, accepted1),
+                "case {case} t{threads}: acceptance counters moved"
+            );
+        }
+    }
+}
+
 /// Property: the FIFO-reduction bar. With a single tier, no deadlines, and
 /// an unlimited meter, the priced scheduler is bitwise FIFO — admission
 /// order equals submission order — and the whole outcome (admission seqs,

@@ -23,7 +23,9 @@ trap 'rm -rf "$scratch"' EXIT
 # --threads 4: each run asserts its own invariants (factored ≡ dense logits
 # ≤1e-4, factored-quant within its stated tolerance of factored — and its
 # scheduler phase runs the int8 kernels, so the t1-vs-t4 diff covers their
-# determinism too — KV ≡ recompute streams, streamed events ≡ batch
+# determinism too — KV ≡ recompute streams, speculative draft+verify
+# streams ≡ verifier-only greedy (with exact speculative MAC accounting),
+# streamed events ≡ batch
 # results, MACs == analytic accounting, SSE transcripts ≡ in-process event
 # frames over real loopback sockets), and everything the self-checks print
 # is deterministic
@@ -32,7 +34,7 @@ trap 'rm -rf "$scratch"' EXIT
 # then re-runs with the observability plane detached (--no-obs): the
 # printed output must be bitwise identical, which is the non-perturbation
 # contract — attaching tracing/metrics never changes behaviour.
-for check in "serve --self-check" "serve --self-check --mode factored-quant" "generate --self-check" "generate --stream --self-check" "daemon --self-check"; do
+for check in "serve --self-check" "serve --self-check --mode factored-quant" "generate --self-check" "generate --self-check --speculative" "generate --stream --self-check" "daemon --self-check"; do
   echo "== repro $check --threads 1 =="
   if ! out_t1=$(./target/release/repro $check --threads 1); then
     echo "$out_t1"
